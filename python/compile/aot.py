@@ -1,0 +1,90 @@
+"""AOT lowering: every (op, bucket) program -> artifacts/<name>.hlo.txt.
+
+HLO *text* (not .serialize()) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.  Pattern follows
+/opt/xla-example/gen_hlo.py.
+
+Also writes artifacts/manifest.json describing each artifact's input and
+output signature, keyed by (op, n_cap, m_cap), which the rust runtime uses
+to validate literals before execution.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+        [--ops margins,sdca_hinge] [--buckets 128x128,512x512]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import shapes
+from .model import PROGRAMS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    out = []
+    for a in avals:
+        dt = {"float32": "f32", "int32": "i32"}[str(a.dtype)]
+        out.append({"dtype": dt, "shape": list(a.shape)})
+    return out
+
+
+def lower_one(op: str, n: int, m: int):
+    fn, example = PROGRAMS[op](n, m)
+    lowered = jax.jit(fn).lower(*example)
+    text = to_hlo_text(lowered)
+    out_avals = jax.eval_shape(fn, *example)
+    return text, _sig(example), _sig(out_avals)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--ops", default="")
+    ap.add_argument("--buckets", default="")
+    args = ap.parse_args()
+
+    ops = args.ops.split(",") if args.ops else shapes.OP_NAMES
+    if args.buckets:
+        buckets = [tuple(int(v) for v in b.split("x"))
+                   for b in args.buckets.split(",")]
+    else:
+        buckets = shapes.BUCKETS
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"tile": shapes.TILE, "artifacts": []}
+    t_all = time.time()
+    for (n, m) in buckets:
+        for op in ops:
+            t0 = time.time()
+            text, in_sig, out_sig = lower_one(op, n, m)
+            fname = shapes.artifact_file(op, n, m)
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append({
+                "op": op, "n_cap": n, "m_cap": m, "file": fname,
+                "inputs": in_sig, "outputs": out_sig,
+            })
+            print(f"  {fname:40s} {len(text):>10d} chars "
+                  f"{time.time() - t0:6.2f}s", flush=True)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts "
+          f"in {time.time() - t_all:.1f}s -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Plain-HLO dense linear algebra for the ADMM artifacts.
+
+jax 0.8 lowers jnp.linalg.cholesky / solve_triangular on CPU to LAPACK
+custom-calls with API_VERSION_TYPED_FFI, which the rust runtime's
+xla_extension 0.5.1 cannot compile ("Unknown custom-call API version").
+These loop-form implementations lower to ordinary HLO (while + dot +
+dynamic-update-slice), so the artifacts stay portable.  O(n³) cholesky /
+O(n²) solves — the factorization is one-time-and-cached in ADMM, so the
+constant factor is irrelevant.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def cholesky(a):
+    """Lower-triangular L with L Lᵀ = a (a symmetric positive definite).
+
+    Outer-product form: at step j, column j of the working matrix already
+    holds a_j − Σ_{k<j} l_k l_k[j]; divide by the pivot, rank-1-update the
+    trailing matrix, and write the finished column in place.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def step(j, m):
+        d = jnp.sqrt(m[j, j])
+        col = jnp.where(idx > j, m[:, j] / d, 0.0)
+        m = m - jnp.outer(col, col)
+        newcol = jnp.where(idx >= j, col.at[j].set(d), 0.0)
+        return m.at[:, j].set(newcol)
+
+    l = jax.lax.fori_loop(0, n, step, a)
+    return jnp.tril(l)
+
+
+def solve_lower(l, b):
+    """Solve L y = b by forward substitution (L lower-triangular)."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def step(i, y):
+        s = jnp.dot(jnp.where(idx < i, l[i], 0.0), y)
+        return y.at[i].set((b[i] - s) / l[i, i])
+
+    return jax.lax.fori_loop(0, n, step, jnp.zeros_like(b))
+
+
+def solve_upper_t(l, b):
+    """Solve Lᵀ x = b by backward substitution (L lower-triangular)."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def step(k, x):
+        i = n - 1 - k
+        s = jnp.dot(jnp.where(idx > i, l[:, i], 0.0), x)
+        return x.at[i].set((b[i] - s) / l[i, i])
+
+    return jax.lax.fori_loop(0, n, step, jnp.zeros_like(b))
+
+
+def cho_solve(l, b):
+    """Solve (L Lᵀ) x = b."""
+    return solve_upper_t(l, solve_lower(l, b))

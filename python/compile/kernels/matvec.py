@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: tiled margins  xw = X @ w.
+
+TPU shaping (see DESIGN.md #Hardware-Adaptation): the grid walks 128-row
+blocks of X; each grid step holds one (TILE, M) X tile plus the full w
+vector in VMEM and issues a single MXU-shaped dot.  The HBM<->VMEM schedule
+(one X tile in flight, w resident) is the TPU analogue of the paper's
+per-executor partition scan in Spark.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the same kernel to plain HLO so the
+artifact runs in the rust runtime.  VMEM/MXU figures for a real TPU are
+estimated analytically in EXPERIMENTS.md #Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import TILE
+
+
+def _matvec_kernel(x_ref, w_ref, o_ref):
+    # One (TILE, M) block of X against the resident w -> TILE margins.
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+def margins(x, w):
+    """X @ w with X [n, m]; n must be a multiple of TILE (bucket property)."""
+    n, m = x.shape
+    assert n % TILE == 0, f"row count {n} not a multiple of {TILE}"
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(n // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+pytest (python/tests/) sweeps shapes and inputs with hypothesis and asserts
+assert_allclose(kernel, ref).  Keep these boring and obviously correct:
+no tiling, no pallas, no cleverness.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def margins_ref(x, w):
+    return x @ w
+
+
+def atx_ref(x, v):
+    return x.T @ v
+
+
+def hinge_slope(m, y):
+    return jnp.where(y * m < 1.0, -y, 0.0)
+
+
+def logistic_slope(m, y):
+    return -y * jax.nn.sigmoid(-y * m)
+
+
+def sdca_epoch_ref(x, y, norms, a0, w0, idx, h, lamn, invq, beta):
+    """Sequential python-level replay of the SDCA epoch (small shapes only)."""
+    import numpy as np
+
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.float32)
+    norms = np.asarray(norms, np.float32)
+    a = np.asarray(a0, np.float32).copy()
+    w = np.asarray(w0, np.float32).copy()
+    da = np.zeros_like(a)
+    lamn, invq, beta = float(lamn[0]), float(invq[0]), float(beta[0])
+    for t in range(int(h[0])):
+        i = int(idx[t])
+        xi = x[i]
+        marg = float(xi @ w)
+        denom = (beta if beta > 0.0 else float(norms[i])) + 1e-12
+        d = y[i] * np.clip(a[i] * y[i] + lamn * (invq - y[i] * marg) / denom,
+                           0.0, 1.0) - a[i]
+        a[i] += d
+        da[i] += d
+        w = w + (d / lamn) * xi
+    return da
+
+
+def svrg_block_ref(loss, x, y, w0, wt, mu, bmask, mt, idx, l, eta, lam):
+    """Sequential python-level replay of the SVRG inner loop."""
+    import numpy as np
+
+    def slope(m, yj):
+        if loss == "hinge":
+            return -yj if yj * m < 1.0 else 0.0
+        return float(-yj * (1.0 / (1.0 + np.exp(yj * np.clip(m, -60, 60)))))
+
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.float32)
+    w = np.asarray(w0, np.float32).copy()
+    wt = np.asarray(wt, np.float32)
+    mu = np.asarray(mu, np.float32)
+    bmask = np.asarray(bmask, np.float32)
+    mt = np.asarray(mt, np.float32)
+    eta, lam = float(eta[0]), float(lam[0])
+    for t in range(int(l[0])):
+        j = int(idx[t])
+        xj = x[j] * bmask
+        m_cur = float(mt[j] + xj @ (w - wt))
+        g = (slope(m_cur, y[j]) - slope(float(mt[j]), y[j])) * xj \
+            + lam * (w - wt) * bmask + mu
+        w = w - eta * g
+    return w
+
+
+def hinge_obj_ref(mg, y, rmask):
+    return jnp.sum(jnp.maximum(0.0, 1.0 - y * mg) * rmask)
+
+
+def logistic_obj_ref(mg, y, rmask):
+    # log(1 + exp(-y m)) computed stably.
+    z = -y * mg
+    return jnp.sum(jnp.where(z > 0, z + jnp.log1p(jnp.exp(-z)),
+                             jnp.log1p(jnp.exp(z))) * rmask)
+
+
+def prox_hinge_ref(v, y, rmask, rho, inv_n):
+    """argmin_z  inv_n * hinge(y, z) + rho/2 (z - v)^2, elementwise."""
+    c = inv_n / rho
+    z = v + y * jnp.minimum(c, jnp.maximum(0.0, 1.0 - y * v))
+    return jnp.where(rmask > 0, z, v)

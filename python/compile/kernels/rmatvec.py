@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: tiled co-margins  g = X^T v.
+
+Used by the gradient programs (v = elementwise loss slope) and by D3CA's
+primal recovery w[.,q] = (lambda n)^-1 sum_p alpha_p^T x[p,q].
+
+The grid walks 128-column blocks of X; each step holds one (N, TILE) X
+slab plus the full v vector in VMEM and reduces over rows.  Column-major
+tiling keeps the MXU fed with (8x128)-aligned operands on real TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import TILE
+
+
+def _rmatvec_kernel(x_ref, v_ref, o_ref):
+    # One (N, TILE) column slab of X against the resident v -> TILE outputs.
+    o_ref[...] = v_ref[...] @ x_ref[...]
+
+
+def atx(x, v):
+    """X^T @ v with X [n, m]; m must be a multiple of TILE (bucket property)."""
+    n, m = x.shape
+    assert m % TILE == 0, f"column count {m} not a multiple of {TILE}"
+    return pl.pallas_call(
+        _rmatvec_kernel,
+        grid=(m // TILE,),
+        in_specs=[
+            pl.BlockSpec((n, TILE), lambda j: (0, j)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(x, v)

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: RADiSA's local SVRG inner loop (Algorithm 3, steps 6-10).
+
+Margin bookkeeping (DESIGN.md #Key-algorithmic-notes): the stochastic
+gradient of f_j needs the *full* margin x_j . w, but a partition only holds
+feature slice q.  The coordinator ships the snapshot margins mt = X w~
+(reduced over feature partitions during the full-gradient phase); locally
+
+    x_j . w^(i)  =  mt_j + x_{j,block} . (w^(i) - w~_block),
+
+which is exact because w^(i) differs from w~ only on this partition's
+assigned sub-block (enforced by bmask).  The variance-reduced step on the
+sub-block, for F = (1/n) sum f_i + (lam/2)||w||^2, is
+
+    w <- w - eta [ (f'_j(m_cur) - f'_j(mt_j)) x_{j,block}
+                   + lam (w - w~) . bmask  +  mu ],
+
+with mu = (grad F(w~)) restricted to the sub-block (pre-masked, includes
+the lam w~ term), so E[step] = grad F over the sub-block.
+
+Sequential scalar-update loop; same single-invocation + internal fori_loop
+packaging as sdca.py, VPU-bound on real TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_svrg_kernel(slope):
+    """slope(margin, y) -> d f / d margin  (loss-only, per observation)."""
+
+    def kernel(x_ref, y_ref, w0_ref, wt_ref, mu_ref, bmask_ref, mt_ref,
+               idx_ref, l_ref, eta_ref, lam_ref, w_out_ref):
+        eta = eta_ref[0]
+        lam = lam_ref[0]
+        wt = wt_ref[...]
+        mu = mu_ref[...]
+        bmask = bmask_ref[...]
+
+        def body(i, w):
+            j = idx_ref[i]
+            xj = x_ref[j, :] * bmask
+            yj = y_ref[j]
+            m_cur = mt_ref[j] + jnp.dot(xj, w - wt)
+            g_cur = slope(m_cur, yj)
+            g_snap = slope(mt_ref[j], yj)
+            step = (g_cur - g_snap) * xj + lam * (w - wt) * bmask + mu
+            return w - eta * step
+
+        w_out_ref[...] = jax.lax.fori_loop(0, l_ref[0], body, w0_ref[...])
+
+    return kernel
+
+
+def _hinge_slope(m, y):
+    return jnp.where(y * m < 1.0, -y, 0.0)
+
+
+def _logistic_slope(m, y):
+    return -y * jax.nn.sigmoid(-y * m)
+
+
+_KERNELS = {
+    "hinge": _make_svrg_kernel(_hinge_slope),
+    "logistic": _make_svrg_kernel(_logistic_slope),
+}
+
+
+def svrg_block(loss, x, y, w0, wt, mu, bmask, mt, idx, l, eta, lam):
+    """Run l SVRG steps on the masked sub-block; returns the new w [m]."""
+    _n, m = x.shape
+    return pl.pallas_call(
+        _KERNELS[loss],
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(x, y, w0, wt, mu, bmask, mt, idx, l, eta, lam)

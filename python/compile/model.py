@@ -1,0 +1,176 @@
+"""L2: per-partition compute programs, composed from the L1 Pallas kernels.
+
+Each entry in PROGRAMS maps an op name (shapes.OP_NAMES) to a builder that,
+given a (n_cap, m_cap) bucket, returns (fn, example_args).  aot.py lowers
+jax.jit(fn) at the example shapes to HLO text; the rust runtime executes the
+artifacts with real data.  Conventions shared with the rust side:
+
+  * primal objective  F(w) = (1/n) sum f_i(x_i.w) + (lam/2) ||w||^2
+    (the SDCA/CoCoA convention the paper's eqs. (2)-(3) are consistent with;
+    the paper's eq. (1) writes lam||w||^2 but its dual and primal-dual map
+    match the lam/2 form)
+  * dual objective    D(a) = (1/n) sum a_i y_i - (lam/2) ||w(a)||^2,
+    w(a) = (lam n)^-1 sum a_i x_i           (hinge; box 0 <= a_i y_i <= 1)
+  * gradient programs return the *loss* gradient (1/n) X^T psi only; the
+    lam w term is added by the caller (it needs no data access)
+  * objective programs return the *unnormalized* masked loss sum; the caller
+    divides by n and adds the regularizer
+  * scalars travel as shape-(1,) arrays (f32) / (1,) i32 for trip counts
+
+Padding protocol: buckets are (n_cap, m_cap); real blocks occupy the top-left
+(n_p, m_q) corner, the rest is zero.  rmask marks real rows.  Index streams
+only visit real rows.  Zero padding keeps margins/atx exact; masked ops
+(obj, grad, prox) ignore padded rows explicitly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linalg as k_linalg
+from .kernels.matvec import margins as k_margins
+from .kernels.rmatvec import atx as k_atx
+from .kernels.sdca import sdca_epoch as k_sdca
+from .kernels.svrg import svrg_block as k_svrg
+from .kernels import ref
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _f(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _i(shape):
+    return jax.ShapeDtypeStruct(shape, I32)
+
+
+# ---------------------------------------------------------------- programs
+
+
+def margins_program(n, m):
+    def fn(x, w):
+        return (k_margins(x, w),)
+
+    return fn, (_f((n, m)), _f((m,)))
+
+
+def atx_program(n, m):
+    def fn(x, v):
+        return (k_atx(x, v),)
+
+    return fn, (_f((n, m)), _f((n,)))
+
+
+def _grad_program(slope):
+    def build(n, m):
+        def fn(x, y, mg, rmask, inv_n):
+            psi = slope(mg, y) * rmask * inv_n[0]
+            return (k_atx(x, psi),)
+
+        return fn, (_f((n, m)), _f((n,)), _f((n,)), _f((n,)), _f((1,)))
+
+    return build
+
+
+def obj_hinge_program(n, m):
+    def fn(mg, y, rmask):
+        return (jnp.sum(jnp.maximum(0.0, 1.0 - y * mg) * rmask,
+                        keepdims=True),)
+
+    return fn, (_f((n,)), _f((n,)), _f((n,)))
+
+
+def obj_logistic_program(n, m):
+    def fn(mg, y, rmask):
+        z = -y * mg
+        loss = jnp.where(z > 0, z + jnp.log1p(jnp.exp(-z)),
+                         jnp.log1p(jnp.exp(z)))
+        return (jnp.sum(loss * rmask, keepdims=True),)
+
+    return fn, (_f((n,)), _f((n,)), _f((n,)))
+
+
+def dual_obj_hinge_program(n, m):
+    def fn(a, y, rmask):
+        return (jnp.sum(a * y * rmask, keepdims=True),)
+
+    return fn, (_f((n,)), _f((n,)), _f((n,)))
+
+
+def sdca_hinge_program(n, m):
+    def fn(x, y, norms, a0, w0, idx, h, lamn, invq, beta):
+        return (k_sdca(x, y, norms, a0, w0, idx, h, lamn, invq, beta),)
+
+    return fn, (_f((n, m)), _f((n,)), _f((n,)), _f((n,)), _f((m,)),
+                _i((n,)), _i((1,)), _f((1,)), _f((1,)), _f((1,)))
+
+
+def _svrg_program(loss):
+    def build(n, m):
+        def fn(x, y, w0, wt, mu, bmask, mt, idx, l, eta, lam):
+            return (k_svrg(loss, x, y, w0, wt, mu, bmask, mt, idx, l,
+                           eta, lam),)
+
+        return fn, (_f((n, m)), _f((n,)), _f((m,)), _f((m,)), _f((m,)),
+                    _f((m,)), _f((n,)), _i((n,)), _i((1,)), _f((1,)),
+                    _f((1,)))
+
+    return build
+
+
+def admm_factor_program(n, m):
+    """Cholesky factor of (I_n + X X^T) for the cached graph projection.
+
+    Uses the plain-HLO loop cholesky from kernels.linalg — the LAPACK
+    custom-call jnp.linalg.cholesky emits cannot run in the rust runtime
+    (see kernels/linalg.py).
+    """
+
+    def fn(x):
+        gram = jnp.eye(n, dtype=F32) + x @ x.T
+        return (k_linalg.cholesky(gram),)
+
+    return fn, (_f((n, m)),)
+
+
+def admm_project_program(n, m):
+    """Graph projection onto {(w, z): z = X w} (Parikh-Boyd sec. 5.2).
+
+    (w*, z*) = argmin ||w - w_hat||^2 + ||z - z_hat||^2 s.t. z = X w
+    solved via w* = w_hat + X^T t,  (I + X X^T) t = z_hat - X w_hat,
+    using the cached Cholesky factor L (two triangular solves).
+    """
+
+    def fn(x, lchol, w_hat, z_hat):
+        rhs = z_hat - k_margins(x, w_hat)
+        t = k_linalg.cho_solve(lchol, rhs)
+        w = w_hat + k_atx(x, t)
+        z = k_margins(x, w)
+        return (w, z)
+
+    return fn, (_f((n, m)), _f((n, n)), _f((m,)), _f((n,)))
+
+
+def prox_hinge_program(n, m):
+    def fn(v, y, rmask, rho, inv_n):
+        return (ref.prox_hinge_ref(v, y, rmask, rho[0], inv_n[0]),)
+
+    return fn, (_f((n,)), _f((n,)), _f((n,)), _f((1,)), _f((1,)))
+
+
+PROGRAMS = {
+    "margins": margins_program,
+    "atx": atx_program,
+    "grad_hinge": _grad_program(ref.hinge_slope),
+    "grad_logistic": _grad_program(ref.logistic_slope),
+    "obj_hinge": obj_hinge_program,
+    "obj_logistic": obj_logistic_program,
+    "dual_obj_hinge": dual_obj_hinge_program,
+    "sdca_hinge": sdca_hinge_program,
+    "svrg_hinge": _svrg_program("hinge"),
+    "svrg_logistic": _svrg_program("logistic"),
+    "admm_factor": admm_factor_program,
+    "admm_project": admm_project_program,
+    "prox_hinge": prox_hinge_program,
+}

@@ -1,0 +1,48 @@
+"""Shape-bucket manifest shared by the AOT pipeline and the rust runtime.
+
+Every XLA artifact is compiled for one of a small set of (n_cap, m_cap)
+partition buckets; the rust side pads a partition's local block up to the
+nearest bucket and passes explicit row/column masks.  Dynamic quantities
+(epoch length, batch size, step sizes, lambda, random index streams) are
+runtime *inputs*, so one artifact per (op, bucket) serves every experiment.
+
+Buckets (see DESIGN.md):
+  S 128x128    unit/integration tests, quickstart
+  M 512x512    mid-size examples, perf microbenches
+  L 2048x3072  Fig.3/4 + Table I partitions (paper: dense 2000x3000)
+"""
+
+# (n_cap, m_cap) — all multiples of the 128-lane MXU tile.
+BUCKETS = [
+    (128, 128),
+    (512, 512),
+    (2048, 3072),
+]
+
+# Row/column block edge used by the tiled Pallas kernels.
+TILE = 128
+
+# Ops lowered per bucket.  The signature of each lives in model.PROGRAMS.
+OP_NAMES = [
+    "margins",        # x[N,M], w[M]                              -> xw[N]
+    "atx",            # x[N,M], v[N]                              -> xT v[M]
+    "grad_hinge",     # x, y, mg, rmask, inv_n                    -> g[M]
+    "grad_logistic",  # x, y, mg, rmask, inv_n                    -> g[M]
+    "obj_hinge",      # mg, y, rmask                              -> sum loss[1]
+    "obj_logistic",   # mg, y, rmask                              -> sum loss[1]
+    "dual_obj_hinge", # a, y, rmask                               -> sum a*y[1]
+    "sdca_hinge",     # x, y, a0, w0, idx, h, lamn, invq, beta    -> dalpha[N]
+    "svrg_hinge",     # x, y, w0, wt, mu, bmask, mt, idx, l, eta, lam -> w[M]
+    "svrg_logistic",  # same as svrg_hinge
+    "admm_factor",    # x                                         -> chol(I + x xT)[N,N]
+    "admm_project",   # x, lchol, w_hat, z_hat                    -> (w_proj[M], z_proj[N])
+    "prox_hinge",     # v, y, rmask, rho, inv_n                   -> z[N]
+]
+
+
+def artifact_name(op: str, n_cap: int, m_cap: int) -> str:
+    return f"{op}_{n_cap}x{m_cap}"
+
+
+def artifact_file(op: str, n_cap: int, m_cap: int) -> str:
+    return artifact_name(op, n_cap, m_cap) + ".hlo.txt"

@@ -1,0 +1,187 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp/numpy oracle.
+
+hypothesis sweeps shapes (multiples of the 128 tile where the kernel
+requires it), values, index streams and hyper-parameters.  interpret-mode
+pallas is slow, so shape caps are deliberately small — the oracle, not the
+bucket size, is what is being checked here (bucket-scale behaviour is
+covered by the rust integration tests through the artifacts).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.matvec import margins
+from compile.kernels.rmatvec import atx
+from compile.kernels.sdca import sdca_epoch
+from compile.kernels.svrg import svrg_block
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _mat(rng, n, m):
+    return rng.uniform(-1, 1, size=(n, m)).astype(np.float32)
+
+
+def _labels(rng, n):
+    return np.where(rng.uniform(size=n) < 0.5, -1.0, 1.0).astype(np.float32)
+
+
+# ------------------------------------------------------------- tiled kernels
+
+
+@given(nb=st.integers(1, 4), m=st.integers(1, 80), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_margins_matches_ref(nb, m, seed):
+    rng = _rng(seed)
+    x = _mat(rng, nb * 128, m)
+    w = rng.standard_normal(m).astype(np.float32)
+    got = margins(jnp.asarray(x), jnp.asarray(w))
+    assert_allclose(np.asarray(got), ref.margins_ref(x, w), rtol=2e-4,
+                    atol=2e-4)
+
+
+@given(n=st.integers(1, 80), mb=st.integers(1, 4), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_atx_matches_ref(n, mb, seed):
+    rng = _rng(seed)
+    x = _mat(rng, n, mb * 128)
+    v = rng.standard_normal(n).astype(np.float32)
+    got = atx(jnp.asarray(x), jnp.asarray(v))
+    assert_allclose(np.asarray(got), ref.atx_ref(x, v), rtol=2e-4, atol=2e-4)
+
+
+def test_margins_requires_tile_multiple():
+    with pytest.raises(AssertionError):
+        margins(jnp.zeros((100, 8)), jnp.zeros(8))
+
+
+def test_atx_requires_tile_multiple():
+    with pytest.raises(AssertionError):
+        atx(jnp.zeros((8, 100)), jnp.zeros(8))
+
+
+# -------------------------------------------------------- sequential kernels
+
+
+def _sdca_args(rng, n, m, h, lam, invq, beta):
+    x = _mat(rng, n, m)
+    y = _labels(rng, n)
+    norms = (x * x).sum(axis=1).astype(np.float32)
+    a0 = (rng.uniform(0, 1, size=n).astype(np.float32) * y).astype(np.float32)
+    w0 = rng.standard_normal(m).astype(np.float32) * 0.1
+    idx = rng.integers(0, n, size=n).astype(np.int32)
+    return (x, y, norms, a0, w0, idx,
+            np.array([h], np.int32), np.array([lam * n], np.float32),
+            np.array([invq], np.float32), np.array([beta], np.float32))
+
+
+@given(n=st.integers(2, 24), m=st.integers(1, 24), seed=st.integers(0, 2**31),
+       lam=st.sampled_from([1e-2, 1e-1, 1.0]),
+       q=st.integers(1, 4), use_beta=st.booleans())
+@settings(**SETTINGS)
+def test_sdca_epoch_matches_ref(n, m, seed, lam, q, use_beta):
+    rng = _rng(seed)
+    beta = 0.5 if use_beta else 0.0
+    args = _sdca_args(rng, n, m, h=n, lam=lam, invq=1.0 / q, beta=beta)
+    got = sdca_epoch(*[jnp.asarray(a) for a in args])
+    want = ref.sdca_epoch_ref(*args)
+    assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-4)
+
+
+def test_sdca_dual_feasible_from_zero():
+    """From alpha = 0 the hinge box 0 <= a_i y_i <= 1 must hold after an epoch."""
+    rng = _rng(7)
+    n, m = 32, 16
+    args = _sdca_args(rng, n, m, h=n, lam=0.1, invq=0.5, beta=0.0)
+    args = args[:3] + (np.zeros(n, np.float32),) + args[4:]
+    da = np.asarray(sdca_epoch(*[jnp.asarray(a) for a in args]))
+    prod = da * args[1]
+    assert np.all(prod >= -1e-5) and np.all(prod <= 1.0 + 1e-5)
+
+
+def test_sdca_partial_epoch_only_touches_visited():
+    rng = _rng(3)
+    n, m = 16, 8
+    args = list(_sdca_args(rng, n, m, h=4, lam=0.1, invq=1.0, beta=0.0))
+    args[5] = np.array([0, 1, 2, 3] + [0] * (n - 4), np.int32)
+    da = np.asarray(sdca_epoch(*[jnp.asarray(a) for a in args]))
+    assert np.all(da[4:] == 0.0)
+
+
+def _svrg_args(rng, loss, n, m, l, eta, lam, block):
+    x = _mat(rng, n, m)
+    y = _labels(rng, n)
+    wt = rng.standard_normal(m).astype(np.float32) * 0.1
+    bmask = np.zeros(m, np.float32)
+    bmask[block] = 1.0
+    w0 = wt.copy()  # inner loop starts at the snapshot on the sub-block
+    mt = (x @ wt).astype(np.float32)
+    # mu = loss grad over the sub-block at the snapshot + lam * wt, masked
+    if loss == "hinge":
+        sl = np.where(y * mt < 1.0, -y, 0.0)
+    else:
+        sl = -y / (1.0 + np.exp(y * mt))
+    mu = ((x.T @ sl) / n + lam * wt).astype(np.float32) * bmask
+    idx = rng.integers(0, n, size=n).astype(np.int32)
+    return (x, y, w0, wt, mu, bmask, mt, idx,
+            np.array([l], np.int32), np.array([eta], np.float32),
+            np.array([lam], np.float32))
+
+
+@given(loss=st.sampled_from(["hinge", "logistic"]), n=st.integers(2, 24),
+       m=st.integers(2, 24), seed=st.integers(0, 2**31),
+       eta=st.sampled_from([1e-2, 1e-1]))
+@settings(**SETTINGS)
+def test_svrg_block_matches_ref(loss, n, m, seed, eta):
+    rng = _rng(seed)
+    block = np.arange(0, max(1, m // 2))
+    args = _svrg_args(rng, loss, n, m, l=n, eta=eta, lam=0.1, block=block)
+    got = svrg_block(loss, *[jnp.asarray(a) for a in args])
+    want = ref.svrg_block_ref(loss, *args)
+    assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-4)
+
+
+def test_svrg_only_updates_masked_block():
+    rng = _rng(11)
+    n, m = 16, 12
+    block = np.array([1, 4, 7])
+    args = _svrg_args(rng, "hinge", n, m, l=n, eta=0.05, lam=0.1, block=block)
+    got = np.asarray(svrg_block("hinge", *[jnp.asarray(a) for a in args]))
+    off = np.setdiff1d(np.arange(m), block)
+    assert_allclose(got[off], args[2][off], atol=0)
+
+
+def test_svrg_zero_steps_is_identity():
+    rng = _rng(13)
+    args = list(_svrg_args(rng, "hinge", 8, 8, l=0, eta=0.1, lam=0.1,
+                           block=np.arange(4)))
+    got = np.asarray(svrg_block("hinge", *[jnp.asarray(a) for a in args]))
+    assert_allclose(got, args[2], atol=0)
+
+
+# ------------------------------------------------------------- margin trick
+
+
+def test_svrg_margin_identity():
+    """mt_j + x_j,block . (w - wt) == x_j . w when w == wt off-block."""
+    rng = _rng(17)
+    n, m = 20, 10
+    x = _mat(rng, n, m)
+    wt = rng.standard_normal(m).astype(np.float32)
+    bmask = np.zeros(m, np.float32)
+    bmask[[0, 3, 9]] = 1.0
+    w = wt + rng.standard_normal(m).astype(np.float32) * bmask
+    mt = x @ wt
+    local = mt + (x * bmask) @ (w - wt)
+    assert_allclose(local, x @ w, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,47 @@
+"""kernels.linalg (plain-HLO cholesky/solves) against numpy references."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import linalg as kl
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _spd(rng, n):
+    b = rng.uniform(-1, 1, size=(n, max(1, n // 2))).astype(np.float32)
+    return np.eye(n, dtype=np.float32) + b @ b.T
+
+
+@given(n=st.integers(1, 24), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_cholesky_matches_numpy(n, seed):
+    a = _spd(np.random.default_rng(seed), n)
+    l = np.asarray(kl.cholesky(jnp.asarray(a)))
+    want = np.linalg.cholesky(a.astype(np.float64))
+    assert_allclose(l, want, rtol=2e-3, atol=2e-3)
+    assert np.all(np.triu(l, 1) == 0.0)
+
+
+@given(n=st.integers(1, 24), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_cho_solve_solves(n, seed):
+    rng = np.random.default_rng(seed)
+    a = _spd(rng, n)
+    l = np.asarray(kl.cholesky(jnp.asarray(a)))
+    x_true = rng.standard_normal(n).astype(np.float32)
+    b = a @ x_true
+    x = np.asarray(kl.cho_solve(jnp.asarray(l), jnp.asarray(b)))
+    assert_allclose(x, x_true, rtol=5e-3, atol=5e-3)
+
+
+def test_triangular_solves_directly():
+    l = np.array([[2.0, 0.0], [1.0, 3.0]], np.float32)
+    b = np.array([4.0, 11.0], np.float32)
+    y = np.asarray(kl.solve_lower(jnp.asarray(l), jnp.asarray(b)))
+    assert_allclose(y, [2.0, 3.0], rtol=1e-5)
+    x = np.asarray(kl.solve_upper_t(jnp.asarray(l), jnp.asarray(b)))
+    # L^T x = b: [[2,1],[0,3]] x = [4,11] -> x2 = 11/3, x1 = (4 - 11/3)/2
+    assert_allclose(x, [(4 - 11 / 3) / 2, 11 / 3], rtol=1e-5)

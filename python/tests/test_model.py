@@ -1,0 +1,137 @@
+"""L2 correctness: the per-partition programs (model.PROGRAMS) at small
+buckets — shapes, masking semantics, ADMM projection optimality, prox math,
+and agreement between the composed programs and direct jnp computation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.model import PROGRAMS
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+N, M = 128, 128
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _padded_block(rng, n_real, m_real):
+    """A bucket-sized block with a real top-left corner and zero padding."""
+    x = np.zeros((N, M), np.float32)
+    x[:n_real, :m_real] = rng.uniform(-1, 1, size=(n_real, m_real))
+    y = np.where(rng.uniform(size=N) < 0.5, -1.0, 1.0).astype(np.float32)
+    rmask = np.zeros(N, np.float32)
+    rmask[:n_real] = 1.0
+    return x, y, rmask
+
+
+def test_all_programs_lower_and_eval():
+    for name, build in PROGRAMS.items():
+        fn, example = build(N, M)
+        out = jax.eval_shape(fn, *example)
+        assert isinstance(out, tuple) and len(out) >= 1, name
+
+
+@given(n_real=st.integers(1, N), m_real=st.integers(1, M),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_grad_hinge_masks_padded_rows(n_real, m_real, seed):
+    rng = _rng(seed)
+    x, y, rmask = _padded_block(rng, n_real, m_real)
+    w = rng.standard_normal(M).astype(np.float32)
+    fn, _ = PROGRAMS["grad_hinge"](N, M)
+    mg = x @ w
+    (g,) = jax.jit(fn)(x, y, mg, rmask, np.array([1.0 / n_real], np.float32))
+    # direct dense computation restricted to real rows
+    xr, yr, mr = x[:n_real], y[:n_real], mg[:n_real]
+    psi = np.where(yr * mr < 1.0, -yr, 0.0) / n_real
+    assert_allclose(np.asarray(g), xr.T @ psi, rtol=3e-4, atol=3e-4)
+    assert np.all(np.asarray(g)[m_real:] == 0.0)
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_obj_programs_match_ref(seed):
+    rng = _rng(seed)
+    mg = rng.standard_normal(N).astype(np.float32)
+    y = np.where(rng.uniform(size=N) < 0.5, -1.0, 1.0).astype(np.float32)
+    rmask = (rng.uniform(size=N) < 0.7).astype(np.float32)
+    for name, oracle in [("obj_hinge", ref.hinge_obj_ref),
+                         ("obj_logistic", ref.logistic_obj_ref)]:
+        fn, _ = PROGRAMS[name](N, M)
+        (s,) = jax.jit(fn)(mg, y, rmask)
+        assert_allclose(float(s[0]), float(oracle(mg, y, rmask)),
+                        rtol=1e-4, atol=1e-4)
+
+
+def test_dual_obj_hinge():
+    rng = _rng(5)
+    a = rng.standard_normal(N).astype(np.float32)
+    y = np.where(rng.uniform(size=N) < 0.5, -1.0, 1.0).astype(np.float32)
+    rmask = np.ones(N, np.float32)
+    fn, _ = PROGRAMS["dual_obj_hinge"](N, M)
+    (s,) = jax.jit(fn)(a, y, rmask)
+    assert_allclose(float(s[0]), float(np.sum(a * y)), rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31), rho=st.sampled_from([0.1, 1.0, 10.0]))
+@settings(**SETTINGS)
+def test_prox_hinge_is_a_minimizer(seed, rho):
+    """Check first-order optimality of the closed form by perturbation."""
+    rng = _rng(seed)
+    v = rng.standard_normal(N).astype(np.float32)
+    y = np.where(rng.uniform(size=N) < 0.5, -1.0, 1.0).astype(np.float32)
+    rmask = np.ones(N, np.float32)
+    inv_n = 1.0 / N
+    fn, _ = PROGRAMS["prox_hinge"](N, M)
+    (z,) = jax.jit(fn)(v, y, rmask, np.array([rho], np.float32),
+                       np.array([inv_n], np.float32))
+    z = np.asarray(z)
+
+    def objective(zz):
+        return inv_n * np.maximum(0, 1 - y * zz).sum() \
+            + rho / 2 * ((zz - v) ** 2).sum()
+
+    base = objective(z)
+    for _ in range(5):
+        pert = rng.standard_normal(N).astype(np.float32) * 1e-3
+        assert objective(z + pert) >= base - 1e-6
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(max_examples=5, deadline=None)
+def test_admm_projection_lands_on_graph_and_is_optimal(seed):
+    rng = _rng(seed)
+    n, m = 128, 128
+    x = rng.uniform(-1, 1, size=(n, m)).astype(np.float32) / np.sqrt(m)
+    w_hat = rng.standard_normal(m).astype(np.float32)
+    z_hat = rng.standard_normal(n).astype(np.float32)
+
+    ffn, _ = PROGRAMS["admm_factor"](n, m)
+    (lchol,) = jax.jit(ffn)(x)
+    pfn, _ = PROGRAMS["admm_project"](n, m)
+    w, z = jax.jit(pfn)(x, lchol, w_hat, z_hat)
+    w, z = np.asarray(w), np.asarray(z)
+
+    # on the graph
+    assert_allclose(z, x @ w, rtol=1e-3, atol=1e-3)
+    # optimality: the KKT system gives w* = w_hat + X^T (z_hat - z*)
+    assert_allclose(w, w_hat + x.T @ (z_hat - z), rtol=1e-3, atol=1e-3)
+
+
+def test_admm_factor_is_cholesky_of_gram():
+    rng = _rng(9)
+    n, m = 128, 128
+    x = rng.uniform(-1, 1, size=(n, m)).astype(np.float32) / np.sqrt(m)
+    fn, _ = PROGRAMS["admm_factor"](n, m)
+    (l,) = jax.jit(fn)(x)
+    l = np.asarray(l)
+    assert_allclose(l @ l.T, np.eye(n) + x @ x.T, rtol=2e-3, atol=2e-3)
+    assert np.all(np.triu(l, 1) == 0.0)

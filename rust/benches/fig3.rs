@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig3` — regenerates the paper's fig3 via the
+//! experiment harness (Scale::Small by default; DDOPT_SCALE=paper for the
+//! paper's dimensions).
+fn main() {
+    let scale = match std::env::var("DDOPT_SCALE").as_deref() {
+        Ok("paper") => ddopt::bench_harness::Scale::Paper,
+        _ => ddopt::bench_harness::Scale::Small,
+    };
+    ddopt::bench_harness::fig3::run(scale).expect("fig3 harness");
+}

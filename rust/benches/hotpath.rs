@@ -1,0 +1,68 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the per-layer hot
+//! paths with timing statistics (the in-repo criterion stand-in):
+//! native kernels at three sizes, XLA op latencies, and one end-to-end
+//! iteration of each method.
+
+use ddopt::bench_harness::common::{self, Cell, Method};
+use ddopt::bench_harness::perf;
+use ddopt::data::SyntheticDense;
+use ddopt::util::stats::Summary;
+use ddopt::util::timer::Timer;
+
+fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Timer::start();
+        f();
+        times.push(t.secs());
+    }
+    let s = Summary::of(&times);
+    println!(
+        "{name:<44} mean {:>10.3}ms  median {:>10.3}ms  p95 {:>10.3}ms  (n={})",
+        s.mean * 1e3,
+        s.median * 1e3,
+        s.p95 * 1e3,
+        s.n
+    );
+}
+
+fn main() {
+    println!("== L3 native kernels ==");
+    for (n, m) in [(128usize, 128usize), (512, 512), (2048, 1024)] {
+        for (metric, v) in perf::native_kernels(n, m, 5) {
+            println!("{n}x{m} {metric:<28} {v:>12.3}");
+        }
+    }
+
+    println!("\n== end-to-end iterations (native backend, 4x2 grid) ==");
+    let ds = SyntheticDense::paper_part1(4, 2, 256, 192, 0.1, 3).build();
+    let part = common::partition(&ds, 4, 2);
+    let backend = ddopt::runtime::Backend::native();
+    let fstar = common::fstar_for(&ds, 0.1);
+    for method in Method::all() {
+        bench(&format!("one {} run (5 iters)", method.name()), 1, 5, || {
+            let cell = Cell {
+                method,
+                lambda: 0.1,
+                gamma: 0.05,
+                iterations: 5,
+                cores: 8,
+                ..Default::default()
+            };
+            let _ = common::run_cell(&part, &backend, &cell, fstar).unwrap();
+        });
+    }
+
+    println!("\n== XLA op latencies (512x512 bucket) ==");
+    match perf::xla_op_times((512, 512)) {
+        Ok(rows) if !rows.is_empty() => {
+            for (k, v) in rows {
+                println!("{k:<28} {v:>12.4}");
+            }
+        }
+        _ => println!("(artifacts not built — run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench table1` — regenerates the paper's table1 via the
+//! experiment harness (Scale::Small by default; DDOPT_SCALE=paper for the
+//! paper's dimensions).
+fn main() {
+    let scale = match std::env::var("DDOPT_SCALE").as_deref() {
+        Ok("paper") => ddopt::bench_harness::Scale::Paper,
+        _ => ddopt::bench_harness::Scale::Small,
+    };
+    ddopt::bench_harness::table1::run(scale).expect("table1 harness");
+}

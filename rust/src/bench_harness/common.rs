@@ -1,0 +1,178 @@
+//! Shared plumbing for the experiment harnesses: building method suites,
+//! running one experiment cell, and formatting results.
+
+use crate::cluster::ClusterConfig;
+use crate::coordinator::{
+    Admm, AdmmConfig, BetaSchedule, D3ca, D3caConfig, Driver, Optimizer,
+    Radisa, RadisaConfig, RunResult,
+};
+use crate::data::{Dataset, Grid, Partitioned};
+use crate::loss::Loss;
+use crate::runtime::Backend;
+use crate::solvers::exact::reference_optimum;
+use anyhow::Result;
+
+/// Which optimizer to instantiate for a cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Radisa,
+    RadisaAvg,
+    D3ca,
+    Admm,
+}
+
+impl Method {
+    pub fn all() -> [Method; 4] {
+        [Method::Radisa, Method::RadisaAvg, Method::D3ca, Method::Admm]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Radisa => "radisa",
+            Method::RadisaAvg => "radisa-avg",
+            Method::D3ca => "d3ca",
+            Method::Admm => "admm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "radisa" => Some(Method::Radisa),
+            "radisa-avg" | "radisa_avg" => Some(Method::RadisaAvg),
+            "d3ca" => Some(Method::D3ca),
+            "admm" => Some(Method::Admm),
+            _ => None,
+        }
+    }
+}
+
+/// One experiment cell: dataset + grid + method + hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub method: Method,
+    pub lambda: f32,
+    pub gamma: f32,
+    pub iterations: usize,
+    pub cores: usize,
+    pub seed: u64,
+    pub target_gap: Option<f64>,
+    pub batch: usize,
+}
+
+impl Default for Cell {
+    fn default() -> Self {
+        Cell {
+            method: Method::Radisa,
+            lambda: 1e-3,
+            gamma: 0.0,
+            iterations: 30,
+            cores: 8,
+            seed: 1,
+            target_gap: None,
+            batch: 0,
+        }
+    }
+}
+
+pub fn make_optimizer(cell: &Cell) -> Box<dyn Optimizer> {
+    match cell.method {
+        Method::Radisa | Method::RadisaAvg => Box::new(Radisa::new(RadisaConfig {
+            lambda: cell.lambda,
+            loss: Loss::Hinge,
+            gamma: cell.gamma,
+            batch: cell.batch,
+            average: cell.method == Method::RadisaAvg,
+            grad_refresh: 1,
+            seed: cell.seed,
+        })),
+        Method::D3ca => Box::new(D3ca::new(D3caConfig {
+            lambda: cell.lambda,
+            local_epochs: 1.0,
+            beta: BetaSchedule::RowNorm,
+            seed: cell.seed,
+            ..Default::default()
+        })),
+        Method::Admm => Box::new(Admm::new(AdmmConfig {
+            lambda: cell.lambda,
+            rho: cell.lambda, // paper: ρ = λ
+        })),
+    }
+}
+
+/// Run one cell on a pre-partitioned dataset with a known f*.
+pub fn run_cell(
+    part: &Partitioned,
+    backend: &Backend,
+    cell: &Cell,
+    fstar: f64,
+) -> Result<RunResult> {
+    let mut opt = make_optimizer(cell);
+    let mut driver = Driver::new(part, backend)?
+        .iterations(cell.iterations)
+        .cluster(ClusterConfig::with_cores(cell.cores))
+        .fstar(fstar);
+    if let Some(g) = cell.target_gap {
+        driver = driver.target_gap(g);
+    }
+    driver.run(opt.as_mut())
+}
+
+/// Compute (cached) f* for a dataset at λ.
+pub fn fstar_for(ds: &Dataset, lambda: f32) -> f64 {
+    reference_optimum(ds, Loss::Hinge, lambda, 1e-8).fstar
+}
+
+/// Partition a dataset over a grid.
+pub fn partition(ds: &Dataset, p: usize, q: usize) -> Partitioned {
+    Partitioned::split(ds, Grid::new(p, q))
+}
+
+/// `results/` output root (created on demand).
+pub fn out_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+/// Format a gap in scientific notation for table rows.
+pub fn fmt_gap(g: f64) -> String {
+    if g.is_finite() {
+        format!("{g:.3e}")
+    } else {
+        "—".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticDense;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("sgd"), None);
+    }
+
+    #[test]
+    fn run_cell_native_smoke() {
+        let ds = SyntheticDense::paper_part1(2, 2, 30, 20, 0.1, 5).build();
+        let part = partition(&ds, 2, 2);
+        let backend = Backend::native();
+        let fstar = fstar_for(&ds, 0.1);
+        for method in Method::all() {
+            let cell = Cell {
+                method,
+                lambda: 0.1,
+                iterations: 5,
+                gamma: 0.05,
+                ..Default::default()
+            };
+            let r = run_cell(&part, &backend, &cell, fstar).unwrap();
+            assert_eq!(r.history.records.len(), 5, "{method:?}");
+            assert!(r.sim_time > 0.0, "{method:?}");
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Figure 4 — relative optimality difference vs *iteration count* (50
+//! iterations, 4×2 instance): the per-iteration progress comparison that
+//! shows ADMM "needs a much larger number of iterations".
+
+use super::common::{self, Cell, Method};
+use super::{table1, Scale};
+use crate::metrics::{markdown_table, write_json_report};
+use anyhow::Result;
+
+pub fn run(scale: Scale) -> Result<()> {
+    let (n_per, m_per) = table1::partition_dims(scale);
+    let (p, q) = (4, 2);
+    // paper plots 1e-4; we use 1e-3 at paper scale so the certified f*
+    // (SDCA to 1e-8 gap on the 48M-entry instance) is computable within
+    // the testbed budget — the qualitative per-iteration ordering is
+    // unaffected (see EXPERIMENTS.md)
+    let lam = match scale {
+        Scale::Paper => 1e-3,
+        Scale::Small => 1e-1,
+    };
+    let ds = crate::data::SyntheticDense::paper_part1(p, q, n_per, m_per, 0.1, 42).build();
+    let part = common::partition(&ds, p, q);
+    let backend = crate::runtime::Backend::native();
+    let fstar = common::fstar_for(&ds, lam);
+    println!("\n# Fig4  {p}x{q}  lambda={lam:.0e}  50 iterations");
+    let mut runs = Vec::new();
+    for method in Method::all() {
+        let cell = Cell {
+            method,
+            lambda: lam,
+            gamma: 0.0, // auto step-size rule
+            iterations: 50,
+            cores: p * q,
+            ..Default::default()
+        };
+        let r = common::run_cell(&part, &backend, &cell, fstar)?;
+        runs.push((method.name().to_string(), r));
+    }
+    // print the gap at checkpoints — the figure's series
+    let checkpoints = [1usize, 5, 10, 20, 30, 40, 50];
+    let mut rows = Vec::new();
+    for (name, r) in &runs {
+        let mut row = vec![name.clone()];
+        for &cp in &checkpoints {
+            let g = r
+                .history
+                .records
+                .iter()
+                .find(|x| x.iter == cp)
+                .map(|x| common::fmt_gap(x.rel_gap))
+                .unwrap_or_else(|| "—".into());
+            row.push(g);
+        }
+        rows.push(row);
+    }
+    let headers: Vec<String> = std::iter::once("method".to_string())
+        .chain(checkpoints.iter().map(|c| format!("it{c}")))
+        .collect();
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let table = markdown_table(&hdr_refs, &rows);
+    println!("{table}");
+    std::fs::write(common::out_dir().join("fig4.md"), &table)?;
+    let refs: Vec<(String, &crate::metrics::Recorder)> =
+        runs.iter().map(|(n, r)| (n.clone(), &r.history)).collect();
+    write_json_report("fig4", &refs, &common::out_dir().join("fig4.json"))?;
+
+    // the paper's qualitative claim, asserted mechanically
+    let gap_of = |name: &str| {
+        runs.iter()
+            .find(|(n, _)| n == name)
+            .unwrap()
+            .1
+            .history
+            .best_gap()
+    };
+    if gap_of("radisa") < gap_of("admm") && gap_of("d3ca") < gap_of("admm") {
+        println!("shape-check OK: RADiSA and D3CA ahead of ADMM at 50 iterations");
+    } else {
+        println!("shape-check FAILED: ADMM not behind at 50 iterations");
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Bench harness: one module per table/figure of the paper's evaluation.
+//!
+//! Each module exposes `run(scale, out_dir)` printing the paper's
+//! rows/series and writing CSV/JSON under `results/`.  Invoked from the
+//! CLI (`ddopt exp <id>`) and from `cargo bench` (custom harness bins in
+//! `rust/benches/`).
+
+pub mod ablations;
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod perf;
+pub mod table1;
+
+/// Experiment scale: `Small` finishes in seconds on a laptop core,
+/// `Paper` uses the paper's dimensions (documented in EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Small,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "small" => Some(Scale::Small),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Table I — "Datasets for Numerical Experiments (Part 1)".
+//!
+//! Regenerates the paper's dataset-size table for the three Part-1 grids:
+//! nonzero entries and cores used per (P,Q), built with the paper's
+//! generator.  At `Scale::Paper` the partitions are the paper's dense
+//! 2,000×3,000 (nonzeros 48M/90M/168M); at `Scale::Small` a 1/10 linear
+//! scale keeps CI fast while preserving the ratios.
+
+use super::{common, Scale};
+use crate::data::SyntheticDense;
+use crate::metrics::markdown_table;
+use anyhow::Result;
+
+pub const GRIDS: [(usize, usize); 3] = [(4, 2), (5, 3), (7, 4)];
+
+pub fn partition_dims(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Paper => (2000, 3000),
+        Scale::Small => (200, 300),
+    }
+}
+
+pub fn run(scale: Scale) -> Result<()> {
+    let (n_per, m_per) = partition_dims(scale);
+    let mut rows = Vec::new();
+    for (p, q) in GRIDS {
+        let gen = SyntheticDense::paper_part1(p, q, n_per, m_per, 0.1, 42);
+        let ds = gen.build();
+        let nnz = ds.x.nnz();
+        rows.push(vec![
+            format!("{p}x{q}"),
+            format!("{}x{}", ds.n(), ds.m()),
+            format!("{:.1}M", nnz as f64 / 1e6),
+            format!("{}", p * q),
+        ]);
+    }
+    let table = markdown_table(
+        &["P x Q", "instance", "nonzero entries", "cores used"],
+        &rows,
+    );
+    println!("Table I (scale {scale:?}; paper: 48M / 90M / 168M nonzeros)");
+    println!("{table}");
+    std::fs::write(common::out_dir().join("table1.md"), table)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_dims_match_paper() {
+        let (n_per, m_per) = partition_dims(Scale::Paper);
+        // 4x2 grid -> 8,000 x 6,000 = 48M dense entries, as in Table I
+        assert_eq!(4 * n_per * 2 * m_per, 48_000_000);
+        assert_eq!(5 * n_per * 3 * m_per, 90_000_000);
+        assert_eq!(7 * n_per * 4 * m_per, 168_000_000);
+    }
+
+    #[test]
+    fn small_scale_run_prints() {
+        run(Scale::Small).unwrap();
+        assert!(std::path::Path::new("results/table1.md").exists());
+    }
+}

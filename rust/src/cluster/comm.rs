@@ -1,0 +1,137 @@
+//! treeAggregate — Spark's reduction pattern, with a cost model.
+//!
+//! Combining happens pairwise over a binary tree (depth ⌈log₂ leaves⌉).
+//! Each level moves one payload per surviving pair over the network, so
+//! the modeled time is `depth * (latency + bytes/bandwidth)` — the same
+//! asymptotic the paper leans on when it prefers treeAggregate over plain
+//! reduce.  The combine itself is executed for real.
+
+/// Communication accounting for one collective.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Modeled seconds.
+    pub time: f64,
+    /// Total payload bytes moved (all levels).
+    pub bytes: usize,
+    /// Messages sent.
+    pub messages: usize,
+}
+
+/// Generic binary-tree aggregation: repeatedly combines adjacent pairs
+/// with `combine(dst, src)` until one item remains (in `parts[0]`).
+/// `payload_bytes(item)` sizes each transfer for the cost model.
+pub fn tree_aggregate<T>(
+    parts: &mut Vec<T>,
+    latency: f64,
+    bandwidth: f64,
+    payload_bytes: impl Fn(&T) -> usize,
+    mut combine: impl FnMut(&mut T, T),
+) -> CommStats {
+    let mut stats = CommStats::default();
+    if parts.len() <= 1 {
+        return stats;
+    }
+    while parts.len() > 1 {
+        let mut level_bytes = 0usize;
+        let pairs = parts.len() / 2;
+        // drain from the tail so pairing is (0,1), (2,3), ...
+        let mut next: Vec<T> = Vec::with_capacity(parts.len() - pairs);
+        let mut it = parts.drain(..);
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                level_bytes += payload_bytes(&b);
+                stats.messages += 1;
+                combine(&mut a, b);
+            }
+            next.push(a);
+        }
+        drop(it);
+        *parts = next;
+        stats.time += latency + level_bytes as f64 / bandwidth / (pairs.max(1) as f64);
+        stats.bytes += level_bytes;
+    }
+    stats
+}
+
+/// treeAggregate specialized to element-wise f32 vector sums — the
+/// collective both D3CA (Δα, w recovery) and RADiSA (full gradient,
+/// margins) are built on.
+pub fn tree_aggregate_f32(
+    parts: &mut Vec<Vec<f32>>,
+    latency: f64,
+    bandwidth: f64,
+) -> CommStats {
+    tree_aggregate(
+        parts,
+        latency,
+        bandwidth,
+        |v| v.len() * std::mem::size_of::<f32>(),
+        |dst, src| {
+            debug_assert_eq!(dst.len(), src.len());
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_to_total_sum() {
+        let mut parts: Vec<Vec<f32>> =
+            (0..7).map(|i| vec![i as f32, 2.0 * i as f32]).collect();
+        let stats = tree_aggregate_f32(&mut parts, 1e-4, 1e9);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0], vec![21.0, 42.0]);
+        assert!(stats.messages >= 6); // n-1 combines
+        assert!(stats.time > 0.0);
+    }
+
+    #[test]
+    fn tree_depth_drives_latency() {
+        // 16 leaves -> 4 levels; 2 leaves -> 1 level.
+        let mk = |k: usize| -> f64 {
+            let mut parts: Vec<Vec<f32>> = (0..k).map(|_| vec![0.0; 1]).collect();
+            tree_aggregate_f32(&mut parts, 1.0, f64::INFINITY).time
+        };
+        assert!((mk(2) - 1.0).abs() < 1e-9);
+        assert!((mk(16) - 4.0).abs() < 1e-9);
+        assert!((mk(5) - 3.0).abs() < 1e-9); // ceil(log2 5) = 3
+    }
+
+    #[test]
+    fn single_part_is_free() {
+        let mut parts = vec![vec![1.0f32, 2.0]];
+        let stats = tree_aggregate_f32(&mut parts, 1.0, 1.0);
+        assert_eq!(stats.time, 0.0);
+        assert_eq!(stats.bytes, 0);
+        assert_eq!(parts[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn generic_combine_with_scalars() {
+        let mut parts = vec![1u64, 2, 3, 4, 5];
+        let stats = tree_aggregate(
+            &mut parts,
+            0.0,
+            1.0,
+            |_| 8,
+            |a, b| *a += b,
+        );
+        assert_eq!(parts[0], 15);
+        assert_eq!(stats.messages, 4);
+    }
+
+    #[test]
+    fn matches_sequential_sum_for_many_sizes() {
+        for k in 1..20 {
+            let mut parts: Vec<Vec<f32>> = (0..k).map(|i| vec![(i + 1) as f32]).collect();
+            tree_aggregate_f32(&mut parts, 0.0, 1e9);
+            let expect = (k * (k + 1) / 2) as f32;
+            assert_eq!(parts[0][0], expect, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! The simulated cluster substrate.
+//!
+//! The paper's testbed is a 4-node × 8-core Spark/Hadoop cluster; this host
+//! has one core, so the cluster is *simulated* (DESIGN.md §Substitutions):
+//!
+//! * [`pool::WorkerPool`] — real OS worker threads + channels execute the
+//!   per-partition tasks of each superstep (parallel when the host allows,
+//!   sequential-deterministic otherwise).
+//! * [`SimClock`] — the simulated parallel clock: each superstep
+//!   contributes the *makespan* of its measured per-task compute times
+//!   scheduled LPT onto `cores` executor slots, not the host wall time.
+//! * [`comm`] — `tree_aggregate`, Spark's reduction pattern: log₂-depth
+//!   binary combining with a latency + bandwidth cost model.
+//!
+//! Every reported "time" in the scaling experiments (Figs. 5-6) is
+//! simulated cluster time = Σ superstep makespans + modeled communication;
+//! EXPERIMENTS.md reports both sim and host wall time.
+
+pub mod comm;
+pub mod pool;
+pub mod simtime;
+
+pub use comm::{tree_aggregate, tree_aggregate_f32, CommStats};
+pub use pool::WorkerPool;
+pub use simtime::{lpt_makespan, SimClock};
+
+/// Cluster topology and cost-model parameters.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Simulated executor slots (the paper's K = up to 28 cores).
+    pub cores: usize,
+    /// Real worker threads used to execute tasks on this host.
+    pub threads: usize,
+    /// One-way message latency per tree hop (seconds).
+    pub latency: f64,
+    /// Link bandwidth (bytes/second).
+    pub bandwidth: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        // Latency/bandwidth defaults approximate a commodity GbE cluster
+        // of the paper's era: 200 µs hop latency, ~1 Gb/s effective.
+        ClusterConfig {
+            cores: 8,
+            threads: 1,
+            latency: 200e-6,
+            bandwidth: 125e6,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn with_cores(cores: usize) -> Self {
+        ClusterConfig { cores, ..Default::default() }
+    }
+}
+
+/// A simulated cluster: task execution + clock + communication accounting.
+pub struct SimCluster {
+    pub config: ClusterConfig,
+    pub clock: SimClock,
+    pool: WorkerPool,
+}
+
+impl SimCluster {
+    pub fn new(config: ClusterConfig) -> Self {
+        let pool = WorkerPool::new(config.threads);
+        SimCluster { config, clock: SimClock::new(), pool }
+    }
+
+    /// Execute one superstep of independent per-partition tasks; returns
+    /// results in task order.  Advances the simulated clock by the LPT
+    /// makespan of the measured per-task times over `cores` slots.
+    pub fn superstep<T: Send + 'static>(
+        &mut self,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send>>,
+    ) -> Vec<T> {
+        let timed = self.pool.run(tasks);
+        let durations: Vec<f64> = timed.iter().map(|(_, d)| *d).collect();
+        let makespan = lpt_makespan(&durations, self.config.cores);
+        self.clock.add_compute(makespan);
+        timed.into_iter().map(|(v, _)| v).collect()
+    }
+
+    /// Aggregate per-partition f32 vectors by summation over a binary tree,
+    /// charging the communication model (`parts.len()` = leaves).
+    pub fn reduce_sum(&mut self, mut parts: Vec<Vec<f32>>) -> Vec<f32> {
+        let stats = tree_aggregate_f32(&mut parts, self.config.latency, self.config.bandwidth);
+        self.clock.add_comm(stats);
+        parts.into_iter().next().unwrap_or_default()
+    }
+
+    /// Charge a broadcast of `bytes` from the leader to `fanout` nodes
+    /// (tree-structured, like Spark's torrent broadcast).
+    pub fn broadcast_cost(&mut self, bytes: usize, fanout: usize) {
+        let depth = (fanout.max(1) as f64).log2().ceil().max(1.0);
+        let t = depth * (self.config.latency + bytes as f64 / self.config.bandwidth);
+        self.clock.add_comm(CommStats { time: t, bytes: bytes * fanout.max(1), messages: fanout });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn superstep_returns_in_order_and_advances_clock() {
+        let mut c = SimCluster::new(ClusterConfig { threads: 2, cores: 4, ..Default::default() });
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8usize)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = c.superstep(tasks);
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+        assert!(c.clock.compute_time() > 0.0);
+    }
+
+    #[test]
+    fn reduce_sum_sums() {
+        let mut c = SimCluster::new(ClusterConfig::default());
+        let parts = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        let s = c.reduce_sum(parts);
+        assert_eq!(s, vec![111.0, 222.0]);
+        assert!(c.clock.comm_time() > 0.0);
+        assert!(c.clock.comm_bytes() > 0);
+    }
+
+    #[test]
+    fn broadcast_charges_more_for_more_nodes() {
+        let mut a = SimCluster::new(ClusterConfig::default());
+        let mut b = SimCluster::new(ClusterConfig::default());
+        a.broadcast_cost(1000, 2);
+        b.broadcast_cost(1000, 16);
+        assert!(b.clock.comm_time() > a.clock.comm_time());
+    }
+
+    #[test]
+    fn empty_reduce_is_empty() {
+        let mut c = SimCluster::new(ClusterConfig::default());
+        let s = c.reduce_sum(vec![]);
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,157 @@
+//! Worker-thread pool: the "nodes" of the simulated cluster.
+//!
+//! `threads = 1` executes tasks inline on the caller thread (fully
+//! deterministic, the default on this single-core host); `threads > 1`
+//! spawns long-lived workers fed over channels.  Either way each task's
+//! compute time is measured individually so the simulated clock can
+//! schedule them onto the configured executor slots.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+type Job = Box<dyn FnOnce() + Send>;
+
+/// A fixed pool of worker threads (possibly zero).
+pub struct WorkerPool {
+    threads: usize,
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> WorkerPool {
+        if threads <= 1 {
+            return WorkerPool { threads: 1, tx: None, handles: Vec::new() };
+        }
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("ddopt-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { threads, tx: Some(tx), handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run all tasks; returns `(result, seconds)` per task, in task order.
+    pub fn run<T: Send + 'static>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send>>,
+    ) -> Vec<(T, f64)> {
+        let n = tasks.len();
+        if self.tx.is_none() || n <= 1 {
+            // inline execution
+            return tasks
+                .into_iter()
+                .map(|t| {
+                    let t0 = Instant::now();
+                    let v = t();
+                    (v, t0.elapsed().as_secs_f64())
+                })
+                .collect();
+        }
+        let (rtx, rrx) = mpsc::channel::<(usize, T, f64)>();
+        for (i, task) in tasks.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            let job: Job = Box::new(move || {
+                let t0 = Instant::now();
+                let v = task();
+                let dt = t0.elapsed().as_secs_f64();
+                let _ = rtx.send((i, v, dt));
+            });
+            self.tx.as_ref().unwrap().send(job).expect("pool send");
+        }
+        drop(rtx);
+        let mut out: Vec<Option<(T, f64)>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v, dt) = rrx.recv().expect("pool recv");
+            out[i] = Some((v, dt));
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers exit their loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_pool_runs_in_order() {
+        let pool = WorkerPool::new(1);
+        let tasks: Vec<Box<dyn FnOnce() -> i32 + Send>> =
+            (0..5).map(|i| Box::new(move || i) as _).collect();
+        let out = pool.run(tasks);
+        assert_eq!(out.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn threaded_pool_preserves_order_and_results() {
+        let pool = WorkerPool::new(3);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..32)
+            .map(|i| {
+                Box::new(move || {
+                    // vary work so completion order scrambles
+                    let mut acc = 0usize;
+                    for k in 0..(i % 7) * 1000 {
+                        acc = acc.wrapping_add(k);
+                    }
+                    let _ = acc;
+                    i * 2
+                }) as _
+            })
+            .collect();
+        let out = pool.run(tasks);
+        for (i, (v, d)) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+            assert!(*d >= 0.0);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable() {
+        let pool = WorkerPool::new(2);
+        for round in 0..3 {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
+                (0..4).map(|i| Box::new(move || i + round) as _).collect();
+            let out = pool.run(tasks);
+            assert_eq!(out.len(), 4);
+            assert_eq!(out[0].0, round);
+        }
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::new(4);
+        let tasks: Vec<Box<dyn FnOnce() -> () + Send>> =
+            (0..8).map(|_| Box::new(|| ()) as _).collect();
+        let _ = pool.run(tasks);
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,221 @@
+//! Experiment configuration: a declarative description of a training run
+//! (dataset, grid, loss, method, hyper-parameters), parseable from JSON
+//! files under `configs/` and overridable from CLI flags.
+
+use crate::cluster::ClusterConfig;
+use crate::loss::Loss;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Which dataset to build.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetSpec {
+    /// Paper Part-1 dense synthetic: P·Q partitions of n_per × m_per.
+    Dense { n_per: usize, m_per: usize },
+    /// Sparse synthetic stand-in with explicit shape and density.
+    Sparse { n: usize, m: usize, density: f64 },
+    /// LIBSVM file on disk.
+    Libsvm { path: String },
+}
+
+/// A fully-specified experiment cell.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: DatasetSpec,
+    pub p: usize,
+    pub q: usize,
+    pub loss: Loss,
+    pub lambda: f32,
+    pub iterations: usize,
+    pub seed: u64,
+    /// RADiSA step-size constant γ in η_t = γ/(1+√(t−1)).
+    pub gamma: f32,
+    /// RADiSA batch size L (0 → one pass over the local rows).
+    pub batch: usize,
+    /// ADMM penalty ρ (paper sets ρ = λ).
+    pub rho: f32,
+    pub cluster: ClusterConfig,
+    pub backend: String, // "native" | "xla"
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            dataset: DatasetSpec::Dense { n_per: 200, m_per: 150 },
+            p: 2,
+            q: 2,
+            loss: Loss::Hinge,
+            lambda: 1e-3,
+            iterations: 30,
+            seed: 42,
+            gamma: 0.02,
+            batch: 0,
+            rho: 1e-3,
+            cluster: ClusterConfig::default(),
+            backend: "native".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn k(&self) -> usize {
+        self.p * self.q
+    }
+
+    /// Parse from a JSON document; missing keys keep defaults.
+    pub fn from_json(v: &Json) -> Result<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        if let Some(s) = v.get("name").and_then(|x| x.as_str()) {
+            c.name = s.to_string();
+        }
+        if let Some(d) = v.get("dataset") {
+            let kind = d
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or_else(|| anyhow!("dataset.kind missing"))?;
+            c.dataset = match kind {
+                "dense" => DatasetSpec::Dense {
+                    n_per: d.get("n_per").and_then(|x| x.as_usize()).unwrap_or(200),
+                    m_per: d.get("m_per").and_then(|x| x.as_usize()).unwrap_or(150),
+                },
+                "sparse" => DatasetSpec::Sparse {
+                    n: d.get("n").and_then(|x| x.as_usize()).unwrap_or(1000),
+                    m: d.get("m").and_then(|x| x.as_usize()).unwrap_or(500),
+                    density: d.get("density").and_then(|x| x.as_f64()).unwrap_or(0.01),
+                },
+                "libsvm" => DatasetSpec::Libsvm {
+                    path: d
+                        .get("path")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("dataset.path missing"))?
+                        .to_string(),
+                },
+                other => bail!("unknown dataset kind '{other}'"),
+            };
+        }
+        if let Some(x) = v.get("p").and_then(|x| x.as_usize()) {
+            c.p = x;
+        }
+        if let Some(x) = v.get("q").and_then(|x| x.as_usize()) {
+            c.q = x;
+        }
+        if let Some(x) = v.get("loss").and_then(|x| x.as_str()) {
+            c.loss = Loss::parse(x).ok_or_else(|| anyhow!("unknown loss '{x}'"))?;
+        }
+        if let Some(x) = v.get("lambda").and_then(|x| x.as_f64()) {
+            c.lambda = x as f32;
+        }
+        if let Some(x) = v.get("iterations").and_then(|x| x.as_usize()) {
+            c.iterations = x;
+        }
+        if let Some(x) = v.get("seed").and_then(|x| x.as_f64()) {
+            c.seed = x as u64;
+        }
+        if let Some(x) = v.get("gamma").and_then(|x| x.as_f64()) {
+            c.gamma = x as f32;
+        }
+        if let Some(x) = v.get("batch").and_then(|x| x.as_usize()) {
+            c.batch = x;
+        }
+        if let Some(x) = v.get("rho").and_then(|x| x.as_f64()) {
+            c.rho = x as f32;
+        }
+        if let Some(x) = v.get("cores").and_then(|x| x.as_usize()) {
+            c.cluster.cores = x;
+        }
+        if let Some(x) = v.get("threads").and_then(|x| x.as_usize()) {
+            c.cluster.threads = x;
+        }
+        if let Some(x) = v.get("backend").and_then(|x| x.as_str()) {
+            if x != "native" && x != "xla" {
+                bail!("unknown backend '{x}'");
+            }
+            c.backend = x.to_string();
+        }
+        Ok(c)
+    }
+
+    pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    /// Build the dataset this config describes.
+    pub fn build_dataset(&self) -> Result<crate::data::Dataset> {
+        Ok(match &self.dataset {
+            DatasetSpec::Dense { n_per, m_per } => {
+                crate::data::SyntheticDense::paper_part1(
+                    self.p, self.q, *n_per, *m_per, 0.1, self.seed,
+                )
+                .build()
+            }
+            DatasetSpec::Sparse { n, m, density } => {
+                crate::data::SyntheticSparse::new("sparse", *n, *m, *density, self.seed)
+                    .build()
+            }
+            DatasetSpec::Libsvm { path } => {
+                crate::data::read_libsvm(Path::new(path), 0)?
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"{
+          "name": "fig3-cell", "p": 4, "q": 2, "loss": "hinge",
+          "lambda": 1e-4, "iterations": 50, "gamma": 0.05,
+          "dataset": {"kind": "dense", "n_per": 2000, "m_per": 3000},
+          "cores": 8, "backend": "xla"
+        }"#;
+        let c = ExperimentConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(c.p, 4);
+        assert_eq!(c.k(), 8);
+        assert_eq!(c.lambda, 1e-4);
+        assert_eq!(c.backend, "xla");
+        assert_eq!(c.dataset, DatasetSpec::Dense { n_per: 2000, m_per: 3000 });
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let c = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(c.p, 2);
+        assert_eq!(c.loss, Loss::Hinge);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"loss":"nope"}"#).unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"backend":"gpu"}"#).unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"dataset":{"kind":"weird"}}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn builds_datasets() {
+        let mut c = ExperimentConfig::default();
+        c.dataset = DatasetSpec::Dense { n_per: 10, m_per: 8 };
+        let ds = c.build_dataset().unwrap();
+        assert_eq!(ds.n(), 20);
+        assert_eq!(ds.m(), 16);
+        c.dataset = DatasetSpec::Sparse { n: 30, m: 40, density: 0.1 };
+        let ds = c.build_dataset().unwrap();
+        assert_eq!(ds.n(), 30);
+    }
+}

@@ -1,0 +1,259 @@
+//! D3CA — Doubly Distributed Dual Coordinate Ascent (Algorithm 1).
+//!
+//! Per global iteration t:
+//!
+//! 1. every partition [p,q] runs LOCALDUALMETHOD (Algorithm 2 = SDCA with
+//!    the local objective scaled by 1/Q) from the shared (α[p,·], w[·,q]);
+//! 2. dual averaging: α[p,·] += (1/(P·Q)) Σ_q Δα[p,q]   (treeAggregate
+//!    over the feature partitions of each observation block);
+//! 3. primal recovery through the primal-dual map (3):
+//!    w[·,q] = (λn)⁻¹ Σ_p x[p,q]ᵀ α[p,·]   (treeAggregate over the
+//!    observation partitions of each feature block).
+//!
+//! With Q = 1 this reduces exactly to CoCoA.  Dual feasibility of the
+//! averaged iterate is preserved because each per-partition update stays
+//! in the conjugate's box and the update is a convex combination
+//! (tested in `rust/tests/properties.rs`).
+
+use super::driver::Optimizer;
+use crate::cluster::SimCluster;
+use crate::data::Partitioned;
+use crate::loss::Loss;
+use crate::runtime::StagedGrid;
+use crate::util::rng::Xoshiro;
+use anyhow::{bail, Result};
+
+/// Step-size policy for the local SDCA denominator (paper §III: for small
+/// λ the ‖x_i‖² denominator destabilizes; β replaces it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BetaSchedule {
+    /// Use ‖x_i‖² (vanilla SDCA closed form).
+    RowNorm,
+    /// β = λ·n / t — the paper's stabilization, scaled by n to live on the
+    /// same scale as ‖x_i‖² (its printed form β = λ/t under-scales by n;
+    /// see EXPERIMENTS.md notes).
+    LambdaNOverT,
+    /// Fixed constant.
+    Const(f32),
+}
+
+#[derive(Clone, Debug)]
+pub struct D3caConfig {
+    pub lambda: f32,
+    /// Local SDCA steps as a multiple of the partition's row count
+    /// (1.0 = one local epoch, the CoCoA default).
+    pub local_epochs: f32,
+    pub beta: BetaSchedule,
+    /// Dual averaging factor: `true` = the paper's 1/(P·Q) (Algorithm 1
+    /// step 6); `false` = plain 1/Q feature averaging (the CoCoA-adding
+    /// flavour) — ablated in `ddopt exp ablations`.
+    pub avg_pq: bool,
+    /// Primal recovery mode (paper §V: "removing the bottleneck of the
+    /// primal vector computation would result into a significant
+    /// speedup"): `false` recomputes w[·,q] = (λn)⁻¹ Σ_p x[p,q]ᵀ α[p,·]
+    /// from the full dual (Algorithm 1 step 9); `true` applies the exact
+    /// incremental identity w += (λn)⁻¹ Σ_p x[p,q]ᵀ Δα[p,·], whose cost
+    /// scales with the *visited* rows (a win when local_epochs < 1).
+    pub incremental_primal: bool,
+    pub seed: u64,
+}
+
+impl Default for D3caConfig {
+    fn default() -> Self {
+        D3caConfig {
+            lambda: 1e-2,
+            local_epochs: 1.0,
+            beta: BetaSchedule::RowNorm,
+            avg_pq: true,
+            incremental_primal: false,
+            seed: 1,
+        }
+    }
+}
+
+/// D3CA state: the global dual α (concatenated over observation
+/// partitions) and primal w (concatenated over feature partitions).
+pub struct D3ca {
+    cfg: D3caConfig,
+    alpha: Vec<f32>,
+    w: Vec<f32>,
+    rng_root: Xoshiro,
+    n: usize,
+}
+
+impl D3ca {
+    pub fn new(cfg: D3caConfig) -> D3ca {
+        let rng_root = Xoshiro::new(cfg.seed).substream(0xD3CA, 0, 0);
+        D3ca { cfg, alpha: Vec::new(), w: Vec::new(), rng_root, n: 0 }
+    }
+
+    pub fn alpha(&self) -> &[f32] {
+        &self.alpha
+    }
+
+    fn beta_at(&self, t: usize) -> f32 {
+        match self.cfg.beta {
+            BetaSchedule::RowNorm => 0.0,
+            BetaSchedule::LambdaNOverT => self.cfg.lambda * self.n as f32 / t as f32,
+            BetaSchedule::Const(b) => b,
+        }
+    }
+}
+
+impl Optimizer for D3ca {
+    fn name(&self) -> String {
+        "d3ca".into()
+    }
+
+    fn loss(&self) -> Loss {
+        Loss::Hinge
+    }
+
+    fn lambda(&self) -> f32 {
+        self.cfg.lambda
+    }
+
+    fn init(&mut self, staged: &StagedGrid<'_>, _cluster: &mut SimCluster) -> Result<()> {
+        let part = staged.part;
+        if !Loss::Hinge.has_sdca_closed_form() {
+            bail!("D3CA requires the hinge closed form");
+        }
+        self.n = part.n;
+        self.alpha = vec![0.0; part.n];
+        self.w = vec![0.0; part.m];
+        Ok(())
+    }
+
+    fn iterate(
+        &mut self,
+        t: usize,
+        staged: &StagedGrid<'_>,
+        cluster: &mut SimCluster,
+    ) -> Result<()> {
+        let part: &Partitioned = staged.part;
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let lamn = self.cfg.lambda * part.n as f32;
+        let invq = 1.0 / qq as f32;
+        let beta = self.beta_at(t);
+
+        // Broadcast current w[·,q] to the P partitions of each column and
+        // α[p,·] to the Q partitions of each row (cost model only — the
+        // data movement is implicit in the shared-memory simulation).
+        for q in 0..qq {
+            cluster.broadcast_cost(part.m_q(q) * 4, pp);
+        }
+        for p in 0..pp {
+            cluster.broadcast_cost(part.n_p(p) * 4, qq);
+        }
+
+        // Step 2-4: local dual methods, one task per partition.  Executed
+        // sequentially (single-core host) but individually timed so the
+        // simulated clock sees the parallel makespan.
+        let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(pp * qq);
+        {
+            let mut durations = Vec::with_capacity(pp * qq);
+            for p in 0..pp {
+                let (r0, r1) = part.row_ranges[p];
+                for q in 0..qq {
+                    let (c0, c1) = part.col_ranges[q];
+                    let n_p = r1 - r0;
+                    let h = ((n_p as f32 * self.cfg.local_epochs).round() as usize).max(1);
+                    let mut rng = self
+                        .rng_root
+                        .substream(p as u64, q as u64, t as u64);
+                    let idx = rng.index_stream(n_p, n_p.min(h));
+                    let timer = crate::util::timer::Timer::start();
+                    let da = staged.sdca_epoch(
+                        p,
+                        q,
+                        &self.alpha[r0..r1],
+                        &self.w[c0..c1],
+                        &idx,
+                        h,
+                        lamn,
+                        invq,
+                        beta,
+                    )?;
+                    durations.push(timer.secs());
+                    deltas.push(da);
+                }
+            }
+            let makespan =
+                crate::cluster::lpt_makespan(&durations, cluster.config.cores);
+            cluster.clock.add_compute(makespan);
+        }
+
+        // Step 5-7: α[p,·] += scale · Σ_q Δα[p,q]  (tree reduce over q;
+        // scale = 1/(P·Q) per the paper, or 1/Q under the ablation).
+        let scale = if self.cfg.avg_pq {
+            1.0 / (pp * qq) as f32
+        } else {
+            1.0 / qq as f32
+        };
+        let mut upd: Vec<Vec<f32>> = Vec::with_capacity(pp);
+        for p in 0..pp {
+            let (r0, r1) = part.row_ranges[p];
+            let per_q: Vec<Vec<f32>> = (0..qq)
+                .map(|q| std::mem::take(&mut deltas[p * qq + q]))
+                .collect();
+            let mut sum = cluster.reduce_sum(per_q);
+            crate::linalg::scale(scale, &mut sum);
+            for (a, &d) in self.alpha[r0..r1].iter_mut().zip(&sum) {
+                *a += d;
+            }
+            upd.push(sum);
+        }
+
+        // Step 8-10: primal recovery (tree reduce over p per column).
+        // Full mode recomputes w from α; incremental mode applies the
+        // exact linear identity from the dual *update* only.
+        {
+            let mut durations = Vec::with_capacity(pp * qq);
+            for q in 0..qq {
+                let (c0, c1) = part.col_ranges[q];
+                let mut per_p: Vec<Vec<f32>> = Vec::with_capacity(pp);
+                for p in 0..pp {
+                    let (r0, r1) = part.row_ranges[p];
+                    let timer = crate::util::timer::Timer::start();
+                    let v = if self.cfg.incremental_primal {
+                        staged.atx(p, q, &upd[p])?
+                    } else {
+                        staged.atx(p, q, &self.alpha[r0..r1])?
+                    };
+                    per_p.push(v);
+                    durations.push(timer.secs());
+                }
+                let sum = cluster.reduce_sum(per_p);
+                if self.cfg.incremental_primal {
+                    for (wv, &s) in self.w[c0..c1].iter_mut().zip(&sum) {
+                        *wv += s / lamn;
+                    }
+                } else {
+                    for (wv, &s) in self.w[c0..c1].iter_mut().zip(&sum) {
+                        *wv = s / lamn;
+                    }
+                }
+            }
+            let makespan =
+                crate::cluster::lpt_makespan(&durations, cluster.config.cores);
+            cluster.clock.add_compute(makespan);
+        }
+        Ok(())
+    }
+
+    fn w(&self) -> &[f32] {
+        &self.w
+    }
+
+    fn dual_objective(&self, staged: &StagedGrid<'_>) -> Result<Option<f64>> {
+        let part = staged.part;
+        let mut lin = 0.0f64;
+        for p in 0..part.grid.p {
+            let (r0, r1) = part.row_ranges[p];
+            lin += staged.dual_linear_sum(p, &self.alpha[r0..r1])?;
+        }
+        let d = lin / part.n as f64
+            - 0.5 * self.cfg.lambda as f64 * crate::linalg::nrm2_sq(&self.w) as f64;
+        Ok(Some(d))
+    }
+}

@@ -1,0 +1,171 @@
+//! The run driver: wires an [`Optimizer`] to a staged dataset and the
+//! simulated cluster, evaluating the paper's metrics each iteration.
+//!
+//! Evaluation (primal/dual objective) happens *off the clock*: the
+//! simulated time only advances inside `Optimizer::iterate`, matching the
+//! paper's practice of timing the algorithm rather than the monitoring.
+
+use crate::cluster::{ClusterConfig, SimCluster};
+use crate::data::Partitioned;
+use crate::loss::Loss;
+use crate::metrics::Recorder;
+use crate::runtime::StagedGrid;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// A doubly-distributed optimization method.
+pub trait Optimizer {
+    fn name(&self) -> String;
+
+    fn loss(&self) -> Loss;
+
+    /// Regularization λ (needed by the driver's objective evaluation).
+    fn lambda(&self) -> f32;
+
+    /// One-time setup (state allocation, cached factorizations, ...).
+    fn init(&mut self, staged: &StagedGrid<'_>, cluster: &mut SimCluster) -> Result<()>;
+
+    /// One global iteration (t = 1, 2, ...).
+    fn iterate(
+        &mut self,
+        t: usize,
+        staged: &StagedGrid<'_>,
+        cluster: &mut SimCluster,
+    ) -> Result<()>;
+
+    /// Current global primal iterate.
+    fn w(&self) -> &[f32];
+
+    /// Current dual objective, if the method maintains a dual (D3CA).
+    fn dual_objective(&self, staged: &StagedGrid<'_>) -> Result<Option<f64>> {
+        let _ = staged;
+        Ok(None)
+    }
+}
+
+/// Outcome of a full run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub method: String,
+    pub history: Recorder,
+    pub w: Vec<f32>,
+    pub sim_time: f64,
+    pub wall_time: f64,
+    pub comm_bytes: usize,
+    pub supersteps: usize,
+}
+
+/// Builder-style driver.
+pub struct Driver<'a> {
+    part: &'a Partitioned,
+    staged: StagedGrid<'a>,
+    cluster_config: ClusterConfig,
+    iterations: usize,
+    fstar: Option<f64>,
+    /// Stop early once this relative gap is reached (None = run all).
+    target_gap: Option<f64>,
+    eval_every: usize,
+}
+
+impl<'a> Driver<'a> {
+    pub fn new(part: &'a Partitioned, backend: &'a crate::runtime::Backend) -> Result<Driver<'a>> {
+        Ok(Driver {
+            part,
+            staged: backend.stage(part)?,
+            cluster_config: ClusterConfig::default(),
+            iterations: 20,
+            fstar: None,
+            target_gap: None,
+            eval_every: 1,
+        })
+    }
+
+    pub fn iterations(mut self, n: usize) -> Self {
+        self.iterations = n;
+        self
+    }
+
+    pub fn cluster(mut self, c: ClusterConfig) -> Self {
+        self.cluster_config = c;
+        self
+    }
+
+    pub fn fstar(mut self, f: f64) -> Self {
+        self.fstar = Some(f);
+        self
+    }
+
+    pub fn target_gap(mut self, g: f64) -> Self {
+        self.target_gap = Some(g);
+        self
+    }
+
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.eval_every = k.max(1);
+        self
+    }
+
+    pub fn staged(&self) -> &StagedGrid<'a> {
+        &self.staged
+    }
+
+    /// Primal objective of `w` through the staged backend (off the clock).
+    pub fn evaluate(&self, w: &[f32], loss: Loss, lam: f32) -> Result<f64> {
+        let part = self.part;
+        let mut total = 0.0f64;
+        for p in 0..part.grid.p {
+            let mut mg = vec![0.0f32; part.n_p(p)];
+            for q in 0..part.grid.q {
+                let (c0, c1) = part.col_ranges[q];
+                let local = self.staged.margins(p, q, &w[c0..c1])?;
+                for (acc, &v) in mg.iter_mut().zip(&local) {
+                    *acc += v;
+                }
+            }
+            total += self.staged.loss_sum(loss, p, &mg)?;
+        }
+        Ok(total / part.n as f64
+            + 0.5 * lam as f64 * crate::linalg::nrm2_sq(w) as f64)
+    }
+
+    /// Run `opt` for the configured iterations, recording the paper's
+    /// metrics each `eval_every` iterations.
+    pub fn run(&mut self, opt: &mut dyn Optimizer) -> Result<RunResult> {
+        let lam = opt.lambda();
+        let mut cluster = SimCluster::new(self.cluster_config.clone());
+        let mut rec = Recorder::new(self.fstar);
+        let wall = Timer::start();
+        opt.init(&self.staged, &mut cluster)?;
+        for t in 1..=self.iterations {
+            opt.iterate(t, &self.staged, &mut cluster)?;
+            if t % self.eval_every == 0 || t == self.iterations {
+                let f = self.evaluate(opt.w(), opt.loss(), lam)?;
+                let d = opt
+                    .dual_objective(&self.staged)?
+                    .unwrap_or(f64::NAN);
+                rec.push(
+                    t,
+                    f,
+                    d,
+                    cluster.clock.now(),
+                    wall.secs(),
+                    cluster.clock.comm_bytes(),
+                );
+                if let (Some(target), Some(last)) = (self.target_gap, rec.last()) {
+                    if last.rel_gap.is_finite() && last.rel_gap <= target {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(RunResult {
+            method: opt.name(),
+            history: rec,
+            w: opt.w().to_vec(),
+            sim_time: cluster.clock.now(),
+            wall_time: wall.secs(),
+            comm_bytes: cluster.clock.comm_bytes(),
+            supersteps: cluster.clock.supersteps(),
+        })
+    }
+}

@@ -1,0 +1,27 @@
+//! The coordinator — the paper's L3 contribution.
+//!
+//! * [`D3ca`] — Algorithm 1: per-partition local SDCA (1/Q-scaled), dual
+//!   averaging over feature partitions, primal recovery via the
+//!   primal-dual map.
+//! * [`Radisa`] — Algorithm 3: SVRG snapshot + full gradient, random
+//!   non-overlapping sub-block exchange, local stochastic steps,
+//!   concatenation (or averaging: RADiSA-avg).
+//! * [`Admm`] — the block-splitting ADMM baseline (Parikh & Boyd 2014):
+//!   cached-factor graph projections + separable proxes + consensus
+//!   averaging.
+//!
+//! All three run under the same [`Driver`], against either backend, over
+//! the simulated cluster; per-iteration state (primal/dual objective,
+//! simulated time, communication bytes) lands in a
+//! [`crate::metrics::Recorder`].
+
+mod admm;
+mod d3ca;
+mod driver;
+mod radisa;
+pub mod schedule;
+
+pub use admm::{Admm, AdmmConfig};
+pub use d3ca::{BetaSchedule, D3ca, D3caConfig};
+pub use driver::{Driver, Optimizer, RunResult};
+pub use radisa::{Radisa, RadisaConfig};

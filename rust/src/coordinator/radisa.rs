@@ -1,0 +1,296 @@
+//! RADiSA — RAndom DIstributed Stochastic Algorithm (Algorithm 3).
+//!
+//! Per global iteration t:
+//!
+//! 1. snapshot w̃ ← w; full gradient μ̃ = ∇F(w̃) computed doubly
+//!    distributed: margins m̃[p] = Σ_q x[p,q] w̃[·,q] (reduce over q), then
+//!    μ̃[·,q] = Σ_p (1/n) x[p,q]ᵀ ψ(m̃[p]) (reduce over p) + λ w̃;
+//!    the m̃ vectors are *kept* on the row partitions — they are what lets
+//!    a partition evaluate full-data stochastic gradients locally
+//!    (DESIGN.md margin bookkeeping);
+//! 2. each column's sub-blocks are re-dealt by a random permutation
+//!    (non-overlapping exchange, Fig. 2);
+//! 3. every partition runs L SVRG steps on its assigned sub-block;
+//! 4. the new global iterate is the concatenation of the sub-block
+//!    results — or, for RADiSA-avg (`average: true`), every partition
+//!    works on the whole w[·,q] and the results are averaged over p.
+
+use super::driver::Optimizer;
+use super::schedule::{radisa_eta, SubBlockSchedule};
+use crate::cluster::SimCluster;
+use crate::data::{Partitioned, SubBlocks};
+use crate::loss::Loss;
+use crate::runtime::StagedGrid;
+use crate::util::rng::Xoshiro;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct RadisaConfig {
+    pub lambda: f32,
+    pub loss: Loss,
+    /// Step-size constant γ in η_t = γ/(1+√(t−1)).  `0.0` selects the
+    /// auto rule γ = P·Q / E‖x_i‖² (mean squared row norm measured at
+    /// init): the local stochastic gradient lives on a 1/(P·Q) coordinate
+    /// window, so its squared norm is ≈ E‖x_i‖²/(P·Q), and γ ≈
+    /// 1/E‖x_j|win‖² keeps steps on the curvature scale.  This is also
+    /// the paper's strong-scaling adjustment ("adjust the step-size as K
+    /// increases by taking into account the number of observation
+    /// partitions P") made explicit.
+    pub gamma: f32,
+    /// Inner steps per partition per iteration (0 → one pass: L = n_p).
+    pub batch: usize,
+    /// RADiSA-avg: full-block overlap + parameter averaging.
+    pub average: bool,
+    /// Delayed gradient updates (paper §V: "delaying the gradient updates
+    /// can be a viable alternative"): one full-gradient snapshot anchors
+    /// `grad_refresh` successive exchange+SVRG rounds; between rounds only
+    /// the (much cheaper) margins pass is refreshed, so the variance
+    /// anchor μ̃ is stale by at most `grad_refresh − 1` rounds — the
+    /// "practical SVRG" regime of Babanezhad et al. (paper ref. [28]).
+    /// 1 = vanilla RADiSA.
+    pub grad_refresh: usize,
+    pub seed: u64,
+}
+
+impl Default for RadisaConfig {
+    fn default() -> Self {
+        RadisaConfig {
+            lambda: 1e-3,
+            loss: Loss::Hinge,
+            gamma: 0.0,
+            batch: 0,
+            average: false,
+            grad_refresh: 1,
+            seed: 1,
+        }
+    }
+}
+
+pub struct Radisa {
+    cfg: RadisaConfig,
+    w: Vec<f32>,
+    rng_root: Xoshiro,
+    schedule: Option<SubBlockSchedule>,
+    subblocks: Option<SubBlocks>,
+    gamma_eff: f32,
+}
+
+impl Radisa {
+    pub fn new(cfg: RadisaConfig) -> Radisa {
+        let rng_root = Xoshiro::new(cfg.seed).substream(0x4AD1, 0, 0);
+        let gamma_eff = cfg.gamma;
+        Radisa { cfg, w: Vec::new(), rng_root, schedule: None, subblocks: None, gamma_eff }
+    }
+
+    /// The step-size constant actually in use (resolved after `init`).
+    pub fn gamma_effective(&self) -> f32 {
+        self.gamma_eff
+    }
+
+    pub fn config(&self) -> &RadisaConfig {
+        &self.cfg
+    }
+
+    /// Margins pass: m[p] = Σ_q x[p,q] w[·,q] (reduce over q per row
+    /// partition).  Run once per round — it is what keeps the local
+    /// margin identity exact between delayed-gradient rounds.
+    fn margins_pass(
+        &self,
+        staged: &StagedGrid<'_>,
+        cluster: &mut SimCluster,
+    ) -> Result<Vec<Vec<f32>>> {
+        let part = staged.part;
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let mut mt: Vec<Vec<f32>> = Vec::with_capacity(pp);
+        let mut durations = Vec::new();
+        for p in 0..pp {
+            let mut per_q = Vec::with_capacity(qq);
+            for q in 0..qq {
+                let (c0, c1) = part.col_ranges[q];
+                let timer = crate::util::timer::Timer::start();
+                per_q.push(staged.margins(p, q, &self.w[c0..c1])?);
+                durations.push(timer.secs());
+            }
+            mt.push(cluster.reduce_sum(per_q));
+        }
+        cluster
+            .clock
+            .add_compute(crate::cluster::lpt_makespan(&durations, cluster.config.cores));
+        Ok(mt)
+    }
+
+    /// Gradient pass: μ[·,q] = Σ_p (1/n) x[p,q]ᵀ ψ(m[p]) + λ w (reduce over
+    /// p per feature partition) — the expensive half of the snapshot,
+    /// skipped on delayed rounds.
+    fn grad_pass(
+        &self,
+        staged: &StagedGrid<'_>,
+        cluster: &mut SimCluster,
+        mt: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let part = staged.part;
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let mut mu: Vec<Vec<f32>> = Vec::with_capacity(qq);
+        let mut durations = Vec::new();
+        for q in 0..qq {
+            let (c0, c1) = part.col_ranges[q];
+            let mut per_p = Vec::with_capacity(pp);
+            for p in 0..pp {
+                let timer = crate::util::timer::Timer::start();
+                per_p.push(staged.grad(self.cfg.loss, p, q, &mt[p], part.n)?);
+                durations.push(timer.secs());
+            }
+            let mut g = cluster.reduce_sum(per_p);
+            // + λ w̃ (the regularizer's exact gradient at the snapshot)
+            for (gv, &wv) in g.iter_mut().zip(&self.w[c0..c1]) {
+                *gv += self.cfg.lambda * wv;
+            }
+            mu.push(g);
+        }
+        cluster
+            .clock
+            .add_compute(crate::cluster::lpt_makespan(&durations, cluster.config.cores));
+        Ok(mu)
+    }
+}
+
+impl Optimizer for Radisa {
+    fn name(&self) -> String {
+        if self.cfg.average {
+            "radisa-avg".into()
+        } else {
+            "radisa".into()
+        }
+    }
+
+    fn loss(&self) -> Loss {
+        self.cfg.loss
+    }
+
+    fn lambda(&self) -> f32 {
+        self.cfg.lambda
+    }
+
+    fn init(&mut self, staged: &StagedGrid<'_>, _cluster: &mut SimCluster) -> Result<()> {
+        let part = staged.part;
+        self.w = vec![0.0; part.m];
+        self.schedule = Some(SubBlockSchedule::new(&self.rng_root, part.grid.p));
+        self.subblocks = Some(SubBlocks::split(part));
+        if self.cfg.gamma <= 0.0 {
+            // mean squared row norm, accumulated across the grid
+            let mut total = 0.0f64;
+            for p in 0..part.grid.p {
+                for q in 0..part.grid.q {
+                    let b = part.block(p, q);
+                    for i in 0..b.rows() {
+                        total += b.row_norm_sq(i) as f64;
+                    }
+                }
+            }
+            let mean = (total / part.n as f64).max(1e-12) as f32;
+            self.gamma_eff = (part.grid.p * part.grid.q) as f32 / mean;
+        }
+        Ok(())
+    }
+
+    fn iterate(
+        &mut self,
+        t: usize,
+        staged: &StagedGrid<'_>,
+        cluster: &mut SimCluster,
+    ) -> Result<()> {
+        let part: &Partitioned = staged.part;
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let rounds = self.cfg.grad_refresh.max(1);
+
+        // broadcast the snapshot w̃ to every partition (cost model)
+        cluster.broadcast_cost(part.m * 4, pp * qq);
+
+        // steps 2-3: snapshot margins + full gradient (the gradient pass is
+        // computed once and anchors all `rounds` exchange+SVRG rounds)
+        let mut mt = self.margins_pass(staged, cluster)?;
+        let mu = self.grad_pass(staged, cluster, &mt)?;
+
+        for round in 0..rounds {
+            if round > 0 {
+                // delayed-gradient round: refresh only the margins so the
+                // local margin identity stays exact; μ̃ stays stale
+                mt = self.margins_pass(staged, cluster)?;
+            }
+            // a distinct schedule/rng/step-size epoch per round, so k
+            // delayed rounds anneal exactly like k vanilla iterations
+            let tick = (t - 1) * rounds + round + 1;
+            let eta = radisa_eta(self.gamma_eff, tick);
+
+            // steps 4-11: local SVRG on randomly exchanged sub-blocks
+            let schedule = self.schedule.as_ref().unwrap();
+            let subblocks = self.subblocks.as_ref().unwrap();
+            let mut new_w = self.w.clone();
+            let mut durations = Vec::with_capacity(pp * qq);
+            for q in 0..qq {
+                let (c0, c1) = part.col_ranges[q];
+                let wt_q = &self.w[c0..c1];
+                let assign = schedule.assignment(q, tick);
+                // RADiSA-avg accumulates full-width results for averaging
+                let mut avg_acc = vec![0.0f64; c1 - c0];
+                for p in 0..pp {
+                    let n_p = part.n_p(p);
+                    let l = if self.cfg.batch == 0 { n_p } else { self.cfg.batch };
+                    let window = if self.cfg.average {
+                        (0, c1 - c0)
+                    } else {
+                        subblocks.range(q, assign[p])
+                    };
+                    let mu_win = &mu[q][window.0..window.1];
+                    let mut rng =
+                        self.rng_root.substream(p as u64, q as u64, tick as u64);
+                    let idx = rng.index_stream(n_p, n_p.min(l).max(1));
+                    let timer = crate::util::timer::Timer::start();
+                    let w_out = staged.svrg_block(
+                        self.cfg.loss,
+                        p,
+                        q,
+                        wt_q,
+                        wt_q,
+                        mu_win,
+                        window,
+                        &mt[p],
+                        &idx,
+                        l,
+                        eta,
+                        self.cfg.lambda,
+                    )?;
+                    durations.push(timer.secs());
+                    if self.cfg.average {
+                        for (acc, &v) in avg_acc.iter_mut().zip(&w_out) {
+                            *acc += v as f64;
+                        }
+                    } else {
+                        // step 12: concatenate — partition p owns its window
+                        new_w[c0 + window.0..c0 + window.1]
+                            .copy_from_slice(&w_out[window.0..window.1]);
+                    }
+                }
+                if self.cfg.average {
+                    for (k, acc) in avg_acc.iter().enumerate() {
+                        new_w[c0 + k] = (*acc / pp as f64) as f32;
+                    }
+                    // averaging ships full blocks: reduce of P vectors of m_q
+                    cluster.reduce_sum(vec![vec![0.0f32; c1 - c0]; pp.max(2)]);
+                } else {
+                    // concatenation ships one sub-block per partition
+                    cluster.broadcast_cost((c1 - c0) * 4 / pp.max(1), pp);
+                }
+            }
+            cluster
+                .clock
+                .add_compute(crate::cluster::lpt_makespan(&durations, cluster.config.cores));
+            self.w = new_w;
+        }
+        Ok(())
+    }
+
+    fn w(&self) -> &[f32] {
+        &self.w
+    }
+}

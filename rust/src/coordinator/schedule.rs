@@ -1,0 +1,83 @@
+//! Schedules: step sizes and RADiSA's random non-overlapping sub-block
+//! exchange.
+
+use crate::util::rng::Xoshiro;
+
+/// RADiSA's step size η_t = γ / (1 + √(t−1)) (paper §IV), t ≥ 1.
+pub fn radisa_eta(gamma: f32, t: usize) -> f32 {
+    gamma / (1.0 + ((t.saturating_sub(1)) as f32).sqrt())
+}
+
+/// Assignment of sub-blocks to observation partitions for one feature
+/// partition at one iteration: `assign[p] = s` means partition [p,q] works
+/// on sub-block s.  A fresh random permutation per (q, t) realizes
+/// Algorithm 3's "randomly pick sub-block q̄ in non-overlapping manner" —
+/// no two partitions in a column ever hold the same coordinates, and the
+/// assignment changes every iteration (Fig. 2 of the paper).
+#[derive(Clone, Debug)]
+pub struct SubBlockSchedule {
+    root: Xoshiro,
+    p: usize,
+}
+
+impl SubBlockSchedule {
+    pub fn new(seed_root: &Xoshiro, p: usize) -> SubBlockSchedule {
+        SubBlockSchedule { root: seed_root.substream(0x5CED, p as u64, 0), p }
+    }
+
+    /// Permutation for feature partition `q` at global iteration `t`.
+    pub fn assignment(&self, q: usize, t: usize) -> Vec<usize> {
+        let mut rng = self.root.substream(q as u64, t as u64, 0xB10C);
+        rng.permutation(self.p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eta_decays_from_gamma() {
+        assert!((radisa_eta(0.1, 1) - 0.1).abs() < 1e-7);
+        assert!(radisa_eta(0.1, 2) < 0.1);
+        assert!(radisa_eta(0.1, 100) < radisa_eta(0.1, 10));
+        // never zero
+        assert!(radisa_eta(0.1, 10_000) > 0.0);
+    }
+
+    #[test]
+    fn assignment_is_a_permutation_every_time() {
+        let root = Xoshiro::new(7);
+        let s = SubBlockSchedule::new(&root, 5);
+        for q in 0..3 {
+            for t in 1..20 {
+                let mut a = s.assignment(q, t);
+                a.sort_unstable();
+                assert_eq!(a, vec![0, 1, 2, 3, 4], "q={q} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn assignment_changes_between_iterations() {
+        let root = Xoshiro::new(7);
+        let s = SubBlockSchedule::new(&root, 6);
+        let all_same = (1..30).all(|t| s.assignment(0, t) == s.assignment(0, 1));
+        assert!(!all_same, "sub-blocks never exchanged");
+    }
+
+    #[test]
+    fn assignment_is_deterministic() {
+        let root = Xoshiro::new(9);
+        let a = SubBlockSchedule::new(&root, 4);
+        let b = SubBlockSchedule::new(&root, 4);
+        assert_eq!(a.assignment(2, 17), b.assignment(2, 17));
+    }
+
+    #[test]
+    fn trivial_p1_assignment() {
+        let root = Xoshiro::new(1);
+        let s = SubBlockSchedule::new(&root, 1);
+        assert_eq!(s.assignment(0, 1), vec![0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Row-major dense `f32` matrix.
+
+use crate::linalg;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        DenseMatrix { rows, cols, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        DenseMatrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn gemv_into(&self, x: &[f32], out: &mut [f32]) {
+        linalg::gemv(&self.data, self.rows, self.cols, x, out);
+    }
+
+    pub fn gemv_t_into(&self, x: &[f32], out: &mut [f32]) {
+        linalg::gemv_t(&self.data, self.rows, self.cols, x, out);
+    }
+
+    /// Copy of the sub-matrix `[r0, r1) x [c0, c1)`.
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> DenseMatrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = DenseMatrix::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            let dst = (i - r0) * out.cols;
+            out.data[dst..dst + out.cols]
+                .copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Scale every column to unit variance (population), matching the
+    /// paper's "features were standardized to have unit variance".
+    /// Zero-variance columns are left unscaled.
+    pub fn standardize_columns(&mut self) {
+        let n = self.rows as f64;
+        for j in 0..self.cols {
+            let mut sum = 0.0f64;
+            let mut sq = 0.0f64;
+            for i in 0..self.rows {
+                let v = self.get(i, j) as f64;
+                sum += v;
+                sq += v * v;
+            }
+            let mean = sum / n;
+            let var = (sq / n - mean * mean).max(0.0);
+            if var > 1e-12 {
+                let inv = (1.0 / var.sqrt()) as f32;
+                for i in 0..self.rows {
+                    self.data[i * self.cols + j] *= inv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_and_rows() {
+        let m = DenseMatrix::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.get(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn slice_extracts_submatrix() {
+        let m = DenseMatrix::from_fn(4, 5, |i, j| (i * 10 + j) as f32);
+        let s = m.slice(1, 3, 2, 5);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.cols, 3);
+        assert_eq!(s.row(0), &[12.0, 13.0, 14.0]);
+        assert_eq!(s.row(1), &[22.0, 23.0, 24.0]);
+    }
+
+    #[test]
+    fn standardize_gives_unit_variance() {
+        let mut m = DenseMatrix::from_fn(100, 3, |i, j| {
+            (i as f32 * 0.1 + j as f32) * (j as f32 + 0.5)
+        });
+        m.standardize_columns();
+        for j in 0..3 {
+            let mean: f64 = (0..100).map(|i| m.get(i, j) as f64).sum::<f64>() / 100.0;
+            let var: f64 = (0..100)
+                .map(|i| {
+                    let d = m.get(i, j) as f64 - mean;
+                    d * d
+                })
+                .sum::<f64>()
+                / 100.0;
+            assert!((var - 1.0).abs() < 1e-3, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn standardize_leaves_constant_columns() {
+        let mut m = DenseMatrix::from_fn(10, 1, |_, _| 3.0);
+        m.standardize_columns();
+        assert_eq!(m.get(0, 0), 3.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! LIBSVM-format reader/writer.
+//!
+//! Format: one observation per line, `label idx:val idx:val ...` with
+//! 1-based, strictly increasing indices.  The paper's Part-2 data sets
+//! (real-sim, news20) ship in this format; the offline environment
+//! substitutes [`super::SyntheticSparse`] instances written through
+//! [`write_libsvm`] and re-read here, so the parser path is exercised
+//! end-to-end and real files drop in unchanged.
+
+use super::sparse::SparseMatrix;
+use super::{Block, Dataset};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Read a LIBSVM file.  `m_hint` (if nonzero) fixes the feature count;
+/// otherwise it is inferred from the maximum index seen.
+pub fn read_libsvm(path: &Path, m_hint: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut triplets = Vec::new();
+    let mut y = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f32 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let row = y.len();
+        let mut prev = 0usize;
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: token '{tok}'", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("line {}: bad index", lineno + 1))?;
+            let val: f32 = val
+                .parse()
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: LIBSVM indices are 1-based", lineno + 1);
+            }
+            if idx <= prev {
+                bail!("line {}: indices not strictly increasing", lineno + 1);
+            }
+            prev = idx;
+            max_col = max_col.max(idx);
+            triplets.push((row, idx - 1, val));
+        }
+        y.push(if label > 0.0 { 1.0 } else { -1.0 });
+    }
+    let m = if m_hint > 0 { m_hint } else { max_col };
+    if max_col > m {
+        bail!("feature index {max_col} exceeds m_hint {m}");
+    }
+    let n = y.len();
+    Ok(Dataset {
+        name: path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "libsvm".into()),
+        x: Block::Sparse(SparseMatrix::from_triplets(n, m, triplets)),
+        y,
+    })
+}
+
+/// Write a dataset in LIBSVM format (sparse blocks only).
+pub fn write_libsvm(ds: &Dataset, path: &Path) -> Result<()> {
+    let sp = match &ds.x {
+        Block::Sparse(s) => s,
+        Block::Dense(_) => bail!("write_libsvm expects a sparse dataset"),
+    };
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..sp.rows {
+        write!(w, "{}", if ds.y[i] > 0.0 { "+1" } else { "-1" })?;
+        for (j, v) in sp.row_iter(i) {
+            write!(w, " {}:{}", j + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSparse;
+
+    #[test]
+    fn roundtrip_synthetic() {
+        let ds = SyntheticSparse::new("rt", 50, 80, 0.05, 3).build();
+        let dir = std::env::temp_dir().join("ddopt_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.libsvm");
+        write_libsvm(&ds, &path).unwrap();
+        let back = read_libsvm(&path, 80).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.m(), 80);
+        assert_eq!(back.y, ds.y);
+        match (&ds.x, &back.x) {
+            (Block::Sparse(a), Block::Sparse(b)) => {
+                assert_eq!(a.indptr, b.indptr);
+                assert_eq!(a.indices, b.indices);
+                for (va, vb) in a.values.iter().zip(&b.values) {
+                    assert!((va - vb).abs() < 1e-6);
+                }
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_comments_and_blank_lines() {
+        let dir = std::env::temp_dir().join("ddopt_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.libsvm");
+        std::fs::write(&path, "# header\n\n+1 1:0.5 3:1.5\n-1 2:2.0 # tail\n")
+            .unwrap();
+        let ds = read_libsvm(&path, 0).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.m(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn rejects_zero_and_decreasing_indices() {
+        let dir = std::env::temp_dir().join("ddopt_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p0 = dir.join("z.libsvm");
+        std::fs::write(&p0, "+1 0:1.0\n").unwrap();
+        assert!(read_libsvm(&p0, 0).is_err());
+        let p1 = dir.join("d.libsvm");
+        std::fs::write(&p1, "+1 3:1.0 2:1.0\n").unwrap();
+        assert!(read_libsvm(&p1, 0).is_err());
+    }
+}

@@ -1,0 +1,303 @@
+//! Data substrate: matrices, generators, the LIBSVM reader, and the P×Q
+//! doubly-distributed partitioner.
+//!
+//! The central abstraction is [`Block`], a dense-or-CSR matrix fragment
+//! holding partition `[p,q]`'s slice of the design matrix.  Dense blocks
+//! feed the XLA artifacts (padded to shape buckets); sparse blocks are
+//! consumed by the native backend (the paper's Part-2 experiments are
+//! 0.03%-0.24% sparse, where a dense buffer would be pathological).
+
+mod dense;
+mod libsvm;
+mod partition;
+mod sparse;
+mod synthetic;
+
+pub use dense::DenseMatrix;
+pub use libsvm::{read_libsvm, write_libsvm};
+pub use partition::{Grid, Partitioned, SubBlocks};
+pub use sparse::SparseMatrix;
+pub use synthetic::{SyntheticDense, SyntheticSparse};
+
+/// A matrix fragment — one `[p,q]` partition's feature slice.
+#[derive(Clone, Debug)]
+pub enum Block {
+    Dense(DenseMatrix),
+    Sparse(SparseMatrix),
+}
+
+impl Block {
+    pub fn rows(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.rows,
+            Block::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.cols,
+            Block::Sparse(m) => m.cols,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.data.iter().filter(|v| **v != 0.0).count(),
+            Block::Sparse(m) => m.values.len(),
+        }
+    }
+
+    /// out = X w
+    pub fn margins_into(&self, w: &[f32], out: &mut [f32]) {
+        match self {
+            Block::Dense(m) => m.gemv_into(w, out),
+            Block::Sparse(m) => m.gemv_into(w, out),
+        }
+    }
+
+    /// out = X^T v
+    pub fn atx_into(&self, v: &[f32], out: &mut [f32]) {
+        match self {
+            Block::Dense(m) => m.gemv_t_into(v, out),
+            Block::Sparse(m) => m.gemv_t_into(v, out),
+        }
+    }
+
+    /// x_i · w for a single row.
+    pub fn row_dot(&self, i: usize, w: &[f32]) -> f32 {
+        match self {
+            Block::Dense(m) => crate::linalg::dot(m.row(i), w),
+            Block::Sparse(m) => m.row_dot(i, w),
+        }
+    }
+
+    /// x_i · w restricted to a masked coordinate window [lo, hi).
+    pub fn row_dot_window(&self, i: usize, w: &[f32], lo: usize, hi: usize) -> f32 {
+        match self {
+            Block::Dense(m) => crate::linalg::dot(&m.row(i)[lo..hi], &w[lo..hi]),
+            Block::Sparse(m) => m.row_dot_window(i, w, lo, hi),
+        }
+    }
+
+    /// ||x_i||^2
+    pub fn row_norm_sq(&self, i: usize) -> f32 {
+        match self {
+            Block::Dense(m) => crate::linalg::nrm2_sq(m.row(i)),
+            Block::Sparse(m) => m.row_norm_sq(i),
+        }
+    }
+
+    /// w += a * x_i
+    pub fn row_axpy(&self, i: usize, a: f32, w: &mut [f32]) {
+        match self {
+            Block::Dense(m) => crate::linalg::axpy(a, m.row(i), w),
+            Block::Sparse(m) => m.row_axpy(i, a, w),
+        }
+    }
+
+    /// w[lo..hi] += a * x_i[lo..hi]
+    pub fn row_axpy_window(&self, i: usize, a: f32, w: &mut [f32], lo: usize, hi: usize) {
+        match self {
+            Block::Dense(m) => crate::linalg::axpy(a, &m.row(i)[lo..hi], &mut w[lo..hi]),
+            Block::Sparse(m) => m.row_axpy_window(i, a, w, lo, hi),
+        }
+    }
+
+    /// out[k - lo] += a * x_i[k] for k in [lo, hi) — window op with a
+    /// re-based output, the allocation-free primitive the SVRG hot loop
+    /// uses (out has length hi - lo).
+    pub fn row_axpy_window_offset(&self, i: usize, a: f32, out: &mut [f32], lo: usize, hi: usize) {
+        debug_assert_eq!(out.len(), hi - lo);
+        match self {
+            Block::Dense(m) => crate::linalg::axpy(a, &m.row(i)[lo..hi], out),
+            Block::Sparse(m) => {
+                for (j, v) in m.row_iter(i) {
+                    if j >= lo && j < hi {
+                        out[j - lo] += a * v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// x_i[lo..hi] · d where d is re-based to the window (length hi - lo).
+    pub fn row_dot_window_offset(&self, i: usize, d: &[f32], lo: usize, hi: usize) -> f32 {
+        debug_assert_eq!(d.len(), hi - lo);
+        match self {
+            Block::Dense(m) => crate::linalg::dot(&m.row(i)[lo..hi], d),
+            Block::Sparse(m) => {
+                let mut acc = 0.0f32;
+                for (j, v) in m.row_iter(i) {
+                    if j >= lo && j < hi {
+                        acc += v * d[j - lo];
+                    }
+                }
+                acc
+            }
+        }
+    }
+
+    /// Materialize as a dense row-major buffer padded to `(n_cap, m_cap)` —
+    /// the XLA backend's bucket protocol (real data top-left, zeros
+    /// elsewhere).
+    pub fn to_padded_dense(&self, n_cap: usize, m_cap: usize) -> Vec<f32> {
+        assert!(self.rows() <= n_cap && self.cols() <= m_cap,
+                "block {}x{} exceeds bucket {}x{}",
+                self.rows(), self.cols(), n_cap, m_cap);
+        let mut out = vec![0.0f32; n_cap * m_cap];
+        match self {
+            Block::Dense(m) => {
+                for i in 0..m.rows {
+                    out[i * m_cap..i * m_cap + m.cols].copy_from_slice(m.row(i));
+                }
+            }
+            Block::Sparse(m) => {
+                for i in 0..m.rows {
+                    for (j, v) in m.row_iter(i) {
+                        out[i * m_cap + j] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A whole labelled training set (before partitioning).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Block,
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn m(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        self.x.nnz() as f64 / (self.n() * self.m()) as f64
+    }
+
+    /// Content fingerprint (FNV-1a over labels and a sample of the matrix)
+    /// — distinguishes same-shape datasets from different seeds, e.g. for
+    /// the f* cache key.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut mix = |v: u32| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        mix(self.n() as u32);
+        mix(self.m() as u32);
+        for &y in self.y.iter().take(256) {
+            mix(y.to_bits());
+        }
+        let sample = |i: usize| -> f32 {
+            match &self.x {
+                Block::Dense(d) => d.data[i % d.data.len()],
+                Block::Sparse(s) => {
+                    if s.values.is_empty() {
+                        0.0
+                    } else {
+                        s.values[i % s.values.len()]
+                    }
+                }
+            }
+        };
+        for k in 0..256 {
+            mix(sample(k * 97 + 13).to_bits());
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro;
+
+    fn random_dense(n: usize, m: usize, seed: u64) -> DenseMatrix {
+        let mut r = Xoshiro::new(seed);
+        DenseMatrix::from_fn(n, m, |_, _| r.range_f32(-1.0, 1.0))
+    }
+
+    #[test]
+    fn dense_and_sparse_blocks_agree() {
+        let d = random_dense(13, 9, 1);
+        let s = SparseMatrix::from_dense(&d);
+        let bd = Block::Dense(d);
+        let bs = Block::Sparse(s);
+        let mut r = Xoshiro::new(2);
+        let w: Vec<f32> = (0..9).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        let v: Vec<f32> = (0..13).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        let (mut md, mut ms) = (vec![0.0; 13], vec![0.0; 13]);
+        bd.margins_into(&w, &mut md);
+        bs.margins_into(&w, &mut ms);
+        for i in 0..13 {
+            assert!((md[i] - ms[i]).abs() < 1e-5);
+            assert!((bd.row_dot(i, &w) - bs.row_dot(i, &w)).abs() < 1e-5);
+            assert!((bd.row_norm_sq(i) - bs.row_norm_sq(i)).abs() < 1e-4);
+        }
+        let (mut ad, mut as_) = (vec![0.0; 9], vec![0.0; 9]);
+        bd.atx_into(&v, &mut ad);
+        bs.atx_into(&v, &mut as_);
+        for j in 0..9 {
+            assert!((ad[j] - as_[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn padded_dense_protocol() {
+        let d = random_dense(3, 2, 3);
+        let b = Block::Dense(d.clone());
+        let pad = b.to_padded_dense(4, 5);
+        assert_eq!(pad.len(), 20);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(pad[i * 5 + j], d.get(i, j));
+            }
+        }
+        assert_eq!(pad[0 * 5 + 4], 0.0);
+        assert_eq!(pad[3 * 5..].iter().map(|v| v.abs()).sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn padded_dense_rejects_oversize() {
+        let b = Block::Dense(random_dense(5, 5, 4));
+        let _ = b.to_padded_dense(4, 8);
+    }
+
+    #[test]
+    fn window_ops_match_full_on_slice() {
+        let d = random_dense(6, 10, 5);
+        let s = Block::Sparse(SparseMatrix::from_dense(&d));
+        let b = Block::Dense(d);
+        let mut r = Xoshiro::new(6);
+        let w: Vec<f32> = (0..10).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        for i in 0..6 {
+            let full: f32 = b.row_dot_window(i, &w, 2, 7);
+            let sp: f32 = s.row_dot_window(i, &w, 2, 7);
+            assert!((full - sp).abs() < 1e-5, "row {i}: {full} vs {sp}");
+        }
+        let mut wd = w.clone();
+        let mut ws = w.clone();
+        b.row_axpy_window(2, 0.5, &mut wd, 3, 8);
+        s.row_axpy_window(2, 0.5, &mut ws, 3, 8);
+        for j in 0..10 {
+            assert!((wd[j] - ws[j]).abs() < 1e-5);
+        }
+        // outside the window unchanged
+        assert_eq!(wd[0], w[0]);
+        assert_eq!(wd[9], w[9]);
+    }
+}

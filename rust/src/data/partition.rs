@@ -1,0 +1,244 @@
+//! The P×Q doubly-distributed grid partitioner (paper Fig. 1).
+//!
+//! Observations split into P row ranges, features into Q column ranges;
+//! partition [p,q] holds `x[p-rows, q-cols]` plus the labels `y[p]` of its
+//! row range.  Partitions sharing a row range share the dual variables
+//! alpha[p, .]; partitions sharing a column range share the primal block
+//! w[., q] — the aggregation structure D3CA/RADiSA coordinate over.
+
+use super::{Block, Dataset};
+
+/// The partition grid dimensions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid {
+    pub p: usize,
+    pub q: usize,
+}
+
+impl Grid {
+    pub fn new(p: usize, q: usize) -> Grid {
+        assert!(p > 0 && q > 0, "grid must be positive");
+        Grid { p, q }
+    }
+
+    /// Total partitions K = P·Q.
+    pub fn k(&self) -> usize {
+        self.p * self.q
+    }
+
+    /// Flat index of partition [p,q].
+    #[inline]
+    pub fn idx(&self, p: usize, q: usize) -> usize {
+        debug_assert!(p < self.p && q < self.q);
+        p * self.q + q
+    }
+}
+
+/// Split `0..n` into `parts` contiguous near-equal ranges (remainder spread
+/// over the leading ranges, matching Spark's partitioning).
+pub fn balanced_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(parts > 0);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// A dataset split across the P×Q grid.
+#[derive(Clone, Debug)]
+pub struct Partitioned {
+    pub grid: Grid,
+    pub n: usize,
+    pub m: usize,
+    pub row_ranges: Vec<(usize, usize)>,
+    pub col_ranges: Vec<(usize, usize)>,
+    /// Blocks in row-major grid order: `blocks[grid.idx(p, q)]`.
+    pub blocks: Vec<Block>,
+    /// Full label vector; partition p sees `y[row_ranges[p]]`.
+    pub y: Vec<f32>,
+    pub name: String,
+}
+
+impl Partitioned {
+    pub fn split(ds: &Dataset, grid: Grid) -> Partitioned {
+        let (n, m) = (ds.n(), ds.m());
+        assert!(grid.p <= n, "more row partitions than rows");
+        assert!(grid.q <= m, "more col partitions than cols");
+        let row_ranges = balanced_ranges(n, grid.p);
+        let col_ranges = balanced_ranges(m, grid.q);
+        let mut blocks = Vec::with_capacity(grid.k());
+        for &(r0, r1) in &row_ranges {
+            for &(c0, c1) in &col_ranges {
+                let b = match &ds.x {
+                    Block::Dense(d) => Block::Dense(d.slice(r0, r1, c0, c1)),
+                    Block::Sparse(s) => Block::Sparse(s.slice(r0, r1, c0, c1)),
+                };
+                blocks.push(b);
+            }
+        }
+        Partitioned {
+            grid,
+            n,
+            m,
+            row_ranges,
+            col_ranges,
+            blocks,
+            y: ds.y.clone(),
+            name: ds.name.clone(),
+        }
+    }
+
+    pub fn block(&self, p: usize, q: usize) -> &Block {
+        &self.blocks[self.grid.idx(p, q)]
+    }
+
+    /// Rows in observation partition p.
+    pub fn n_p(&self, p: usize) -> usize {
+        let (a, b) = self.row_ranges[p];
+        b - a
+    }
+
+    /// Columns in feature partition q.
+    pub fn m_q(&self, q: usize) -> usize {
+        let (a, b) = self.col_ranges[q];
+        b - a
+    }
+
+    /// Labels of observation partition p.
+    pub fn labels(&self, p: usize) -> &[f32] {
+        let (a, b) = self.row_ranges[p];
+        &self.y[a..b]
+    }
+
+    /// Largest (n_p, m_q) over the grid — what the XLA bucket must fit.
+    pub fn max_block_dims(&self) -> (usize, usize) {
+        let np = (0..self.grid.p).map(|p| self.n_p(p)).max().unwrap();
+        let mq = (0..self.grid.q).map(|q| self.m_q(q)).max().unwrap();
+        (np, mq)
+    }
+}
+
+/// RADiSA's static sub-block structure: each feature partition's m_q local
+/// columns are split into P contiguous sub-blocks; the random
+/// *non-overlapping exchange* of sub-blocks between iterations is handled
+/// by `coordinator::schedule` on top of these fixed ranges (Algorithm 3's
+/// "partition each [.,q] into P blocks").
+#[derive(Clone, Debug)]
+pub struct SubBlocks {
+    /// `ranges[q][s]` = local (lo, hi) column window of sub-block s in
+    /// feature partition q.
+    pub ranges: Vec<Vec<(usize, usize)>>,
+}
+
+impl SubBlocks {
+    pub fn split(part: &Partitioned) -> SubBlocks {
+        let p = part.grid.p;
+        let ranges = (0..part.grid.q)
+            .map(|q| balanced_ranges(part.m_q(q), p))
+            .collect();
+        SubBlocks { ranges }
+    }
+
+    pub fn range(&self, q: usize, s: usize) -> (usize, usize) {
+        self.ranges[q][s]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SyntheticDense, SyntheticSparse};
+
+    #[test]
+    fn balanced_ranges_cover_and_balance() {
+        for (n, parts) in [(10, 3), (7, 7), (100, 1), (5, 2)] {
+            let rs = balanced_ranges(n, parts);
+            assert_eq!(rs.len(), parts);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[parts - 1].1, n);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            let sizes: Vec<usize> = rs.iter().map(|(a, b)| b - a).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "balanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn split_reassembles_margins() {
+        // X w computed per block and summed over q must equal the full X w.
+        let ds = SyntheticDense::paper_part1(3, 2, 20, 15, 0.1, 9).build();
+        let grid = Grid::new(3, 2);
+        let part = Partitioned::split(&ds, grid);
+        let mut rng = crate::util::rng::Xoshiro::new(1);
+        let w: Vec<f32> = (0..ds.m()).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut full = vec![0.0; ds.n()];
+        ds.x.margins_into(&w, &mut full);
+        for p in 0..3 {
+            let (r0, r1) = part.row_ranges[p];
+            let mut acc = vec![0.0f32; r1 - r0];
+            for q in 0..2 {
+                let (c0, c1) = part.col_ranges[q];
+                let mut local = vec![0.0f32; r1 - r0];
+                part.block(p, q).margins_into(&w[c0..c1], &mut local);
+                for (a, l) in acc.iter_mut().zip(&local) {
+                    *a += l;
+                }
+            }
+            for (i, a) in acc.iter().enumerate() {
+                assert!((a - full[r0 + i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_split_preserves_nnz() {
+        let ds = SyntheticSparse::new("t", 60, 50, 0.1, 21).build();
+        let part = Partitioned::split(&ds, Grid::new(4, 3));
+        let total: usize = part.blocks.iter().map(|b| b.nnz()).sum();
+        assert_eq!(total, ds.x.nnz());
+    }
+
+    #[test]
+    fn labels_align_with_row_ranges() {
+        let ds = SyntheticDense::paper_part1(4, 1, 10, 5, 0.1, 2).build();
+        let part = Partitioned::split(&ds, Grid::new(4, 1));
+        let mut collected = Vec::new();
+        for p in 0..4 {
+            collected.extend_from_slice(part.labels(p));
+        }
+        assert_eq!(collected, ds.y);
+    }
+
+    #[test]
+    fn subblocks_tile_each_feature_partition() {
+        let ds = SyntheticDense::paper_part1(3, 2, 8, 11, 0.1, 4).build();
+        let part = Partitioned::split(&ds, Grid::new(3, 2));
+        let sb = SubBlocks::split(&part);
+        for q in 0..2 {
+            let rs = &sb.ranges[q];
+            assert_eq!(rs.len(), 3);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[2].1, part.m_q(q));
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_flat_index() {
+        let g = Grid::new(3, 4);
+        assert_eq!(g.k(), 12);
+        assert_eq!(g.idx(0, 0), 0);
+        assert_eq!(g.idx(2, 3), 11);
+        assert_eq!(g.idx(1, 2), 6);
+    }
+}

@@ -1,0 +1,213 @@
+//! CSR sparse `f32` matrix — backs the paper's Part-2 experiments
+//! (real-sim at 0.24% and news20 at 0.03% density).
+
+use super::dense::DenseMatrix;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row start offsets, length rows+1.
+    pub indptr: Vec<usize>,
+    /// Column indices per stored value (strictly increasing within a row).
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseMatrix {
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        mut triplets: Vec<(usize, usize, f32)>,
+    ) -> Self {
+        triplets.sort_unstable_by_key(|t| (t.0, t.1));
+        triplets.dedup_by(|a, b| {
+            if a.0 == b.0 && a.1 == b.1 {
+                b.2 += a.2; // accumulate duplicates into the kept entry
+                true
+            } else {
+                false
+            }
+        });
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        for (i, j, v) in triplets {
+            assert!(i < rows && j < cols, "triplet ({i},{j}) out of bounds");
+            indptr[i + 1] += 1;
+            indices.push(j as u32);
+            values.push(v);
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        SparseMatrix { rows, cols, indptr, indices, values }
+    }
+
+    pub fn from_dense(d: &DenseMatrix) -> Self {
+        let mut triplets = Vec::new();
+        for i in 0..d.rows {
+            for j in 0..d.cols {
+                let v = d.get(i, j);
+                if v != 0.0 {
+                    triplets.push((i, j, v));
+                }
+            }
+        }
+        Self::from_triplets(d.rows, d.cols, triplets)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Iterate (col, value) of row i.
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        self.indices[s..e]
+            .iter()
+            .zip(&self.values[s..e])
+            .map(|(&j, &v)| (j as usize, v))
+    }
+
+    pub fn gemv_into(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            out[i] = self.row_dot(i, x);
+        }
+    }
+
+    pub fn gemv_t_into(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+                for k in s..e {
+                    out[self.indices[k] as usize] += xi * self.values[k];
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn row_dot(&self, i: usize, w: &[f32]) -> f32 {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        let mut acc = 0.0f32;
+        for k in s..e {
+            acc += self.values[k] * w[self.indices[k] as usize];
+        }
+        acc
+    }
+
+    pub fn row_dot_window(&self, i: usize, w: &[f32], lo: usize, hi: usize) -> f32 {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        let mut acc = 0.0f32;
+        for k in s..e {
+            let j = self.indices[k] as usize;
+            if j >= lo && j < hi {
+                acc += self.values[k] * w[j];
+            }
+        }
+        acc
+    }
+
+    #[inline]
+    pub fn row_norm_sq(&self, i: usize) -> f32 {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        self.values[s..e].iter().map(|v| v * v).sum()
+    }
+
+    pub fn row_axpy(&self, i: usize, a: f32, w: &mut [f32]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        for k in s..e {
+            w[self.indices[k] as usize] += a * self.values[k];
+        }
+    }
+
+    pub fn row_axpy_window(&self, i: usize, a: f32, w: &mut [f32], lo: usize, hi: usize) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        for k in s..e {
+            let j = self.indices[k] as usize;
+            if j >= lo && j < hi {
+                w[j] += a * self.values[k];
+            }
+        }
+    }
+
+    /// Copy of the sub-matrix `[r0, r1) x [c0, c1)` with re-based columns.
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> SparseMatrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut triplets = Vec::new();
+        for i in r0..r1 {
+            for (j, v) in self.row_iter(i) {
+                if j >= c0 && j < c1 {
+                    triplets.push((i - r0, j - c0, v));
+                }
+            }
+        }
+        SparseMatrix::from_triplets(r1 - r0, c1 - c0, triplets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> SparseMatrix {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [0, 3, 4]]
+        SparseMatrix::from_triplets(3, 3, vec![(0, 0, 1.0), (0, 2, 2.0), (2, 1, 3.0), (2, 2, 4.0)])
+    }
+
+    #[test]
+    fn csr_layout() {
+        let m = example();
+        assert_eq!(m.indptr, vec![0, 2, 2, 4]);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_iter(2).collect::<Vec<_>>(), vec![(1, 3.0), (2, 4.0)]);
+    }
+
+    #[test]
+    fn duplicate_triplets_accumulate() {
+        let m = SparseMatrix::from_triplets(1, 2, vec![(0, 1, 1.0), (0, 1, 2.5)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row_iter(0).collect::<Vec<_>>(), vec![(1, 3.5)]);
+    }
+
+    #[test]
+    fn gemv_matches_dense() {
+        let m = example();
+        let w = vec![1.0, 10.0, 100.0];
+        let mut out = vec![0.0; 3];
+        m.gemv_into(&w, &mut out);
+        assert_eq!(out, vec![201.0, 0.0, 430.0]);
+        let v = vec![1.0, 2.0, 3.0];
+        let mut out_t = vec![0.0; 3];
+        m.gemv_t_into(&v, &mut out_t);
+        assert_eq!(out_t, vec![1.0, 9.0, 14.0]);
+    }
+
+    #[test]
+    fn slice_rebases() {
+        let m = example();
+        let s = m.slice(0, 3, 1, 3);
+        assert_eq!(s.rows, 3);
+        assert_eq!(s.cols, 2);
+        assert_eq!(s.row_iter(0).collect::<Vec<_>>(), vec![(1, 2.0)]);
+        assert_eq!(s.row_iter(2).collect::<Vec<_>>(), vec![(0, 3.0), (1, 4.0)]);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let m = SparseMatrix::from_triplets(4, 2, vec![]);
+        assert_eq!(m.nnz(), 0);
+        let mut out = vec![9.0; 4];
+        m.gemv_into(&[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,248 @@
+//! Synthetic dataset generators.
+//!
+//! [`SyntheticDense`] reproduces the paper's Part-1 procedure (from Zhang,
+//! Lee & Shin 2012): x_i and the ground-truth w sampled U[-1,1],
+//! y_i = sgn(w.x_i) with each sign flipped w.p. 0.1, features standardized
+//! to unit variance.  Partition size is (n_per x m_per); the full instance
+//! is (P*n_per) x (Q*m_per) — e.g. the paper's 4x2 instance is dense
+//! 8,000 x 6,000 built from 2,000 x 3,000 partitions.
+//!
+//! [`SyntheticSparse`] stands in for the LIBSVM data the offline
+//! environment cannot download (real-sim, news20): CSR with a power-law
+//! column-popularity profile (text-corpus-like), values U[-1,1], labels
+//! from a sparse ground-truth hyperplane with 10% flips.
+
+use super::dense::DenseMatrix;
+use super::sparse::SparseMatrix;
+use super::{Block, Dataset};
+use crate::util::rng::Xoshiro;
+
+/// Builder for the paper's Part-1 dense instances.
+#[derive(Clone, Debug)]
+pub struct SyntheticDense {
+    pub p: usize,
+    pub q: usize,
+    pub n_per: usize,
+    pub m_per: usize,
+    pub flip_prob: f64,
+    pub seed: u64,
+    pub standardize: bool,
+}
+
+impl SyntheticDense {
+    pub fn paper_part1(
+        p: usize,
+        q: usize,
+        n_per: usize,
+        m_per: usize,
+        flip_prob: f64,
+        seed: u64,
+    ) -> Self {
+        SyntheticDense { p, q, n_per, m_per, flip_prob, seed, standardize: true }
+    }
+
+    pub fn n(&self) -> usize {
+        self.p * self.n_per
+    }
+
+    pub fn m(&self) -> usize {
+        self.q * self.m_per
+    }
+
+    pub fn build(&self) -> Dataset {
+        let (n, m) = (self.n(), self.m());
+        let mut rng = Xoshiro::new(self.seed).substream(0xDA7A, n as u64, m as u64);
+        let w_true: Vec<f32> = (0..m).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut x = DenseMatrix::zeros(n, m);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let row = &mut x.data[i * m..(i + 1) * m];
+            for v in row.iter_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            let marg = crate::linalg::dot(row, &w_true);
+            let mut label = if marg >= 0.0 { 1.0 } else { -1.0 };
+            if rng.coin(self.flip_prob) {
+                label = -label;
+            }
+            y.push(label);
+        }
+        if self.standardize {
+            x.standardize_columns();
+        }
+        Dataset {
+            name: format!("synth-dense-{}x{}", n, m),
+            x: Block::Dense(x),
+            y,
+        }
+    }
+}
+
+/// Builder for sparse text-like stand-ins (see DESIGN.md §Substitutions).
+#[derive(Clone, Debug)]
+pub struct SyntheticSparse {
+    pub n: usize,
+    pub m: usize,
+    /// Target density in (0, 1], e.g. 0.0024 for the real-sim stand-in.
+    pub density: f64,
+    pub flip_prob: f64,
+    pub seed: u64,
+    pub name: String,
+}
+
+impl SyntheticSparse {
+    pub fn new(name: &str, n: usize, m: usize, density: f64, seed: u64) -> Self {
+        SyntheticSparse {
+            n,
+            m,
+            density,
+            flip_prob: 0.1,
+            seed,
+            name: name.to_string(),
+        }
+    }
+
+    /// real-sim stand-in at 1/5 linear scale (see DESIGN.md).
+    pub fn realsim_like(seed: u64) -> Self {
+        Self::new("realsim-like", 14_462, 4_192, 0.0024, seed)
+    }
+
+    /// news20 stand-in with features scaled 1/20 (see DESIGN.md).
+    pub fn news20_like(seed: u64) -> Self {
+        Self::new("news20-like", 19_996, 67_760, 0.0003, seed)
+    }
+
+    pub fn build(&self) -> Dataset {
+        let mut rng =
+            Xoshiro::new(self.seed).substream(0x5BA5, self.n as u64, self.m as u64);
+        // Power-law column popularity: feature j drawn with weight ~ 1/(j+1)^0.8,
+        // matching the head-heavy profile of bag-of-words corpora.
+        let weights: Vec<f64> =
+            (0..self.m).map(|j| 1.0 / ((j + 1) as f64).powf(0.8)).collect();
+        let cum: Vec<f64> = weights
+            .iter()
+            .scan(0.0, |acc, w| {
+                *acc += w;
+                Some(*acc)
+            })
+            .collect();
+        let total = *cum.last().unwrap();
+
+        // Ground-truth hyperplane supported on the popular features.
+        let w_support = (self.m / 10).max(8).min(self.m);
+        let w_true: Vec<f32> =
+            (0..w_support).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+        let nnz_per_row = ((self.m as f64 * self.density).round() as usize).max(1);
+        let mut triplets = Vec::with_capacity(self.n * nnz_per_row);
+        let mut y = Vec::with_capacity(self.n);
+        let mut row_cols: Vec<usize> = Vec::with_capacity(nnz_per_row);
+        for i in 0..self.n {
+            row_cols.clear();
+            while row_cols.len() < nnz_per_row {
+                let u = rng.f64() * total;
+                let j = match cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+                    Ok(k) | Err(k) => k.min(self.m - 1),
+                };
+                if !row_cols.contains(&j) {
+                    row_cols.push(j);
+                }
+            }
+            let mut marg = 0.0f32;
+            for &j in row_cols.iter() {
+                let v = rng.range_f32(-1.0, 1.0);
+                triplets.push((i, j, v));
+                if j < w_support {
+                    marg += v * w_true[j];
+                }
+            }
+            let mut label = if marg >= 0.0 { 1.0 } else { -1.0 };
+            if rng.coin(self.flip_prob) {
+                label = -label;
+            }
+            y.push(label);
+        }
+        Dataset {
+            name: self.name.clone(),
+            x: Block::Sparse(SparseMatrix::from_triplets(self.n, self.m, triplets)),
+            y,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_builder_shapes_and_labels() {
+        let ds = SyntheticDense::paper_part1(2, 3, 50, 40, 0.1, 7).build();
+        assert_eq!(ds.n(), 100);
+        assert_eq!(ds.m(), 120);
+        assert!(ds.y.iter().all(|&l| l == 1.0 || l == -1.0));
+        // roughly balanced labels (uniform x, uniform w)
+        let pos = ds.y.iter().filter(|&&l| l > 0.0).count();
+        assert!(pos > 20 && pos < 80, "pos {pos}");
+    }
+
+    #[test]
+    fn dense_builder_is_deterministic() {
+        let a = SyntheticDense::paper_part1(2, 2, 20, 20, 0.1, 3).build();
+        let b = SyntheticDense::paper_part1(2, 2, 20, 20, 0.1, 3).build();
+        match (&a.x, &b.x) {
+            (Block::Dense(ma), Block::Dense(mb)) => assert_eq!(ma, mb),
+            _ => panic!(),
+        }
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn dense_standardized_unit_variance() {
+        let ds = SyntheticDense::paper_part1(4, 1, 100, 10, 0.1, 5).build();
+        if let Block::Dense(x) = &ds.x {
+            for j in 0..x.cols {
+                let mean: f64 =
+                    (0..x.rows).map(|i| x.get(i, j) as f64).sum::<f64>() / x.rows as f64;
+                let var: f64 = (0..x.rows)
+                    .map(|i| {
+                        let d = x.get(i, j) as f64 - mean;
+                        d * d
+                    })
+                    .sum::<f64>()
+                    / x.rows as f64;
+                assert!((var - 1.0).abs() < 1e-2, "col {j} var {var}");
+            }
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn sparse_builder_hits_density() {
+        let g = SyntheticSparse::new("t", 500, 400, 0.01, 11);
+        let ds = g.build();
+        assert_eq!(ds.n(), 500);
+        assert_eq!(ds.m(), 400);
+        let d = ds.sparsity();
+        assert!((d - 0.01).abs() < 0.003, "density {d}");
+    }
+
+    #[test]
+    fn sparse_builder_deterministic() {
+        let a = SyntheticSparse::new("t", 100, 200, 0.02, 13).build();
+        let b = SyntheticSparse::new("t", 100, 200, 0.02, 13).build();
+        match (&a.x, &b.x) {
+            (Block::Sparse(ma), Block::Sparse(mb)) => assert_eq!(ma, mb),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn sparse_labels_correlate_with_popular_features() {
+        // sanity: the generated task is learnable (labels not pure noise):
+        // a weight vector fit on the popular block should beat chance.
+        let ds = SyntheticSparse::new("t", 400, 300, 0.05, 17).build();
+        let pos = ds.y.iter().filter(|&&l| l > 0.0).count();
+        assert!(pos > 100 && pos < 300, "pos {pos}");
+    }
+}

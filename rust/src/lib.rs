@@ -1,0 +1,74 @@
+//! # ddopt — doubly-distributed optimization
+//!
+//! A reproduction of *Optimization for Large-Scale Machine Learning with
+//! Distributed Features and Observations* (Nathan & Klabjan, 2016) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: a P×Q
+//!   doubly-partitioned cluster runtime with the paper's three optimizers
+//!   (D3CA, RADiSA/RADiSA-avg, block-splitting ADMM), treeAggregate
+//!   communication, a simulated parallel clock, and the bench harness that
+//!   regenerates every table and figure in the paper's evaluation.
+//! * **L2/L1 (python/, build-time only)** — per-partition compute programs
+//!   (JAX) built on Pallas kernels, AOT-lowered once to `artifacts/*.hlo.txt`
+//!   and executed here through the PJRT C API ([`runtime`]).
+//!
+//! Quick tour:
+//! * [`data`] — dense/CSR matrices, the paper's synthetic generators, the
+//!   LIBSVM reader, and the P×Q grid partitioner.
+//! * [`loss`] — hinge / logistic / squared losses with conjugates.
+//! * [`solvers`] — native SDCA/SVRG/gradient/objective kernels + the exact
+//!   reference solver that produces `f*`.
+//! * [`cluster`] — the simulated cluster substrate (workers, reductions,
+//!   simulated time + communication model).
+//! * [`runtime`] — the PJRT engine and the [`runtime::Backend`] seam
+//!   (native rust vs. AOT XLA artifacts).
+//! * [`coordinator`] — the paper's algorithms 1-3 plus the ADMM baseline.
+//! * [`bench_harness`] — one module per paper table/figure.
+//!
+//! ```no_run
+//! use ddopt::prelude::*;
+//!
+//! let ds = SyntheticDense::paper_part1(2, 2, 200, 150, 0.1, 42).build();
+//! let part = Partitioned::split(&ds, Grid::new(2, 2));
+//! let backend = Backend::native();
+//! let mut opt = Radisa::new(RadisaConfig::default());
+//! let run = Driver::new(&part, &backend)
+//!     .unwrap()
+//!     .iterations(30)
+//!     .run(&mut opt)
+//!     .unwrap();
+//! println!("final gap: {:?}", run.history.last());
+//! ```
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod loss;
+pub mod metrics;
+pub mod runtime;
+pub mod solvers;
+pub mod testkit;
+pub mod util;
+
+/// Convenient re-exports of the types most programs need.
+pub mod prelude {
+    pub use crate::cluster::{ClusterConfig, SimCluster};
+    pub use crate::config::ExperimentConfig;
+    pub use crate::coordinator::{
+        Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa,
+        RadisaConfig, RunResult,
+    };
+    pub use crate::data::{
+        Dataset, DenseMatrix, Grid, Partitioned, SparseMatrix, SyntheticDense,
+        SyntheticSparse,
+    };
+    pub use crate::loss::Loss;
+    pub use crate::metrics::Recorder;
+    pub use crate::runtime::Backend;
+    pub use crate::solvers::exact::reference_optimum;
+    pub use crate::util::rng::Xoshiro;
+}

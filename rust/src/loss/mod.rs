@@ -1,0 +1,187 @@
+//! Loss functions for objective (1):  F(w) = (1/n) Σ f_i(x_i·w) + (λ/2)‖w‖².
+//!
+//! Conventions (shared with `python/compile/model.py` — keep in sync):
+//! the regularizer is (λ/2)‖w‖², the form the paper's dual (2) and
+//! primal-dual map (3) are consistent with (its eq. (1) prints λ‖w‖², but
+//! its SDCA update and w(α) match the λ/2 convention of CoCoA/SDCA).
+//!
+//! For each loss, `value`/`slope` parametrize by the margin z = x_i·w and
+//! label y ∈ {−1, +1} (hinge/logistic) or y ∈ ℝ (squared).  `conj_*` give
+//! what the dual methods need: hinge's conjugate box and linear part.
+
+/// Supported losses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// f(z) = max(0, 1 − y z) — the paper's experimental model (linear SVM).
+    Hinge,
+    /// f(z) = log(1 + exp(−y z)).
+    Logistic,
+    /// f(z) = (z − y)² / 2 (least squares).
+    Squared,
+}
+
+impl Loss {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::Hinge => "hinge",
+            Loss::Logistic => "logistic",
+            Loss::Squared => "squared",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Loss> {
+        match s {
+            "hinge" | "svm" => Some(Loss::Hinge),
+            "logistic" | "logreg" => Some(Loss::Logistic),
+            "squared" | "ls" => Some(Loss::Squared),
+            _ => None,
+        }
+    }
+
+    /// f_i(z).
+    #[inline]
+    pub fn value(&self, z: f32, y: f32) -> f32 {
+        match self {
+            Loss::Hinge => (1.0 - y * z).max(0.0),
+            Loss::Logistic => {
+                // stable log(1 + exp(-yz))
+                let t = -y * z;
+                if t > 0.0 {
+                    t + (-t).exp().ln_1p()
+                } else {
+                    t.exp().ln_1p()
+                }
+            }
+            Loss::Squared => {
+                let d = z - y;
+                0.5 * d * d
+            }
+        }
+    }
+
+    /// d f_i / d z — the per-observation slope used by gradient methods.
+    #[inline]
+    pub fn slope(&self, z: f32, y: f32) -> f32 {
+        match self {
+            Loss::Hinge => {
+                if y * z < 1.0 {
+                    -y
+                } else {
+                    0.0
+                }
+            }
+            Loss::Logistic => -y * sigmoid(-y * z),
+            Loss::Squared => z - y,
+        }
+    }
+
+    /// Whether the dual coordinate method (D3CA) supports this loss.
+    /// (The paper's D3CA experiments are hinge-only; logistic would need an
+    /// inner Newton solve in the closed-form step.)
+    pub fn has_sdca_closed_form(&self) -> bool {
+        matches!(self, Loss::Hinge)
+    }
+
+    /// −φ*_i(−a): the dual objective's per-observation linear part.
+    /// Hinge: a·y on the box 0 ≤ a·y ≤ 1 (∞ outside — callers must keep
+    /// iterates feasible, which the SDCA step does by construction).
+    #[inline]
+    pub fn dual_linear(&self, a: f32, y: f32) -> f32 {
+        match self {
+            Loss::Hinge => a * y,
+            _ => f32::NAN, // dual path is hinge-only
+        }
+    }
+
+    /// Is `a` inside the conjugate's domain box (hinge)?
+    #[inline]
+    pub fn dual_feasible(&self, a: f32, y: f32, tol: f32) -> bool {
+        match self {
+            Loss::Hinge => {
+                let t = a * y;
+                t >= -tol && t <= 1.0 + tol
+            }
+            _ => true,
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(t: f32) -> f32 {
+    if t >= 0.0 {
+        1.0 / (1.0 + (-t).exp())
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hinge_values_and_slope() {
+        let l = Loss::Hinge;
+        assert_eq!(l.value(2.0, 1.0), 0.0);
+        assert_eq!(l.value(0.0, 1.0), 1.0);
+        assert_eq!(l.value(-1.0, 1.0), 2.0);
+        assert_eq!(l.slope(0.5, 1.0), -1.0);
+        assert_eq!(l.slope(1.5, 1.0), 0.0);
+        assert_eq!(l.slope(-0.5, -1.0), 1.0);
+    }
+
+    #[test]
+    fn logistic_matches_reference_values() {
+        let l = Loss::Logistic;
+        // log(1+exp(0)) = ln 2
+        assert!((l.value(0.0, 1.0) - 0.693147).abs() < 1e-5);
+        // slope at 0 is -y/2
+        assert!((l.slope(0.0, 1.0) + 0.5).abs() < 1e-6);
+        // stability at extreme margins
+        assert!(l.value(100.0, -1.0) > 99.0);
+        assert!(l.value(100.0, 1.0) < 1e-6);
+        assert!(l.slope(1000.0, 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slope_is_derivative_numerically() {
+        for loss in [Loss::Hinge, Loss::Logistic, Loss::Squared] {
+            for &(z, y) in &[(0.3f32, 1.0f32), (-0.7, -1.0), (1.4, 1.0), (2.0, -1.0)] {
+                let h = 1e-3;
+                let num = (loss.value(z + h, y) - loss.value(z - h, y)) / (2.0 * h);
+                let ana = loss.slope(z, y);
+                assert!(
+                    (num - ana).abs() < 1e-2,
+                    "{loss:?} z={z} y={y}: {num} vs {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hinge_dual_box() {
+        let l = Loss::Hinge;
+        assert!(l.dual_feasible(0.5, 1.0, 0.0));
+        assert!(l.dual_feasible(-0.5, -1.0, 0.0));
+        assert!(!l.dual_feasible(-0.1, 1.0, 1e-6));
+        assert!(!l.dual_feasible(1.1, 1.0, 1e-6));
+        assert_eq!(l.dual_linear(0.7, 1.0), 0.7);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Loss::parse("hinge"), Some(Loss::Hinge));
+        assert_eq!(Loss::parse("svm"), Some(Loss::Hinge));
+        assert_eq!(Loss::parse("logreg"), Some(Loss::Logistic));
+        assert_eq!(Loss::parse("nope"), None);
+    }
+
+    #[test]
+    fn sigmoid_stable() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+        assert!(sigmoid(-100.0) >= 0.0);
+        assert!(sigmoid(100.0) <= 1.0);
+        assert!((sigmoid(100.0) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,263 @@
+//! `ddopt` — the coordinator CLI.
+//!
+//! ```text
+//! ddopt train [--config cfg.json] [--method radisa|radisa-avg|d3ca|admm]
+//!             [--p 4 --q 2] [--lambda 1e-3] [--gamma 0.05] [--iters 30]
+//!             [--backend native|xla] [--loss hinge|logistic]
+//!             [--n-per 200 --m-per 150 | --sparse n,m,density]
+//! ddopt exp <table1|fig3|fig4|fig5|fig6|perf|ablations|all> [--scale small|paper]
+//! ddopt gen-data --out data.libsvm [--n 1000 --m 500 --density 0.01]
+//! ddopt fstar [--lambda 0.1] [dataset flags as in train]
+//! ddopt artifacts-info
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use ddopt::bench_harness::{self, Scale};
+use ddopt::cluster::ClusterConfig;
+use ddopt::config::{DatasetSpec, ExperimentConfig};
+use ddopt::coordinator::{
+    Admm, AdmmConfig, BetaSchedule, D3ca, D3caConfig, Driver, Optimizer,
+    Radisa, RadisaConfig,
+};
+use ddopt::data::{Grid, Partitioned};
+use ddopt::loss::Loss;
+use ddopt::metrics::write_csv;
+use ddopt::runtime::Backend;
+use ddopt::solvers::exact::reference_optimum;
+use ddopt::util::cli::Args;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let code = match cmd.as_str() {
+        "train" => run_train(&args),
+        "exp" => run_exp(&args),
+        "gen-data" => run_gen_data(&args),
+        "fstar" => run_fstar(&args),
+        "artifacts-info" => run_artifacts_info(&args),
+        _ => {
+            eprintln!("usage: ddopt <train|exp|gen-data|fstar|artifacts-info> [flags]");
+            eprintln!("see rust/src/main.rs docs or README.md");
+            Err(anyhow!("unknown command '{cmd}'"))
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.flag_str("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(&path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(p) = args.flag::<usize>("p") {
+        cfg.p = p;
+    }
+    if let Some(q) = args.flag::<usize>("q") {
+        cfg.q = q;
+    }
+    if let Some(l) = args.flag::<f32>("lambda") {
+        cfg.lambda = l;
+        cfg.rho = l;
+    }
+    if let Some(g) = args.flag::<f32>("gamma") {
+        cfg.gamma = g;
+    }
+    if let Some(i) = args.flag::<usize>("iters") {
+        cfg.iterations = i;
+    }
+    if let Some(s) = args.flag::<u64>("seed") {
+        cfg.seed = s;
+    }
+    if let Some(b) = args.flag_str("backend") {
+        cfg.backend = b;
+    }
+    if let Some(c) = args.flag::<usize>("cores") {
+        cfg.cluster.cores = c;
+    }
+    if let Some(l) = args.flag_str("loss") {
+        cfg.loss = Loss::parse(&l).ok_or_else(|| anyhow!("bad loss '{l}'"))?;
+    }
+    if let Some(n_per) = args.flag::<usize>("n-per") {
+        let m_per = args.flag::<usize>("m-per").unwrap_or(n_per);
+        cfg.dataset = DatasetSpec::Dense { n_per, m_per };
+    }
+    if let Some(spec) = args.flag_str("sparse") {
+        let parts: Vec<&str> = spec.split(',').collect();
+        if parts.len() != 3 {
+            bail!("--sparse wants n,m,density");
+        }
+        cfg.dataset = DatasetSpec::Sparse {
+            n: parts[0].parse()?,
+            m: parts[1].parse()?,
+            density: parts[2].parse()?,
+        };
+    }
+    if let Some(path) = args.flag_str("libsvm") {
+        cfg.dataset = DatasetSpec::Libsvm { path };
+    }
+    Ok(cfg)
+}
+
+fn make_backend(cfg: &ExperimentConfig) -> Result<Backend> {
+    match cfg.backend.as_str() {
+        "xla" => Backend::xla(Path::new("artifacts")),
+        _ => Ok(Backend::native()),
+    }
+}
+
+fn run_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let method = args.flag_str("method").unwrap_or_else(|| "radisa".into());
+    let no_fstar = args.switch("no-fstar");
+    let out = args.flag_str("out");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let ds = cfg.build_dataset()?;
+    println!(
+        "dataset {} ({} x {}, sparsity {:.3}%)  grid {}x{}  lambda={:.1e}  backend={}",
+        ds.name, ds.n(), ds.m(), 100.0 * ds.sparsity(),
+        cfg.p, cfg.q, cfg.lambda, cfg.backend
+    );
+    let part = Partitioned::split(&ds, Grid::new(cfg.p, cfg.q));
+    let backend = make_backend(&cfg)?;
+
+    let mut opt: Box<dyn Optimizer> = match method.as_str() {
+        "radisa" | "radisa-avg" => Box::new(Radisa::new(RadisaConfig {
+            lambda: cfg.lambda,
+            loss: cfg.loss,
+            gamma: cfg.gamma,
+            batch: cfg.batch,
+            average: method == "radisa-avg",
+            grad_refresh: 1,
+            seed: cfg.seed,
+        })),
+        "d3ca" => Box::new(D3ca::new(D3caConfig {
+            lambda: cfg.lambda,
+            local_epochs: 1.0,
+            beta: BetaSchedule::RowNorm,
+            seed: cfg.seed,
+            ..Default::default()
+        })),
+        "admm" => Box::new(Admm::new(AdmmConfig {
+            lambda: cfg.lambda,
+            rho: cfg.rho,
+        })),
+        other => bail!("unknown method '{other}'"),
+    };
+
+    let mut driver = Driver::new(&part, &backend)?
+        .iterations(cfg.iterations)
+        .cluster(ClusterConfig { cores: cfg.cluster.cores, ..cfg.cluster.clone() });
+    if !no_fstar && cfg.loss != Loss::Squared {
+        let r = reference_optimum(&ds, cfg.loss, cfg.lambda, 1e-8);
+        println!("f* = {:.6} (certificate {:.1e})", r.fstar, r.certificate);
+        driver = driver.fstar(r.fstar);
+    }
+    let result = driver.run(opt.as_mut())?;
+    println!(
+        "\n{:>5} {:>14} {:>14} {:>12} {:>10}",
+        "iter", "primal", "dual", "rel gap", "sim time"
+    );
+    for rec in &result.history.records {
+        println!(
+            "{:>5} {:>14.6} {:>14.6} {:>12} {:>10.4}",
+            rec.iter,
+            rec.primal,
+            rec.dual,
+            if rec.rel_gap.is_finite() {
+                format!("{:.3e}", rec.rel_gap)
+            } else {
+                "-".into()
+            },
+            rec.sim_time
+        );
+    }
+    println!(
+        "\n{}: sim {:.3}s, wall {:.3}s, comm {:.2} MiB over {} supersteps",
+        result.method,
+        result.sim_time,
+        result.wall_time,
+        result.comm_bytes as f64 / (1 << 20) as f64,
+        result.supersteps
+    );
+    if let Some(path) = out {
+        write_csv(&result.history, Path::new(&path))?;
+        println!("history -> {path}");
+    }
+    Ok(())
+}
+
+fn run_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow!("exp wants an experiment id"))?;
+    let scale = Scale::parse(&args.flag_str("scale").unwrap_or_else(|| "small".into()))
+        .ok_or_else(|| anyhow!("--scale small|paper"))?;
+    args.finish().map_err(|e| anyhow!(e))?;
+    match which.as_str() {
+        "table1" => bench_harness::table1::run(scale),
+        "fig3" => bench_harness::fig3::run(scale),
+        "fig4" => bench_harness::fig4::run(scale),
+        "fig5" => bench_harness::fig5::run(scale),
+        "fig6" => bench_harness::fig6::run(scale),
+        "perf" => bench_harness::perf::run(scale),
+        "ablations" => bench_harness::ablations::run(scale),
+        "all" => {
+            bench_harness::table1::run(scale)?;
+            bench_harness::fig3::run(scale)?;
+            bench_harness::fig4::run(scale)?;
+            bench_harness::fig5::run(scale)?;
+            bench_harness::fig6::run(scale)?;
+            bench_harness::perf::run(scale)
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+}
+
+fn run_gen_data(args: &Args) -> Result<()> {
+    let out = args
+        .flag_str("out")
+        .ok_or_else(|| anyhow!("gen-data wants --out"))?;
+    let n = args.flag::<usize>("n").unwrap_or(1000);
+    let m = args.flag::<usize>("m").unwrap_or(500);
+    let density = args.flag::<f64>("density").unwrap_or(0.01);
+    let seed = args.flag::<u64>("seed").unwrap_or(42);
+    args.finish().map_err(|e| anyhow!(e))?;
+    let ds = ddopt::data::SyntheticSparse::new("generated", n, m, density, seed).build();
+    ddopt::data::write_libsvm(&ds, Path::new(&out))?;
+    println!(
+        "wrote {} ({} x {}, {} nnz) -> {out}",
+        ds.name, n, m, ds.x.nnz()
+    );
+    Ok(())
+}
+
+fn run_fstar(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+    let ds = cfg.build_dataset()?;
+    let r = reference_optimum(&ds, cfg.loss, cfg.lambda, 1e-9);
+    println!(
+        "{} lambda={:.3e}: f* = {:.8} (certificate {:.2e}, cached: {})",
+        ds.name, cfg.lambda, r.fstar, r.certificate, r.from_cache
+    );
+    Ok(())
+}
+
+fn run_artifacts_info(args: &Args) -> Result<()> {
+    args.finish().map_err(|e| anyhow!(e))?;
+    let manifest = ddopt::runtime::Manifest::load(Path::new("artifacts"))?;
+    println!(
+        "{} artifacts, tile {}, buckets {:?}",
+        manifest.len(),
+        manifest.tile,
+        manifest.buckets()
+    );
+    Ok(())
+}

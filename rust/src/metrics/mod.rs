@@ -1,0 +1,7 @@
+//! Metrics: per-iteration optimality tracking and report emission.
+
+mod recorder;
+mod report;
+
+pub use recorder::{IterationRecord, Recorder};
+pub use report::{markdown_table, write_csv, write_json_report};

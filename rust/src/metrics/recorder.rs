@@ -1,0 +1,127 @@
+//! Per-iteration run history: the data behind every figure in the paper
+//! (relative optimality difference against elapsed time / iteration).
+
+/// One optimizer iteration's measurements.
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    pub iter: usize,
+    /// Primal objective F(w^t).
+    pub primal: f64,
+    /// Dual objective D(α^t) (NaN for primal-only methods).
+    pub dual: f64,
+    /// Relative optimality difference (F − f*)/f* when f* is known.
+    pub rel_gap: f64,
+    /// Simulated cluster time at the end of this iteration (seconds).
+    pub sim_time: f64,
+    /// Host wall time at the end of this iteration (seconds).
+    pub wall_time: f64,
+    /// Cumulative modeled communication bytes.
+    pub comm_bytes: usize,
+}
+
+/// Accumulates iteration records for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub records: Vec<IterationRecord>,
+    pub fstar: Option<f64>,
+}
+
+impl Recorder {
+    pub fn new(fstar: Option<f64>) -> Recorder {
+        Recorder { records: Vec::new(), fstar }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        iter: usize,
+        primal: f64,
+        dual: f64,
+        sim_time: f64,
+        wall_time: f64,
+        comm_bytes: usize,
+    ) {
+        let rel_gap = match self.fstar {
+            Some(f) => (primal - f) / f.abs().max(1e-300),
+            None => f64::NAN,
+        };
+        self.records.push(IterationRecord {
+            iter,
+            primal,
+            dual,
+            rel_gap,
+            sim_time,
+            wall_time,
+            comm_bytes,
+        });
+    }
+
+    pub fn last(&self) -> Option<&IterationRecord> {
+        self.records.last()
+    }
+
+    /// First simulated time at which the relative gap fell below `target`
+    /// (the Fig. 5 "time to 1% optimality difference" metric).
+    pub fn time_to_gap(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.rel_gap.is_finite() && r.rel_gap <= target)
+            .map(|r| r.sim_time)
+    }
+
+    /// Iterations needed to reach `target` (the Fig. 4 x-axis).
+    pub fn iters_to_gap(&self, target: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.rel_gap.is_finite() && r.rel_gap <= target)
+            .map(|r| r.iter)
+    }
+
+    pub fn best_gap(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.rel_gap)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> Recorder {
+        let mut r = Recorder::new(Some(1.0));
+        r.push(1, 1.5, 0.8, 0.1, 0.2, 100);
+        r.push(2, 1.05, 0.95, 0.2, 0.4, 200);
+        r.push(3, 1.005, 1.0, 0.3, 0.6, 300);
+        r
+    }
+
+    #[test]
+    fn gap_computation() {
+        let r = rec();
+        assert!((r.records[0].rel_gap - 0.5).abs() < 1e-12);
+        assert!((r.records[2].rel_gap - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_and_iters_to_gap() {
+        let r = rec();
+        assert_eq!(r.time_to_gap(0.1), Some(0.2));
+        assert_eq!(r.iters_to_gap(0.1), Some(2));
+        assert_eq!(r.time_to_gap(1e-6), None);
+    }
+
+    #[test]
+    fn no_fstar_means_nan_gap() {
+        let mut r = Recorder::new(None);
+        r.push(1, 2.0, f64::NAN, 0.0, 0.0, 0);
+        assert!(r.records[0].rel_gap.is_nan());
+        assert_eq!(r.time_to_gap(0.5), None);
+    }
+
+    #[test]
+    fn best_gap_is_min() {
+        assert!((rec().best_gap() - 0.005).abs() < 1e-12);
+    }
+}

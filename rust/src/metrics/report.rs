@@ -1,0 +1,122 @@
+//! Report emission: markdown tables (for EXPERIMENTS.md), CSV series (for
+//! plotting the figures), and JSON run dumps.
+
+use super::recorder::Recorder;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Render rows as a GitHub-markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&headers.join(" | "));
+    out.push_str(" |\n|");
+    for _ in headers {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str("| ");
+        out.push_str(&row.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+/// Write one run's iteration history as CSV.
+pub fn write_csv(rec: &Recorder, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    writeln!(f, "iter,primal,dual,rel_gap,sim_time,wall_time,comm_bytes")?;
+    for r in &rec.records {
+        writeln!(
+            f,
+            "{},{},{},{},{},{},{}",
+            r.iter, r.primal, r.dual, r.rel_gap, r.sim_time, r.wall_time, r.comm_bytes
+        )?;
+    }
+    Ok(())
+}
+
+/// Dump a labelled set of runs as a JSON report.
+pub fn write_json_report(
+    label: &str,
+    runs: &[(String, &Recorder)],
+    path: &Path,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let runs_json: Vec<Json> = runs
+        .iter()
+        .map(|(name, rec)| {
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                (
+                    "fstar",
+                    rec.fstar.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "history",
+                    Json::arr(rec.records.iter().map(|r| {
+                        Json::obj(vec![
+                            ("iter", Json::from(r.iter)),
+                            ("primal", Json::num(r.primal)),
+                            ("rel_gap", Json::num(r.rel_gap)),
+                            ("sim_time", Json::num(r.sim_time)),
+                            ("wall_time", Json::num(r.wall_time)),
+                            ("comm_bytes", Json::from(r.comm_bytes)),
+                        ])
+                    })),
+                ),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("experiment", Json::str(label)),
+        ("runs", Json::arr(runs_json)),
+    ]);
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("| a | b |"));
+        assert!(lines[1].starts_with("|---|---|"));
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let mut rec = Recorder::new(Some(2.0));
+        rec.push(1, 3.0, 1.0, 0.5, 1.0, 10);
+        let dir = std::env::temp_dir().join("ddopt_report_test");
+        let csv = dir.join("run.csv");
+        write_csv(&rec, &csv).unwrap();
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert!(text.lines().count() == 2);
+        assert!(text.contains("0.5"));
+
+        let jpath = dir.join("run.json");
+        write_json_report("fig3", &[("radisa".to_string(), &rec)], &jpath).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&jpath).unwrap()).unwrap();
+        assert_eq!(v.get("experiment").unwrap().as_str(), Some("fig3"));
+        let runs = v.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs[0].get("name").unwrap().as_str(), Some("radisa"));
+    }
+}

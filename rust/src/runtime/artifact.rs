@@ -1,0 +1,201 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  `artifacts/manifest.json` lists every compiled program
+//! with its (op, bucket) key and full input/output signature; the engine
+//! validates literals against the signature before execution so shape bugs
+//! surface as errors here rather than PJRT aborts.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled program.
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub op: String,
+    pub n_cap: usize,
+    pub m_cap: usize,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed manifest, keyed by (op, n_cap, m_cap).
+#[derive(Debug)]
+pub struct Manifest {
+    pub tile: usize,
+    pub dir: PathBuf,
+    by_key: BTreeMap<(String, usize, usize), ArtifactSig>,
+    buckets: Vec<(usize, usize)>,
+}
+
+fn parse_sigs(v: &Json) -> Result<Vec<TensorSig>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("signature not an array"))?
+        .iter()
+        .map(|t| {
+            let dtype = t
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| anyhow!("missing dtype"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSig { dtype, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text).context("parse manifest.json")?;
+        let tile = v
+            .get("tile")
+            .and_then(|t| t.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing tile"))?;
+        let mut by_key = BTreeMap::new();
+        let mut buckets = Vec::new();
+        for a in v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let op = a
+                .get("op")
+                .and_then(|o| o.as_str())
+                .ok_or_else(|| anyhow!("artifact missing op"))?
+                .to_string();
+            let n_cap = a.get("n_cap").and_then(|x| x.as_usize()).unwrap_or(0);
+            let m_cap = a.get("m_cap").and_then(|x| x.as_usize()).unwrap_or(0);
+            if n_cap == 0 || m_cap == 0 {
+                bail!("artifact {op} has bad bucket dims");
+            }
+            let file = dir.join(
+                a.get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing file"))?,
+            );
+            let sig = ArtifactSig {
+                op: op.clone(),
+                n_cap,
+                m_cap,
+                file,
+                inputs: parse_sigs(a.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                outputs: parse_sigs(a.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+            };
+            if !buckets.contains(&(n_cap, m_cap)) {
+                buckets.push((n_cap, m_cap));
+            }
+            by_key.insert((op, n_cap, m_cap), sig);
+        }
+        buckets.sort_by_key(|&(n, m)| n * m);
+        Ok(Manifest { tile, dir: dir.to_path_buf(), by_key, buckets })
+    }
+
+    /// Smallest bucket fitting an (n_p, m_q) block.
+    pub fn bucket_for(&self, n: usize, m: usize) -> Result<(usize, usize)> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&(bn, bm)| n <= bn && m <= bm)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact bucket fits block {n}x{m} (available: {:?})",
+                    self.buckets
+                )
+            })
+    }
+
+    pub fn get(&self, op: &str, bucket: (usize, usize)) -> Result<&ArtifactSig> {
+        self.by_key
+            .get(&(op.to_string(), bucket.0, bucket.1))
+            .ok_or_else(|| anyhow!("no artifact for op {op} at bucket {bucket:?}"))
+    }
+
+    pub fn buckets(&self) -> &[(usize, usize)] {
+        &self.buckets
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"tile":128,"artifacts":[
+      {"op":"margins","n_cap":128,"m_cap":128,"file":"margins_128x128.hlo.txt",
+       "inputs":[{"dtype":"f32","shape":[128,128]},{"dtype":"f32","shape":[128]}],
+       "outputs":[{"dtype":"f32","shape":[128]}]},
+      {"op":"margins","n_cap":512,"m_cap":512,"file":"margins_512x512.hlo.txt",
+       "inputs":[{"dtype":"f32","shape":[512,512]},{"dtype":"f32","shape":[512]}],
+       "outputs":[{"dtype":"f32","shape":[512]}]}]}"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.tile, 128);
+        assert_eq!(m.len(), 2);
+        let sig = m.get("margins", (128, 128)).unwrap();
+        assert_eq!(sig.inputs.len(), 2);
+        assert_eq!(sig.inputs[0].shape, vec![128, 128]);
+        assert_eq!(sig.inputs[0].elems(), 128 * 128);
+    }
+
+    #[test]
+    fn bucket_selection_picks_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.bucket_for(100, 100).unwrap(), (128, 128));
+        assert_eq!(m.bucket_for(128, 128).unwrap(), (128, 128));
+        assert_eq!(m.bucket_for(129, 10).unwrap(), (512, 512));
+        assert!(m.bucket_for(600, 10).is_err());
+    }
+
+    #[test]
+    fn missing_op_is_an_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.get("sdca_hinge", (128, 128)).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Exercised against the checked-out artifacts when present.
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.len() >= 13, "expected all ops, got {}", m.len());
+            assert!(m.get("sdca_hinge", (128, 128)).is_ok());
+        }
+    }
+}

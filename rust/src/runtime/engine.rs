@@ -1,0 +1,215 @@
+//! The PJRT execution engine: loads HLO-text artifacts, compiles them on
+//! the CPU PJRT client, caches executables, and validates every call
+//! against the manifest signature.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo/`: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  All programs were lowered with
+//! `return_tuple=True`, so outputs are decomposed from a tuple literal.
+
+use super::artifact::{ArtifactSig, Manifest};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Cumulative engine counters (EXPERIMENTS.md §Perf feeds off these).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub executions: usize,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+/// A single-threaded PJRT CPU engine with an executable cache.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<BTreeMap<(String, usize, usize), xla::PjRtLoadedExecutable>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl XlaEngine {
+    pub fn new(artifact_dir: &Path) -> Result<XlaEngine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaEngine {
+            client,
+            manifest,
+            exes: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    fn compile(&self, sig: &ArtifactSig) -> Result<xla::PjRtLoadedExecutable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            sig.file
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", sig.file))?,
+        )
+        .with_context(|| format!("parse HLO text {:?}", sig.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {}", sig.op))?;
+        let mut st = self.stats.borrow_mut();
+        st.compiles += 1;
+        st.compile_secs += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    /// Validate inputs against the manifest signature (count, dtype,
+    /// element count) — turns shape bugs into readable errors.
+    fn validate(&self, sig: &ArtifactSig, inputs: &[&xla::Literal]) -> Result<()> {
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "op {} bucket {}x{}: {} inputs given, signature wants {}",
+                sig.op, sig.n_cap, sig.m_cap, inputs.len(), sig.inputs.len()
+            );
+        }
+        for (i, (lit, ts)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            if lit.element_count() != ts.elems() {
+                bail!(
+                    "op {} input {i}: literal has {} elements, signature wants {:?}",
+                    sig.op, lit.element_count(), ts.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute `(op, bucket)` with `inputs`; returns the decomposed output
+    /// literals.  Compiles and caches the executable on first use.
+    pub fn run(
+        &self,
+        op: &str,
+        bucket: (usize, usize),
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let sig = self.manifest.get(op, bucket)?;
+        self.validate(sig, inputs)?;
+        let key = (op.to_string(), bucket.0, bucket.1);
+        if !self.exes.borrow().contains_key(&key) {
+            let exe = self.compile(sig)?;
+            self.exes.borrow_mut().insert(key.clone(), exe);
+        }
+        let exes = self.exes.borrow();
+        let exe = exes.get(&key).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("execute {op} {bucket:?}"))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch output literal")?;
+        let outs = tuple.decompose_tuple().context("decompose output tuple")?;
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        if outs.len() != sig.outputs.len() {
+            bail!(
+                "op {op}: {} outputs, signature wants {}",
+                outs.len(),
+                sig.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Eagerly compile every artifact needed for `buckets` — used by the
+    /// drivers to move compile time out of the measured iteration loop.
+    pub fn warmup(&self, ops: &[&str], buckets: &[(usize, usize)]) -> Result<()> {
+        for op in ops {
+            for &b in buckets {
+                if self.manifest.get(op, b).is_ok() {
+                    let key = (op.to_string(), b.0, b.1);
+                    if !self.exes.borrow().contains_key(&key) {
+                        let sig = self.manifest.get(op, b)?;
+                        let exe = self.compile(sig)?;
+                        self.exes.borrow_mut().insert(key, exe);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literal as lit;
+
+    fn engine() -> Option<XlaEngine> {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(XlaEngine::new(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn margins_against_native() {
+        let Some(eng) = engine() else { return };
+        let (n, m) = (128usize, 128usize);
+        let mut r = crate::util::rng::Xoshiro::new(1);
+        let x: Vec<f32> = (0..n * m).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..m).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        let outs = eng
+            .run(
+                "margins",
+                (n, m),
+                &[&lit::mat_f32(&x, n, m).unwrap(), &lit::vec_f32(&w)],
+            )
+            .unwrap();
+        let got = lit::to_vec_f32(&outs[0], n).unwrap();
+        let mut want = vec![0.0f32; n];
+        crate::linalg::gemv(&x, n, m, &w, &mut want);
+        for i in 0..n {
+            assert!((got[i] - want[i]).abs() < 1e-2, "{i}: {} vs {}", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(eng) = engine() else { return };
+        let x = lit::mat_f32(&vec![0.0; 128 * 128], 128, 128).unwrap();
+        let w = lit::vec_f32(&vec![0.0; 128]);
+        eng.run("margins", (128, 128), &[&x, &w]).unwrap();
+        let c1 = eng.stats().compiles;
+        let x = lit::mat_f32(&vec![0.0; 128 * 128], 128, 128).unwrap();
+        let w = lit::vec_f32(&vec![0.0; 128]);
+        eng.run("margins", (128, 128), &[&x, &w]).unwrap();
+        assert_eq!(eng.stats().compiles, c1, "second run must not recompile");
+        assert_eq!(eng.stats().executions, 2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_arity_and_shape() {
+        let Some(eng) = engine() else { return };
+        let w = lit::vec_f32(&vec![0.0; 128]);
+        assert!(eng.run("margins", (128, 128), &[&w]).is_err());
+        let x = lit::mat_f32(&vec![0.0; 64 * 64], 64, 64).unwrap();
+        let w = lit::vec_f32(&vec![0.0; 128]);
+        assert!(eng.run("margins", (128, 128), &[&x, &w]).is_err());
+    }
+
+    #[test]
+    fn unknown_op_is_error() {
+        let Some(eng) = engine() else { return };
+        assert!(eng.run("nonesuch", (128, 128), &[]).is_err());
+    }
+}

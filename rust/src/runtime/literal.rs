@@ -1,0 +1,114 @@
+//! Literal conversion helpers between rust slices and `xla::Literal`s,
+//! including the bucket-padding protocol (real data top-left / head,
+//! zeros elsewhere).
+
+use anyhow::{bail, Result};
+
+/// f32 vector literal of exactly `v.len()` elements.
+pub fn vec_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 vector literal padded with zeros to `cap` elements.
+pub fn vec_f32_padded(v: &[f32], cap: usize) -> xla::Literal {
+    debug_assert!(v.len() <= cap);
+    if v.len() == cap {
+        return xla::Literal::vec1(v);
+    }
+    let mut buf = vec![0.0f32; cap];
+    buf[..v.len()].copy_from_slice(v);
+    xla::Literal::vec1(&buf)
+}
+
+/// i32 vector literal padded with zeros to `cap` elements.
+pub fn vec_i32_padded(v: &[i32], cap: usize) -> xla::Literal {
+    debug_assert!(v.len() <= cap);
+    let mut buf = vec![0i32; cap];
+    buf[..v.len()].copy_from_slice(v);
+    xla::Literal::vec1(&buf)
+}
+
+/// Row-major [rows, cols] f32 matrix literal from a flat buffer.
+pub fn mat_f32(flat: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    if flat.len() != rows * cols {
+        bail!("matrix literal size mismatch: {} != {rows}x{cols}", flat.len());
+    }
+    Ok(xla::Literal::vec1(flat).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Shape-(1,) f32 scalar (the AOT programs' scalar protocol).
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+/// Shape-(1,) i32 scalar.
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+/// 0/1 f32 mask of length `cap` with ones on `[0, real)`.
+pub fn head_mask(real: usize, cap: usize) -> xla::Literal {
+    debug_assert!(real <= cap);
+    let mut buf = vec![0.0f32; cap];
+    buf[..real].fill(1.0);
+    xla::Literal::vec1(&buf)
+}
+
+/// 0/1 f32 mask of length `cap` with ones on `[lo, hi)`.
+pub fn window_mask(lo: usize, hi: usize, cap: usize) -> xla::Literal {
+    debug_assert!(lo <= hi && hi <= cap);
+    let mut buf = vec![0.0f32; cap];
+    buf[lo..hi].fill(1.0);
+    xla::Literal::vec1(&buf)
+}
+
+/// Extract an f32 vector, checking element count.
+pub fn to_vec_f32(lit: &xla::Literal, expect: usize) -> Result<Vec<f32>> {
+    let v: Vec<f32> = lit.to_vec()?;
+    if v.len() != expect {
+        bail!("output literal has {} elements, expected {expect}", v.len());
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_vec_roundtrip() {
+        let lit = vec_f32_padded(&[1.0, 2.0], 4);
+        let v = to_vec_f32(&lit, 4).unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn masks() {
+        let v = to_vec_f32(&head_mask(2, 4), 4).unwrap();
+        assert_eq!(v, vec![1.0, 1.0, 0.0, 0.0]);
+        let w = to_vec_f32(&window_mask(1, 3, 4), 4).unwrap();
+        assert_eq!(w, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn matrix_literal_shape() {
+        let m = mat_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        assert_eq!(m.element_count(), 6);
+        assert!(mat_f32(&[1.0], 2, 3).is_err());
+    }
+
+    #[test]
+    fn scalar_protocol_is_rank1() {
+        let s = scalar_f32(3.5);
+        assert_eq!(s.element_count(), 1);
+        let i = scalar_i32(7);
+        let v: Vec<i32> = i.to_vec().unwrap();
+        assert_eq!(v, vec![7]);
+    }
+
+    #[test]
+    fn size_check_catches_mismatch() {
+        let lit = vec_f32(&[1.0, 2.0, 3.0]);
+        assert!(to_vec_f32(&lit, 4).is_err());
+    }
+}

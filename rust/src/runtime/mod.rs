@@ -1,0 +1,67 @@
+//! The compute runtime: the [`Backend`] seam between the L3 coordinator
+//! and the per-partition math, with two interchangeable implementations.
+//!
+//! * **Native** — pure-rust kernels from [`crate::solvers`] (dense + CSR).
+//! * **Xla** — the production hot path: AOT artifacts produced by
+//!   `python/compile/aot.py`, loaded as HLO text and executed through the
+//!   PJRT C API (`xla` crate).  Python is never on this path — the
+//!   artifacts are data files.
+//!
+//! The two backends implement identical op semantics (same update
+//! equations, same index-stream protocol); `rust/tests/backend_parity.rs`
+//! asserts they agree within f32 tolerance on every op.
+//!
+//! Staging protocol: [`Backend::stage`] uploads a [`Partitioned`] grid once
+//! (for XLA: pads each block to its shape bucket and builds the x/y/mask
+//! literals); per-iteration calls then move only the small dynamic vectors
+//! (w, α, index streams, scalars) — mirroring a real cluster where the
+//! training data lives on the workers.
+
+pub mod artifact;
+pub mod engine;
+pub mod literal;
+mod native;
+mod staged;
+
+pub use artifact::{ArtifactSig, Manifest};
+pub use engine::XlaEngine;
+pub use staged::{FactorHandle, StagedGrid};
+
+use crate::data::Partitioned;
+use anyhow::Result;
+use std::path::Path;
+
+/// Which compute implementation executes the per-partition ops.
+pub enum Backend {
+    Native,
+    Xla(XlaEngine),
+}
+
+impl Backend {
+    /// Pure-rust backend (dense and sparse blocks).
+    pub fn native() -> Backend {
+        Backend::Native
+    }
+
+    /// PJRT-backed backend executing the AOT artifacts in `dir`
+    /// (default `artifacts/`).  Dense blocks only.
+    pub fn xla(dir: &Path) -> Result<Backend> {
+        Ok(Backend::Xla(XlaEngine::new(dir)?))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Xla(_) => "xla",
+        }
+    }
+
+    pub fn is_xla(&self) -> bool {
+        matches!(self, Backend::Xla(_))
+    }
+
+    /// Stage a partitioned dataset for repeated per-iteration execution.
+    pub fn stage<'a>(&'a self, part: &'a Partitioned) -> Result<StagedGrid<'a>> {
+        StagedGrid::new(self, part)
+    }
+}

@@ -1,0 +1,172 @@
+//! Native implementations of the ops the XLA artifacts provide — plus the
+//! ADMM linear algebra (gram build, Cholesky, graph projection) used when
+//! no PJRT engine is attached.
+
+use crate::data::Block;
+use crate::linalg;
+use crate::loss::Loss;
+use anyhow::Result;
+
+/// Dense row materialization (scatter for CSR) — used by the gram build.
+pub fn row_dense_into(x: &Block, i: usize, buf: &mut [f32]) {
+    buf.fill(0.0);
+    match x {
+        Block::Dense(d) => buf.copy_from_slice(d.row(i)),
+        Block::Sparse(s) => {
+            for (j, v) in s.row_iter(i) {
+                buf[j] = v;
+            }
+        }
+    }
+}
+
+/// Cholesky factor of (I + X X^T) for the block — the cached piece of the
+/// ADMM graph projection (paper: "the Cholesky factorization of the data
+/// matrix is computed once, and is cached for re-use").
+pub fn admm_factor(x: &Block) -> Result<Vec<f32>> {
+    let n = x.rows();
+    let m = x.cols();
+    let mut gram = vec![0.0f32; n * n];
+    let mut ri = vec![0.0f32; m];
+    for i in 0..n {
+        row_dense_into(x, i, &mut ri);
+        // fill row i of X X^T using the other rows' dot products
+        for j in 0..=i {
+            let v = x.row_dot_window_offset(j, &ri, 0, m);
+            gram[i * n + j] = v;
+            gram[j * n + i] = v;
+        }
+        gram[i * n + i] += 1.0;
+    }
+    linalg::cholesky_in_place(&mut gram, n).map_err(anyhow::Error::msg)?;
+    Ok(gram)
+}
+
+/// Graph projection onto {(w, z) : z = X w} given the cached factor:
+/// w* = w_hat + X^T t with (I + X X^T) t = z_hat − X w_hat; z* = X w*.
+pub fn admm_project(
+    x: &Block,
+    lchol: &[f32],
+    w_hat: &[f32],
+    z_hat: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let n = x.rows();
+    let m = x.cols();
+    debug_assert_eq!(lchol.len(), n * n);
+    debug_assert_eq!(w_hat.len(), m);
+    debug_assert_eq!(z_hat.len(), n);
+    let mut t = vec![0.0f32; n];
+    x.margins_into(w_hat, &mut t);
+    for (tv, &zv) in t.iter_mut().zip(z_hat) {
+        *tv = zv - *tv;
+    }
+    linalg::cho_solve(lchol, n, &mut t);
+    let mut w = vec![0.0f32; m];
+    x.atx_into(&t, &mut w);
+    for (wv, &hv) in w.iter_mut().zip(w_hat) {
+        *wv += hv;
+    }
+    let mut z = vec![0.0f32; n];
+    x.margins_into(&w, &mut z);
+    (w, z)
+}
+
+/// prox of (inv_n)·hinge under ρ: argmin inv_n·max(0,1−yz) + ρ/2 (z−v)².
+pub fn prox_hinge(v: &[f32], y: &[f32], rho: f32, inv_n: f32) -> Vec<f32> {
+    let c = inv_n / rho;
+    v.iter()
+        .zip(y)
+        .map(|(&vi, &yi)| vi + yi * (1.0 - yi * vi).max(0.0).min(c))
+        .collect()
+}
+
+/// Unnormalized loss sum Σ f(margin_i, y_i).
+pub fn loss_sum(loss: Loss, mg: &[f32], y: &[f32]) -> f64 {
+    mg.iter()
+        .zip(y)
+        .map(|(&m, &yv)| loss.value(m, yv) as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DenseMatrix, SparseMatrix};
+    use crate::util::rng::Xoshiro;
+
+    fn block(n: usize, m: usize, seed: u64) -> Block {
+        let mut r = Xoshiro::new(seed);
+        Block::Dense(DenseMatrix::from_fn(n, m, |_, _| r.range_f32(-0.5, 0.5)))
+    }
+
+    #[test]
+    fn projection_lands_on_graph() {
+        let x = block(12, 8, 1);
+        let l = admm_factor(&x).unwrap();
+        let mut r = Xoshiro::new(2);
+        let w_hat: Vec<f32> = (0..8).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        let z_hat: Vec<f32> = (0..12).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        let (w, z) = admm_project(&x, &l, &w_hat, &z_hat);
+        let mut xw = vec![0.0; 12];
+        x.margins_into(&w, &mut xw);
+        for i in 0..12 {
+            assert!((z[i] - xw[i]).abs() < 1e-4, "{i}");
+        }
+        // KKT: w = w_hat + X^T (z_hat - z)
+        let mut resid = vec![0.0; 8];
+        let d: Vec<f32> = z_hat.iter().zip(&z).map(|(a, b)| a - b).collect();
+        x.atx_into(&d, &mut resid);
+        for k in 0..8 {
+            assert!((w[k] - w_hat[k] - resid[k]).abs() < 1e-4, "{k}");
+        }
+    }
+
+    #[test]
+    fn projection_of_graph_point_is_identity() {
+        let x = block(10, 6, 3);
+        let l = admm_factor(&x).unwrap();
+        let mut r = Xoshiro::new(4);
+        let w0: Vec<f32> = (0..6).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        let mut z0 = vec![0.0; 10];
+        x.margins_into(&w0, &mut z0);
+        let (w, z) = admm_project(&x, &l, &w0, &z0);
+        for k in 0..6 {
+            assert!((w[k] - w0[k]).abs() < 1e-4);
+        }
+        for i in 0..10 {
+            assert!((z[i] - z0[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sparse_factor_matches_dense() {
+        let xd = block(9, 5, 5);
+        let xs = match &xd {
+            Block::Dense(d) => Block::Sparse(SparseMatrix::from_dense(d)),
+            _ => unreachable!(),
+        };
+        let ld = admm_factor(&xd).unwrap();
+        let ls = admm_factor(&xs).unwrap();
+        for (a, b) in ld.iter().zip(&ls) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn prox_hinge_cases() {
+        // yv >= 1: untouched; deep violation: move by c; boundary: land on 1.
+        let v = vec![2.0, -3.0, 0.99];
+        let y = vec![1.0, 1.0, 1.0];
+        let z = prox_hinge(&v, &y, 1.0, 0.5);
+        assert_eq!(z[0], 2.0);
+        assert!((z[1] - (-2.5)).abs() < 1e-6); // moved by c = 0.5
+        assert!((z[2] - 1.0).abs() < 1e-6); // clipped at the hinge point
+    }
+
+    #[test]
+    fn loss_sum_matches_manual() {
+        let mg = vec![0.5, 2.0];
+        let y = vec![1.0, 1.0];
+        assert!((loss_sum(Loss::Hinge, &mg, &y) - 0.5).abs() < 1e-6);
+    }
+}

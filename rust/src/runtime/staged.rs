@@ -1,0 +1,431 @@
+//! [`StagedGrid`] — the per-partition op API the coordinators program
+//! against, dispatching to the native kernels or the staged XLA artifacts.
+//!
+//! XLA staging pads each block to its shape bucket once (x, y, row-mask
+//! literals live for the whole run); per-iteration calls ship only the
+//! small dynamic vectors, mirroring a real cluster where training data is
+//! resident on workers.  Long inner loops are chunked to the bucket's
+//! index-stream capacity with exact algebraic carry (see `sdca_epoch`).
+
+use super::literal as lit;
+use super::native;
+use super::Backend;
+use crate::data::Partitioned;
+use crate::loss::Loss;
+use anyhow::{bail, Result};
+
+/// Cached ADMM factorization, whichever side produced it.
+pub enum FactorHandle {
+    Native(Vec<f32>),
+    Xla(xla::Literal),
+}
+
+struct XlaPart {
+    bucket: (usize, usize),
+    x: xla::Literal,
+    y: xla::Literal,
+    rmask: xla::Literal,
+    norms: xla::Literal,
+}
+
+/// A partitioned dataset staged on a backend.
+pub struct StagedGrid<'a> {
+    pub backend: &'a Backend,
+    pub part: &'a Partitioned,
+    xla_parts: Vec<XlaPart>, // empty for the native backend
+    /// Precomputed ‖x_i‖² per partition (both backends; §Perf).
+    row_norms: Vec<Vec<f32>>,
+}
+
+impl<'a> StagedGrid<'a> {
+    pub fn new(backend: &'a Backend, part: &'a Partitioned) -> Result<StagedGrid<'a>> {
+        let mut xla_parts = Vec::new();
+        let mut row_norms = Vec::with_capacity(part.grid.k());
+        for p in 0..part.grid.p {
+            for q in 0..part.grid.q {
+                row_norms.push(crate::solvers::row_norms(part.block(p, q)));
+            }
+        }
+        if let Backend::Xla(engine) = backend {
+            for p in 0..part.grid.p {
+                for q in 0..part.grid.q {
+                    let block = part.block(p, q);
+                    let (n_p, m_q) = (block.rows(), block.cols());
+                    let bucket = engine.manifest().bucket_for(n_p, m_q)?;
+                    let flat = block.to_padded_dense(bucket.0, bucket.1);
+                    xla_parts.push(XlaPart {
+                        bucket,
+                        x: lit::mat_f32(&flat, bucket.0, bucket.1)?,
+                        y: lit::vec_f32_padded(part.labels(p), bucket.0),
+                        rmask: lit::head_mask(n_p, bucket.0),
+                        norms: lit::vec_f32_padded(
+                            &row_norms[part.grid.idx(p, q)],
+                            bucket.0,
+                        ),
+                    });
+                }
+            }
+        }
+        Ok(StagedGrid { backend, part, xla_parts, row_norms })
+    }
+
+    fn xla_part(&self, p: usize, q: usize) -> &XlaPart {
+        &self.xla_parts[self.part.grid.idx(p, q)]
+    }
+
+    fn loss_op(&self, prefix: &str, loss: Loss) -> Result<String> {
+        match loss {
+            Loss::Hinge => Ok(format!("{prefix}_hinge")),
+            Loss::Logistic => Ok(format!("{prefix}_logistic")),
+            Loss::Squared => bail!("squared loss has no XLA artifact (native only)"),
+        }
+    }
+
+    // ----------------------------------------------------------- margins
+
+    /// x[p,q] · w_q  → length n_p.
+    pub fn margins(&self, p: usize, q: usize, w_q: &[f32]) -> Result<Vec<f32>> {
+        let block = self.part.block(p, q);
+        debug_assert_eq!(w_q.len(), block.cols());
+        match self.backend {
+            Backend::Native => {
+                let mut out = vec![0.0f32; block.rows()];
+                block.margins_into(w_q, &mut out);
+                Ok(out)
+            }
+            Backend::Xla(engine) => {
+                let xp = self.xla_part(p, q);
+                let w_lit = lit::vec_f32_padded(w_q, xp.bucket.1);
+                let outs = engine.run("margins", xp.bucket, &[&xp.x, &w_lit])?;
+                let full = lit::to_vec_f32(&outs[0], xp.bucket.0)?;
+                Ok(full[..block.rows()].to_vec())
+            }
+        }
+    }
+
+    /// x[p,q]^T · v  → length m_q (D3CA primal recovery).
+    pub fn atx(&self, p: usize, q: usize, v_p: &[f32]) -> Result<Vec<f32>> {
+        let block = self.part.block(p, q);
+        debug_assert_eq!(v_p.len(), block.rows());
+        match self.backend {
+            Backend::Native => {
+                let mut out = vec![0.0f32; block.cols()];
+                block.atx_into(v_p, &mut out);
+                Ok(out)
+            }
+            Backend::Xla(engine) => {
+                let xp = self.xla_part(p, q);
+                let v_lit = lit::vec_f32_padded(v_p, xp.bucket.0);
+                let outs = engine.run("atx", xp.bucket, &[&xp.x, &v_lit])?;
+                let full = lit::to_vec_f32(&outs[0], xp.bucket.1)?;
+                Ok(full[..block.cols()].to_vec())
+            }
+        }
+    }
+
+    /// Loss-only gradient (1/n_global) x[p,q]^T ψ(margins) → length m_q.
+    pub fn grad(
+        &self,
+        loss: Loss,
+        p: usize,
+        q: usize,
+        mg_p: &[f32],
+        n_global: usize,
+    ) -> Result<Vec<f32>> {
+        let block = self.part.block(p, q);
+        match self.backend {
+            Backend::Native => Ok(crate::solvers::grad_from_margins(
+                block,
+                self.part.labels(p),
+                mg_p,
+                n_global,
+                loss,
+            )),
+            Backend::Xla(engine) => {
+                let op = self.loss_op("grad", loss)?;
+                let xp = self.xla_part(p, q);
+                let mg_lit = lit::vec_f32_padded(mg_p, xp.bucket.0);
+                let inv_n = lit::scalar_f32(1.0 / n_global as f32);
+                let outs = engine.run(
+                    &op,
+                    xp.bucket,
+                    &[&xp.x, &xp.y, &mg_lit, &xp.rmask, &inv_n],
+                )?;
+                let full = lit::to_vec_f32(&outs[0], xp.bucket.1)?;
+                Ok(full[..block.cols()].to_vec())
+            }
+        }
+    }
+
+    /// Unnormalized loss sum over partition p's rows.
+    pub fn loss_sum(&self, loss: Loss, p: usize, mg_p: &[f32]) -> Result<f64> {
+        match self.backend {
+            Backend::Native => Ok(native::loss_sum(loss, mg_p, self.part.labels(p))),
+            Backend::Xla(engine) => {
+                let op = self.loss_op("obj", loss)?;
+                let xp = self.xla_part(p, 0);
+                let mg_lit = lit::vec_f32_padded(mg_p, xp.bucket.0);
+                let outs = engine.run(&op, xp.bucket, &[&mg_lit, &xp.y, &xp.rmask])?;
+                Ok(lit::to_vec_f32(&outs[0], 1)?[0] as f64)
+            }
+        }
+    }
+
+    /// Σ α_i y_i over partition p (dual objective linear part; hinge).
+    pub fn dual_linear_sum(&self, p: usize, alpha_p: &[f32]) -> Result<f64> {
+        match self.backend {
+            Backend::Native => Ok(alpha_p
+                .iter()
+                .zip(self.part.labels(p))
+                .map(|(&a, &y)| (a * y) as f64)
+                .sum()),
+            Backend::Xla(engine) => {
+                let xp = self.xla_part(p, 0);
+                let a_lit = lit::vec_f32_padded(alpha_p, xp.bucket.0);
+                let outs =
+                    engine.run("dual_obj_hinge", xp.bucket, &[&a_lit, &xp.y, &xp.rmask])?;
+                Ok(lit::to_vec_f32(&outs[0], 1)?[0] as f64)
+            }
+        }
+    }
+
+    // -------------------------------------------------------------- SDCA
+
+    /// One local SDCA run of `h` steps (Algorithm 2); returns Δα (len n_p).
+    /// Runs longer than the bucket's index capacity are chunked with exact
+    /// carry: after each chunk, α ← α + Δα and w ← w + (λn)⁻¹ XᵀΔα.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sdca_epoch(
+        &self,
+        p: usize,
+        q: usize,
+        alpha_p: &[f32],
+        w_q: &[f32],
+        idx: &[i32],
+        h: usize,
+        lamn: f32,
+        invq: f32,
+        beta: f32,
+    ) -> Result<Vec<f32>> {
+        let block = self.part.block(p, q);
+        match self.backend {
+            Backend::Native => Ok(crate::solvers::sdca_epoch(
+                block,
+                self.part.labels(p),
+                &self.row_norms[self.part.grid.idx(p, q)],
+                alpha_p,
+                w_q,
+                idx,
+                h,
+                lamn,
+                invq,
+                beta,
+            )),
+            Backend::Xla(engine) => {
+                let xp = self.xla_part(p, q);
+                let cap = xp.bucket.0;
+                let mut alpha = alpha_p.to_vec();
+                let mut w = w_q.to_vec();
+                let mut da_total = vec![0.0f32; alpha_p.len()];
+                let mut done = 0usize;
+                let lamn_lit = lit::scalar_f32(lamn);
+                let invq_lit = lit::scalar_f32(invq);
+                let beta_lit = lit::scalar_f32(beta);
+                while done < h {
+                    let chunk = (h - done).min(cap);
+                    let idx_chunk: Vec<i32> =
+                        (0..chunk).map(|t| idx[(done + t) % idx.len()]).collect();
+                    let a_lit = lit::vec_f32_padded(&alpha, cap);
+                    let w_lit = lit::vec_f32_padded(&w, xp.bucket.1);
+                    let idx_lit = lit::vec_i32_padded(&idx_chunk, cap);
+                    let h_lit = lit::scalar_i32(chunk as i32);
+                    let outs = engine.run(
+                        "sdca_hinge",
+                        xp.bucket,
+                        &[
+                            &xp.x, &xp.y, &xp.norms, &a_lit, &w_lit, &idx_lit,
+                            &h_lit, &lamn_lit, &invq_lit, &beta_lit,
+                        ],
+                    )?;
+                    let da = lit::to_vec_f32(&outs[0], cap)?;
+                    for i in 0..alpha.len() {
+                        alpha[i] += da[i];
+                        da_total[i] += da[i];
+                    }
+                    done += chunk;
+                    if done < h {
+                        // carry the local primal forward for the next chunk
+                        let dw = self.atx(p, q, &da[..alpha_p.len()])?;
+                        for (wv, &d) in w.iter_mut().zip(&dw) {
+                            *wv += d / lamn;
+                        }
+                    }
+                }
+                Ok(da_total)
+            }
+        }
+    }
+
+    // -------------------------------------------------------------- SVRG
+
+    /// One local SVRG run of `l` steps on sub-block window `[lo, hi)`
+    /// (Algorithm 3 steps 6-10); returns the updated w_q (len m_q).
+    #[allow(clippy::too_many_arguments)]
+    pub fn svrg_block(
+        &self,
+        loss: Loss,
+        p: usize,
+        q: usize,
+        w_q: &[f32],
+        wt_q: &[f32],
+        mu_win: &[f32],
+        window: (usize, usize),
+        mt_p: &[f32],
+        idx: &[i32],
+        l: usize,
+        eta: f32,
+        lam: f32,
+    ) -> Result<Vec<f32>> {
+        let block = self.part.block(p, q);
+        let (lo, hi) = window;
+        debug_assert_eq!(mu_win.len(), hi - lo);
+        match self.backend {
+            Backend::Native => {
+                let mut w = w_q.to_vec();
+                crate::solvers::svrg_block(
+                    loss,
+                    block,
+                    self.part.labels(p),
+                    &mut w,
+                    wt_q,
+                    mu_win,
+                    lo,
+                    hi,
+                    mt_p,
+                    idx,
+                    l,
+                    eta,
+                    lam,
+                );
+                Ok(w)
+            }
+            Backend::Xla(engine) => {
+                let op = self.loss_op("svrg", loss)?;
+                let xp = self.xla_part(p, q);
+                let (n_cap, m_cap) = xp.bucket;
+                // full-width masked mu per the kernel's protocol
+                let mut mu_full = vec![0.0f32; m_cap];
+                mu_full[lo..hi].copy_from_slice(mu_win);
+                let mut w = w_q.to_vec();
+                let mut done = 0usize;
+                let wt_lit = lit::vec_f32_padded(wt_q, m_cap);
+                let mu_lit = lit::vec_f32(&mu_full);
+                let bmask_lit = lit::window_mask(lo, hi, m_cap);
+                let mt_lit = lit::vec_f32_padded(mt_p, n_cap);
+                let eta_lit = lit::scalar_f32(eta);
+                let lam_lit = lit::scalar_f32(lam);
+                while done < l.max(1) {
+                    let chunk = (l - done).min(n_cap);
+                    let idx_chunk: Vec<i32> =
+                        (0..chunk).map(|t| idx[(done + t) % idx.len().max(1)]).collect();
+                    let w_lit = lit::vec_f32_padded(&w, m_cap);
+                    let idx_lit = lit::vec_i32_padded(&idx_chunk, n_cap);
+                    let l_lit = lit::scalar_i32(chunk as i32);
+                    let outs = engine.run(
+                        &op,
+                        xp.bucket,
+                        &[
+                            &xp.x, &xp.y, &w_lit, &wt_lit, &mu_lit, &bmask_lit,
+                            &mt_lit, &idx_lit, &l_lit, &eta_lit, &lam_lit,
+                        ],
+                    )?;
+                    let full = lit::to_vec_f32(&outs[0], m_cap)?;
+                    w = full[..block.cols()].to_vec();
+                    done += chunk;
+                    if l == 0 {
+                        break;
+                    }
+                }
+                Ok(w)
+            }
+        }
+    }
+
+    // -------------------------------------------------------------- ADMM
+
+    /// Cached Cholesky of (I + X X^T) for partition [p,q].
+    pub fn admm_factor(&self, p: usize, q: usize) -> Result<FactorHandle> {
+        let block = self.part.block(p, q);
+        match self.backend {
+            Backend::Native => Ok(FactorHandle::Native(native::admm_factor(block)?)),
+            Backend::Xla(engine) => {
+                let xp = self.xla_part(p, q);
+                let outs = engine.run("admm_factor", xp.bucket, &[&xp.x])?;
+                Ok(FactorHandle::Xla(outs.into_iter().next().unwrap()))
+            }
+        }
+    }
+
+    /// Graph projection onto {(w, z) : z = x[p,q] w} with the cached factor.
+    pub fn admm_project(
+        &self,
+        p: usize,
+        q: usize,
+        factor: &FactorHandle,
+        w_hat: &[f32],
+        z_hat: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let block = self.part.block(p, q);
+        match (self.backend, factor) {
+            (Backend::Native, FactorHandle::Native(l)) => {
+                Ok(native::admm_project(block, l, w_hat, z_hat))
+            }
+            (Backend::Xla(engine), FactorHandle::Xla(l)) => {
+                let xp = self.xla_part(p, q);
+                let wh_lit = lit::vec_f32_padded(w_hat, xp.bucket.1);
+                let zh_lit = lit::vec_f32_padded(z_hat, xp.bucket.0);
+                let outs = engine.run(
+                    "admm_project",
+                    xp.bucket,
+                    &[&xp.x, l, &wh_lit, &zh_lit],
+                )?;
+                let w = lit::to_vec_f32(&outs[0], xp.bucket.1)?[..block.cols()].to_vec();
+                let z = lit::to_vec_f32(&outs[1], xp.bucket.0)?[..block.rows()].to_vec();
+                Ok((w, z))
+            }
+            _ => bail!("factor handle does not match backend"),
+        }
+    }
+
+    /// Hinge prox on partition p's response block.
+    pub fn prox_hinge(&self, p: usize, v_p: &[f32], rho: f32, inv_n: f32) -> Result<Vec<f32>> {
+        match self.backend {
+            Backend::Native => Ok(native::prox_hinge(
+                v_p,
+                self.part.labels(p),
+                rho,
+                inv_n,
+            )),
+            Backend::Xla(engine) => {
+                let xp = self.xla_part(p, 0);
+                let v_lit = lit::vec_f32_padded(v_p, xp.bucket.0);
+                let rho_lit = lit::scalar_f32(rho);
+                let invn_lit = lit::scalar_f32(inv_n);
+                let outs = engine.run(
+                    "prox_hinge",
+                    xp.bucket,
+                    &[&v_lit, &xp.y, &xp.rmask, &rho_lit, &invn_lit],
+                )?;
+                Ok(lit::to_vec_f32(&outs[0], xp.bucket.0)?[..v_p.len()].to_vec())
+            }
+        }
+    }
+
+    /// Approximate bytes held by the XLA staging (EXPERIMENTS.md §Perf).
+    pub fn staged_bytes(&self) -> usize {
+        self.xla_parts
+            .iter()
+            .map(|xp| (xp.bucket.0 * xp.bucket.1 + 3 * xp.bucket.0) * 4)
+            .sum()
+    }
+}

@@ -1,0 +1,19 @@
+//! Native (pure-rust) implementations of the per-partition compute ops.
+//!
+//! These mirror the XLA artifacts' semantics exactly (same update
+//! equations, same index-stream protocol) so the two backends are
+//! interchangeable behind [`crate::runtime::Backend`] and cross-checked in
+//! the integration tests.  They also serve the sparse experiments and the
+//! exact reference solver that produces `f*`.
+
+pub mod exact;
+pub mod objective;
+pub mod sdca;
+pub mod svrg;
+
+pub use objective::{
+    dual_objective, full_gradient, full_margins, grad_from_margins,
+    primal_from_dual, primal_objective,
+};
+pub use sdca::{row_norms, sdca_epoch};
+pub use svrg::svrg_block;

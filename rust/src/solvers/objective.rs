@@ -1,0 +1,227 @@
+//! Objectives, gradients and the primal-dual map over a partitioned
+//! dataset — the single-threaded reference versions the exact solver and
+//! the tests use.  (The coordinator computes the same quantities through
+//! the cluster substrate + backend; integration tests assert agreement.)
+
+use crate::data::Partitioned;
+use crate::linalg;
+use crate::loss::Loss;
+
+/// Full margins X w, reassembled as sum over feature partitions q of
+/// x[p,q] · w[.,q] — exactly the reduce the coordinators perform.
+pub fn full_margins(part: &Partitioned, w: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(w.len(), part.m);
+    let mut mg = vec![0.0f32; part.n];
+    let mut local = Vec::new();
+    for p in 0..part.grid.p {
+        let (r0, r1) = part.row_ranges[p];
+        local.resize(r1 - r0, 0.0);
+        for q in 0..part.grid.q {
+            let (c0, c1) = part.col_ranges[q];
+            part.block(p, q).margins_into(&w[c0..c1], &mut local);
+            for (acc, &v) in mg[r0..r1].iter_mut().zip(&local) {
+                *acc += v;
+            }
+        }
+    }
+    mg
+}
+
+/// F(w) = (1/n) Σ f_i(x_i·w) + (λ/2)‖w‖², in f64 for a stable gap metric.
+pub fn primal_objective(part: &Partitioned, w: &[f32], loss: Loss, lam: f32) -> f64 {
+    let mg = full_margins(part, w);
+    primal_objective_from_margins(part, &mg, w, loss, lam)
+}
+
+/// Same, reusing precomputed margins.
+pub fn primal_objective_from_margins(
+    part: &Partitioned,
+    mg: &[f32],
+    w: &[f32],
+    loss: Loss,
+    lam: f32,
+) -> f64 {
+    let mut sum = 0.0f64;
+    for i in 0..part.n {
+        sum += loss.value(mg[i], part.y[i]) as f64;
+    }
+    sum / part.n as f64 + 0.5 * lam as f64 * linalg::nrm2_sq(w) as f64
+}
+
+/// w(α) = (λ n)⁻¹ Σ α_i x_i — the paper's primal-dual map (3), assembled
+/// per feature partition via X^T α reduces.
+pub fn primal_from_dual(part: &Partitioned, alpha: &[f32], lam: f32) -> Vec<f32> {
+    debug_assert_eq!(alpha.len(), part.n);
+    let inv = 1.0 / (lam * part.n as f32);
+    let mut w = vec![0.0f32; part.m];
+    let mut local = Vec::new();
+    for q in 0..part.grid.q {
+        let (c0, c1) = part.col_ranges[q];
+        local.resize(c1 - c0, 0.0);
+        for p in 0..part.grid.p {
+            let (r0, r1) = part.row_ranges[p];
+            part.block(p, q).atx_into(&alpha[r0..r1], &mut local);
+            for (acc, &v) in w[c0..c1].iter_mut().zip(&local) {
+                *acc += inv * v;
+            }
+        }
+    }
+    w
+}
+
+/// D(α) = (1/n) Σ α_i y_i − (λ/2)‖w(α)‖² (hinge).
+pub fn dual_objective(part: &Partitioned, alpha: &[f32], lam: f32) -> f64 {
+    let mut lin = 0.0f64;
+    for i in 0..part.n {
+        lin += (alpha[i] * part.y[i]) as f64;
+    }
+    let w = primal_from_dual(part, alpha, lam);
+    lin / part.n as f64 - 0.5 * lam as f64 * linalg::nrm2_sq(&w) as f64
+}
+
+/// Loss-only gradient of one partition from its margins:
+/// g = (1/n) x[p,q]^T ψ with ψ_i = f'_i(margin_i).  `n` is the *global*
+/// count (the 1/n of objective (1)).
+pub fn grad_from_margins(
+    x: &crate::data::Block,
+    y: &[f32],
+    mg: &[f32],
+    n_global: usize,
+    loss: Loss,
+) -> Vec<f32> {
+    let n_p = x.rows();
+    debug_assert_eq!(y.len(), n_p);
+    debug_assert_eq!(mg.len(), n_p);
+    let psi: Vec<f32> = (0..n_p)
+        .map(|i| loss.slope(mg[i], y[i]) / n_global as f32)
+        .collect();
+    let mut g = vec![0.0f32; x.cols()];
+    x.atx_into(&psi, &mut g);
+    g
+}
+
+/// ∇F(w) = (1/n) Σ f'_i(x_i·w) x_i + λ w, full vector.
+pub fn full_gradient(part: &Partitioned, w: &[f32], loss: Loss, lam: f32) -> Vec<f32> {
+    let mg = full_margins(part, w);
+    let mut g = vec![0.0f32; part.m];
+    for q in 0..part.grid.q {
+        let (c0, c1) = part.col_ranges[q];
+        for p in 0..part.grid.p {
+            let (r0, r1) = part.row_ranges[p];
+            let gq = grad_from_margins(
+                part.block(p, q),
+                part.labels(p),
+                &mg[r0..r1],
+                part.n,
+                loss,
+            );
+            for (acc, &v) in g[c0..c1].iter_mut().zip(&gq) {
+                *acc += v;
+            }
+        }
+    }
+    linalg::axpy(lam, w, &mut g);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Grid, Partitioned, SyntheticDense};
+    use crate::util::rng::Xoshiro;
+
+    fn setup() -> (Partitioned, Vec<f32>) {
+        let ds = SyntheticDense::paper_part1(3, 2, 30, 20, 0.1, 1).build();
+        let part = Partitioned::split(&ds, Grid::new(3, 2));
+        let mut r = Xoshiro::new(2);
+        let w: Vec<f32> = (0..ds.m()).map(|_| r.range_f32(-0.5, 0.5)).collect();
+        (part, w)
+    }
+
+    #[test]
+    fn margins_match_unpartitioned() {
+        let ds = SyntheticDense::paper_part1(3, 2, 30, 20, 0.1, 1).build();
+        let (part, w) = setup();
+        let mg = full_margins(&part, &w);
+        let mut direct = vec![0.0; ds.n()];
+        ds.x.margins_into(&w, &mut direct);
+        for i in 0..ds.n() {
+            assert!((mg[i] - direct[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (part, w) = setup();
+        for loss in [Loss::Hinge, Loss::Logistic, Loss::Squared] {
+            let lam = 0.05f32;
+            let g = full_gradient(&part, &w, loss, lam);
+            let mut r = Xoshiro::new(3);
+            for _ in 0..6 {
+                let k = r.below(part.m);
+                let h = 1e-3f32;
+                let mut wp = w.clone();
+                wp[k] += h;
+                let mut wm = w.clone();
+                wm[k] -= h;
+                let num = (primal_objective(&part, &wp, loss, lam)
+                    - primal_objective(&part, &wm, loss, lam))
+                    / (2.0 * h as f64);
+                assert!(
+                    (num - g[k] as f64).abs() < 2e-2,
+                    "{loss:?} coord {k}: fd {num} vs {}",
+                    g[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weak_duality_holds() {
+        let (part, _) = setup();
+        let lam = 0.1f32;
+        let mut r = Xoshiro::new(4);
+        // any feasible dual point: a_i y_i in [0,1]
+        let alpha: Vec<f32> = part.y.iter().map(|&y| y * r.f32()).collect();
+        let w = primal_from_dual(&part, &alpha, lam);
+        let f = primal_objective(&part, &w, Loss::Hinge, lam);
+        let d = dual_objective(&part, &alpha, lam);
+        assert!(f >= d - 1e-6, "F={f} < D={d}");
+    }
+
+    #[test]
+    fn zero_dual_gives_zero_primal() {
+        let (part, _) = setup();
+        let w = primal_from_dual(&part, &vec![0.0; part.n], 0.1);
+        assert!(w.iter().all(|&v| v == 0.0));
+        assert_eq!(dual_objective(&part, &vec![0.0; part.n], 0.1), 0.0);
+    }
+
+    #[test]
+    fn partitioning_invariance_of_objective() {
+        // F(w) must not depend on the grid.
+        let ds = SyntheticDense::paper_part1(4, 3, 12, 10, 0.1, 5).build();
+        let mut r = Xoshiro::new(6);
+        let w: Vec<f32> = (0..ds.m()).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        let f1 = primal_objective(
+            &Partitioned::split(&ds, Grid::new(1, 1)),
+            &w,
+            Loss::Hinge,
+            0.1,
+        );
+        let f2 = primal_objective(
+            &Partitioned::split(&ds, Grid::new(4, 3)),
+            &w,
+            Loss::Hinge,
+            0.1,
+        );
+        let f3 = primal_objective(
+            &Partitioned::split(&ds, Grid::new(2, 2)),
+            &w,
+            Loss::Hinge,
+            0.1,
+        );
+        assert!((f1 - f2).abs() < 1e-6, "{f1} vs {f2}");
+        assert!((f1 - f3).abs() < 1e-6, "{f1} vs {f3}");
+    }
+}

@@ -1,0 +1,118 @@
+//! A small property-based testing harness (the offline environment has no
+//! `proptest`): generate many random cases from a seeded [`Xoshiro`]
+//! stream, run the property, and on failure report the failing seed so the
+//! case replays deterministically.
+//!
+//! ```
+//! use ddopt::testkit::forall;
+//! forall("sum is commutative", 100, |rng| {
+//!     let a = rng.f32();
+//!     let b = rng.f32();
+//!     assert!((a + b - (b + a)).abs() < 1e-9);
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro;
+
+/// Run `cases` random cases of `prop`, each with an independent
+/// deterministic RNG.  Panics (with the failing case seed) if any case
+/// panics.
+pub fn forall(name: &str, cases: usize, prop: impl Fn(&mut Xoshiro) + std::panic::RefUnwindSafe) {
+    let root = Xoshiro::new(0x9E3779B97F4A7C15);
+    for case in 0..cases {
+        let mut rng = root.substream(hash_name(name), case as u64, 0);
+        let result = std::panic::catch_unwind(|| {
+            let mut local = rng.clone();
+            prop(&mut local);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case}: {msg}");
+        }
+        let _ = rng.next_u64();
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Uniform usize in [lo, hi] from the rng (inclusive bounds — convenient
+/// for shape generation).
+pub fn size_in(rng: &mut Xoshiro, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// A random ±1 label vector.
+pub fn labels(rng: &mut Xoshiro, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| if rng.coin(0.5) { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// A random f32 vector in [-scale, scale].
+pub fn vector(rng: &mut Xoshiro, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(-scale, scale)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("below is bounded", 200, |rng| {
+            let n = size_in(rng, 1, 50);
+            assert!(rng.below(n) < n);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn cases_differ_but_replay_identically() {
+        use std::sync::Mutex;
+        let seen: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        forall("collect", 5, |rng| {
+            seen.lock().unwrap().push(rng.next_u64());
+        });
+        let first = seen.lock().unwrap().clone();
+        seen.lock().unwrap().clear();
+        forall("collect", 5, |rng| {
+            seen.lock().unwrap().push(rng.next_u64());
+        });
+        assert_eq!(first, *seen.lock().unwrap());
+        // distinct cases saw distinct draws
+        let mut sorted = first.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), first.len());
+    }
+
+    #[test]
+    fn helpers_shapes() {
+        let mut r = Xoshiro::new(1);
+        assert_eq!(labels(&mut r, 10).len(), 10);
+        assert!(labels(&mut r, 50).iter().all(|&v| v == 1.0 || v == -1.0));
+        let v = vector(&mut r, 20, 0.5);
+        assert!(v.iter().all(|&x| (-0.5..0.5).contains(&x)));
+        for _ in 0..100 {
+            let s = size_in(&mut r, 3, 7);
+            assert!((3..=7).contains(&s));
+        }
+    }
+}

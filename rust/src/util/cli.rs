@@ -1,0 +1,143 @@
+//! Declarative CLI flag parsing (no `clap` in the offline environment).
+//!
+//! ```no_run
+//! use ddopt::util::cli::Args;
+//! let mut args = Args::from_env();
+//! let p: usize = args.flag("p").unwrap_or(4);
+//! let method = args.flag_str("method").unwrap_or_else(|| "radisa".into());
+//! args.finish().unwrap(); // errors on unknown flags
+//! ```
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed `--key value` / `--key=value` / `--switch` command-line arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// Positional arguments (non-flag tokens).
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Typed flag lookup; records the key as consumed.
+    pub fn flag<T: FromStr>(&self, key: &str) -> Option<T> {
+        self.seen.borrow_mut().push(key.to_string());
+        self.flags.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn flag_str(&self, key: &str) -> Option<String> {
+        self.seen.borrow_mut().push(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    /// Boolean switch: present (with no value or `=true`) means true.
+    pub fn switch(&self, key: &str) -> bool {
+        self.seen.borrow_mut().push(key.to_string());
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn flag_list(&self, key: &str) -> Option<Vec<String>> {
+        self.flag_str(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
+    /// Error if any provided flag was never consumed — catches typos.
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !seen.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = args("exp fig3 --p 4 --q=2 --verbose --lam 1e-3");
+        assert_eq!(a.positional, vec!["exp", "fig3"]);
+        assert_eq!(a.flag::<usize>("p"), Some(4));
+        assert_eq!(a.flag::<usize>("q"), Some(2));
+        assert!(a.switch("verbose"));
+        assert_eq!(a.flag::<f64>("lam"), Some(1e-3));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn missing_flag_is_none() {
+        let a = args("run");
+        assert_eq!(a.flag::<usize>("p"), None);
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = args("--tyop 3");
+        let _ = a.flag::<usize>("typo");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = args("--methods radisa,d3ca, admm");
+        // the value token is "radisa,d3ca," plus trailing "admm" is
+        // positional — lists must be one token; items are trimmed
+        let a2 = args("--methods radisa,d3ca,admm");
+        assert_eq!(
+            a2.flag_list("methods").unwrap(),
+            vec!["radisa", "d3ca", "admm"]
+        );
+        assert_eq!(a.flag_list("methods").unwrap().len(), 3); // "", trimmed
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = args("--gamma -0.5");
+        // "-0.5" does not start with "--" so it binds as the value.
+        assert_eq!(a.flag::<f64>("gamma"), Some(-0.5));
+    }
+}

@@ -1,0 +1,83 @@
+//! Minimal leveled stderr logger.
+//!
+//! `DDOPT_LOG=debug|info|warn|error` selects the level (default `info`).
+//! The macros route through a process-global level so hot paths can guard
+//! with a cheap atomic load.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn init_level() -> u8 {
+    let lvl = match std::env::var("DDOPT_LOG").as_deref() {
+        Ok("error") => ERROR,
+        Ok("warn") => WARN,
+        Ok("debug") => DEBUG,
+        _ => INFO,
+    };
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+#[inline]
+pub fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l == u8::MAX {
+        init_level()
+    } else {
+        l
+    }
+}
+
+/// Override the level programmatically (tests, `--quiet`).
+pub fn set_level(l: u8) {
+    LEVEL.store(l, Ordering::Relaxed);
+}
+
+pub fn log(lvl: u8, tag: &str, msg: std::fmt::Arguments<'_>) {
+    if lvl <= level() {
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::INFO, "info",
+                                   format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnln {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::WARN, "warn",
+                                   format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debugln {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::DEBUG, "debug",
+                                   format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_level_wins() {
+        set_level(ERROR);
+        assert_eq!(level(), ERROR);
+        set_level(INFO);
+        assert_eq!(level(), INFO);
+    }
+}

@@ -1,0 +1,23 @@
+//! Infrastructure substrates.
+//!
+//! The offline build environment only vendors the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde, clap, rand, criterion,
+//! proptest, env_logger) are unavailable; this module provides the small,
+//! focused replacements the rest of the system is built on:
+//!
+//! * [`rng`] — SplitMix64 / xoshiro256++ PRNGs with per-(seed, partition,
+//!   iteration) sub-stream derivation; every stochastic component in the
+//!   repo draws from these, making runs bit-reproducible.
+//! * [`json`] — a strict JSON parser/serializer (artifact manifest, configs,
+//!   experiment reports).
+//! * [`cli`] — declarative flag parsing for the `ddopt` binary and examples.
+//! * [`logging`] — leveled stderr logger.
+//! * [`timer`] — monotonic wall timers and [`stats`] summaries used by the
+//!   bench harness (`benchkit` role).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;

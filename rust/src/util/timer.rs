@@ -1,0 +1,134 @@
+//! Monotonic wall timers and scoped accumulators used across the
+//! coordinator, the cluster simulator and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named durations — the profiling primitive behind the
+/// coordinator-overhead numbers in EXPERIMENTS.md §Perf.
+#[derive(Debug, Default, Clone)]
+pub struct Accumulator {
+    entries: Vec<(String, Duration, u64)>,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
+            e.1 += d;
+            e.2 += 1;
+        } else {
+            self.entries.push((name.to_string(), d, 1));
+        }
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.entries
+            .iter()
+            .find(|e| e.0 == name)
+            .map(|e| e.1)
+            .unwrap_or_default()
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.entries
+            .iter()
+            .find(|e| e.0 == name)
+            .map(|e| e.2)
+            .unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &Accumulator) {
+        for (name, d, c) in &other.entries {
+            if let Some(e) = self.entries.iter_mut().find(|e| &e.0 == name) {
+                e.1 += *d;
+                e.2 += *c;
+            } else {
+                self.entries.push((name.clone(), *d, *c));
+            }
+        }
+    }
+
+    /// `(name, total_seconds, calls)` rows sorted by descending total.
+    pub fn rows(&self) -> Vec<(String, f64, u64)> {
+        let mut rows: Vec<_> = self
+            .entries
+            .iter()
+            .map(|(n, d, c)| (n.clone(), d.as_secs_f64(), *c))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_counts() {
+        let mut acc = Accumulator::new();
+        acc.add("a", Duration::from_millis(5));
+        acc.add("a", Duration::from_millis(7));
+        acc.add("b", Duration::from_millis(1));
+        assert_eq!(acc.count("a"), 2);
+        assert!(acc.total("a") >= Duration::from_millis(12));
+        assert_eq!(acc.rows()[0].0, "a");
+    }
+
+    #[test]
+    fn time_closure_runs_it() {
+        let mut acc = Accumulator::new();
+        let v = acc.time("work", || 21 * 2);
+        assert_eq!(v, 42);
+        assert_eq!(acc.count("work"), 1);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Accumulator::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = Accumulator::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.count("y"), 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! Backend parity: every StagedGrid op must agree between the native rust
+//! kernels and the AOT XLA artifacts (within f32 tolerance).  This is the
+//! contract that makes the XLA path trustworthy — the python pytest suite
+//! checked kernel-vs-jnp-oracle, this checks artifact-vs-rust across the
+//! PJRT boundary, including padding/masking and the index-stream protocol.
+//!
+//! Skipped (cleanly) when `artifacts/manifest.json` is absent.
+
+use ddopt::data::{Grid, Partitioned, SyntheticDense};
+use ddopt::loss::Loss;
+use ddopt::runtime::Backend;
+use ddopt::util::rng::Xoshiro;
+use std::path::Path;
+
+fn backends() -> Option<(Backend, Backend)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some((Backend::native(), Backend::xla(dir).unwrap()))
+}
+
+/// A (2,2) grid with ragged block sizes, so padding is exercised.
+fn setup() -> (ddopt::data::Dataset, Partitioned) {
+    let ds = SyntheticDense::paper_part1(2, 2, 61, 45, 0.1, 42).build();
+    let part = Partitioned::split(&ds, Grid::new(2, 2));
+    (ds, part)
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert!(
+            (a[i] - b[i]).abs() <= tol * (1.0 + a[i].abs()),
+            "{what}[{i}]: native {} vs xla {}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[test]
+fn margins_atx_grad_obj_parity() {
+    let Some((nat, xla)) = backends() else { return };
+    let (_ds, part) = setup();
+    let sn = nat.stage(&part).unwrap();
+    let sx = xla.stage(&part).unwrap();
+    let mut rng = Xoshiro::new(7);
+    for p in 0..2 {
+        for q in 0..2 {
+            let m_q = part.m_q(q);
+            let n_p = part.n_p(p);
+            let w: Vec<f32> = (0..m_q).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let mg_n = sn.margins(p, q, &w).unwrap();
+            let mg_x = sx.margins(p, q, &w).unwrap();
+            assert_close(&mg_n, &mg_x, 2e-4, "margins");
+
+            let v: Vec<f32> = (0..n_p).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let at_n = sn.atx(p, q, &v).unwrap();
+            let at_x = sx.atx(p, q, &v).unwrap();
+            assert_close(&at_n, &at_x, 2e-4, "atx");
+
+            for loss in [Loss::Hinge, Loss::Logistic] {
+                let g_n = sn.grad(loss, p, q, &mg_n, part.n).unwrap();
+                let g_x = sx.grad(loss, p, q, &mg_n, part.n).unwrap();
+                assert_close(&g_n, &g_x, 3e-4, "grad");
+            }
+        }
+        let mg: Vec<f32> = (0..part.n_p(p)).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+        for loss in [Loss::Hinge, Loss::Logistic] {
+            let o_n = sn.loss_sum(loss, p, &mg).unwrap();
+            let o_x = sx.loss_sum(loss, p, &mg).unwrap();
+            assert!(
+                (o_n - o_x).abs() < 1e-2 * (1.0 + o_n.abs()),
+                "loss_sum {loss:?}: {o_n} vs {o_x}"
+            );
+        }
+        let a: Vec<f32> = (0..part.n_p(p)).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let d_n = sn.dual_linear_sum(p, &a).unwrap();
+        let d_x = sx.dual_linear_sum(p, &a).unwrap();
+        assert!((d_n - d_x).abs() < 1e-3 * (1.0 + d_n.abs()));
+    }
+}
+
+#[test]
+fn sdca_epoch_parity() {
+    let Some((nat, xla)) = backends() else { return };
+    let (_ds, part) = setup();
+    let sn = nat.stage(&part).unwrap();
+    let sx = xla.stage(&part).unwrap();
+    let lam = 0.1f32;
+    let lamn = lam * part.n as f32;
+    let mut rng = Xoshiro::new(9);
+    for (p, q) in [(0usize, 0usize), (1, 1)] {
+        let n_p = part.n_p(p);
+        let m_q = part.m_q(q);
+        let alpha: Vec<f32> = part.labels(p).iter().map(|&y| 0.3 * y).collect();
+        let w: Vec<f32> = (0..m_q).map(|_| rng.range_f32(-0.2, 0.2)).collect();
+        let idx = rng.clone().index_stream(n_p, n_p);
+        for beta in [0.0f32, 0.7] {
+            let da_n = sn
+                .sdca_epoch(p, q, &alpha, &w, &idx, n_p, lamn, 0.5, beta)
+                .unwrap();
+            let da_x = sx
+                .sdca_epoch(p, q, &alpha, &w, &idx, n_p, lamn, 0.5, beta)
+                .unwrap();
+            assert_close(&da_n, &da_x, 5e-3, "sdca da");
+        }
+    }
+}
+
+#[test]
+fn sdca_chunked_long_run_matches_native() {
+    // h > bucket capacity forces the XLA path through the chunked carry.
+    let Some((nat, xla)) = backends() else { return };
+    let ds = SyntheticDense::paper_part1(1, 1, 40, 20, 0.1, 3).build();
+    let part = Partitioned::split(&ds, Grid::new(1, 1));
+    let sn = nat.stage(&part).unwrap();
+    let sx = xla.stage(&part).unwrap();
+    let lamn = 0.1 * 40.0;
+    let mut rng = Xoshiro::new(11);
+    let h = 150usize; // > 128 bucket
+    let idx = rng.index_stream(40, h);
+    let alpha = vec![0.0f32; 40];
+    let w = vec![0.0f32; 20];
+    let da_n = sn.sdca_epoch(0, 0, &alpha, &w, &idx, h, lamn, 1.0, 0.0).unwrap();
+    let da_x = sx.sdca_epoch(0, 0, &alpha, &w, &idx, h, lamn, 1.0, 0.0).unwrap();
+    for i in 0..40 {
+        assert!(
+            (da_n[i] - da_x[i]).abs() < 1e-2,
+            "{i}: {} vs {}",
+            da_n[i],
+            da_x[i]
+        );
+    }
+}
+
+#[test]
+fn svrg_block_parity() {
+    let Some((nat, xla)) = backends() else { return };
+    let (_ds, part) = setup();
+    let sn = nat.stage(&part).unwrap();
+    let sx = xla.stage(&part).unwrap();
+    let lam = 0.05f32;
+    let mut rng = Xoshiro::new(13);
+    for loss in [Loss::Hinge, Loss::Logistic] {
+        let (p, q) = (0usize, 1usize);
+        let n_p = part.n_p(p);
+        let m_q = part.m_q(q);
+        let wt: Vec<f32> = (0..m_q).map(|_| rng.range_f32(-0.3, 0.3)).collect();
+        let mt = sn.margins(p, q, &wt).unwrap(); // partial margins as stand-in snapshot
+        let window = (3usize, m_q - 2);
+        let g = sn.grad(loss, p, q, &mt, part.n).unwrap();
+        let mu_win: Vec<f32> = (window.0..window.1)
+            .map(|k| g[k] + lam * wt[k])
+            .collect();
+        let idx = rng.clone().index_stream(n_p, n_p);
+        let w_n = sn
+            .svrg_block(loss, p, q, &wt, &wt, &mu_win, window, &mt, &idx, n_p, 0.05, lam)
+            .unwrap();
+        let w_x = sx
+            .svrg_block(loss, p, q, &wt, &wt, &mu_win, window, &mt, &idx, n_p, 0.05, lam)
+            .unwrap();
+        assert_close(&w_n, &w_x, 5e-3, "svrg w");
+        // off-window coordinates must be untouched on both sides
+        for k in 0..window.0 {
+            assert_eq!(w_n[k], wt[k]);
+            assert_eq!(w_x[k], wt[k]);
+        }
+    }
+}
+
+#[test]
+fn admm_ops_parity() {
+    let Some((nat, xla)) = backends() else { return };
+    let (_ds, part) = setup();
+    let sn = nat.stage(&part).unwrap();
+    let sx = xla.stage(&part).unwrap();
+    let mut rng = Xoshiro::new(17);
+    let (p, q) = (1usize, 0usize);
+    let n_p = part.n_p(p);
+    let m_q = part.m_q(q);
+    let f_n = sn.admm_factor(p, q).unwrap();
+    let f_x = sx.admm_factor(p, q).unwrap();
+    let w_hat: Vec<f32> = (0..m_q).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let z_hat: Vec<f32> = (0..n_p).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let (wp_n, zp_n) = sn.admm_project(p, q, &f_n, &w_hat, &z_hat).unwrap();
+    let (wp_x, zp_x) = sx.admm_project(p, q, &f_x, &w_hat, &z_hat).unwrap();
+    assert_close(&wp_n, &wp_x, 5e-3, "admm w");
+    assert_close(&zp_n, &zp_x, 5e-3, "admm z");
+
+    let v: Vec<f32> = (0..n_p).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    let pr_n = sn.prox_hinge(p, &v, 0.5, 1.0 / part.n as f32).unwrap();
+    let pr_x = sx.prox_hinge(p, &v, 0.5, 1.0 / part.n as f32).unwrap();
+    assert_close(&pr_n, &pr_x, 1e-4, "prox");
+}
+
+#[test]
+fn factor_handles_do_not_cross_backends() {
+    let Some((nat, xla)) = backends() else { return };
+    let (_ds, part) = setup();
+    let sn = nat.stage(&part).unwrap();
+    let sx = xla.stage(&part).unwrap();
+    let f_n = sn.admm_factor(0, 0).unwrap();
+    let w = vec![0.0f32; part.m_q(0)];
+    let z = vec![0.0f32; part.n_p(0)];
+    assert!(sx.admm_project(0, 0, &f_n, &w, &z).is_err());
+}

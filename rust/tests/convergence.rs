@@ -1,0 +1,326 @@
+//! Algorithm-level validation: all three doubly-distributed methods must
+//! drive the relative optimality difference toward the certified f* on
+//! small instances, across grid shapes, and the paper's qualitative
+//! claims must hold (RADiSA/D3CA beat ADMM per iteration; D3CA monotone
+//! in the dual; Q=1 D3CA ≡ CoCoA-style behaviour).
+
+use ddopt::cluster::ClusterConfig;
+use ddopt::coordinator::{
+    Admm, AdmmConfig, BetaSchedule, D3ca, D3caConfig, Driver, Optimizer,
+    Radisa, RadisaConfig,
+};
+use ddopt::data::{Grid, Partitioned, SyntheticDense, SyntheticSparse};
+use ddopt::loss::Loss;
+use ddopt::runtime::Backend;
+use ddopt::solvers::exact::reference_optimum;
+
+fn dense_case(p: usize, q: usize, seed: u64) -> (ddopt::data::Dataset, Partitioned) {
+    let ds = SyntheticDense::paper_part1(p, q, 60, 40, 0.1, seed).build();
+    let part = Partitioned::split(&ds, Grid::new(p, q));
+    (ds, part)
+}
+
+fn run<O: Optimizer>(
+    part: &Partitioned,
+    backend: &Backend,
+    opt: &mut O,
+    iters: usize,
+    fstar: f64,
+) -> ddopt::coordinator::RunResult {
+    Driver::new(part, backend)
+        .unwrap()
+        .iterations(iters)
+        .cluster(ClusterConfig::with_cores(8))
+        .fstar(fstar)
+        .run(opt)
+        .unwrap()
+}
+
+#[test]
+fn d3ca_converges_on_2x2() {
+    // λ = 0.5: the "large regularization" regime where the paper reports
+    // D3CA produces good solutions (§IV); small-λ stalling is covered by
+    // beta_schedule_keeps_small_lambda_stable below.
+    let (ds, part) = dense_case(2, 2, 1);
+    let lam = 0.5f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut opt = D3ca::new(D3caConfig { lambda: lam, ..Default::default() });
+    let r = run(&part, &backend, &mut opt, 40, fstar);
+    let gap = r.history.best_gap();
+    assert!(gap < 0.1, "d3ca gap {gap}");
+}
+
+#[test]
+fn d3ca_dual_objective_increases() {
+    let (ds, part) = dense_case(2, 3, 2);
+    let lam = 0.5f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut opt = D3ca::new(D3caConfig { lambda: lam, ..Default::default() });
+    let r = run(&part, &backend, &mut opt, 15, fstar);
+    let duals: Vec<f64> = r.history.records.iter().map(|x| x.dual).collect();
+    // Averaged dual ascent is not strictly monotone (local solvers act on
+    // stale state), but it must trend up strongly and never collapse…
+    assert!(
+        duals.last().unwrap() > &(duals[0] + 0.05),
+        "dual did not ascend: {duals:?}"
+    );
+    for w in duals.windows(2) {
+        assert!(w[1] >= w[0] - 0.02 * w[0].abs().max(1e-3), "dual collapsed: {duals:?}");
+    }
+    // …and weak duality must hold at every iterate.
+    for rec in &r.history.records {
+        assert!(rec.primal >= rec.dual - 1e-4, "duality violated");
+    }
+}
+
+#[test]
+fn d3ca_q1_reduces_to_cocoa_fast_convergence() {
+    // With Q=1 (features all local) D3CA is CoCoA; it should reach a tight
+    // gap quickly.
+    let (ds, part) = dense_case(3, 1, 3);
+    let lam = 0.1f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut opt = D3ca::new(D3caConfig { lambda: lam, ..Default::default() });
+    let r = run(&part, &backend, &mut opt, 60, fstar);
+    assert!(r.history.best_gap() < 0.02, "gap {}", r.history.best_gap());
+}
+
+#[test]
+fn radisa_converges_on_3x2() {
+    let (ds, part) = dense_case(3, 2, 4);
+    let lam = 0.05f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut opt = Radisa::new(RadisaConfig {
+        lambda: lam,
+        gamma: 0.1,
+        ..Default::default()
+    });
+    let r = run(&part, &backend, &mut opt, 60, fstar);
+    let gap = r.history.best_gap();
+    assert!(gap < 0.1, "radisa gap {gap}");
+}
+
+#[test]
+fn radisa_avg_converges() {
+    let (ds, part) = dense_case(4, 2, 5);
+    let lam = 0.05f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut avg = Radisa::new(RadisaConfig {
+        lambda: lam,
+        gamma: 0.1,
+        average: true,
+        ..Default::default()
+    });
+    let r_avg = run(&part, &backend, &mut avg, 50, fstar);
+    assert!(
+        r_avg.history.best_gap() < 0.1,
+        "avg gap {}",
+        r_avg.history.best_gap()
+    );
+}
+
+#[test]
+fn radisa_logistic_loss_decreases() {
+    let (_ds, part) = dense_case(2, 2, 6);
+    let lam = 0.05f32;
+    let backend = Backend::native();
+    let mut opt = Radisa::new(RadisaConfig {
+        lambda: lam,
+        loss: Loss::Logistic,
+        gamma: 0.2,
+        ..Default::default()
+    });
+    let mut driver = Driver::new(&part, &backend).unwrap().iterations(20);
+    let r = driver.run(&mut opt).unwrap();
+    let first = r.history.records.first().unwrap().primal;
+    let last = r.history.records.last().unwrap().primal;
+    let f0 = (2.0f64).ln(); // F(0) for logistic
+    assert!(first < f0, "no first-iteration progress: {first} vs {f0}");
+    assert!(last < first, "{last} !< {first}");
+}
+
+#[test]
+fn admm_converges_on_2x2() {
+    let (ds, part) = dense_case(2, 2, 7);
+    let lam = 0.1f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut opt = Admm::new(AdmmConfig { lambda: lam, rho: lam });
+    let r = run(&part, &backend, &mut opt, 200, fstar);
+    let gap = r.history.best_gap();
+    assert!(gap < 0.05, "admm gap {gap}");
+}
+
+#[test]
+fn paper_claim_radisa_and_d3ca_beat_admm_per_iteration() {
+    // Fig. 4's qualitative shape: at a fixed iteration budget the paper's
+    // methods reach a (much) smaller relative gap than block ADMM.
+    let (ds, part) = dense_case(2, 2, 8);
+    let lam = 0.1f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let iters = 20;
+
+    let mut radisa = Radisa::new(RadisaConfig { lambda: lam, gamma: 0.1, ..Default::default() });
+    let g_radisa = run(&part, &backend, &mut radisa, iters, fstar).history.best_gap();
+    let mut d3ca = D3ca::new(D3caConfig { lambda: lam, ..Default::default() });
+    let g_d3ca = run(&part, &backend, &mut d3ca, iters, fstar).history.best_gap();
+    let mut admm = Admm::new(AdmmConfig { lambda: lam, rho: lam });
+    let g_admm = run(&part, &backend, &mut admm, iters, fstar).history.best_gap();
+
+    assert!(
+        g_radisa < g_admm && g_d3ca < g_admm,
+        "radisa {g_radisa:.2e}, d3ca {g_d3ca:.2e}, admm {g_admm:.2e}"
+    );
+}
+
+#[test]
+fn methods_converge_on_sparse_data() {
+    // The Fig. 5/6 regime: sparse blocks through the native backend.
+    let ds = SyntheticSparse::new("conv-sparse", 300, 200, 0.05, 9).build();
+    let part = Partitioned::split(&ds, Grid::new(3, 2));
+    let lam = 0.3f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut radisa = Radisa::new(RadisaConfig { lambda: lam, gamma: 0.1, ..Default::default() });
+    let g = run(&part, &backend, &mut radisa, 50, fstar).history.best_gap();
+    assert!(g < 0.1, "sparse radisa gap {g}");
+    let mut d3ca = D3ca::new(D3caConfig { lambda: lam, ..Default::default() });
+    let g = run(&part, &backend, &mut d3ca, 40, fstar).history.best_gap();
+    assert!(g < 0.1, "sparse d3ca gap {g}");
+}
+
+#[test]
+fn beta_schedule_small_lambda_behaviour() {
+    // The paper's small-λ pathology, reproduced: at λ = 1e-3 D3CA cannot
+    // reach the optimum (§IV: "the behavior of D3CA is erratic for small
+    // regularization values") — but the β mechanism must (a) run finite
+    // and (b) a constant β on the ‖x_i‖² scale must still make progress
+    // from the first iterate.  EXPERIMENTS.md quantifies all schedules.
+    let (ds, part) = dense_case(2, 2, 10);
+    let lam = 1e-3f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    for beta in [BetaSchedule::RowNorm, BetaSchedule::Const(80.0)] {
+        let mut opt = D3ca::new(D3caConfig { lambda: lam, beta, ..Default::default() });
+        let r = run(&part, &backend, &mut opt, 30, fstar);
+        let first = r.history.records[0].rel_gap;
+        let best = r.history.best_gap();
+        assert!(best.is_finite(), "{beta:?} diverged");
+        assert!(best < 0.6 * first, "{beta:?}: no progress {first} -> {best}");
+    }
+    // λn/t blows the denominator up→0 and must still stay finite
+    let mut opt = D3ca::new(D3caConfig {
+        lambda: lam,
+        beta: BetaSchedule::LambdaNOverT,
+        ..Default::default()
+    });
+    let r = run(&part, &backend, &mut opt, 10, fstar);
+    assert!(r.history.best_gap().is_finite());
+}
+
+#[test]
+fn sim_clock_and_comm_accounting_populate() {
+    let (ds, part) = dense_case(2, 2, 11);
+    let lam = 0.1f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut opt = D3ca::new(D3caConfig { lambda: lam, ..Default::default() });
+    let r = run(&part, &backend, &mut opt, 5, fstar);
+    assert!(r.sim_time > 0.0);
+    assert!(r.comm_bytes > 0);
+    assert!(r.supersteps >= 10, "supersteps {}", r.supersteps);
+    // history is monotone in sim time
+    let times: Vec<f64> = r.history.records.iter().map(|x| x.sim_time).collect();
+    for w in times.windows(2) {
+        assert!(w[1] >= w[0]);
+    }
+}
+
+#[test]
+fn d3ca_incremental_primal_matches_full() {
+    // §V extension: the incremental primal identity is exact — identical
+    // trajectories on identical seeds.
+    let (ds, part) = dense_case(2, 2, 12);
+    let lam = 0.3f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mk = |inc: bool| D3caConfig {
+        lambda: lam,
+        incremental_primal: inc,
+        seed: 3,
+        ..Default::default()
+    };
+    let mut full = D3ca::new(mk(false));
+    let r_full = run(&part, &backend, &mut full, 10, fstar);
+    let mut inc = D3ca::new(mk(true));
+    let r_inc = run(&part, &backend, &mut inc, 10, fstar);
+    for (a, b) in r_full.history.records.iter().zip(&r_inc.history.records) {
+        assert!(
+            (a.primal - b.primal).abs() < 1e-4 * (1.0 + a.primal.abs()),
+            "iter {}: full {} vs incremental {}",
+            a.iter,
+            a.primal,
+            b.primal
+        );
+    }
+}
+
+#[test]
+fn d3ca_1_over_q_averaging_also_converges() {
+    let (ds, part) = dense_case(2, 2, 13);
+    let lam = 0.5f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut opt = D3ca::new(D3caConfig { lambda: lam, avg_pq: false, ..Default::default() });
+    let r = run(&part, &backend, &mut opt, 40, fstar);
+    assert!(r.history.best_gap() < 0.2, "gap {}", r.history.best_gap());
+}
+
+#[test]
+fn radisa_delayed_gradient_converges() {
+    // §V extension: stale-anchor rounds still make progress, and the
+    // per-snapshot cost drops (fewer gradient passes per round).
+    let (ds, part) = dense_case(3, 2, 14);
+    let lam = 0.1f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mut opt = Radisa::new(RadisaConfig {
+        lambda: lam,
+        grad_refresh: 3,
+        ..Default::default()
+    });
+    let r = run(&part, &backend, &mut opt, 15, fstar); // 45 rounds total
+    // The stale anchor slows per-round progress (measured ~2× vs vanilla
+    // per round — quantified in `ddopt exp ablations`), but the method
+    // must still converge decisively from the ≳2.0 starting gap.
+    assert!(r.history.best_gap() < 0.3, "gap {}", r.history.best_gap());
+    assert!(r.history.best_gap() < 0.2 * r.history.records[0].rel_gap);
+}
+
+#[test]
+fn radisa_grad_refresh_one_is_vanilla() {
+    let (ds, part) = dense_case(2, 2, 15);
+    let lam = 0.2f32;
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    let backend = Backend::native();
+    let mk = |k: usize| RadisaConfig {
+        lambda: lam,
+        grad_refresh: k,
+        seed: 9,
+        ..Default::default()
+    };
+    // identical seeds + k=1 must match the default config bit-for-bit
+    let mut a = Radisa::new(mk(1));
+    let ra = run(&part, &backend, &mut a, 6, fstar);
+    let mut b = Radisa::new(RadisaConfig { lambda: lam, seed: 9, ..Default::default() });
+    let rb = run(&part, &backend, &mut b, 6, fstar);
+    for (x, y) in ra.history.records.iter().zip(&rb.history.records) {
+        assert_eq!(x.primal, y.primal);
+    }
+}

@@ -1,0 +1,107 @@
+//! Full-stack smoke: the XLA backend (AOT Pallas/JAX artifacts through
+//! PJRT) drives complete D3CA / RADiSA / ADMM runs and reaches the same
+//! optimality region as the native backend on the same seeds.
+//! Skipped cleanly when artifacts are absent.
+
+use ddopt::cluster::ClusterConfig;
+use ddopt::coordinator::{
+    Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa, RadisaConfig,
+};
+use ddopt::data::{Grid, Partitioned, SyntheticDense};
+use ddopt::loss::Loss;
+use ddopt::runtime::Backend;
+use ddopt::solvers::exact::reference_optimum;
+use std::path::Path;
+
+fn xla_backend() -> Option<Backend> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Backend::xla(dir).unwrap())
+    } else {
+        eprintln!("skipping: no artifacts");
+        None
+    }
+}
+
+fn case() -> (ddopt::data::Dataset, Partitioned, f64, f32) {
+    let lam = 0.5f32;
+    let ds = SyntheticDense::paper_part1(2, 2, 50, 40, 0.1, 21).build();
+    let part = Partitioned::split(&ds, Grid::new(2, 2));
+    let fstar = reference_optimum(&ds, Loss::Hinge, lam, 1e-8).fstar;
+    (ds, part, fstar, lam)
+}
+
+fn run_with(
+    backend: &Backend,
+    part: &Partitioned,
+    opt: &mut dyn Optimizer,
+    iters: usize,
+    fstar: f64,
+) -> ddopt::coordinator::RunResult {
+    Driver::new(part, backend)
+        .unwrap()
+        .iterations(iters)
+        .cluster(ClusterConfig::with_cores(4))
+        .fstar(fstar)
+        .run(opt)
+        .unwrap()
+}
+
+#[test]
+fn xla_d3ca_matches_native_trajectory() {
+    let Some(xla) = xla_backend() else { return };
+    let native = Backend::native();
+    let (_ds, part, fstar, lam) = case();
+    let mk = || D3ca::new(D3caConfig { lambda: lam, seed: 5, ..Default::default() });
+    let r_n = run_with(&native, &part, &mut mk(), 10, fstar);
+    let r_x = run_with(&xla, &part, &mut mk(), 10, fstar);
+    // same seeds, same update equations → same trajectory within f32 noise
+    for (a, b) in r_n.history.records.iter().zip(&r_x.history.records) {
+        assert!(
+            (a.primal - b.primal).abs() < 5e-3 * (1.0 + a.primal.abs()),
+            "iter {}: native {} vs xla {}",
+            a.iter,
+            a.primal,
+            b.primal
+        );
+    }
+    assert!(r_x.history.best_gap() < 0.15, "xla d3ca gap {}", r_x.history.best_gap());
+}
+
+#[test]
+fn xla_radisa_converges() {
+    let Some(xla) = xla_backend() else { return };
+    let (_ds, part, fstar, lam) = case();
+    let mut opt = Radisa::new(RadisaConfig {
+        lambda: lam,
+        gamma: 0.1,
+        seed: 5,
+        ..Default::default()
+    });
+    let r = run_with(&xla, &part, &mut opt, 30, fstar);
+    assert!(r.history.best_gap() < 0.1, "xla radisa gap {}", r.history.best_gap());
+}
+
+#[test]
+fn xla_admm_converges() {
+    let Some(xla) = xla_backend() else { return };
+    let (_ds, part, fstar, lam) = case();
+    let mut opt = Admm::new(AdmmConfig { lambda: lam, rho: lam });
+    let r = run_with(&xla, &part, &mut opt, 80, fstar);
+    assert!(r.history.best_gap() < 0.1, "xla admm gap {}", r.history.best_gap());
+}
+
+#[test]
+fn xla_radisa_avg_runs() {
+    let Some(xla) = xla_backend() else { return };
+    let (_ds, part, fstar, lam) = case();
+    let mut opt = Radisa::new(RadisaConfig {
+        lambda: lam,
+        gamma: 0.1,
+        average: true,
+        seed: 5,
+        ..Default::default()
+    });
+    let r = run_with(&xla, &part, &mut opt, 20, fstar);
+    assert!(r.history.best_gap() < 0.15, "gap {}", r.history.best_gap());
+}

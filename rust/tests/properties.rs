@@ -1,0 +1,209 @@
+//! Property-based tests (via the in-repo `testkit` harness) on the
+//! coordinator's invariants: sub-block routing, dual-feasibility of the
+//! averaged state, treeAggregate correctness, partitioner coverage, and
+//! the RADiSA margin identity — the "proptest on coordinator invariants"
+//! layer of the test pyramid.
+
+use ddopt::coordinator::schedule::SubBlockSchedule;
+use ddopt::data::{
+    Dataset, DenseMatrix, Grid, Partitioned, SubBlocks, SyntheticDense,
+};
+use ddopt::loss::Loss;
+use ddopt::solvers;
+use ddopt::testkit::{forall, labels, size_in, vector};
+use ddopt::util::rng::Xoshiro;
+
+#[test]
+fn prop_subblock_routing_is_disjoint_and_total() {
+    // For every (q, t): the P assigned windows tile [0, m_q) exactly —
+    // no overlap (no two workers write the same coordinate) and no gap.
+    forall("subblock routing", 60, |rng| {
+        let p = size_in(rng, 1, 6);
+        let q = size_in(rng, 1, 4);
+        let n_per = size_in(rng, 4, 10);
+        let m_per = size_in(rng, p.max(2), 24); // ≥ p so every worker gets cols
+        let ds = SyntheticDense::paper_part1(p, q, n_per, m_per, 0.1, rng.next_u64()).build();
+        let part = Partitioned::split(&ds, Grid::new(p, q));
+        let sb = SubBlocks::split(&part);
+        let sched = SubBlockSchedule::new(&Xoshiro::new(rng.next_u64()), p);
+        for qq in 0..q {
+            for t in 1..6 {
+                let assign = sched.assignment(qq, t);
+                let mut covered = vec![false; part.m_q(qq)];
+                for &s in &assign {
+                    let (lo, hi) = sb.range(qq, s);
+                    for c in covered.iter_mut().take(hi).skip(lo) {
+                        assert!(!*c, "overlap at t={t}");
+                        *c = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "gap in coverage");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_d3ca_averaging_preserves_dual_feasibility() {
+    // Each partition's SDCA epoch yields a feasible (α + Δα); the paper's
+    // 1/(P·Q)-scaled aggregate must stay in the hinge box.
+    forall("dual feasibility", 40, |rng| {
+        let p = size_in(rng, 1, 3);
+        let q = size_in(rng, 1, 3);
+        let ds = SyntheticDense::paper_part1(p, q, size_in(rng, 6, 16), size_in(rng, 4, 12), 0.1, rng.next_u64()).build();
+        let part = Partitioned::split(&ds, Grid::new(p, q));
+        let lam = 0.05 + rng.f32() * 0.5;
+        let lamn = lam * part.n as f32;
+        // feasible starting dual
+        let alpha: Vec<f32> = part.y.iter().map(|&y| y * rng.f32()).collect();
+        for pi in 0..p {
+            let (r0, r1) = part.row_ranges[pi];
+            let n_p = r1 - r0;
+            let mut sum = vec![0.0f32; n_p];
+            for qi in 0..q {
+                let (c0, c1) = part.col_ranges[qi];
+                let w0 = vector(rng, c1 - c0, 0.3);
+                let mut rr = Xoshiro::new(rng.next_u64());
+                let idx = rr.index_stream(n_p, n_p);
+                let da = solvers::sdca_epoch(
+                    part.block(pi, qi),
+                    part.labels(pi),
+                    &solvers::row_norms(part.block(pi, qi)),
+                    &alpha[r0..r1],
+                    &w0,
+                    &idx,
+                    n_p,
+                    lamn,
+                    1.0 / q as f32,
+                    0.0,
+                );
+                for (s, d) in sum.iter_mut().zip(&da) {
+                    *s += d;
+                }
+            }
+            let scale = 1.0 / (p * q) as f32;
+            for i in 0..n_p {
+                let a_new = alpha[r0 + i] + scale * sum[i];
+                assert!(
+                    Loss::Hinge.dual_feasible(a_new, part.y[r0 + i], 1e-4),
+                    "alpha {a_new} y {}",
+                    part.y[r0 + i]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tree_aggregate_equals_sequential_sum() {
+    forall("treeAggregate", 80, |rng| {
+        let k = size_in(rng, 1, 17);
+        let len = size_in(rng, 1, 40);
+        let parts: Vec<Vec<f32>> = (0..k).map(|_| vector(rng, len, 1.0)).collect();
+        let mut expect = vec![0.0f32; len];
+        for part in &parts {
+            for (e, &v) in expect.iter_mut().zip(part) {
+                *e += v;
+            }
+        }
+        let mut tree_parts = parts.clone();
+        ddopt::cluster::tree_aggregate_f32(&mut tree_parts, 1e-6, 1e9);
+        for (a, b) in tree_parts[0].iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_partitioner_is_lossless() {
+    // Reassembling margins from any grid matches the unpartitioned matvec.
+    forall("partitioner lossless", 30, |rng| {
+        let n = size_in(rng, 6, 40);
+        let m = size_in(rng, 4, 30);
+        let p = size_in(rng, 1, n.min(5));
+        let q = size_in(rng, 1, m.min(4));
+        let mut r2 = Xoshiro::new(rng.next_u64());
+        let x = DenseMatrix::from_fn(n, m, |_, _| r2.range_f32(-1.0, 1.0));
+        let ds = Dataset {
+            name: "prop".into(),
+            x: ddopt::data::Block::Dense(x),
+            y: labels(rng, n),
+        };
+        let part = Partitioned::split(&ds, Grid::new(p, q));
+        let w = vector(rng, m, 1.0);
+        let mg = solvers::full_margins(&part, &w);
+        let mut direct = vec![0.0; n];
+        ds.x.margins_into(&w, &mut direct);
+        for i in 0..n {
+            assert!((mg[i] - direct[i]).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_radisa_margin_identity() {
+    // mt_j + x_j|win · (w − w̃)|win == x_j · w whenever w == w̃ off-window.
+    forall("margin identity", 50, |rng| {
+        let n = size_in(rng, 4, 30);
+        let m = size_in(rng, 3, 25);
+        let mut r2 = Xoshiro::new(rng.next_u64());
+        let x = DenseMatrix::from_fn(n, m, |_, _| r2.range_f32(-1.0, 1.0));
+        let block = ddopt::data::Block::Dense(x);
+        let wt = vector(rng, m, 0.5);
+        let lo = size_in(rng, 0, m - 1);
+        let hi = size_in(rng, lo + 1, m);
+        let mut w = wt.clone();
+        for v in w[lo..hi].iter_mut() {
+            *v += rng.range_f32(-0.5, 0.5);
+        }
+        let mut mt = vec![0.0; n];
+        block.margins_into(&wt, &mut mt);
+        let delta: Vec<f32> = w[lo..hi].iter().zip(&wt[lo..hi]).map(|(a, b)| a - b).collect();
+        for j in 0..n {
+            let local = mt[j] + block.row_dot_window_offset(j, &delta, lo, hi);
+            let full = block.row_dot(j, &w);
+            assert!((local - full).abs() < 1e-3, "row {j}: {local} vs {full}");
+        }
+    });
+}
+
+#[test]
+fn prop_weak_duality_universal() {
+    // F(w(α)) ≥ D(α) for every feasible α, any grid, any λ.
+    forall("weak duality", 40, |rng| {
+        let p = size_in(rng, 1, 4);
+        let q = size_in(rng, 1, 3);
+        let ds = SyntheticDense::paper_part1(
+            p, q,
+            size_in(rng, 5, 15),
+            size_in(rng, 4, 12),
+            0.1,
+            rng.next_u64(),
+        )
+        .build();
+        let part = Partitioned::split(&ds, Grid::new(p, q));
+        let lam = 0.01 + rng.f32();
+        let alpha: Vec<f32> = part.y.iter().map(|&y| y * rng.f32()).collect();
+        let w = solvers::primal_from_dual(&part, &alpha, lam);
+        let f = solvers::primal_objective(&part, &w, Loss::Hinge, lam);
+        let d = solvers::dual_objective(&part, &alpha, lam);
+        assert!(f >= d - 1e-5, "F {f} < D {d}");
+    });
+}
+
+#[test]
+fn prop_lpt_bounds() {
+    // max(d) ≤ makespan ≤ sum(d); and ≤ 2·OPT_lower_bound (LPT guarantee).
+    forall("lpt bounds", 80, |rng| {
+        let k = size_in(rng, 1, 20);
+        let slots = size_in(rng, 1, 8);
+        let d: Vec<f64> = (0..k).map(|_| rng.f64() + 0.01).collect();
+        let mk = ddopt::cluster::lpt_makespan(&d, slots);
+        let sum: f64 = d.iter().sum();
+        let max = d.iter().cloned().fold(0.0, f64::max);
+        let lb = (sum / slots as f64).max(max);
+        assert!(mk >= max - 1e-12);
+        assert!(mk <= sum + 1e-12);
+        assert!(mk <= 2.0 * lb + 1e-9, "mk {mk} lb {lb}");
+    });
+}

@@ -1,32 +1,36 @@
-//! End-to-end driver — the composition proof for the three-layer stack.
+//! End-to-end driver — the composition proof for the stack, and the
+//! superstep engine's wall-clock showcase.
 //!
-//! Loads the AOT artifacts (Pallas kernels → JAX programs → HLO text,
-//! built once by `make artifacts`), stages a doubly-partitioned SVM
-//! problem on the PJRT CPU runtime, runs all four methods through the
-//! rust coordinator, logs the loss curves, and cross-checks the XLA
-//! trajectory against the native backend.  Python is not involved —
-//! delete it after `make artifacts` and this still runs.
+//! Runs all four methods through the rust coordinator on the simulated
+//! P×Q cluster, with per-partition tasks executed on the worker pool:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example end_to_end
+//! cargo run --release --example end_to_end -- --threads 1
+//! cargo run --release --example end_to_end -- --threads 4
 //! ```
+//!
+//! The *iterates* (and hence loss curves and final gaps) are bit-identical
+//! across `--threads`; only the host wall time changes.  The simulated
+//! time column uses the default `CostModel::Measured` (real per-task
+//! timings), so it naturally varies run to run — pin
+//! `CostModel::Fixed` for bit-reproducible clocks, as the determinism
+//! tests do.
+//!
+//! With `--features xla` (after `make artifacts`) it additionally loads
+//! the AOT artifacts (Pallas kernels → JAX programs → HLO text), runs the
+//! same methods through the PJRT CPU runtime, and cross-checks the XLA
+//! trajectory against the native backend.  Python is not involved —
+//! delete it after `make artifacts` and this still runs.
 
 use ddopt::coordinator::{
     Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa, RadisaConfig,
 };
 use ddopt::metrics::write_csv;
 use ddopt::prelude::*;
-use std::path::Path;
+use ddopt::util::cli::Args;
 
-fn run_method(
-    part: &Partitioned,
-    backend: &Backend,
-    name: &str,
-    lambda: f32,
-    iters: usize,
-    fstar: f64,
-) -> anyhow::Result<ddopt::coordinator::RunResult> {
-    let mut opt: Box<dyn Optimizer> = match name {
+fn make_opt(name: &str, lambda: f32) -> Box<dyn Optimizer> {
+    match name {
         "radisa" => Box::new(Radisa::new(RadisaConfig {
             lambda,
             gamma: 0.1,
@@ -46,76 +50,138 @@ fn run_method(
             ..Default::default()
         })),
         _ => Box::new(Admm::new(AdmmConfig { lambda, rho: lambda })),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_method(
+    part: &Partitioned,
+    backend: &Backend,
+    name: &str,
+    lambda: f32,
+    iters: usize,
+    fstar: f64,
+    threads: usize,
+    cost: CostModel,
+) -> anyhow::Result<ddopt::coordinator::RunResult> {
+    let mut opt = make_opt(name, lambda);
+    let cluster = ClusterConfig {
+        cores: part.grid.k(),
+        threads,
+        cost,
+        ..Default::default()
     };
     Driver::new(part, backend)?
         .iterations(iters)
-        .cluster(ClusterConfig::with_cores(part.grid.k()))
+        .cluster(cluster)
         .fstar(fstar)
         .run(opt.as_mut())
 }
 
 fn main() -> anyhow::Result<()> {
-    let artifact_dir = Path::new("artifacts");
-    if !artifact_dir.join("manifest.json").exists() {
-        anyhow::bail!("run `make artifacts` first (needs python once, at build time)");
-    }
+    let args = Args::from_env();
+    let threads = args.flag::<usize>("threads").unwrap_or_else(host_threads);
+    let iters = args.flag::<usize>("iters").unwrap_or(25);
+    args.finish().map_err(anyhow::Error::msg)?;
 
-    // Layer check 1: the artifact manifest (L1+L2 output).
-    let manifest = ddopt::runtime::Manifest::load(artifact_dir)?;
-    println!(
-        "[L1/L2] {} AOT artifacts, buckets {:?}",
-        manifest.len(),
-        manifest.buckets()
-    );
-
-    // A 3x2 doubly-partitioned SVM problem.
+    // A 3x2 doubly-partitioned SVM problem, sized so the per-partition
+    // tasks are heavy enough for host-level parallelism to show.
     let (p, q) = (3, 2);
-    let ds = SyntheticDense::paper_part1(p, q, 120, 100, 0.1, 2026).build();
+    let ds = SyntheticDense::paper_part1(p, q, 400, 260, 0.1, 2026).build();
     let part = Partitioned::split(&ds, Grid::new(p, q));
     let lambda = 0.3f32;
     let fstar = reference_optimum(&ds, Loss::Hinge, lambda, 1e-8).fstar;
     println!(
-        "[data ] {} = {} x {}, grid {p}x{q}, lambda {lambda}, f* = {fstar:.6}",
+        "[data ] {} = {} x {}, grid {p}x{q}, lambda {lambda}, f* = {fstar:.6}, threads = {threads}",
         ds.name,
         ds.n(),
         ds.m()
     );
 
-    // Layer check 2: the PJRT runtime executes the artifacts.
-    let xla = Backend::xla(artifact_dir)?;
     let native = Backend::native();
-
-    println!("\n[L3   ] running all methods on the XLA backend:");
+    println!("\n[L3   ] all methods on the native backend ({threads} worker threads):");
     println!(
-        "{:<12} {:>8} {:>12} {:>12} {:>10}",
-        "method", "iters", "final gap", "sim time", "comm KiB"
+        "{:<12} {:>8} {:>12} {:>12} {:>10} {:>10}",
+        "method", "iters", "final gap", "sim time", "host wall", "comm KiB"
     );
     let out = ddopt::bench_harness::common::out_dir();
     for name in ["radisa", "radisa-avg", "d3ca", "admm"] {
-        let iters = if name == "admm" { 60 } else { 25 };
-        let r = run_method(&part, &xla, name, lambda, iters, fstar)?;
+        let iters = if name == "admm" { iters + 35 } else { iters };
+        let r = run_method(
+            &part, &native, name, lambda, iters, fstar, threads, CostModel::Measured,
+        )?;
         let last = r.history.records.last().unwrap();
         println!(
-            "{:<12} {:>8} {:>12.3e} {:>12.4} {:>10.1}",
+            "{:<12} {:>8} {:>12.3e} {:>12.4} {:>10.3} {:>10.1}",
             name,
             last.iter,
             last.rel_gap,
             r.sim_time,
+            r.wall_time,
             r.comm_bytes as f64 / 1024.0
         );
         write_csv(&r.history, &out.join(format!("end_to_end_{name}.csv")))?;
     }
 
-    // Layer check 3: XLA vs native trajectories agree (same seeds).
-    let r_x = run_method(&part, &xla, "d3ca", lambda, 8, fstar)?;
-    let r_n = run_method(&part, &native, "d3ca", lambda, 8, fstar)?;
+    // Determinism check: the simulated results must not depend on the
+    // worker-thread count.  With a pinned per-task cost the simulated
+    // clock is bit-reproducible too — only host wall time may differ.
+    let fixed = CostModel::Fixed(1e-3);
+    let r_1 = run_method(&part, &native, "d3ca", lambda, 8, fstar, 1, fixed)?;
+    let r_t = run_method(&part, &native, "d3ca", lambda, 8, fstar, threads, fixed)?;
+    anyhow::ensure!(
+        r_1.w.iter().map(|v| v.to_bits()).eq(r_t.w.iter().map(|v| v.to_bits())),
+        "iterates diverged across thread counts"
+    );
+    anyhow::ensure!(
+        r_1.sim_time == r_t.sim_time,
+        "simulated clocks diverged under the fixed cost model"
+    );
+    println!(
+        "\n[check] d3ca iterates + sim clock identical at threads=1 vs threads={threads} \
+         (sim {:.4}s both; host wall {:.3}s vs {:.3}s)",
+        r_1.sim_time, r_1.wall_time, r_t.wall_time
+    );
+
+    #[cfg(feature = "xla")]
+    xla_cross_check(&part, lambda, fstar, threads)?;
+    #[cfg(not(feature = "xla"))]
+    println!("[xla  ] built without the `xla` feature — PJRT cross-check skipped");
+
+    println!("\nend_to_end OK.");
+    Ok(())
+}
+
+/// Layer checks 2-3: the PJRT runtime executes the AOT artifacts and its
+/// trajectory matches the native backend on the same seeds.
+#[cfg(feature = "xla")]
+fn xla_cross_check(
+    part: &Partitioned,
+    lambda: f32,
+    fstar: f64,
+    threads: usize,
+) -> anyhow::Result<()> {
+    let artifact_dir = std::path::Path::new("artifacts");
+    if !artifact_dir.join("manifest.json").exists() {
+        println!("[xla  ] no artifacts/ — run `make artifacts` for the PJRT cross-check");
+        return Ok(());
+    }
+    let manifest = ddopt::runtime::Manifest::load(artifact_dir)?;
+    println!(
+        "\n[L1/L2] {} AOT artifacts, buckets {:?}",
+        manifest.len(),
+        manifest.buckets()
+    );
+    let xla = Backend::xla(artifact_dir)?;
+    let native = Backend::native();
+    let r_x = run_method(part, &xla, "d3ca", lambda, 8, fstar, threads, CostModel::Measured)?;
+    let r_n = run_method(part, &native, "d3ca", lambda, 8, fstar, threads, CostModel::Measured)?;
     let mut max_dev = 0.0f64;
     for (a, b) in r_x.history.records.iter().zip(&r_n.history.records) {
         max_dev = max_dev.max((a.primal - b.primal).abs() / (1.0 + a.primal.abs()));
     }
-    println!("\n[check] max XLA-vs-native primal deviation over 8 iterations: {max_dev:.2e}");
+    println!("[check] max XLA-vs-native primal deviation over 8 iterations: {max_dev:.2e}");
     anyhow::ensure!(max_dev < 5e-3, "backends diverged");
-
     if let Backend::Xla(engine) = &xla {
         let st = engine.stats();
         println!(
@@ -123,6 +189,5 @@ fn main() -> anyhow::Result<()> {
             st.executions, st.execute_secs, st.compiles, st.compile_secs
         );
     }
-    println!("\nend_to_end OK — all three layers composed.");
     Ok(())
 }

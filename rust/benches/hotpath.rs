@@ -1,10 +1,12 @@
 //! `cargo bench --bench hotpath` — micro-benchmarks of the per-layer hot
 //! paths with timing statistics (the in-repo criterion stand-in):
-//! native kernels at three sizes, XLA op latencies, and one end-to-end
-//! iteration of each method.
+//! native kernels at three sizes, superstep-engine throughput at
+//! threads ∈ {1, 2, 4}, XLA op latencies, and one end-to-end iteration
+//! of each method.
 
 use ddopt::bench_harness::common::{self, Cell, Method};
 use ddopt::bench_harness::perf;
+use ddopt::cluster::{ClusterConfig, SimCluster, StepPlan};
 use ddopt::data::SyntheticDense;
 use ddopt::util::stats::Summary;
 use ddopt::util::timer::Timer;
@@ -34,6 +36,47 @@ fn main() {
     for (n, m) in [(128usize, 128usize), (512, 512), (2048, 1024)] {
         for (metric, v) in perf::native_kernels(n, m, 5) {
             println!("{n}x{m} {metric:<28} {v:>12.3}");
+        }
+    }
+
+    // Superstep throughput: the same 4x2 grid of margins tasks pushed
+    // through SimCluster::grid_step at increasing worker-thread counts.
+    // Task *results* are thread-invariant; host wall time is what drops.
+    // (The sim column uses measured task times, so it varies run to run.)
+    println!("\n== superstep engine (grid_step, 4x2 margins tasks, 768x768 blocks) ==");
+    {
+        let (pp, qq) = (4usize, 2usize);
+        let ds = SyntheticDense::paper_part1(pp, qq, 768, 768, 0.1, 11).build();
+        let part = common::partition(&ds, pp, qq);
+        let backend = ddopt::runtime::Backend::native();
+        let staged = backend.stage(&part).unwrap();
+        let staged = &staged; // tasks capture the shared reference
+        let mut rng = ddopt::util::rng::Xoshiro::new(1);
+        let w: Vec<f32> = (0..ds.m()).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let reps = 20;
+        let mut base = None;
+        for threads in [1usize, 2, 4] {
+            let mut cluster =
+                SimCluster::new(ClusterConfig::with_cores(pp * qq).with_threads(threads));
+            let t = Timer::start();
+            for _ in 0..reps {
+                let mut plan = StepPlan::with_capacity(pp * qq);
+                for p in 0..pp {
+                    for q in 0..qq {
+                        let (c0, c1) = part.col_ranges[q];
+                        let w_q = &w[c0..c1];
+                        plan.task(move || staged.margins(p, q, w_q));
+                    }
+                }
+                let _ = cluster.grid_step(plan).unwrap();
+            }
+            let per_step = t.secs() / reps as f64;
+            let speedup = *base.get_or_insert(per_step) / per_step;
+            println!(
+                "threads={threads}  {:>8.3} ms/superstep  speedup x{speedup:.2}  (sim {:>8.4}s)",
+                per_step * 1e3,
+                cluster.clock.now()
+            );
         }
     }
 

@@ -33,7 +33,9 @@ fn run_one(
     let t = crate::util::timer::Timer::start();
     let r = Driver::new(part, backend)?
         .iterations(iters)
-        .cluster(ClusterConfig::with_cores(part.grid.k()))
+        // threads=1: Measured-cost sim times stay contention-free and
+        // comparable across ablation cells (see bench_harness::common)
+        .cluster(ClusterConfig::with_cores(part.grid.k()).with_threads(1))
         .fstar(fstar)
         .run(opt)?;
     Ok((r.history.best_gap(), r.sim_time, t.secs()))

@@ -53,7 +53,15 @@ pub struct Cell {
     pub lambda: f32,
     pub gamma: f32,
     pub iterations: usize,
+    /// Simulated executor slots (the cost model's K).
     pub cores: usize,
+    /// Host worker threads driving the superstep engine.  Defaults to 1:
+    /// the figure harnesses charge `CostModel::Measured` per-task times
+    /// to the simulated clock, and sequential measurement keeps those
+    /// times free of sibling-task cache/bandwidth contention.  Raise it
+    /// (or switch to `CostModel::Fixed`) when host wall time is what is
+    /// being studied — e.g. the hotpath superstep bench.
+    pub threads: usize,
     pub seed: u64,
     pub target_gap: Option<f64>,
     pub batch: usize,
@@ -67,6 +75,7 @@ impl Default for Cell {
             gamma: 0.0,
             iterations: 30,
             cores: 8,
+            threads: 1,
             seed: 1,
             target_gap: None,
             batch: 0,
@@ -109,7 +118,7 @@ pub fn run_cell(
     let mut opt = make_optimizer(cell);
     let mut driver = Driver::new(part, backend)?
         .iterations(cell.iterations)
-        .cluster(ClusterConfig::with_cores(cell.cores))
+        .cluster(ClusterConfig::with_cores(cell.cores).with_threads(cell.threads))
         .fstar(fstar);
     if let Some(g) = cell.target_gap {
         driver = driver.target_gap(g);

@@ -107,7 +107,8 @@ pub fn coordinator_overhead() -> Result<Vec<(String, f64)>> {
                 Driver::new(&part, &backend)?
                     .iterations(10)
                     .eval_every(usize::MAX) // exclude evaluation cost
-                    .cluster(ClusterConfig::with_cores(8))
+                    // threads=1 so sim compute ≈ host kernel time
+                    .cluster(ClusterConfig::with_cores(8).with_threads(1))
                     .run(&mut opt)?
             }
             _ => {
@@ -115,22 +116,26 @@ pub fn coordinator_overhead() -> Result<Vec<(String, f64)>> {
                 Driver::new(&part, &backend)?
                     .iterations(10)
                     .eval_every(usize::MAX)
-                    .cluster(ClusterConfig::with_cores(8))
+                    .cluster(ClusterConfig::with_cores(8).with_threads(1))
                     .run(&mut opt)?
             }
         };
         let wall = t.secs();
-        // kernel time = what the sim clock counted as compute (sequential
-        // sum ≈ host time spent in kernels since threads=1)
-        let kernel = r.sim_time - r.history.records.last().map(|_| 0.0).unwrap_or(0.0);
-        let _ = kernel;
         out.push((format!("{method} wall s/10it"), wall));
         out.push((format!("{method} overhead frac"), (wall - r.sim_time).max(0.0) / wall));
     }
     Ok(out)
 }
 
+/// XLA engine op timings at a bucket (empty when the crate is built
+/// without the `xla` feature or the artifacts are absent).
+#[cfg(not(feature = "xla"))]
+pub fn xla_op_times(_bucket: (usize, usize)) -> Result<Vec<(String, f64)>> {
+    Ok(vec![])
+}
+
 /// XLA engine op timings at a bucket.
+#[cfg(feature = "xla")]
 pub fn xla_op_times(bucket: (usize, usize)) -> Result<Vec<(String, f64)>> {
     let dir = std::path::Path::new("artifacts");
     if !dir.join("manifest.json").exists() {

@@ -1,40 +1,60 @@
-//! The simulated cluster substrate.
+//! The simulated cluster substrate and the superstep execution engine.
 //!
-//! The paper's testbed is a 4-node × 8-core Spark/Hadoop cluster; this host
-//! has one core, so the cluster is *simulated* (DESIGN.md §Substitutions):
+//! The paper's testbed is a 4-node × 8-core Spark/Hadoop cluster; here
+//! the *cost model* is simulated while the *work* is real
+//! (DESIGN.md §Substitutions):
 //!
-//! * [`pool::WorkerPool`] — real OS worker threads + channels execute the
-//!   per-partition tasks of each superstep (parallel when the host allows,
-//!   sequential-deterministic otherwise).
+//! * [`superstep::StepPlan`] + [`SimCluster::grid_step`] — the typed
+//!   superstep API every coordinator programs against: one independent
+//!   task per partition, executed for real on the worker pool, combined
+//!   in task order.
+//! * [`pool::WorkerPool`] — scoped OS worker threads execute the
+//!   per-partition tasks of each superstep (parallel when
+//!   `threads > 1`, inline otherwise — identical results either way).
 //! * [`SimClock`] — the simulated parallel clock: each superstep
-//!   contributes the *makespan* of its measured per-task compute times
-//!   scheduled LPT onto `cores` executor slots, not the host wall time.
+//!   contributes the *makespan* of its per-task compute costs scheduled
+//!   LPT onto `cores` executor slots, not the host wall time.
 //! * [`comm`] — `tree_aggregate`, Spark's reduction pattern: log₂-depth
-//!   binary combining with a latency + bandwidth cost model.
+//!   binary combining with a latency + bandwidth cost model, plus
+//!   data-free variants ([`SimCluster::reduce_cost`],
+//!   [`SimCluster::broadcast_cost`]) for collectives whose payload never
+//!   materializes in the simulation.
 //!
 //! Every reported "time" in the scaling experiments (Figs. 5-6) is
 //! simulated cluster time = Σ superstep makespans + modeled communication;
-//! EXPERIMENTS.md reports both sim and host wall time.
+//! host wall time is reported separately and is what `threads` improves.
 
 pub mod comm;
 pub mod pool;
 pub mod simtime;
+pub mod superstep;
 
 pub use comm::{tree_aggregate, tree_aggregate_f32, CommStats};
 pub use pool::WorkerPool;
 pub use simtime::{lpt_makespan, SimClock};
+pub use superstep::{CostModel, PlanTask, StepPlan};
+
+use anyhow::Result;
+
+/// Number of hardware threads on this host (the `threads` default).
+pub fn host_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 /// Cluster topology and cost-model parameters.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     /// Simulated executor slots (the paper's K = up to 28 cores).
     pub cores: usize,
-    /// Real worker threads used to execute tasks on this host.
+    /// Real worker threads used to execute tasks on this host
+    /// (defaults to the host's hardware parallelism).
     pub threads: usize,
     /// One-way message latency per tree hop (seconds).
     pub latency: f64,
     /// Link bandwidth (bytes/second).
     pub bandwidth: f64,
+    /// How per-task compute cost is charged to the simulated clock.
+    pub cost: CostModel,
 }
 
 impl Default for ClusterConfig {
@@ -43,9 +63,10 @@ impl Default for ClusterConfig {
         // of the paper's era: 200 µs hop latency, ~1 Gb/s effective.
         ClusterConfig {
             cores: 8,
-            threads: 1,
+            threads: host_threads(),
             latency: 200e-6,
             bandwidth: 125e6,
+            cost: CostModel::Measured,
         }
     }
 }
@@ -54,6 +75,11 @@ impl ClusterConfig {
     pub fn with_cores(cores: usize) -> Self {
         ClusterConfig { cores, ..Default::default() }
     }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
 }
 
 /// A simulated cluster: task execution + clock + communication accounting.
@@ -61,26 +87,61 @@ pub struct SimCluster {
     pub config: ClusterConfig,
     pub clock: SimClock,
     pool: WorkerPool,
+    born: std::time::Instant,
 }
 
 impl SimCluster {
     pub fn new(config: ClusterConfig) -> Self {
         let pool = WorkerPool::new(config.threads);
-        SimCluster { config, clock: SimClock::new(), pool }
+        SimCluster { config, clock: SimClock::new(), pool, born: std::time::Instant::now() }
     }
 
-    /// Execute one superstep of independent per-partition tasks; returns
-    /// results in task order.  Advances the simulated clock by the LPT
-    /// makespan of the measured per-task times over `cores` slots.
-    pub fn superstep<T: Send + 'static>(
-        &mut self,
-        tasks: Vec<Box<dyn FnOnce() -> T + Send>>,
-    ) -> Vec<T> {
-        let timed = self.pool.run(tasks);
-        let durations: Vec<f64> = timed.iter().map(|(_, d)| *d).collect();
+    /// Host worker threads actually in use.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Host wall-clock seconds since this cluster was created — the
+    /// *real* elapsed time `threads` improves, as opposed to the
+    /// simulated [`SimClock`] time the cost model produces.
+    pub fn host_secs(&self) -> f64 {
+        self.born.elapsed().as_secs_f64()
+    }
+
+    /// Execute one superstep plan of independent per-partition tasks on
+    /// the worker pool; returns results in task order (never completion
+    /// order, so downstream combining is bit-deterministic).
+    ///
+    /// Advances the simulated clock by the LPT makespan of the per-task
+    /// costs over `cores` slots.  The first task error aborts the step.
+    pub fn grid_step<'env, V: Send>(&mut self, plan: StepPlan<'env, V>) -> Result<Vec<V>> {
+        if plan.is_empty() {
+            return Ok(Vec::new());
+        }
+        let timed = self.pool.run(plan.into_tasks());
+        let mut durations = Vec::with_capacity(timed.len());
+        let mut out = Vec::with_capacity(timed.len());
+        let mut first_err = None;
+        for (result, measured) in timed {
+            durations.push(match self.config.cost {
+                CostModel::Measured => measured,
+                CostModel::Fixed(s) => s,
+            });
+            match result {
+                Ok(v) => out.push(v),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
         let makespan = lpt_makespan(&durations, self.config.cores);
         self.clock.add_compute(makespan);
-        timed.into_iter().map(|(v, _)| v).collect()
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
     }
 
     /// Aggregate per-partition f32 vectors by summation over a binary tree,
@@ -89,6 +150,73 @@ impl SimCluster {
         let stats = tree_aggregate_f32(&mut parts, self.config.latency, self.config.bandwidth);
         self.clock.add_comm(stats);
         parts.into_iter().next().unwrap_or_default()
+    }
+
+    /// Reduce grid results over the feature axis: `parts` holds one vector
+    /// per `(p, q)` cell in row-major order (`parts[p*qq + q]`); returns
+    /// one tree-aggregated vector per observation partition `p`.
+    ///
+    /// This is the collective behind D3CA's dual averaging and RADiSA's
+    /// margin assembly (`m[p] = Σ_q x[p,q] w[·,q]`).
+    pub fn reduce_over_q(
+        &mut self,
+        parts: Vec<Vec<f32>>,
+        pp: usize,
+        qq: usize,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(parts.len(), pp * qq, "grid results must cover the P×Q grid");
+        let mut it = parts.into_iter();
+        (0..pp)
+            .map(|_| {
+                let group: Vec<Vec<f32>> = it.by_ref().take(qq).collect();
+                self.reduce_sum(group)
+            })
+            .collect()
+    }
+
+    /// Reduce grid results over the observation axis: `parts` holds one
+    /// vector per `(p, q)` cell in row-major order (`parts[p*qq + q]`);
+    /// returns one tree-aggregated vector per feature partition `q`.
+    ///
+    /// This is the collective behind D3CA's primal recovery
+    /// (`w[·,q] = (λn)⁻¹ Σ_p x[p,q]ᵀ α[p,·]`) and RADiSA's full gradient.
+    pub fn reduce_over_p(
+        &mut self,
+        parts: Vec<Vec<f32>>,
+        pp: usize,
+        qq: usize,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(parts.len(), pp * qq, "grid results must cover the P×Q grid");
+        let mut parts: Vec<Option<Vec<f32>>> = parts.into_iter().map(Some).collect();
+        (0..qq)
+            .map(|q| {
+                let group: Vec<Vec<f32>> = (0..pp)
+                    .map(|p| parts[p * qq + q].take().expect("cell consumed once"))
+                    .collect();
+                self.reduce_sum(group)
+            })
+            .collect()
+    }
+
+    /// Charge the cost of tree-aggregating `leaves` equal payloads of
+    /// `bytes_per_leaf` bytes *without* moving any data — for collectives
+    /// whose payload is implicit in the shared-memory simulation.  Charges
+    /// exactly what [`SimCluster::reduce_sum`] would for equal-length
+    /// vectors (same time, bytes and message count).
+    pub fn reduce_cost(&mut self, leaves: usize, bytes_per_leaf: usize) {
+        let mut stats = CommStats::default();
+        let mut k = leaves;
+        while k > 1 {
+            let pairs = k / 2;
+            let level_bytes = pairs * bytes_per_leaf;
+            // bit-identical to tree_aggregate's per-level charge
+            stats.time += self.config.latency
+                + level_bytes as f64 / self.config.bandwidth / (pairs.max(1) as f64);
+            stats.bytes += level_bytes;
+            stats.messages += pairs;
+            k -= pairs;
+        }
+        self.clock.add_comm(stats);
     }
 
     /// Charge a broadcast of `bytes` from the leader to `fanout` nodes
@@ -104,15 +232,76 @@ impl SimCluster {
 mod tests {
     use super::*;
 
+    fn cfg(threads: usize, cores: usize) -> ClusterConfig {
+        ClusterConfig { threads, cores, ..Default::default() }
+    }
+
     #[test]
-    fn superstep_returns_in_order_and_advances_clock() {
-        let mut c = SimCluster::new(ClusterConfig { threads: 2, cores: 4, ..Default::default() });
-        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8usize)
-            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
-            .collect();
-        let out = c.superstep(tasks);
+    fn grid_step_returns_in_order_and_advances_clock() {
+        let mut c = SimCluster::new(cfg(2, 4));
+        let mut plan: StepPlan<'_, usize> = StepPlan::with_capacity(8);
+        for i in 0..8usize {
+            plan.task(move || Ok(i * i));
+        }
+        let out = c.grid_step(plan).unwrap();
         assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
         assert!(c.clock.compute_time() > 0.0);
+        assert_eq!(c.clock.supersteps(), 1);
+    }
+
+    #[test]
+    fn grid_step_tasks_borrow_shared_state() {
+        let weights: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut c = SimCluster::new(cfg(4, 4));
+        let mut plan: StepPlan<'_, f32> = StepPlan::new();
+        for k in 0..8 {
+            let w = &weights;
+            plan.task(move || Ok(w[k * 8..(k + 1) * 8].iter().sum()));
+        }
+        let out = c.grid_step(plan).unwrap();
+        let total: f32 = out.iter().sum();
+        assert_eq!(total, weights.iter().sum());
+    }
+
+    #[test]
+    fn grid_step_propagates_task_errors() {
+        let mut c = SimCluster::new(cfg(1, 4));
+        let mut plan: StepPlan<'_, usize> = StepPlan::new();
+        plan.task(|| Ok(1));
+        plan.task(|| anyhow::bail!("partition exploded"));
+        plan.task(|| Ok(3));
+        let err = c.grid_step(plan).unwrap_err();
+        assert!(err.to_string().contains("partition exploded"));
+    }
+
+    #[test]
+    fn empty_plan_is_free() {
+        let mut c = SimCluster::new(cfg(2, 4));
+        let plan: StepPlan<'_, usize> = StepPlan::new();
+        let out = c.grid_step(plan).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(c.clock.supersteps(), 0);
+        assert_eq!(c.clock.now(), 0.0);
+    }
+
+    #[test]
+    fn fixed_cost_model_is_thread_invariant() {
+        let run = |threads: usize| -> f64 {
+            let mut config = cfg(threads, 4);
+            config.cost = CostModel::Fixed(1e-3);
+            let mut c = SimCluster::new(config);
+            let mut plan: StepPlan<'_, u64> = StepPlan::new();
+            for i in 0..9u64 {
+                plan.task(move || Ok(i.wrapping_mul(0x9E3779B9)));
+            }
+            let _ = c.grid_step(plan).unwrap();
+            c.clock.now()
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        assert_eq!(t1, t4);
+        // 9 tasks of 1 ms over 4 slots: LPT packs 3 per slot
+        assert!((t1 - 3e-3).abs() < 1e-12);
     }
 
     #[test]
@@ -123,6 +312,51 @@ mod tests {
         assert_eq!(s, vec![111.0, 222.0]);
         assert!(c.clock.comm_time() > 0.0);
         assert!(c.clock.comm_bytes() > 0);
+    }
+
+    #[test]
+    fn reduce_over_q_groups_rows() {
+        let mut c = SimCluster::new(ClusterConfig::default());
+        // 2x3 grid: row p contributes [p+1] from each of 3 cells
+        let parts: Vec<Vec<f32>> = (0..2)
+            .flat_map(|p| (0..3).map(move |_| vec![(p + 1) as f32]))
+            .collect();
+        let rows = c.reduce_over_q(parts, 2, 3);
+        assert_eq!(rows, vec![vec![3.0], vec![6.0]]);
+    }
+
+    #[test]
+    fn reduce_over_p_groups_columns() {
+        let mut c = SimCluster::new(ClusterConfig::default());
+        // 3x2 grid row-major: cell (p,q) holds [10*p + q]
+        let parts: Vec<Vec<f32>> = (0..3)
+            .flat_map(|p| (0..2).map(move |q| vec![(10 * p + q) as f32]))
+            .collect();
+        let cols = c.reduce_over_p(parts, 3, 2);
+        assert_eq!(cols, vec![vec![30.0], vec![33.0]]);
+    }
+
+    #[test]
+    fn reduce_cost_matches_real_reduce() {
+        let dim = 37usize;
+        for leaves in [2usize, 3, 5, 6, 8, 13, 16] {
+            let mut real = SimCluster::new(ClusterConfig::default());
+            let _ = real.reduce_sum(vec![vec![0.0f32; dim]; leaves]);
+            let mut pure = SimCluster::new(ClusterConfig::default());
+            pure.reduce_cost(leaves, dim * std::mem::size_of::<f32>());
+            assert_eq!(real.clock.comm_time(), pure.clock.comm_time(), "leaves={leaves}");
+            assert_eq!(real.clock.comm_bytes(), pure.clock.comm_bytes(), "leaves={leaves}");
+            assert_eq!(real.clock.messages(), pure.clock.messages(), "leaves={leaves}");
+        }
+    }
+
+    #[test]
+    fn reduce_cost_single_leaf_is_free() {
+        let mut c = SimCluster::new(ClusterConfig::default());
+        c.reduce_cost(1, 1024);
+        c.reduce_cost(0, 1024);
+        assert_eq!(c.clock.comm_time(), 0.0);
+        assert_eq!(c.clock.comm_bytes(), 0);
     }
 
     #[test]

@@ -1,50 +1,33 @@
 //! Worker-thread pool: the "nodes" of the simulated cluster.
 //!
-//! `threads = 1` executes tasks inline on the caller thread (fully
-//! deterministic, the default on this single-core host); `threads > 1`
-//! spawns long-lived workers fed over channels.  Either way each task's
-//! compute time is measured individually so the simulated clock can
-//! schedule them onto the configured executor slots.
+//! Superstep tasks borrow the staged dataset and the coordinator's
+//! current iterate, so the pool executes them on *scoped* threads
+//! (`std::thread::scope`) instead of long-lived channel workers — scoped
+//! spawns are the only safe way to run non-`'static` closures in
+//! parallel without cloning the training data into every task.
+//!
+//! `threads = 1` (or a single task) executes inline on the caller thread;
+//! `threads > 1` pulls tasks from a shared queue onto up to `threads`
+//! scoped workers.  Either way each task's compute time is measured
+//! individually so the simulated clock can schedule the superstep onto
+//! the configured executor slots, and results are returned in task order
+//! so downstream combining is deterministic regardless of scheduling.
+//!
+//! Under `--features xla` the task type is not `Send` (PJRT literals are
+//! thread-confined) and every superstep runs inline — see
+//! [`super::superstep::PlanTask`].
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use super::superstep::PlanTask;
 use std::time::Instant;
 
-type Job = Box<dyn FnOnce() + Send>;
-
-/// A fixed pool of worker threads (possibly zero).
+/// A fixed-width pool of scoped worker threads.
 pub struct WorkerPool {
     threads: usize,
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl WorkerPool {
     pub fn new(threads: usize) -> WorkerPool {
-        if threads <= 1 {
-            return WorkerPool { threads: 1, tx: None, handles: Vec::new() };
-        }
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..threads)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                std::thread::Builder::new()
-                    .name(format!("ddopt-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // sender dropped: shut down
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
-        WorkerPool { threads, tx: Some(tx), handles }
+        WorkerPool { threads: threads.max(1) }
     }
 
     pub fn threads(&self) -> usize {
@@ -52,71 +35,84 @@ impl WorkerPool {
     }
 
     /// Run all tasks; returns `(result, seconds)` per task, in task order.
-    pub fn run<T: Send + 'static>(
-        &self,
-        tasks: Vec<Box<dyn FnOnce() -> T + Send>>,
-    ) -> Vec<(T, f64)> {
-        let n = tasks.len();
-        if self.tx.is_none() || n <= 1 {
-            // inline execution
-            return tasks
-                .into_iter()
-                .map(|t| {
-                    let t0 = Instant::now();
-                    let v = t();
-                    (v, t0.elapsed().as_secs_f64())
-                })
-                .collect();
+    pub fn run<'env, T: Send>(&self, tasks: Vec<PlanTask<'env, T>>) -> Vec<(T, f64)> {
+        #[cfg(not(feature = "xla"))]
+        {
+            let workers = self.threads.min(tasks.len());
+            if workers > 1 {
+                return run_parallel(tasks, workers);
+            }
         }
-        let (rtx, rrx) = mpsc::channel::<(usize, T, f64)>();
-        for (i, task) in tasks.into_iter().enumerate() {
-            let rtx = rtx.clone();
-            let job: Job = Box::new(move || {
+        tasks
+            .into_iter()
+            .map(|t| {
                 let t0 = Instant::now();
-                let v = task();
-                let dt = t0.elapsed().as_secs_f64();
-                let _ = rtx.send((i, v, dt));
-            });
-            self.tx.as_ref().unwrap().send(job).expect("pool send");
-        }
-        drop(rtx);
-        let mut out: Vec<Option<(T, f64)>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (i, v, dt) = rrx.recv().expect("pool recv");
-            out[i] = Some((v, dt));
-        }
-        out.into_iter().map(|o| o.unwrap()).collect()
+                let v = t();
+                (v, t0.elapsed().as_secs_f64())
+            })
+            .collect()
     }
 }
 
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        self.tx.take(); // close the channel; workers exit their loop
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+/// Scoped fan-out: `workers` threads drain a shared FIFO of indexed
+/// tasks; each result lands in its task's slot.
+#[cfg(not(feature = "xla"))]
+fn run_parallel<'env, T: Send>(
+    tasks: Vec<PlanTask<'env, T>>,
+    workers: usize,
+) -> Vec<(T, f64)> {
+    use std::collections::VecDeque;
+    use std::sync::Mutex;
+
+    let n = tasks.len();
+    let queue: Mutex<VecDeque<(usize, PlanTask<'env, T>)>> =
+        Mutex::new(tasks.into_iter().enumerate().collect());
+    let slots: Vec<Mutex<Option<(T, f64)>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let job = queue.lock().unwrap().pop_front();
+                let Some((i, task)) = job else { break };
+                let t0 = Instant::now();
+                let v = task();
+                let dt = t0.elapsed().as_secs_f64();
+                *slots[i].lock().unwrap() = Some((v, dt));
+            });
         }
-    }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker completed task"))
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn boxed<T, F>(fs: Vec<F>) -> Vec<PlanTask<'static, T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        fs.into_iter()
+            .map(|f| Box::new(f) as PlanTask<'static, T>)
+            .collect()
+    }
+
     #[test]
     fn inline_pool_runs_in_order() {
         let pool = WorkerPool::new(1);
-        let tasks: Vec<Box<dyn FnOnce() -> i32 + Send>> =
-            (0..5).map(|i| Box::new(move || i) as _).collect();
-        let out = pool.run(tasks);
+        let out = pool.run(boxed((0..5).map(|i| move || i).collect::<Vec<_>>()));
         assert_eq!(out.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
     }
 
     #[test]
     fn threaded_pool_preserves_order_and_results() {
         let pool = WorkerPool::new(3);
-        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..32)
+        let tasks = (0..32usize)
             .map(|i| {
-                Box::new(move || {
+                move || {
                     // vary work so completion order scrambles
                     let mut acc = 0usize;
                     for k in 0..(i % 7) * 1000 {
@@ -124,10 +120,10 @@ mod tests {
                     }
                     let _ = acc;
                     i * 2
-                }) as _
+                }
             })
-            .collect();
-        let out = pool.run(tasks);
+            .collect::<Vec<_>>();
+        let out = pool.run(boxed(tasks));
         for (i, (v, d)) in out.iter().enumerate() {
             assert_eq!(*v, i * 2);
             assert!(*d >= 0.0);
@@ -135,23 +131,35 @@ mod tests {
     }
 
     #[test]
+    fn tasks_may_borrow_caller_state() {
+        let data: Vec<usize> = (0..16).collect();
+        let pool = WorkerPool::new(4);
+        let tasks: Vec<PlanTask<'_, usize>> = data
+            .iter()
+            .map(|v| Box::new(move || *v + 1) as PlanTask<'_, usize>)
+            .collect();
+        let out = pool.run(tasks);
+        for (i, (v, _)) in out.iter().enumerate() {
+            assert_eq!(*v, data[i] + 1);
+        }
+    }
+
+    #[test]
     fn pool_is_reusable() {
         let pool = WorkerPool::new(2);
-        for round in 0..3 {
-            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
-                (0..4).map(|i| Box::new(move || i + round) as _).collect();
-            let out = pool.run(tasks);
+        for round in 0..3usize {
+            let tasks = (0..4usize).map(|i| move || i + round).collect::<Vec<_>>();
+            let out = pool.run(boxed(tasks));
             assert_eq!(out.len(), 4);
             assert_eq!(out[0].0, round);
         }
     }
 
     #[test]
-    fn drop_joins_cleanly() {
-        let pool = WorkerPool::new(4);
-        let tasks: Vec<Box<dyn FnOnce() -> () + Send>> =
-            (0..8).map(|_| Box::new(|| ()) as _).collect();
-        let _ = pool.run(tasks);
-        drop(pool); // must not hang
+    fn zero_threads_clamps_to_inline() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let out = pool.run(boxed(vec![|| 42]));
+        assert_eq!(out[0].0, 42);
     }
 }

@@ -1,0 +1,129 @@
+//! The superstep plan — the typed unit of work the coordinators hand to
+//! [`super::SimCluster::grid_step`].
+//!
+//! A plan is an ordered list of independent per-partition tasks (one per
+//! `(p, q)` cell, usually).  Tasks borrow the staged dataset and the
+//! coordinator's current iterate (`'env` closures — no cloning of the
+//! training data), return `Result<V>`, and are combined strictly in task
+//! order afterwards, which is what keeps runs bit-reproducible regardless
+//! of how many worker threads execute them.
+//!
+//! Thread-safety seam: with the default (native) feature set, tasks are
+//! `Send` and the pool runs them on scoped worker threads.  The `xla`
+//! build drops the `Send` bound — PJRT literals and the engine's
+//! executable cache are thread-confined — and every plan degrades to
+//! inline execution on the driver thread (same results, same simulated
+//! clock, no host-level parallelism).
+
+use anyhow::Result;
+
+/// A boxed superstep task.  `Send` on the default feature set (parallel
+/// native execution); `!Send` under `--features xla` (inline fallback).
+#[cfg(not(feature = "xla"))]
+pub type PlanTask<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
+#[cfg(feature = "xla")]
+pub type PlanTask<'env, T> = Box<dyn FnOnce() -> T + 'env>;
+
+/// How a task's simulated compute cost is determined.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum CostModel {
+    /// Charge each task its measured host compute time (default) — the
+    /// fidelity mode behind the paper-figure scaling curves.
+    #[default]
+    Measured,
+    /// Charge each task a fixed synthetic duration in seconds — makes the
+    /// simulated clock bit-identical across `threads` settings and hosts
+    /// (used by the determinism tests and reproducible CI runs).
+    Fixed(f64),
+}
+
+/// One bulk-synchronous superstep: independent fallible tasks whose
+/// results come back in task order.
+pub struct StepPlan<'env, V> {
+    tasks: Vec<PlanTask<'env, Result<V>>>,
+}
+
+impl<'env, V: Send> StepPlan<'env, V> {
+    pub fn new() -> Self {
+        StepPlan { tasks: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        StepPlan { tasks: Vec::with_capacity(n) }
+    }
+
+    /// Append one per-partition task.
+    #[cfg(not(feature = "xla"))]
+    pub fn task<F>(&mut self, f: F)
+    where
+        F: FnOnce() -> Result<V> + Send + 'env,
+    {
+        self.tasks.push(Box::new(f));
+    }
+
+    /// Append one per-partition task (inline-execution build).
+    #[cfg(feature = "xla")]
+    pub fn task<F>(&mut self, f: F)
+    where
+        F: FnOnce() -> Result<V> + 'env,
+    {
+        self.tasks.push(Box::new(f));
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub(crate) fn into_tasks(self) -> Vec<PlanTask<'env, Result<V>>> {
+        self.tasks
+    }
+}
+
+impl<'env, V: Send> Default for StepPlan<'env, V> {
+    fn default() -> Self {
+        StepPlan::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_collects_tasks_in_order() {
+        let mut plan: StepPlan<'_, usize> = StepPlan::with_capacity(4);
+        assert!(plan.is_empty());
+        for i in 0..4usize {
+            plan.task(move || Ok(i * 10));
+        }
+        assert_eq!(plan.len(), 4);
+        let out: Vec<usize> = plan
+            .into_tasks()
+            .into_iter()
+            .map(|t| t().unwrap())
+            .collect();
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn plan_tasks_may_borrow_the_environment() {
+        let data = vec![1.0f32, 2.0, 3.0];
+        let mut plan: StepPlan<'_, f32> = StepPlan::new();
+        for k in 0..3 {
+            let d = &data;
+            plan.task(move || Ok(d[k] * 2.0));
+        }
+        let out: Vec<f32> = plan.into_tasks().into_iter().map(|t| t().unwrap()).collect();
+        assert_eq!(out, vec![2.0, 4.0, 6.0]);
+        assert_eq!(data.len(), 3); // still borrowed-alive
+    }
+
+    #[test]
+    fn cost_model_default_is_measured() {
+        assert_eq!(CostModel::default(), CostModel::Measured);
+    }
+}

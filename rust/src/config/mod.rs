@@ -36,6 +36,9 @@ pub struct ExperimentConfig {
     pub batch: usize,
     /// ADMM penalty ρ (paper sets ρ = λ).
     pub rho: f32,
+    /// Cluster cost model + execution: JSON keys `cores` (simulated
+    /// executor slots) and `threads` (host worker threads for the
+    /// superstep engine; defaults to the host's hardware parallelism).
     pub cluster: ClusterConfig,
     pub backend: String, // "native" | "xla"
 }
@@ -174,13 +177,15 @@ mod tests {
           "name": "fig3-cell", "p": 4, "q": 2, "loss": "hinge",
           "lambda": 1e-4, "iterations": 50, "gamma": 0.05,
           "dataset": {"kind": "dense", "n_per": 2000, "m_per": 3000},
-          "cores": 8, "backend": "xla"
+          "cores": 8, "threads": 3, "backend": "xla"
         }"#;
         let c = ExperimentConfig::from_json(&Json::parse(text).unwrap()).unwrap();
         assert_eq!(c.p, 4);
         assert_eq!(c.k(), 8);
         assert_eq!(c.lambda, 1e-4);
         assert_eq!(c.backend, "xla");
+        assert_eq!(c.cluster.cores, 8);
+        assert_eq!(c.cluster.threads, 3);
         assert_eq!(c.dataset, DatasetSpec::Dense { n_per: 2000, m_per: 3000 });
     }
 

@@ -20,11 +20,16 @@
 //!      s_pq ← c_pq + (v_p − Σ_q c_pq)/Q  with  c_pq = z_pq + ůz_pq;
 //!   4. scaled dual updates  ůw_pq += w_pq − w_q,  ůz_pq += z_pq − s_pq.
 //!
+//! The graph projections (one task per partition) and the hinge proxes
+//! (one task per row partition) are supersteps executed through
+//! [`SimCluster::grid_step`](crate::cluster::SimCluster::grid_step); the
+//! consensus/sharing collectives are the cluster's grouped tree reduces.
+//!
 //! Standard two-block convex ADMM ⇒ convergence to the global optimum;
 //! the integration tests verify the gap against `f*` shrinks.
 
 use super::driver::Optimizer;
-use crate::cluster::SimCluster;
+use crate::cluster::{SimCluster, StepPlan};
 use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::runtime::{FactorHandle, StagedGrid};
@@ -119,70 +124,78 @@ impl Optimizer for Admm {
             cluster.broadcast_cost(part.m_q(q) * 4, pp);
         }
 
-        // 1. graph projections (the per-iteration hot spot)
-        let mut w_loc: Vec<Vec<f32>> = vec![Vec::new(); pp * qq];
-        let mut z_loc: Vec<Vec<f32>> = vec![Vec::new(); pp * qq];
-        let mut durations = Vec::with_capacity(pp * qq);
-        for p in 0..pp {
-            for q in 0..qq {
-                let (c0, c1) = part.col_ranges[q];
-                let i = k(p, q);
-                let w_hat: Vec<f32> = self.w[c0..c1]
-                    .iter()
-                    .zip(&self.uw[i])
-                    .map(|(&a, &b)| a - b)
-                    .collect();
-                let z_hat: Vec<f32> = self.s[i]
-                    .iter()
-                    .zip(&self.uz[i])
-                    .map(|(&a, &b)| a - b)
-                    .collect();
-                let timer = crate::util::timer::Timer::start();
-                let (wp, zp) = staged.admm_project(p, q, &self.factors[i], &w_hat, &z_hat)?;
-                durations.push(timer.secs());
-                w_loc[i] = wp;
-                z_loc[i] = zp;
+        // 1. graph projections (the per-iteration hot spot) — one
+        // superstep over the grid, results in [p*Q+q] order
+        let projections = {
+            let (w, s, uw, uz, factors) =
+                (&self.w, &self.s, &self.uw, &self.uz, &self.factors);
+            let mut plan = StepPlan::with_capacity(pp * qq);
+            for p in 0..pp {
+                for q in 0..qq {
+                    let (c0, c1) = part.col_ranges[q];
+                    let i = k(p, q);
+                    let w_hat: Vec<f32> = w[c0..c1]
+                        .iter()
+                        .zip(&uw[i])
+                        .map(|(&a, &b)| a - b)
+                        .collect();
+                    let z_hat: Vec<f32> = s[i]
+                        .iter()
+                        .zip(&uz[i])
+                        .map(|(&a, &b)| a - b)
+                        .collect();
+                    let factor = &factors[i];
+                    plan.task(move || staged.admm_project(p, q, factor, &w_hat, &z_hat));
+                }
             }
-        }
-        cluster
-            .clock
-            .add_compute(crate::cluster::lpt_makespan(&durations, cluster.config.cores));
+            cluster.grid_step(plan)?
+        };
+        let (w_loc, z_loc): (Vec<Vec<f32>>, Vec<Vec<f32>>) =
+            projections.into_iter().unzip();
 
         // 2. feature consensus + ridge prox (tree reduce over p per column)
-        for q in 0..qq {
+        let consensus_parts: Vec<Vec<f32>> = (0..pp * qq)
+            .map(|i| {
+                w_loc[i]
+                    .iter()
+                    .zip(&self.uw[i])
+                    .map(|(&a, &b)| a + b)
+                    .collect()
+            })
+            .collect();
+        let sums = cluster.reduce_over_p(consensus_parts, pp, qq);
+        let scale = rho / (lam + rho * pp as f32);
+        for (q, sum) in sums.into_iter().enumerate() {
             let (c0, c1) = part.col_ranges[q];
-            let per_p: Vec<Vec<f32>> = (0..pp)
-                .map(|p| {
-                    let i = k(p, q);
-                    w_loc[i]
-                        .iter()
-                        .zip(&self.uw[i])
-                        .map(|(&a, &b)| a + b)
-                        .collect()
-                })
-                .collect();
-            let sum = cluster.reduce_sum(per_p);
-            let scale = rho / (lam + rho * pp as f32);
             for (wv, &sv) in self.w[c0..c1].iter_mut().zip(&sum) {
                 *wv = scale * sv;
             }
         }
 
-        // 3. response sharing + hinge prox (tree reduce over q per row)
+        // 3. response sharing (tree reduce over q per row) + hinge prox —
+        // the prox is a per-row-partition task, so it is its own superstep
+        let share_parts: Vec<Vec<f32>> = (0..pp * qq)
+            .map(|i| {
+                z_loc[i]
+                    .iter()
+                    .zip(&self.uz[i])
+                    .map(|(&a, &b)| a + b)
+                    .collect()
+            })
+            .collect();
+        let c_tots = cluster.reduce_over_q(share_parts, pp, qq);
+        let vs = {
+            let rho_q = rho / qq as f32;
+            let inv_n = 1.0 / part.n as f32;
+            let mut plan = StepPlan::with_capacity(pp);
+            for (p, c_tot) in c_tots.iter().enumerate() {
+                plan.task(move || staged.prox_hinge(p, c_tot, rho_q, inv_n));
+            }
+            cluster.grid_step(plan)?
+        };
         for p in 0..pp {
             let n_p = part.n_p(p);
-            let per_q: Vec<Vec<f32>> = (0..qq)
-                .map(|q| {
-                    let i = k(p, q);
-                    z_loc[i]
-                        .iter()
-                        .zip(&self.uz[i])
-                        .map(|(&a, &b)| a + b)
-                        .collect()
-                })
-                .collect();
-            let c_tot = cluster.reduce_sum(per_q);
-            let v = staged.prox_hinge(p, &c_tot, rho / qq as f32, 1.0 / part.n as f32)?;
+            let (c_tot, v) = (&c_tots[p], &vs[p]);
             // redistribute: s_pq = c_pq + (v − c_tot)/Q
             for q in 0..qq {
                 let i = k(p, q);
@@ -196,11 +209,10 @@ impl Optimizer for Admm {
         // 4. scaled dual updates
         for p in 0..pp {
             for q in 0..qq {
-                let (c0, c1) = part.col_ranges[q];
+                let (c0, _c1) = part.col_ranges[q];
                 let i = k(p, q);
                 for (r, u) in self.uw[i].iter_mut().enumerate() {
                     *u += w_loc[i][r] - self.w[c0 + r];
-                    let _ = c1;
                 }
                 for (r, u) in self.uz[i].iter_mut().enumerate() {
                     *u += z_loc[i][r] - self.s[i][r];

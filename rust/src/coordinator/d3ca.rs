@@ -3,12 +3,20 @@
 //! Per global iteration t:
 //!
 //! 1. every partition [p,q] runs LOCALDUALMETHOD (Algorithm 2 = SDCA with
-//!    the local objective scaled by 1/Q) from the shared (α[p,·], w[·,q]);
+//!    the local objective scaled by 1/Q) from the shared (α[p,·], w[·,q]) —
+//!    one superstep over the P×Q grid;
 //! 2. dual averaging: α[p,·] += (1/(P·Q)) Σ_q Δα[p,q]   (treeAggregate
 //!    over the feature partitions of each observation block);
 //! 3. primal recovery through the primal-dual map (3):
-//!    w[·,q] = (λn)⁻¹ Σ_p x[p,q]ᵀ α[p,·]   (treeAggregate over the
-//!    observation partitions of each feature block).
+//!    w[·,q] = (λn)⁻¹ Σ_p x[p,q]ᵀ α[p,·]   (a second superstep, then
+//!    treeAggregate over the observation partitions of each feature
+//!    block).
+//!
+//! All per-partition execution flows through
+//! [`SimCluster::grid_step`](crate::cluster::SimCluster::grid_step): the
+//! engine runs the tasks on the worker pool, measures them, and charges
+//! the LPT makespan — this coordinator never touches timers or the
+//! schedule directly.
 //!
 //! With Q = 1 this reduces exactly to CoCoA.  Dual feasibility of the
 //! averaged iterate is preserved because each per-partition update stays
@@ -16,7 +24,7 @@
 //! (tested in `rust/tests/properties.rs`).
 
 use super::driver::Optimizer;
-use crate::cluster::SimCluster;
+use crate::cluster::{SimCluster, StepPlan};
 use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::runtime::StagedGrid;
@@ -146,97 +154,78 @@ impl Optimizer for D3ca {
             cluster.broadcast_cost(part.n_p(p) * 4, qq);
         }
 
-        // Step 2-4: local dual methods, one task per partition.  Executed
-        // sequentially (single-core host) but individually timed so the
-        // simulated clock sees the parallel makespan.
-        let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(pp * qq);
-        {
-            let mut durations = Vec::with_capacity(pp * qq);
+        // Steps 2-4: local dual methods — one superstep, one task per
+        // partition, sharing α/w by reference across the worker pool.
+        let deltas = {
+            let (alpha, w) = (&self.alpha, &self.w);
+            let mut plan = StepPlan::with_capacity(pp * qq);
             for p in 0..pp {
                 let (r0, r1) = part.row_ranges[p];
                 for q in 0..qq {
                     let (c0, c1) = part.col_ranges[q];
                     let n_p = r1 - r0;
                     let h = ((n_p as f32 * self.cfg.local_epochs).round() as usize).max(1);
-                    let mut rng = self
-                        .rng_root
-                        .substream(p as u64, q as u64, t as u64);
+                    let mut rng = self.rng_root.substream(p as u64, q as u64, t as u64);
                     let idx = rng.index_stream(n_p, n_p.min(h));
-                    let timer = crate::util::timer::Timer::start();
-                    let da = staged.sdca_epoch(
-                        p,
-                        q,
-                        &self.alpha[r0..r1],
-                        &self.w[c0..c1],
-                        &idx,
-                        h,
-                        lamn,
-                        invq,
-                        beta,
-                    )?;
-                    durations.push(timer.secs());
-                    deltas.push(da);
+                    let alpha_p = &alpha[r0..r1];
+                    let w_q = &w[c0..c1];
+                    plan.task(move || {
+                        staged.sdca_epoch(p, q, alpha_p, w_q, &idx, h, lamn, invq, beta)
+                    });
                 }
             }
-            let makespan =
-                crate::cluster::lpt_makespan(&durations, cluster.config.cores);
-            cluster.clock.add_compute(makespan);
-        }
+            cluster.grid_step(plan)?
+        };
 
-        // Step 5-7: α[p,·] += scale · Σ_q Δα[p,q]  (tree reduce over q;
+        // Steps 5-7: α[p,·] += scale · Σ_q Δα[p,q]  (tree reduce over q;
         // scale = 1/(P·Q) per the paper, or 1/Q under the ablation).
         let scale = if self.cfg.avg_pq {
             1.0 / (pp * qq) as f32
         } else {
             1.0 / qq as f32
         };
-        let mut upd: Vec<Vec<f32>> = Vec::with_capacity(pp);
-        for p in 0..pp {
+        let mut upd = cluster.reduce_over_q(deltas, pp, qq);
+        for (p, sum) in upd.iter_mut().enumerate() {
             let (r0, r1) = part.row_ranges[p];
-            let per_q: Vec<Vec<f32>> = (0..qq)
-                .map(|q| std::mem::take(&mut deltas[p * qq + q]))
-                .collect();
-            let mut sum = cluster.reduce_sum(per_q);
-            crate::linalg::scale(scale, &mut sum);
-            for (a, &d) in self.alpha[r0..r1].iter_mut().zip(&sum) {
+            crate::linalg::scale(scale, sum);
+            for (a, &d) in self.alpha[r0..r1].iter_mut().zip(sum.iter()) {
                 *a += d;
             }
-            upd.push(sum);
         }
 
-        // Step 8-10: primal recovery (tree reduce over p per column).
-        // Full mode recomputes w from α; incremental mode applies the
-        // exact linear identity from the dual *update* only.
-        {
-            let mut durations = Vec::with_capacity(pp * qq);
-            for q in 0..qq {
-                let (c0, c1) = part.col_ranges[q];
-                let mut per_p: Vec<Vec<f32>> = Vec::with_capacity(pp);
-                for p in 0..pp {
-                    let (r0, r1) = part.row_ranges[p];
-                    let timer = crate::util::timer::Timer::start();
-                    let v = if self.cfg.incremental_primal {
-                        staged.atx(p, q, &upd[p])?
+        // Steps 8-10: primal recovery — a second superstep over the grid,
+        // then a tree reduce over p per feature column.  Full mode
+        // recomputes w from α; incremental mode applies the exact linear
+        // identity from the dual *update* only.
+        let contribs = {
+            let alpha = &self.alpha;
+            let upd = &upd;
+            let mut plan = StepPlan::with_capacity(pp * qq);
+            for p in 0..pp {
+                let (r0, r1) = part.row_ranges[p];
+                for q in 0..qq {
+                    let v_p: &[f32] = if self.cfg.incremental_primal {
+                        &upd[p]
                     } else {
-                        staged.atx(p, q, &self.alpha[r0..r1])?
+                        &alpha[r0..r1]
                     };
-                    per_p.push(v);
-                    durations.push(timer.secs());
-                }
-                let sum = cluster.reduce_sum(per_p);
-                if self.cfg.incremental_primal {
-                    for (wv, &s) in self.w[c0..c1].iter_mut().zip(&sum) {
-                        *wv += s / lamn;
-                    }
-                } else {
-                    for (wv, &s) in self.w[c0..c1].iter_mut().zip(&sum) {
-                        *wv = s / lamn;
-                    }
+                    plan.task(move || staged.atx(p, q, v_p));
                 }
             }
-            let makespan =
-                crate::cluster::lpt_makespan(&durations, cluster.config.cores);
-            cluster.clock.add_compute(makespan);
+            cluster.grid_step(plan)?
+        };
+        let sums = cluster.reduce_over_p(contribs, pp, qq);
+        for (q, sum) in sums.into_iter().enumerate() {
+            let (c0, c1) = part.col_ranges[q];
+            if self.cfg.incremental_primal {
+                for (wv, &s) in self.w[c0..c1].iter_mut().zip(&sum) {
+                    *wv += s / lamn;
+                }
+            } else {
+                for (wv, &s) in self.w[c0..c1].iter_mut().zip(&sum) {
+                    *wv = s / lamn;
+                }
+            }
         }
         Ok(())
     }

@@ -10,7 +10,6 @@ use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::metrics::Recorder;
 use crate::runtime::StagedGrid;
-use crate::util::timer::Timer;
 use anyhow::Result;
 
 /// A doubly-distributed optimization method.
@@ -132,9 +131,10 @@ impl<'a> Driver<'a> {
     /// metrics each `eval_every` iterations.
     pub fn run(&mut self, opt: &mut dyn Optimizer) -> Result<RunResult> {
         let lam = opt.lambda();
+        // The cluster owns both clocks: the simulated parallel clock the
+        // optimizers charge, and the host wall stopwatch `threads` speeds up.
         let mut cluster = SimCluster::new(self.cluster_config.clone());
         let mut rec = Recorder::new(self.fstar);
-        let wall = Timer::start();
         opt.init(&self.staged, &mut cluster)?;
         for t in 1..=self.iterations {
             opt.iterate(t, &self.staged, &mut cluster)?;
@@ -148,7 +148,7 @@ impl<'a> Driver<'a> {
                     f,
                     d,
                     cluster.clock.now(),
-                    wall.secs(),
+                    cluster.host_secs(),
                     cluster.clock.comm_bytes(),
                 );
                 if let (Some(target), Some(last)) = (self.target_gap, rec.last()) {
@@ -163,7 +163,7 @@ impl<'a> Driver<'a> {
             history: rec,
             w: opt.w().to_vec(),
             sim_time: cluster.clock.now(),
-            wall_time: wall.secs(),
+            wall_time: cluster.host_secs(),
             comm_bytes: cluster.clock.comm_bytes(),
             supersteps: cluster.clock.supersteps(),
         })

@@ -14,10 +14,17 @@
 //! 4. the new global iterate is the concatenation of the sub-block
 //!    results — or, for RADiSA-avg (`average: true`), every partition
 //!    works on the whole w[·,q] and the results are averaged over p.
+//!
+//! Each numbered phase is one superstep: the margins pass, the gradient
+//! pass and the SVRG pass are [`StepPlan`]s executed by
+//! [`SimCluster::grid_step`](crate::cluster::SimCluster::grid_step) on
+//! the worker pool, with the collectives charged through the cluster's
+//! reduce/broadcast cost model (RADiSA-avg's full-block shipping uses the
+//! data-free [`SimCluster::reduce_cost`](crate::cluster::SimCluster::reduce_cost)).
 
 use super::driver::Optimizer;
 use super::schedule::{radisa_eta, SubBlockSchedule};
-use crate::cluster::SimCluster;
+use crate::cluster::{SimCluster, StepPlan};
 use crate::data::{Partitioned, SubBlocks};
 use crate::loss::Loss;
 use crate::runtime::StagedGrid;
@@ -91,9 +98,10 @@ impl Radisa {
         &self.cfg
     }
 
-    /// Margins pass: m[p] = Σ_q x[p,q] w[·,q] (reduce over q per row
-    /// partition).  Run once per round — it is what keeps the local
-    /// margin identity exact between delayed-gradient rounds.
+    /// Margins pass: m[p] = Σ_q x[p,q] w[·,q] — one superstep over the
+    /// grid, then a reduce over q per row partition.  Run once per round —
+    /// it is what keeps the local margin identity exact between
+    /// delayed-gradient rounds.
     fn margins_pass(
         &self,
         staged: &StagedGrid<'_>,
@@ -101,27 +109,22 @@ impl Radisa {
     ) -> Result<Vec<Vec<f32>>> {
         let part = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
-        let mut mt: Vec<Vec<f32>> = Vec::with_capacity(pp);
-        let mut durations = Vec::new();
+        let w = &self.w;
+        let mut plan = StepPlan::with_capacity(pp * qq);
         for p in 0..pp {
-            let mut per_q = Vec::with_capacity(qq);
             for q in 0..qq {
                 let (c0, c1) = part.col_ranges[q];
-                let timer = crate::util::timer::Timer::start();
-                per_q.push(staged.margins(p, q, &self.w[c0..c1])?);
-                durations.push(timer.secs());
+                let w_q = &w[c0..c1];
+                plan.task(move || staged.margins(p, q, w_q));
             }
-            mt.push(cluster.reduce_sum(per_q));
         }
-        cluster
-            .clock
-            .add_compute(crate::cluster::lpt_makespan(&durations, cluster.config.cores));
-        Ok(mt)
+        let local = cluster.grid_step(plan)?;
+        Ok(cluster.reduce_over_q(local, pp, qq))
     }
 
-    /// Gradient pass: μ[·,q] = Σ_p (1/n) x[p,q]ᵀ ψ(m[p]) + λ w (reduce over
-    /// p per feature partition) — the expensive half of the snapshot,
-    /// skipped on delayed rounds.
+    /// Gradient pass: μ[·,q] = Σ_p (1/n) x[p,q]ᵀ ψ(m[p]) + λ w — one
+    /// superstep, then a reduce over p per feature partition — the
+    /// expensive half of the snapshot, skipped on delayed rounds.
     fn grad_pass(
         &self,
         staged: &StagedGrid<'_>,
@@ -130,26 +133,23 @@ impl Radisa {
     ) -> Result<Vec<Vec<f32>>> {
         let part = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
-        let mut mu: Vec<Vec<f32>> = Vec::with_capacity(qq);
-        let mut durations = Vec::new();
-        for q in 0..qq {
-            let (c0, c1) = part.col_ranges[q];
-            let mut per_p = Vec::with_capacity(pp);
-            for p in 0..pp {
-                let timer = crate::util::timer::Timer::start();
-                per_p.push(staged.grad(self.cfg.loss, p, q, &mt[p], part.n)?);
-                durations.push(timer.secs());
+        let loss = self.cfg.loss;
+        let mut plan = StepPlan::with_capacity(pp * qq);
+        for p in 0..pp {
+            let mt_p = &mt[p];
+            for q in 0..qq {
+                plan.task(move || staged.grad(loss, p, q, mt_p, part.n));
             }
-            let mut g = cluster.reduce_sum(per_p);
+        }
+        let local = cluster.grid_step(plan)?;
+        let mut mu = cluster.reduce_over_p(local, pp, qq);
+        for (q, g) in mu.iter_mut().enumerate() {
+            let (c0, c1) = part.col_ranges[q];
             // + λ w̃ (the regularizer's exact gradient at the snapshot)
             for (gv, &wv) in g.iter_mut().zip(&self.w[c0..c1]) {
                 *gv += self.cfg.lambda * wv;
             }
-            mu.push(g);
         }
-        cluster
-            .clock
-            .add_compute(crate::cluster::lpt_makespan(&durations, cluster.config.cores));
         Ok(mu)
     }
 }
@@ -222,17 +222,17 @@ impl Optimizer for Radisa {
             let tick = (t - 1) * rounds + round + 1;
             let eta = radisa_eta(self.gamma_eff, tick);
 
-            // steps 4-11: local SVRG on randomly exchanged sub-blocks
+            // steps 4-11: local SVRG on randomly exchanged sub-blocks —
+            // one superstep over the grid, tasks ordered (q, p)
             let schedule = self.schedule.as_ref().unwrap();
             let subblocks = self.subblocks.as_ref().unwrap();
-            let mut new_w = self.w.clone();
-            let mut durations = Vec::with_capacity(pp * qq);
+            let w_snap = &self.w;
+            let mut windows: Vec<(usize, usize)> = Vec::with_capacity(pp * qq);
+            let mut plan = StepPlan::with_capacity(pp * qq);
             for q in 0..qq {
                 let (c0, c1) = part.col_ranges[q];
-                let wt_q = &self.w[c0..c1];
+                let wt_q = &w_snap[c0..c1];
                 let assign = schedule.assignment(q, tick);
-                // RADiSA-avg accumulates full-width results for averaging
-                let mut avg_acc = vec![0.0f64; c1 - c0];
                 for p in 0..pp {
                     let n_p = part.n_p(p);
                     let l = if self.cfg.batch == 0 { n_p } else { self.cfg.batch };
@@ -241,50 +241,52 @@ impl Optimizer for Radisa {
                     } else {
                         subblocks.range(q, assign[p])
                     };
+                    windows.push(window);
                     let mu_win = &mu[q][window.0..window.1];
+                    let mt_p = &mt[p];
                     let mut rng =
                         self.rng_root.substream(p as u64, q as u64, tick as u64);
                     let idx = rng.index_stream(n_p, n_p.min(l).max(1));
-                    let timer = crate::util::timer::Timer::start();
-                    let w_out = staged.svrg_block(
-                        self.cfg.loss,
-                        p,
-                        q,
-                        wt_q,
-                        wt_q,
-                        mu_win,
-                        window,
-                        &mt[p],
-                        &idx,
-                        l,
-                        eta,
-                        self.cfg.lambda,
-                    )?;
-                    durations.push(timer.secs());
-                    if self.cfg.average {
-                        for (acc, &v) in avg_acc.iter_mut().zip(&w_out) {
+                    let (loss, lam) = (self.cfg.loss, self.cfg.lambda);
+                    plan.task(move || {
+                        staged.svrg_block(
+                            loss, p, q, wt_q, wt_q, mu_win, window, mt_p, &idx, l,
+                            eta, lam,
+                        )
+                    });
+                }
+            }
+            let results = cluster.grid_step(plan)?; // [q*pp + p]
+
+            // step 12: combine in task order — concatenate each partition's
+            // window, or average full blocks over p (RADiSA-avg)
+            let mut new_w = self.w.clone();
+            for q in 0..qq {
+                let (c0, c1) = part.col_ranges[q];
+                if self.cfg.average {
+                    let mut avg_acc = vec![0.0f64; c1 - c0];
+                    for p in 0..pp {
+                        for (acc, &v) in avg_acc.iter_mut().zip(&results[q * pp + p]) {
                             *acc += v as f64;
                         }
-                    } else {
-                        // step 12: concatenate — partition p owns its window
-                        new_w[c0 + window.0..c0 + window.1]
-                            .copy_from_slice(&w_out[window.0..window.1]);
                     }
-                }
-                if self.cfg.average {
                     for (k, acc) in avg_acc.iter().enumerate() {
                         new_w[c0 + k] = (*acc / pp as f64) as f32;
                     }
-                    // averaging ships full blocks: reduce of P vectors of m_q
-                    cluster.reduce_sum(vec![vec![0.0f32; c1 - c0]; pp.max(2)]);
+                    // averaging ships full blocks: reduce of P vectors of
+                    // m_q f32s (cost only — the average itself is exact
+                    // driver-side arithmetic)
+                    cluster.reduce_cost(pp.max(2), (c1 - c0) * 4);
                 } else {
+                    for p in 0..pp {
+                        let (lo, hi) = windows[q * pp + p];
+                        new_w[c0 + lo..c0 + hi]
+                            .copy_from_slice(&results[q * pp + p][lo..hi]);
+                    }
                     // concatenation ships one sub-block per partition
                     cluster.broadcast_cost((c1 - c0) * 4 / pp.max(1), pp);
                 }
             }
-            cluster
-                .clock
-                .add_compute(crate::cluster::lpt_makespan(&durations, cluster.config.cores));
             self.w = new_w;
         }
         Ok(())

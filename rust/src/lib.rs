@@ -19,7 +19,8 @@
 //! * [`loss`] — hinge / logistic / squared losses with conjugates.
 //! * [`solvers`] — native SDCA/SVRG/gradient/objective kernels + the exact
 //!   reference solver that produces `f*`.
-//! * [`cluster`] — the simulated cluster substrate (workers, reductions,
+//! * [`cluster`] — the simulated cluster substrate and superstep engine
+//!   (worker pool, typed superstep plans, grouped tree reductions,
 //!   simulated time + communication model).
 //! * [`runtime`] — the PJRT engine and the [`runtime::Backend`] seam
 //!   (native rust vs. AOT XLA artifacts).
@@ -56,7 +57,7 @@ pub mod util;
 
 /// Convenient re-exports of the types most programs need.
 pub mod prelude {
-    pub use crate::cluster::{ClusterConfig, SimCluster};
+    pub use crate::cluster::{host_threads, ClusterConfig, CostModel, SimCluster, StepPlan};
     pub use crate::config::ExperimentConfig;
     pub use crate::coordinator::{
         Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa,

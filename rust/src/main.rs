@@ -4,6 +4,7 @@
 //! ddopt train [--config cfg.json] [--method radisa|radisa-avg|d3ca|admm]
 //!             [--p 4 --q 2] [--lambda 1e-3] [--gamma 0.05] [--iters 30]
 //!             [--backend native|xla] [--loss hinge|logistic]
+//!             [--cores 8] [--threads N]  (threads default: host parallelism)
 //!             [--n-per 200 --m-per 150 | --sparse n,m,density]
 //! ddopt exp <table1|fig3|fig4|fig5|fig6|perf|ablations|all> [--scale small|paper]
 //! ddopt gen-data --out data.libsvm [--n 1000 --m 500 --density 0.01]
@@ -78,6 +79,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(c) = args.flag::<usize>("cores") {
         cfg.cluster.cores = c;
     }
+    if let Some(t) = args.flag::<usize>("threads") {
+        cfg.cluster.threads = t;
+    }
     if let Some(l) = args.flag_str("loss") {
         cfg.loss = Loss::parse(&l).ok_or_else(|| anyhow!("bad loss '{l}'"))?;
     }
@@ -104,9 +108,19 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
 
 fn make_backend(cfg: &ExperimentConfig) -> Result<Backend> {
     match cfg.backend.as_str() {
-        "xla" => Backend::xla(Path::new("artifacts")),
+        "xla" => make_xla_backend(),
         _ => Ok(Backend::native()),
     }
+}
+
+#[cfg(feature = "xla")]
+fn make_xla_backend() -> Result<Backend> {
+    Backend::xla(Path::new("artifacts"))
+}
+
+#[cfg(not(feature = "xla"))]
+fn make_xla_backend() -> Result<Backend> {
+    bail!("this binary was built without the `xla` feature; rebuild with `cargo build --features xla`")
 }
 
 fn run_train(args: &Args) -> Result<()> {
@@ -118,9 +132,9 @@ fn run_train(args: &Args) -> Result<()> {
 
     let ds = cfg.build_dataset()?;
     println!(
-        "dataset {} ({} x {}, sparsity {:.3}%)  grid {}x{}  lambda={:.1e}  backend={}",
+        "dataset {} ({} x {}, sparsity {:.3}%)  grid {}x{}  lambda={:.1e}  backend={}  threads={}",
         ds.name, ds.n(), ds.m(), 100.0 * ds.sparsity(),
-        cfg.p, cfg.q, cfg.lambda, cfg.backend
+        cfg.p, cfg.q, cfg.lambda, cfg.backend, cfg.cluster.threads
     );
     let part = Partitioned::split(&ds, Grid::new(cfg.p, cfg.q));
     let backend = make_backend(&cfg)?;

@@ -2,10 +2,14 @@
 //! and the per-partition math, with two interchangeable implementations.
 //!
 //! * **Native** — pure-rust kernels from [`crate::solvers`] (dense + CSR).
-//! * **Xla** — the production hot path: AOT artifacts produced by
-//!   `python/compile/aot.py`, loaded as HLO text and executed through the
-//!   PJRT C API (`xla` crate).  Python is never on this path — the
-//!   artifacts are data files.
+//!   Always available; thread-safe, so superstep tasks run in parallel on
+//!   the worker pool.
+//! * **Xla** (`--features xla`) — the production hot path: AOT artifacts
+//!   produced by `python/compile/aot.py`, loaded as HLO text and executed
+//!   through the PJRT C API (`xla` crate).  Python is never on this path —
+//!   the artifacts are data files.  PJRT literals and the executable cache
+//!   are thread-confined, so an `xla` build executes superstep plans
+//!   inline (same results, same simulated clock, no host parallelism).
 //!
 //! The two backends implement identical op semantics (same update
 //! equations, same index-stream protocol); `rust/tests/backend_parity.rs`
@@ -18,22 +22,25 @@
 //! training data lives on the workers.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod literal;
 mod native;
 mod staged;
 
 pub use artifact::{ArtifactSig, Manifest};
+#[cfg(feature = "xla")]
 pub use engine::XlaEngine;
 pub use staged::{FactorHandle, StagedGrid};
 
 use crate::data::Partitioned;
 use anyhow::Result;
-use std::path::Path;
 
 /// Which compute implementation executes the per-partition ops.
 pub enum Backend {
     Native,
+    #[cfg(feature = "xla")]
     Xla(XlaEngine),
 }
 
@@ -45,19 +52,28 @@ impl Backend {
 
     /// PJRT-backed backend executing the AOT artifacts in `dir`
     /// (default `artifacts/`).  Dense blocks only.
-    pub fn xla(dir: &Path) -> Result<Backend> {
+    #[cfg(feature = "xla")]
+    pub fn xla(dir: &std::path::Path) -> Result<Backend> {
         Ok(Backend::Xla(XlaEngine::new(dir)?))
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Native => "native",
+            #[cfg(feature = "xla")]
             Backend::Xla(_) => "xla",
         }
     }
 
     pub fn is_xla(&self) -> bool {
-        matches!(self, Backend::Xla(_))
+        #[cfg(feature = "xla")]
+        {
+            matches!(self, Backend::Xla(_))
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            false
+        }
     }
 
     /// Stage a partitioned dataset for repeated per-iteration execution.

@@ -1,25 +1,36 @@
 //! [`StagedGrid`] — the per-partition op API the coordinators program
 //! against, dispatching to the native kernels or the staged XLA artifacts.
 //!
+//! A `StagedGrid` over the native backend is `Sync`: superstep tasks
+//! capture `&StagedGrid` and execute concurrently on the cluster's
+//! worker pool.  The XLA build is thread-confined (PJRT literals and the
+//! executable cache), which is why the whole `xla` feature drops the
+//! `Send` bound on superstep tasks and runs plans inline.
+//!
 //! XLA staging pads each block to its shape bucket once (x, y, row-mask
 //! literals live for the whole run); per-iteration calls ship only the
 //! small dynamic vectors, mirroring a real cluster where training data is
 //! resident on workers.  Long inner loops are chunked to the bucket's
 //! index-stream capacity with exact algebraic carry (see `sdca_epoch`).
 
+#[cfg(feature = "xla")]
 use super::literal as lit;
 use super::native;
 use super::Backend;
 use crate::data::Partitioned;
 use crate::loss::Loss;
-use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
+use anyhow::bail;
+use anyhow::Result;
 
 /// Cached ADMM factorization, whichever side produced it.
 pub enum FactorHandle {
     Native(Vec<f32>),
+    #[cfg(feature = "xla")]
     Xla(xla::Literal),
 }
 
+#[cfg(feature = "xla")]
 struct XlaPart {
     bucket: (usize, usize),
     x: xla::Literal,
@@ -32,6 +43,7 @@ struct XlaPart {
 pub struct StagedGrid<'a> {
     pub backend: &'a Backend,
     pub part: &'a Partitioned,
+    #[cfg(feature = "xla")]
     xla_parts: Vec<XlaPart>, // empty for the native backend
     /// Precomputed ‖x_i‖² per partition (both backends; §Perf).
     row_norms: Vec<Vec<f32>>,
@@ -39,13 +51,15 @@ pub struct StagedGrid<'a> {
 
 impl<'a> StagedGrid<'a> {
     pub fn new(backend: &'a Backend, part: &'a Partitioned) -> Result<StagedGrid<'a>> {
-        let mut xla_parts = Vec::new();
         let mut row_norms = Vec::with_capacity(part.grid.k());
         for p in 0..part.grid.p {
             for q in 0..part.grid.q {
                 row_norms.push(crate::solvers::row_norms(part.block(p, q)));
             }
         }
+        #[cfg(feature = "xla")]
+        let mut xla_parts = Vec::new();
+        #[cfg(feature = "xla")]
         if let Backend::Xla(engine) = backend {
             for p in 0..part.grid.p {
                 for q in 0..part.grid.q {
@@ -66,13 +80,21 @@ impl<'a> StagedGrid<'a> {
                 }
             }
         }
-        Ok(StagedGrid { backend, part, xla_parts, row_norms })
+        Ok(StagedGrid {
+            backend,
+            part,
+            #[cfg(feature = "xla")]
+            xla_parts,
+            row_norms,
+        })
     }
 
+    #[cfg(feature = "xla")]
     fn xla_part(&self, p: usize, q: usize) -> &XlaPart {
         &self.xla_parts[self.part.grid.idx(p, q)]
     }
 
+    #[cfg(feature = "xla")]
     fn loss_op(&self, prefix: &str, loss: Loss) -> Result<String> {
         match loss {
             Loss::Hinge => Ok(format!("{prefix}_hinge")),
@@ -93,6 +115,7 @@ impl<'a> StagedGrid<'a> {
                 block.margins_into(w_q, &mut out);
                 Ok(out)
             }
+            #[cfg(feature = "xla")]
             Backend::Xla(engine) => {
                 let xp = self.xla_part(p, q);
                 let w_lit = lit::vec_f32_padded(w_q, xp.bucket.1);
@@ -113,6 +136,7 @@ impl<'a> StagedGrid<'a> {
                 block.atx_into(v_p, &mut out);
                 Ok(out)
             }
+            #[cfg(feature = "xla")]
             Backend::Xla(engine) => {
                 let xp = self.xla_part(p, q);
                 let v_lit = lit::vec_f32_padded(v_p, xp.bucket.0);
@@ -141,6 +165,7 @@ impl<'a> StagedGrid<'a> {
                 n_global,
                 loss,
             )),
+            #[cfg(feature = "xla")]
             Backend::Xla(engine) => {
                 let op = self.loss_op("grad", loss)?;
                 let xp = self.xla_part(p, q);
@@ -161,6 +186,7 @@ impl<'a> StagedGrid<'a> {
     pub fn loss_sum(&self, loss: Loss, p: usize, mg_p: &[f32]) -> Result<f64> {
         match self.backend {
             Backend::Native => Ok(native::loss_sum(loss, mg_p, self.part.labels(p))),
+            #[cfg(feature = "xla")]
             Backend::Xla(engine) => {
                 let op = self.loss_op("obj", loss)?;
                 let xp = self.xla_part(p, 0);
@@ -179,6 +205,7 @@ impl<'a> StagedGrid<'a> {
                 .zip(self.part.labels(p))
                 .map(|(&a, &y)| (a * y) as f64)
                 .sum()),
+            #[cfg(feature = "xla")]
             Backend::Xla(engine) => {
                 let xp = self.xla_part(p, 0);
                 let a_lit = lit::vec_f32_padded(alpha_p, xp.bucket.0);
@@ -221,6 +248,7 @@ impl<'a> StagedGrid<'a> {
                 invq,
                 beta,
             )),
+            #[cfg(feature = "xla")]
             Backend::Xla(engine) => {
                 let xp = self.xla_part(p, q);
                 let cap = xp.bucket.0;
@@ -309,6 +337,7 @@ impl<'a> StagedGrid<'a> {
                 );
                 Ok(w)
             }
+            #[cfg(feature = "xla")]
             Backend::Xla(engine) => {
                 let op = self.loss_op("svrg", loss)?;
                 let xp = self.xla_part(p, q);
@@ -358,6 +387,7 @@ impl<'a> StagedGrid<'a> {
         let block = self.part.block(p, q);
         match self.backend {
             Backend::Native => Ok(FactorHandle::Native(native::admm_factor(block)?)),
+            #[cfg(feature = "xla")]
             Backend::Xla(engine) => {
                 let xp = self.xla_part(p, q);
                 let outs = engine.run("admm_factor", xp.bucket, &[&xp.x])?;
@@ -380,6 +410,7 @@ impl<'a> StagedGrid<'a> {
             (Backend::Native, FactorHandle::Native(l)) => {
                 Ok(native::admm_project(block, l, w_hat, z_hat))
             }
+            #[cfg(feature = "xla")]
             (Backend::Xla(engine), FactorHandle::Xla(l)) => {
                 let xp = self.xla_part(p, q);
                 let wh_lit = lit::vec_f32_padded(w_hat, xp.bucket.1);
@@ -393,6 +424,7 @@ impl<'a> StagedGrid<'a> {
                 let z = lit::to_vec_f32(&outs[1], xp.bucket.0)?[..block.rows()].to_vec();
                 Ok((w, z))
             }
+            #[cfg(feature = "xla")]
             _ => bail!("factor handle does not match backend"),
         }
     }
@@ -406,6 +438,7 @@ impl<'a> StagedGrid<'a> {
                 rho,
                 inv_n,
             )),
+            #[cfg(feature = "xla")]
             Backend::Xla(engine) => {
                 let xp = self.xla_part(p, 0);
                 let v_lit = lit::vec_f32_padded(v_p, xp.bucket.0);
@@ -422,10 +455,18 @@ impl<'a> StagedGrid<'a> {
     }
 
     /// Approximate bytes held by the XLA staging (EXPERIMENTS.md §Perf).
+    #[cfg(feature = "xla")]
     pub fn staged_bytes(&self) -> usize {
         self.xla_parts
             .iter()
             .map(|xp| (xp.bucket.0 * xp.bucket.1 + 3 * xp.bucket.0) * 4)
             .sum()
+    }
+
+    /// Approximate bytes held by backend staging (nothing extra is staged
+    /// on the native backend — blocks are shared by reference).
+    #[cfg(not(feature = "xla"))]
+    pub fn staged_bytes(&self) -> usize {
+        0
     }
 }

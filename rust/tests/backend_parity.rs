@@ -4,7 +4,9 @@
 //! checked kernel-vs-jnp-oracle, this checks artifact-vs-rust across the
 //! PJRT boundary, including padding/masking and the index-stream protocol.
 //!
-//! Skipped (cleanly) when `artifacts/manifest.json` is absent.
+//! Requires `--features xla`; skipped (cleanly) when
+//! `artifacts/manifest.json` is absent.
+#![cfg(feature = "xla")]
 
 use ddopt::data::{Grid, Partitioned, SyntheticDense};
 use ddopt::loss::Loss;

@@ -1,7 +1,8 @@
 //! Full-stack smoke: the XLA backend (AOT Pallas/JAX artifacts through
 //! PJRT) drives complete D3CA / RADiSA / ADMM runs and reaches the same
 //! optimality region as the native backend on the same seeds.
-//! Skipped cleanly when artifacts are absent.
+//! Requires `--features xla`; skipped cleanly when artifacts are absent.
+#![cfg(feature = "xla")]
 
 use ddopt::cluster::ClusterConfig;
 use ddopt::coordinator::{

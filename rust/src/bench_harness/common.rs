@@ -1,7 +1,7 @@
 //! Shared plumbing for the experiment harnesses: building method suites,
 //! running one experiment cell, and formatting results.
 
-use crate::cluster::ClusterConfig;
+use crate::cluster::{ClusterConfig, ClusterScenario, CostModel};
 use crate::coordinator::{
     Admm, AdmmConfig, BetaSchedule, D3ca, D3caConfig, Driver, Optimizer,
     Radisa, RadisaConfig, RunResult,
@@ -65,6 +65,11 @@ pub struct Cell {
     pub seed: u64,
     pub target_gap: Option<f64>,
     pub batch: usize,
+    /// How per-task compute cost is charged (`Fixed` for reproducible
+    /// clocks, e.g. the scenario sweeps; `Measured` for fidelity runs).
+    pub cost: CostModel,
+    /// Cluster-condition scenario (ideal unless the harness sweeps them).
+    pub scenario: ClusterScenario,
 }
 
 impl Default for Cell {
@@ -79,6 +84,8 @@ impl Default for Cell {
             seed: 1,
             target_gap: None,
             batch: 0,
+            cost: CostModel::Measured,
+            scenario: ClusterScenario::ideal(),
         }
     }
 }
@@ -116,9 +123,13 @@ pub fn run_cell(
     fstar: f64,
 ) -> Result<RunResult> {
     let mut opt = make_optimizer(cell);
+    let mut cluster = ClusterConfig::with_cores(cell.cores)
+        .with_threads(cell.threads)
+        .with_scenario(cell.scenario.clone());
+    cluster.cost = cell.cost;
     let mut driver = Driver::new(part, backend)?
         .iterations(cell.iterations)
-        .cluster(ClusterConfig::with_cores(cell.cores).with_threads(cell.threads))
+        .cluster(cluster)
         .fstar(fstar);
     if let Some(g) = cell.target_gap {
         driver = driver.target_gap(g);

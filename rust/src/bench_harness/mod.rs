@@ -12,6 +12,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod perf;
+pub mod stragglers;
 pub mod table1;
 
 /// Experiment scale: `Small` finishes in seconds on a laptop core,

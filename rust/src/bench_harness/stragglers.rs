@@ -1,0 +1,182 @@
+//! Cluster-scenario sweep — the paper's qualitative straggler claim, made
+//! measurable.
+//!
+//! RADiSA-avg exists precisely because "the coordinator does not wait for
+//! stragglers" (paper §IV): its combine is an average of full-block
+//! partial solutions, so transient tail events don't extend its
+//! supersteps, while D3CA / plain RADiSA / ADMM concatenate or reduce and
+//! must wait.  This harness sweeps [`ClusterScenario`]s (ideal, straggler
+//! tails of increasing severity, speculative re-execution, heterogeneous
+//! slots, task failures) across all four methods under
+//! [`CostModel::Fixed`], so every simulated clock is bit-reproducible:
+//! same scenario seed → identical JSON, any `--threads` → identical
+//! everything.  The headline table reports RADiSA-avg's sim-time speedup
+//! over plain RADiSA per scenario.
+
+use super::common::{self, Cell, Method};
+use super::Scale;
+use crate::cluster::{ClusterScenario, CostModel};
+use crate::data::SyntheticDense;
+use crate::metrics::markdown_table;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// The swept scenarios; `seed` keys every injection draw.
+pub fn scenarios(seed: u64) -> Vec<(&'static str, ClusterScenario)> {
+    let seeded = |spec: &str| -> ClusterScenario {
+        let mut sc = ClusterScenario::parse(spec).expect("static scenario spec");
+        sc.seed = seed;
+        sc
+    };
+    vec![
+        ("ideal", ClusterScenario::ideal()),
+        ("stragglers-mild", seeded("stragglers:p=0.1,slow=4x")),
+        ("stragglers-heavy", seeded("stragglers:p=0.3,slow=10x")),
+        ("stragglers-spec", seeded("stragglers:p=0.3,slow=10x,spec")),
+        ("hetero", seeded("hetero:frac=0.25,speed=0.25")),
+        ("failures", seeded("failures:p=0.1,retries=3")),
+    ]
+}
+
+/// One (scenario, method) measurement.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub scenario: String,
+    pub method: &'static str,
+    pub sim_time: f64,
+    pub comm_bytes: usize,
+    pub messages: usize,
+    pub stragglers: usize,
+    pub failures: usize,
+    pub best_gap: f64,
+}
+
+/// Run the sweep and return every row (the CLI entry point prints and
+/// writes JSON; tests call this directly).
+pub fn sweep(scale: Scale, seed: u64) -> Result<Vec<SweepRow>> {
+    let backend = crate::runtime::Backend::native();
+    let (n_per, m_per, iters) = match scale {
+        Scale::Paper => (240usize, 160usize, 20usize),
+        Scale::Small => (40, 24, 6),
+    };
+    let (p, q) = (4usize, 2usize);
+    let ds = SyntheticDense::paper_part1(p, q, n_per, m_per, 0.1, 7).build();
+    let part = common::partition(&ds, p, q);
+    let lam = 0.1f32;
+    let fstar = common::fstar_for(&ds, lam);
+    let mut rows = Vec::new();
+    for (label, scenario) in scenarios(seed) {
+        for method in Method::all() {
+            let cell = Cell {
+                method,
+                lambda: lam,
+                gamma: 0.05,
+                iterations: iters,
+                cores: p * q,
+                cost: CostModel::Fixed(1e-3),
+                scenario: scenario.clone(),
+                ..Default::default()
+            };
+            let r = common::run_cell(&part, &backend, &cell, fstar)?;
+            rows.push(SweepRow {
+                scenario: label.to_string(),
+                method: method.name(),
+                sim_time: r.sim_time,
+                comm_bytes: r.comm_bytes,
+                messages: r.messages,
+                stragglers: r.stragglers,
+                failures: r.failures,
+                best_gap: r.history.best_gap(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn run(scale: Scale, seed: u64) -> Result<()> {
+    println!("\n# Stragglers  grid 4x2  λ=1e-1  CostModel::Fixed(1ms)  scenario seed {seed}");
+    let rows = sweep(scale, seed)?;
+
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.scenario.clone(),
+                r.method.to_string(),
+                format!("{:.4}", r.sim_time),
+                r.stragglers.to_string(),
+                r.failures.to_string(),
+                common::fmt_gap(r.best_gap),
+            ]
+        })
+        .collect();
+    let table = markdown_table(
+        &["scenario", "method", "sim time (s)", "stragglers", "failures", "best gap"],
+        &table_rows,
+    );
+    println!("{table}");
+
+    // headline: RADiSA-avg's non-waiting combine vs plain RADiSA
+    let sim: BTreeMap<(&str, &str), f64> = rows
+        .iter()
+        .map(|r| ((r.scenario.as_str(), r.method), r.sim_time))
+        .collect();
+    println!("## radisa-avg sim-time speedup over radisa");
+    for (label, _) in scenarios(seed) {
+        if let (Some(&plain), Some(&avg)) =
+            (sim.get(&(label, "radisa")), sim.get(&(label, "radisa-avg")))
+        {
+            println!("{label:<18} {:>6.2}x", plain / avg);
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("experiment", Json::str("stragglers")),
+        ("seed", Json::from(seed as usize)),
+        (
+            "scale",
+            Json::str(if scale == Scale::Paper { "paper" } else { "small" }),
+        ),
+        (
+            "rows",
+            Json::arr(rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("scenario", Json::str(&r.scenario)),
+                    ("method", Json::str(r.method)),
+                    ("sim_time", Json::num(r.sim_time)),
+                    ("comm_bytes", Json::from(r.comm_bytes)),
+                    ("messages", Json::from(r.messages)),
+                    ("stragglers", Json::from(r.stragglers)),
+                    ("failures", Json::from(r.failures)),
+                    ("best_gap", Json::num(r.best_gap)),
+                ])
+            })),
+        ),
+    ]);
+    let path = common::out_dir().join(format!("stragglers_seed{seed}.json"));
+    std::fs::write(&path, doc.to_string())?;
+    println!("\nrows -> {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_suite_covers_the_claims() {
+        let sc = scenarios(3);
+        assert_eq!(sc[0].1, ClusterScenario::ideal());
+        assert!(sc.iter().any(|(l, s)| l.starts_with("stragglers") && s.straggler_p > 0.0));
+        assert!(sc.iter().any(|(_, s)| s.hetero_frac > 0.0));
+        assert!(sc.iter().any(|(_, s)| s.failure_p > 0.0));
+        assert!(sc.iter().any(|(_, s)| s.speculative));
+        // every non-ideal scenario carries the sweep seed
+        for (label, s) in &sc {
+            if *label != "ideal" {
+                assert_eq!(s.seed, 3, "{label}");
+            }
+        }
+    }
+}

@@ -19,6 +19,10 @@
 //!   data-free variants ([`SimCluster::reduce_cost`],
 //!   [`SimCluster::broadcast_cost`]) for collectives whose payload never
 //!   materializes in the simulation.
+//! * [`scenario::ClusterScenario`] — cluster-condition injection:
+//!   heterogeneous executor speeds, seeded stragglers, and task
+//!   failure/retry, all deterministic from a scenario seed and strictly
+//!   cost-side (iterates are never perturbed).
 //!
 //! Every reported "time" in the scaling experiments (Figs. 5-6) is
 //! simulated cluster time = Σ superstep makespans + modeled communication;
@@ -26,12 +30,14 @@
 
 pub mod comm;
 pub mod pool;
+pub mod scenario;
 pub mod simtime;
 pub mod superstep;
 
 pub use comm::{tree_aggregate, tree_aggregate_f32, CommStats};
 pub use pool::WorkerPool;
-pub use simtime::{lpt_makespan, SimClock};
+pub use scenario::{ClusterScenario, TaskFate, SPECULATION_CAP};
+pub use simtime::{lpt_makespan, lpt_makespan_hetero, SimClock};
 pub use superstep::{CostModel, PlanTask, StepPlan};
 
 use anyhow::Result;
@@ -55,6 +61,9 @@ pub struct ClusterConfig {
     pub bandwidth: f64,
     /// How per-task compute cost is charged to the simulated clock.
     pub cost: CostModel,
+    /// Cluster-condition scenario: heterogeneous slots, stragglers,
+    /// failures.  Default: the ideal (perfect) cluster.
+    pub scenario: ClusterScenario,
 }
 
 impl Default for ClusterConfig {
@@ -67,6 +76,7 @@ impl Default for ClusterConfig {
             latency: 200e-6,
             bandwidth: 125e6,
             cost: CostModel::Measured,
+            scenario: ClusterScenario::ideal(),
         }
     }
 }
@@ -78,6 +88,11 @@ impl ClusterConfig {
 
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    pub fn with_scenario(mut self, scenario: ClusterScenario) -> Self {
+        self.scenario = scenario;
         self
     }
 }
@@ -113,20 +128,32 @@ impl SimCluster {
     /// order, so downstream combining is bit-deterministic).
     ///
     /// Advances the simulated clock by the LPT makespan of the per-task
-    /// costs over `cores` slots.  The first task error aborts the step.
+    /// costs over `cores` slots.  The active [`ClusterScenario`] perturbs
+    /// the *costs only* — per-task straggler/failure charges keyed by
+    /// `(scenario seed, superstep index, task index)` and per-slot speed
+    /// factors in the scheduler — so results and iterates stay bit
+    /// identical across scenarios and `threads` settings.  The first task
+    /// error aborts the step.
     pub fn grid_step<'env, V: Send>(&mut self, plan: StepPlan<'env, V>) -> Result<Vec<V>> {
         if plan.is_empty() {
             return Ok(Vec::new());
         }
+        let tolerant = plan.is_tolerant();
+        let step = self.clock.supersteps();
         let timed = self.pool.run(plan.into_tasks());
         let mut durations = Vec::with_capacity(timed.len());
         let mut out = Vec::with_capacity(timed.len());
         let mut first_err = None;
-        for (result, measured) in timed {
-            durations.push(match self.config.cost {
+        let (mut stragglers, mut failures) = (0usize, 0usize);
+        for (task, (result, measured)) in timed.into_iter().enumerate() {
+            let base = match self.config.cost {
                 CostModel::Measured => measured,
                 CostModel::Fixed(s) => s,
-            });
+            };
+            let fate = self.config.scenario.perturb(step, task, base, tolerant);
+            durations.push(fate.duration);
+            stragglers += usize::from(fate.straggled);
+            failures += fate.extra_attempts;
             match result {
                 Ok(v) => out.push(v),
                 Err(e) => {
@@ -136,8 +163,10 @@ impl SimCluster {
                 }
             }
         }
-        let makespan = lpt_makespan(&durations, self.config.cores);
+        let speeds = self.config.scenario.speeds(self.config.cores);
+        let makespan = lpt_makespan_hetero(&durations, &speeds);
         self.clock.add_compute(makespan);
+        self.clock.add_injections(stragglers, failures);
         match first_err {
             Some(e) => Err(e),
             None => Ok(out),
@@ -302,6 +331,67 @@ mod tests {
         assert_eq!(t1, t4);
         // 9 tasks of 1 ms over 4 slots: LPT packs 3 per slot
         assert!((t1 - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scenario_inflates_blocking_steps_only() {
+        let run = |tolerant: bool| -> (f64, usize) {
+            let mut config = cfg(1, 4);
+            config.cost = CostModel::Fixed(1e-3);
+            config.scenario = ClusterScenario::parse("stragglers:p=1,slow=4x,seed=2").unwrap();
+            let mut c = SimCluster::new(config);
+            let mut plan: StepPlan<'_, usize> = StepPlan::new();
+            for i in 0..4usize {
+                plan.task(move || Ok(i));
+            }
+            if tolerant {
+                plan.mark_tolerant();
+            }
+            let _ = c.grid_step(plan).unwrap();
+            (c.clock.compute_time(), c.clock.stragglers())
+        };
+        let (blocking, hits_b) = run(false);
+        let (tolerant, hits_t) = run(true);
+        // p=1: every task straggles 4x; 4 tasks over 4 slots
+        assert!((blocking - 4e-3).abs() < 1e-12, "blocking {blocking}");
+        assert!((tolerant - 1e-3).abs() < 1e-12, "tolerant {tolerant}");
+        assert_eq!(hits_b, 4);
+        assert_eq!(hits_t, 4, "injections are counted either way");
+    }
+
+    #[test]
+    fn hetero_scenario_slows_the_clock() {
+        let run = |spec: &str| -> f64 {
+            let mut config = cfg(1, 2);
+            config.cost = CostModel::Fixed(1e-3);
+            config.scenario = ClusterScenario::parse(spec).unwrap();
+            let mut c = SimCluster::new(config);
+            let mut plan: StepPlan<'_, usize> = StepPlan::new();
+            for i in 0..4usize {
+                plan.task(move || Ok(i));
+            }
+            let _ = c.grid_step(plan).unwrap();
+            c.clock.compute_time()
+        };
+        let ideal = run("ideal");
+        let hetero = run("hetero:frac=0.5,speed=0.5");
+        assert!((ideal - 2e-3).abs() < 1e-12);
+        assert!(hetero > ideal, "hetero {hetero} vs ideal {ideal}");
+    }
+
+    #[test]
+    fn failure_scenario_recharges_tasks() {
+        let mut config = cfg(1, 1);
+        config.cost = CostModel::Fixed(1e-3);
+        config.scenario = ClusterScenario::parse("failures:p=1,retries=2,seed=3").unwrap();
+        let mut c = SimCluster::new(config);
+        let mut plan: StepPlan<'_, usize> = StepPlan::new();
+        plan.task(|| Ok(7));
+        let out = c.grid_step(plan).unwrap();
+        assert_eq!(out, vec![7], "results are never perturbed");
+        // p=1, retries=2: 2 extra attempts, 3 charges of 1 ms on one slot
+        assert!((c.clock.compute_time() - 3e-3).abs() < 1e-12);
+        assert_eq!(c.clock.failures(), 2);
     }
 
     #[test]

@@ -1,0 +1,537 @@
+//! Cluster scenarios: heterogeneous executors, stragglers, and failures.
+//!
+//! The default [`SimClock`](super::SimClock) models a perfect cluster —
+//! identical executor slots, lossless tasks.  A [`ClusterScenario`] turns
+//! that one fixed cluster into a family of them:
+//!
+//! * **heterogeneous slots** — a fraction of the simulated executor slots
+//!   run at a reduced speed factor; the superstep makespan is computed by
+//!   speed-aware LPT ([`super::simtime::lpt_makespan_hetero`]);
+//! * **stragglers** — each task independently straggles with probability
+//!   `straggler_p`; a straggling task's simulated cost is multiplied by
+//!   `straggler_slow`, optionally further inflated by a Pareto tail
+//!   (`straggler_shape > 0`) — the transient tail-latency events
+//!   RADiSA-avg's "do not wait for stragglers" design targets;
+//! * **failures** — each task independently fails and is re-executed from
+//!   scratch (Spark-style lineage recompute), re-charging its full cost
+//!   per attempt, capped at `max_retries` extra attempts;
+//! * **speculative execution** — optional Spark-style backup copies: a
+//!   straggling task's multiplier is capped at [`SPECULATION_CAP`] (the
+//!   backup launches when the task overruns its expected duration and
+//!   finishes one normal duration later), and at most one failed attempt
+//!   is re-charged.
+//!
+//! Everything is deterministic from the scenario `seed`: injections are
+//! drawn from [`Xoshiro`] substreams keyed by `(tag, superstep, task)`,
+//! never by schedule or worker thread — so scenarios are orthogonal to
+//! `--threads` (host results stay bit-identical; only the simulated clock
+//! changes) and repeat runs with the same seed reproduce the clock bit
+//! for bit.
+//!
+//! Straggler-*tolerant* supersteps (see
+//! [`StepPlan::mark_tolerant`](super::StepPlan::mark_tolerant)) model the
+//! paper's RADiSA-avg coordinator, which averages whatever partial
+//! solutions are available instead of waiting: injected straggler delays
+//! and failure re-charges do not extend the step's makespan (permanent
+//! hardware heterogeneity still applies — it is not a transient event a
+//! non-waiting coordinator can dodge).
+
+use crate::util::rng::Xoshiro;
+use anyhow::{bail, Result};
+
+/// Substream tag for straggler draws.
+const TAG_STRAGGLER: u64 = 0x57A6;
+/// Substream tag for failure draws.
+const TAG_FAILURE: u64 = 0xFA11;
+
+/// With speculative execution, a straggling task is overtaken by a backup
+/// copy launched when it overruns its expected duration: the pair finishes
+/// at most `SPECULATION_CAP` × the normal duration.
+pub const SPECULATION_CAP: f64 = 2.0;
+
+/// What the scenario did to one task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskFate {
+    /// Simulated duration actually charged to the clock.
+    pub duration: f64,
+    /// Whether a straggler event was injected.
+    pub straggled: bool,
+    /// Extra (failed) attempts injected, 0 for a clean task.
+    pub extra_attempts: usize,
+}
+
+/// A deterministic cluster-condition scenario (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterScenario {
+    /// Fraction of executor slots that are slow (0 = homogeneous).
+    pub hetero_frac: f64,
+    /// Speed factor of the slow slots (1 = full speed).
+    pub hetero_speed: f64,
+    /// Per-task straggler probability.
+    pub straggler_p: f64,
+    /// Straggler cost multiplier (≥ 1).
+    pub straggler_slow: f64,
+    /// Pareto tail shape for the straggler multiplier; 0 = deterministic
+    /// multiplier `straggler_slow`, > 0 draws `slow / (1-u)^(1/shape)`.
+    pub straggler_shape: f64,
+    /// Per-attempt task failure probability.
+    pub failure_p: f64,
+    /// Maximum extra attempts charged per task.
+    pub max_retries: usize,
+    /// Spark-style speculative re-execution (see module docs).
+    pub speculative: bool,
+    /// Scenario seed — injections are a pure function of
+    /// `(seed, superstep, task)`.
+    pub seed: u64,
+}
+
+impl Default for ClusterScenario {
+    fn default() -> Self {
+        ClusterScenario {
+            hetero_frac: 0.0,
+            hetero_speed: 1.0,
+            straggler_p: 0.0,
+            straggler_slow: 1.0,
+            straggler_shape: 0.0,
+            failure_p: 0.0,
+            max_retries: 3,
+            speculative: false,
+            seed: 0,
+        }
+    }
+}
+
+impl ClusterScenario {
+    /// The perfect cluster (no heterogeneity, no injections).
+    pub fn ideal() -> ClusterScenario {
+        ClusterScenario::default()
+    }
+
+    /// True when this scenario never perturbs anything.
+    pub fn is_ideal(&self) -> bool {
+        (self.hetero_frac <= 0.0 || self.hetero_speed >= 1.0)
+            && self.straggler_p <= 0.0
+            && self.failure_p <= 0.0
+    }
+
+    /// Parse a CLI/JSON scenario spec.  Clauses are joined with `+`:
+    ///
+    /// ```text
+    /// ideal
+    /// stragglers:p=0.1,slow=10x[,shape=1.5][,seed=7][,spec]
+    /// hetero:frac=0.25,speed=0.5
+    /// failures:p=0.05[,retries=3][,seed=7][,spec]
+    /// stragglers:p=0.1,slow=4x+failures:p=0.02
+    /// ```
+    pub fn parse(spec: &str) -> Result<ClusterScenario> {
+        let mut sc = ClusterScenario::default();
+        for clause in spec.split('+') {
+            let clause = clause.trim();
+            if clause.is_empty() || clause == "ideal" {
+                continue;
+            }
+            let (kind, params) = match clause.split_once(':') {
+                Some((k, p)) => (k, p),
+                None => (clause, ""),
+            };
+            match kind {
+                "stragglers" => {
+                    // defaults match the flag's documented example
+                    sc.straggler_p = 0.1;
+                    sc.straggler_slow = 10.0;
+                    for (key, val) in parse_params(params) {
+                        match key {
+                            "p" => sc.straggler_p = parse_prob(val, "stragglers.p")?,
+                            "slow" => {
+                                let v: f64 = val
+                                    .trim_end_matches('x')
+                                    .parse()
+                                    .map_err(|_| bad(key, val))?;
+                                if !v.is_finite() || v < 1.0 {
+                                    bail!("stragglers.slow must be a finite multiplier >= 1, got '{val}'");
+                                }
+                                sc.straggler_slow = v;
+                            }
+                            "shape" => {
+                                let v: f64 = val.parse().map_err(|_| bad(key, val))?;
+                                if !v.is_finite() || v < 0.0 {
+                                    bail!("stragglers.shape must be finite and >= 0, got '{val}'");
+                                }
+                                sc.straggler_shape = v;
+                            }
+                            "seed" => sc.seed = val.parse().map_err(|_| bad(key, val))?,
+                            "spec" => sc.speculative = parse_switch(val)?,
+                            other => bail!("unknown stragglers parameter '{other}'"),
+                        }
+                    }
+                }
+                "hetero" => {
+                    sc.hetero_frac = 0.25;
+                    sc.hetero_speed = 0.5;
+                    for (key, val) in parse_params(params) {
+                        match key {
+                            "frac" => sc.hetero_frac = parse_prob(val, "hetero.frac")?,
+                            "speed" => {
+                                let v: f64 = val.parse().map_err(|_| bad(key, val))?;
+                                if v.is_nan() || v <= 0.0 || v > 1.0 {
+                                    bail!("hetero.speed must be in (0, 1], got '{val}'");
+                                }
+                                sc.hetero_speed = v;
+                            }
+                            other => bail!("unknown hetero parameter '{other}'"),
+                        }
+                    }
+                }
+                "failures" => {
+                    sc.failure_p = 0.05;
+                    for (key, val) in parse_params(params) {
+                        match key {
+                            "p" => sc.failure_p = parse_prob(val, "failures.p")?,
+                            "retries" => {
+                                let v: usize = val.parse().map_err(|_| bad(key, val))?;
+                                if v > 16 {
+                                    bail!("failures.retries must be <= 16, got '{val}'");
+                                }
+                                sc.max_retries = v;
+                            }
+                            "seed" => sc.seed = val.parse().map_err(|_| bad(key, val))?,
+                            "spec" => sc.speculative = parse_switch(val)?,
+                            other => bail!("unknown failures parameter '{other}'"),
+                        }
+                    }
+                }
+                other => bail!(
+                    "unknown scenario '{other}' (expected ideal, stragglers, hetero or failures)"
+                ),
+            }
+        }
+        Ok(sc)
+    }
+
+    /// Human-readable label (round-trips the active clauses).
+    pub fn label(&self) -> String {
+        if self.is_ideal() {
+            return "ideal".into();
+        }
+        let mut parts = Vec::new();
+        if self.hetero_frac > 0.0 && self.hetero_speed < 1.0 {
+            parts.push(format!(
+                "hetero:frac={},speed={}",
+                self.hetero_frac, self.hetero_speed
+            ));
+        }
+        if self.straggler_p > 0.0 {
+            let mut s = format!(
+                "stragglers:p={},slow={}x",
+                self.straggler_p, self.straggler_slow
+            );
+            if self.straggler_shape > 0.0 {
+                s.push_str(&format!(",shape={}", self.straggler_shape));
+            }
+            if self.speculative {
+                s.push_str(",spec");
+            }
+            parts.push(s);
+        }
+        if self.failure_p > 0.0 {
+            let mut s = format!(
+                "failures:p={},retries={}",
+                self.failure_p, self.max_retries
+            );
+            // `spec` is a per-scenario switch; emit it once, in whichever
+            // clause comes first, so the label re-parses to the same value
+            if self.speculative && self.straggler_p <= 0.0 {
+                s.push_str(",spec");
+            }
+            parts.push(s);
+        }
+        let mut out = parts.join("+");
+        if self.seed != 0 {
+            out.push_str(&format!(" (seed {})", self.seed));
+        }
+        out
+    }
+
+    /// Per-slot speed factors for `cores` executor slots.  The slow slots
+    /// (⌈frac·cores⌉ of them) come first; slot identity is irrelevant to
+    /// the LPT makespan, so no seeding is needed here.
+    pub fn speeds(&self, cores: usize) -> Vec<f64> {
+        let cores = cores.max(1);
+        let mut speeds = vec![1.0f64; cores];
+        if self.hetero_frac > 0.0 && self.hetero_speed < 1.0 {
+            let slow = ((self.hetero_frac * cores as f64).ceil() as usize).min(cores);
+            for s in speeds.iter_mut().take(slow) {
+                *s = self.hetero_speed;
+            }
+        }
+        speeds
+    }
+
+    /// Perturb one task's base simulated cost.  Deterministic in
+    /// `(seed, step, task)`; `tolerant` supersteps keep the base duration
+    /// (injections are counted but not waited for — see module docs).
+    ///
+    /// Non-finite or negative base costs are clamped to 0 (see
+    /// [`super::simtime::lpt_makespan_hetero`] for the same policy on the
+    /// scheduler side).
+    pub fn perturb(&self, step: usize, task: usize, base: f64, tolerant: bool) -> TaskFate {
+        let base = if base.is_finite() && base > 0.0 { base } else { 0.0 };
+        let mut duration = base;
+        let mut straggled = false;
+        let mut extra = 0usize;
+        let root = Xoshiro::new(self.seed);
+
+        if self.straggler_p > 0.0 {
+            let mut rng = root.substream(TAG_STRAGGLER, step as u64, task as u64);
+            // one uniform decides *whether*, a second decides *how much*:
+            // for a fixed seed the straggler set grows with p and the
+            // multiplier grows with slow — the monotonicity the property
+            // tests pin down.
+            let hit = rng.f64() < self.straggler_p;
+            let tail_u = rng.f64();
+            if hit {
+                straggled = true;
+                let mut mult = self.straggler_slow.max(1.0);
+                if self.straggler_shape > 0.0 {
+                    mult *= (1.0 - tail_u.min(1.0 - 1e-12)).powf(-1.0 / self.straggler_shape);
+                }
+                if self.speculative {
+                    mult = mult.min(SPECULATION_CAP);
+                }
+                if !tolerant {
+                    duration *= mult;
+                }
+            }
+        }
+
+        if self.failure_p > 0.0 {
+            let mut rng = root.substream(TAG_FAILURE, step as u64, task as u64);
+            while extra < self.max_retries && rng.f64() < self.failure_p {
+                extra += 1;
+            }
+            let charged = if self.speculative { extra.min(1) } else { extra };
+            if !tolerant {
+                // each failed attempt re-ran the (possibly straggling)
+                // task from scratch before the attempt that succeeded
+                duration *= (1 + charged) as f64;
+            }
+        }
+
+        TaskFate { duration, straggled, extra_attempts: extra }
+    }
+}
+
+fn bad(key: &str, val: &str) -> anyhow::Error {
+    anyhow::anyhow!("bad scenario parameter {key}='{val}'")
+}
+
+fn parse_prob(val: &str, what: &str) -> Result<f64> {
+    let v: f64 = val
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad scenario parameter {what}='{val}'"))?;
+    if !(0.0..=1.0).contains(&v) {
+        bail!("{what} must be in [0, 1], got '{val}'");
+    }
+    Ok(v)
+}
+
+fn parse_switch(val: &str) -> Result<bool> {
+    match val {
+        "" | "true" | "1" => Ok(true),
+        "false" | "0" => Ok(false),
+        other => bail!("bad scenario switch value '{other}'"),
+    }
+}
+
+/// Split `k=v,k=v,flag` parameter lists; bare keys get an empty value.
+fn parse_params(params: &str) -> Vec<(&str, &str)> {
+    let mut out = Vec::new();
+    for item in params.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        match item.split_once('=') {
+            Some((k, v)) => out.push((k.trim(), v.trim())),
+            None => out.push((item, "")),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_ideal_noop() {
+        let sc = ClusterScenario::ideal();
+        assert!(sc.is_ideal());
+        assert_eq!(sc.speeds(8), vec![1.0; 8]);
+        let fate = sc.perturb(0, 0, 2.5, false);
+        assert_eq!(fate, TaskFate { duration: 2.5, straggled: false, extra_attempts: 0 });
+    }
+
+    #[test]
+    fn parse_stragglers_spec() {
+        let sc = ClusterScenario::parse("stragglers:p=0.2,slow=8x,seed=9").unwrap();
+        assert_eq!(sc.straggler_p, 0.2);
+        assert_eq!(sc.straggler_slow, 8.0);
+        assert_eq!(sc.seed, 9);
+        assert!(!sc.is_ideal());
+        // defaults when parameters are omitted
+        let d = ClusterScenario::parse("stragglers").unwrap();
+        assert_eq!(d.straggler_p, 0.1);
+        assert_eq!(d.straggler_slow, 10.0);
+    }
+
+    #[test]
+    fn parse_hetero_and_failures_and_combined() {
+        let sc = ClusterScenario::parse("hetero:frac=0.5,speed=0.25").unwrap();
+        assert_eq!(sc.hetero_frac, 0.5);
+        assert_eq!(sc.hetero_speed, 0.25);
+        let sc = ClusterScenario::parse("failures:p=0.1,retries=2,spec").unwrap();
+        assert_eq!(sc.failure_p, 0.1);
+        assert_eq!(sc.max_retries, 2);
+        assert!(sc.speculative);
+        let sc =
+            ClusterScenario::parse("stragglers:p=0.1,slow=4x+failures:p=0.02,seed=3").unwrap();
+        assert_eq!(sc.straggler_p, 0.1);
+        assert_eq!(sc.failure_p, 0.02);
+        assert_eq!(sc.seed, 3);
+        assert_eq!(ClusterScenario::parse("ideal").unwrap(), ClusterScenario::ideal());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(ClusterScenario::parse("warp:x=1").is_err());
+        assert!(ClusterScenario::parse("stragglers:p=1.5").is_err());
+        assert!(ClusterScenario::parse("stragglers:slow=0.5x").is_err());
+        assert!(ClusterScenario::parse("hetero:speed=0").is_err());
+        assert!(ClusterScenario::parse("hetero:speed=2").is_err());
+        assert!(ClusterScenario::parse("failures:retries=99").is_err());
+        assert!(ClusterScenario::parse("stragglers:wat=1").is_err());
+    }
+
+    #[test]
+    fn speeds_mark_leading_slots_slow() {
+        let sc = ClusterScenario::parse("hetero:frac=0.25,speed=0.5").unwrap();
+        let sp = sc.speeds(8);
+        assert_eq!(sp, vec![0.5, 0.5, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        // ceil: 25% of 2 slots -> 1 slow slot
+        assert_eq!(sc.speeds(2), vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn perturb_is_deterministic_and_seed_sensitive() {
+        let sc = ClusterScenario::parse("stragglers:p=0.5,slow=4x,seed=1+failures:p=0.3").unwrap();
+        for step in 0..4 {
+            for task in 0..6 {
+                let a = sc.perturb(step, task, 1.0, false);
+                let b = sc.perturb(step, task, 1.0, false);
+                assert_eq!(a, b);
+            }
+        }
+        let other = ClusterScenario { seed: 2, ..sc.clone() };
+        let fates_a: Vec<TaskFate> = (0..64).map(|i| sc.perturb(0, i, 1.0, false)).collect();
+        let fates_b: Vec<TaskFate> = (0..64).map(|i| other.perturb(0, i, 1.0, false)).collect();
+        assert_ne!(fates_a, fates_b);
+    }
+
+    #[test]
+    fn straggler_multiplier_applies_only_when_blocking() {
+        let sc = ClusterScenario::parse("stragglers:p=1,slow=6x,seed=5").unwrap();
+        let blocking = sc.perturb(3, 1, 2.0, false);
+        assert!(blocking.straggled);
+        assert_eq!(blocking.duration, 12.0);
+        let tolerant = sc.perturb(3, 1, 2.0, true);
+        assert!(tolerant.straggled, "injection is counted either way");
+        assert_eq!(tolerant.duration, 2.0, "but a tolerant step does not wait");
+    }
+
+    #[test]
+    fn failures_recharge_full_attempts() {
+        let sc = ClusterScenario::parse("failures:p=1,retries=3,seed=2").unwrap();
+        let fate = sc.perturb(0, 0, 1.5, false);
+        assert_eq!(fate.extra_attempts, 3);
+        assert_eq!(fate.duration, 1.5 * 4.0);
+        let tolerant = sc.perturb(0, 0, 1.5, true);
+        assert_eq!(tolerant.extra_attempts, 3);
+        assert_eq!(tolerant.duration, 1.5);
+    }
+
+    #[test]
+    fn speculation_caps_stragglers_and_retries() {
+        let sc =
+            ClusterScenario::parse("stragglers:p=1,slow=10x,spec+failures:p=1,retries=3").unwrap();
+        let fate = sc.perturb(0, 0, 1.0, false);
+        // multiplier capped at SPECULATION_CAP, at most one re-charge
+        assert_eq!(fate.duration, SPECULATION_CAP * 2.0);
+    }
+
+    #[test]
+    fn monotone_in_probability_and_severity_per_task() {
+        let mk = |p: f64, slow: f64| ClusterScenario {
+            straggler_p: p,
+            straggler_slow: slow,
+            seed: 11,
+            ..Default::default()
+        };
+        for task in 0..32 {
+            let mut prev = 0.0f64;
+            for p in [0.0, 0.1, 0.3, 0.6, 1.0] {
+                let d = mk(p, 5.0).perturb(2, task, 1.0, false).duration;
+                assert!(d >= prev, "task {task}: p={p}: {d} < {prev}");
+                prev = d;
+            }
+            let mut prev = 0.0f64;
+            for slow in [1.0, 2.0, 4.0, 16.0] {
+                let d = mk(0.5, slow).perturb(2, task, 1.0, false).duration;
+                assert!(d >= prev, "task {task}: slow={slow}: {d} < {prev}");
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_tail_inflates_beyond_slow() {
+        let sc = ClusterScenario::parse("stragglers:p=1,slow=2x,shape=1.0,seed=3").unwrap();
+        let mut any_above = false;
+        for task in 0..64 {
+            let d = sc.perturb(0, task, 1.0, false).duration;
+            assert!(d >= 2.0 - 1e-12, "tail never deflates below slow: {d}");
+            if d > 2.5 {
+                any_above = true;
+            }
+        }
+        assert!(any_above, "a Pareto tail should produce some heavy draws");
+    }
+
+    #[test]
+    fn non_finite_base_is_clamped() {
+        let sc = ClusterScenario::parse("stragglers:p=1,slow=10x").unwrap();
+        assert_eq!(sc.perturb(0, 0, f64::NAN, false).duration, 0.0);
+        assert_eq!(sc.perturb(0, 0, f64::INFINITY, false).duration, 0.0);
+        assert_eq!(sc.perturb(0, 0, -1.0, false).duration, 0.0);
+    }
+
+    #[test]
+    fn label_round_trips_through_parse() {
+        for spec in [
+            "stragglers:p=0.1,slow=10x",
+            "stragglers:p=0.3,slow=10x,spec",
+            "hetero:frac=0.25,speed=0.5",
+            "failures:p=0.05",
+            "failures:p=0.05,spec",
+            "stragglers:p=0.2,slow=4x+failures:p=0.1",
+        ] {
+            let sc = ClusterScenario::parse(spec).unwrap();
+            let relabeled = ClusterScenario::parse(
+                sc.label().split(" (seed").next().unwrap(),
+            )
+            .unwrap();
+            assert_eq!(sc, relabeled, "{spec}");
+        }
+        assert_eq!(ClusterScenario::ideal().label(), "ideal");
+    }
+}

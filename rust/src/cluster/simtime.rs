@@ -3,28 +3,74 @@
 //! Per-partition compute times are measured for real on this host, then
 //! scheduled onto `cores` simulated executor slots with the LPT
 //! (longest-processing-time-first) heuristic — the makespan is what a
-//! Spark stage of that superstep would take.  Communication time comes
-//! from the [`super::comm`] cost model.
+//! Spark stage of that superstep would take.  Under a
+//! [`ClusterScenario`](super::ClusterScenario) the slots may be
+//! heterogeneous (per-slot speed factors) and per-task costs may carry
+//! injected straggler/failure charges.  Communication time comes from the
+//! [`super::comm`] cost model.
 
 use super::comm::CommStats;
 
+/// Clamp a task duration for the scheduler: non-finite or negative
+/// durations (a pathological cost model, a clock glitch) are treated as
+/// free rather than poisoning — or panicking — the schedule.
+#[inline]
+fn sane_duration(d: f64) -> f64 {
+    if d.is_finite() && d > 0.0 {
+        d
+    } else {
+        0.0
+    }
+}
+
+/// Clamp a slot speed factor: non-finite or non-positive speeds fall back
+/// to full speed.
+#[inline]
+fn sane_speed(s: f64) -> f64 {
+    if s.is_finite() && s > 0.0 {
+        s
+    } else {
+        1.0
+    }
+}
+
 /// LPT makespan of `durations` over `slots` identical machines.
 pub fn lpt_makespan(durations: &[f64], slots: usize) -> f64 {
+    lpt_makespan_hetero(durations, &vec![1.0; slots.max(1)])
+}
+
+/// LPT makespan of `durations` over heterogeneous machines: slot `k`
+/// processes work at `speeds[k]` (a task of duration `d` occupies it for
+/// `d / speeds[k]`).  Tasks are taken longest-first and greedily assigned
+/// to the slot that would finish them earliest.
+///
+/// With all speeds equal to 1 this is bit-identical to [`lpt_makespan`]
+/// (same sort, same tie-breaking, `d / 1.0 == d`).  Non-finite or
+/// negative durations are clamped to 0 and non-finite or non-positive
+/// speeds to 1, so the result is always finite and the sort never sees a
+/// NaN (`f64::total_cmp` is used regardless, so no ordering can panic).
+pub fn lpt_makespan_hetero(durations: &[f64], speeds: &[f64]) -> f64 {
     if durations.is_empty() {
         return 0.0;
     }
-    let slots = slots.max(1);
-    let mut sorted = durations.to_vec();
-    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
-    let mut loads = vec![0.0f64; slots.min(sorted.len()).max(1)];
+    let speeds: Vec<f64> = if speeds.is_empty() {
+        vec![1.0]
+    } else {
+        speeds.iter().map(|&s| sane_speed(s)).collect()
+    };
+    let mut sorted: Vec<f64> = durations.iter().map(|&d| sane_duration(d)).collect();
+    sorted.sort_by(|a, b| b.total_cmp(a));
+    let mut loads = vec![0.0f64; speeds.len()];
     for d in sorted {
-        // assign to least-loaded slot
+        // assign to the slot with the earliest finish time for this task
         let (k, _) = loads
             .iter()
+            .zip(&speeds)
+            .map(|(&load, &speed)| load + d / speed)
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
-        loads[k] += d;
+        loads[k] += d / speeds[k];
     }
     loads.into_iter().fold(0.0, f64::max)
 }
@@ -37,6 +83,8 @@ pub struct SimClock {
     comm_bytes: usize,
     messages: usize,
     supersteps: usize,
+    stragglers: usize,
+    failures: usize,
 }
 
 impl SimClock {
@@ -53,6 +101,12 @@ impl SimClock {
         self.comm_time += stats.time;
         self.comm_bytes += stats.bytes;
         self.messages += stats.messages;
+    }
+
+    /// Record scenario injections observed in one superstep.
+    pub fn add_injections(&mut self, stragglers: usize, failures: usize) {
+        self.stragglers += stragglers;
+        self.failures += failures;
     }
 
     /// Total simulated wall time.
@@ -78,6 +132,16 @@ impl SimClock {
 
     pub fn supersteps(&self) -> usize {
         self.supersteps
+    }
+
+    /// Straggler events injected by the active scenario.
+    pub fn stragglers(&self) -> usize {
+        self.stragglers
+    }
+
+    /// Failed task attempts injected by the active scenario.
+    pub fn failures(&self) -> usize {
+        self.failures
     }
 }
 
@@ -125,14 +189,73 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_durations_do_not_panic_or_poison() {
+        // the seed version sorted with partial_cmp().unwrap(): a single
+        // NaN paniced the whole simulation
+        let d = [1.0, f64::NAN, 2.0, f64::INFINITY, -3.0];
+        let m = lpt_makespan(&d, 2);
+        assert!(m.is_finite());
+        // NaN/inf/negatives clamp to 0: schedule is {1, 2} over 2 slots
+        assert!((m - 2.0).abs() < 1e-12);
+        let mh = lpt_makespan_hetero(&d, &[f64::NAN, 0.0, -2.0]);
+        assert!(mh.is_finite());
+    }
+
+    #[test]
+    fn hetero_uniform_speeds_match_uniform_lpt() {
+        let d = [0.5, 1.0, 0.7, 0.3, 0.9, 1.1, 0.2];
+        for slots in 1..6 {
+            let a = lpt_makespan(&d, slots);
+            let b = lpt_makespan_hetero(&d, &vec![1.0; slots]);
+            assert_eq!(a.to_bits(), b.to_bits(), "slots {slots}");
+        }
+    }
+
+    #[test]
+    fn hetero_slow_slot_stretches_single_task() {
+        // one task on one half-speed slot takes twice as long
+        assert!((lpt_makespan_hetero(&[3.0], &[0.5]) - 6.0).abs() < 1e-12);
+        // but with a full-speed slot available, the task goes there
+        assert!((lpt_makespan_hetero(&[3.0], &[0.5, 1.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hetero_prefers_fast_slots() {
+        // 4 equal tasks over {1, 0.25}: putting any task on the slow slot
+        // costs 4; LPT instead stacks all four on the fast slot (cost 4,
+        // tie) — makespan must not exceed the all-fast bound
+        let m = lpt_makespan_hetero(&[1.0, 1.0, 1.0, 1.0], &[1.0, 0.25]);
+        assert!(m <= 4.0 + 1e-12, "makespan {m}");
+        // 2 tasks over {1, 0.5}: one each (1.0 vs 2.0) or both fast (2.0)
+        let m2 = lpt_makespan_hetero(&[1.0, 1.0], &[1.0, 0.5]);
+        assert!((m2 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hetero_lower_bounds_hold() {
+        let d = [2.0, 1.0, 0.5, 3.0, 0.25];
+        let speeds = [1.0, 0.5, 0.25];
+        let m = lpt_makespan_hetero(&d, &speeds);
+        let smax = 1.0f64;
+        let total_d: f64 = d.iter().sum();
+        let total_s: f64 = speeds.iter().sum();
+        assert!(m >= 3.0 / smax - 1e-12, "max scaled duration bound");
+        assert!(m >= total_d / total_s - 1e-12, "total work / total speed bound");
+    }
+
+    #[test]
     fn clock_accumulates() {
         let mut c = SimClock::new();
         c.add_compute(1.5);
         c.add_compute(0.5);
         c.add_comm(CommStats { time: 0.25, bytes: 100, messages: 3 });
+        c.add_injections(2, 1);
+        c.add_injections(0, 3);
         assert!((c.now() - 2.25).abs() < 1e-12);
         assert_eq!(c.supersteps(), 2);
         assert_eq!(c.comm_bytes(), 100);
         assert_eq!(c.messages(), 3);
+        assert_eq!(c.stragglers(), 2);
+        assert_eq!(c.failures(), 4);
     }
 }

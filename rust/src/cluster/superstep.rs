@@ -41,15 +41,31 @@ pub enum CostModel {
 /// results come back in task order.
 pub struct StepPlan<'env, V> {
     tasks: Vec<PlanTask<'env, Result<V>>>,
+    tolerant: bool,
 }
 
 impl<'env, V: Send> StepPlan<'env, V> {
     pub fn new() -> Self {
-        StepPlan { tasks: Vec::new() }
+        StepPlan { tasks: Vec::new(), tolerant: false }
     }
 
     pub fn with_capacity(n: usize) -> Self {
-        StepPlan { tasks: Vec::with_capacity(n) }
+        StepPlan { tasks: Vec::with_capacity(n), tolerant: false }
+    }
+
+    /// Mark this superstep straggler-tolerant: its combine admits partial
+    /// or slightly-stale contributions (an average, not a concatenation),
+    /// so the coordinator "does not wait for stragglers" — under a
+    /// [`ClusterScenario`](super::ClusterScenario) the step's makespan
+    /// ignores injected straggler delays and failure re-charges (permanent
+    /// slot heterogeneity still applies).  A no-op on the ideal scenario.
+    pub fn mark_tolerant(&mut self) {
+        self.tolerant = true;
+    }
+
+    /// Whether this superstep waits for injected stragglers.
+    pub fn is_tolerant(&self) -> bool {
+        self.tolerant
     }
 
     /// Append one per-partition task.
@@ -125,5 +141,13 @@ mod tests {
     #[test]
     fn cost_model_default_is_measured() {
         assert_eq!(CostModel::default(), CostModel::Measured);
+    }
+
+    #[test]
+    fn plans_are_blocking_unless_marked() {
+        let mut plan: StepPlan<'_, ()> = StepPlan::new();
+        assert!(!plan.is_tolerant());
+        plan.mark_tolerant();
+        assert!(plan.is_tolerant());
     }
 }

@@ -37,8 +37,10 @@ pub struct ExperimentConfig {
     /// ADMM penalty ρ (paper sets ρ = λ).
     pub rho: f32,
     /// Cluster cost model + execution: JSON keys `cores` (simulated
-    /// executor slots) and `threads` (host worker threads for the
-    /// superstep engine; defaults to the host's hardware parallelism).
+    /// executor slots), `threads` (host worker threads for the superstep
+    /// engine; defaults to the host's hardware parallelism), and
+    /// `scenario` (a cluster-condition spec string, same grammar as the
+    /// CLI `--scenario` flag — e.g. `"stragglers:p=0.1,slow=10x"`).
     pub cluster: ClusterConfig,
     pub backend: String, // "native" | "xla"
 }
@@ -132,6 +134,10 @@ impl ExperimentConfig {
         if let Some(x) = v.get("threads").and_then(|x| x.as_usize()) {
             c.cluster.threads = x;
         }
+        if let Some(x) = v.get("scenario").and_then(|x| x.as_str()) {
+            // same spec grammar as the CLI --scenario flag
+            c.cluster.scenario = crate::cluster::ClusterScenario::parse(x)?;
+        }
         if let Some(x) = v.get("backend").and_then(|x| x.as_str()) {
             if x != "native" && x != "xla" {
                 bail!("unknown backend '{x}'");
@@ -177,7 +183,8 @@ mod tests {
           "name": "fig3-cell", "p": 4, "q": 2, "loss": "hinge",
           "lambda": 1e-4, "iterations": 50, "gamma": 0.05,
           "dataset": {"kind": "dense", "n_per": 2000, "m_per": 3000},
-          "cores": 8, "threads": 3, "backend": "xla"
+          "cores": 8, "threads": 3, "backend": "xla",
+          "scenario": "stragglers:p=0.2,slow=8x,seed=5"
         }"#;
         let c = ExperimentConfig::from_json(&Json::parse(text).unwrap()).unwrap();
         assert_eq!(c.p, 4);
@@ -186,7 +193,20 @@ mod tests {
         assert_eq!(c.backend, "xla");
         assert_eq!(c.cluster.cores, 8);
         assert_eq!(c.cluster.threads, 3);
+        assert_eq!(c.cluster.scenario.straggler_p, 0.2);
+        assert_eq!(c.cluster.scenario.straggler_slow, 8.0);
+        assert_eq!(c.cluster.scenario.seed, 5);
         assert_eq!(c.dataset, DatasetSpec::Dense { n_per: 2000, m_per: 3000 });
+    }
+
+    #[test]
+    fn scenario_defaults_to_ideal_and_rejects_bad_specs() {
+        let c = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(c.cluster.scenario.is_ideal());
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"scenario":"warp:9"}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -51,7 +51,12 @@ pub struct RunResult {
     pub sim_time: f64,
     pub wall_time: f64,
     pub comm_bytes: usize,
+    pub messages: usize,
     pub supersteps: usize,
+    /// Straggler events injected by the cluster scenario (0 when ideal).
+    pub stragglers: usize,
+    /// Failed task attempts injected by the cluster scenario (0 when ideal).
+    pub failures: usize,
 }
 
 /// Builder-style driver.
@@ -165,7 +170,10 @@ impl<'a> Driver<'a> {
             sim_time: cluster.clock.now(),
             wall_time: cluster.host_secs(),
             comm_bytes: cluster.clock.comm_bytes(),
+            messages: cluster.clock.messages(),
             supersteps: cluster.clock.supersteps(),
+            stragglers: cluster.clock.stragglers(),
+            failures: cluster.clock.failures(),
         })
     }
 }

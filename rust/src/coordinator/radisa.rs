@@ -256,6 +256,14 @@ impl Optimizer for Radisa {
                     });
                 }
             }
+            if self.cfg.average {
+                // RADiSA-avg's combine is an average of full-block partial
+                // solutions, so the coordinator "does not wait for
+                // stragglers" (paper §IV): under a cluster scenario this
+                // superstep's makespan ignores injected straggler delays
+                // and failure re-charges.
+                plan.mark_tolerant();
+            }
             let results = cluster.grid_step(plan)?; // [q*pp + p]
 
             // step 12: combine in task order — concatenate each partition's

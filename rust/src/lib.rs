@@ -57,7 +57,9 @@ pub mod util;
 
 /// Convenient re-exports of the types most programs need.
 pub mod prelude {
-    pub use crate::cluster::{host_threads, ClusterConfig, CostModel, SimCluster, StepPlan};
+    pub use crate::cluster::{
+        host_threads, ClusterConfig, ClusterScenario, CostModel, SimCluster, StepPlan,
+    };
     pub use crate::config::ExperimentConfig;
     pub use crate::coordinator::{
         Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa,

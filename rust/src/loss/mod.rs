@@ -160,6 +160,30 @@ mod tests {
     }
 
     #[test]
+    fn slope_matches_finite_difference_on_a_margin_sweep() {
+        // dense sweep away from the hinge kink (z*y = 1, where the
+        // subgradient makes the central difference meaningless)
+        let h = 1e-3f32;
+        for loss in [Loss::Hinge, Loss::Logistic, Loss::Squared] {
+            for y in [-1.0f32, 1.0] {
+                let mut z = -3.0f32;
+                while z <= 3.0 {
+                    if loss != Loss::Hinge || (z * y - 1.0).abs() > 10.0 * h {
+                        let num =
+                            (loss.value(z + h, y) - loss.value(z - h, y)) / (2.0 * h);
+                        let ana = loss.slope(z, y);
+                        assert!(
+                            (num - ana).abs() < 5e-3,
+                            "{loss:?} z={z} y={y}: fd {num} vs slope {ana}"
+                        );
+                    }
+                    z += 0.37;
+                }
+            }
+        }
+    }
+
+    #[test]
     fn hinge_dual_box() {
         let l = Loss::Hinge;
         assert!(l.dual_feasible(0.5, 1.0, 0.0));
@@ -167,6 +191,44 @@ mod tests {
         assert!(!l.dual_feasible(-0.1, 1.0, 1e-6));
         assert!(!l.dual_feasible(1.1, 1.0, 1e-6));
         assert_eq!(l.dual_linear(0.7, 1.0), 0.7);
+    }
+
+    #[test]
+    fn sdca_closed_form_is_hinge_only() {
+        assert!(Loss::Hinge.has_sdca_closed_form());
+        assert!(!Loss::Logistic.has_sdca_closed_form());
+        assert!(!Loss::Squared.has_sdca_closed_form());
+    }
+
+    #[test]
+    fn dual_linear_is_bilinear_for_hinge_and_nan_elsewhere() {
+        let l = Loss::Hinge;
+        // a·y on the box, including the boundary and negative labels
+        assert_eq!(l.dual_linear(0.0, 1.0), 0.0);
+        assert_eq!(l.dual_linear(1.0, 1.0), 1.0);
+        assert_eq!(l.dual_linear(-1.0, -1.0), 1.0);
+        assert_eq!(l.dual_linear(-0.25, -1.0), 0.25);
+        // the dual path is hinge-only: other losses must loudly NaN
+        assert!(Loss::Logistic.dual_linear(0.5, 1.0).is_nan());
+        assert!(Loss::Squared.dual_linear(0.5, 1.0).is_nan());
+    }
+
+    #[test]
+    fn dual_feasible_box_edges_and_tolerance() {
+        let l = Loss::Hinge;
+        // exact box edges are feasible at zero tolerance
+        assert!(l.dual_feasible(0.0, 1.0, 0.0));
+        assert!(l.dual_feasible(1.0, 1.0, 0.0));
+        assert!(l.dual_feasible(-1.0, -1.0, 0.0));
+        // tolerance admits small excursions, and only small ones
+        assert!(l.dual_feasible(1.05, 1.0, 0.1));
+        assert!(l.dual_feasible(-0.05, 1.0, 0.1));
+        assert!(!l.dual_feasible(1.2, 1.0, 0.1));
+        // sign matters: a and y must agree for a·y to be in [0, 1]
+        assert!(!l.dual_feasible(0.5, -1.0, 1e-6));
+        // non-hinge losses have no box: everything is feasible
+        assert!(Loss::Logistic.dual_feasible(42.0, 1.0, 0.0));
+        assert!(Loss::Squared.dual_feasible(-42.0, 1.0, 0.0));
     }
 
     #[test]

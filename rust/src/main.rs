@@ -5,8 +5,10 @@
 //!             [--p 4 --q 2] [--lambda 1e-3] [--gamma 0.05] [--iters 30]
 //!             [--backend native|xla] [--loss hinge|logistic]
 //!             [--cores 8] [--threads N]  (threads default: host parallelism)
+//!             [--scenario ideal|stragglers:p=0.1,slow=10x|hetero:frac=0.25,speed=0.5|failures:p=0.05]
 //!             [--n-per 200 --m-per 150 | --sparse n,m,density]
-//! ddopt exp <table1|fig3|fig4|fig5|fig6|perf|ablations|all> [--scale small|paper]
+//! ddopt exp <table1|fig3|fig4|fig5|fig6|perf|ablations|stragglers|all>
+//!           [--scale small|paper] [--seed N]  (seed: stragglers scenario seed)
 //! ddopt gen-data --out data.libsvm [--n 1000 --m 500 --density 0.01]
 //! ddopt fstar [--lambda 0.1] [dataset flags as in train]
 //! ddopt artifacts-info
@@ -82,6 +84,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(t) = args.flag::<usize>("threads") {
         cfg.cluster.threads = t;
     }
+    if let Some(s) = args.flag_str("scenario") {
+        cfg.cluster.scenario = ddopt::cluster::ClusterScenario::parse(&s)?;
+    }
     if let Some(l) = args.flag_str("loss") {
         cfg.loss = Loss::parse(&l).ok_or_else(|| anyhow!("bad loss '{l}'"))?;
     }
@@ -132,9 +137,10 @@ fn run_train(args: &Args) -> Result<()> {
 
     let ds = cfg.build_dataset()?;
     println!(
-        "dataset {} ({} x {}, sparsity {:.3}%)  grid {}x{}  lambda={:.1e}  backend={}  threads={}",
+        "dataset {} ({} x {}, sparsity {:.3}%)  grid {}x{}  lambda={:.1e}  backend={}  threads={}  scenario={}",
         ds.name, ds.n(), ds.m(), 100.0 * ds.sparsity(),
-        cfg.p, cfg.q, cfg.lambda, cfg.backend, cfg.cluster.threads
+        cfg.p, cfg.q, cfg.lambda, cfg.backend, cfg.cluster.threads,
+        cfg.cluster.scenario.label()
     );
     let part = Partitioned::split(&ds, Grid::new(cfg.p, cfg.q));
     let backend = make_backend(&cfg)?;
@@ -198,6 +204,12 @@ fn run_train(args: &Args) -> Result<()> {
         result.comm_bytes as f64 / (1 << 20) as f64,
         result.supersteps
     );
+    if result.stragglers > 0 || result.failures > 0 {
+        println!(
+            "scenario injected {} straggler events and {} failed attempts",
+            result.stragglers, result.failures
+        );
+    }
     if let Some(path) = out {
         write_csv(&result.history, Path::new(&path))?;
         println!("history -> {path}");
@@ -213,6 +225,8 @@ fn run_exp(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("exp wants an experiment id"))?;
     let scale = Scale::parse(&args.flag_str("scale").unwrap_or_else(|| "small".into()))
         .ok_or_else(|| anyhow!("--scale small|paper"))?;
+    // scenario seed for the stragglers sweep (ignored by the other ids)
+    let seed = args.flag::<u64>("seed").unwrap_or(1);
     args.finish().map_err(|e| anyhow!(e))?;
     match which.as_str() {
         "table1" => bench_harness::table1::run(scale),
@@ -222,12 +236,14 @@ fn run_exp(args: &Args) -> Result<()> {
         "fig6" => bench_harness::fig6::run(scale),
         "perf" => bench_harness::perf::run(scale),
         "ablations" => bench_harness::ablations::run(scale),
+        "stragglers" => bench_harness::stragglers::run(scale, seed),
         "all" => {
             bench_harness::table1::run(scale)?;
             bench_harness::fig3::run(scale)?;
             bench_harness::fig4::run(scale)?;
             bench_harness::fig5::run(scale)?;
             bench_harness::fig6::run(scale)?;
+            bench_harness::stragglers::run(scale, seed)?;
             bench_harness::perf::run(scale)
         }
         other => bail!("unknown experiment '{other}'"),

@@ -1,0 +1,283 @@
+//! Golden-trace regression: `CostModel::Fixed` + a pinned scenario seed
+//! must produce *exact* simulated-clock totals for one short run of each
+//! of D3CA, RADiSA (plain and -avg) and ADMM — so future clock refactors
+//! can't silently drift.
+//!
+//! The expectations are computed by an independent in-test mirror of the
+//! cost model: its own LPT loop, its own tree-reduce/broadcast charge
+//! arithmetic, its own replay of the scenario's injection draws (the
+//! substream tags `0x57A6`/`0xFA11` and draw order are pinned here as
+//! part of the contract), fed by a hand-written trace of every cluster
+//! call each coordinator makes per iteration.  If a refactor changes the
+//! superstep structure, a collective's payload, the charge arithmetic,
+//! or the injection keying, the mirrored totals diverge and this test
+//! fails.  `comm_bytes`/`messages`/`supersteps` are additionally pinned
+//! as hand-derived integer literals.
+//!
+//! Config: 2×2 grid over a 24×20 dense synthetic (n_p = 12, m_q = 10),
+//! 2 simulated cores, `Fixed(1e-3)` task cost, 2 iterations, scenario
+//! `stragglers:p=0.25,slow=3x,seed=11+failures:p=0.15,retries=2`.
+
+use ddopt::cluster::{ClusterConfig, ClusterScenario, CostModel};
+use ddopt::coordinator::{
+    Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa, RadisaConfig,
+    RunResult,
+};
+use ddopt::data::{Grid, Partitioned, SyntheticDense};
+use ddopt::runtime::Backend;
+use ddopt::util::rng::Xoshiro;
+
+const P: usize = 2;
+const Q: usize = 2;
+const N_PER: usize = 12; // n_p = 12 -> 48-byte dual/margin payloads
+const M_PER: usize = 10; // m_q = 10 -> 40-byte primal payloads
+const CORES: usize = 2;
+const ITERS: usize = 2;
+const C: f64 = 1e-3; // fixed per-task cost
+
+// ClusterConfig::default() cost-model constants
+const LAT: f64 = 200e-6;
+const BW: f64 = 125e6;
+
+// the pinned scenario
+const SPEC: &str = "stragglers:p=0.25,slow=3x,seed=11+failures:p=0.15,retries=2";
+const SEED: u64 = 11;
+const SP: f64 = 0.25;
+const SLOW: f64 = 3.0;
+const FP: f64 = 0.15;
+const RETRIES: usize = 2;
+
+fn run(make: impl FnOnce() -> Box<dyn Optimizer>) -> RunResult {
+    let ds = SyntheticDense::paper_part1(P, Q, N_PER, M_PER, 0.1, 9).build();
+    let part = Partitioned::split(&ds, Grid::new(P, Q));
+    assert_eq!(part.row_ranges, vec![(0, 12), (12, 24)], "uniform rows assumed");
+    assert_eq!(part.col_ranges, vec![(0, 10), (10, 20)], "uniform cols assumed");
+    let backend = Backend::native();
+    let mut opt = make();
+    Driver::new(&part, &backend)
+        .unwrap()
+        .iterations(ITERS)
+        .cluster(ClusterConfig {
+            cores: CORES,
+            threads: 1,
+            cost: CostModel::Fixed(C),
+            scenario: ClusterScenario::parse(SPEC).unwrap(),
+            ..Default::default()
+        })
+        .run(opt.as_mut())
+        .unwrap()
+}
+
+/// Independent re-implementation of the simulated clock's arithmetic.
+#[derive(Default)]
+struct Mirror {
+    compute: f64,
+    comm: f64,
+    bytes: usize,
+    messages: usize,
+    step: usize,
+    stragglers: usize,
+    failures: usize,
+}
+
+/// Uniform-speed LPT, re-implemented: longest first, earliest finish
+/// wins, first slot wins ties.
+fn mirror_lpt(durations: &[f64], slots: usize) -> f64 {
+    let mut sorted = durations.to_vec();
+    sorted.sort_by(|a, b| b.total_cmp(a));
+    let mut loads = vec![0.0f64; slots];
+    for d in sorted {
+        let (k, _) = loads
+            .iter()
+            .map(|&load| load + d)
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap();
+        loads[k] += d;
+    }
+    loads.into_iter().fold(0.0, f64::max)
+}
+
+impl Mirror {
+    /// Replay the scenario's injection draws for one task and return its
+    /// charged duration.
+    fn fate(&mut self, task: usize, tolerant: bool) -> f64 {
+        let mut rs = Xoshiro::new(SEED).substream(0x57A6, self.step as u64, task as u64);
+        let hit = rs.f64() < SP;
+        let _tail = rs.f64(); // severity draw (unused: shape = 0)
+        let mut rf = Xoshiro::new(SEED).substream(0xFA11, self.step as u64, task as u64);
+        let mut extra = 0usize;
+        while extra < RETRIES && rf.f64() < FP {
+            extra += 1;
+        }
+        self.stragglers += usize::from(hit);
+        self.failures += extra;
+        let mut d = C;
+        if !tolerant {
+            if hit {
+                d *= SLOW;
+            }
+            d *= (1 + extra) as f64;
+        }
+        d
+    }
+
+    fn superstep(&mut self, tasks: usize, tolerant: bool) {
+        let durations: Vec<f64> = (0..tasks).map(|i| self.fate(i, tolerant)).collect();
+        self.compute += mirror_lpt(&durations, CORES);
+        self.step += 1;
+    }
+
+    fn reduce(&mut self, leaves: usize, bytes_per_leaf: usize) {
+        let mut t = 0.0f64;
+        let mut k = leaves;
+        while k > 1 {
+            let pairs = k / 2;
+            let level = pairs * bytes_per_leaf;
+            t += LAT + level as f64 / BW / (pairs as f64);
+            self.bytes += level;
+            self.messages += pairs;
+            k -= pairs;
+        }
+        self.comm += t;
+    }
+
+    fn broadcast(&mut self, bytes: usize, fanout: usize) {
+        let depth = (fanout as f64).log2().ceil().max(1.0);
+        self.comm += depth * (LAT + bytes as f64 / BW);
+        self.bytes += bytes * fanout;
+        self.messages += fanout;
+    }
+
+    fn sim_time(&self) -> f64 {
+        self.compute + self.comm
+    }
+}
+
+fn assert_matches(r: &RunResult, m: &Mirror, supersteps: usize, what: &str) {
+    assert_eq!(r.supersteps, supersteps, "{what}: supersteps");
+    assert_eq!(r.comm_bytes, m.bytes, "{what}: comm bytes");
+    assert_eq!(r.messages, m.messages, "{what}: messages");
+    assert_eq!(r.stragglers, m.stragglers, "{what}: straggler count");
+    assert_eq!(r.failures, m.failures, "{what}: failure count");
+    assert_eq!(
+        r.sim_time.to_bits(),
+        m.sim_time().to_bits(),
+        "{what}: sim_time {} != mirrored {}",
+        r.sim_time,
+        m.sim_time()
+    );
+}
+
+#[test]
+fn d3ca_golden_trace() {
+    let r = run(|| Box::new(D3ca::new(D3caConfig { lambda: 0.2, seed: 5, ..Default::default() })));
+    let mut m = Mirror::default();
+    for _t in 0..ITERS {
+        for _q in 0..Q {
+            m.broadcast(M_PER * 4, P); // w[.,q] to the column's partitions
+        }
+        for _p in 0..P {
+            m.broadcast(N_PER * 4, Q); // alpha[p,.] to the row's partitions
+        }
+        m.superstep(P * Q, false); // local dual methods
+        for _p in 0..P {
+            m.reduce(Q, N_PER * 4); // dual averaging over q
+        }
+        m.superstep(P * Q, false); // primal recovery x^T alpha
+        for _q in 0..Q {
+            m.reduce(P, M_PER * 4); // primal reduce over p
+        }
+    }
+    // hand-derived integers: per iter 2*(40*2) + 2*(48*2) + 2*48 + 2*40
+    // bytes and 2*2 + 2*2 + 2 + 2 messages
+    assert_eq!(m.bytes, 1056);
+    assert_eq!(m.messages, 24);
+    assert_matches(&r, &m, 2 * ITERS, "d3ca");
+}
+
+fn radisa_mirror(average: bool) -> Mirror {
+    let mut m = Mirror::default();
+    for _t in 0..ITERS {
+        m.broadcast(Q * M_PER * 4, P * Q); // snapshot w~ (m = Q*M_PER = 20)
+        m.superstep(P * Q, false); // margins pass
+        for _p in 0..P {
+            m.reduce(Q, N_PER * 4); // margins reduce over q
+        }
+        m.superstep(P * Q, false); // gradient pass
+        for _q in 0..Q {
+            m.reduce(P, M_PER * 4); // gradient reduce over p
+        }
+        m.superstep(P * Q, average); // SVRG pass: tolerant iff averaging
+        for _q in 0..Q {
+            if average {
+                m.reduce(P.max(2), M_PER * 4); // full-block averaging
+            } else {
+                m.broadcast(M_PER * 4 / P, P); // sub-block concatenation
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn radisa_golden_trace() {
+    let r = run(|| {
+        Box::new(Radisa::new(RadisaConfig {
+            lambda: 0.1,
+            gamma: 0.1,
+            seed: 5,
+            ..Default::default()
+        }))
+    });
+    let m = radisa_mirror(false);
+    // per iter: 80*4 + 2*48 + 2*40 + 2*(20*2) bytes; 4 + 2 + 2 + 2*2 msgs
+    assert_eq!(m.bytes, 1152);
+    assert_eq!(m.messages, 24);
+    assert_matches(&r, &m, 3 * ITERS, "radisa");
+}
+
+#[test]
+fn radisa_avg_golden_trace() {
+    let r = run(|| {
+        Box::new(Radisa::new(RadisaConfig {
+            lambda: 0.1,
+            gamma: 0.1,
+            average: true,
+            seed: 5,
+            ..Default::default()
+        }))
+    });
+    let m = radisa_mirror(true);
+    // per iter: 80*4 + 2*48 + 2*40 + 2*40 bytes; 4 + 2 + 2 + 2 msgs
+    assert_eq!(m.bytes, 1152);
+    assert_eq!(m.messages, 20);
+    assert_matches(&r, &m, 3 * ITERS, "radisa-avg");
+    // the tolerant SVRG pass must make -avg's clock cheaper than plain's
+    // under this straggler scenario (compute-side only)
+    let plain = radisa_mirror(false);
+    assert!(m.compute < plain.compute, "{} vs {}", m.compute, plain.compute);
+}
+
+#[test]
+fn admm_golden_trace() {
+    let r = run(|| Box::new(Admm::new(AdmmConfig { lambda: 0.2, rho: 0.2 })));
+    let mut m = Mirror::default();
+    for _t in 0..ITERS {
+        for _q in 0..Q {
+            m.broadcast(M_PER * 4, P); // w_q to the column's partitions
+        }
+        m.superstep(P * Q, false); // graph projections
+        for _q in 0..Q {
+            m.reduce(P, M_PER * 4); // feature consensus over p
+        }
+        for _p in 0..P {
+            m.reduce(Q, N_PER * 4); // response sharing over q
+        }
+        m.superstep(P, false); // hinge prox: one task per row partition
+    }
+    // per iter: 2*(40*2) + 2*40 + 2*48 bytes; 2*2 + 2 + 2 msgs
+    assert_eq!(m.bytes, 672);
+    assert_eq!(m.messages, 16);
+    assert_matches(&r, &m, 2 * ITERS, "admm");
+}

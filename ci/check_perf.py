@@ -1,0 +1,50 @@
+#!/usr/bin/env python3
+"""Gate BENCH_perf.json against checked-in thresholds (CI perf-smoke job).
+
+Usage: check_perf.py BENCH_perf.json ci/perf_thresholds.json
+
+Fails (exit 1) when any steady-state allocations/iteration entry — other
+than the retained "(before)" baselines — exceeds the ceiling, or when the
+bench was produced without the counting allocator.
+"""
+import json
+import sys
+
+
+def main() -> int:
+    bench = json.load(open(sys.argv[1]))
+    thresholds = json.load(open(sys.argv[2]))
+    ceiling = thresholds["max_steady_allocs_per_iter"]
+
+    if not bench.get("alloc_counting_enabled", False):
+        print("FAIL: bench was built without --features bench-alloc")
+        return 1
+
+    allocs = bench.get("steady_state_allocs", {})
+    if not allocs:
+        print("FAIL: no steady_state_allocs section in bench")
+        return 1
+
+    failures = []
+    for key, value in sorted(allocs.items()):
+        if "before" in key:
+            print(f"  (baseline) {key} = {value}")
+            continue
+        if value is None:
+            failures.append(f"{key}: no measurement")
+        elif value > ceiling:
+            failures.append(f"{key}: {value} allocs/iter > ceiling {ceiling}")
+        else:
+            print(f"  OK {key} = {value} (ceiling {ceiling})")
+
+    if failures:
+        print("FAIL: steady-state allocation regression:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

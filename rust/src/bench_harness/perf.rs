@@ -1,21 +1,38 @@
 //! §Perf — the whole-stack profiling harness behind EXPERIMENTS.md §Perf.
 //!
 //! L3: native kernel throughput (GFLOP/s for margins/atx, steps/s for
-//! SDCA/SVRG) + coordinator overhead (iteration time minus kernel time).
+//! SDCA/SVRG) + coordinator overhead (iteration time minus kernel time)
+//! + sparse before/after microbenches (CSC mirror vs CSR scatter,
+//! window-indexed vs scanning windowed ops) + steady-state
+//! allocations/iteration under the `bench-alloc` counting allocator.
 //! L2/XLA: per-op execute times through the PJRT engine, compile cost,
 //! staging footprint.
 //! L1: analytic VMEM/MXU estimates for the Pallas BlockSpecs (interpret
 //! mode gives no real TPU timing — see DESIGN.md §Hardware-Adaptation).
+//!
+//! Besides the human-readable table (`results/perf.md`), `run` writes the
+//! machine-readable **`BENCH_perf.json` at the repo root** — the recorded
+//! perf trajectory this and future PRs regress against.  "Before" numbers
+//! (the pre-PR kernels and the boxed-superstep pipeline) are measured in
+//! the same run from the retained baseline code paths, so the file always
+//! carries a same-host before/after pair.
 
 use super::common;
 use super::Scale;
-use crate::cluster::ClusterConfig;
-use crate::coordinator::{D3ca, D3caConfig, Driver, Radisa, RadisaConfig};
-use crate::data::{Grid, Partitioned, SyntheticDense};
+use crate::cluster::{ClusterConfig, SimCluster, StepPlan};
+use crate::coordinator::{
+    Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa, RadisaConfig,
+};
+use crate::data::{
+    balanced_ranges, Grid, Partitioned, SubblockIndex, SyntheticDense, SyntheticSparse,
+};
 use crate::metrics::markdown_table;
-use crate::runtime::Backend;
+use crate::runtime::{Backend, StagedGrid};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro;
 use crate::util::timer::Timer;
 use anyhow::Result;
+use std::path::{Path, PathBuf};
 
 fn gflops(flops: f64, secs: f64) -> f64 {
     flops / secs / 1e9
@@ -53,9 +70,15 @@ pub fn native_kernels(n: usize, m: usize, reps: usize) -> Vec<(String, f64)> {
     let alpha = vec![0.0f32; n];
     let norms = crate::solvers::row_norms(&ds.x);
     let idx = rng.index_stream(n, n);
+    let mut da = vec![0.0f32; n];
+    let mut a_buf = vec![0.0f32; n];
+    let mut w_buf = vec![0.0f32; m];
     let t = Timer::start();
     for _ in 0..reps {
-        let _ = crate::solvers::sdca_epoch(&ds.x, &ds.y, &norms, &alpha, &w, &idx, n, lamn, 1.0, 0.0);
+        crate::solvers::sdca_epoch_into(
+            &ds.x, &ds.y, &norms, &alpha, &w, &idx, n, lamn, 1.0, 0.0, &mut da,
+            &mut a_buf, &mut w_buf,
+        );
     }
     results.push((
         "sdca Msteps/s".into(),
@@ -66,10 +89,12 @@ pub fn native_kernels(n: usize, m: usize, reps: usize) -> Vec<(String, f64)> {
     let mut mt = vec![0.0f32; n];
     ds.x.margins_into(&wt, &mut mt);
     let mu = vec![0.0f32; m];
+    let mut wrun = vec![0.0f32; m];
+    let mut delta_buf = Vec::new();
     let t = Timer::start();
     for _ in 0..reps {
-        let mut wrun = wt.clone();
-        crate::solvers::svrg_block(
+        wrun.copy_from_slice(&wt);
+        crate::solvers::svrg_block_win(
             crate::loss::Loss::Hinge,
             &ds.x,
             &ds.y,
@@ -83,11 +108,89 @@ pub fn native_kernels(n: usize, m: usize, reps: usize) -> Vec<(String, f64)> {
             n,
             0.01,
             0.1,
+            None,
+            &mut delta_buf,
         );
     }
     results.push((
         "svrg Msteps/s".into(),
         (n * reps) as f64 / t.secs() / 1e6,
+    ));
+    results
+}
+
+/// Sparse kernel before/after microbenches at text-classification
+/// density: the CSC-mirror transpose product vs the pre-PR CSR scatter,
+/// and the window-indexed sub-block ops vs the pre-PR per-row scans.
+/// GFLOP/s counts *useful* flops (2·nnz per full pass / per full window
+/// sweep), so the indexed variants show their real advantage: they touch
+/// only the entries that contribute.
+pub fn sparse_kernels(n: usize, m: usize, density: f64, reps: usize) -> Vec<(String, f64)> {
+    let ds = SyntheticSparse::new("perf-sparse", n, m, density, 5).build();
+    let mut sm = ds.x.as_sparse().expect("sparse generator yields CSR").clone();
+    sm.build_csc(); // bench the mirror path partition blocks use
+    let sm = &sm;
+    let nnz = sm.nnz();
+    let mut rng = Xoshiro::new(2);
+    let v: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let w: Vec<f32> = (0..m).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut out_m = vec![0.0f32; m];
+    let mut results: Vec<(String, f64)> = vec![("sparse nnz".into(), nnz as f64)];
+    let pass_flops = (2 * nnz * reps) as f64;
+
+    let t = Timer::start();
+    for _ in 0..reps {
+        sm.gemv_t_scatter_into(&v, &mut out_m);
+    }
+    results.push(("atx scatter GFLOP/s (before)".into(), gflops(pass_flops, t.secs())));
+
+    let t = Timer::start();
+    for _ in 0..reps {
+        sm.gemv_t_into(&v, &mut out_m);
+    }
+    results.push(("atx csc GFLOP/s (after)".into(), gflops(pass_flops, t.secs())));
+
+    // windowed ops over an 8-way sub-block grid (RADiSA's shape)
+    let nw = 8usize.min(m);
+    let ranges = balanced_ranges(m, nw);
+    let mut bounds = Vec::with_capacity(nw + 1);
+    bounds.push(0);
+    bounds.extend(ranges.iter().map(|&(_, e)| e));
+    let ix = SubblockIndex::new(sm, &bounds);
+    let wins: Vec<Vec<f32>> = ranges.iter().map(|&(lo, hi)| w[lo..hi].to_vec()).collect();
+
+    let t = Timer::start();
+    let mut acc = 0.0f32;
+    for _ in 0..reps {
+        for (s, &(lo, hi)) in ranges.iter().enumerate() {
+            for i in 0..n {
+                // pre-PR path: scans every stored entry of the row and
+                // filters on the column window
+                acc += ds.x.row_dot_window_offset(i, &wins[s], lo, hi);
+            }
+        }
+    }
+    std::hint::black_box(acc);
+    results.push((
+        "window dot scan GFLOP/s (before)".into(),
+        gflops(pass_flops, t.secs()),
+    ));
+
+    let t = Timer::start();
+    let mut acc = 0.0f32;
+    for _ in 0..reps {
+        for (s, &(lo, hi)) in ranges.iter().enumerate() {
+            let span = ix.span(lo, hi).expect("window is a cached boundary pair");
+            for i in 0..n {
+                let (a, b) = ix.row_range(i, span);
+                acc += sm.range_dot_rebased(a, b, &wins[s], lo);
+            }
+        }
+    }
+    std::hint::black_box(acc);
+    results.push((
+        "window dot indexed GFLOP/s (after)".into(),
+        gflops(pass_flops, t.secs()),
     ));
     results
 }
@@ -124,6 +227,130 @@ pub fn coordinator_overhead() -> Result<Vec<(String, f64)>> {
         out.push((format!("{method} wall s/10it"), wall));
         out.push((format!("{method} overhead frac"), (wall - r.sim_time).max(0.0) / wall));
     }
+    Ok(out)
+}
+
+/// Run `step(t)` for `warmup` iterations, then measure the allocator
+/// call count across `iters` further iterations.  `None` without the
+/// `bench-alloc` feature.
+fn probe_alloc(
+    warmup: usize,
+    iters: usize,
+    mut step: impl FnMut(usize) -> Result<()>,
+) -> Result<Option<f64>> {
+    for t in 1..=warmup {
+        step(t)?;
+    }
+    let before = crate::util::alloc::alloc_count();
+    for t in warmup + 1..=warmup + iters {
+        step(t)?;
+    }
+    let after = crate::util::alloc::alloc_count();
+    Ok(match (before, after) {
+        (Some(b), Some(a)) => Some((a - b) as f64 / iters as f64),
+        _ => None,
+    })
+}
+
+/// The pre-PR superstep pipeline shape, retained as the "before" side of
+/// the allocation baseline: boxed per-task closures, per-task `Vec`
+/// returns, fresh index streams, and vector-of-vectors tree reduces.
+fn legacy_boxed_allocs(
+    staged: &StagedGrid<'_>,
+    warmup: usize,
+    iters: usize,
+) -> Result<Option<f64>> {
+    let part = staged.part;
+    let (pp, qq) = (part.grid.p, part.grid.q);
+    let lamn = 0.1 * part.n as f32;
+    let invq = 1.0 / qq as f32;
+    let mut cluster = SimCluster::new(ClusterConfig::with_cores(8).with_threads(1));
+    let mut alpha = vec![0.0f32; part.n];
+    let mut w = vec![0.0f32; part.m];
+    let root = Xoshiro::new(1).substream(0xD3CA, 0, 0);
+    probe_alloc(warmup, iters, move |t| {
+        let deltas = {
+            let (alpha_r, w_r) = (&alpha, &w);
+            let mut plan = StepPlan::with_capacity(pp * qq);
+            for p in 0..pp {
+                let (r0, r1) = part.row_ranges[p];
+                for q in 0..qq {
+                    let (c0, c1) = part.col_ranges[q];
+                    let n_p = r1 - r0;
+                    let mut rng = root.substream(p as u64, q as u64, t as u64);
+                    let idx = rng.index_stream(n_p, n_p);
+                    let a_p = &alpha_r[r0..r1];
+                    let w_q = &w_r[c0..c1];
+                    plan.task(move || {
+                        staged.sdca_epoch(p, q, a_p, w_q, &idx, n_p, lamn, invq, 0.0)
+                    });
+                }
+            }
+            cluster.grid_step(plan)?
+        };
+        let upd = cluster.reduce_over_q(deltas, pp, qq);
+        let scale = 1.0 / (pp * qq) as f32;
+        for (p, sum) in upd.iter().enumerate() {
+            let (r0, _) = part.row_ranges[p];
+            for (k, &d) in sum.iter().enumerate() {
+                alpha[r0 + k] += scale * d;
+            }
+        }
+        let contribs = {
+            let alpha_r = &alpha;
+            let mut plan = StepPlan::with_capacity(pp * qq);
+            for p in 0..pp {
+                let (r0, r1) = part.row_ranges[p];
+                for q in 0..qq {
+                    let a_p = &alpha_r[r0..r1];
+                    plan.task(move || staged.atx(p, q, a_p));
+                }
+            }
+            cluster.grid_step(plan)?
+        };
+        let sums = cluster.reduce_over_p(contribs, pp, qq);
+        for (q, sum) in sums.into_iter().enumerate() {
+            let (c0, _) = part.col_ranges[q];
+            for (k, s) in sum.into_iter().enumerate() {
+                w[c0 + k] = s / lamn;
+            }
+        }
+        Ok(())
+    })
+}
+
+/// Steady-state allocations/iteration for the three coordinators on the
+/// zero-allocation workspace path (threads = 1: the scoped-spawn parallel
+/// path pays per-superstep thread stacks by design), plus the retained
+/// legacy boxed-superstep pipeline as the "before" number.  `None`
+/// entries mean the binary was built without `bench-alloc`.
+pub fn steady_state_allocs() -> Result<Vec<(String, Option<f64>)>> {
+    let ds = SyntheticDense::paper_part1(4, 2, 192, 128, 0.1, 7).build();
+    let part = Partitioned::split(&ds, Grid::new(4, 2));
+    let backend = Backend::native();
+    let staged = backend.stage(&part)?;
+    let (warmup, iters) = (2usize, 5usize);
+    let mut out = Vec::new();
+    for method in ["d3ca", "radisa", "admm"] {
+        let mut opt: Box<dyn Optimizer> = match method {
+            "d3ca" => Box::new(D3ca::new(D3caConfig { lambda: 0.1, ..Default::default() })),
+            "radisa" => Box::new(Radisa::new(RadisaConfig {
+                lambda: 0.1,
+                gamma: 0.05,
+                ..Default::default()
+            })),
+            _ => Box::new(Admm::new(AdmmConfig { lambda: 0.1, rho: 0.1 })),
+        };
+        let mut cluster = SimCluster::new(ClusterConfig::with_cores(8).with_threads(1));
+        opt.init(&staged, &mut cluster)?;
+        let measured =
+            probe_alloc(warmup, iters, |t| opt.iterate(t, &staged, &mut cluster))?;
+        out.push((format!("{method} steady allocs/iter"), measured));
+    }
+    out.push((
+        "legacy boxed-superstep allocs/iter (before)".into(),
+        legacy_boxed_allocs(&staged, warmup, iters)?,
+    ));
     Ok(out)
 }
 
@@ -212,26 +439,108 @@ pub fn l1_estimates() -> Vec<(String, f64)> {
     ]
 }
 
-pub fn run(_scale: Scale) -> Result<()> {
+/// Repo root (one level above the crate's manifest) — where
+/// `BENCH_perf.json` lives so the perf trajectory is versioned alongside
+/// the code rather than buried in `results/`.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+fn json_section(rows: &[(String, f64)]) -> Json {
+    Json::Obj(
+        rows.iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect(),
+    )
+}
+
+pub fn run(scale: Scale) -> Result<()> {
     let mut rows: Vec<Vec<String>> = Vec::new();
     let fmt = |v: f64| format!("{v:.4}");
 
+    let (sp_n, sp_m, sp_reps) = match scale {
+        Scale::Small => (4096usize, 2048usize, 10usize),
+        Scale::Paper => (20_000, 10_000, 20),
+    };
+
     println!("# §Perf profile\n");
-    for (k, v) in native_kernels(512, 512, 20) {
-        rows.push(vec!["L3-native".into(), k, fmt(v)]);
+    let kernels = native_kernels(512, 512, 20);
+    for (k, v) in &kernels {
+        rows.push(vec!["L3-native".into(), k.clone(), fmt(*v)]);
     }
-    for (k, v) in coordinator_overhead()? {
-        rows.push(vec!["L3-coord".into(), k, fmt(v)]);
+    // news20-ish density: the windowed-op regime the sub-block index targets
+    let sparse = sparse_kernels(sp_n, sp_m, 0.003, sp_reps);
+    for (k, v) in &sparse {
+        rows.push(vec!["L3-sparse".into(), k.clone(), fmt(*v)]);
     }
-    for (k, v) in xla_op_times((512, 512))? {
-        rows.push(vec!["L2-xla".into(), k, fmt(v)]);
+    let coord = coordinator_overhead()?;
+    for (k, v) in &coord {
+        rows.push(vec!["L3-coord".into(), k.clone(), fmt(*v)]);
     }
-    for (k, v) in l1_estimates() {
-        rows.push(vec!["L1-pallas".into(), k, fmt(v)]);
+    let allocs = steady_state_allocs()?;
+    for (k, v) in &allocs {
+        rows.push(vec![
+            "L3-alloc".into(),
+            k.clone(),
+            v.map(fmt).unwrap_or_else(|| "n/a (build with --features bench-alloc)".into()),
+        ]);
+    }
+    let xla = xla_op_times((512, 512))?;
+    for (k, v) in &xla {
+        rows.push(vec!["L2-xla".into(), k.clone(), fmt(*v)]);
+    }
+    let l1 = l1_estimates();
+    for (k, v) in &l1 {
+        rows.push(vec!["L1-pallas".into(), k.clone(), fmt(*v)]);
     }
     let table = markdown_table(&["layer", "metric", "value"], &rows);
     println!("{table}");
-    std::fs::write(common::out_dir().join("perf.md"), table)?;
+    std::fs::write(common::out_dir().join("perf.md"), &table)?;
+
+    // machine-readable perf baseline at the repo root
+    let alloc_json = Json::Obj(
+        allocs
+            .iter()
+            .map(|(k, v)| (k.clone(), v.map(Json::Num).unwrap_or(Json::Null)))
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("schema", Json::str("ddopt-perf/1")),
+        ("generated_by", Json::str("ddopt exp perf")),
+        (
+            "provenance",
+            // alloc data is the gated half of the baseline: only a
+            // counting-allocator build produces a fully measured snapshot
+            Json::str(if crate::util::alloc::counting_enabled() {
+                "measured"
+            } else {
+                "measured (throughput only — rebuilt without bench-alloc, alloc entries null)"
+            }),
+        ),
+        (
+            "scale",
+            Json::str(match scale {
+                Scale::Small => "small",
+                Scale::Paper => "paper",
+            }),
+        ),
+        (
+            "alloc_counting_enabled",
+            Json::Bool(crate::util::alloc::counting_enabled()),
+        ),
+        ("native_kernels", json_section(&kernels)),
+        ("sparse_kernels", json_section(&sparse)),
+        ("coordinator", json_section(&coord)),
+        ("steady_state_allocs", alloc_json),
+        ("xla", json_section(&xla)),
+        ("l1_estimates", json_section(&l1)),
+    ]);
+    let bench_path = repo_root().join("BENCH_perf.json");
+    std::fs::write(&bench_path, format!("{doc}\n"))?;
+    println!("\nperf baseline -> {}", bench_path.display());
     Ok(())
 }
 
@@ -245,6 +554,35 @@ mod tests {
         assert_eq!(r.len(), 4);
         for (k, v) in r {
             assert!(v > 0.0, "{k}");
+        }
+    }
+
+    #[test]
+    fn sparse_kernel_bench_reports_positive_rates() {
+        let r = sparse_kernels(256, 128, 0.05, 2);
+        assert_eq!(r.len(), 5);
+        for (k, v) in r {
+            assert!(v > 0.0, "{k}");
+        }
+    }
+
+    #[test]
+    fn steady_state_alloc_probe_runs_on_any_build() {
+        // With bench-alloc: every workspace-path coordinator must be at
+        // (or extremely near) zero; the boxed baseline must not be.
+        // Without: probes report None and the harness still runs.
+        let rows = steady_state_allocs().unwrap();
+        assert_eq!(rows.len(), 4);
+        for (k, v) in &rows {
+            if crate::util::alloc::counting_enabled() {
+                assert!(v.is_some(), "{k}");
+            } else {
+                assert!(v.is_none(), "{k}");
+            }
+        }
+        if crate::util::alloc::counting_enabled() {
+            let legacy = rows.last().unwrap().1.unwrap();
+            assert!(legacy > 0.0, "boxed pipeline should allocate");
         }
     }
 

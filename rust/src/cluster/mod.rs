@@ -37,8 +37,10 @@ pub mod superstep;
 pub use comm::{tree_aggregate, tree_aggregate_f32, CommStats};
 pub use pool::WorkerPool;
 pub use scenario::{ClusterScenario, TaskFate, SPECULATION_CAP};
-pub use simtime::{lpt_makespan, lpt_makespan_hetero, SimClock};
-pub use superstep::{CostModel, PlanTask, StepPlan};
+pub use simtime::{
+    lpt_makespan, lpt_makespan_hetero, lpt_makespan_hetero_with, LptScratch, SimClock,
+};
+pub use superstep::{CostModel, PlanTask, StepPlan, TaskSlab};
 
 use anyhow::Result;
 
@@ -103,12 +105,59 @@ pub struct SimCluster {
     pub clock: SimClock,
     pool: WorkerPool,
     born: std::time::Instant,
+    /// Sanitized per-slot speed factors, cached because computing them per
+    /// superstep was pure allocator churn; `speeds_key` tracks the
+    /// `(cores, hetero)` inputs so a caller mutating the pub `config`
+    /// after construction still takes effect on the next superstep.
+    speeds: Vec<f64>,
+    speeds_key: (usize, u64, u64),
+    /// Per-task durations of the superstep in flight (reused).
+    dur_buf: Vec<f64>,
+    /// LPT scheduler working memory (reused).
+    lpt: LptScratch,
 }
 
 impl SimCluster {
     pub fn new(config: ClusterConfig) -> Self {
         let pool = WorkerPool::new(config.threads);
-        SimCluster { config, clock: SimClock::new(), pool, born: std::time::Instant::now() }
+        let mut cluster = SimCluster {
+            config,
+            clock: SimClock::new(),
+            pool,
+            born: std::time::Instant::now(),
+            speeds: Vec::new(),
+            speeds_key: (usize::MAX, 0, 0),
+            dur_buf: Vec::new(),
+            lpt: LptScratch::default(),
+        };
+        cluster.refresh_speeds();
+        cluster
+    }
+
+    /// Key of the inputs `speeds` was computed from.
+    fn current_speeds_key(&self) -> (usize, u64, u64) {
+        (
+            self.config.cores,
+            self.config.scenario.hetero_frac.to_bits(),
+            self.config.scenario.hetero_speed.to_bits(),
+        )
+    }
+
+    /// Recompute the cached sanitized slot speeds if `config` changed —
+    /// three compares per superstep at steady state, an allocation only
+    /// when a caller actually mutates `cores`/the hetero scenario.
+    fn refresh_speeds(&mut self) {
+        let key = self.current_speeds_key();
+        if key != self.speeds_key {
+            self.speeds = self
+                .config
+                .scenario
+                .speeds(self.config.cores)
+                .into_iter()
+                .map(simtime::sane_speed)
+                .collect();
+            self.speeds_key = key;
+        }
     }
 
     /// Host worker threads actually in use.
@@ -139,9 +188,10 @@ impl SimCluster {
             return Ok(Vec::new());
         }
         let tolerant = plan.is_tolerant();
+        self.refresh_speeds();
         let step = self.clock.supersteps();
         let timed = self.pool.run(plan.into_tasks());
-        let mut durations = Vec::with_capacity(timed.len());
+        self.dur_buf.clear();
         let mut out = Vec::with_capacity(timed.len());
         let mut first_err = None;
         let (mut stragglers, mut failures) = (0usize, 0usize);
@@ -151,7 +201,7 @@ impl SimCluster {
                 CostModel::Fixed(s) => s,
             };
             let fate = self.config.scenario.perturb(step, task, base, tolerant);
-            durations.push(fate.duration);
+            self.dur_buf.push(fate.duration);
             stragglers += usize::from(fate.straggled);
             failures += fate.extra_attempts;
             match result {
@@ -163,14 +213,141 @@ impl SimCluster {
                 }
             }
         }
-        let speeds = self.config.scenario.speeds(self.config.cores);
-        let makespan = lpt_makespan_hetero(&durations, &speeds);
+        let makespan = lpt_makespan_hetero_with(&mut self.lpt, &self.dur_buf, &self.speeds);
         self.clock.add_compute(makespan);
         self.clock.add_injections(stragglers, failures);
         match first_err {
             Some(e) => Err(e),
             None => Ok(out),
         }
+    }
+
+    /// The zero-allocation superstep: `f(task, scratch)` runs once per
+    /// task index in `0..n_tasks` on the worker pool, writing its output
+    /// into a caller-owned [`TaskSlab`] segment instead of returning a
+    /// vector, and reusing one caller-owned scratch cell per worker
+    /// thread.  Steady-state iterations built on this path (plus
+    /// [`SimCluster::reduce_segments`]) allocate nothing.
+    ///
+    /// Clock, scenario and determinism semantics are identical to
+    /// [`SimCluster::grid_step`]: per-task costs (measured or fixed) are
+    /// perturbed by the active scenario keyed on `(seed, superstep,
+    /// task)`, the LPT makespan over the cached slot speeds advances the
+    /// simulated clock even when a task errors, and outputs land at
+    /// positions derived from the task index alone — never the schedule —
+    /// so results are bit-identical at any `threads`.  The error with the
+    /// lowest task index wins, mirroring `grid_step`'s first-error rule.
+    #[cfg(not(feature = "xla"))]
+    pub fn grid_step_into<S: Send>(
+        &mut self,
+        n_tasks: usize,
+        tolerant: bool,
+        scratch: &mut [S],
+        f: impl Fn(usize, &mut S) -> Result<()> + Sync,
+    ) -> Result<()> {
+        if n_tasks == 0 {
+            return Ok(());
+        }
+        self.refresh_speeds();
+        let step = self.clock.supersteps();
+        self.dur_buf.clear();
+        self.dur_buf.resize(n_tasks, 0.0);
+        let ran = self.pool.run_indexed(n_tasks, scratch, &mut self.dur_buf, f);
+        self.charge_superstep(step, n_tasks, tolerant);
+        ran
+    }
+
+    /// [`SimCluster::grid_step_into`] for the thread-confined `xla` build:
+    /// same semantics, inline execution, no `Sync` bound.
+    #[cfg(feature = "xla")]
+    pub fn grid_step_into<S: Send>(
+        &mut self,
+        n_tasks: usize,
+        tolerant: bool,
+        scratch: &mut [S],
+        f: impl Fn(usize, &mut S) -> Result<()>,
+    ) -> Result<()> {
+        if n_tasks == 0 {
+            return Ok(());
+        }
+        self.refresh_speeds();
+        let step = self.clock.supersteps();
+        self.dur_buf.clear();
+        self.dur_buf.resize(n_tasks, 0.0);
+        let ran = self.pool.run_indexed(n_tasks, scratch, &mut self.dur_buf, f);
+        self.charge_superstep(step, n_tasks, tolerant);
+        ran
+    }
+
+    /// Shared clock/scenario accounting of one `grid_step_into` superstep:
+    /// perturb the measured durations in `dur_buf`, schedule them LPT over
+    /// the cached slot speeds, and advance the clock.
+    fn charge_superstep(&mut self, step: usize, n_tasks: usize, tolerant: bool) {
+        let (mut stragglers, mut failures) = (0usize, 0usize);
+        for task in 0..n_tasks {
+            let base = match self.config.cost {
+                CostModel::Measured => self.dur_buf[task],
+                CostModel::Fixed(s) => s,
+            };
+            let fate = self.config.scenario.perturb(step, task, base, tolerant);
+            self.dur_buf[task] = fate.duration;
+            stragglers += usize::from(fate.straggled);
+            failures += fate.extra_attempts;
+        }
+        let makespan = lpt_makespan_hetero_with(&mut self.lpt, &self.dur_buf, &self.speeds);
+        self.clock.add_compute(makespan);
+        self.clock.add_injections(stragglers, failures);
+    }
+
+    /// In-place grouped treeAggregate over a workspace slab: segment `k`
+    /// (of `count`, each `len` long) starts at `slab[base + k * stride]`;
+    /// the sum lands in segment 0.
+    ///
+    /// Combining follows exactly the binary-tree pairing of
+    /// [`tree_aggregate_f32`] — level by level, adjacent survivors, `dst
+    /// += src` element-wise — so the result bits and the charged
+    /// [`CommStats`] (time, bytes, messages) match what
+    /// [`SimCluster::reduce_sum`] would produce for the same `count`
+    /// equal-length vectors, without materializing them.
+    pub fn reduce_segments(
+        &mut self,
+        slab: &mut [f32],
+        base: usize,
+        stride: usize,
+        count: usize,
+        len: usize,
+    ) {
+        assert!(len <= stride || count <= 1, "segments must not overlap");
+        if count <= 1 {
+            return; // single leaf is free, like reduce_sum
+        }
+        assert!(base + (count - 1) * stride + len <= slab.len());
+        let mut stats = CommStats::default();
+        let mut gap = 1usize;
+        while gap < count {
+            let mut pairs = 0usize;
+            let mut i = 0usize;
+            while i + gap < count {
+                let dst = base + i * stride;
+                let src = base + (i + gap) * stride;
+                let (head, tail) = slab.split_at_mut(src);
+                let d = &mut head[dst..dst + len];
+                let s = &tail[..len];
+                for (dv, &sv) in d.iter_mut().zip(s) {
+                    *dv += sv;
+                }
+                pairs += 1;
+                i += 2 * gap;
+            }
+            let level_bytes = pairs * len * std::mem::size_of::<f32>();
+            // bit-identical to tree_aggregate's per-level charge
+            stats.time += self.config.latency
+                + level_bytes as f64 / self.config.bandwidth / (pairs.max(1) as f64);
+            stats.bytes += level_bytes;
+            stats.messages += pairs;
+            gap *= 2;
+        }
+        self.clock.add_comm(stats);
     }
 
     /// Aggregate per-partition f32 vectors by summation over a binary tree,
@@ -392,6 +569,113 @@ mod tests {
         // p=1, retries=2: 2 extra attempts, 3 charges of 1 ms on one slot
         assert!((c.clock.compute_time() - 3e-3).abs() < 1e-12);
         assert_eq!(c.clock.failures(), 2);
+    }
+
+    #[test]
+    fn grid_step_into_matches_grid_step_clock_and_results() {
+        let run_boxed = |threads: usize| {
+            let mut config = cfg(threads, 4);
+            config.cost = CostModel::Fixed(2e-3);
+            config.scenario = ClusterScenario::parse("stragglers:p=0.5,slow=3x,seed=9").unwrap();
+            let mut c = SimCluster::new(config);
+            let mut plan: StepPlan<'_, f32> = StepPlan::new();
+            for i in 0..10usize {
+                plan.task(move || Ok((i * i) as f32));
+            }
+            let out = c.grid_step(plan).unwrap();
+            (out, c.clock.now(), c.clock.stragglers())
+        };
+        let run_into = |threads: usize| {
+            let mut config = cfg(threads, 4);
+            config.cost = CostModel::Fixed(2e-3);
+            config.scenario = ClusterScenario::parse("stragglers:p=0.5,slow=3x,seed=9").unwrap();
+            let mut c = SimCluster::new(config);
+            let mut out = vec![0.0f32; 10];
+            let mut scratch = vec![(); c.threads()];
+            {
+                let slab = TaskSlab::new(&mut out);
+                c.grid_step_into(10, false, &mut scratch, |i, _s| {
+                    unsafe { slab.write(i, (i * i) as f32) };
+                    Ok(())
+                })
+                .unwrap();
+            }
+            (out, c.clock.now(), c.clock.stragglers())
+        };
+        let (ob, tb, sb) = run_boxed(1);
+        for threads in [1usize, 4] {
+            let (oi, ti, si) = run_into(threads);
+            assert_eq!(ob, oi, "threads {threads}");
+            assert_eq!(tb.to_bits(), ti.to_bits(), "threads {threads}");
+            assert_eq!(sb, si, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn grid_step_into_still_charges_clock_on_error() {
+        let mut config = cfg(1, 2);
+        config.cost = CostModel::Fixed(1e-3);
+        let mut c = SimCluster::new(config);
+        let mut scratch = vec![(); 1];
+        let err = c
+            .grid_step_into(4, false, &mut scratch, |i, _s| {
+                if i >= 2 {
+                    anyhow::bail!("partition {i} exploded");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("partition 2"));
+        assert_eq!(c.clock.supersteps(), 1);
+        assert!((c.clock.compute_time() - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mutating_config_after_construction_takes_effect() {
+        let mut config = cfg(1, 2);
+        config.cost = CostModel::Fixed(1e-3);
+        let mut c = SimCluster::new(config);
+        // the cached speeds must refresh when a caller mutates the pub
+        // config between supersteps
+        c.config.scenario = ClusterScenario::parse("hetero:frac=1.0,speed=0.5").unwrap();
+        let mut plan: StepPlan<'_, usize> = StepPlan::new();
+        for i in 0..2usize {
+            plan.task(move || Ok(i));
+        }
+        let _ = c.grid_step(plan).unwrap();
+        // both slots half speed: 2 tasks of 1 ms over 2 slots -> 2 ms
+        assert!((c.clock.compute_time() - 2e-3).abs() < 1e-12, "{}", c.clock.compute_time());
+    }
+
+    #[test]
+    fn reduce_segments_matches_reduce_sum_bitwise() {
+        for count in [1usize, 2, 3, 5, 6, 8, 13] {
+            let len = 7usize;
+            let stride = 9usize; // padded layout exercises stride > len
+            let mut rng = crate::util::rng::Xoshiro::new(count as u64);
+            let parts: Vec<Vec<f32>> = (0..count)
+                .map(|_| (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+                .collect();
+            let mut real = SimCluster::new(ClusterConfig::default());
+            let expect = real.reduce_sum(parts.clone());
+
+            let mut slab = vec![0.0f32; 3 + count * stride];
+            for (k, part) in parts.iter().enumerate() {
+                slab[3 + k * stride..3 + k * stride + len].copy_from_slice(part);
+            }
+            let mut inplace = SimCluster::new(ClusterConfig::default());
+            inplace.reduce_segments(&mut slab, 3, stride, count, len);
+            for e in 0..len {
+                assert_eq!(
+                    expect[e].to_bits(),
+                    slab[3 + e].to_bits(),
+                    "count={count} elem={e}"
+                );
+            }
+            assert_eq!(real.clock.comm_time(), inplace.clock.comm_time(), "count={count}");
+            assert_eq!(real.clock.comm_bytes(), inplace.clock.comm_bytes(), "count={count}");
+            assert_eq!(real.clock.messages(), inplace.clock.messages(), "count={count}");
+        }
     }
 
     #[test]

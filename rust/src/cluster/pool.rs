@@ -17,7 +17,8 @@
 //! thread-confined) and every superstep runs inline — see
 //! [`super::superstep::PlanTask`].
 
-use super::superstep::PlanTask;
+use super::superstep::{PlanTask, TaskSlab};
+use anyhow::Result;
 use std::time::Instant;
 
 /// A fixed-width pool of scoped worker threads.
@@ -51,6 +52,134 @@ impl WorkerPool {
                 (v, t0.elapsed().as_secs_f64())
             })
             .collect()
+    }
+
+    /// Zero-allocation fan-out: calls `f(i, scratch)` for every `i` in
+    /// `0..n`, writing each task's measured seconds into `times[i]`.
+    ///
+    /// Unlike [`WorkerPool::run`] there is nothing to box and nothing to
+    /// collect — tasks write their outputs into caller-owned slabs (see
+    /// [`TaskSlab`]) and each worker thread reuses one caller-owned
+    /// scratch cell.  All `n` tasks run even if one errors (matching
+    /// `run`'s collect-then-fail semantics, so the simulated clock charges
+    /// the same superstep either way); the error of the lowest task index
+    /// is returned, which keeps failure reporting deterministic at any
+    /// thread count.
+    ///
+    /// `scratch` needs at least `min(threads, n)` cells (one per worker
+    /// actually used; the inline path uses only `scratch[0]`).
+    #[cfg(not(feature = "xla"))]
+    pub fn run_indexed<S: Send>(
+        &self,
+        n: usize,
+        scratch: &mut [S],
+        times: &mut [f64],
+        f: impl Fn(usize, &mut S) -> Result<()> + Sync,
+    ) -> Result<()> {
+        assert!(times.len() >= n, "times buffer too small");
+        if n == 0 {
+            return Ok(());
+        }
+        assert!(!scratch.is_empty(), "need at least one scratch cell");
+        let workers = self.threads.min(n).min(scratch.len());
+        if workers > 1 {
+            return run_indexed_parallel(n, &mut scratch[..workers], times, f);
+        }
+        run_indexed_inline(n, &mut scratch[0], times, f)
+    }
+
+    /// Inline-only `run_indexed` (the `xla` build is thread-confined, so
+    /// the `Sync` bound drops away and every superstep runs on the caller
+    /// thread).
+    #[cfg(feature = "xla")]
+    pub fn run_indexed<S: Send>(
+        &self,
+        n: usize,
+        scratch: &mut [S],
+        times: &mut [f64],
+        f: impl Fn(usize, &mut S) -> Result<()>,
+    ) -> Result<()> {
+        assert!(times.len() >= n, "times buffer too small");
+        if n == 0 {
+            return Ok(());
+        }
+        assert!(!scratch.is_empty(), "need at least one scratch cell");
+        run_indexed_inline(n, &mut scratch[0], times, f)
+    }
+}
+
+/// Sequential fallback shared by both feature sets: run every task on the
+/// caller thread with one scratch cell, recording per-task seconds and
+/// keeping the first (lowest-index) error.
+fn run_indexed_inline<S>(
+    n: usize,
+    scratch: &mut S,
+    times: &mut [f64],
+    f: impl Fn(usize, &mut S) -> Result<()>,
+) -> Result<()> {
+    let mut first_err = None;
+    for (i, t) in times.iter_mut().take(n).enumerate() {
+        let t0 = Instant::now();
+        let r = f(i, scratch);
+        *t = t0.elapsed().as_secs_f64();
+        if let Err(e) = r {
+            if first_err.is_none() {
+                first_err = Some(e);
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Scoped fan-out for [`WorkerPool::run_indexed`]: each worker owns one
+/// scratch cell and claims task indices from a shared atomic counter.
+#[cfg(not(feature = "xla"))]
+fn run_indexed_parallel<S: Send>(
+    n: usize,
+    scratch: &mut [S],
+    times: &mut [f64],
+    f: impl Fn(usize, &mut S) -> Result<()> + Sync,
+) -> Result<()> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let next = AtomicUsize::new(0);
+    let times_slab = TaskSlab::new(times);
+    let first_err: Mutex<Option<(usize, anyhow::Error)>> = Mutex::new(None);
+    {
+        let (next, times_slab, first_err, f) = (&next, &times_slab, &first_err, &f);
+        std::thread::scope(|scope| {
+            for s in scratch.iter_mut() {
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let t0 = Instant::now();
+                    let r = f(i, s);
+                    // SAFETY: index i was claimed exactly once via the
+                    // atomic counter, so no other worker touches slot i.
+                    unsafe { times_slab.write(i, t0.elapsed().as_secs_f64()) };
+                    if let Err(e) = r {
+                        let mut slot = first_err.lock().unwrap();
+                        let lowest_so_far = match slot.as_ref() {
+                            None => true,
+                            Some((j, _)) => i < *j,
+                        };
+                        if lowest_so_far {
+                            *slot = Some((i, e));
+                        }
+                    }
+                });
+            }
+        });
+    }
+    match first_err.into_inner().unwrap() {
+        Some((_, e)) => Err(e),
+        None => Ok(()),
     }
 }
 
@@ -153,6 +282,57 @@ mod tests {
             assert_eq!(out.len(), 4);
             assert_eq!(out[0].0, round);
         }
+    }
+
+    #[test]
+    fn run_indexed_writes_disjoint_slabs_at_any_width() {
+        for threads in [1usize, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let n = 17usize;
+            let seg = 4usize;
+            let mut out = vec![0.0f32; n * seg];
+            let mut times = vec![0.0f64; n];
+            let mut scratch: Vec<Vec<f32>> = (0..pool.threads()).map(|_| vec![0.0; seg]).collect();
+            {
+                let slab = TaskSlab::new(&mut out);
+                pool.run_indexed(n, &mut scratch, &mut times, |i, s: &mut Vec<f32>| {
+                    for (k, v) in s.iter_mut().enumerate() {
+                        *v = (i * seg + k) as f32;
+                    }
+                    // SAFETY: segment i is owned by task i alone.
+                    let dst = unsafe { slab.segment(i * seg, seg) };
+                    dst.copy_from_slice(s);
+                    Ok(())
+                })
+                .unwrap();
+            }
+            for (k, v) in out.iter().enumerate() {
+                assert_eq!(*v, k as f32, "threads={threads} slot {k}");
+            }
+            assert!(times.iter().all(|&t| t >= 0.0));
+        }
+    }
+
+    #[test]
+    fn run_indexed_reports_lowest_index_error_and_runs_all() {
+        let pool = WorkerPool::new(4);
+        let n = 9usize;
+        let mut done = vec![0u8; n];
+        let mut times = vec![0.0f64; n];
+        let mut scratch = vec![(); 4];
+        let err = {
+            let slab = TaskSlab::new(&mut done);
+            pool.run_indexed(n, &mut scratch, &mut times, |i, _s| {
+                unsafe { slab.write(i, 1) };
+                if i == 3 || i == 6 {
+                    anyhow::bail!("task {i} exploded");
+                }
+                Ok(())
+            })
+            .unwrap_err()
+        };
+        assert!(err.to_string().contains("task 3"), "{err}");
+        assert!(done.iter().all(|&d| d == 1), "all tasks still ran");
     }
 
     #[test]

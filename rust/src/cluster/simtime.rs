@@ -26,7 +26,7 @@ fn sane_duration(d: f64) -> f64 {
 /// Clamp a slot speed factor: non-finite or non-positive speeds fall back
 /// to full speed.
 #[inline]
-fn sane_speed(s: f64) -> f64 {
+pub(crate) fn sane_speed(s: f64) -> f64 {
     if s.is_finite() && s > 0.0 {
         s
     } else {
@@ -50,29 +50,59 @@ pub fn lpt_makespan(durations: &[f64], slots: usize) -> f64 {
 /// speeds to 1, so the result is always finite and the sort never sees a
 /// NaN (`f64::total_cmp` is used regardless, so no ordering can panic).
 pub fn lpt_makespan_hetero(durations: &[f64], speeds: &[f64]) -> f64 {
-    if durations.is_empty() {
-        return 0.0;
-    }
     let speeds: Vec<f64> = if speeds.is_empty() {
         vec![1.0]
     } else {
         speeds.iter().map(|&s| sane_speed(s)).collect()
     };
-    let mut sorted: Vec<f64> = durations.iter().map(|&d| sane_duration(d)).collect();
-    sorted.sort_by(|a, b| b.total_cmp(a));
-    let mut loads = vec![0.0f64; speeds.len()];
-    for d in sorted {
+    lpt_makespan_hetero_with(&mut LptScratch::default(), durations, &speeds)
+}
+
+/// Reusable working memory for [`lpt_makespan_hetero_with`] — lets the
+/// per-superstep schedule run without allocating once warmed up.
+#[derive(Debug, Default)]
+pub struct LptScratch {
+    sorted: Vec<f64>,
+    loads: Vec<f64>,
+}
+
+/// [`lpt_makespan_hetero`] with caller-owned scratch and *pre-sanitized*
+/// speeds (non-empty, every entry finite and positive — the caller clamps
+/// once with `sane_speed`; `SimCluster` caches that).  Bit-identical to
+/// [`lpt_makespan_hetero`]: same greedy assignment, same tie-breaking, and
+/// the unstable sort only permutes equal durations, which cannot change
+/// any load sum.
+pub fn lpt_makespan_hetero_with(
+    scratch: &mut LptScratch,
+    durations: &[f64],
+    speeds: &[f64],
+) -> f64 {
+    if durations.is_empty() {
+        return 0.0;
+    }
+    if speeds.is_empty() {
+        // stay total like lpt_makespan_hetero: no slots = one unit slot
+        return lpt_makespan_hetero_with(scratch, durations, &[1.0]);
+    }
+    debug_assert!(speeds.iter().all(|&s| s.is_finite() && s > 0.0));
+    scratch.sorted.clear();
+    scratch.sorted.extend(durations.iter().map(|&d| sane_duration(d)));
+    scratch.sorted.sort_unstable_by(|a, b| b.total_cmp(a));
+    scratch.loads.clear();
+    scratch.loads.resize(speeds.len(), 0.0);
+    let loads = &mut scratch.loads;
+    for &d in &scratch.sorted {
         // assign to the slot with the earliest finish time for this task
         let (k, _) = loads
             .iter()
-            .zip(&speeds)
+            .zip(speeds)
             .map(|(&load, &speed)| load + d / speed)
             .enumerate()
             .min_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         loads[k] += d / speeds[k];
     }
-    loads.into_iter().fold(0.0, f64::max)
+    loads.iter().fold(0.0, |m, &l| f64::max(m, l))
 }
 
 /// Accumulated simulated time, split by source.
@@ -241,6 +271,20 @@ mod tests {
         let total_s: f64 = speeds.iter().sum();
         assert!(m >= 3.0 / smax - 1e-12, "max scaled duration bound");
         assert!(m >= total_d / total_s - 1e-12, "total work / total speed bound");
+    }
+
+    #[test]
+    fn scratch_variant_matches_allocating_lpt() {
+        let d = [2.0, 1.0, 0.5, 3.0, 0.25, 0.5, 1.0];
+        let mut scratch = LptScratch::default();
+        for speeds in [vec![1.0, 1.0], vec![1.0, 0.5, 0.25], vec![0.7]] {
+            let a = lpt_makespan_hetero(&d, &speeds);
+            let b = lpt_makespan_hetero_with(&mut scratch, &d, &speeds);
+            assert_eq!(a.to_bits(), b.to_bits(), "{speeds:?}");
+        }
+        // reuse across calls with different sizes must not leak state
+        let b = lpt_makespan_hetero_with(&mut scratch, &[1.0], &[1.0]);
+        assert_eq!(b, 1.0);
     }
 
     #[test]

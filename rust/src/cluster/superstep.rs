@@ -16,6 +16,66 @@
 //! clock, no host-level parallelism).
 
 use anyhow::Result;
+use std::cell::UnsafeCell;
+
+/// A preallocated output slab shared across the tasks of one superstep.
+///
+/// The zero-allocation hot path (`SimCluster::grid_step_into`) hands every
+/// task a *disjoint* mutable segment of one coordinator-owned buffer
+/// instead of letting tasks return freshly allocated vectors.  Because the
+/// task closure is a shared `Fn` called concurrently from worker threads,
+/// the segments are carved out through interior mutability; disjointness
+/// is the caller's contract (`segment` is `unsafe`), and every call site
+/// derives its segment purely from the task index, which the pool claims
+/// exactly once.
+pub struct TaskSlab<'a, T> {
+    cells: &'a [UnsafeCell<T>],
+}
+
+// SAFETY: a TaskSlab only hands out segments under the caller's
+// disjointness contract; with disjoint segments this is exactly
+// `&mut [T]` split across threads, which is Sync for T: Send.
+unsafe impl<'a, T: Send> Sync for TaskSlab<'a, T> {}
+
+impl<'a, T> TaskSlab<'a, T> {
+    pub fn new(buf: &'a mut [T]) -> TaskSlab<'a, T> {
+        let len = buf.len();
+        // SAFETY: UnsafeCell<T> has the same layout as T, and the unique
+        // borrow of `buf` is held by this slab for 'a.
+        let cells =
+            unsafe { std::slice::from_raw_parts(buf.as_mut_ptr() as *const UnsafeCell<T>, len) };
+        TaskSlab { cells }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Exclusive view of `[start, start + len)`.
+    ///
+    /// # Safety
+    /// The range must be in bounds and must not overlap any segment (or
+    /// `write`) used by a concurrently running task; each task must derive
+    /// its ranges from its own task index only.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn segment(&self, start: usize, len: usize) -> &'a mut [T] {
+        debug_assert!(start + len <= self.cells.len());
+        std::slice::from_raw_parts_mut(self.cells.as_ptr().add(start) as *mut T, len)
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// Same disjointness contract as [`TaskSlab::segment`] for index `i`.
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.cells.len());
+        *self.cells[i].get() = v;
+    }
+}
 
 /// A boxed superstep task.  `Send` on the default feature set (parallel
 /// native execution); `!Send` under `--features xla` (inline fallback).
@@ -141,6 +201,27 @@ mod tests {
     #[test]
     fn cost_model_default_is_measured() {
         assert_eq!(CostModel::default(), CostModel::Measured);
+    }
+
+    #[test]
+    fn task_slab_hands_out_disjoint_segments() {
+        let mut buf = vec![0.0f32; 12];
+        {
+            let slab = TaskSlab::new(&mut buf);
+            assert_eq!(slab.len(), 12);
+            // SAFETY: segments [0,4), [4,8), [8,12) are disjoint.
+            let a = unsafe { slab.segment(0, 4) };
+            let b = unsafe { slab.segment(4, 4) };
+            let c = unsafe { slab.segment(8, 4) };
+            a.fill(1.0);
+            b.fill(2.0);
+            c.fill(3.0);
+            unsafe { slab.write(0, 9.0) };
+        }
+        assert_eq!(buf[0], 9.0);
+        assert_eq!(&buf[1..4], &[1.0; 3]);
+        assert_eq!(&buf[4..8], &[2.0; 4]);
+        assert_eq!(&buf[8..], &[3.0; 4]);
     }
 
     #[test]

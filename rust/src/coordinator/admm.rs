@@ -21,15 +21,19 @@
 //!   4. scaled dual updates  ůw_pq += w_pq − w_q,  ůz_pq += z_pq − s_pq.
 //!
 //! The graph projections (one task per partition) and the hinge proxes
-//! (one task per row partition) are supersteps executed through
-//! [`SimCluster::grid_step`](crate::cluster::SimCluster::grid_step); the
-//! consensus/sharing collectives are the cluster's grouped tree reduces.
+//! (one task per row partition) are supersteps on the zero-allocation
+//! path ([`SimCluster::grid_step_into`](crate::cluster::SimCluster::grid_step_into)):
+//! a persistent [`AdmmWorkspace`] holds the ŵ/ẑ input slabs, the
+//! projection output slabs, and per-worker solve scratch, and the
+//! consensus/sharing collectives reduce in place on those slabs
+//! ([`SimCluster::reduce_segments`](crate::cluster::SimCluster::reduce_segments)),
+//! so iterations after the first allocate nothing.
 //!
 //! Standard two-block convex ADMM ⇒ convergence to the global optimum;
 //! the integration tests verify the gap against `f*` shrinks.
 
 use super::driver::Optimizer;
-use crate::cluster::{SimCluster, StepPlan};
+use crate::cluster::{SimCluster, TaskSlab};
 use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::runtime::{FactorHandle, StagedGrid};
@@ -48,6 +52,33 @@ impl Default for AdmmConfig {
     }
 }
 
+/// Per-worker scratch: the Cholesky solve's RHS (length max n_p).
+struct AdmmScratch {
+    t: Vec<f32>,
+}
+
+/// Persistent per-run working memory — allocated once in `init`, reused
+/// by every iteration (steady state allocates nothing).
+struct AdmmWorkspace {
+    /// ŵ inputs, overwritten with the consensus parts after projection:
+    /// task (p,q) at `p*m + c0(q)`, length m_q.
+    w_hat: Vec<f32>,
+    /// ẑ inputs, overwritten with the share parts after projection:
+    /// group p at `z_off[p]`, qq segments of n_p each.
+    z_hat: Vec<f32>,
+    z_off: Vec<usize>,
+    /// Projection outputs w_pq (same layout as `w_hat`).
+    w_loc: Vec<f32>,
+    /// Projection outputs z_pq (same layout as `z_hat`).
+    z_loc: Vec<f32>,
+    /// Reduced share totals Σ_q c_pq, length n.
+    c_tot: Vec<f32>,
+    /// Prox outputs v_p, length n.
+    vs: Vec<f32>,
+    /// One scratch cell per worker thread.
+    scratch: Vec<AdmmScratch>,
+}
+
 pub struct Admm {
     cfg: AdmmConfig,
     w: Vec<f32>,                 // consensus primal, concatenated over q
@@ -55,6 +86,7 @@ pub struct Admm {
     uw: Vec<Vec<f32>>,           // scaled duals for w consensus [p*Q+q][m_q]
     uz: Vec<Vec<f32>>,           // scaled duals for z shares    [p*Q+q][n_p]
     factors: Vec<FactorHandle>,  // cached graph-projection factors
+    ws: Option<AdmmWorkspace>,
 }
 
 impl Admm {
@@ -66,6 +98,7 @@ impl Admm {
             uw: Vec::new(),
             uz: Vec::new(),
             factors: Vec::new(),
+            ws: None,
         }
     }
 }
@@ -83,7 +116,7 @@ impl Optimizer for Admm {
         self.cfg.lambda
     }
 
-    fn init(&mut self, staged: &StagedGrid<'_>, _cluster: &mut SimCluster) -> Result<()> {
+    fn init(&mut self, staged: &StagedGrid<'_>, cluster: &mut SimCluster) -> Result<()> {
         let part = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
         self.w = vec![0.0; part.m];
@@ -104,6 +137,26 @@ impl Optimizer for Admm {
                 self.factors.push(staged.admm_factor(p, q)?);
             }
         }
+        let mut z_off = Vec::with_capacity(pp);
+        let mut acc = 0usize;
+        for p in 0..pp {
+            z_off.push(acc);
+            acc += qq * part.n_p(p);
+        }
+        let max_np = (0..pp).map(|p| part.n_p(p)).max().unwrap_or(0);
+        let scratch = (0..cluster.threads())
+            .map(|_| AdmmScratch { t: vec![0.0; max_np] })
+            .collect();
+        self.ws = Some(AdmmWorkspace {
+            w_hat: vec![0.0; pp * part.m],
+            z_hat: vec![0.0; acc],
+            z_off,
+            w_loc: vec![0.0; pp * part.m],
+            z_loc: vec![0.0; acc],
+            c_tot: vec![0.0; part.n],
+            vs: vec![0.0; part.n],
+            scratch,
+        });
         Ok(())
     }
 
@@ -115,6 +168,7 @@ impl Optimizer for Admm {
     ) -> Result<()> {
         let part: &Partitioned = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
+        let m = part.m;
         let rho = self.cfg.rho;
         let lam = self.cfg.lambda;
         let k = |p: usize, q: usize| p * qq + q;
@@ -124,98 +178,127 @@ impl Optimizer for Admm {
             cluster.broadcast_cost(part.m_q(q) * 4, pp);
         }
 
-        // 1. graph projections (the per-iteration hot spot) — one
-        // superstep over the grid, results in [p*Q+q] order
-        let projections = {
-            let (w, s, uw, uz, factors) =
-                (&self.w, &self.s, &self.uw, &self.uz, &self.factors);
-            let mut plan = StepPlan::with_capacity(pp * qq);
-            for p in 0..pp {
-                for q in 0..qq {
-                    let (c0, c1) = part.col_ranges[q];
-                    let i = k(p, q);
-                    let w_hat: Vec<f32> = w[c0..c1]
-                        .iter()
-                        .zip(&uw[i])
-                        .map(|(&a, &b)| a - b)
-                        .collect();
-                    let z_hat: Vec<f32> = s[i]
-                        .iter()
-                        .zip(&uz[i])
-                        .map(|(&a, &b)| a - b)
-                        .collect();
-                    let factor = &factors[i];
-                    plan.task(move || staged.admm_project(p, q, factor, &w_hat, &z_hat));
+        let ws = self.ws.as_mut().expect("init before iterate");
+
+        // stage the projection inputs: ŵ_pq = w_q − ůw_pq, ẑ_pq = s_pq − ůz_pq
+        for p in 0..pp {
+            let n_p = part.n_p(p);
+            let zb = ws.z_off[p];
+            for q in 0..qq {
+                let (c0, c1) = part.col_ranges[q];
+                let i = k(p, q);
+                let wh = &mut ws.w_hat[p * m + c0..p * m + c1];
+                for ((h, &wv), &uv) in wh.iter_mut().zip(&self.w[c0..c1]).zip(&self.uw[i]) {
+                    *h = wv - uv;
+                }
+                let zh = &mut ws.z_hat[zb + q * n_p..zb + (q + 1) * n_p];
+                for ((h, &sv), &uv) in zh.iter_mut().zip(&self.s[i]).zip(&self.uz[i]) {
+                    *h = sv - uv;
                 }
             }
-            cluster.grid_step(plan)?
-        };
-        let (w_loc, z_loc): (Vec<Vec<f32>>, Vec<Vec<f32>>) =
-            projections.into_iter().unzip();
+        }
 
-        // 2. feature consensus + ridge prox (tree reduce over p per column)
-        let consensus_parts: Vec<Vec<f32>> = (0..pp * qq)
-            .map(|i| {
-                w_loc[i]
-                    .iter()
-                    .zip(&self.uw[i])
-                    .map(|(&a, &b)| a + b)
-                    .collect()
-            })
-            .collect();
-        let sums = cluster.reduce_over_p(consensus_parts, pp, qq);
+        // 1. graph projections (the per-iteration hot spot) — one
+        // superstep over the grid, outputs in the (p,q) slabs
+        {
+            let w_out = TaskSlab::new(&mut ws.w_loc);
+            let z_out = TaskSlab::new(&mut ws.z_loc);
+            let w_hat: &[f32] = &ws.w_hat;
+            let z_hat: &[f32] = &ws.z_hat;
+            let z_off: &[usize] = &ws.z_off;
+            let factors = &self.factors;
+            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, sc| {
+                let (p, q) = (task / qq, task % qq);
+                let (c0, c1) = part.col_ranges[q];
+                let n_p = part.n_p(p);
+                let wh = &w_hat[p * m + c0..p * m + c1];
+                let zh = &z_hat[z_off[p] + q * n_p..z_off[p] + (q + 1) * n_p];
+                // SAFETY: both segments are derived from the task index
+                // alone and disjoint across tasks.
+                let wo = unsafe { w_out.segment(p * m + c0, c1 - c0) };
+                let zo = unsafe { z_out.segment(z_off[p] + q * n_p, n_p) };
+                staged.admm_project_into(p, q, &factors[task], wh, zh, wo, zo, &mut sc.t)
+            })?;
+        }
+
+        // 2. feature consensus + ridge prox: overwrite the ŵ slab with
+        // w_pq + ůw_pq, tree-reduce in place over p per column, rescale
+        for p in 0..pp {
+            for q in 0..qq {
+                let i = k(p, q);
+                let base = p * m + part.col_ranges[q].0;
+                for (r, &uv) in self.uw[i].iter().enumerate() {
+                    ws.w_hat[base + r] = ws.w_loc[base + r] + uv;
+                }
+            }
+        }
         let scale = rho / (lam + rho * pp as f32);
-        for (q, sum) in sums.into_iter().enumerate() {
+        for q in 0..qq {
             let (c0, c1) = part.col_ranges[q];
-            for (wv, &sv) in self.w[c0..c1].iter_mut().zip(&sum) {
+            cluster.reduce_segments(&mut ws.w_hat, c0, m, pp, c1 - c0);
+            for (wv, &sv) in self.w[c0..c1].iter_mut().zip(&ws.w_hat[c0..c1]) {
                 *wv = scale * sv;
             }
         }
 
-        // 3. response sharing (tree reduce over q per row) + hinge prox —
-        // the prox is a per-row-partition task, so it is its own superstep
-        let share_parts: Vec<Vec<f32>> = (0..pp * qq)
-            .map(|i| {
-                z_loc[i]
-                    .iter()
-                    .zip(&self.uz[i])
-                    .map(|(&a, &b)| a + b)
-                    .collect()
-            })
-            .collect();
-        let c_tots = cluster.reduce_over_q(share_parts, pp, qq);
-        let vs = {
-            let rho_q = rho / qq as f32;
-            let inv_n = 1.0 / part.n as f32;
-            let mut plan = StepPlan::with_capacity(pp);
-            for (p, c_tot) in c_tots.iter().enumerate() {
-                plan.task(move || staged.prox_hinge(p, c_tot, rho_q, inv_n));
-            }
-            cluster.grid_step(plan)?
-        };
+        // 3. response sharing (in-place tree reduce over q per row) +
+        // hinge prox — the prox is a per-row-partition task, so it is its
+        // own superstep
         for p in 0..pp {
             let n_p = part.n_p(p);
-            let (c_tot, v) = (&c_tots[p], &vs[p]);
+            for q in 0..qq {
+                let i = k(p, q);
+                let base = ws.z_off[p] + q * n_p;
+                for (r, &uv) in self.uz[i].iter().enumerate() {
+                    ws.z_hat[base + r] = ws.z_loc[base + r] + uv;
+                }
+            }
+        }
+        for p in 0..pp {
+            let (r0, r1) = part.row_ranges[p];
+            let n_p = r1 - r0;
+            cluster.reduce_segments(&mut ws.z_hat, ws.z_off[p], n_p, qq, n_p);
+            ws.c_tot[r0..r1]
+                .copy_from_slice(&ws.z_hat[ws.z_off[p]..ws.z_off[p] + n_p]);
+        }
+        {
+            let rho_q = rho / qq as f32;
+            let inv_n = 1.0 / part.n as f32;
+            let vs = TaskSlab::new(&mut ws.vs);
+            let c_tot: &[f32] = &ws.c_tot;
+            cluster.grid_step_into(pp, false, &mut ws.scratch, |p, _sc| {
+                let (r0, r1) = part.row_ranges[p];
+                // SAFETY: row ranges are disjoint per task.
+                let out = unsafe { vs.segment(r0, r1 - r0) };
+                staged.prox_hinge_into(p, &c_tot[r0..r1], rho_q, inv_n, out)
+            })?;
+        }
+        for p in 0..pp {
+            let (r0, r1) = part.row_ranges[p];
+            let n_p = r1 - r0;
             // redistribute: s_pq = c_pq + (v − c_tot)/Q
             for q in 0..qq {
                 let i = k(p, q);
+                let base = ws.z_off[p] + q * n_p;
                 for r in 0..n_p {
-                    let c_pq = z_loc[i][r] + self.uz[i][r];
-                    self.s[i][r] = c_pq + (v[r] - c_tot[r]) / qq as f32;
+                    let c_pq = ws.z_loc[base + r] + self.uz[i][r];
+                    self.s[i][r] =
+                        c_pq + (ws.vs[r0 + r] - ws.c_tot[r0 + r]) / qq as f32;
                 }
             }
         }
 
         // 4. scaled dual updates
         for p in 0..pp {
+            let n_p = part.n_p(p);
             for q in 0..qq {
                 let (c0, _c1) = part.col_ranges[q];
                 let i = k(p, q);
                 for (r, u) in self.uw[i].iter_mut().enumerate() {
-                    *u += w_loc[i][r] - self.w[c0 + r];
+                    *u += ws.w_loc[p * m + c0 + r] - self.w[c0 + r];
                 }
                 for (r, u) in self.uz[i].iter_mut().enumerate() {
-                    *u += z_loc[i][r] - self.s[i][r];
+                    *u += ws.z_loc[ws.z_off[p] + q * n_p + r] - self.s[i][r];
                 }
             }
         }

@@ -12,11 +12,15 @@
 //!    treeAggregate over the observation partitions of each feature
 //!    block).
 //!
-//! All per-partition execution flows through
-//! [`SimCluster::grid_step`](crate::cluster::SimCluster::grid_step): the
-//! engine runs the tasks on the worker pool, measures them, and charges
-//! the LPT makespan — this coordinator never touches timers or the
-//! schedule directly.
+//! All per-partition execution flows through the zero-allocation superstep
+//! path ([`SimCluster::grid_step_into`](crate::cluster::SimCluster::grid_step_into)):
+//! a persistent [`D3caWorkspace`] holds the Δα and contribution slabs, the
+//! per-task index streams, and per-worker SDCA scratch, so iterations
+//! after the first allocate nothing — §V's "primal vector computation
+//! bottleneck" is all compute, no allocator churn.  Reductions happen in
+//! place on the slabs ([`SimCluster::reduce_segments`](crate::cluster::SimCluster::reduce_segments))
+//! with the same binary-tree combine order (and comm charges) as the
+//! boxed `reduce_over_*` path, so iterates and clocks stay bit-identical.
 //!
 //! With Q = 1 this reduces exactly to CoCoA.  Dual feasibility of the
 //! averaged iterate is preserved because each per-partition update stays
@@ -24,7 +28,7 @@
 //! (tested in `rust/tests/properties.rs`).
 
 use super::driver::Optimizer;
-use crate::cluster::{SimCluster, StepPlan};
+use crate::cluster::{SimCluster, TaskSlab};
 use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::runtime::StagedGrid;
@@ -79,6 +83,35 @@ impl Default for D3caConfig {
     }
 }
 
+/// Per-worker SDCA scratch: local α / w copies, sized to the largest
+/// partition at init.
+struct SdcaScratch {
+    a: Vec<f32>,
+    w: Vec<f32>,
+}
+
+/// Persistent per-run working memory — allocated once in `init`, reused
+/// by every iteration (steady state allocates nothing).
+struct D3caWorkspace {
+    /// Δα slab: observation group p starts at `delta_off[p]` and holds qq
+    /// segments of n_p each (task (p,q) writes segment q).
+    delta: Vec<f32>,
+    delta_off: Vec<usize>,
+    /// Scaled dual update of the last iteration, length n (feeds the
+    /// incremental primal mode).
+    upd: Vec<f32>,
+    /// Primal contribution slab: task (p,q) at `p*m + c0(q)`, length m_q.
+    contrib: Vec<f32>,
+    /// Per-task index streams, refilled in place each iteration.
+    idx: Vec<i32>,
+    /// (start, len) of task (p,q)'s stream in `idx`, indexed `p*qq + q`.
+    idx_off: Vec<(usize, usize)>,
+    /// Per-task local SDCA step counts (fixed across iterations).
+    h: Vec<usize>,
+    /// One scratch cell per worker thread.
+    scratch: Vec<SdcaScratch>,
+}
+
 /// D3CA state: the global dual α (concatenated over observation
 /// partitions) and primal w (concatenated over feature partitions).
 pub struct D3ca {
@@ -87,12 +120,13 @@ pub struct D3ca {
     w: Vec<f32>,
     rng_root: Xoshiro,
     n: usize,
+    ws: Option<D3caWorkspace>,
 }
 
 impl D3ca {
     pub fn new(cfg: D3caConfig) -> D3ca {
         let rng_root = Xoshiro::new(cfg.seed).substream(0xD3CA, 0, 0);
-        D3ca { cfg, alpha: Vec::new(), w: Vec::new(), rng_root, n: 0 }
+        D3ca { cfg, alpha: Vec::new(), w: Vec::new(), rng_root, n: 0, ws: None }
     }
 
     pub fn alpha(&self) -> &[f32] {
@@ -121,7 +155,7 @@ impl Optimizer for D3ca {
         self.cfg.lambda
     }
 
-    fn init(&mut self, staged: &StagedGrid<'_>, _cluster: &mut SimCluster) -> Result<()> {
+    fn init(&mut self, staged: &StagedGrid<'_>, cluster: &mut SimCluster) -> Result<()> {
         let part = staged.part;
         if !Loss::Hinge.has_sdca_closed_form() {
             bail!("D3CA requires the hinge closed form");
@@ -129,6 +163,42 @@ impl Optimizer for D3ca {
         self.n = part.n;
         self.alpha = vec![0.0; part.n];
         self.w = vec![0.0; part.m];
+
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let mut delta_off = Vec::with_capacity(pp);
+        let mut acc = 0usize;
+        for p in 0..pp {
+            delta_off.push(acc);
+            acc += qq * part.n_p(p);
+        }
+        let mut idx_off = Vec::with_capacity(pp * qq);
+        let mut h = Vec::with_capacity(pp * qq);
+        let mut idx_len = 0usize;
+        for p in 0..pp {
+            let n_p = part.n_p(p);
+            let h_p = ((n_p as f32 * self.cfg.local_epochs).round() as usize).max(1);
+            for _q in 0..qq {
+                let len = n_p.min(h_p);
+                idx_off.push((idx_len, len));
+                h.push(h_p);
+                idx_len += len;
+            }
+        }
+        let max_np = (0..pp).map(|p| part.n_p(p)).max().unwrap_or(0);
+        let max_mq = (0..qq).map(|q| part.m_q(q)).max().unwrap_or(0);
+        let scratch = (0..cluster.threads())
+            .map(|_| SdcaScratch { a: vec![0.0; max_np], w: vec![0.0; max_mq] })
+            .collect();
+        self.ws = Some(D3caWorkspace {
+            delta: vec![0.0; acc],
+            delta_off,
+            upd: vec![0.0; part.n],
+            contrib: vec![0.0; pp * part.m],
+            idx: vec![0; idx_len],
+            idx_off,
+            h,
+            scratch,
+        });
         Ok(())
     }
 
@@ -154,75 +224,105 @@ impl Optimizer for D3ca {
             cluster.broadcast_cost(part.n_p(p) * 4, qq);
         }
 
-        // Steps 2-4: local dual methods — one superstep, one task per
-        // partition, sharing α/w by reference across the worker pool.
-        let deltas = {
-            let (alpha, w) = (&self.alpha, &self.w);
-            let mut plan = StepPlan::with_capacity(pp * qq);
-            for p in 0..pp {
-                let (r0, r1) = part.row_ranges[p];
-                for q in 0..qq {
-                    let (c0, c1) = part.col_ranges[q];
-                    let n_p = r1 - r0;
-                    let h = ((n_p as f32 * self.cfg.local_epochs).round() as usize).max(1);
-                    let mut rng = self.rng_root.substream(p as u64, q as u64, t as u64);
-                    let idx = rng.index_stream(n_p, n_p.min(h));
-                    let alpha_p = &alpha[r0..r1];
-                    let w_q = &w[c0..c1];
-                    plan.task(move || {
-                        staged.sdca_epoch(p, q, alpha_p, w_q, &idx, h, lamn, invq, beta)
-                    });
-                }
-            }
-            cluster.grid_step(plan)?
-        };
+        let ws = self.ws.as_mut().expect("init before iterate");
 
-        // Steps 5-7: α[p,·] += scale · Σ_q Δα[p,q]  (tree reduce over q;
-        // scale = 1/(P·Q) per the paper, or 1/Q under the ablation).
+        // Refill the per-task visit streams for this iteration (same
+        // substream keys and draws as the allocating path).
+        for p in 0..pp {
+            for q in 0..qq {
+                let (s, len) = ws.idx_off[p * qq + q];
+                let mut rng = self.rng_root.substream(p as u64, q as u64, t as u64);
+                rng.fill_index_stream(part.n_p(p), &mut ws.idx[s..s + len]);
+            }
+        }
+
+        // Steps 2-4: local dual methods — one superstep, one task per
+        // partition, each writing its Δα into its slab segment.
+        {
+            let delta = TaskSlab::new(&mut ws.delta);
+            let delta_off: &[usize] = &ws.delta_off;
+            let idx_slab: &[i32] = &ws.idx;
+            let idx_off: &[(usize, usize)] = &ws.idx_off;
+            let h_all: &[usize] = &ws.h;
+            let (alpha, w) = (&self.alpha, &self.w);
+            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, sc| {
+                let (p, q) = (task / qq, task % qq);
+                let (r0, r1) = part.row_ranges[p];
+                let (c0, c1) = part.col_ranges[q];
+                let n_p = r1 - r0;
+                let (s, len) = idx_off[task];
+                // SAFETY: the segment is derived from the task index
+                // alone and segments of distinct tasks are disjoint by
+                // construction of delta_off.
+                let da = unsafe { delta.segment(delta_off[p] + q * n_p, n_p) };
+                staged.sdca_epoch_into(
+                    p,
+                    q,
+                    &alpha[r0..r1],
+                    &w[c0..c1],
+                    &idx_slab[s..s + len],
+                    h_all[task],
+                    lamn,
+                    invq,
+                    beta,
+                    da,
+                    &mut sc.a,
+                    &mut sc.w,
+                )
+            })?;
+        }
+
+        // Steps 5-7: α[p,·] += scale · Σ_q Δα[p,q]  (in-place tree reduce
+        // over q; scale = 1/(P·Q) per the paper, or 1/Q under the
+        // ablation).  The scaled update is kept for the incremental
+        // primal mode.
         let scale = if self.cfg.avg_pq {
             1.0 / (pp * qq) as f32
         } else {
             1.0 / qq as f32
         };
-        let mut upd = cluster.reduce_over_q(deltas, pp, qq);
-        for (p, sum) in upd.iter_mut().enumerate() {
+        for p in 0..pp {
             let (r0, r1) = part.row_ranges[p];
-            crate::linalg::scale(scale, sum);
-            for (a, &d) in self.alpha[r0..r1].iter_mut().zip(sum.iter()) {
-                *a += d;
+            let n_p = r1 - r0;
+            cluster.reduce_segments(&mut ws.delta, ws.delta_off[p], n_p, qq, n_p);
+            let sum = &ws.delta[ws.delta_off[p]..ws.delta_off[p] + n_p];
+            for (k, &s) in sum.iter().enumerate() {
+                let u = scale * s;
+                ws.upd[r0 + k] = u;
+                self.alpha[r0 + k] += u;
             }
         }
 
         // Steps 8-10: primal recovery — a second superstep over the grid,
-        // then a tree reduce over p per feature column.  Full mode
-        // recomputes w from α; incremental mode applies the exact linear
-        // identity from the dual *update* only.
-        let contribs = {
+        // then an in-place tree reduce over p per feature column.  Full
+        // mode recomputes w from α; incremental mode applies the exact
+        // linear identity from the dual *update* only.
+        let m = part.m;
+        let incremental = self.cfg.incremental_primal;
+        {
+            let contrib = TaskSlab::new(&mut ws.contrib);
             let alpha = &self.alpha;
-            let upd = &upd;
-            let mut plan = StepPlan::with_capacity(pp * qq);
-            for p in 0..pp {
+            let upd: &[f32] = &ws.upd;
+            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, _sc| {
+                let (p, q) = (task / qq, task % qq);
                 let (r0, r1) = part.row_ranges[p];
-                for q in 0..qq {
-                    let v_p: &[f32] = if self.cfg.incremental_primal {
-                        &upd[p]
-                    } else {
-                        &alpha[r0..r1]
-                    };
-                    plan.task(move || staged.atx(p, q, v_p));
-                }
-            }
-            cluster.grid_step(plan)?
-        };
-        let sums = cluster.reduce_over_p(contribs, pp, qq);
-        for (q, sum) in sums.into_iter().enumerate() {
+                let (c0, c1) = part.col_ranges[q];
+                let v_p: &[f32] = if incremental { &upd[r0..r1] } else { &alpha[r0..r1] };
+                // SAFETY: segment (p*m + c0, m_q) is disjoint per task.
+                let out = unsafe { contrib.segment(p * m + c0, c1 - c0) };
+                staged.atx_into(p, q, v_p, out)
+            })?;
+        }
+        for q in 0..qq {
             let (c0, c1) = part.col_ranges[q];
-            if self.cfg.incremental_primal {
-                for (wv, &s) in self.w[c0..c1].iter_mut().zip(&sum) {
+            cluster.reduce_segments(&mut ws.contrib, c0, m, pp, c1 - c0);
+            let sum = &ws.contrib[c0..c1];
+            if incremental {
+                for (wv, &s) in self.w[c0..c1].iter_mut().zip(sum) {
                     *wv += s / lamn;
                 }
             } else {
-                for (wv, &s) in self.w[c0..c1].iter_mut().zip(&sum) {
+                for (wv, &s) in self.w[c0..c1].iter_mut().zip(sum) {
                     *wv = s / lamn;
                 }
             }

@@ -15,16 +15,20 @@
 //!    results — or, for RADiSA-avg (`average: true`), every partition
 //!    works on the whole w[·,q] and the results are averaged over p.
 //!
-//! Each numbered phase is one superstep: the margins pass, the gradient
-//! pass and the SVRG pass are [`StepPlan`]s executed by
-//! [`SimCluster::grid_step`](crate::cluster::SimCluster::grid_step) on
-//! the worker pool, with the collectives charged through the cluster's
-//! reduce/broadcast cost model (RADiSA-avg's full-block shipping uses the
-//! data-free [`SimCluster::reduce_cost`](crate::cluster::SimCluster::reduce_cost)).
+//! Each numbered phase is one superstep on the zero-allocation path
+//! ([`SimCluster::grid_step_into`](crate::cluster::SimCluster::grid_step_into)):
+//! a persistent [`RadisaWorkspace`] holds the margin/gradient/result
+//! slabs, per-task index streams, and per-worker ψ/δ scratch, and the
+//! grouped reductions run in place on the slabs
+//! ([`SimCluster::reduce_segments`](crate::cluster::SimCluster::reduce_segments)),
+//! so iterations after the first allocate nothing.  On sparse blocks the
+//! SVRG inner loop uses the staged sub-block window index (O(nnz in
+//! window) per step).  RADiSA-avg's full-block shipping uses the
+//! data-free [`SimCluster::reduce_cost`](crate::cluster::SimCluster::reduce_cost).
 
 use super::driver::Optimizer;
 use super::schedule::{radisa_eta, SubBlockSchedule};
-use crate::cluster::{SimCluster, StepPlan};
+use crate::cluster::{SimCluster, TaskSlab};
 use crate::data::{Partitioned, SubBlocks};
 use crate::loss::Loss;
 use crate::runtime::StagedGrid;
@@ -73,6 +77,39 @@ impl Default for RadisaConfig {
     }
 }
 
+/// Per-worker scratch: ψ for the gradient pass, δ for the SVRG window.
+struct RadisaScratch {
+    psi: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+/// Persistent per-run working memory — allocated once in `init`, reused
+/// by every iteration (steady state allocates nothing).
+struct RadisaWorkspace {
+    /// Margin slab: group p at `mar_off[p]`, qq segments of n_p each.
+    margins: Vec<f32>,
+    mar_off: Vec<usize>,
+    /// Reduced snapshot margins m̃, length n (partition p at row range p).
+    mt: Vec<f32>,
+    /// Gradient slab: task (p,q) at `p*m + c0(q)`, length m_q.
+    grad: Vec<f32>,
+    /// Full snapshot gradient μ̃ (+ λw̃), length m.
+    mu: Vec<f32>,
+    /// SVRG result slab: task (q,p) at `pp*c0(q) + p*m_q`, length m_q.
+    result: Vec<f32>,
+    /// Window of task (q,p), indexed `q*pp + p` (refilled per round).
+    windows: Vec<(usize, usize)>,
+    /// Per-task index streams (task order (q,p)), refilled per round.
+    idx: Vec<i32>,
+    idx_off: Vec<(usize, usize)>,
+    /// Sub-block assignment scratch (length pp).
+    assign: Vec<usize>,
+    /// f64 accumulator for RADiSA-avg's exact average (length max m_q).
+    avg_acc: Vec<f64>,
+    /// One scratch cell per worker thread.
+    scratch: Vec<RadisaScratch>,
+}
+
 pub struct Radisa {
     cfg: RadisaConfig,
     w: Vec<f32>,
@@ -80,13 +117,22 @@ pub struct Radisa {
     schedule: Option<SubBlockSchedule>,
     subblocks: Option<SubBlocks>,
     gamma_eff: f32,
+    ws: Option<RadisaWorkspace>,
 }
 
 impl Radisa {
     pub fn new(cfg: RadisaConfig) -> Radisa {
         let rng_root = Xoshiro::new(cfg.seed).substream(0x4AD1, 0, 0);
         let gamma_eff = cfg.gamma;
-        Radisa { cfg, w: Vec::new(), rng_root, schedule: None, subblocks: None, gamma_eff }
+        Radisa {
+            cfg,
+            w: Vec::new(),
+            rng_root,
+            schedule: None,
+            subblocks: None,
+            gamma_eff,
+            ws: None,
+        }
     }
 
     /// The step-size constant actually in use (resolved after `init`).
@@ -99,58 +145,76 @@ impl Radisa {
     }
 
     /// Margins pass: m[p] = Σ_q x[p,q] w[·,q] — one superstep over the
-    /// grid, then a reduce over q per row partition.  Run once per round —
-    /// it is what keeps the local margin identity exact between
-    /// delayed-gradient rounds.
+    /// grid, then an in-place reduce over q per row partition into `mt`.
+    /// Run once per round — it is what keeps the local margin identity
+    /// exact between delayed-gradient rounds.
     fn margins_pass(
-        &self,
+        &mut self,
         staged: &StagedGrid<'_>,
         cluster: &mut SimCluster,
-    ) -> Result<Vec<Vec<f32>>> {
+    ) -> Result<()> {
         let part = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
-        let w = &self.w;
-        let mut plan = StepPlan::with_capacity(pp * qq);
-        for p in 0..pp {
-            for q in 0..qq {
+        let ws = self.ws.as_mut().expect("init before iterate");
+        {
+            let slab = TaskSlab::new(&mut ws.margins);
+            let mar_off: &[usize] = &ws.mar_off;
+            let w = &self.w;
+            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, _sc| {
+                let (p, q) = (task / qq, task % qq);
                 let (c0, c1) = part.col_ranges[q];
-                let w_q = &w[c0..c1];
-                plan.task(move || staged.margins(p, q, w_q));
-            }
+                let n_p = part.n_p(p);
+                // SAFETY: segment derived from the task index alone;
+                // segments are disjoint by construction of mar_off.
+                let out = unsafe { slab.segment(mar_off[p] + q * n_p, n_p) };
+                staged.margins_into(p, q, &w[c0..c1], out)
+            })?;
         }
-        let local = cluster.grid_step(plan)?;
-        Ok(cluster.reduce_over_q(local, pp, qq))
+        for p in 0..pp {
+            let (r0, r1) = part.row_ranges[p];
+            let n_p = r1 - r0;
+            cluster.reduce_segments(&mut ws.margins, ws.mar_off[p], n_p, qq, n_p);
+            ws.mt[r0..r1]
+                .copy_from_slice(&ws.margins[ws.mar_off[p]..ws.mar_off[p] + n_p]);
+        }
+        Ok(())
     }
 
     /// Gradient pass: μ[·,q] = Σ_p (1/n) x[p,q]ᵀ ψ(m[p]) + λ w — one
-    /// superstep, then a reduce over p per feature partition — the
-    /// expensive half of the snapshot, skipped on delayed rounds.
+    /// superstep, then an in-place reduce over p per feature partition
+    /// into `mu` — the expensive half of the snapshot, skipped on delayed
+    /// rounds.
     fn grad_pass(
-        &self,
+        &mut self,
         staged: &StagedGrid<'_>,
         cluster: &mut SimCluster,
-        mt: &[Vec<f32>],
-    ) -> Result<Vec<Vec<f32>>> {
+    ) -> Result<()> {
         let part = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
+        let m = part.m;
         let loss = self.cfg.loss;
-        let mut plan = StepPlan::with_capacity(pp * qq);
-        for p in 0..pp {
-            let mt_p = &mt[p];
-            for q in 0..qq {
-                plan.task(move || staged.grad(loss, p, q, mt_p, part.n));
-            }
+        let ws = self.ws.as_mut().expect("init before iterate");
+        {
+            let slab = TaskSlab::new(&mut ws.grad);
+            let mt: &[f32] = &ws.mt;
+            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, sc| {
+                let (p, q) = (task / qq, task % qq);
+                let (r0, r1) = part.row_ranges[p];
+                let (c0, c1) = part.col_ranges[q];
+                // SAFETY: segment (p*m + c0, m_q) is disjoint per task.
+                let out = unsafe { slab.segment(p * m + c0, c1 - c0) };
+                staged.grad_into(loss, p, q, &mt[r0..r1], part.n, out, &mut sc.psi)
+            })?;
         }
-        let local = cluster.grid_step(plan)?;
-        let mut mu = cluster.reduce_over_p(local, pp, qq);
-        for (q, g) in mu.iter_mut().enumerate() {
+        for q in 0..qq {
             let (c0, c1) = part.col_ranges[q];
+            cluster.reduce_segments(&mut ws.grad, c0, m, pp, c1 - c0);
             // + λ w̃ (the regularizer's exact gradient at the snapshot)
-            for (gv, &wv) in g.iter_mut().zip(&self.w[c0..c1]) {
-                *gv += self.cfg.lambda * wv;
+            for k in c0..c1 {
+                ws.mu[k] = ws.grad[k] + self.cfg.lambda * self.w[k];
             }
         }
-        Ok(mu)
+        Ok(())
     }
 }
 
@@ -171,7 +235,7 @@ impl Optimizer for Radisa {
         self.cfg.lambda
     }
 
-    fn init(&mut self, staged: &StagedGrid<'_>, _cluster: &mut SimCluster) -> Result<()> {
+    fn init(&mut self, staged: &StagedGrid<'_>, cluster: &mut SimCluster) -> Result<()> {
         let part = staged.part;
         self.w = vec![0.0; part.m];
         self.schedule = Some(SubBlockSchedule::new(&self.rng_root, part.grid.p));
@@ -190,6 +254,46 @@ impl Optimizer for Radisa {
             let mean = (total / part.n as f64).max(1e-12) as f32;
             self.gamma_eff = (part.grid.p * part.grid.q) as f32 / mean;
         }
+
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let mut mar_off = Vec::with_capacity(pp);
+        let mut acc = 0usize;
+        for p in 0..pp {
+            mar_off.push(acc);
+            acc += qq * part.n_p(p);
+        }
+        // index streams in SVRG task order (q, p); lengths fixed across
+        // iterations (they depend only on n_p and the batch size)
+        let mut idx_off = Vec::with_capacity(pp * qq);
+        let mut idx_len = 0usize;
+        for _q in 0..qq {
+            for p in 0..pp {
+                let n_p = part.n_p(p);
+                let l = if self.cfg.batch == 0 { n_p } else { self.cfg.batch };
+                let len = n_p.min(l).max(1);
+                idx_off.push((idx_len, len));
+                idx_len += len;
+            }
+        }
+        let max_np = (0..pp).map(|p| part.n_p(p)).max().unwrap_or(0);
+        let max_mq = (0..qq).map(|q| part.m_q(q)).max().unwrap_or(0);
+        let scratch = (0..cluster.threads())
+            .map(|_| RadisaScratch { psi: Vec::with_capacity(max_np), delta: Vec::with_capacity(max_mq) })
+            .collect();
+        self.ws = Some(RadisaWorkspace {
+            margins: vec![0.0; acc],
+            mar_off,
+            mt: vec![0.0; part.n],
+            grad: vec![0.0; pp * part.m],
+            mu: vec![0.0; part.m],
+            result: vec![0.0; pp * part.m],
+            windows: vec![(0, 0); pp * qq],
+            idx: vec![0; idx_len],
+            idx_off,
+            assign: vec![0; pp],
+            avg_acc: vec![0.0; max_mq],
+            scratch,
+        });
         Ok(())
     }
 
@@ -208,94 +312,125 @@ impl Optimizer for Radisa {
 
         // steps 2-3: snapshot margins + full gradient (the gradient pass is
         // computed once and anchors all `rounds` exchange+SVRG rounds)
-        let mut mt = self.margins_pass(staged, cluster)?;
-        let mu = self.grad_pass(staged, cluster, &mt)?;
+        self.margins_pass(staged, cluster)?;
+        self.grad_pass(staged, cluster)?;
 
         for round in 0..rounds {
             if round > 0 {
                 // delayed-gradient round: refresh only the margins so the
                 // local margin identity stays exact; μ̃ stays stale
-                mt = self.margins_pass(staged, cluster)?;
+                self.margins_pass(staged, cluster)?;
             }
             // a distinct schedule/rng/step-size epoch per round, so k
             // delayed rounds anneal exactly like k vanilla iterations
             let tick = (t - 1) * rounds + round + 1;
             let eta = radisa_eta(self.gamma_eff, tick);
+            let average = self.cfg.average;
 
-            // steps 4-11: local SVRG on randomly exchanged sub-blocks —
-            // one superstep over the grid, tasks ordered (q, p)
+            // refill windows + visit streams for this round (task order
+            // (q, p), same substream keys as ever)
+            let ws = self.ws.as_mut().expect("init before iterate");
             let schedule = self.schedule.as_ref().unwrap();
             let subblocks = self.subblocks.as_ref().unwrap();
-            let w_snap = &self.w;
-            let mut windows: Vec<(usize, usize)> = Vec::with_capacity(pp * qq);
-            let mut plan = StepPlan::with_capacity(pp * qq);
             for q in 0..qq {
                 let (c0, c1) = part.col_ranges[q];
-                let wt_q = &w_snap[c0..c1];
-                let assign = schedule.assignment(q, tick);
+                schedule.assignment_into(q, tick, &mut ws.assign);
                 for p in 0..pp {
-                    let n_p = part.n_p(p);
-                    let l = if self.cfg.batch == 0 { n_p } else { self.cfg.batch };
-                    let window = if self.cfg.average {
+                    let task = q * pp + p;
+                    ws.windows[task] = if average {
                         (0, c1 - c0)
                     } else {
-                        subblocks.range(q, assign[p])
+                        subblocks.range(q, ws.assign[p])
                     };
-                    windows.push(window);
-                    let mu_win = &mu[q][window.0..window.1];
-                    let mt_p = &mt[p];
+                    let (s, len) = ws.idx_off[task];
                     let mut rng =
                         self.rng_root.substream(p as u64, q as u64, tick as u64);
-                    let idx = rng.index_stream(n_p, n_p.min(l).max(1));
-                    let (loss, lam) = (self.cfg.loss, self.cfg.lambda);
-                    plan.task(move || {
-                        staged.svrg_block(
-                            loss, p, q, wt_q, wt_q, mu_win, window, mt_p, &idx, l,
-                            eta, lam,
-                        )
-                    });
+                    rng.fill_index_stream(part.n_p(p), &mut ws.idx[s..s + len]);
                 }
             }
-            if self.cfg.average {
-                // RADiSA-avg's combine is an average of full-block partial
-                // solutions, so the coordinator "does not wait for
-                // stragglers" (paper §IV): under a cluster scenario this
-                // superstep's makespan ignores injected straggler delays
-                // and failure re-charges.
-                plan.mark_tolerant();
+
+            // steps 4-11: local SVRG on randomly exchanged sub-blocks —
+            // one superstep over the grid, tasks ordered (q, p).
+            // RADiSA-avg's combine is an average of full-block partial
+            // solutions, so the coordinator "does not wait for
+            // stragglers" (paper §IV): its superstep is tolerant and the
+            // makespan ignores injected straggler delays and failure
+            // re-charges.
+            {
+                let slab = TaskSlab::new(&mut ws.result);
+                let windows: &[(usize, usize)] = &ws.windows;
+                let idx_slab: &[i32] = &ws.idx;
+                let idx_off: &[(usize, usize)] = &ws.idx_off;
+                let mt: &[f32] = &ws.mt;
+                let mu: &[f32] = &ws.mu;
+                let w_snap = &self.w;
+                let (loss, lam, batch) = (self.cfg.loss, self.cfg.lambda, self.cfg.batch);
+                cluster.grid_step_into(pp * qq, average, &mut ws.scratch, |task, sc| {
+                    let (q, p) = (task / pp, task % pp);
+                    let (c0, c1) = part.col_ranges[q];
+                    let (r0, r1) = part.row_ranges[p];
+                    let n_p = r1 - r0;
+                    let m_q = c1 - c0;
+                    let l = if batch == 0 { n_p } else { batch };
+                    let window = windows[task];
+                    let (s, len) = idx_off[task];
+                    let wt_q = &w_snap[c0..c1];
+                    let mu_win = &mu[c0 + window.0..c0 + window.1];
+                    // SAFETY: segment (pp*c0 + p*m_q, m_q) is disjoint
+                    // per task.
+                    let out = unsafe { slab.segment(pp * c0 + p * m_q, m_q) };
+                    staged.svrg_block_into(
+                        loss,
+                        p,
+                        q,
+                        wt_q,
+                        wt_q,
+                        mu_win,
+                        window,
+                        &mt[r0..r1],
+                        &idx_slab[s..s + len],
+                        l,
+                        eta,
+                        lam,
+                        out,
+                        &mut sc.delta,
+                    )
+                })?;
             }
-            let results = cluster.grid_step(plan)?; // [q*pp + p]
 
             // step 12: combine in task order — concatenate each partition's
             // window, or average full blocks over p (RADiSA-avg)
-            let mut new_w = self.w.clone();
             for q in 0..qq {
                 let (c0, c1) = part.col_ranges[q];
-                if self.cfg.average {
-                    let mut avg_acc = vec![0.0f64; c1 - c0];
+                let m_q = c1 - c0;
+                if average {
+                    let acc = &mut ws.avg_acc[..m_q];
+                    acc.fill(0.0);
                     for p in 0..pp {
-                        for (acc, &v) in avg_acc.iter_mut().zip(&results[q * pp + p]) {
-                            *acc += v as f64;
+                        let seg = &ws.result[pp * c0 + p * m_q..pp * c0 + (p + 1) * m_q];
+                        for (a, &v) in acc.iter_mut().zip(seg) {
+                            *a += v as f64;
                         }
                     }
-                    for (k, acc) in avg_acc.iter().enumerate() {
-                        new_w[c0 + k] = (*acc / pp as f64) as f32;
+                    for (k, &a) in acc.iter().enumerate() {
+                        self.w[c0 + k] = (a / pp as f64) as f32;
                     }
                     // averaging ships full blocks: reduce of P vectors of
                     // m_q f32s (cost only — the average itself is exact
                     // driver-side arithmetic)
-                    cluster.reduce_cost(pp.max(2), (c1 - c0) * 4);
+                    cluster.reduce_cost(pp.max(2), m_q * 4);
                 } else {
                     for p in 0..pp {
-                        let (lo, hi) = windows[q * pp + p];
-                        new_w[c0 + lo..c0 + hi]
-                            .copy_from_slice(&results[q * pp + p][lo..hi]);
+                        let (lo, hi) = ws.windows[q * pp + p];
+                        let seg = &ws.result[pp * c0 + p * m_q..pp * c0 + (p + 1) * m_q];
+                        // the P windows tile [0, m_q), so every coordinate
+                        // of this column block is overwritten exactly once
+                        self.w[c0 + lo..c0 + hi].copy_from_slice(&seg[lo..hi]);
                     }
                     // concatenation ships one sub-block per partition
-                    cluster.broadcast_cost((c1 - c0) * 4 / pp.max(1), pp);
+                    cluster.broadcast_cost(m_q * 4 / pp.max(1), pp);
                 }
             }
-            self.w = new_w;
         }
         Ok(())
     }

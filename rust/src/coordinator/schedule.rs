@@ -27,8 +27,21 @@ impl SubBlockSchedule {
 
     /// Permutation for feature partition `q` at global iteration `t`.
     pub fn assignment(&self, q: usize, t: usize) -> Vec<usize> {
+        let mut out = vec![0usize; self.p];
+        self.assignment_into(q, t, &mut out);
+        out
+    }
+
+    /// [`SubBlockSchedule::assignment`] into a caller-owned buffer of
+    /// length `p` — the allocation-free variant (same draws, same
+    /// permutation).
+    pub fn assignment_into(&self, q: usize, t: usize, out: &mut [usize]) {
+        debug_assert_eq!(out.len(), self.p);
         let mut rng = self.root.substream(q as u64, t as u64, 0xB10C);
-        rng.permutation(self.p)
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = i;
+        }
+        rng.shuffle(out);
     }
 }
 

@@ -68,16 +68,16 @@ pub fn read_libsvm(path: &Path, m_hint: usize) -> Result<Dataset> {
             .file_stem()
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| "libsvm".into()),
-        x: Block::Sparse(SparseMatrix::from_triplets(n, m, triplets)),
+        x: Block::sparse(SparseMatrix::from_triplets(n, m, triplets)),
         y,
     })
 }
 
 /// Write a dataset in LIBSVM format (sparse blocks only).
 pub fn write_libsvm(ds: &Dataset, path: &Path) -> Result<()> {
-    let sp = match &ds.x {
-        Block::Sparse(s) => s,
-        Block::Dense(_) => bail!("write_libsvm expects a sparse dataset"),
+    let sp = match ds.x.as_sparse() {
+        Some(s) => s,
+        None => bail!("write_libsvm expects a sparse dataset"),
     };
     let f = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
@@ -108,8 +108,8 @@ mod tests {
         assert_eq!(back.n(), ds.n());
         assert_eq!(back.m(), 80);
         assert_eq!(back.y, ds.y);
-        match (&ds.x, &back.x) {
-            (Block::Sparse(a), Block::Sparse(b)) => {
+        match (ds.x.as_sparse(), back.x.as_sparse()) {
+            (Some(a), Some(b)) => {
                 assert_eq!(a.indptr, b.indptr);
                 assert_eq!(a.indices, b.indices);
                 for (va, vb) in a.values.iter().zip(&b.values) {

@@ -15,92 +15,131 @@ mod synthetic;
 
 pub use dense::DenseMatrix;
 pub use libsvm::{read_libsvm, write_libsvm};
-pub use partition::{Grid, Partitioned, SubBlocks};
-pub use sparse::SparseMatrix;
+pub use partition::{balanced_ranges, Grid, Partitioned, SubBlocks};
+pub use sparse::{SparseMatrix, SubblockIndex};
 pub use synthetic::{SyntheticDense, SyntheticSparse};
 
-/// A matrix fragment — one `[p,q]` partition's feature slice.
+/// The storage behind a [`Block`].
 #[derive(Clone, Debug)]
-pub enum Block {
+pub enum BlockRepr {
     Dense(DenseMatrix),
     Sparse(SparseMatrix),
 }
 
+/// A matrix fragment — one `[p,q]` partition's feature slice.
+///
+/// The non-zero count is computed once at construction (it feeds the
+/// scenario cost estimates every superstep; recounting a dense buffer per
+/// call was an O(n·m) tax).
+#[derive(Clone, Debug)]
+pub struct Block {
+    repr: BlockRepr,
+    nnz: usize,
+}
+
 impl Block {
+    pub fn dense(m: DenseMatrix) -> Block {
+        let nnz = m.data.iter().filter(|v| **v != 0.0).count();
+        Block { repr: BlockRepr::Dense(m), nnz }
+    }
+
+    pub fn sparse(m: SparseMatrix) -> Block {
+        let nnz = m.nnz();
+        Block { repr: BlockRepr::Sparse(m), nnz }
+    }
+
+    pub fn repr(&self) -> &BlockRepr {
+        &self.repr
+    }
+
+    pub fn as_dense(&self) -> Option<&DenseMatrix> {
+        match &self.repr {
+            BlockRepr::Dense(m) => Some(m),
+            BlockRepr::Sparse(_) => None,
+        }
+    }
+
+    pub fn as_sparse(&self) -> Option<&SparseMatrix> {
+        match &self.repr {
+            BlockRepr::Sparse(m) => Some(m),
+            BlockRepr::Dense(_) => None,
+        }
+    }
+
     pub fn rows(&self) -> usize {
-        match self {
-            Block::Dense(m) => m.rows,
-            Block::Sparse(m) => m.rows,
+        match &self.repr {
+            BlockRepr::Dense(m) => m.rows,
+            BlockRepr::Sparse(m) => m.rows,
         }
     }
 
     pub fn cols(&self) -> usize {
-        match self {
-            Block::Dense(m) => m.cols,
-            Block::Sparse(m) => m.cols,
+        match &self.repr {
+            BlockRepr::Dense(m) => m.cols,
+            BlockRepr::Sparse(m) => m.cols,
         }
     }
 
+    /// Stored non-zeros — cached at construction, O(1).
     pub fn nnz(&self) -> usize {
-        match self {
-            Block::Dense(m) => m.data.iter().filter(|v| **v != 0.0).count(),
-            Block::Sparse(m) => m.values.len(),
-        }
+        self.nnz
     }
 
     /// out = X w
     pub fn margins_into(&self, w: &[f32], out: &mut [f32]) {
-        match self {
-            Block::Dense(m) => m.gemv_into(w, out),
-            Block::Sparse(m) => m.gemv_into(w, out),
+        match &self.repr {
+            BlockRepr::Dense(m) => m.gemv_into(w, out),
+            BlockRepr::Sparse(m) => m.gemv_into(w, out),
         }
     }
 
-    /// out = X^T v
+    /// out = X^T v (sparse blocks stream the CSC mirror when it is built
+    /// — the partitioner builds it for every per-partition block; without
+    /// it the CSR scatter kernel runs).
     pub fn atx_into(&self, v: &[f32], out: &mut [f32]) {
-        match self {
-            Block::Dense(m) => m.gemv_t_into(v, out),
-            Block::Sparse(m) => m.gemv_t_into(v, out),
+        match &self.repr {
+            BlockRepr::Dense(m) => m.gemv_t_into(v, out),
+            BlockRepr::Sparse(m) => m.gemv_t_into(v, out),
         }
     }
 
     /// x_i · w for a single row.
     pub fn row_dot(&self, i: usize, w: &[f32]) -> f32 {
-        match self {
-            Block::Dense(m) => crate::linalg::dot(m.row(i), w),
-            Block::Sparse(m) => m.row_dot(i, w),
+        match &self.repr {
+            BlockRepr::Dense(m) => crate::linalg::dot(m.row(i), w),
+            BlockRepr::Sparse(m) => m.row_dot(i, w),
         }
     }
 
     /// x_i · w restricted to a masked coordinate window [lo, hi).
     pub fn row_dot_window(&self, i: usize, w: &[f32], lo: usize, hi: usize) -> f32 {
-        match self {
-            Block::Dense(m) => crate::linalg::dot(&m.row(i)[lo..hi], &w[lo..hi]),
-            Block::Sparse(m) => m.row_dot_window(i, w, lo, hi),
+        match &self.repr {
+            BlockRepr::Dense(m) => crate::linalg::dot(&m.row(i)[lo..hi], &w[lo..hi]),
+            BlockRepr::Sparse(m) => m.row_dot_window(i, w, lo, hi),
         }
     }
 
     /// ||x_i||^2
     pub fn row_norm_sq(&self, i: usize) -> f32 {
-        match self {
-            Block::Dense(m) => crate::linalg::nrm2_sq(m.row(i)),
-            Block::Sparse(m) => m.row_norm_sq(i),
+        match &self.repr {
+            BlockRepr::Dense(m) => crate::linalg::nrm2_sq(m.row(i)),
+            BlockRepr::Sparse(m) => m.row_norm_sq(i),
         }
     }
 
     /// w += a * x_i
     pub fn row_axpy(&self, i: usize, a: f32, w: &mut [f32]) {
-        match self {
-            Block::Dense(m) => crate::linalg::axpy(a, m.row(i), w),
-            Block::Sparse(m) => m.row_axpy(i, a, w),
+        match &self.repr {
+            BlockRepr::Dense(m) => crate::linalg::axpy(a, m.row(i), w),
+            BlockRepr::Sparse(m) => m.row_axpy(i, a, w),
         }
     }
 
     /// w[lo..hi] += a * x_i[lo..hi]
     pub fn row_axpy_window(&self, i: usize, a: f32, w: &mut [f32], lo: usize, hi: usize) {
-        match self {
-            Block::Dense(m) => crate::linalg::axpy(a, &m.row(i)[lo..hi], &mut w[lo..hi]),
-            Block::Sparse(m) => m.row_axpy_window(i, a, w, lo, hi),
+        match &self.repr {
+            BlockRepr::Dense(m) => crate::linalg::axpy(a, &m.row(i)[lo..hi], &mut w[lo..hi]),
+            BlockRepr::Sparse(m) => m.row_axpy_window(i, a, w, lo, hi),
         }
     }
 
@@ -109,9 +148,9 @@ impl Block {
     /// uses (out has length hi - lo).
     pub fn row_axpy_window_offset(&self, i: usize, a: f32, out: &mut [f32], lo: usize, hi: usize) {
         debug_assert_eq!(out.len(), hi - lo);
-        match self {
-            Block::Dense(m) => crate::linalg::axpy(a, &m.row(i)[lo..hi], out),
-            Block::Sparse(m) => {
+        match &self.repr {
+            BlockRepr::Dense(m) => crate::linalg::axpy(a, &m.row(i)[lo..hi], out),
+            BlockRepr::Sparse(m) => {
                 for (j, v) in m.row_iter(i) {
                     if j >= lo && j < hi {
                         out[j - lo] += a * v;
@@ -124,9 +163,9 @@ impl Block {
     /// x_i[lo..hi] · d where d is re-based to the window (length hi - lo).
     pub fn row_dot_window_offset(&self, i: usize, d: &[f32], lo: usize, hi: usize) -> f32 {
         debug_assert_eq!(d.len(), hi - lo);
-        match self {
-            Block::Dense(m) => crate::linalg::dot(&m.row(i)[lo..hi], d),
-            Block::Sparse(m) => {
+        match &self.repr {
+            BlockRepr::Dense(m) => crate::linalg::dot(&m.row(i)[lo..hi], d),
+            BlockRepr::Sparse(m) => {
                 let mut acc = 0.0f32;
                 for (j, v) in m.row_iter(i) {
                     if j >= lo && j < hi {
@@ -146,13 +185,13 @@ impl Block {
                 "block {}x{} exceeds bucket {}x{}",
                 self.rows(), self.cols(), n_cap, m_cap);
         let mut out = vec![0.0f32; n_cap * m_cap];
-        match self {
-            Block::Dense(m) => {
+        match &self.repr {
+            BlockRepr::Dense(m) => {
                 for i in 0..m.rows {
                     out[i * m_cap..i * m_cap + m.cols].copy_from_slice(m.row(i));
                 }
             }
-            Block::Sparse(m) => {
+            BlockRepr::Sparse(m) => {
                 for i in 0..m.rows {
                     for (j, v) in m.row_iter(i) {
                         out[i * m_cap + j] = v;
@@ -202,9 +241,9 @@ impl Dataset {
             mix(y.to_bits());
         }
         let sample = |i: usize| -> f32 {
-            match &self.x {
-                Block::Dense(d) => d.data[i % d.data.len()],
-                Block::Sparse(s) => {
+            match self.x.repr() {
+                BlockRepr::Dense(d) => d.data[i % d.data.len()],
+                BlockRepr::Sparse(s) => {
                     if s.values.is_empty() {
                         0.0
                     } else {
@@ -234,8 +273,8 @@ mod tests {
     fn dense_and_sparse_blocks_agree() {
         let d = random_dense(13, 9, 1);
         let s = SparseMatrix::from_dense(&d);
-        let bd = Block::Dense(d);
-        let bs = Block::Sparse(s);
+        let bd = Block::dense(d);
+        let bs = Block::sparse(s);
         let mut r = Xoshiro::new(2);
         let w: Vec<f32> = (0..9).map(|_| r.range_f32(-1.0, 1.0)).collect();
         let v: Vec<f32> = (0..13).map(|_| r.range_f32(-1.0, 1.0)).collect();
@@ -256,9 +295,20 @@ mod tests {
     }
 
     #[test]
+    fn nnz_cached_at_construction() {
+        let mut d = DenseMatrix::zeros(3, 3);
+        d.set(0, 0, 1.0);
+        d.set(2, 1, -2.0);
+        let b = Block::dense(d);
+        assert_eq!(b.nnz(), 2);
+        let s = SparseMatrix::from_triplets(2, 2, vec![(0, 1, 1.0), (1, 0, 3.0)]);
+        assert_eq!(Block::sparse(s).nnz(), 2);
+    }
+
+    #[test]
     fn padded_dense_protocol() {
         let d = random_dense(3, 2, 3);
-        let b = Block::Dense(d.clone());
+        let b = Block::dense(d.clone());
         let pad = b.to_padded_dense(4, 5);
         assert_eq!(pad.len(), 20);
         for i in 0..3 {
@@ -273,15 +323,15 @@ mod tests {
     #[test]
     #[should_panic]
     fn padded_dense_rejects_oversize() {
-        let b = Block::Dense(random_dense(5, 5, 4));
+        let b = Block::dense(random_dense(5, 5, 4));
         let _ = b.to_padded_dense(4, 8);
     }
 
     #[test]
     fn window_ops_match_full_on_slice() {
         let d = random_dense(6, 10, 5);
-        let s = Block::Sparse(SparseMatrix::from_dense(&d));
-        let b = Block::Dense(d);
+        let s = Block::sparse(SparseMatrix::from_dense(&d));
+        let b = Block::dense(d);
         let mut r = Xoshiro::new(6);
         let w: Vec<f32> = (0..10).map(|_| r.range_f32(-1.0, 1.0)).collect();
         for i in 0..6 {

@@ -6,7 +6,7 @@
 //! alpha[p, .]; partitions sharing a column range share the primal block
 //! w[., q] — the aggregation structure D3CA/RADiSA coordinate over.
 
-use super::{Block, Dataset};
+use super::{Block, BlockRepr, Dataset};
 
 /// The partition grid dimensions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,9 +75,16 @@ impl Partitioned {
         let mut blocks = Vec::with_capacity(grid.k());
         for &(r0, r1) in &row_ranges {
             for &(c0, c1) in &col_ranges {
-                let b = match &ds.x {
-                    Block::Dense(d) => Block::Dense(d.slice(r0, r1, c0, c1)),
-                    Block::Sparse(s) => Block::Sparse(s.slice(r0, r1, c0, c1)),
+                let b = match ds.x.repr() {
+                    BlockRepr::Dense(d) => Block::dense(d.slice(r0, r1, c0, c1)),
+                    BlockRepr::Sparse(s) => {
+                        let mut sliced = s.slice(r0, r1, c0, c1);
+                        // partition blocks are the compute hot path: give
+                        // them the CSC mirror so transpose products
+                        // stream columns (the parent matrix skips it)
+                        sliced.build_csc();
+                        Block::sparse(sliced)
+                    }
                 };
                 blocks.push(b);
             }

@@ -1,9 +1,25 @@
 //! CSR sparse `f32` matrix — backs the paper's Part-2 experiments
 //! (real-sim at 0.24% and news20 at 0.03% density).
+//!
+//! A matrix can additionally carry a CSC mirror ([`SparseMatrix::build_csc`],
+//! one counting sort): the transpose products (`gemv_t_into`, D3CA's
+//! primal recovery) then stream whole columns into sequential output
+//! slots instead of scatter-writing through the CSR rows — §V's "primal
+//! vector computation bottleneck" engineered down the way CoCoA keeps
+//! resident per-worker state.  The partitioner builds the mirror for
+//! every per-partition block (the compute hot path); whole-dataset
+//! matrices skip it (their transpose product is cold, and mirroring
+//! news20-scale data would double load-time memory) and fall back to the
+//! scatter kernel.  For RADiSA's sub-block windows a
+//! [`SubblockIndex`] caches, per row, the CSR value positions of every
+//! window boundary (via `partition_point` on the sorted column indices),
+//! so windowed dots/axpys touch O(nnz in window) entries instead of
+//! scanning O(nnz in row) — a large win at news20's 0.03% density split
+//! over Q feature blocks.
 
 use super::dense::DenseMatrix;
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct SparseMatrix {
     pub rows: usize,
     pub cols: usize,
@@ -12,6 +28,24 @@ pub struct SparseMatrix {
     /// Column indices per stored value (strictly increasing within a row).
     pub indices: Vec<u32>,
     pub values: Vec<f32>,
+    /// CSC mirror: column start offsets, length cols+1 once built
+    /// ([`SparseMatrix::build_csc`]), empty otherwise.
+    csc_indptr: Vec<usize>,
+    /// Row indices per CSC-stored value (strictly increasing in a column).
+    csc_rows: Vec<u32>,
+    csc_vals: Vec<f32>,
+}
+
+/// Equality is defined on the CSR content only — the CSC mirror is
+/// derived data and whether it has been built is not part of the value.
+impl PartialEq for SparseMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.indptr == other.indptr
+            && self.indices == other.indices
+            && self.values == other.values
+    }
 }
 
 impl SparseMatrix {
@@ -20,28 +54,88 @@ impl SparseMatrix {
         cols: usize,
         mut triplets: Vec<(usize, usize, f32)>,
     ) -> Self {
-        triplets.sort_unstable_by_key(|t| (t.0, t.1));
-        triplets.dedup_by(|a, b| {
-            if a.0 == b.0 && a.1 == b.1 {
-                b.2 += a.2; // accumulate duplicates into the kept entry
-                true
-            } else {
-                false
-            }
-        });
+        // `slice()` / `from_dense()` / the generators all emit triplets
+        // already in (row, col) order — detect that and skip the
+        // O(nnz log nnz) sort entirely (partition time is dominated by
+        // this path).  Non-decreasing is enough: duplicates still
+        // accumulate below, in the same first-to-last order as the sorted
+        // path's dedup.
+        let sorted = triplets
+            .windows(2)
+            .all(|w| (w[0].0, w[0].1) <= (w[1].0, w[1].1));
+        if !sorted {
+            triplets.sort_unstable_by_key(|t| (t.0, t.1));
+        }
         let mut indptr = vec![0usize; rows + 1];
-        let mut indices = Vec::with_capacity(triplets.len());
-        let mut values = Vec::with_capacity(triplets.len());
+        let mut indices: Vec<u32> = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f32> = Vec::with_capacity(triplets.len());
+        let mut last: Option<(usize, usize)> = None;
         for (i, j, v) in triplets {
             assert!(i < rows && j < cols, "triplet ({i},{j}) out of bounds");
-            indptr[i + 1] += 1;
-            indices.push(j as u32);
-            values.push(v);
+            if last == Some((i, j)) {
+                // accumulate duplicates into the kept entry
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[i + 1] += 1;
+                indices.push(j as u32);
+                values.push(v);
+                last = Some((i, j));
+            }
         }
         for i in 0..rows {
             indptr[i + 1] += indptr[i];
         }
-        SparseMatrix { rows, cols, indptr, indices, values }
+        SparseMatrix {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+            csc_indptr: Vec::new(),
+            csc_rows: Vec::new(),
+            csc_vals: Vec::new(),
+        }
+    }
+
+    /// Whether the CSC mirror has been built.
+    pub fn has_csc(&self) -> bool {
+        self.csc_indptr.len() == self.cols + 1
+    }
+
+    /// Counting-sort the CSR entries into the CSC mirror (idempotent).
+    /// Walking the rows in order means each column's entries land in
+    /// ascending row order, so a column stream visits exactly the terms
+    /// the row-major scatter would, in the same order (bit-identical
+    /// accumulation).  Costs one O(nnz) pass plus ~8 bytes/nnz of
+    /// resident memory — the partitioner pays it for every per-partition
+    /// block; whole-dataset matrices skip it.
+    pub fn build_csc(&mut self) {
+        if self.has_csc() {
+            return;
+        }
+        let nnz = self.values.len();
+        let mut colptr = vec![0usize; self.cols + 1];
+        for &j in &self.indices {
+            colptr[j as usize + 1] += 1;
+        }
+        for j in 0..self.cols {
+            colptr[j + 1] += colptr[j];
+        }
+        let mut csc_rows = vec![0u32; nnz];
+        let mut csc_vals = vec![0.0f32; nnz];
+        let mut cursor = colptr.clone();
+        for i in 0..self.rows {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                let j = self.indices[k] as usize;
+                let dst = cursor[j];
+                csc_rows[dst] = i as u32;
+                csc_vals[dst] = self.values[k];
+                cursor[j] += 1;
+            }
+        }
+        self.csc_indptr = colptr;
+        self.csc_rows = csc_rows;
+        self.csc_vals = csc_vals;
     }
 
     pub fn from_dense(d: &DenseMatrix) -> Self {
@@ -78,7 +172,34 @@ impl SparseMatrix {
         }
     }
 
+    /// out = Xᵀ x.  With the CSC mirror built, each output slot is
+    /// written once, sequentially, instead of being scattered into from
+    /// every row; terms per slot match [`gemv_t_scatter_into`] in value
+    /// and order (ascending row, zero inputs skipped), so the two are
+    /// bit-identical.  Without the mirror this falls back to the scatter
+    /// kernel.
     pub fn gemv_t_into(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(out.len(), self.cols);
+        if !self.has_csc() {
+            return self.gemv_t_scatter_into(x, out);
+        }
+        for j in 0..self.cols {
+            let (s, e) = (self.csc_indptr[j], self.csc_indptr[j + 1]);
+            let mut acc = 0.0f32;
+            for k in s..e {
+                let xi = x[self.csc_rows[k] as usize];
+                if xi != 0.0 {
+                    acc += xi * self.csc_vals[k];
+                }
+            }
+            out[j] = acc;
+        }
+    }
+
+    /// out = Xᵀ x via CSR row scatter — the pre-CSC implementation, kept
+    /// as the parity/throughput baseline for the §Perf harness.
+    pub fn gemv_t_scatter_into(&self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.rows);
         debug_assert_eq!(out.len(), self.cols);
         out.fill(0.0);
@@ -138,6 +259,29 @@ impl SparseMatrix {
         }
     }
 
+    /// x_i[lo..·] · d over the CSR value range `[s, e)`, with `d` re-based
+    /// to the window (`d[c - lo]` pairs with column `c`).  `[s, e)` comes
+    /// from a [`SubblockIndex`], so only the in-window entries are
+    /// touched — no per-entry column filtering.
+    #[inline]
+    pub fn range_dot_rebased(&self, s: usize, e: usize, d: &[f32], lo: usize) -> f32 {
+        let mut acc = 0.0f32;
+        for k in s..e {
+            acc += self.values[k] * d[self.indices[k] as usize - lo];
+        }
+        acc
+    }
+
+    /// out[c - lo] += a * x_i[c] over the CSR value range `[s, e)` — the
+    /// windowed axpy with a re-based output, positions from a
+    /// [`SubblockIndex`].
+    #[inline]
+    pub fn range_axpy_rebased(&self, s: usize, e: usize, a: f32, out: &mut [f32], lo: usize) {
+        for k in s..e {
+            out[self.indices[k] as usize - lo] += a * self.values[k];
+        }
+    }
+
     /// Copy of the sub-matrix `[r0, r1) x [c0, c1)` with re-based columns.
     pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> SparseMatrix {
         assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
@@ -150,6 +294,65 @@ impl SparseMatrix {
             }
         }
         SparseMatrix::from_triplets(r1 - r0, c1 - c0, triplets)
+    }
+}
+
+/// Cached per-row CSR positions of a fixed set of column-window
+/// boundaries — RADiSA's sub-block grid over one `[p,q]` block.
+///
+/// `bounds` is a non-decreasing boundary list starting at 0 and ending at
+/// `cols` (the sub-block tiling of the local feature slice, plus the full
+/// window as the span `[0, nb]`).  For row `i` and boundary `b`,
+/// `pos[i * (nb+1) + b]` is the index of the first stored entry of row
+/// `i` whose column is ≥ `bounds[b]` — found once with `partition_point`
+/// on the sorted column indices, then reused by every SVRG step of every
+/// iteration.
+#[derive(Clone, Debug)]
+pub struct SubblockIndex {
+    bounds: Vec<usize>,
+    /// Row stride = bounds.len().
+    pos: Vec<u32>,
+}
+
+impl SubblockIndex {
+    pub fn new(m: &SparseMatrix, bounds: &[usize]) -> SubblockIndex {
+        debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+        debug_assert_eq!(bounds.first().copied(), Some(0));
+        debug_assert_eq!(bounds.last().copied(), Some(m.cols));
+        let nb1 = bounds.len();
+        let mut pos = vec![0u32; m.rows * nb1];
+        for i in 0..m.rows {
+            let (s, e) = (m.indptr[i], m.indptr[i + 1]);
+            let row = &m.indices[s..e];
+            for (b, &bound) in bounds.iter().enumerate() {
+                let off = row.partition_point(|&j| (j as usize) < bound);
+                pos[i * nb1 + b] = (s + off) as u32;
+            }
+        }
+        SubblockIndex { bounds: bounds.to_vec(), pos }
+    }
+
+    /// Boundary-slot span matching the column window `[lo, hi)`, if both
+    /// edges are cached boundaries (the full window `[0, cols)` always
+    /// matches as `(0, nb)`).
+    pub fn span(&self, lo: usize, hi: usize) -> Option<(usize, usize)> {
+        let s0 = self.bounds.partition_point(|&b| b < lo);
+        let s1 = self.bounds.partition_point(|&b| b < hi);
+        if self.bounds.get(s0) == Some(&lo) && self.bounds.get(s1) == Some(&hi) {
+            Some((s0, s1))
+        } else {
+            None
+        }
+    }
+
+    /// CSR value range of row `i` within the boundary span `(s0, s1)`.
+    #[inline]
+    pub fn row_range(&self, i: usize, span: (usize, usize)) -> (usize, usize) {
+        let nb1 = self.bounds.len();
+        (
+            self.pos[i * nb1 + span.0] as usize,
+            self.pos[i * nb1 + span.1] as usize,
+        )
     }
 }
 
@@ -180,6 +383,28 @@ mod tests {
     }
 
     #[test]
+    fn unsorted_triplets_match_sorted() {
+        let sorted = vec![(0, 0, 1.0), (0, 2, 2.0), (1, 1, 5.0), (2, 1, 3.0)];
+        let mut shuffled = sorted.clone();
+        shuffled.reverse();
+        let a = SparseMatrix::from_triplets(3, 3, sorted);
+        let b = SparseMatrix::from_triplets(3, 3, shuffled);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn unsorted_duplicates_still_accumulate() {
+        let m = SparseMatrix::from_triplets(
+            2,
+            2,
+            vec![(1, 0, 4.0), (0, 1, 1.0), (1, 0, 0.5), (0, 1, 2.5)],
+        );
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row_iter(0).collect::<Vec<_>>(), vec![(1, 3.5)]);
+        assert_eq!(m.row_iter(1).collect::<Vec<_>>(), vec![(0, 4.5)]);
+    }
+
+    #[test]
     fn gemv_matches_dense() {
         let m = example();
         let w = vec![1.0, 10.0, 100.0];
@@ -190,6 +415,34 @@ mod tests {
         let mut out_t = vec![0.0; 3];
         m.gemv_t_into(&v, &mut out_t);
         assert_eq!(out_t, vec![1.0, 9.0, 14.0]);
+    }
+
+    #[test]
+    fn csc_mirror_matches_scatter_bitwise() {
+        let mut r = crate::util::rng::Xoshiro::new(11);
+        for (n, m, density) in [(13, 9, 0.4), (40, 25, 0.08), (7, 30, 1.0)] {
+            let mut triplets = Vec::new();
+            for i in 0..n {
+                for j in 0..m {
+                    if r.coin(density) {
+                        triplets.push((i, j, r.range_f32(-2.0, 2.0)));
+                    }
+                }
+            }
+            let mut sm = SparseMatrix::from_triplets(n, m, triplets);
+            assert!(!sm.has_csc(), "mirror is opt-in");
+            sm.build_csc();
+            assert!(sm.has_csc());
+            let mut v: Vec<f32> = (0..n).map(|_| r.range_f32(-1.0, 1.0)).collect();
+            v[0] = 0.0; // exercise the zero-input skip on both paths
+            let mut a = vec![0.0f32; m];
+            let mut b = vec![0.0f32; m];
+            sm.gemv_t_into(&v, &mut a);
+            sm.gemv_t_scatter_into(&v, &mut b);
+            for j in 0..m {
+                assert_eq!(a[j].to_bits(), b[j].to_bits(), "col {j}");
+            }
+        }
     }
 
     #[test]
@@ -209,5 +462,51 @@ mod tests {
         let mut out = vec![9.0; 4];
         m.gemv_into(&[1.0, 1.0], &mut out);
         assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn subblock_index_matches_scan_ops() {
+        let mut r = crate::util::rng::Xoshiro::new(5);
+        let (n, cols) = (20, 17);
+        let mut triplets = Vec::new();
+        for i in 0..n {
+            for j in 0..cols {
+                if r.coin(0.3) {
+                    triplets.push((i, j, r.range_f32(-1.0, 1.0)));
+                }
+            }
+        }
+        let m = SparseMatrix::from_triplets(n, cols, triplets);
+        let bounds = vec![0, 5, 11, 17];
+        let ix = SubblockIndex::new(&m, &bounds);
+        for (lo, hi) in [(0, 5), (5, 11), (11, 17), (0, 17), (5, 17)] {
+            let span = ix.span(lo, hi).unwrap();
+            let w: Vec<f32> = (0..cols).map(|_| r.range_f32(-1.0, 1.0)).collect();
+            let d: Vec<f32> = w[lo..hi].to_vec();
+            for i in 0..n {
+                let (s, e) = ix.row_range(i, span);
+                // dot
+                let fast = m.range_dot_rebased(s, e, &d, lo);
+                let mut slow = 0.0f32;
+                for (j, v) in m.row_iter(i) {
+                    if j >= lo && j < hi {
+                        slow += v * d[j - lo];
+                    }
+                }
+                assert_eq!(fast.to_bits(), slow.to_bits(), "row {i} [{lo},{hi})");
+                // axpy
+                let mut fa = vec![0.25f32; hi - lo];
+                let mut sa = fa.clone();
+                m.range_axpy_rebased(s, e, 0.5, &mut fa, lo);
+                for (j, v) in m.row_iter(i) {
+                    if j >= lo && j < hi {
+                        sa[j - lo] += 0.5 * v;
+                    }
+                }
+                assert_eq!(fa, sa, "row {i} [{lo},{hi})");
+            }
+        }
+        assert_eq!(ix.span(1, 5), None, "unaligned lo is not cached");
+        assert_eq!(ix.span(0, 6), None, "unaligned hi is not cached");
     }
 }

@@ -72,7 +72,7 @@ impl SyntheticDense {
         }
         Dataset {
             name: format!("synth-dense-{}x{}", n, m),
-            x: Block::Dense(x),
+            x: Block::dense(x),
             y,
         }
     }
@@ -164,7 +164,7 @@ impl SyntheticSparse {
         }
         Dataset {
             name: self.name.clone(),
-            x: Block::Sparse(SparseMatrix::from_triplets(self.n, self.m, triplets)),
+            x: Block::sparse(SparseMatrix::from_triplets(self.n, self.m, triplets)),
             y,
         }
     }
@@ -189,8 +189,8 @@ mod tests {
     fn dense_builder_is_deterministic() {
         let a = SyntheticDense::paper_part1(2, 2, 20, 20, 0.1, 3).build();
         let b = SyntheticDense::paper_part1(2, 2, 20, 20, 0.1, 3).build();
-        match (&a.x, &b.x) {
-            (Block::Dense(ma), Block::Dense(mb)) => assert_eq!(ma, mb),
+        match (a.x.as_dense(), b.x.as_dense()) {
+            (Some(ma), Some(mb)) => assert_eq!(ma, mb),
             _ => panic!(),
         }
         assert_eq!(a.y, b.y);
@@ -199,7 +199,7 @@ mod tests {
     #[test]
     fn dense_standardized_unit_variance() {
         let ds = SyntheticDense::paper_part1(4, 1, 100, 10, 0.1, 5).build();
-        if let Block::Dense(x) = &ds.x {
+        if let Some(x) = ds.x.as_dense() {
             for j in 0..x.cols {
                 let mean: f64 =
                     (0..x.rows).map(|i| x.get(i, j) as f64).sum::<f64>() / x.rows as f64;
@@ -231,8 +231,8 @@ mod tests {
     fn sparse_builder_deterministic() {
         let a = SyntheticSparse::new("t", 100, 200, 0.02, 13).build();
         let b = SyntheticSparse::new("t", 100, 200, 0.02, 13).build();
-        match (&a.x, &b.x) {
-            (Block::Sparse(ma), Block::Sparse(mb)) => assert_eq!(ma, mb),
+        match (a.x.as_sparse(), b.x.as_sparse()) {
+            (Some(ma), Some(mb)) => assert_eq!(ma, mb),
             _ => panic!(),
         }
     }

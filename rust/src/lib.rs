@@ -42,6 +42,13 @@
 //! println!("final gap: {:?}", run.history.last());
 //! ```
 
+/// With `--features bench-alloc` the whole crate (binary, tests, benches)
+/// runs on a counting allocator so the perf harness can report steady-state
+/// allocations/iteration — see [`util::alloc`].
+#[cfg(feature = "bench-alloc")]
+#[global_allocator]
+static GLOBAL_COUNTING_ALLOC: util::alloc::CountingAlloc = util::alloc::CountingAlloc;
+
 pub mod bench_harness;
 pub mod cluster;
 pub mod config;

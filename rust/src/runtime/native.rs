@@ -2,7 +2,7 @@
 //! ADMM linear algebra (gram build, Cholesky, graph projection) used when
 //! no PJRT engine is attached.
 
-use crate::data::Block;
+use crate::data::{Block, BlockRepr};
 use crate::linalg;
 use crate::loss::Loss;
 use anyhow::Result;
@@ -10,9 +10,9 @@ use anyhow::Result;
 /// Dense row materialization (scatter for CSR) — used by the gram build.
 pub fn row_dense_into(x: &Block, i: usize, buf: &mut [f32]) {
     buf.fill(0.0);
-    match x {
-        Block::Dense(d) => buf.copy_from_slice(d.row(i)),
-        Block::Sparse(s) => {
+    match x.repr() {
+        BlockRepr::Dense(d) => buf.copy_from_slice(d.row(i)),
+        BlockRepr::Sparse(s) => {
             for (j, v) in s.row_iter(i) {
                 buf[j] = v;
             }
@@ -50,34 +50,60 @@ pub fn admm_project(
     w_hat: &[f32],
     z_hat: &[f32],
 ) -> (Vec<f32>, Vec<f32>) {
+    let mut w = vec![0.0f32; x.cols()];
+    let mut z = vec![0.0f32; x.rows()];
+    let mut t = vec![0.0f32; x.rows()];
+    admm_project_into(x, lchol, w_hat, z_hat, &mut w, &mut z, &mut t);
+    (w, z)
+}
+
+/// [`admm_project`] into caller-owned outputs (`w_out` length m_q, `z_out`
+/// length n_p) with per-worker scratch `t_buf` of at least n_p elements —
+/// the zero-allocation variant of the workspace hot path.
+pub fn admm_project_into(
+    x: &Block,
+    lchol: &[f32],
+    w_hat: &[f32],
+    z_hat: &[f32],
+    w_out: &mut [f32],
+    z_out: &mut [f32],
+    t_buf: &mut [f32],
+) {
     let n = x.rows();
     let m = x.cols();
     debug_assert_eq!(lchol.len(), n * n);
     debug_assert_eq!(w_hat.len(), m);
     debug_assert_eq!(z_hat.len(), n);
-    let mut t = vec![0.0f32; n];
-    x.margins_into(w_hat, &mut t);
+    debug_assert_eq!(w_out.len(), m);
+    debug_assert_eq!(z_out.len(), n);
+    let t = &mut t_buf[..n];
+    x.margins_into(w_hat, t);
     for (tv, &zv) in t.iter_mut().zip(z_hat) {
         *tv = zv - *tv;
     }
-    linalg::cho_solve(lchol, n, &mut t);
-    let mut w = vec![0.0f32; m];
-    x.atx_into(&t, &mut w);
-    for (wv, &hv) in w.iter_mut().zip(w_hat) {
+    linalg::cho_solve(lchol, n, t);
+    x.atx_into(t, w_out);
+    for (wv, &hv) in w_out.iter_mut().zip(w_hat) {
         *wv += hv;
     }
-    let mut z = vec![0.0f32; n];
-    x.margins_into(&w, &mut z);
-    (w, z)
+    x.margins_into(w_out, z_out);
 }
 
 /// prox of (inv_n)·hinge under ρ: argmin inv_n·max(0,1−yz) + ρ/2 (z−v)².
 pub fn prox_hinge(v: &[f32], y: &[f32], rho: f32, inv_n: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; v.len()];
+    prox_hinge_into(v, y, rho, inv_n, &mut out);
+    out
+}
+
+/// [`prox_hinge`] into a caller-owned output buffer.
+pub fn prox_hinge_into(v: &[f32], y: &[f32], rho: f32, inv_n: f32, out: &mut [f32]) {
+    debug_assert_eq!(v.len(), y.len());
+    debug_assert_eq!(v.len(), out.len());
     let c = inv_n / rho;
-    v.iter()
-        .zip(y)
-        .map(|(&vi, &yi)| vi + yi * (1.0 - yi * vi).max(0.0).min(c))
-        .collect()
+    for ((o, &vi), &yi) in out.iter_mut().zip(v).zip(y) {
+        *o = vi + yi * (1.0 - yi * vi).max(0.0).min(c);
+    }
 }
 
 /// Unnormalized loss sum Σ f(margin_i, y_i).
@@ -96,7 +122,7 @@ mod tests {
 
     fn block(n: usize, m: usize, seed: u64) -> Block {
         let mut r = Xoshiro::new(seed);
-        Block::Dense(DenseMatrix::from_fn(n, m, |_, _| r.range_f32(-0.5, 0.5)))
+        Block::dense(DenseMatrix::from_fn(n, m, |_, _| r.range_f32(-0.5, 0.5)))
     }
 
     #[test]
@@ -141,10 +167,7 @@ mod tests {
     #[test]
     fn sparse_factor_matches_dense() {
         let xd = block(9, 5, 5);
-        let xs = match &xd {
-            Block::Dense(d) => Block::Sparse(SparseMatrix::from_dense(d)),
-            _ => unreachable!(),
-        };
+        let xs = Block::sparse(SparseMatrix::from_dense(xd.as_dense().unwrap()));
         let ld = admm_factor(&xd).unwrap();
         let ls = admm_factor(&xs).unwrap();
         for (a, b) in ld.iter().zip(&ls) {

@@ -47,14 +47,22 @@ pub struct StagedGrid<'a> {
     xla_parts: Vec<XlaPart>, // empty for the native backend
     /// Precomputed ‖x_i‖² per partition (both backends; §Perf).
     row_norms: Vec<Vec<f32>>,
+    /// Per-partition cached CSR positions of the RADiSA sub-block
+    /// boundaries (sparse blocks only): windowed SVRG ops pay O(nnz in
+    /// window) instead of O(nnz in row).  Built lazily on first windowed
+    /// use (thread-safe; only RADiSA's SVRG path consumes it, so D3CA and
+    /// ADMM stagings never pay the build), then reused for the whole run.
+    win_index: Vec<std::sync::OnceLock<Option<crate::data::SubblockIndex>>>,
 }
 
 impl<'a> StagedGrid<'a> {
     pub fn new(backend: &'a Backend, part: &'a Partitioned) -> Result<StagedGrid<'a>> {
         let mut row_norms = Vec::with_capacity(part.grid.k());
+        let mut win_index = Vec::with_capacity(part.grid.k());
         for p in 0..part.grid.p {
             for q in 0..part.grid.q {
                 row_norms.push(crate::solvers::row_norms(part.block(p, q)));
+                win_index.push(std::sync::OnceLock::new());
             }
         }
         #[cfg(feature = "xla")]
@@ -86,6 +94,7 @@ impl<'a> StagedGrid<'a> {
             #[cfg(feature = "xla")]
             xla_parts,
             row_norms,
+            win_index,
         })
     }
 
@@ -143,6 +152,84 @@ impl<'a> StagedGrid<'a> {
                 let outs = engine.run("atx", xp.bucket, &[&xp.x, &v_lit])?;
                 let full = lit::to_vec_f32(&outs[0], xp.bucket.1)?;
                 Ok(full[..block.cols()].to_vec())
+            }
+        }
+    }
+
+    /// [`StagedGrid::margins`] into a caller-owned buffer (length n_p) —
+    /// allocation-free on the native backend.
+    pub fn margins_into(&self, p: usize, q: usize, w_q: &[f32], out: &mut [f32]) -> Result<()> {
+        let block = self.part.block(p, q);
+        debug_assert_eq!(w_q.len(), block.cols());
+        debug_assert_eq!(out.len(), block.rows());
+        match self.backend {
+            Backend::Native => {
+                block.margins_into(w_q, out);
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            Backend::Xla(_) => {
+                let v = self.margins(p, q, w_q)?;
+                out.copy_from_slice(&v);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`StagedGrid::atx`] into a caller-owned buffer (length m_q) —
+    /// allocation-free on the native backend, where sparse blocks stream
+    /// the CSC mirror.
+    pub fn atx_into(&self, p: usize, q: usize, v_p: &[f32], out: &mut [f32]) -> Result<()> {
+        let block = self.part.block(p, q);
+        debug_assert_eq!(v_p.len(), block.rows());
+        debug_assert_eq!(out.len(), block.cols());
+        match self.backend {
+            Backend::Native => {
+                block.atx_into(v_p, out);
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            Backend::Xla(_) => {
+                let v = self.atx(p, q, v_p)?;
+                out.copy_from_slice(&v);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`StagedGrid::grad`] into a caller-owned buffer (length m_q) with
+    /// per-worker ψ scratch — allocation-free on the native backend.
+    #[allow(clippy::too_many_arguments)]
+    pub fn grad_into(
+        &self,
+        loss: Loss,
+        p: usize,
+        q: usize,
+        mg_p: &[f32],
+        n_global: usize,
+        out: &mut [f32],
+        psi: &mut Vec<f32>,
+    ) -> Result<()> {
+        let block = self.part.block(p, q);
+        debug_assert_eq!(out.len(), block.cols());
+        match self.backend {
+            Backend::Native => {
+                crate::solvers::grad_from_margins_into(
+                    block,
+                    self.part.labels(p),
+                    mg_p,
+                    n_global,
+                    loss,
+                    out,
+                    psi,
+                );
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            Backend::Xla(_) => {
+                let v = self.grad(loss, p, q, mg_p, n_global)?;
+                out.copy_from_slice(&v);
+                Ok(())
             }
         }
     }
@@ -294,6 +381,53 @@ impl<'a> StagedGrid<'a> {
         }
     }
 
+    /// [`StagedGrid::sdca_epoch`] into a caller-owned Δα buffer (length
+    /// n_p) with per-worker α/w scratch — allocation-free on the native
+    /// backend, bit-identical results.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sdca_epoch_into(
+        &self,
+        p: usize,
+        q: usize,
+        alpha_p: &[f32],
+        w_q: &[f32],
+        idx: &[i32],
+        h: usize,
+        lamn: f32,
+        invq: f32,
+        beta: f32,
+        da: &mut [f32],
+        a_buf: &mut [f32],
+        w_buf: &mut [f32],
+    ) -> Result<()> {
+        match self.backend {
+            Backend::Native => {
+                crate::solvers::sdca_epoch_into(
+                    self.part.block(p, q),
+                    self.part.labels(p),
+                    &self.row_norms[self.part.grid.idx(p, q)],
+                    alpha_p,
+                    w_q,
+                    idx,
+                    h,
+                    lamn,
+                    invq,
+                    beta,
+                    da,
+                    a_buf,
+                    w_buf,
+                );
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            Backend::Xla(_) => {
+                let v = self.sdca_epoch(p, q, alpha_p, w_q, idx, h, lamn, invq, beta)?;
+                da.copy_from_slice(&v);
+                Ok(())
+            }
+        }
+    }
+
     // -------------------------------------------------------------- SVRG
 
     /// One local SVRG run of `l` steps on sub-block window `[lo, hi)`
@@ -376,6 +510,123 @@ impl<'a> StagedGrid<'a> {
                     }
                 }
                 Ok(w)
+            }
+        }
+    }
+
+    /// [`StagedGrid::svrg_block`] into a caller-owned output (length m_q,
+    /// receives the updated w) with per-worker delta scratch —
+    /// allocation-free on the native backend.  When the window matches a
+    /// cached sub-block boundary pair of a sparse block, the inner loop
+    /// uses the precomputed CSR positions (O(nnz in window) per step).
+    #[allow(clippy::too_many_arguments)]
+    pub fn svrg_block_into(
+        &self,
+        loss: Loss,
+        p: usize,
+        q: usize,
+        w_q: &[f32],
+        wt_q: &[f32],
+        mu_win: &[f32],
+        window: (usize, usize),
+        mt_p: &[f32],
+        idx: &[i32],
+        l: usize,
+        eta: f32,
+        lam: f32,
+        out: &mut [f32],
+        delta_buf: &mut Vec<f32>,
+    ) -> Result<()> {
+        let block = self.part.block(p, q);
+        let (lo, hi) = window;
+        debug_assert_eq!(mu_win.len(), hi - lo);
+        debug_assert_eq!(out.len(), block.cols());
+        match self.backend {
+            Backend::Native => {
+                out.copy_from_slice(w_q);
+                // built once on first windowed use of this block (the
+                // same sub-block tiling SubBlocks::split gives RADiSA:
+                // P contiguous windows over the local m_q columns)
+                let win = self.win_index[self.part.grid.idx(p, q)]
+                    .get_or_init(|| {
+                        block.as_sparse().map(|s| {
+                            let ranges =
+                                crate::data::balanced_ranges(s.cols, self.part.grid.p);
+                            let mut bounds = Vec::with_capacity(ranges.len() + 1);
+                            bounds.push(0);
+                            bounds.extend(ranges.iter().map(|&(_, e)| e));
+                            crate::data::SubblockIndex::new(s, &bounds)
+                        })
+                    })
+                    .as_ref()
+                    .and_then(|ix| ix.span(lo, hi).map(|span| (ix, span)));
+                crate::solvers::svrg_block_win(
+                    loss, block, self.part.labels(p), out, wt_q, mu_win, lo, hi, mt_p,
+                    idx, l, eta, lam, win, delta_buf,
+                );
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            Backend::Xla(_) => {
+                let v = self.svrg_block(
+                    loss, p, q, w_q, wt_q, mu_win, window, mt_p, idx, l, eta, lam,
+                )?;
+                out.copy_from_slice(&v);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`StagedGrid::admm_project`] into caller-owned outputs with
+    /// per-worker scratch — allocation-free on the native backend.
+    #[allow(clippy::too_many_arguments)]
+    pub fn admm_project_into(
+        &self,
+        p: usize,
+        q: usize,
+        factor: &FactorHandle,
+        w_hat: &[f32],
+        z_hat: &[f32],
+        w_out: &mut [f32],
+        z_out: &mut [f32],
+        t_buf: &mut [f32],
+    ) -> Result<()> {
+        let block = self.part.block(p, q);
+        match (self.backend, factor) {
+            (Backend::Native, FactorHandle::Native(l)) => {
+                native::admm_project_into(block, l, w_hat, z_hat, w_out, z_out, t_buf);
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            _ => {
+                let (w, z) = self.admm_project(p, q, factor, w_hat, z_hat)?;
+                w_out.copy_from_slice(&w);
+                z_out.copy_from_slice(&z);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`StagedGrid::prox_hinge`] into a caller-owned output —
+    /// allocation-free on the native backend.
+    pub fn prox_hinge_into(
+        &self,
+        p: usize,
+        v_p: &[f32],
+        rho: f32,
+        inv_n: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        match self.backend {
+            Backend::Native => {
+                native::prox_hinge_into(v_p, self.part.labels(p), rho, inv_n, out);
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            Backend::Xla(_) => {
+                let v = self.prox_hinge(p, v_p, rho, inv_n)?;
+                out.copy_from_slice(&v);
+                Ok(())
             }
         }
     }

@@ -13,7 +13,7 @@ pub mod svrg;
 
 pub use objective::{
     dual_objective, full_gradient, full_margins, grad_from_margins,
-    primal_from_dual, primal_objective,
+    grad_from_margins_into, primal_from_dual, primal_objective,
 };
-pub use sdca::{row_norms, sdca_epoch};
-pub use svrg::svrg_block;
+pub use sdca::{row_norms, sdca_epoch, sdca_epoch_into};
+pub use svrg::{svrg_block, svrg_block_win};

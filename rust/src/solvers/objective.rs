@@ -89,15 +89,31 @@ pub fn grad_from_margins(
     n_global: usize,
     loss: Loss,
 ) -> Vec<f32> {
+    let mut g = vec![0.0f32; x.cols()];
+    let mut psi = Vec::new();
+    grad_from_margins_into(x, y, mg, n_global, loss, &mut g, &mut psi);
+    g
+}
+
+/// [`grad_from_margins`] into a caller-owned output (length m_q) with
+/// caller-owned ψ scratch — the zero-allocation variant of the workspace
+/// hot path (the scratch reaches its high-water capacity after warmup).
+pub fn grad_from_margins_into(
+    x: &crate::data::Block,
+    y: &[f32],
+    mg: &[f32],
+    n_global: usize,
+    loss: Loss,
+    out: &mut [f32],
+    psi: &mut Vec<f32>,
+) {
     let n_p = x.rows();
     debug_assert_eq!(y.len(), n_p);
     debug_assert_eq!(mg.len(), n_p);
-    let psi: Vec<f32> = (0..n_p)
-        .map(|i| loss.slope(mg[i], y[i]) / n_global as f32)
-        .collect();
-    let mut g = vec![0.0f32; x.cols()];
-    x.atx_into(&psi, &mut g);
-    g
+    debug_assert_eq!(out.len(), x.cols());
+    psi.clear();
+    psi.extend((0..n_p).map(|i| loss.slope(mg[i], y[i]) / n_global as f32));
+    x.atx_into(psi, out);
 }
 
 /// ∇F(w) = (1/n) Σ f'_i(x_i·w) x_i + λ w, full vector.

@@ -37,29 +37,61 @@ pub fn sdca_epoch(
     invq: f32,
     beta: f32,
 ) -> Vec<f32> {
+    let mut da = vec![0.0f32; x.rows()];
+    let mut a_buf = vec![0.0f32; x.rows()];
+    let mut w_buf = vec![0.0f32; x.cols()];
+    sdca_epoch_into(
+        x, y, norms, a0, w0, idx, h, lamn, invq, beta, &mut da, &mut a_buf, &mut w_buf,
+    );
+    da
+}
+
+/// [`sdca_epoch`] into caller-owned buffers — the zero-allocation variant
+/// the workspace hot path uses.  `da` (length n_p) receives the dual
+/// delta; `a_buf`/`w_buf` are per-worker scratch of at least n_p / m_q
+/// elements (their prior contents are overwritten).  Bit-identical to
+/// [`sdca_epoch`].
+#[allow(clippy::too_many_arguments)]
+pub fn sdca_epoch_into(
+    x: &Block,
+    y: &[f32],
+    norms: &[f32],
+    a0: &[f32],
+    w0: &[f32],
+    idx: &[i32],
+    h: usize,
+    lamn: f32,
+    invq: f32,
+    beta: f32,
+    da: &mut [f32],
+    a_buf: &mut [f32],
+    w_buf: &mut [f32],
+) {
     let n = x.rows();
     debug_assert_eq!(y.len(), n);
     debug_assert_eq!(norms.len(), n);
     debug_assert_eq!(a0.len(), n);
     debug_assert_eq!(w0.len(), x.cols());
-    let mut a = a0.to_vec();
-    let mut w = w0.to_vec();
-    let mut da = vec![0.0f32; n];
+    debug_assert_eq!(da.len(), n);
+    let a = &mut a_buf[..n];
+    a.copy_from_slice(a0);
+    let w = &mut w_buf[..x.cols()];
+    w.copy_from_slice(w0);
+    da.fill(0.0);
     for t in 0..h {
         let i = idx[t % idx.len()] as usize;
         debug_assert!(i < n);
         let yi = y[i];
-        let marg = x.row_dot(i, &w);
+        let marg = x.row_dot(i, w);
         let denom = if beta > 0.0 { beta } else { norms[i] } + 1e-12;
         let raw = a[i] * yi + lamn * (invq - yi * marg) / denom;
         let d = yi * raw.clamp(0.0, 1.0) - a[i];
         if d != 0.0 {
             a[i] += d;
             da[i] += d;
-            x.row_axpy(i, d / lamn, &mut w);
+            x.row_axpy(i, d / lamn, w);
         }
     }
-    da
 }
 
 #[cfg(test)]
@@ -75,7 +107,7 @@ mod tests {
         let y: Vec<f32> = (0..n)
             .map(|_| if r.coin(0.5) { 1.0 } else { -1.0 })
             .collect();
-        (Block::Dense(x), y)
+        (Block::dense(x), y)
     }
 
     #[test]

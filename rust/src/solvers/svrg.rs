@@ -6,7 +6,7 @@
 //! sub-block as a `[lo, hi)` window for speed.  Integration tests verify
 //! the two agree.
 
-use crate::data::Block;
+use crate::data::{Block, SubblockIndex};
 use crate::loss::Loss;
 
 /// Run `l` SVRG steps on the sub-block window `[lo, hi)` of the local
@@ -34,17 +34,49 @@ pub fn svrg_block(
     eta: f32,
     lam: f32,
 ) {
+    let mut delta_buf = Vec::new();
+    svrg_block_win(
+        loss, x, y, w, wt, mu, lo, hi, mt, idx, l, eta, lam, None, &mut delta_buf,
+    );
+}
+
+/// [`svrg_block`] with caller-owned delta scratch and an optional cached
+/// window index: when `x` is sparse and `win = Some((index, span))` the
+/// per-step window dot/axpy walk exactly the CSR value range of the
+/// window (positions precomputed by [`SubblockIndex`], O(nnz in window))
+/// instead of scanning every stored entry of the row for an in-window
+/// column (O(nnz in row)).  Identical terms in identical order, so the
+/// iterates are bit-identical; dense blocks ignore `win`.
+#[allow(clippy::too_many_arguments)]
+pub fn svrg_block_win(
+    loss: Loss,
+    x: &Block,
+    y: &[f32],
+    w: &mut [f32],
+    wt: &[f32],
+    mu: &[f32],
+    lo: usize,
+    hi: usize,
+    mt: &[f32],
+    idx: &[i32],
+    l: usize,
+    eta: f32,
+    lam: f32,
+    win: Option<(&SubblockIndex, (usize, usize))>,
+    delta_buf: &mut Vec<f32>,
+) {
     let n = x.rows();
     debug_assert_eq!(y.len(), n);
     debug_assert_eq!(mt.len(), n);
     debug_assert_eq!(w.len(), wt.len());
     debug_assert_eq!(mu.len(), hi - lo);
-    // delta = w - wt on the window (zero elsewhere by contract)
-    let mut delta: Vec<f32> = w[lo..hi]
-        .iter()
-        .zip(&wt[lo..hi])
-        .map(|(a, b)| a - b)
-        .collect();
+    // delta = w - wt on the window (zero elsewhere by contract); the
+    // caller-owned buffer reaches its high-water capacity after warmup, so
+    // steady-state refills are allocation-free
+    delta_buf.clear();
+    delta_buf.extend(w[lo..hi].iter().zip(&wt[lo..hi]).map(|(a, b)| a - b));
+    let delta = &mut delta_buf[..];
+    let sparse_win = x.as_sparse().and_then(|s| win.map(|(ix, span)| (s, ix, span)));
     // The loop maintains only delta = w − wt (w is delta + wt by the
     // off-window contract), so each step is one window pass + one data-row
     // pass; w is materialized once afterwards (§Perf iteration 3).
@@ -53,17 +85,31 @@ pub fn svrg_block(
         debug_assert!(j < n);
         let yj = y[j];
         // full margin via the snapshot identity (w-wt is zero off-window)
-        let m_cur = mt[j] + x.row_dot_window_offset(j, &delta, lo, hi);
+        let m_cur = mt[j]
+            + match sparse_win {
+                Some((s, ix, span)) => {
+                    let (a, b) = ix.row_range(j, span);
+                    s.range_dot_rebased(a, b, delta, lo)
+                }
+                None => x.row_dot_window_offset(j, delta, lo, hi),
+            };
         let g_cur = loss.slope(m_cur, yj);
         let g_snap = loss.slope(mt[j], yj);
         for (dv, &m) in delta.iter_mut().zip(mu.iter()) {
             *dv -= eta * (lam * *dv + m);
         }
         if g_cur != g_snap {
-            x.row_axpy_window_offset(j, -eta * (g_cur - g_snap), &mut delta, lo, hi);
+            let coeff = -eta * (g_cur - g_snap);
+            match sparse_win {
+                Some((s, ix, span)) => {
+                    let (a, b) = ix.row_range(j, span);
+                    s.range_axpy_rebased(a, b, coeff, delta, lo);
+                }
+                None => x.row_axpy_window_offset(j, coeff, delta, lo, hi),
+            }
         }
     }
-    for ((wv, &tv), &dv) in w[lo..hi].iter_mut().zip(&wt[lo..hi]).zip(&delta) {
+    for ((wv, &tv), &dv) in w[lo..hi].iter_mut().zip(&wt[lo..hi]).zip(delta.iter()) {
         *wv = tv + dv;
     }
 }
@@ -81,7 +127,7 @@ mod tests {
             .map(|_| if r.coin(0.5) { 1.0 } else { -1.0 })
             .collect();
         let wt: Vec<f32> = (0..m).map(|_| r.range_f32(-0.2, 0.2)).collect();
-        (Block::Dense(x), y, wt)
+        (Block::dense(x), y, wt)
     }
 
     fn snapshot(x: &Block, y: &[f32], wt: &[f32], lo: usize, hi: usize,
@@ -129,10 +175,7 @@ mod tests {
     #[test]
     fn dense_and_sparse_agree() {
         let (xb, y, wt) = setup(15, 10, 5);
-        let xs = match &xb {
-            Block::Dense(d) => Block::Sparse(SparseMatrix::from_dense(d)),
-            _ => unreachable!(),
-        };
+        let xs = Block::sparse(SparseMatrix::from_dense(xb.as_dense().unwrap()));
         let (lo, hi) = (2, 9);
         let (mt, mu) = snapshot(&xb, &y, &wt, lo, hi, 0.2, Loss::Logistic);
         let mut rng = Xoshiro::new(6);
@@ -145,6 +188,46 @@ mod tests {
                    &idx, 30, 0.05, 0.2);
         for k in 0..10 {
             assert!((wd[k] - ws[k]).abs() < 1e-4, "coord {k}");
+        }
+    }
+
+    #[test]
+    fn cached_window_positions_match_scan_bitwise() {
+        let mut r = Xoshiro::new(21);
+        let (n, m) = (25, 18);
+        let mut triplets = Vec::new();
+        for i in 0..n {
+            for j in 0..m {
+                if r.coin(0.25) {
+                    triplets.push((i, j, r.range_f32(-1.0, 1.0)));
+                }
+            }
+        }
+        let sm = SparseMatrix::from_triplets(n, m, triplets);
+        let bounds = vec![0, 6, 12, 18];
+        let ix = SubblockIndex::new(&sm, &bounds);
+        let x = Block::sparse(sm);
+        let y: Vec<f32> = (0..n).map(|_| if r.coin(0.5) { 1.0 } else { -1.0 }).collect();
+        let wt: Vec<f32> = (0..m).map(|_| r.range_f32(-0.3, 0.3)).collect();
+        let mut mt = vec![0.0; n];
+        x.margins_into(&wt, &mut mt);
+        let idx = r.index_stream(n, 40);
+        for (lo, hi) in [(0, 6), (6, 12), (12, 18), (0, 18)] {
+            let mu: Vec<f32> = (lo..hi).map(|k| 0.01 * k as f32).collect();
+            let mut w_scan = wt.clone();
+            let mut w_fast = wt.clone();
+            svrg_block(
+                Loss::Hinge, &x, &y, &mut w_scan, &wt, &mu, lo, hi, &mt, &idx, 40, 0.05, 0.1,
+            );
+            let span = ix.span(lo, hi).unwrap();
+            let mut buf = Vec::new();
+            svrg_block_win(
+                Loss::Hinge, &x, &y, &mut w_fast, &wt, &mu, lo, hi, &mt, &idx, 40, 0.05,
+                0.1, Some((&ix, span)), &mut buf,
+            );
+            for k in 0..m {
+                assert_eq!(w_scan[k].to_bits(), w_fast[k].to_bits(), "coord {k} [{lo},{hi})");
+            }
         }
     }
 

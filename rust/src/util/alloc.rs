@@ -1,0 +1,105 @@
+//! Counting global allocator — the measurement side of the
+//! zero-allocation superstep hot path (§Perf).
+//!
+//! Behind the non-default `bench-alloc` feature the crate installs
+//! [`CountingAlloc`] as the global allocator (see `lib.rs`): every
+//! `alloc`/`alloc_zeroed`/`realloc` bumps a process-wide counter, so the
+//! perf harness and the allocation-regression test can assert that
+//! steady-state driver iterations allocate *nothing*.  Without the
+//! feature the probes return `None` and the default system allocator is
+//! untouched — the counting wrapper never rides along in fidelity runs.
+
+/// Whether allocation counting is compiled in.
+pub fn counting_enabled() -> bool {
+    cfg!(feature = "bench-alloc")
+}
+
+/// Total heap allocations since process start (`None` without the
+/// `bench-alloc` feature).  Take a before/after difference around the
+/// region of interest.
+pub fn alloc_count() -> Option<u64> {
+    #[cfg(feature = "bench-alloc")]
+    {
+        Some(counting::ALLOCS.load(std::sync::atomic::Ordering::Relaxed))
+    }
+    #[cfg(not(feature = "bench-alloc"))]
+    {
+        None
+    }
+}
+
+/// Total heap bytes requested since process start (`None` without the
+/// `bench-alloc` feature).
+pub fn alloc_bytes() -> Option<u64> {
+    #[cfg(feature = "bench-alloc")]
+    {
+        Some(counting::BYTES.load(std::sync::atomic::Ordering::Relaxed))
+    }
+    #[cfg(not(feature = "bench-alloc"))]
+    {
+        None
+    }
+}
+
+#[cfg(feature = "bench-alloc")]
+pub use counting::CountingAlloc;
+
+#[cfg(feature = "bench-alloc")]
+mod counting {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub(super) static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    pub(super) static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// System allocator wrapper that counts allocation calls and bytes.
+    /// Frees are deliberately not tracked: the hot-path contract is "no
+    /// allocator traffic at steady state", and every alloc/realloc is
+    /// traffic whether or not it is later freed.
+    pub struct CountingAlloc;
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probes_agree_with_feature_flag() {
+        assert_eq!(alloc_count().is_some(), counting_enabled());
+        assert_eq!(alloc_bytes().is_some(), counting_enabled());
+    }
+
+    #[cfg(feature = "bench-alloc")]
+    #[test]
+    fn counter_observes_allocations() {
+        let before = alloc_count().unwrap();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        std::hint::black_box(&v);
+        let after = alloc_count().unwrap();
+        assert!(after > before, "allocation not counted: {before} -> {after}");
+    }
+}

@@ -8,6 +8,8 @@
 //! * [`rng`] — SplitMix64 / xoshiro256++ PRNGs with per-(seed, partition,
 //!   iteration) sub-stream derivation; every stochastic component in the
 //!   repo draws from these, making runs bit-reproducible.
+//! * [`alloc`] — counting global allocator (behind `bench-alloc`) that
+//!   measures the zero-allocation superstep contract.
 //! * [`json`] — a strict JSON parser/serializer (artifact manifest, configs,
 //!   experiment reports).
 //! * [`cli`] — declarative flag parsing for the `ddopt` binary and examples.
@@ -15,6 +17,7 @@
 //! * [`timer`] — monotonic wall timers and [`stats`] summaries used by the
 //!   bench harness (`benchkit` role).
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod logging;

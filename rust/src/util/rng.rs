@@ -135,7 +135,19 @@ impl Xoshiro {
     /// SDCA/SVRG kernels (both native and XLA backends consume these, which
     /// is what makes the two backends bit-comparable).
     pub fn index_stream(&mut self, n: usize, len: usize) -> Vec<i32> {
-        (0..len).map(|_| self.below(n) as i32).collect()
+        let mut out = vec![0i32; len];
+        self.fill_index_stream(n, &mut out);
+        out
+    }
+
+    /// [`Xoshiro::index_stream`] into a caller-owned buffer — the
+    /// coordinators refill persistent per-task streams each iteration so
+    /// the steady-state hot path draws indices without allocating.  Same
+    /// draws in the same order as `index_stream(n, out.len())`.
+    pub fn fill_index_stream(&mut self, n: usize, out: &mut [i32]) {
+        for v in out.iter_mut() {
+            *v = self.below(n) as i32;
+        }
     }
 
     /// Bernoulli(p).

@@ -1,0 +1,50 @@
+//! Allocation regression (requires `--features bench-alloc`): steady-state
+//! driver iterations of the workspace coordinators must allocate nothing
+//! on the native backend at threads = 1, while the retained pre-PR
+//! boxed-superstep pipeline — the "before" baseline — must still show its
+//! allocator churn.
+//!
+//! The whole file is compiled out without the feature so plain
+//! `cargo test -q` is unaffected; CI's perf-smoke job runs it with the
+//! counting allocator installed.
+
+#![cfg(feature = "bench-alloc")]
+
+use ddopt::bench_harness::perf::steady_state_allocs;
+
+/// One test only: the counters are process-global, so nothing else may
+/// allocate concurrently while a probe window is open.
+#[test]
+fn steady_state_iterations_allocate_zero() {
+    // The probe itself is deterministic, but the libtest harness can in
+    // principle touch the allocator from its bookkeeping thread; take the
+    // minimum of a few runs so a stray harness allocation cannot fail the
+    // gate spuriously (a real per-iteration leak shows up in every run).
+    let mut best: Option<Vec<(String, f64)>> = None;
+    for _ in 0..3 {
+        let rows: Vec<(String, f64)> = steady_state_allocs()
+            .unwrap()
+            .into_iter()
+            .map(|(k, v)| (k, v.expect("bench-alloc build reports counts")))
+            .collect();
+        best = Some(match best {
+            None => rows,
+            Some(prev) => prev
+                .into_iter()
+                .zip(rows)
+                .map(|((k, a), (_, b))| (k, a.min(b)))
+                .collect(),
+        });
+    }
+    let rows = best.unwrap();
+    for (k, v) in &rows {
+        if k.contains("before") {
+            assert!(
+                *v > 0.0,
+                "{k}: the legacy boxed pipeline should allocate (got {v})"
+            );
+        } else {
+            assert_eq!(*v, 0.0, "{k}: steady-state iteration allocated (got {v}/iter)");
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Sparse-kernel parity: the CSC-mirror transpose product and the
+//! window-indexed sub-block ops must agree with the dense kernels (within
+//! f32 tolerance) and with their retained pre-PR scanning/scattering
+//! implementations (bitwise) on random matrices across shapes, densities
+//! and seeds.
+
+use ddopt::data::{balanced_ranges, Block, DenseMatrix, SparseMatrix, SubblockIndex};
+use ddopt::util::rng::Xoshiro;
+
+fn random_pair(n: usize, m: usize, density: f64, seed: u64) -> (DenseMatrix, SparseMatrix) {
+    let mut r = Xoshiro::new(seed);
+    let d = DenseMatrix::from_fn(n, m, |_, _| {
+        if r.coin(density) {
+            r.range_f32(-2.0, 2.0)
+        } else {
+            0.0
+        }
+    });
+    let mut s = SparseMatrix::from_dense(&d);
+    // partition blocks carry the mirror; build it here so the tests
+    // exercise the CSC streaming path, not the scatter fallback
+    s.build_csc();
+    (d, s)
+}
+
+#[test]
+fn csc_atx_matches_dense_on_random_matrices() {
+    for (n, m, density, seed) in [
+        (17usize, 9usize, 0.5, 1u64),
+        (64, 33, 0.1, 2),
+        (40, 120, 0.03, 3),
+        (5, 5, 1.0, 4),
+        (30, 7, 0.0, 5), // fully empty matrix
+    ] {
+        let (d, s) = random_pair(n, m, density, seed);
+        let mut r = Xoshiro::new(seed ^ 0xA5);
+        let v: Vec<f32> = (0..n).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        let mut dense_out = vec![0.0f32; m];
+        d.gemv_t_into(&v, &mut dense_out);
+        let mut csc_out = vec![0.0f32; m];
+        s.gemv_t_into(&v, &mut csc_out);
+        let mut scatter_out = vec![0.0f32; m];
+        s.gemv_t_scatter_into(&v, &mut scatter_out);
+        for j in 0..m {
+            assert!(
+                (dense_out[j] - csc_out[j]).abs() < 1e-4,
+                "n={n} m={m} density={density} col {j}: dense {} vs csc {}",
+                dense_out[j],
+                csc_out[j]
+            );
+            assert_eq!(
+                csc_out[j].to_bits(),
+                scatter_out[j].to_bits(),
+                "n={n} m={m} density={density} col {j}: csc vs scatter"
+            );
+        }
+    }
+}
+
+#[test]
+fn windowed_ops_match_dense_and_scan_on_random_matrices() {
+    for (n, m, nw, density, seed) in [
+        (25usize, 24usize, 4usize, 0.3, 11u64),
+        (50, 64, 8, 0.05, 12),
+        (12, 10, 3, 0.8, 13),
+    ] {
+        let (d, s) = random_pair(n, m, density, seed);
+        let ranges = balanced_ranges(m, nw);
+        let mut bounds = vec![0usize];
+        bounds.extend(ranges.iter().map(|&(_, e)| e));
+        let ix = SubblockIndex::new(&s, &bounds);
+        let bd = Block::dense(d);
+        let bs = Block::sparse(s.clone());
+        let mut r = Xoshiro::new(seed ^ 0x7);
+        let w: Vec<f32> = (0..m).map(|_| r.range_f32(-1.0, 1.0)).collect();
+        for &(lo, hi) in &ranges {
+            let span = ix.span(lo, hi).expect("boundary pair is cached");
+            let dwin: Vec<f32> = w[lo..hi].to_vec();
+            for i in 0..n {
+                let (a, b) = ix.row_range(i, span);
+                let fast = s.range_dot_rebased(a, b, &dwin, lo);
+                let scan = bs.row_dot_window_offset(i, &dwin, lo, hi);
+                let dense = bd.row_dot_window_offset(i, &dwin, lo, hi);
+                assert_eq!(fast.to_bits(), scan.to_bits(), "row {i} [{lo},{hi}) dot");
+                assert!((fast - dense).abs() < 1e-4, "row {i} [{lo},{hi}): {fast} vs dense {dense}");
+
+                let mut out_fast = vec![0.1f32; hi - lo];
+                let mut out_scan = out_fast.clone();
+                let mut out_dense = out_fast.clone();
+                s.range_axpy_rebased(a, b, 0.75, &mut out_fast, lo);
+                bs.row_axpy_window_offset(i, 0.75, &mut out_scan, lo, hi);
+                bd.row_axpy_window_offset(i, 0.75, &mut out_dense, lo, hi);
+                for k in 0..hi - lo {
+                    assert_eq!(
+                        out_fast[k].to_bits(),
+                        out_scan[k].to_bits(),
+                        "row {i} [{lo},{hi}) axpy k={k}"
+                    );
+                    assert!((out_fast[k] - out_dense[k]).abs() < 1e-4);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn from_triplets_fast_path_matches_shuffled_input() {
+    let mut r = Xoshiro::new(31);
+    let (n, m) = (40usize, 23usize);
+    let mut triplets = Vec::new();
+    for i in 0..n {
+        for j in 0..m {
+            if r.coin(0.15) {
+                triplets.push((i, j, r.range_f32(-1.0, 1.0)));
+            }
+        }
+    }
+    // a few duplicates to exercise accumulation on both paths
+    for k in 0..10 {
+        let (i, j, v) = triplets[k * 3 % triplets.len()];
+        triplets.push((i, j, v * 0.5));
+    }
+    let sorted_last = {
+        let mut t = triplets.clone();
+        t.sort_unstable_by_key(|x| (x.0, x.1));
+        SparseMatrix::from_triplets(n, m, t)
+    };
+    let mut shuffled = triplets.clone();
+    // deterministic shuffle
+    for i in (1..shuffled.len()).rev() {
+        shuffled.swap(i, r.below(i + 1));
+    }
+    let from_shuffled = SparseMatrix::from_triplets(n, m, shuffled);
+    assert_eq!(sorted_last.indptr, from_shuffled.indptr);
+    assert_eq!(sorted_last.indices, from_shuffled.indices);
+    assert_eq!(sorted_last.values.len(), from_shuffled.values.len());
+    for (a, b) in sorted_last.values.iter().zip(&from_shuffled.values) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}

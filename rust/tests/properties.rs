@@ -126,7 +126,7 @@ fn prop_partitioner_is_lossless() {
         let x = DenseMatrix::from_fn(n, m, |_, _| r2.range_f32(-1.0, 1.0));
         let ds = Dataset {
             name: "prop".into(),
-            x: ddopt::data::Block::Dense(x),
+            x: ddopt::data::Block::dense(x),
             y: labels(rng, n),
         };
         let part = Partitioned::split(&ds, Grid::new(p, q));
@@ -148,7 +148,7 @@ fn prop_radisa_margin_identity() {
         let m = size_in(rng, 3, 25);
         let mut r2 = Xoshiro::new(rng.next_u64());
         let x = DenseMatrix::from_fn(n, m, |_, _| r2.range_f32(-1.0, 1.0));
-        let block = ddopt::data::Block::Dense(x);
+        let block = ddopt::data::Block::dense(x);
         let wt = vector(rng, m, 0.5);
         let lo = size_in(rng, 0, m - 1);
         let hi = size_in(rng, lo + 1, m);

@@ -1,41 +1,92 @@
 #!/usr/bin/env python3
-"""Gate BENCH_perf.json against checked-in thresholds (CI perf-smoke job).
+"""Gate BENCH_perf.json against checked-in thresholds and the run history
+(CI perf-smoke job).
 
-Usage: check_perf.py BENCH_perf.json ci/perf_thresholds.json
+Usage: check_perf.py BENCH_perf.json ci/perf_thresholds.json [BENCH_history.jsonl]
 
-Fails (exit 1) when any steady-state allocations/iteration entry — other
-than the retained "(before)" baselines — exceeds the ceiling, or when the
-bench was produced without the counting allocator.
+Two gates:
+
+1. Absolute ceiling — any steady-state allocations/iteration entry (other
+   than the retained "(before)" baselines) above the ceiling fails, as
+   does a bench produced without the counting allocator.
+2. Trend — each run is compared against the *previous recorded run* in
+   BENCH_history.jsonl (not just the committed snapshot).  With the
+   current 0.0 ceiling this gate is redundant for the alloc keys (nothing
+   non-negative can regress below zero), so today it is a recorded
+   trajectory plus a safety net; it becomes load-bearing the moment the
+   ceiling is relaxed or keys with headroom are gated (see ROADMAP's
+   "trend gating beyond allocs").
+
+Every gated run is appended to the history, which is kept as a ring of
+the last HISTORY_LIMIT entries; CI caches the file across runs and
+uploads it (together with the fresh BENCH_perf.json) as build artifacts.
+A failing run is appended too — the absolute ceiling backstops the trend
+gate, so recording the bad run cannot lower the bar below the ceiling.
 """
 import json
 import sys
+
+HISTORY_LIMIT = 20
+
+
+def load_history(path):
+    try:
+        with open(path) as fh:
+            return [json.loads(line) for line in fh if line.strip()]
+    except FileNotFoundError:
+        return []
+
+
+def append_history(path, history, bench):
+    history.append(bench)
+    with open(path, "w") as fh:
+        for entry in history[-HISTORY_LIMIT:]:
+            fh.write(json.dumps(entry, sort_keys=True) + "\n")
 
 
 def main() -> int:
     bench = json.load(open(sys.argv[1]))
     thresholds = json.load(open(sys.argv[2]))
+    history_path = sys.argv[3] if len(sys.argv) > 3 else "BENCH_history.jsonl"
     ceiling = thresholds["max_steady_allocs_per_iter"]
+
+    history = load_history(history_path)
+    prev = history[-1] if history else None
 
     if not bench.get("alloc_counting_enabled", False):
         print("FAIL: bench was built without --features bench-alloc")
+        append_history(history_path, history, bench)
         return 1
 
     allocs = bench.get("steady_state_allocs", {})
     if not allocs:
         print("FAIL: no steady_state_allocs section in bench")
+        append_history(history_path, history, bench)
         return 1
 
     failures = []
+    prev_allocs = (prev or {}).get("steady_state_allocs", {})
     for key, value in sorted(allocs.items()):
         if "before" in key:
             print(f"  (baseline) {key} = {value}")
             continue
         if value is None:
             failures.append(f"{key}: no measurement")
-        elif value > ceiling:
+            continue
+        if value > ceiling:
             failures.append(f"{key}: {value} allocs/iter > ceiling {ceiling}")
-        else:
-            print(f"  OK {key} = {value} (ceiling {ceiling})")
+            continue
+        print(f"  OK {key} = {value} (ceiling {ceiling})")
+        # trend: sub-ceiling but worse than the previous recorded run
+        prev_value = prev_allocs.get(key)
+        if isinstance(prev_value, (int, float)) and value > prev_value:
+            failures.append(
+                f"{key}: {value} allocs/iter > previous run's {prev_value} "
+                "(trend regression)"
+            )
+
+    append_history(history_path, history, bench)
+    print(f"history: {min(len(history), HISTORY_LIMIT)} run(s) in {history_path}")
 
     if failures:
         print("FAIL: steady-state allocation regression:")

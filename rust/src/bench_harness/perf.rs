@@ -3,8 +3,10 @@
 //! L3: native kernel throughput (GFLOP/s for margins/atx, steps/s for
 //! SDCA/SVRG) + coordinator overhead (iteration time minus kernel time)
 //! + sparse before/after microbenches (CSC mirror vs CSR scatter,
-//! window-indexed vs scanning windowed ops) + steady-state
-//! allocations/iteration under the `bench-alloc` counting allocator.
+//! window-indexed vs scanning windowed ops) + superstep dispatch
+//! overhead (per-superstep scoped spawns vs the persistent worker pool)
+//! + steady-state allocations/iteration at `threads ∈ {1, 2, 4}` under
+//! the `bench-alloc` counting allocator.
 //! L2/XLA: per-op execute times through the PJRT engine, compile cost,
 //! staging footprint.
 //! L1: analytic VMEM/MXU estimates for the Pallas BlockSpecs (interpret
@@ -230,6 +232,52 @@ pub fn coordinator_overhead() -> Result<Vec<(String, f64)>> {
     Ok(out)
 }
 
+/// Persistent-pool dispatch overhead: µs per superstep of `n_tasks`
+/// trivial tasks at `threads`, for the retained per-superstep scoped
+/// spawn path ("before") and the persistent worker runtime ("after").
+/// Tasks are empty, so the measured time is almost pure dispatch — the
+/// per-round overhead the real systems (Spark executors held across
+/// stages) never pay and the persistent pool eliminates.
+#[cfg(not(feature = "xla"))]
+pub fn spawn_overhead(threads: usize, n_tasks: usize, reps: usize) -> Vec<(String, f64)> {
+    use crate::cluster::pool::run_indexed_scoped;
+    use crate::cluster::WorkerPool;
+    let pool = WorkerPool::new(threads);
+    pool.warm_up();
+    let mut times = vec![0.0f64; n_tasks];
+    let mut scratch = vec![0u64; threads];
+    let trivial = |i: usize, s: &mut u64| -> Result<()> {
+        *s = s.wrapping_add(i as u64);
+        Ok(())
+    };
+    // one warm pass each so neither side pays first-touch costs
+    run_indexed_scoped(n_tasks, &mut scratch, &mut times, trivial).unwrap();
+    pool.run_indexed(n_tasks, &mut scratch, &mut times, trivial).unwrap();
+
+    let t = Timer::start();
+    for _ in 0..reps {
+        run_indexed_scoped(n_tasks, &mut scratch, &mut times, trivial).unwrap();
+    }
+    let before = t.secs() / reps as f64 * 1e6;
+
+    let t = Timer::start();
+    for _ in 0..reps {
+        pool.run_indexed(n_tasks, &mut scratch, &mut times, trivial).unwrap();
+    }
+    let after = t.secs() / reps as f64 * 1e6;
+    vec![
+        ("superstep spawn overhead us (before)".into(), before),
+        ("superstep spawn overhead us (after)".into(), after),
+    ]
+}
+
+/// The `xla` build runs every superstep inline — no pool dispatch to
+/// measure.
+#[cfg(feature = "xla")]
+pub fn spawn_overhead(_threads: usize, _n_tasks: usize, _reps: usize) -> Vec<(String, f64)> {
+    Vec::new()
+}
+
 /// Run `step(t)` for `warmup` iterations, then measure the allocator
 /// call count across `iters` further iterations.  `None` without the
 /// `bench-alloc` feature.
@@ -320,10 +368,14 @@ fn legacy_boxed_allocs(
 }
 
 /// Steady-state allocations/iteration for the three coordinators on the
-/// zero-allocation workspace path (threads = 1: the scoped-spawn parallel
-/// path pays per-superstep thread stacks by design), plus the retained
-/// legacy boxed-superstep pipeline as the "before" number.  `None`
-/// entries mean the binary was built without `bench-alloc`.
+/// zero-allocation workspace path at `threads ∈ {1, 2, 4}` (the
+/// persistent worker pool extends the zero-alloc guarantee to the
+/// parallel path: after the one-time pool bring-up — absorbed here by
+/// the warmup iterations — parallel supersteps are a pointer handoff,
+/// not a spawn), plus an aggregated `parallel steady allocs/iter`
+/// (worst coordinator at threads = 4) and the retained legacy
+/// boxed-superstep pipeline as the "before" number.  `None` entries mean
+/// the binary was built without `bench-alloc`.
 pub fn steady_state_allocs() -> Result<Vec<(String, Option<f64>)>> {
     let ds = SyntheticDense::paper_part1(4, 2, 192, 128, 0.1, 7).build();
     let part = Partitioned::split(&ds, Grid::new(4, 2));
@@ -331,22 +383,39 @@ pub fn steady_state_allocs() -> Result<Vec<(String, Option<f64>)>> {
     let staged = backend.stage(&part)?;
     let (warmup, iters) = (2usize, 5usize);
     let mut out = Vec::new();
+    let mut parallel_worst: Option<f64> = None;
     for method in ["d3ca", "radisa", "admm"] {
-        let mut opt: Box<dyn Optimizer> = match method {
-            "d3ca" => Box::new(D3ca::new(D3caConfig { lambda: 0.1, ..Default::default() })),
-            "radisa" => Box::new(Radisa::new(RadisaConfig {
-                lambda: 0.1,
-                gamma: 0.05,
-                ..Default::default()
-            })),
-            _ => Box::new(Admm::new(AdmmConfig { lambda: 0.1, rho: 0.1 })),
-        };
-        let mut cluster = SimCluster::new(ClusterConfig::with_cores(8).with_threads(1));
-        opt.init(&staged, &mut cluster)?;
-        let measured =
-            probe_alloc(warmup, iters, |t| opt.iterate(t, &staged, &mut cluster))?;
-        out.push((format!("{method} steady allocs/iter"), measured));
+        for threads in [1usize, 2, 4] {
+            let mut opt: Box<dyn Optimizer> = match method {
+                "d3ca" => Box::new(D3ca::new(D3caConfig { lambda: 0.1, ..Default::default() })),
+                "radisa" => Box::new(Radisa::new(RadisaConfig {
+                    lambda: 0.1,
+                    gamma: 0.05,
+                    ..Default::default()
+                })),
+                _ => Box::new(Admm::new(AdmmConfig { lambda: 0.1, rho: 0.1 })),
+            };
+            let mut cluster =
+                SimCluster::new(ClusterConfig::with_cores(8).with_threads(threads));
+            opt.init(&staged, &mut cluster)?;
+            let measured =
+                probe_alloc(warmup, iters, |t| opt.iterate(t, &staged, &mut cluster))?;
+            let key = if threads == 1 {
+                format!("{method} steady allocs/iter")
+            } else {
+                format!("{method} steady allocs/iter (threads={threads})")
+            };
+            if threads == 4 {
+                parallel_worst = match (parallel_worst, measured) {
+                    (Some(a), Some(b)) => Some(a.max(b)),
+                    (None, Some(b)) => Some(b),
+                    (a, None) => a,
+                };
+            }
+            out.push((key, measured));
+        }
     }
+    out.push(("parallel steady allocs/iter".into(), parallel_worst));
     out.push((
         "legacy boxed-superstep allocs/iter (before)".into(),
         legacy_boxed_allocs(&staged, warmup, iters)?,
@@ -480,6 +549,11 @@ pub fn run(scale: Scale) -> Result<()> {
     for (k, v) in &coord {
         rows.push(vec!["L3-coord".into(), k.clone(), fmt(*v)]);
     }
+    // superstep dispatch: scoped spawns (before) vs the persistent pool
+    let pool = spawn_overhead(4, 8, 200);
+    for (k, v) in &pool {
+        rows.push(vec!["L3-pool".into(), k.clone(), fmt(*v)]);
+    }
     let allocs = steady_state_allocs()?;
     for (k, v) in &allocs {
         rows.push(vec![
@@ -508,7 +582,7 @@ pub fn run(scale: Scale) -> Result<()> {
             .collect(),
     );
     let doc = Json::obj(vec![
-        ("schema", Json::str("ddopt-perf/1")),
+        ("schema", Json::str("ddopt-perf/2")),
         ("generated_by", Json::str("ddopt exp perf")),
         (
             "provenance",
@@ -534,6 +608,7 @@ pub fn run(scale: Scale) -> Result<()> {
         ("native_kernels", json_section(&kernels)),
         ("sparse_kernels", json_section(&sparse)),
         ("coordinator", json_section(&coord)),
+        ("pool", json_section(&pool)),
         ("steady_state_allocs", alloc_json),
         ("xla", json_section(&xla)),
         ("l1_estimates", json_section(&l1)),
@@ -572,7 +647,8 @@ mod tests {
         // (or extremely near) zero; the boxed baseline must not be.
         // Without: probes report None and the harness still runs.
         let rows = steady_state_allocs().unwrap();
-        assert_eq!(rows.len(), 4);
+        // 3 coordinators × threads {1, 2, 4} + parallel aggregate + legacy
+        assert_eq!(rows.len(), 11);
         for (k, v) in &rows {
             if crate::util::alloc::counting_enabled() {
                 assert!(v.is_some(), "{k}");
@@ -583,6 +659,18 @@ mod tests {
         if crate::util::alloc::counting_enabled() {
             let legacy = rows.last().unwrap().1.unwrap();
             assert!(legacy > 0.0, "boxed pipeline should allocate");
+        }
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn spawn_overhead_probe_reports_both_sides() {
+        let rows = spawn_overhead(2, 4, 3);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].0.contains("(before)"));
+        assert!(rows[1].0.contains("(after)"));
+        for (k, v) in &rows {
+            assert!(*v > 0.0, "{k} = {v}");
         }
     }
 

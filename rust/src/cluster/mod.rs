@@ -8,9 +8,12 @@
 //!   superstep API every coordinator programs against: one independent
 //!   task per partition, executed for real on the worker pool, combined
 //!   in task order.
-//! * [`pool::WorkerPool`] — scoped OS worker threads execute the
-//!   per-partition tasks of each superstep (parallel when
-//!   `threads > 1`, inline otherwise — identical results either way).
+//! * [`pool::WorkerPool`] — a persistent worker runtime: long-lived OS
+//!   worker threads (spawned once, parked between supersteps) execute
+//!   the per-partition tasks of each superstep via an epoch-fenced
+//!   raw-pointer handoff (parallel when `threads > 1`, inline otherwise
+//!   — identical results either way, and zero steady-state allocations
+//!   at any thread count).
 //! * [`SimClock`] — the simulated parallel clock: each superstep
 //!   contributes the *makespan* of its per-task compute costs scheduled
 //!   LPT onto `cores` executor slots, not the host wall time.
@@ -163,6 +166,14 @@ impl SimCluster {
     /// Host worker threads actually in use.
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Bring the persistent worker pool up now (it otherwise spawns its
+    /// workers lazily on the first parallel superstep) — lets timed runs
+    /// pay the one-time pool bring-up, the only allocation the parallel
+    /// steady state is allowed, before measurement starts.
+    pub fn warm_up(&self) {
+        self.pool.warm_up();
     }
 
     /// Host wall-clock seconds since this cluster was created — the

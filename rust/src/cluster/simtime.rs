@@ -1,6 +1,7 @@
 //! The simulated parallel clock.
 //!
-//! Per-partition compute times are measured for real on this host, then
+//! Per-partition compute times are measured for real on this host (each
+//! task individually, wherever the persistent worker pool ran it), then
 //! scheduled onto `cores` simulated executor slots with the LPT
 //! (longest-processing-time-first) heuristic — the makespan is what a
 //! Spark stage of that superstep would take.  Under a

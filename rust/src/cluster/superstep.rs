@@ -9,8 +9,9 @@
 //! of how many worker threads execute them.
 //!
 //! Thread-safety seam: with the default (native) feature set, tasks are
-//! `Send` and the pool runs them on scoped worker threads.  The `xla`
-//! build drops the `Send` bound — PJRT literals and the engine's
+//! `Send` and the pool runs them on its persistent worker threads (see
+//! [`super::pool`] for the epoch handoff and its safety argument).  The
+//! `xla` build drops the `Send` bound — PJRT literals and the engine's
 //! executable cache are thread-confined — and every plan degrades to
 //! inline execution on the driver thread (same results, same simulated
 //! clock, no host-level parallelism).

@@ -27,7 +27,9 @@
 //! projection output slabs, and per-worker solve scratch, and the
 //! consensus/sharing collectives reduce in place on those slabs
 //! ([`SimCluster::reduce_segments`](crate::cluster::SimCluster::reduce_segments)),
-//! so iterations after the first allocate nothing.
+//! so iterations after the first allocate nothing at any `threads`
+//! setting (the persistent worker pool dispatches supersteps to its
+//! long-lived threads without spawning).
 //!
 //! Standard two-block convex ADMM ⇒ convergence to the global optimum;
 //! the integration tests verify the gap against `f*` shrinks.

@@ -16,7 +16,9 @@
 //! path ([`SimCluster::grid_step_into`](crate::cluster::SimCluster::grid_step_into)):
 //! a persistent [`D3caWorkspace`] holds the Δα and contribution slabs, the
 //! per-task index streams, and per-worker SDCA scratch, so iterations
-//! after the first allocate nothing — §V's "primal vector computation
+//! after the first allocate nothing *at any `threads` setting* (the
+//! persistent worker pool dispatches supersteps to its long-lived
+//! threads without spawning) — §V's "primal vector computation
 //! bottleneck" is all compute, no allocator churn.  Reductions happen in
 //! place on the slabs ([`SimCluster::reduce_segments`](crate::cluster::SimCluster::reduce_segments))
 //! with the same binary-tree combine order (and comm charges) as the

@@ -139,6 +139,10 @@ impl<'a> Driver<'a> {
         // The cluster owns both clocks: the simulated parallel clock the
         // optimizers charge, and the host wall stopwatch `threads` speeds up.
         let mut cluster = SimCluster::new(self.cluster_config.clone());
+        // Spawn the persistent pool workers before anything is timed:
+        // bring-up is the only allocation (and the only spawn) the
+        // parallel path ever pays, and it should not land inside t = 1.
+        cluster.warm_up();
         let mut rec = Recorder::new(self.fstar);
         opt.init(&self.staged, &mut cluster)?;
         for t in 1..=self.iterations {

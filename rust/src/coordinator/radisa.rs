@@ -21,7 +21,9 @@
 //! slabs, per-task index streams, and per-worker ψ/δ scratch, and the
 //! grouped reductions run in place on the slabs
 //! ([`SimCluster::reduce_segments`](crate::cluster::SimCluster::reduce_segments)),
-//! so iterations after the first allocate nothing.  On sparse blocks the
+//! so iterations after the first allocate nothing at any `threads`
+//! setting (the persistent worker pool dispatches supersteps to its
+//! long-lived threads without spawning).  On sparse blocks the
 //! SVRG inner loop uses the staged sub-block window index (O(nnz in
 //! window) per step).  RADiSA-avg's full-block shipping uses the
 //! data-free [`SimCluster::reduce_cost`](crate::cluster::SimCluster::reduce_cost).

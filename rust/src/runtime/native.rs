@@ -1,6 +1,12 @@
 //! Native implementations of the ops the XLA artifacts provide — plus the
 //! ADMM linear algebra (gram build, Cholesky, graph projection) used when
 //! no PJRT engine is attached.
+//!
+//! These ops execute inside superstep tasks, which the persistent worker
+//! pool may run on any of its long-lived threads: they take only shared
+//! (`&`) data plus caller-owned output/scratch buffers, and the `_into`
+//! variants neither allocate nor lock — the per-worker scratch discipline
+//! that keeps parallel steady-state iterations allocation-free.
 
 use crate::data::{Block, BlockRepr};
 use crate::linalg;

@@ -1,6 +1,9 @@
 //! Allocation regression (requires `--features bench-alloc`): steady-state
 //! driver iterations of the workspace coordinators must allocate nothing
-//! on the native backend at threads = 1, while the retained pre-PR
+//! on the native backend at `threads ∈ {1, 2, 4}` — the persistent worker
+//! pool extends the zero-alloc guarantee from the inline path to the
+//! parallel path (only the one-time pool bring-up, absorbed by the probe's
+//! warmup iterations, may allocate) — while the retained pre-PR
 //! boxed-superstep pipeline — the "before" baseline — must still show its
 //! allocator churn.
 //!
@@ -37,6 +40,21 @@ fn steady_state_iterations_allocate_zero() {
         });
     }
     let rows = best.unwrap();
+    // the probe matrix must actually cover the parallel path: every
+    // coordinator at threads = 2 and threads = 4, plus the aggregate
+    for method in ["d3ca", "radisa", "admm"] {
+        for threads in [2usize, 4] {
+            let key = format!("{method} steady allocs/iter (threads={threads})");
+            assert!(
+                rows.iter().any(|(k, _)| *k == key),
+                "probe matrix missing {key}"
+            );
+        }
+    }
+    assert!(
+        rows.iter().any(|(k, _)| k == "parallel steady allocs/iter"),
+        "probe matrix missing the parallel aggregate"
+    );
     for (k, v) in &rows {
         if k.contains("before") {
             assert!(

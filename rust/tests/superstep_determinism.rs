@@ -1,22 +1,39 @@
-//! Superstep determinism: with a fixed seed, the worker-thread count must
-//! be invisible to the simulation — identical iterates (bitwise) and, under
-//! the `Fixed` cost model, identical simulated-clock totals at
-//! `threads = 1` and `threads = 4`.
+//! Superstep determinism — a thread × scenario matrix: with a fixed seed,
+//! the worker-thread count must be invisible to the simulation for every
+//! coordinator under every cluster scenario.  For
+//! `threads ∈ {1, 2, 4}` × {default (ideal), hetero-speeds,
+//! failure-injection}, iterates must be bitwise identical and — under the
+//! `Fixed` cost model — simulated clocks, comm bytes, superstep counts,
+//! and the scenario's straggler/failure counters must match exactly.
 //!
 //! This is the contract that lets the engine run partition tasks on
-//! however many host threads are available: results are combined in task
-//! order, RNG substreams are keyed by (partition, iteration) rather than
-//! by schedule, and the cost model can be pinned for reproducible clocks.
+//! however many persistent pool workers are available: results are
+//! combined in task order, RNG substreams are keyed by (partition,
+//! iteration) rather than by schedule, scenario injections are keyed by
+//! (seed, superstep, task), and the cost model can be pinned for
+//! reproducible clocks.  The matrix also pins the persistent-pool
+//! refactor against the old scoped pool: `threads = 1` never touches the
+//! worker runtime, so agreement across the row *is* agreement with the
+//! pre-refactor execution order.
 
-use ddopt::cluster::{ClusterConfig, CostModel};
+use ddopt::cluster::{ClusterConfig, ClusterScenario, CostModel};
+use ddopt::coordinator::RunResult;
 use ddopt::coordinator::{
     Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa, RadisaConfig,
 };
-use ddopt::coordinator::RunResult;
 use ddopt::data::{Grid, Partitioned, SyntheticDense};
 use ddopt::runtime::Backend;
 
-fn run(make: impl Fn() -> Box<dyn Optimizer>, threads: usize) -> RunResult {
+/// The scenario axis of the matrix (name, spec).
+const SCENARIOS: &[(&str, &str)] = &[
+    ("default", "ideal"),
+    ("hetero-speeds", "hetero:frac=0.5,speed=0.5"),
+    ("failure-injection", "failures:p=0.2,retries=2,seed=11"),
+];
+
+const THREADS: &[usize] = &[1, 2, 4];
+
+fn run(make: &dyn Fn() -> Box<dyn Optimizer>, threads: usize, scenario: &str) -> RunResult {
     let (p, q) = (2, 2);
     let ds = SyntheticDense::paper_part1(p, q, 40, 30, 0.1, 9).build();
     let part = Partitioned::split(&ds, Grid::new(p, q));
@@ -25,6 +42,7 @@ fn run(make: impl Fn() -> Box<dyn Optimizer>, threads: usize) -> RunResult {
         threads,
         cores: 4,
         cost: CostModel::Fixed(1e-3),
+        scenario: ClusterScenario::parse(scenario).unwrap(),
         ..Default::default()
     };
     let mut opt = make();
@@ -36,36 +54,52 @@ fn run(make: impl Fn() -> Box<dyn Optimizer>, threads: usize) -> RunResult {
         .unwrap()
 }
 
-fn assert_thread_invariant(make: impl Fn() -> Box<dyn Optimizer>, what: &str) {
-    let a = run(&make, 1);
-    let b = run(&make, 4);
-    // iterates: exact bitwise equality (task-order combining)
-    assert_eq!(a.w.len(), b.w.len(), "{what}: w length");
-    for (i, (x, y)) in a.w.iter().zip(&b.w).enumerate() {
-        assert_eq!(x.to_bits(), y.to_bits(), "{what}: w[{i}] {x} vs {y}");
-    }
-    // simulated clock: identical totals under the Fixed cost model
-    assert_eq!(a.sim_time, b.sim_time, "{what}: sim time");
-    assert_eq!(a.comm_bytes, b.comm_bytes, "{what}: comm bytes");
-    assert_eq!(a.supersteps, b.supersteps, "{what}: superstep count");
-    // recorded trajectories too (primal is computed from identical w)
-    for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
-        assert_eq!(ra.primal.to_bits(), rb.primal.to_bits(), "{what}: primal trace");
-        assert_eq!(ra.sim_time, rb.sim_time, "{what}: sim-time trace");
+fn assert_thread_scenario_matrix(make: impl Fn() -> Box<dyn Optimizer>, what: &str) {
+    let make: &dyn Fn() -> Box<dyn Optimizer> = &make;
+    for (scenario_name, spec) in SCENARIOS {
+        let base = run(make, THREADS[0], spec);
+        for &threads in &THREADS[1..] {
+            let r = run(make, threads, spec);
+            let ctx = format!("{what} / {scenario_name} / threads={threads}");
+            // iterates: exact bitwise equality (task-order combining)
+            assert_eq!(base.w.len(), r.w.len(), "{ctx}: w length");
+            for (i, (x, y)) in base.w.iter().zip(&r.w).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: w[{i}] {x} vs {y}");
+            }
+            // simulated clock: identical totals under the Fixed cost model
+            assert_eq!(base.sim_time, r.sim_time, "{ctx}: sim time");
+            assert_eq!(base.comm_bytes, r.comm_bytes, "{ctx}: comm bytes");
+            assert_eq!(base.messages, r.messages, "{ctx}: messages");
+            assert_eq!(base.supersteps, r.supersteps, "{ctx}: superstep count");
+            // scenario accounting: injections are keyed by
+            // (seed, superstep, task), never by the schedule
+            assert_eq!(base.stragglers, r.stragglers, "{ctx}: straggler count");
+            assert_eq!(base.failures, r.failures, "{ctx}: failure count");
+            // recorded trajectories too (primal is computed from identical w)
+            assert_eq!(
+                base.history.records.len(),
+                r.history.records.len(),
+                "{ctx}: history length"
+            );
+            for (ra, rb) in base.history.records.iter().zip(&r.history.records) {
+                assert_eq!(ra.primal.to_bits(), rb.primal.to_bits(), "{ctx}: primal trace");
+                assert_eq!(ra.sim_time, rb.sim_time, "{ctx}: sim-time trace");
+            }
+        }
     }
 }
 
 #[test]
-fn d3ca_is_thread_invariant() {
-    assert_thread_invariant(
+fn d3ca_matrix_is_thread_invariant() {
+    assert_thread_scenario_matrix(
         || Box::new(D3ca::new(D3caConfig { lambda: 0.3, seed: 5, ..Default::default() })),
         "d3ca",
     );
 }
 
 #[test]
-fn radisa_is_thread_invariant() {
-    assert_thread_invariant(
+fn radisa_matrix_is_thread_invariant() {
+    assert_thread_scenario_matrix(
         || {
             Box::new(Radisa::new(RadisaConfig {
                 lambda: 0.1,
@@ -79,8 +113,8 @@ fn radisa_is_thread_invariant() {
 }
 
 #[test]
-fn radisa_avg_is_thread_invariant() {
-    assert_thread_invariant(
+fn radisa_avg_matrix_is_thread_invariant() {
+    assert_thread_scenario_matrix(
         || {
             Box::new(Radisa::new(RadisaConfig {
                 lambda: 0.1,
@@ -95,8 +129,8 @@ fn radisa_avg_is_thread_invariant() {
 }
 
 #[test]
-fn admm_is_thread_invariant() {
-    assert_thread_invariant(
+fn admm_matrix_is_thread_invariant() {
+    assert_thread_scenario_matrix(
         || Box::new(Admm::new(AdmmConfig { lambda: 0.2, rho: 0.2 })),
         "admm",
     );

@@ -4,26 +4,37 @@
 
 Usage: check_perf.py BENCH_perf.json ci/perf_thresholds.json [BENCH_history.jsonl]
 
-Two gates:
+Three gates:
 
 1. Absolute ceiling — any steady-state allocations/iteration entry (other
    than the retained "(before)" baselines) above the ceiling fails, as
    does a bench produced without the counting allocator.
-2. Trend — each run is compared against the *previous recorded run* in
-   BENCH_history.jsonl (not just the committed snapshot).  With the
+2. Alloc trend — each run is compared against the *previous recorded run*
+   in BENCH_history.jsonl (not just the committed snapshot).  With the
    current 0.0 ceiling this gate is redundant for the alloc keys (nothing
    non-negative can regress below zero), so today it is a recorded
    trajectory plus a safety net; it becomes load-bearing the moment the
-   ceiling is relaxed or keys with headroom are gated (see ROADMAP's
-   "trend gating beyond allocs").
+   ceiling is relaxed.
+3. Throughput trend (noise-aware) — each `throughput_keys` entry
+   ("section.key" paths into BENCH_perf.json) is gated against the
+   **median of the last `throughput_window` gate-passing runs**: the
+   current value must be at least `throughput_tolerance` x that median.
+   A single noisy CI run moves the median by at most one rank, so one
+   slow neighbor-VM run neither fails the gate spuriously nor poisons
+   the baseline.  The gate arms itself once `throughput_min_history`
+   passing runs are recorded.
 
 Every gated run is appended to the history, which is kept as a ring of
 the last HISTORY_LIMIT entries; CI caches the file across runs and
 uploads it (together with the fresh BENCH_perf.json) as build artifacts.
-A failing run is appended too — the absolute ceiling backstops the trend
-gate, so recording the bad run cannot lower the bar below the ceiling.
+A failing run is appended too, but stamped `"_gate_failed": true` and
+**excluded from the throughput baseline** — otherwise a sustained
+regression would feed itself into the median and the gate would go
+green after a few red runs (the alloc keys don't need this: their
+absolute ceiling backstops the trend regardless of history content).
 """
 import json
+import statistics
 import sys
 
 HISTORY_LIMIT = 20
@@ -44,6 +55,49 @@ def append_history(path, history, bench):
             fh.write(json.dumps(entry, sort_keys=True) + "\n")
 
 
+def lookup(bench, dotted):
+    """Resolve a 'section.key name' path (one dot: section, then key)."""
+    section, _, key = dotted.partition(".")
+    value = bench.get(section, {}).get(key)
+    return value if isinstance(value, (int, float)) else None
+
+
+def check_throughput(bench, history, thresholds, failures):
+    keys = thresholds.get("throughput_keys", [])
+    tolerance = thresholds.get("throughput_tolerance", 0.5)
+    window = thresholds.get("throughput_window", 5)
+    min_history = thresholds.get("throughput_min_history", 3)
+    # baseline = last `window` runs that PASSED their gates; failed runs
+    # are recorded for the trajectory but must not feed the median, or a
+    # sustained regression would become its own baseline
+    clean = [run for run in history if not run.get("_gate_failed")]
+    for dotted in keys:
+        value = lookup(bench, dotted)
+        if value is None:
+            failures.append(f"{dotted}: missing from bench")
+            continue
+        samples = [lookup(run, dotted) for run in clean[-window:]]
+        samples = [s for s in samples if s is not None and s > 0]
+        if len(samples) < min_history:
+            print(
+                f"  (throughput, unarmed) {dotted} = {value} "
+                f"({len(samples)}/{min_history} history runs)"
+            )
+            continue
+        median = statistics.median(samples)
+        floor = tolerance * median
+        if value < floor:
+            failures.append(
+                f"{dotted}: {value} < {tolerance} x median({len(samples)} runs) "
+                f"= {floor:.4g} (throughput regression)"
+            )
+        else:
+            print(
+                f"  OK (throughput) {dotted} = {value} "
+                f"(floor {floor:.4g} from median {median:.4g} of {len(samples)})"
+            )
+
+
 def main() -> int:
     bench = json.load(open(sys.argv[1]))
     thresholds = json.load(open(sys.argv[2]))
@@ -55,13 +109,13 @@ def main() -> int:
 
     if not bench.get("alloc_counting_enabled", False):
         print("FAIL: bench was built without --features bench-alloc")
-        append_history(history_path, history, bench)
+        append_history(history_path, history, {**bench, "_gate_failed": True})
         return 1
 
     allocs = bench.get("steady_state_allocs", {})
     if not allocs:
         print("FAIL: no steady_state_allocs section in bench")
-        append_history(history_path, history, bench)
+        append_history(history_path, history, {**bench, "_gate_failed": True})
         return 1
 
     failures = []
@@ -85,11 +139,17 @@ def main() -> int:
                 "(trend regression)"
             )
 
+    # noise-aware throughput gate: current vs median of last N clean runs
+    check_throughput(bench, history, thresholds, failures)
+
+    if failures:
+        bench = dict(bench)
+        bench["_gate_failed"] = True
     append_history(history_path, history, bench)
     print(f"history: {min(len(history), HISTORY_LIMIT)} run(s) in {history_path}")
 
     if failures:
-        print("FAIL: steady-state allocation regression:")
+        print("FAIL: perf regression:")
         for f in failures:
             print(f"  {f}")
         return 1

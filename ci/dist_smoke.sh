@@ -1,0 +1,71 @@
+#!/usr/bin/env bash
+# dist-smoke: prove the multi-process distributed runtime end to end.
+#
+# Launches two loopback `ddopt executor` processes, trains D3CA and
+# RADiSA on the sim backend and on the dist backend at the same seed,
+# and diffs the bit-exact weight dumps — the acceptance criterion is
+# bitwise identity, not tolerance.  The per-superstep bytes-on-wire
+# records (results/dist_smoke_*_wire.jsonl) are uploaded as a CI
+# artifact for the sim-vs-dist comparison report.
+set -euo pipefail
+
+BIN=${BIN:-./target/release/ddopt}
+PORT1=${PORT1:-7141}
+PORT2=${PORT2:-7142}
+OUT=results
+mkdir -p "$OUT"
+
+"$BIN" executor --bind "127.0.0.1:${PORT1}" --threads 2 &
+E1=$!
+"$BIN" executor --bind "127.0.0.1:${PORT2}" --threads 2 &
+E2=$!
+trap 'kill "$E1" "$E2" 2>/dev/null || true' EXIT
+
+# wait for both executors to accept connections; fail loudly if one
+# never comes up (e.g. its port was already taken and the background
+# process died — `set -e` does not cover background jobs)
+for spec in "$PORT1:$E1" "$PORT2:$E2"; do
+  port=${spec%%:*}
+  pid=${spec##*:}
+  up=0
+  for _ in $(seq 1 50); do
+    if ! kill -0 "$pid" 2>/dev/null; then
+      echo "FAIL: executor on port ${port} exited during startup (port in use?)"
+      exit 1
+    fi
+    if (exec 3<>"/dev/tcp/127.0.0.1/${port}") 2>/dev/null; then
+      exec 3>&- 3<&-
+      up=1
+      break
+    fi
+    sleep 0.2
+  done
+  if [ "$up" != 1 ]; then
+    echo "FAIL: executor on port ${port} did not accept connections within 10s"
+    exit 1
+  fi
+done
+
+COMMON=(--p 2 --q 2 --n-per 80 --m-per 60 --iters 5 --seed 11 --no-fstar --cores 4)
+for method in d3ca radisa; do
+  "$BIN" train --method "$method" "${COMMON[@]}" --cluster sim \
+    --dump-w "$OUT/dist_smoke_${method}_sim.whex"
+  "$BIN" train --method "$method" "${COMMON[@]}" \
+    --cluster "dist:127.0.0.1:${PORT1},127.0.0.1:${PORT2}" \
+    --dump-w "$OUT/dist_smoke_${method}_dist.whex" \
+    --wire-out "$OUT/dist_smoke_${method}_wire.jsonl"
+  if ! diff "$OUT/dist_smoke_${method}_sim.whex" "$OUT/dist_smoke_${method}_dist.whex"; then
+    echo "FAIL: ${method} weights differ between sim and dist backends"
+    exit 1
+  fi
+  echo "OK: ${method} weights bitwise identical across sim and dist"
+  # the wire log must record real traffic for every superstep
+  lines=$(wc -l < "$OUT/dist_smoke_${method}_wire.jsonl")
+  if [ "$lines" -lt 2 ]; then
+    echo "FAIL: ${method} wire log has only ${lines} records"
+    exit 1
+  fi
+  echo "OK: ${method} wire log has ${lines} per-superstep records"
+done
+
+echo "dist-smoke passed"

@@ -21,7 +21,7 @@
 
 use super::common;
 use super::Scale;
-use crate::cluster::{ClusterConfig, SimCluster, StepPlan};
+use crate::cluster::{ClusterBackend, ClusterConfig, SimBackend, SimCluster, StepPlan};
 use crate::coordinator::{
     Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa, RadisaConfig,
 };
@@ -396,7 +396,8 @@ pub fn steady_state_allocs() -> Result<Vec<(String, Option<f64>)>> {
                 _ => Box::new(Admm::new(AdmmConfig { lambda: 0.1, rho: 0.1 })),
             };
             let mut cluster =
-                SimCluster::new(ClusterConfig::with_cores(8).with_threads(threads));
+                SimBackend::new(ClusterConfig::with_cores(8).with_threads(threads));
+            cluster.prepare(&staged)?;
             opt.init(&staged, &mut cluster)?;
             let measured =
                 probe_alloc(warmup, iters, |t| opt.iterate(t, &staged, &mut cluster))?;

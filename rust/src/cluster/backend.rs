@@ -1,0 +1,761 @@
+//! The cluster-backend seam: typed superstep op descriptors and the
+//! [`ClusterBackend`] trait that lets the coordinators run unchanged on
+//! either substrate — the in-process simulated cluster ([`SimBackend`])
+//! or the real multi-process TCP runtime
+//! ([`DistCluster`](super::dist::DistCluster)).
+//!
+//! A [`GridOp`] is a *shippable* description of one superstep: which
+//! per-partition kernel to run plus the small state payloads it needs
+//! (iterates, index streams, sub-block windows).  The training data is
+//! **not** part of an op — both substrates keep the staged grid resident
+//! (in-process here, cached on the executor processes there), which is
+//! the CoCoA/Spark design point the paper builds on.  Where each task
+//! writes is a pure function of the task index and the partition
+//! geometry ([`GridOp::out_span`]), never of the schedule, so results
+//! are bit-identical across thread counts, backends, and executor
+//! layouts.
+//!
+//! The interpreter ([`GridOp::exec_task`]) is the *single* definition of
+//! every superstep body: `SimBackend` runs it on the local worker pool
+//! through [`SimCluster::grid_step_into`], and the executor server runs
+//! the very same function against its cached blocks — sim/dist parity is
+//! structural, not coincidental.
+
+use super::{ClusterConfig, SimClock, SimCluster, TaskSlab};
+use crate::data::Partitioned;
+use crate::loss::Loss;
+use crate::metrics::WireRecord;
+use crate::runtime::{FactorHandle, StagedGrid};
+use anyhow::{anyhow, Result};
+
+/// One superstep, described as data: the kernel to run per grid cell and
+/// the (borrowed) driver-side state it consumes.  See the module docs
+/// for the layout/determinism contract.
+pub enum GridOp<'a> {
+    /// D3CA steps 2-4: one local SDCA run per `(p, q)` cell, Δα into the
+    /// `qq·n` delta slab.  Task order `(p, q)`.
+    Sdca {
+        /// Global dual α, length n.
+        alpha: &'a [f32],
+        /// Global primal w, length m.
+        w: &'a [f32],
+        /// Concatenated per-task visit streams.
+        idx: &'a [i32],
+        /// `(start, len)` of task t's stream in `idx`.
+        idx_off: &'a [(usize, usize)],
+        /// Local SDCA step count per task.
+        h: &'a [usize],
+        lamn: f32,
+        invq: f32,
+        beta: f32,
+    },
+    /// x[p,q]ᵀ·v per cell into the `pp·m` contribution slab (D3CA primal
+    /// recovery; `v` is α or the scaled dual update).  Task order `(p, q)`.
+    Atx {
+        /// Row-space vector, length n.
+        v: &'a [f32],
+    },
+    /// x[p,q]·w_q per cell into the `qq·n` margin slab (RADiSA snapshot
+    /// margins).  Task order `(p, q)`.
+    Margins {
+        /// Global primal w, length m.
+        w: &'a [f32],
+    },
+    /// Loss-gradient pass from margins into the `pp·m` gradient slab
+    /// (RADiSA full gradient).  Task order `(p, q)`.
+    Grad {
+        loss: Loss,
+        /// Reduced snapshot margins m̃, length n.
+        mt: &'a [f32],
+    },
+    /// RADiSA steps 4-11: local SVRG on the assigned sub-block window,
+    /// updated w_q into the `pp·m` result slab.  Task order `(q, p)`.
+    Svrg {
+        loss: Loss,
+        /// Snapshot w̃, length m (both the start iterate and the anchor).
+        w: &'a [f32],
+        /// Full snapshot gradient μ̃ (+ λw̃), length m.
+        mu: &'a [f32],
+        /// Reduced snapshot margins m̃, length n.
+        mt: &'a [f32],
+        /// Local column window of task t (within its feature partition).
+        windows: &'a [(usize, usize)],
+        /// Concatenated per-task visit streams.
+        idx: &'a [i32],
+        /// `(start, len)` of task t's stream in `idx`.
+        idx_off: &'a [(usize, usize)],
+        /// Inner steps L (0 → one pass over the local rows).
+        batch: usize,
+        eta: f32,
+        lam: f32,
+        /// RADiSA-avg's averaging combine "does not wait for stragglers".
+        tolerant: bool,
+    },
+    /// ADMM step 1: graph projection per cell through the cached Cholesky
+    /// factor; w_pq into the `pp·m` slab, z_pq into the `qq·n` slab
+    /// (the one two-output op).  Task order `(p, q)`.
+    AdmmProject {
+        /// ŵ inputs, `pp·m` slab layout.
+        w_hat: &'a [f32],
+        /// ẑ inputs, `qq·n` slab layout.
+        z_hat: &'a [f32],
+    },
+    /// ADMM step 3: hinge prox per *row partition* (pp tasks, not pp·qq)
+    /// into the length-n v slab.
+    ProxHinge {
+        /// Reduced share totals Σ_q c_pq, length n.
+        c: &'a [f32],
+        rho: f32,
+        inv_n: f32,
+    },
+}
+
+impl<'a> GridOp<'a> {
+    /// Short kind label (wire + metrics).
+    pub fn name(&self) -> &'static str {
+        match self {
+            GridOp::Sdca { .. } => "sdca",
+            GridOp::Atx { .. } => "atx",
+            GridOp::Margins { .. } => "margins",
+            GridOp::Grad { .. } => "grad",
+            GridOp::Svrg { .. } => "svrg",
+            GridOp::AdmmProject { .. } => "admm-project",
+            GridOp::ProxHinge { .. } => "prox-hinge",
+        }
+    }
+
+    /// Tasks in this superstep.
+    pub fn n_tasks(&self, part: &Partitioned) -> usize {
+        match self {
+            GridOp::ProxHinge { .. } => part.grid.p,
+            _ => part.grid.p * part.grid.q,
+        }
+    }
+
+    /// Whether the superstep's combine admits stragglers (see
+    /// [`StepPlan::mark_tolerant`](super::StepPlan::mark_tolerant)).
+    pub fn tolerant(&self) -> bool {
+        matches!(self, GridOp::Svrg { tolerant: true, .. })
+    }
+
+    /// Flat grid cell a task index maps to (`p·qq + q`); for
+    /// [`GridOp::ProxHinge`] — which has no single cell — the first cell
+    /// of its row partition.  This is what executor ownership is keyed on.
+    pub fn cell(&self, part: &Partitioned, task: usize) -> usize {
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        match self {
+            GridOp::Svrg { .. } => {
+                let (q, p) = (task / pp, task % pp);
+                p * qq + q
+            }
+            GridOp::ProxHinge { .. } => task * qq,
+            _ => task,
+        }
+    }
+
+    /// Which of `n_execs` executors runs task `task` (round-robin over
+    /// grid cells, so an executor always owns the blocks its tasks
+    /// touch).  [`GridOp::ProxHinge`] tasks only need the labels — which
+    /// every executor holds — so they round-robin over the row index
+    /// directly for balance.
+    pub fn owner(&self, part: &Partitioned, task: usize, n_execs: usize) -> usize {
+        let n = n_execs.max(1);
+        match self {
+            GridOp::ProxHinge { .. } => task % n,
+            _ => self.cell(part, task) % n,
+        }
+    }
+
+    /// Total primary-output slab length.
+    pub fn out_len(&self, part: &Partitioned) -> usize {
+        match self {
+            GridOp::Sdca { .. } | GridOp::Margins { .. } => part.grid.q * part.n,
+            GridOp::Atx { .. }
+            | GridOp::Grad { .. }
+            | GridOp::Svrg { .. }
+            | GridOp::AdmmProject { .. } => part.grid.p * part.m,
+            GridOp::ProxHinge { .. } => part.n,
+        }
+    }
+
+    /// Total secondary-output slab length (0 for single-output ops).
+    pub fn out2_len(&self, part: &Partitioned) -> usize {
+        match self {
+            GridOp::AdmmProject { .. } => part.grid.q * part.n,
+            _ => 0,
+        }
+    }
+
+    /// `(start, len)` of task `task`'s segment in the primary output
+    /// slab.  Derived from the task index and partition geometry alone.
+    pub fn out_span(&self, part: &Partitioned, task: usize) -> (usize, usize) {
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let m = part.m;
+        match self {
+            GridOp::Sdca { .. } | GridOp::Margins { .. } => {
+                let (p, q) = (task / qq, task % qq);
+                let (r0, r1) = part.row_ranges[p];
+                // Σ_{p'<p} qq·n_p' = qq·r0: group p starts at qq·r0
+                (qq * r0 + q * (r1 - r0), r1 - r0)
+            }
+            GridOp::Atx { .. } | GridOp::Grad { .. } | GridOp::AdmmProject { .. } => {
+                let (p, q) = (task / qq, task % qq);
+                let (c0, c1) = part.col_ranges[q];
+                (p * m + c0, c1 - c0)
+            }
+            GridOp::Svrg { .. } => {
+                let (q, p) = (task / pp, task % pp);
+                let (c0, c1) = part.col_ranges[q];
+                (pp * c0 + p * (c1 - c0), c1 - c0)
+            }
+            GridOp::ProxHinge { .. } => {
+                let (r0, r1) = part.row_ranges[task];
+                (r0, r1 - r0)
+            }
+        }
+    }
+
+    /// `(start, len)` of task `task`'s segment in the secondary output
+    /// slab (`(0, 0)` for single-output ops).
+    pub fn out2_span(&self, part: &Partitioned, task: usize) -> (usize, usize) {
+        match self {
+            GridOp::AdmmProject { .. } => {
+                let qq = part.grid.q;
+                let (p, q) = (task / qq, task % qq);
+                let (r0, r1) = part.row_ranges[p];
+                (qq * r0 + q * (r1 - r0), r1 - r0)
+            }
+            _ => (0, 0),
+        }
+    }
+
+    /// Run one task of this op against the staged grid, writing into the
+    /// task's output span(s).  Both substrates call exactly this.
+    ///
+    /// # Safety contract
+    /// `out`/`out2` must be slabs of at least [`GridOp::out_len`] /
+    /// [`GridOp::out2_len`] elements; span disjointness across tasks is
+    /// guaranteed by the layout functions above.
+    #[allow(clippy::too_many_arguments)]
+    pub fn exec_task(
+        &self,
+        staged: &StagedGrid<'_>,
+        factors: &[Option<FactorHandle>],
+        task: usize,
+        sc: &mut OpScratch,
+        out: &TaskSlab<'_, f32>,
+        out2: &TaskSlab<'_, f32>,
+    ) -> Result<()> {
+        let part = staged.part;
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let m = part.m;
+        let (start, len) = self.out_span(part, task);
+        match self {
+            GridOp::Sdca { alpha, w, idx, idx_off, h, lamn, invq, beta } => {
+                let (p, q) = (task / qq, task % qq);
+                let (r0, r1) = part.row_ranges[p];
+                let (c0, c1) = part.col_ranges[q];
+                let (s, l) = idx_off[task];
+                // SAFETY: span derived from the task index alone; spans of
+                // distinct tasks are disjoint by construction of out_span.
+                let da = unsafe { out.segment(start, len) };
+                staged.sdca_epoch_into(
+                    p,
+                    q,
+                    &alpha[r0..r1],
+                    &w[c0..c1],
+                    &idx[s..s + l],
+                    h[task],
+                    *lamn,
+                    *invq,
+                    *beta,
+                    da,
+                    &mut sc.a,
+                    &mut sc.w,
+                )
+            }
+            GridOp::Atx { v } => {
+                let (p, q) = (task / qq, task % qq);
+                let (r0, r1) = part.row_ranges[p];
+                // SAFETY: disjoint spans, see out_span.
+                let o = unsafe { out.segment(start, len) };
+                staged.atx_into(p, q, &v[r0..r1], o)
+            }
+            GridOp::Margins { w } => {
+                let (p, q) = (task / qq, task % qq);
+                let (c0, c1) = part.col_ranges[q];
+                // SAFETY: disjoint spans, see out_span.
+                let o = unsafe { out.segment(start, len) };
+                staged.margins_into(p, q, &w[c0..c1], o)
+            }
+            GridOp::Grad { loss, mt } => {
+                let (p, q) = (task / qq, task % qq);
+                let (r0, r1) = part.row_ranges[p];
+                // SAFETY: disjoint spans, see out_span.
+                let o = unsafe { out.segment(start, len) };
+                staged.grad_into(*loss, p, q, &mt[r0..r1], part.n, o, &mut sc.psi)
+            }
+            GridOp::Svrg {
+                loss,
+                w,
+                mu,
+                mt,
+                windows,
+                idx,
+                idx_off,
+                batch,
+                eta,
+                lam,
+                tolerant: _,
+            } => {
+                let (q, p) = (task / pp, task % pp);
+                let (r0, r1) = part.row_ranges[p];
+                let (c0, c1) = part.col_ranges[q];
+                let n_p = r1 - r0;
+                let l = if *batch == 0 { n_p } else { *batch };
+                let window = windows[task];
+                let (s, sl) = idx_off[task];
+                let wt_q = &w[c0..c1];
+                let mu_win = &mu[c0 + window.0..c0 + window.1];
+                // SAFETY: disjoint spans, see out_span.
+                let o = unsafe { out.segment(start, len) };
+                staged.svrg_block_into(
+                    *loss,
+                    p,
+                    q,
+                    wt_q,
+                    wt_q,
+                    mu_win,
+                    window,
+                    &mt[r0..r1],
+                    &idx[s..s + sl],
+                    l,
+                    *eta,
+                    *lam,
+                    o,
+                    &mut sc.delta,
+                )
+            }
+            GridOp::AdmmProject { w_hat, z_hat } => {
+                let (p, q) = (task / qq, task % qq);
+                let (c0, c1) = part.col_ranges[q];
+                let (z0, zl) = self.out2_span(part, task);
+                let factor = factors
+                    .get(task)
+                    .and_then(|f| f.as_ref())
+                    .ok_or_else(|| {
+                        anyhow!("admm factor for cell {task} missing (prepare_admm not run?)")
+                    })?;
+                let wh = &w_hat[p * m + c0..p * m + c1];
+                let zh = &z_hat[z0..z0 + zl];
+                // SAFETY: both spans derive from the task index alone and
+                // are disjoint across tasks.
+                let wo = unsafe { out.segment(start, len) };
+                let zo = unsafe { out2.segment(z0, zl) };
+                staged.admm_project_into(p, q, factor, wh, zh, wo, zo, &mut sc.t)
+            }
+            GridOp::ProxHinge { c, rho, inv_n } => {
+                let p = task;
+                let (r0, r1) = part.row_ranges[p];
+                // SAFETY: row ranges are disjoint per task.
+                let o = unsafe { out.segment(start, len) };
+                staged.prox_hinge_into(p, &c[r0..r1], *rho, *inv_n, o)
+            }
+        }
+    }
+}
+
+/// Unified per-worker scratch for every [`GridOp`] kernel — one cell per
+/// worker thread, sized once to the largest partition so steady-state
+/// supersteps allocate nothing.
+pub struct OpScratch {
+    /// SDCA local α copy (len max n_p).
+    a: Vec<f32>,
+    /// SDCA local w copy (len max m_q).
+    w: Vec<f32>,
+    /// Gradient-pass ψ buffer (capacity max n_p).
+    psi: Vec<f32>,
+    /// SVRG window δ buffer (capacity max m_q).
+    delta: Vec<f32>,
+    /// ADMM Cholesky-solve RHS (len max n_p).
+    t: Vec<f32>,
+}
+
+impl OpScratch {
+    pub fn for_part(part: &Partitioned) -> OpScratch {
+        let max_np = (0..part.grid.p).map(|p| part.n_p(p)).max().unwrap_or(0);
+        let max_mq = (0..part.grid.q).map(|q| part.m_q(q)).max().unwrap_or(0);
+        OpScratch {
+            a: vec![0.0; max_np],
+            w: vec![0.0; max_mq],
+            psi: Vec::with_capacity(max_np),
+            delta: Vec::with_capacity(max_mq),
+            t: vec![0.0; max_np],
+        }
+    }
+}
+
+/// The substrate the coordinators program against: typed superstep
+/// execution plus the collective/cost surface of the simulated cluster.
+///
+/// Implementations: [`SimBackend`] (everything in-process, the cluster
+/// merely simulated) and [`DistCluster`](super::dist::DistCluster) (real
+/// executor processes over TCP; the simulated clock still runs beside
+/// the real one so both can be reported).
+pub trait ClusterBackend {
+    /// "sim" or "dist" — for logs and reports.
+    fn label(&self) -> &'static str;
+
+    /// Host worker threads behind `grid_exec` (driver-side for sim).
+    fn threads(&self) -> usize;
+
+    /// Bring any lazily-spawned machinery up now, off the clock.
+    fn warm_up(&mut self);
+
+    /// One-time sizing of per-worker scratch (and, for the distributed
+    /// backend, nothing — executors size theirs when blocks arrive).
+    fn prepare(&mut self, staged: &StagedGrid<'_>) -> Result<()>;
+
+    /// Build (or ship the request to build) the cached per-cell ADMM
+    /// factorizations — off the clock, mirroring the paper's accounting.
+    fn prepare_admm(&mut self, staged: &StagedGrid<'_>) -> Result<()>;
+
+    /// Execute one superstep op; task outputs land in `out`/`out2` at
+    /// [`GridOp::out_span`]/[`GridOp::out2_span`].  Advances the simulated
+    /// clock exactly like [`SimCluster::grid_step_into`].
+    fn grid_exec(
+        &mut self,
+        staged: &StagedGrid<'_>,
+        op: GridOp<'_>,
+        out: &mut [f32],
+        out2: &mut [f32],
+    ) -> Result<()>;
+
+    /// In-place grouped treeAggregate (see [`SimCluster::reduce_segments`]).
+    fn reduce_segments(
+        &mut self,
+        slab: &mut [f32],
+        base: usize,
+        stride: usize,
+        count: usize,
+        len: usize,
+    );
+
+    /// Data-free reduce charge (see [`SimCluster::reduce_cost`]).
+    fn reduce_cost(&mut self, leaves: usize, bytes_per_leaf: usize);
+
+    /// Broadcast charge (see [`SimCluster::broadcast_cost`]).
+    fn broadcast_cost(&mut self, bytes: usize, fanout: usize);
+
+    /// The simulated parallel clock (both substrates keep one).
+    fn clock(&self) -> &SimClock;
+
+    /// Real host seconds since this backend was created.
+    fn host_secs(&self) -> f64;
+
+    /// Drain the per-superstep wire log (empty on the sim substrate).
+    fn take_wire_log(&mut self) -> Vec<WireRecord> {
+        Vec::new()
+    }
+
+    /// Orderly teardown (the distributed backend releases its executors).
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The in-process substrate: [`SimCluster`] execution with the unified
+/// [`OpScratch`] cells and the cached ADMM factors the op interpreter
+/// needs.  This is the exact execution the coordinators ran before the
+/// backend seam existed — same pool, same clock, same combine order.
+pub struct SimBackend {
+    pub cluster: SimCluster,
+    scratch: Vec<OpScratch>,
+    factors: Vec<Option<FactorHandle>>,
+}
+
+impl SimBackend {
+    pub fn new(config: ClusterConfig) -> SimBackend {
+        SimBackend {
+            cluster: SimCluster::new(config),
+            scratch: Vec::new(),
+            factors: Vec::new(),
+        }
+    }
+}
+
+impl ClusterBackend for SimBackend {
+    fn label(&self) -> &'static str {
+        "sim"
+    }
+
+    fn threads(&self) -> usize {
+        self.cluster.threads()
+    }
+
+    fn warm_up(&mut self) {
+        self.cluster.warm_up();
+    }
+
+    fn prepare(&mut self, staged: &StagedGrid<'_>) -> Result<()> {
+        let want = self.cluster.threads().max(1);
+        self.scratch.clear();
+        for _ in 0..want {
+            self.scratch.push(OpScratch::for_part(staged.part));
+        }
+        Ok(())
+    }
+
+    fn prepare_admm(&mut self, staged: &StagedGrid<'_>) -> Result<()> {
+        let part = staged.part;
+        self.factors.clear();
+        for p in 0..part.grid.p {
+            for q in 0..part.grid.q {
+                self.factors.push(Some(staged.admm_factor(p, q)?));
+            }
+        }
+        Ok(())
+    }
+
+    fn grid_exec(
+        &mut self,
+        staged: &StagedGrid<'_>,
+        op: GridOp<'_>,
+        out: &mut [f32],
+        out2: &mut [f32],
+    ) -> Result<()> {
+        let part = staged.part;
+        let n = op.n_tasks(part);
+        if n > 0 && self.scratch.is_empty() {
+            // fail here with a name, not deep in the pool's scratch assert
+            return Err(anyhow!("SimBackend::grid_exec before prepare() sized the scratch"));
+        }
+        debug_assert!(out.len() >= op.out_len(part));
+        debug_assert!(out2.len() >= op.out2_len(part));
+        let SimBackend { cluster, scratch, factors } = self;
+        let out_slab = TaskSlab::new(out);
+        let out2_slab = TaskSlab::new(out2);
+        let op_ref = &op;
+        let factors_ref: &[Option<FactorHandle>] = factors;
+        cluster.grid_step_into(n, op.tolerant(), scratch, |task, sc| {
+            op_ref.exec_task(staged, factors_ref, task, sc, &out_slab, &out2_slab)
+        })
+    }
+
+    fn reduce_segments(
+        &mut self,
+        slab: &mut [f32],
+        base: usize,
+        stride: usize,
+        count: usize,
+        len: usize,
+    ) {
+        self.cluster.reduce_segments(slab, base, stride, count, len);
+    }
+
+    fn reduce_cost(&mut self, leaves: usize, bytes_per_leaf: usize) {
+        self.cluster.reduce_cost(leaves, bytes_per_leaf);
+    }
+
+    fn broadcast_cost(&mut self, bytes: usize, fanout: usize) {
+        self.cluster.broadcast_cost(bytes, fanout);
+    }
+
+    fn clock(&self) -> &SimClock {
+        &self.cluster.clock
+    }
+
+    fn host_secs(&self) -> f64 {
+        self.cluster.host_secs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Grid, SyntheticDense};
+    use crate::runtime::Backend;
+
+    fn fixture() -> (crate::data::Dataset, Grid) {
+        (SyntheticDense::paper_part1(2, 3, 14, 9, 0.1, 5).build(), Grid::new(2, 3))
+    }
+
+    #[test]
+    fn spans_tile_the_slabs_disjointly_for_every_op() {
+        // the out_span/out2_span disjointness asserted here is the whole
+        // safety argument for the unsafe concurrent TaskSlab writes in
+        // exec_task — every op layout must be covered, on more than one
+        // (uneven) grid shape
+        for (p, q, n_per, m_per) in [(2usize, 3usize, 14usize, 9usize), (3, 2, 11, 7)] {
+            let ds = SyntheticDense::paper_part1(p, q, n_per, m_per, 0.1, 5).build();
+            let part = Partitioned::split(&ds, Grid::new(p, q));
+            let w = vec![0.0f32; part.m];
+            let v = vec![0.0f32; part.n];
+            let pairs: Vec<(usize, usize)> = vec![(0, 0); part.grid.k()];
+            let h = vec![0usize; part.grid.k()];
+            let ops: Vec<GridOp<'_>> = vec![
+                GridOp::Sdca {
+                    alpha: &v,
+                    w: &w,
+                    idx: &[],
+                    idx_off: &pairs,
+                    h: &h,
+                    lamn: 1.0,
+                    invq: 1.0,
+                    beta: 0.0,
+                },
+                GridOp::Atx { v: &v },
+                GridOp::Margins { w: &w },
+                GridOp::Grad { loss: Loss::Hinge, mt: &v },
+                GridOp::Svrg {
+                    loss: Loss::Hinge,
+                    w: &w,
+                    mu: &w,
+                    mt: &v,
+                    windows: &pairs,
+                    idx: &[],
+                    idx_off: &pairs,
+                    batch: 1,
+                    eta: 0.1,
+                    lam: 0.1,
+                    tolerant: false,
+                },
+                GridOp::AdmmProject { w_hat: &w, z_hat: &v },
+                GridOp::ProxHinge { c: &v, rho: 0.1, inv_n: 1.0 },
+            ];
+            for op in &ops {
+                let n = op.n_tasks(&part);
+                for (which, total) in
+                    [("out", op.out_len(&part)), ("out2", op.out2_len(&part))]
+                {
+                    if total == 0 {
+                        continue;
+                    }
+                    let mut covered = vec![false; total];
+                    for task in 0..n {
+                        let (s, l) = if which == "out" {
+                            op.out_span(&part, task)
+                        } else {
+                            op.out2_span(&part, task)
+                        };
+                        assert!(
+                            s + l <= total,
+                            "{}x{} {} {which} task {task}",
+                            p,
+                            q,
+                            op.name()
+                        );
+                        for c in &mut covered[s..s + l] {
+                            assert!(
+                                !*c,
+                                "{}x{} {} {which} task {task}: overlapping span",
+                                p,
+                                q,
+                                op.name()
+                            );
+                            *c = true;
+                        }
+                    }
+                    // every layout tiles its slab completely
+                    assert!(
+                        covered.iter().all(|&c| c),
+                        "{}x{} {} {which}: slab not tiled",
+                        p,
+                        q,
+                        op.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn svrg_task_order_is_q_major() {
+        let (ds, grid) = fixture();
+        let part = Partitioned::split(&ds, grid);
+        let w = vec![0.0f32; part.m];
+        let windows = vec![(0usize, 0usize); part.grid.k()];
+        let idx_off = vec![(0usize, 0usize); part.grid.k()];
+        let op = GridOp::Svrg {
+            loss: Loss::Hinge,
+            w: &w,
+            mu: &w,
+            mt: &[],
+            windows: &windows,
+            idx: &[],
+            idx_off: &idx_off,
+            batch: 1,
+            eta: 0.1,
+            lam: 0.1,
+            tolerant: false,
+        };
+        // task 1 is (q=0, p=1): cell p*qq + q = 1*3 + 0 = 3
+        assert_eq!(op.cell(&part, 1), 3);
+        let (s, _) = op.out_span(&part, 1);
+        // p=1's segment within column block 0: pp*c0 + 1*m_q = 0 + m_q
+        assert_eq!(s, part.m_q(0));
+        assert!(!op.tolerant());
+    }
+
+    #[test]
+    fn sim_backend_margins_match_staged_grid() {
+        let (ds, grid) = fixture();
+        let part = Partitioned::split(&ds, grid);
+        let backend = Backend::native();
+        let staged = backend.stage(&part).unwrap();
+        let mut rng = crate::util::rng::Xoshiro::new(3);
+        let w: Vec<f32> = (0..part.m).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+        let mut sim = SimBackend::new(ClusterConfig::with_cores(4).with_threads(2));
+        sim.prepare(&staged).unwrap();
+        let op = GridOp::Margins { w: &w };
+        let mut out = vec![0.0f32; op.out_len(&part)];
+        sim.grid_exec(&staged, GridOp::Margins { w: &w }, &mut out, &mut []).unwrap();
+        assert_eq!(sim.clock().supersteps(), 1);
+
+        for p in 0..part.grid.p {
+            for q in 0..part.grid.q {
+                let (c0, c1) = part.col_ranges[q];
+                let expect = staged.margins(p, q, &w[c0..c1]).unwrap();
+                let (r0, r1) = part.row_ranges[p];
+                let n_p = r1 - r0;
+                let s = part.grid.q * r0 + q * n_p;
+                for (i, &e) in expect.iter().enumerate() {
+                    assert_eq!(e.to_bits(), out[s + i].to_bits(), "p={p} q={q} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn admm_requires_prepare() {
+        let (ds, grid) = fixture();
+        let part = Partitioned::split(&ds, grid);
+        let backend = Backend::native();
+        let staged = backend.stage(&part).unwrap();
+        let mut sim = SimBackend::new(ClusterConfig::with_cores(2).with_threads(1));
+        sim.prepare(&staged).unwrap();
+        let w_hat = vec![0.0f32; part.grid.p * part.m];
+        let z_hat = vec![0.0f32; part.grid.q * part.n];
+        let op = GridOp::AdmmProject { w_hat: &w_hat, z_hat: &z_hat };
+        let mut out = vec![0.0f32; op.out_len(&part)];
+        let mut out2 = vec![0.0f32; op.out2_len(&part)];
+        let err = sim
+            .grid_exec(
+                &staged,
+                GridOp::AdmmProject { w_hat: &w_hat, z_hat: &z_hat },
+                &mut out,
+                &mut out2,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("prepare_admm"), "{err}");
+        sim.prepare_admm(&staged).unwrap();
+        sim.grid_exec(
+            &staged,
+            GridOp::AdmmProject { w_hat: &w_hat, z_hat: &z_hat },
+            &mut out,
+            &mut out2,
+        )
+        .unwrap();
+    }
+}

@@ -1,0 +1,390 @@
+//! [`DistCluster`] — the driver-side transport: a [`ClusterBackend`]
+//! whose supersteps execute on real executor processes over TCP.
+//!
+//! Per superstep the driver encodes the [`GridOp`] descriptor once
+//! (iterates, index streams — kilobytes, never the training data),
+//! broadcasts it to every executor, and gathers each task's result
+//! segment back into the coordinator's output slab at the position
+//! [`GridOp::out_span`] dictates.  Combining then happens through the
+//! *identical* [`reduce_segments`](crate::cluster::SimCluster::reduce_segments)
+//! code as the sim backend — level-by-level adjacent-survivor pairing,
+//! `dst += src` — so the physical gather is rooted at the driver while
+//! the arithmetic reuses [`tree_aggregate`](crate::cluster::comm::tree_aggregate)'s
+//! combine order exactly: final weights are bit-identical to `--cluster
+//! sim` at the same seed (asserted by `tests/dist_parity.rs`).
+//!
+//! Accounting is double-entry: executors report *measured* per-task
+//! seconds, which feed the same scenario/LPT simulated-clock charge as
+//! the sim backend ([`SimCluster::charge_measured`]), while every
+//! exchange also lands in a [`WireRecord`] — real wall seconds, bytes
+//! out, bytes in — so `ddopt train --wire-out` can put the cost model
+//! and the measured transport side by side in one report.
+//!
+//! Failure semantics: per-task kernel errors reproduce the sim backend's
+//! lowest-task-index-wins rule across executors (the superstep still
+//! charges the clock); a dead or misbehaving executor (connection reset,
+//! protocol violation, read timeout) surfaces as a clean `Err` naming
+//! the executor — the driver never hangs on a killed peer.
+
+use super::ops;
+use super::wire::{self, Tag};
+use crate::cluster::{ClusterBackend, ClusterConfig, GridOp, SimClock, SimCluster};
+use crate::data::{encode_block, Partitioned};
+use crate::metrics::WireRecord;
+use crate::runtime::StagedGrid;
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Default per-read socket timeout — generous for loopback supersteps,
+/// small enough that a wedged executor fails the run instead of hanging
+/// CI.  Workloads whose single superstep legitimately computes longer
+/// (big datasets, few executor threads) raise it with
+/// `DDOPT_DIST_READ_TIMEOUT_SECS` (`0` disables the timeout entirely).
+const DEFAULT_READ_TIMEOUT_SECS: u64 = 60;
+
+fn read_timeout() -> Option<Duration> {
+    let secs = std::env::var("DDOPT_DIST_READ_TIMEOUT_SECS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(DEFAULT_READ_TIMEOUT_SECS);
+    (secs > 0).then(|| Duration::from_secs(secs))
+}
+
+struct ExecConn {
+    stream: TcpStream,
+    addr: String,
+    threads: usize,
+}
+
+/// The distributed cluster backend (see module docs).
+pub struct DistCluster {
+    /// Simulated clock + collective cost model + in-place combine — the
+    /// exact code the sim backend runs, fed with measured durations.
+    sim: SimCluster,
+    conns: Vec<ExecConn>,
+    wire_log: Vec<WireRecord>,
+    step_id: u64,
+    send_buf: Vec<u8>,
+    recv_buf: Vec<u8>,
+    /// Per-task measured durations of the superstep in flight.
+    durs: Vec<f64>,
+    seen: Vec<bool>,
+}
+
+impl DistCluster {
+    /// Connect to the executors, run the versioned handshake, and ship
+    /// each its owned grid blocks (round-robin by flat cell index — the
+    /// same keying [`GridOp::owner`] uses per superstep).
+    pub fn connect(
+        config: ClusterConfig,
+        addrs: &[String],
+        part: &Partitioned,
+    ) -> Result<DistCluster> {
+        if addrs.is_empty() {
+            bail!("--cluster dist wants at least one executor address");
+        }
+        let n_execs = addrs.len();
+        let t0 = Instant::now();
+        let (mut bytes_out, mut bytes_in) = (0usize, 0usize);
+        let mut recv_buf = Vec::new();
+        let mut conns = Vec::with_capacity(n_execs);
+        for (i, addr) in addrs.iter().enumerate() {
+            let mut stream = TcpStream::connect(addr)
+                .with_context(|| format!("connect to executor {i} at {addr}"))?;
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(read_timeout()).ok();
+            let mut hello = Vec::new();
+            bytes::put_u32(&mut hello, wire::PROTO_MAGIC);
+            bytes::put_u32(&mut hello, wire::PROTO_VERSION);
+            bytes::put_u32(&mut hello, i as u32);
+            bytes::put_u32(&mut hello, n_execs as u32);
+            bytes_out += wire::write_frame(&mut stream, Tag::Hello, &hello)?;
+            bytes_in += wire::expect_frame(&mut stream, &mut recv_buf, Tag::HelloAck)
+                .with_context(|| format!("handshake with executor {i} at {addr}"))?;
+            let mut r = ByteReader::new(&recv_buf);
+            let magic = r.u32()?;
+            let version = r.u32()?;
+            if magic != wire::PROTO_MAGIC || version != wire::PROTO_VERSION {
+                bail!(
+                    "executor {i} at {addr} speaks protocol v{version} \
+                     (driver v{}); rebuild the executor binary",
+                    wire::PROTO_VERSION
+                );
+            }
+            let threads = r.u32()? as usize;
+            conns.push(ExecConn { stream, addr: addr.clone(), threads });
+        }
+
+        // stage: metadata to everyone, each block to its one owner
+        for (i, conn) in conns.iter_mut().enumerate() {
+            let mut body = Vec::new();
+            part.encode_meta(&mut body);
+            let owned: Vec<usize> =
+                (0..part.grid.k()).filter(|cell| cell % n_execs == i).collect();
+            bytes::put_u32(&mut body, owned.len() as u32);
+            for &cell in &owned {
+                bytes::put_usize(&mut body, cell);
+                encode_block(&part.blocks[cell], &mut body);
+            }
+            bytes_out += wire::write_frame(&mut conn.stream, Tag::Stage, &body)
+                .with_context(|| format!("stage blocks on executor {i} at {}", conn.addr))?;
+            bytes_in += wire::expect_frame(&mut conn.stream, &mut recv_buf, Tag::StageAck)
+                .with_context(|| format!("stage ack from executor {i} at {}", conn.addr))?;
+        }
+
+        let wire_log = vec![WireRecord {
+            step: 0,
+            op: "stage",
+            wall_secs: t0.elapsed().as_secs_f64(),
+            bytes_out,
+            bytes_in,
+            sim_secs: 0.0,
+        }];
+        Ok(DistCluster {
+            sim: SimCluster::new(config),
+            conns,
+            wire_log,
+            step_id: 0,
+            send_buf: Vec::new(),
+            recv_buf,
+            durs: Vec::new(),
+            seen: Vec::new(),
+        })
+    }
+
+    /// Total executor worker threads (display only).
+    pub fn executor_threads(&self) -> usize {
+        self.conns.iter().map(|c| c.threads).sum()
+    }
+
+    pub fn n_executors(&self) -> usize {
+        self.conns.len()
+    }
+}
+
+impl ClusterBackend for DistCluster {
+    fn label(&self) -> &'static str {
+        "dist"
+    }
+
+    fn threads(&self) -> usize {
+        self.executor_threads().max(1)
+    }
+
+    fn warm_up(&mut self) {
+        // executors spawned their pools at staging time; nothing to do
+    }
+
+    fn prepare(&mut self, _staged: &StagedGrid<'_>) -> Result<()> {
+        // per-worker scratch lives executor-side, sized when blocks land
+        Ok(())
+    }
+
+    fn prepare_admm(&mut self, _staged: &StagedGrid<'_>) -> Result<()> {
+        let t0 = Instant::now();
+        // consume a step ordinal so wire records stay uniquely keyed by
+        // `step` (staging alone owns 0); superstep records simply skip
+        // this number
+        self.step_id += 1;
+        let (mut bytes_out, mut bytes_in) = (0usize, 0usize);
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            bytes_out += wire::write_frame(&mut conn.stream, Tag::PrepareAdmm, &[])?;
+            bytes_in +=
+                wire::expect_frame(&mut conn.stream, &mut self.recv_buf, Tag::PrepareAdmmAck)
+                    .with_context(|| {
+                        format!("admm factorization on executor {i} at {}", conn.addr)
+                    })?;
+        }
+        self.wire_log.push(WireRecord {
+            step: self.step_id as usize,
+            op: "prepare-admm",
+            wall_secs: t0.elapsed().as_secs_f64(),
+            bytes_out,
+            bytes_in,
+            sim_secs: 0.0,
+        });
+        Ok(())
+    }
+
+    fn grid_exec(
+        &mut self,
+        staged: &StagedGrid<'_>,
+        op: GridOp<'_>,
+        out: &mut [f32],
+        out2: &mut [f32],
+    ) -> Result<()> {
+        let part = staged.part;
+        let n_tasks = op.n_tasks(part);
+        if n_tasks == 0 {
+            return Ok(());
+        }
+        debug_assert!(out.len() >= op.out_len(part));
+        debug_assert!(out2.len() >= op.out2_len(part));
+        let t0 = Instant::now();
+        self.step_id += 1;
+        let step_id = self.step_id;
+        let n_execs = self.conns.len();
+
+        // one encoding, N sends
+        self.send_buf.clear();
+        bytes::put_u64(&mut self.send_buf, step_id);
+        ops::encode_op(&op, &mut self.send_buf);
+        let (mut bytes_out, mut bytes_in) = (0usize, 0usize);
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            bytes_out += wire::write_frame(&mut conn.stream, Tag::Step, &self.send_buf)
+                .with_context(|| {
+                    format!("send superstep {step_id} to executor {i} at {}", conn.addr)
+                })?;
+        }
+
+        // gather: every task's duration + result segment, exactly once
+        self.durs.clear();
+        self.durs.resize(n_tasks, 0.0);
+        self.seen.clear();
+        self.seen.resize(n_tasks, false);
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            let (tag, nread) = wire::read_frame(&mut conn.stream, &mut self.recv_buf)
+                .with_context(|| {
+                    format!(
+                        "superstep {step_id} reply from executor {i} at {} \
+                         (killed or wedged executor?)",
+                        conn.addr
+                    )
+                })?;
+            bytes_in += nread;
+            match tag {
+                Tag::StepResult => {}
+                Tag::Fatal => {
+                    let msg = ByteReader::new(&self.recv_buf).str().unwrap_or_default();
+                    bail!("executor {i} at {} failed: {msg}", conn.addr);
+                }
+                other => bail!(
+                    "executor {i} at {}: wanted StepResult, got {other:?}",
+                    conn.addr
+                ),
+            }
+            let mut r = ByteReader::new(&self.recv_buf);
+            let sid = r.u64()?;
+            if sid != step_id {
+                bail!(
+                    "executor {i} at {} answered superstep {sid}, expected {step_id}",
+                    conn.addr
+                );
+            }
+            let count = r.u32()? as usize;
+            for _ in 0..count {
+                let task = r.u32()? as usize;
+                if task >= n_tasks {
+                    bail!("executor {i}: task {task} out of range ({n_tasks} tasks)");
+                }
+                if self.seen[task] {
+                    bail!("executor {i}: task {task} reported twice");
+                }
+                self.seen[task] = true;
+                self.durs[task] = r.f64()?;
+                let status = r.u8()?;
+                if status == 0 {
+                    let (s, l) = op.out_span(part, task);
+                    read_segment(&mut r, &mut out[s..s + l], task, "out")?;
+                    let (s2, l2) = op.out2_span(part, task);
+                    read_segment(&mut r, &mut out2[s2..s2 + l2], task, "out2")?;
+                } else {
+                    let msg = r.str()?;
+                    let err = anyhow::anyhow!("partition task {task}: {msg}");
+                    if first_err.as_ref().map(|(t, _)| task < *t).unwrap_or(true) {
+                        first_err = Some((task, err));
+                    }
+                }
+            }
+        }
+        if let Some(missing) = self.seen.iter().position(|&s| !s) {
+            bail!(
+                "superstep {step_id}: no executor owned task {missing} \
+                 ({n_execs} executors, {n_tasks} tasks)"
+            );
+        }
+
+        // the simulated clock advances exactly like the sim backend's,
+        // fed with the *measured* executor durations (or the Fixed cost)
+        let sim_before = self.sim.clock.now();
+        self.sim.charge_measured(&self.durs, op.tolerant());
+        self.wire_log.push(WireRecord {
+            step: step_id as usize,
+            op: op.name(),
+            wall_secs: t0.elapsed().as_secs_f64(),
+            bytes_out,
+            bytes_in,
+            sim_secs: self.sim.clock.now() - sim_before,
+        });
+        match first_err {
+            Some((_, e)) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn reduce_segments(
+        &mut self,
+        slab: &mut [f32],
+        base: usize,
+        stride: usize,
+        count: usize,
+        len: usize,
+    ) {
+        // results were already gathered to the driver; the combine (and
+        // its comm charge) is bit-identical to the sim backend's
+        self.sim.reduce_segments(slab, base, stride, count, len);
+    }
+
+    fn reduce_cost(&mut self, leaves: usize, bytes_per_leaf: usize) {
+        self.sim.reduce_cost(leaves, bytes_per_leaf);
+    }
+
+    fn broadcast_cost(&mut self, bytes: usize, fanout: usize) {
+        self.sim.broadcast_cost(bytes, fanout);
+    }
+
+    fn clock(&self) -> &SimClock {
+        &self.sim.clock
+    }
+
+    fn host_secs(&self) -> f64 {
+        self.sim.host_secs()
+    }
+
+    fn take_wire_log(&mut self) -> Vec<WireRecord> {
+        std::mem::take(&mut self.wire_log)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        // orderly release: executors return to their accept loop; errors
+        // are ignored (the executor may already be gone, which is fine)
+        for conn in &mut self.conns {
+            if wire::write_frame(&mut conn.stream, Tag::Shutdown, &[]).is_ok() {
+                let _ = wire::expect_frame(&mut conn.stream, &mut self.recv_buf, Tag::Bye);
+            }
+        }
+        self.conns.clear();
+        Ok(())
+    }
+}
+
+/// Read one length-prefixed f32 array straight into a slab segment,
+/// insisting the length matches the span exactly.
+fn read_segment(
+    r: &mut ByteReader<'_>,
+    dst: &mut [f32],
+    task: usize,
+    what: &str,
+) -> Result<()> {
+    let n = r.u64()? as usize;
+    if n != dst.len() {
+        bail!(
+            "task {task}: {what} segment length {n} != expected {}",
+            dst.len()
+        );
+    }
+    r.fill_f32s(dst)
+}

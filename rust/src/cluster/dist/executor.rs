@@ -1,0 +1,296 @@
+//! The executor server — `ddopt executor --bind ADDR`.
+//!
+//! One executor process serves one driver connection at a time (and then
+//! the next: the accept loop is long-lived, so a single `ddopt executor`
+//! can back many training runs).  Per connection it:
+//!
+//! 1. answers the versioned handshake ([`wire::Tag::Hello`]);
+//! 2. receives the partition *metadata* plus exactly the grid blocks it
+//!    owns (round-robin by flat cell index — the same keying
+//!    [`GridOp::owner`] uses driver-side), installs them into a local
+//!    [`Partitioned`], and stages it on the native backend — the data is
+//!    now resident for the whole session, like a Spark executor's cached
+//!    RDD partitions;
+//! 3. loops on superstep frames: decode the op, run its owned tasks on
+//!    the local [`WorkerPool`] through the shared interpreter
+//!    ([`GridOp::exec_task`] — the very function the sim backend runs),
+//!    and reply with each task's measured seconds and output segment.
+//!
+//! Task errors are per-task data in the reply (the driver reproduces the
+//! sim backend's lowest-task-index-wins rule across executors); protocol
+//! errors tear down the connection with a [`wire::Tag::Fatal`] frame
+//! where possible.
+
+use super::ops::OpBuf;
+use super::wire::{self, Tag};
+use crate::cluster::{GridOp, OpScratch, TaskSlab, WorkerPool};
+use crate::data::{decode_block, Partitioned};
+use crate::runtime::{Backend, FactorHandle, StagedGrid};
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+
+/// `ddopt executor` settings.
+pub struct ExecutorConfig {
+    /// `host:port` to listen on (port 0 = OS-assigned; the chosen
+    /// address is printed as `executor listening on ADDR`).
+    pub bind: String,
+    /// Local worker threads for superstep tasks.
+    pub threads: usize,
+    /// Serve a single driver connection, then exit (tests/CI).
+    pub once: bool,
+}
+
+/// Run the executor server (blocks forever unless `once`).
+pub fn serve(cfg: &ExecutorConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.bind)
+        .with_context(|| format!("bind executor on {}", cfg.bind))?;
+    let local = listener.local_addr()?;
+    // the one line tooling parses: tests and the loopback quickstart
+    // discover OS-assigned ports from it
+    println!("executor listening on {local}");
+    std::io::stdout().flush().ok();
+    loop {
+        let (stream, peer) = listener.accept().context("accept driver connection")?;
+        eprintln!("executor: serving driver at {peer}");
+        match serve_conn(stream, cfg.threads) {
+            Ok(()) => eprintln!("executor: driver at {peer} finished cleanly"),
+            Err(e) => eprintln!("executor: session with {peer} ended: {e:#}"),
+        }
+        if cfg.once {
+            return Ok(());
+        }
+    }
+}
+
+/// Serve one driver connection until `Shutdown` or EOF.
+fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut buf = Vec::new();
+
+    // -- handshake ---------------------------------------------------
+    let (tag, _) = wire::read_frame(&mut stream, &mut buf)?;
+    if tag != Tag::Hello {
+        bail!("protocol violation: first frame was {tag:?}, not Hello");
+    }
+    let mut r = ByteReader::new(&buf);
+    let magic = r.u32()?;
+    if magic != wire::PROTO_MAGIC {
+        bail!("handshake magic mismatch: got {magic:#x}");
+    }
+    let version = r.u32()?;
+    if version != wire::PROTO_VERSION {
+        let mut body = Vec::new();
+        bytes::put_str(
+            &mut body,
+            &format!(
+                "protocol version mismatch: driver speaks v{version}, executor v{}",
+                wire::PROTO_VERSION
+            ),
+        );
+        let _ = wire::write_frame(&mut stream, Tag::Fatal, &body);
+        bail!("protocol version mismatch (driver v{version})");
+    }
+    let my_index = r.u32()? as usize;
+    let n_execs = r.u32()? as usize;
+    if n_execs == 0 || my_index >= n_execs {
+        bail!("bad handshake: executor {my_index} of {n_execs}");
+    }
+    let mut ack = Vec::new();
+    bytes::put_u32(&mut ack, wire::PROTO_MAGIC);
+    bytes::put_u32(&mut ack, wire::PROTO_VERSION);
+    bytes::put_u32(&mut ack, threads as u32);
+    wire::write_frame(&mut stream, Tag::HelloAck, &ack)?;
+
+    // -- staging: blocks arrive once, stay resident ------------------
+    let (tag, _) = wire::read_frame(&mut stream, &mut buf)?;
+    if tag != Tag::Stage {
+        bail!("protocol violation: wanted Stage, got {tag:?}");
+    }
+    let mut r = ByteReader::new(&buf);
+    let mut part = Partitioned::decode_meta(&mut r)?;
+    let n_blocks = r.u32()? as usize;
+    for _ in 0..n_blocks {
+        let cell = r.usize()?;
+        if cell % n_execs != my_index {
+            bail!("staged block for cell {cell} does not belong to executor {my_index}/{n_execs}");
+        }
+        let block = decode_block(&mut r)?;
+        part.set_block(cell, block)?;
+    }
+    if !r.is_empty() {
+        bail!("trailing bytes after Stage payload");
+    }
+    eprintln!(
+        "executor {my_index}/{n_execs}: cached {n_blocks} blocks of a {}x{} grid ({} threads)",
+        part.grid.p, part.grid.q, threads
+    );
+    wire::write_frame(&mut stream, Tag::StageAck, &[])?;
+
+    let backend = Backend::native();
+    let staged = backend.stage(&part)?;
+    let pool = WorkerPool::new(threads);
+    pool.warm_up();
+    let mut scratch: Vec<OpScratch> =
+        (0..threads.max(1)).map(|_| OpScratch::for_part(&part)).collect();
+    let mut factors: Vec<Option<FactorHandle>> = Vec::new();
+
+    // -- superstep loop ----------------------------------------------
+    let mut opbuf = OpBuf::new();
+    let mut owned: Vec<usize> = Vec::new();
+    let mut times: Vec<f64> = Vec::new();
+    let mut out: Vec<f32> = Vec::new();
+    let mut out2: Vec<f32> = Vec::new();
+    let mut reply: Vec<u8> = Vec::new();
+    loop {
+        let (tag, _) = wire::read_frame(&mut stream, &mut buf)?;
+        match tag {
+            Tag::PrepareAdmm => {
+                // factor the owned cells only, off the clock (the paper
+                // excludes this one-time cost from reported times)
+                factors.clear();
+                for cell in 0..part.grid.k() {
+                    if cell % n_execs == my_index {
+                        let (p, q) = (cell / part.grid.q, cell % part.grid.q);
+                        factors.push(Some(staged.admm_factor(p, q)?));
+                    } else {
+                        factors.push(None);
+                    }
+                }
+                wire::write_frame(&mut stream, Tag::PrepareAdmmAck, &[])?;
+            }
+            Tag::Step => {
+                let outcome = run_step(
+                    &staged,
+                    &pool,
+                    &mut scratch,
+                    &factors,
+                    &mut opbuf,
+                    &buf,
+                    my_index,
+                    n_execs,
+                    &mut owned,
+                    &mut times,
+                    &mut out,
+                    &mut out2,
+                    &mut reply,
+                );
+                match outcome {
+                    Ok(()) => {
+                        wire::write_frame(&mut stream, Tag::StepResult, &reply)?;
+                    }
+                    Err(e) => {
+                        // protocol-level failure (bad frame, unknown op):
+                        // tell the driver before tearing down
+                        let mut body = Vec::new();
+                        bytes::put_str(&mut body, &format!("{e:#}"));
+                        let _ = wire::write_frame(&mut stream, Tag::Fatal, &body);
+                        return Err(e);
+                    }
+                }
+            }
+            Tag::Shutdown => {
+                wire::write_frame(&mut stream, Tag::Bye, &[])?;
+                return Ok(());
+            }
+            Tag::Fatal => {
+                let msg = ByteReader::new(&buf).str().unwrap_or_default();
+                bail!("driver reported fatal error: {msg}");
+            }
+            other => bail!("protocol violation: unexpected {other:?} frame"),
+        }
+    }
+}
+
+/// Decode one Step frame, run the owned tasks, build the StepResult body
+/// in `reply`.  Per-task kernel errors become per-task reply entries —
+/// only frame/op decoding problems are `Err` here.
+#[allow(clippy::too_many_arguments)]
+fn run_step(
+    staged: &StagedGrid<'_>,
+    pool: &WorkerPool,
+    scratch: &mut [OpScratch],
+    factors: &[Option<FactorHandle>],
+    opbuf: &mut OpBuf,
+    frame: &[u8],
+    my_index: usize,
+    n_execs: usize,
+    owned: &mut Vec<usize>,
+    times: &mut Vec<f64>,
+    out: &mut Vec<f32>,
+    out2: &mut Vec<f32>,
+    reply: &mut Vec<u8>,
+) -> Result<()> {
+    let part = staged.part;
+    let mut r = ByteReader::new(frame);
+    let step_id = r.u64()?;
+    opbuf.decode_into(&mut r)?;
+    if !r.is_empty() {
+        bail!("trailing bytes after Step payload");
+    }
+    let op: GridOp<'_> = opbuf.as_op()?;
+
+    let n_tasks = op.n_tasks(part);
+    owned.clear();
+    for task in 0..n_tasks {
+        if op.owner(part, task, n_execs) == my_index {
+            owned.push(task);
+        }
+    }
+    // grow-only slabs, never re-zeroed: exec_task fully overwrites every
+    // owned span before it is shipped, and unowned/stale regions are
+    // never serialized — so the memset would be wasted work proportional
+    // to the whole model, not this executor's share
+    let out_len = op.out_len(part);
+    if out.len() < out_len {
+        out.resize(out_len, 0.0);
+    }
+    let out2_len = op.out2_len(part);
+    if out2.len() < out2_len {
+        out2.resize(out2_len, 0.0);
+    }
+    times.clear();
+    times.resize(owned.len(), 0.0);
+
+    // kernel errors are collected per task (the epoch always drains, so
+    // every owned task still reports a measured duration)
+    let errs: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+    {
+        let out_slab = TaskSlab::new(out);
+        let out2_slab = TaskSlab::new(out2);
+        let owned_ref: &[usize] = owned;
+        let op_ref = &op;
+        let errs_ref = &errs;
+        pool.run_indexed(owned_ref.len(), scratch, times, |i, sc| {
+            let task = owned_ref[i];
+            if let Err(e) =
+                op_ref.exec_task(staged, factors, task, sc, &out_slab, &out2_slab)
+            {
+                errs_ref.lock().unwrap().push((task, format!("{e:#}")));
+            }
+            Ok(())
+        })?;
+    }
+    let errs = errs.into_inner().unwrap();
+
+    reply.clear();
+    bytes::put_u64(reply, step_id);
+    bytes::put_u32(reply, owned.len() as u32);
+    for (i, &task) in owned.iter().enumerate() {
+        bytes::put_u32(reply, task as u32);
+        bytes::put_f64(reply, times[i]);
+        if let Some((_, msg)) = errs.iter().find(|(t, _)| *t == task) {
+            bytes::put_u8(reply, 1);
+            bytes::put_str(reply, msg);
+        } else {
+            bytes::put_u8(reply, 0);
+            let (s, l) = op.out_span(part, task);
+            bytes::put_f32s(reply, &out[s..s + l]);
+            let (s2, l2) = op.out2_span(part, task);
+            bytes::put_f32s(reply, &out2[s2..s2 + l2]);
+        }
+    }
+    Ok(())
+}

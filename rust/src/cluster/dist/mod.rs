@@ -1,0 +1,43 @@
+//! The real multi-process distributed runtime: driver and executor
+//! processes speaking the superstep contract over TCP.
+//!
+//! This is the subsystem that takes the reproduction from "simulated
+//! cluster, real math" to "real cluster, real math".  The paper's
+//! algorithms run *unchanged*: coordinators describe each superstep as a
+//! typed [`GridOp`](super::GridOp) descriptor, and this module merely
+//! swaps where the descriptor executes —
+//!
+//! * [`executor`] — `ddopt executor --bind ADDR`: a long-lived server
+//!   process that receives its assigned grid blocks once at startup
+//!   (binary-framed, [`crate::data::encode_block`]), caches them staged
+//!   on the native backend, then loops executing superstep ops against
+//!   its local [`WorkerPool`](super::WorkerPool);
+//! * [`driver_net`] — [`DistCluster`], the driver-side
+//!   [`ClusterBackend`](super::ClusterBackend): connects to N executors,
+//!   ships each superstep's op descriptor + small state payloads
+//!   (iterates, index streams — never the training data), gathers the
+//!   per-task results into the coordinator's slabs, and combines them
+//!   with exactly [`tree_aggregate`](super::comm::tree_aggregate)'s
+//!   pairing order so the final weights are bit-identical to the sim
+//!   backend at the same seed;
+//! * [`wire`] — the length-prefixed binary frame codec, message tags,
+//!   and the versioned handshake;
+//! * [`ops`] — ser/de between [`GridOp`](super::GridOp) borrows and wire
+//!   bytes (an [`ops::OpBuf`] owns the decoded payloads executor-side).
+//!
+//! Two clocks run side by side: the executors report *real* per-task
+//! compute seconds, which feed the same scenario/LPT simulated-clock
+//! accounting as the sim backend, while [`DistCluster`] additionally
+//! records real wall-clock and bytes-on-wire per superstep
+//! ([`crate::metrics::WireRecord`]) so one report can compare the cost
+//! model against measured transport.  Loopback TCP on one host today;
+//! the protocol is host-agnostic, so multi-host is a deploy question,
+//! not a code one.
+
+pub mod driver_net;
+pub mod executor;
+pub mod ops;
+pub mod wire;
+
+pub use driver_net::DistCluster;
+pub use executor::{serve, ExecutorConfig};

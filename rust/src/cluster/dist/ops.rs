@@ -1,0 +1,353 @@
+//! Ser/de between [`GridOp`] descriptors and wire bytes.
+//!
+//! The driver encodes an op (kind byte + scalars + the borrowed state
+//! payloads) straight out of the coordinator's workspaces; the executor
+//! decodes into a reusable [`OpBuf`] — owned buffers that live across
+//! supersteps — and re-borrows it as a [`GridOp`] for the shared
+//! interpreter ([`GridOp::exec_task`]).  Payloads are f32/i32 arrays
+//! that round-trip by bit pattern, which is half of the dist-vs-sim
+//! bitwise-parity guarantee (the other half is the task-index output
+//! layout).
+
+use crate::cluster::GridOp;
+use crate::loss::Loss;
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Result};
+
+const OP_SDCA: u8 = 1;
+const OP_ATX: u8 = 2;
+const OP_MARGINS: u8 = 3;
+const OP_GRAD: u8 = 4;
+const OP_SVRG: u8 = 5;
+const OP_ADMM_PROJECT: u8 = 6;
+const OP_PROX_HINGE: u8 = 7;
+
+fn loss_to_u8(l: Loss) -> u8 {
+    match l {
+        Loss::Hinge => 0,
+        Loss::Logistic => 1,
+        Loss::Squared => 2,
+    }
+}
+
+fn loss_from_u8(v: u8) -> Result<Loss> {
+    Ok(match v {
+        0 => Loss::Hinge,
+        1 => Loss::Logistic,
+        2 => Loss::Squared,
+        other => bail!("unknown loss code {other}"),
+    })
+}
+
+/// Serialize one op descriptor (everything [`OpBuf::decode_into`] needs
+/// to reconstruct a [`GridOp`] borrow on the far side).
+pub fn encode_op(op: &GridOp<'_>, buf: &mut Vec<u8>) {
+    match op {
+        GridOp::Sdca { alpha, w, idx, idx_off, h, lamn, invq, beta } => {
+            bytes::put_u8(buf, OP_SDCA);
+            bytes::put_f32(buf, *lamn);
+            bytes::put_f32(buf, *invq);
+            bytes::put_f32(buf, *beta);
+            bytes::put_f32s(buf, alpha);
+            bytes::put_f32s(buf, w);
+            bytes::put_i32s(buf, idx);
+            bytes::put_pairs(buf, idx_off);
+            bytes::put_usizes(buf, h);
+        }
+        GridOp::Atx { v } => {
+            bytes::put_u8(buf, OP_ATX);
+            bytes::put_f32s(buf, v);
+        }
+        GridOp::Margins { w } => {
+            bytes::put_u8(buf, OP_MARGINS);
+            bytes::put_f32s(buf, w);
+        }
+        GridOp::Grad { loss, mt } => {
+            bytes::put_u8(buf, OP_GRAD);
+            bytes::put_u8(buf, loss_to_u8(*loss));
+            bytes::put_f32s(buf, mt);
+        }
+        GridOp::Svrg {
+            loss,
+            w,
+            mu,
+            mt,
+            windows,
+            idx,
+            idx_off,
+            batch,
+            eta,
+            lam,
+            tolerant,
+        } => {
+            bytes::put_u8(buf, OP_SVRG);
+            bytes::put_u8(buf, loss_to_u8(*loss));
+            bytes::put_u8(buf, u8::from(*tolerant));
+            bytes::put_usize(buf, *batch);
+            bytes::put_f32(buf, *eta);
+            bytes::put_f32(buf, *lam);
+            bytes::put_f32s(buf, w);
+            bytes::put_f32s(buf, mu);
+            bytes::put_f32s(buf, mt);
+            bytes::put_pairs(buf, windows);
+            bytes::put_i32s(buf, idx);
+            bytes::put_pairs(buf, idx_off);
+        }
+        GridOp::AdmmProject { w_hat, z_hat } => {
+            bytes::put_u8(buf, OP_ADMM_PROJECT);
+            bytes::put_f32s(buf, w_hat);
+            bytes::put_f32s(buf, z_hat);
+        }
+        GridOp::ProxHinge { c, rho, inv_n } => {
+            bytes::put_u8(buf, OP_PROX_HINGE);
+            bytes::put_f32(buf, *rho);
+            bytes::put_f32(buf, *inv_n);
+            bytes::put_f32s(buf, c);
+        }
+    }
+}
+
+/// Executor-side owned storage for a decoded op — reused across
+/// supersteps so the serve loop's steady state reallocates only when a
+/// payload grows.
+pub struct OpBuf {
+    kind: u8,
+    loss: Loss,
+    tolerant: bool,
+    batch: usize,
+    s1: f32,
+    s2: f32,
+    s3: f32,
+    f1: Vec<f32>,
+    f2: Vec<f32>,
+    f3: Vec<f32>,
+    idx: Vec<i32>,
+    idx_off: Vec<(usize, usize)>,
+    h: Vec<usize>,
+    windows: Vec<(usize, usize)>,
+}
+
+impl Default for OpBuf {
+    fn default() -> Self {
+        OpBuf {
+            kind: 0,
+            loss: Loss::Hinge,
+            tolerant: false,
+            batch: 0,
+            s1: 0.0,
+            s2: 0.0,
+            s3: 0.0,
+            f1: Vec::new(),
+            f2: Vec::new(),
+            f3: Vec::new(),
+            idx: Vec::new(),
+            idx_off: Vec::new(),
+            h: Vec::new(),
+            windows: Vec::new(),
+        }
+    }
+}
+
+impl OpBuf {
+    pub fn new() -> OpBuf {
+        OpBuf::default()
+    }
+
+    /// Decode one [`encode_op`] payload into this buffer.
+    pub fn decode_into(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.kind = r.u8()?;
+        match self.kind {
+            OP_SDCA => {
+                self.s1 = r.f32()?; // lamn
+                self.s2 = r.f32()?; // invq
+                self.s3 = r.f32()?; // beta
+                r.f32s_into(&mut self.f1)?; // alpha
+                r.f32s_into(&mut self.f2)?; // w
+                r.i32s_into(&mut self.idx)?;
+                r.pairs_into(&mut self.idx_off)?;
+                r.usizes_into(&mut self.h)?;
+            }
+            OP_ATX | OP_MARGINS => {
+                r.f32s_into(&mut self.f1)?;
+            }
+            OP_GRAD => {
+                self.loss = loss_from_u8(r.u8()?)?;
+                r.f32s_into(&mut self.f1)?; // mt
+            }
+            OP_SVRG => {
+                self.loss = loss_from_u8(r.u8()?)?;
+                self.tolerant = r.u8()? != 0;
+                self.batch = r.usize()?;
+                self.s1 = r.f32()?; // eta
+                self.s2 = r.f32()?; // lam
+                r.f32s_into(&mut self.f1)?; // w
+                r.f32s_into(&mut self.f2)?; // mu
+                r.f32s_into(&mut self.f3)?; // mt
+                r.pairs_into(&mut self.windows)?;
+                r.i32s_into(&mut self.idx)?;
+                r.pairs_into(&mut self.idx_off)?;
+            }
+            OP_ADMM_PROJECT => {
+                r.f32s_into(&mut self.f1)?; // w_hat
+                r.f32s_into(&mut self.f2)?; // z_hat
+            }
+            OP_PROX_HINGE => {
+                self.s1 = r.f32()?; // rho
+                self.s2 = r.f32()?; // inv_n
+                r.f32s_into(&mut self.f1)?; // c
+            }
+            other => bail!("unknown grid-op code {other}"),
+        }
+        Ok(())
+    }
+
+    /// Re-borrow the decoded payloads as the [`GridOp`] the interpreter
+    /// runs.
+    pub fn as_op(&self) -> Result<GridOp<'_>> {
+        Ok(match self.kind {
+            OP_SDCA => GridOp::Sdca {
+                alpha: &self.f1,
+                w: &self.f2,
+                idx: &self.idx,
+                idx_off: &self.idx_off,
+                h: &self.h,
+                lamn: self.s1,
+                invq: self.s2,
+                beta: self.s3,
+            },
+            OP_ATX => GridOp::Atx { v: &self.f1 },
+            OP_MARGINS => GridOp::Margins { w: &self.f1 },
+            OP_GRAD => GridOp::Grad { loss: self.loss, mt: &self.f1 },
+            OP_SVRG => GridOp::Svrg {
+                loss: self.loss,
+                w: &self.f1,
+                mu: &self.f2,
+                mt: &self.f3,
+                windows: &self.windows,
+                idx: &self.idx,
+                idx_off: &self.idx_off,
+                batch: self.batch,
+                eta: self.s1,
+                lam: self.s2,
+                tolerant: self.tolerant,
+            },
+            OP_ADMM_PROJECT => GridOp::AdmmProject { w_hat: &self.f1, z_hat: &self.f2 },
+            OP_PROX_HINGE => {
+                GridOp::ProxHinge { c: &self.f1, rho: self.s1, inv_n: self.s2 }
+            }
+            other => bail!("unknown grid-op code {other} (decode first)"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(op: &GridOp<'_>) -> OpBuf {
+        let mut buf = Vec::new();
+        encode_op(op, &mut buf);
+        let mut ob = OpBuf::new();
+        let mut r = ByteReader::new(&buf);
+        ob.decode_into(&mut r).unwrap();
+        assert!(r.is_empty(), "trailing bytes after {}", op.name());
+        ob
+    }
+
+    #[test]
+    fn sdca_round_trips() {
+        let alpha = vec![1.0f32, -2.5];
+        let w = vec![0.25f32; 3];
+        let idx = vec![0i32, 1, 0];
+        let idx_off = vec![(0usize, 2usize), (2, 1)];
+        let h = vec![4usize, 7];
+        let op = GridOp::Sdca {
+            alpha: &alpha,
+            w: &w,
+            idx: &idx,
+            idx_off: &idx_off,
+            h: &h,
+            lamn: 0.5,
+            invq: 0.25,
+            beta: 1.5,
+        };
+        let ob = round_trip(&op);
+        match ob.as_op().unwrap() {
+            GridOp::Sdca { alpha: a, w: ww, idx: i, idx_off: io, h: hh, lamn, invq, beta } => {
+                assert_eq!(a, &alpha[..]);
+                assert_eq!(ww, &w[..]);
+                assert_eq!(i, &idx[..]);
+                assert_eq!(io, &idx_off[..]);
+                assert_eq!(hh, &h[..]);
+                assert_eq!((lamn, invq, beta), (0.5, 0.25, 1.5));
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn svrg_round_trips_with_flags() {
+        let w = vec![1.0f32; 4];
+        let mu = vec![2.0f32; 4];
+        let mt = vec![3.0f32; 2];
+        let windows = vec![(0usize, 2usize), (2, 4)];
+        let idx = vec![1i32];
+        let idx_off = vec![(0usize, 1usize), (0, 1)];
+        let op = GridOp::Svrg {
+            loss: Loss::Logistic,
+            w: &w,
+            mu: &mu,
+            mt: &mt,
+            windows: &windows,
+            idx: &idx,
+            idx_off: &idx_off,
+            batch: 9,
+            eta: 0.1,
+            lam: 0.01,
+            tolerant: true,
+        };
+        let ob = round_trip(&op);
+        match ob.as_op().unwrap() {
+            GridOp::Svrg { loss, batch, tolerant, windows: ws, .. } => {
+                assert_eq!(loss, Loss::Logistic);
+                assert_eq!(batch, 9);
+                assert!(tolerant);
+                assert_eq!(ws, &windows[..]);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn single_payload_ops_round_trip() {
+        let v = vec![0.5f32, -0.5, f32::MIN_POSITIVE];
+        for (op, want) in [
+            (GridOp::Atx { v: &v }, "atx"),
+            (GridOp::Margins { w: &v }, "margins"),
+            (GridOp::Grad { loss: Loss::Hinge, mt: &v }, "grad"),
+            (GridOp::ProxHinge { c: &v, rho: 0.2, inv_n: 0.1 }, "prox-hinge"),
+        ] {
+            let ob = round_trip(&op);
+            let back = ob.as_op().unwrap();
+            assert_eq!(back.name(), want);
+        }
+        let wh = vec![1.0f32; 2];
+        let zh = vec![2.0f32; 3];
+        let ob = round_trip(&GridOp::AdmmProject { w_hat: &wh, z_hat: &zh });
+        match ob.as_op().unwrap() {
+            GridOp::AdmmProject { w_hat, z_hat } => {
+                assert_eq!(w_hat, &wh[..]);
+                assert_eq!(z_hat, &zh[..]);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn garbage_kind_rejected() {
+        let mut ob = OpBuf::new();
+        let mut r = ByteReader::new(&[42u8]);
+        assert!(ob.decode_into(&mut r).is_err());
+        assert!(OpBuf::new().as_op().is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! The length-prefixed binary wire protocol between the train driver and
+//! its executor processes.
+//!
+//! Every message is one frame:
+//!
+//! ```text
+//! [ body_len: u32 LE ][ tag: u8 ][ body: body_len bytes ]
+//! ```
+//!
+//! Message flow (tags in parentheses):
+//!
+//! | driver → executor        | executor → driver        | body |
+//! |--------------------------|--------------------------|------|
+//! | `Hello` (1)              |                          | magic, proto version, executor index, executor count |
+//! |                          | `HelloAck` (2)           | magic, proto version, worker threads |
+//! | `Stage` (3)              |                          | partition metadata + the executor's owned blocks |
+//! |                          | `StageAck` (4)           | — |
+//! | `PrepareAdmm` (5)        |                          | — (factor your cached blocks, off the clock) |
+//! |                          | `PrepareAdmmAck` (6)     | — |
+//! | `Step` (7)               |                          | step id + [`GridOp`](crate::cluster::GridOp) descriptor + state payloads |
+//! |                          | `StepResult` (8)         | step id + per-owned-task (index, seconds, result segment \| error) |
+//! | `Shutdown` (9)           |                          | — |
+//! |                          | `Bye` (10)               | — |
+//! | `Fatal` (11), either way |                          | message string |
+//!
+//! The handshake is versioned: both sides check the magic and protocol
+//! version before anything else, so a stale executor binary fails fast
+//! with a readable error instead of a deserialization panic.  Frame
+//! bodies use the [`crate::util::bytes`] little-endian codec; `f32`
+//! payloads round-trip by bit pattern (the parity tests assert final
+//! weights are bit-identical to the sim backend).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// "DDOP" — first field of both handshake messages.
+pub const PROTO_MAGIC: u32 = 0x4444_4F50;
+/// Bump on any frame-layout change.
+pub const PROTO_VERSION: u32 = 1;
+/// Ceiling on one frame body (guards a corrupt length prefix).
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Frame tags (see the module-level message table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tag {
+    Hello = 1,
+    HelloAck = 2,
+    Stage = 3,
+    StageAck = 4,
+    PrepareAdmm = 5,
+    PrepareAdmmAck = 6,
+    Step = 7,
+    StepResult = 8,
+    Shutdown = 9,
+    Bye = 10,
+    Fatal = 11,
+}
+
+impl Tag {
+    pub fn from_u8(v: u8) -> Result<Tag> {
+        Ok(match v {
+            1 => Tag::Hello,
+            2 => Tag::HelloAck,
+            3 => Tag::Stage,
+            4 => Tag::StageAck,
+            5 => Tag::PrepareAdmm,
+            6 => Tag::PrepareAdmmAck,
+            7 => Tag::Step,
+            8 => Tag::StepResult,
+            9 => Tag::Shutdown,
+            10 => Tag::Bye,
+            11 => Tag::Fatal,
+            other => bail!("unknown wire frame tag {other}"),
+        })
+    }
+}
+
+/// Write one frame; returns the total bytes put on the wire (header +
+/// body) so callers can account bytes-on-wire exactly.
+pub fn write_frame(w: &mut impl Write, tag: Tag, body: &[u8]) -> Result<usize> {
+    if body.len() > MAX_FRAME {
+        bail!("frame body of {} bytes exceeds MAX_FRAME", body.len());
+    }
+    let mut header = [0u8; 5];
+    header[..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    header[4] = tag as u8;
+    w.write_all(&header).context("write frame header")?;
+    w.write_all(body).context("write frame body")?;
+    w.flush().context("flush frame")?;
+    Ok(5 + body.len())
+}
+
+/// Read one frame into `buf` (reused across calls); returns the tag and
+/// the total bytes taken off the wire.
+pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<(Tag, usize)> {
+    let mut header = [0u8; 5];
+    r.read_exact(&mut header).context("read frame header")?;
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        bail!("incoming frame of {len} bytes exceeds MAX_FRAME (corrupt stream?)");
+    }
+    let tag = Tag::from_u8(header[4])?;
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf).with_context(|| format!("read {len}-byte {tag:?} body"))?;
+    Ok((tag, 5 + len))
+}
+
+/// Read a frame and insist on `want`; a `Fatal` frame is surfaced as the
+/// peer's error message, anything else as a protocol violation.
+pub fn expect_frame(r: &mut impl Read, buf: &mut Vec<u8>, want: Tag) -> Result<usize> {
+    let (tag, n) = read_frame(r, buf)?;
+    if tag == want {
+        return Ok(n);
+    }
+    if tag == Tag::Fatal {
+        let msg = crate::util::bytes::ByteReader::new(buf)
+            .str()
+            .unwrap_or_else(|_| "<unreadable>".into());
+        bail!("peer reported fatal error: {msg}");
+    }
+    bail!("protocol violation: wanted {want:?}, got {tag:?}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_round_trip() {
+        let mut wire_buf = Vec::new();
+        let n1 = write_frame(&mut wire_buf, Tag::Hello, b"abc").unwrap();
+        let n2 = write_frame(&mut wire_buf, Tag::Bye, b"").unwrap();
+        assert_eq!(n1, 8);
+        assert_eq!(n2, 5);
+        let mut cur = Cursor::new(wire_buf);
+        let mut body = Vec::new();
+        let (t1, r1) = read_frame(&mut cur, &mut body).unwrap();
+        assert_eq!((t1, r1), (Tag::Hello, 8));
+        assert_eq!(body, b"abc");
+        let (t2, r2) = read_frame(&mut cur, &mut body).unwrap();
+        assert_eq!((t2, r2), (Tag::Bye, 5));
+        assert!(body.is_empty());
+    }
+
+    #[test]
+    fn expect_frame_surfaces_fatal() {
+        let mut wire_buf = Vec::new();
+        let mut fatal_body = Vec::new();
+        crate::util::bytes::put_str(&mut fatal_body, "disk on fire");
+        write_frame(&mut wire_buf, Tag::Fatal, &fatal_body).unwrap();
+        let mut cur = Cursor::new(wire_buf);
+        let mut body = Vec::new();
+        let err = expect_frame(&mut cur, &mut body, Tag::StageAck).unwrap_err();
+        assert!(err.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn bad_tag_and_truncation_error() {
+        let mut cur = Cursor::new(vec![1, 0, 0, 0, 99, 0]);
+        let mut body = Vec::new();
+        assert!(read_frame(&mut cur, &mut body).is_err());
+        let mut cur2 = Cursor::new(vec![5, 0, 0, 0, 1, 0]); // promises 5, has 1
+        assert!(read_frame(&mut cur2, &mut body).is_err());
+    }
+
+    #[test]
+    fn all_tags_round_trip() {
+        for t in [
+            Tag::Hello,
+            Tag::HelloAck,
+            Tag::Stage,
+            Tag::StageAck,
+            Tag::PrepareAdmm,
+            Tag::PrepareAdmmAck,
+            Tag::Step,
+            Tag::StepResult,
+            Tag::Shutdown,
+            Tag::Bye,
+            Tag::Fatal,
+        ] {
+            assert_eq!(Tag::from_u8(t as u8).unwrap(), t);
+        }
+    }
+}

@@ -1,13 +1,33 @@
-//! The simulated cluster substrate and the superstep execution engine.
+//! The cluster substrates and the superstep execution engine.
 //!
-//! The paper's testbed is a 4-node × 8-core Spark/Hadoop cluster; here
-//! the *cost model* is simulated while the *work* is real
-//! (DESIGN.md §Substitutions):
+//! The paper's testbed is a 4-node × 8-core Spark/Hadoop cluster.  Two
+//! substrates run its superstep contract here, selected by
+//! [`ClusterMode`] and abstracted behind the [`ClusterBackend`] trait so
+//! `coordinator/{d3ca,radisa,admm}` are substrate-blind:
 //!
-//! * [`superstep::StepPlan`] + [`SimCluster::grid_step`] — the typed
-//!   superstep API every coordinator programs against: one independent
-//!   task per partition, executed for real on the worker pool, combined
-//!   in task order.
+//! * **sim** ([`SimBackend`]/[`SimCluster`], the default) — everything
+//!   in-process: the *cost model* is simulated while the *work* is real
+//!   (DESIGN.md §Substitutions);
+//! * **dist** ([`dist::DistCluster`] + `ddopt executor`) — a real
+//!   multi-process runtime: executor processes cache their grid blocks
+//!   once, then execute typed [`GridOp`] superstep descriptors shipped
+//!   over a length-prefixed TCP protocol ([`dist::wire`]), reporting
+//!   measured per-task seconds back into the *same* simulated-clock
+//!   accounting, plus real wall-clock and bytes-on-wire per superstep
+//!   ([`crate::metrics::WireRecord`]).  Final weights are bit-identical
+//!   to the sim backend at the same seed (`tests/dist_parity.rs`).
+//!
+//! The shared machinery:
+//!
+//! * [`backend::GridOp`] — the typed, shippable superstep descriptor:
+//!   which per-partition kernel to run plus the small state payloads it
+//!   borrows; task output positions are a pure function of the task
+//!   index and grid geometry, which is what makes runs bit-reproducible
+//!   across thread counts *and* substrates.
+//! * [`superstep::StepPlan`] + [`SimCluster::grid_step`] — the boxed
+//!   closure superstep API (tests, benches, and the legacy baseline):
+//!   one independent task per partition, executed for real on the worker
+//!   pool, combined in task order.
 //! * [`pool::WorkerPool`] — a persistent worker runtime: long-lived OS
 //!   worker threads (spawned once, parked between supersteps) execute
 //!   the per-partition tasks of each superstep via an epoch-fenced
@@ -29,15 +49,20 @@
 //!
 //! Every reported "time" in the scaling experiments (Figs. 5-6) is
 //! simulated cluster time = Σ superstep makespans + modeled communication;
-//! host wall time is reported separately and is what `threads` improves.
+//! host wall time is reported separately and is what `threads` (or, on
+//! the dist substrate, the executor fleet) improves.
 
+pub mod backend;
 pub mod comm;
+pub mod dist;
 pub mod pool;
 pub mod scenario;
 pub mod simtime;
 pub mod superstep;
 
+pub use backend::{ClusterBackend, GridOp, OpScratch, SimBackend};
 pub use comm::{tree_aggregate, tree_aggregate_f32, CommStats};
+pub use dist::DistCluster;
 pub use pool::WorkerPool;
 pub use scenario::{ClusterScenario, TaskFate, SPECULATION_CAP};
 pub use simtime::{
@@ -47,6 +72,66 @@ pub use superstep::{CostModel, PlanTask, StepPlan, TaskSlab};
 
 use anyhow::Result;
 
+/// Which substrate executes supersteps: everything in-process against the
+/// simulated cluster, or real executor processes over TCP.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum ClusterMode {
+    /// In-process execution, simulated cluster cost model (the default).
+    #[default]
+    Sim,
+    /// Real driver/executor processes: one TCP address per executor.
+    Dist(Vec<String>),
+}
+
+impl ClusterMode {
+    /// Parse a `--cluster` spec.  Valid forms:
+    ///
+    /// ```text
+    /// sim
+    /// dist:host:port[,host:port...]
+    /// ```
+    pub fn parse(s: &str) -> Result<ClusterMode> {
+        let s = s.trim();
+        if s == "sim" {
+            return Ok(ClusterMode::Sim);
+        }
+        if let Some(rest) = s.strip_prefix("dist:") {
+            let addrs: Vec<String> = rest
+                .split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect();
+            if addrs.is_empty() {
+                anyhow::bail!(
+                    "--cluster dist wants at least one executor address; valid forms are \
+                     `sim` or `dist:host:port[,host:port...]`"
+                );
+            }
+            for a in &addrs {
+                if !a.contains(':') {
+                    anyhow::bail!(
+                        "bad executor address '{a}' (want host:port); valid forms are \
+                         `sim` or `dist:host:port[,host:port...]`"
+                    );
+                }
+            }
+            return Ok(ClusterMode::Dist(addrs));
+        }
+        anyhow::bail!(
+            "unknown cluster mode '{s}'; valid forms are `sim` or \
+             `dist:host:port[,host:port...]`"
+        )
+    }
+
+    /// Human-readable label that round-trips through [`ClusterMode::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            ClusterMode::Sim => "sim".into(),
+            ClusterMode::Dist(addrs) => format!("dist:{}", addrs.join(",")),
+        }
+    }
+}
+
 /// Number of hardware threads on this host (the `threads` default).
 pub fn host_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -55,6 +140,8 @@ pub fn host_threads() -> usize {
 /// Cluster topology and cost-model parameters.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
+    /// Execution substrate: in-process sim (default) or TCP executors.
+    pub mode: ClusterMode,
     /// Simulated executor slots (the paper's K = up to 28 cores).
     pub cores: usize,
     /// Real worker threads used to execute tasks on this host
@@ -76,6 +163,7 @@ impl Default for ClusterConfig {
         // Latency/bandwidth defaults approximate a commodity GbE cluster
         // of the paper's era: 200 µs hop latency, ~1 Gb/s effective.
         ClusterConfig {
+            mode: ClusterMode::Sim,
             cores: 8,
             threads: host_threads(),
             latency: 200e-6,
@@ -116,6 +204,9 @@ pub struct SimCluster {
     speeds_key: (usize, u64, u64),
     /// Per-task durations of the superstep in flight (reused).
     dur_buf: Vec<f64>,
+    /// Burst-failure per-slot worst coins of the superstep in flight
+    /// (reused; empty unless the scenario has `failures:burst=executor`).
+    burst_buf: Vec<usize>,
     /// LPT scheduler working memory (reused).
     lpt: LptScratch,
 }
@@ -131,10 +222,24 @@ impl SimCluster {
             speeds: Vec::new(),
             speeds_key: (usize::MAX, 0, 0),
             dur_buf: Vec::new(),
+            burst_buf: Vec::new(),
             lpt: LptScratch::default(),
         };
         cluster.refresh_speeds();
         cluster
+    }
+
+    /// Precompute the superstep's burst-failure slot table (empty —
+    /// and allocation-free — unless the scenario runs
+    /// `failures:burst=executor`): one O(n_tasks) pass here keeps the
+    /// per-task perturbation O(1) instead of re-walking slot peers.
+    fn refresh_burst(&mut self, step: usize, n_tasks: usize) {
+        self.config.scenario.burst_slots_into(
+            step,
+            n_tasks,
+            self.config.cores,
+            &mut self.burst_buf,
+        );
     }
 
     /// Key of the inputs `speeds` was computed from.
@@ -202,6 +307,8 @@ impl SimCluster {
         self.refresh_speeds();
         let step = self.clock.supersteps();
         let timed = self.pool.run(plan.into_tasks());
+        let n_tasks = timed.len();
+        self.refresh_burst(step, n_tasks);
         self.dur_buf.clear();
         let mut out = Vec::with_capacity(timed.len());
         let mut first_err = None;
@@ -211,7 +318,14 @@ impl SimCluster {
                 CostModel::Measured => measured,
                 CostModel::Fixed(s) => s,
             };
-            let fate = self.config.scenario.perturb(step, task, base, tolerant);
+            let fate = self.config.scenario.perturb_slotted(
+                step,
+                task,
+                self.config.cores,
+                &self.burst_buf,
+                base,
+                tolerant,
+            );
             self.dur_buf.push(fate.duration);
             stragglers += usize::from(fate.straggled);
             failures += fate.extra_attempts;
@@ -294,13 +408,21 @@ impl SimCluster {
     /// perturb the measured durations in `dur_buf`, schedule them LPT over
     /// the cached slot speeds, and advance the clock.
     fn charge_superstep(&mut self, step: usize, n_tasks: usize, tolerant: bool) {
+        self.refresh_burst(step, n_tasks);
         let (mut stragglers, mut failures) = (0usize, 0usize);
         for task in 0..n_tasks {
             let base = match self.config.cost {
                 CostModel::Measured => self.dur_buf[task],
                 CostModel::Fixed(s) => s,
             };
-            let fate = self.config.scenario.perturb(step, task, base, tolerant);
+            let fate = self.config.scenario.perturb_slotted(
+                step,
+                task,
+                self.config.cores,
+                &self.burst_buf,
+                base,
+                tolerant,
+            );
             self.dur_buf[task] = fate.duration;
             stragglers += usize::from(fate.straggled);
             failures += fate.extra_attempts;
@@ -308,6 +430,21 @@ impl SimCluster {
         let makespan = lpt_makespan_hetero_with(&mut self.lpt, &self.dur_buf, &self.speeds);
         self.clock.add_compute(makespan);
         self.clock.add_injections(stragglers, failures);
+    }
+
+    /// Charge one superstep whose per-task durations were measured
+    /// *elsewhere* (the distributed backend's executors report real task
+    /// times over the wire): identical scenario perturbation, LPT
+    /// scheduling and clock accounting as [`SimCluster::grid_step_into`].
+    pub(crate) fn charge_measured(&mut self, durations: &[f64], tolerant: bool) {
+        if durations.is_empty() {
+            return;
+        }
+        self.refresh_speeds();
+        let step = self.clock.supersteps();
+        self.dur_buf.clear();
+        self.dur_buf.extend_from_slice(durations);
+        self.charge_superstep(step, durations.len(), tolerant);
     }
 
     /// In-place grouped treeAggregate over a workspace slab: segment `k`
@@ -758,5 +895,46 @@ mod tests {
         let mut c = SimCluster::new(ClusterConfig::default());
         let s = c.reduce_sum(vec![]);
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn cluster_mode_parses_and_round_trips() {
+        assert_eq!(ClusterMode::parse("sim").unwrap(), ClusterMode::Sim);
+        let m = ClusterMode::parse("dist:127.0.0.1:7001,127.0.0.1:7002").unwrap();
+        assert_eq!(
+            m,
+            ClusterMode::Dist(vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()])
+        );
+        assert_eq!(ClusterMode::parse(&m.label()).unwrap(), m);
+        assert_eq!(ClusterMode::default(), ClusterMode::Sim);
+    }
+
+    #[test]
+    fn cluster_mode_rejects_bad_specs_with_valid_forms() {
+        for bad in ["spark", "dist:", "dist:nohostport", "distant:1:2"] {
+            let err = ClusterMode::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("dist:host:port"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn burst_failures_charge_at_least_iid() {
+        // the grid paths feed (n_tasks, cores) context to the scenario, so
+        // burst=executor must inflate (never deflate) the failure count
+        let run = |spec: &str| -> usize {
+            let mut config = cfg(1, 3);
+            config.cost = CostModel::Fixed(1e-3);
+            config.scenario = ClusterScenario::parse(spec).unwrap();
+            let mut c = SimCluster::new(config);
+            let mut plan: StepPlan<'_, usize> = StepPlan::new();
+            for i in 0..9usize {
+                plan.task(move || Ok(i));
+            }
+            let _ = c.grid_step(plan).unwrap();
+            c.clock.failures()
+        };
+        let iid = run("failures:p=0.5,retries=2,seed=4");
+        let burst = run("failures:p=0.5,retries=2,burst=executor,seed=4");
+        assert!(burst >= iid, "burst {burst} < iid {iid}");
     }
 }

@@ -14,7 +14,13 @@
 //!   RADiSA-avg's "do not wait for stragglers" design targets;
 //! * **failures** — each task independently fails and is re-executed from
 //!   scratch (Spark-style lineage recompute), re-charging its full cost
-//!   per attempt, capped at `max_retries` extra attempts;
+//!   per attempt, capped at `max_retries` extra attempts.  With
+//!   `burst=executor` the failure is *correlated*: any task whose i.i.d.
+//!   coin fails marks its whole executor slot as dying for that
+//!   superstep, and every task scheduled on that slot re-runs (a dying
+//!   node fails all its tasks, not a random subset) — so at the same
+//!   seed and rate, burst mode never injects fewer failures than the
+//!   i.i.d. coins do;
 //! * **speculative execution** — optional Spark-style backup copies: a
 //!   straggling task's multiplier is capped at [`SPECULATION_CAP`] (the
 //!   backup launches when the task overruns its expected duration and
@@ -60,6 +66,18 @@ pub struct TaskFate {
     pub extra_attempts: usize,
 }
 
+/// How a perturbation call learns which tasks share an executor slot
+/// (only burst-mode failures care).
+enum BurstCtx<'a> {
+    /// No slot information: failures stay i.i.d. per task.
+    Iid,
+    /// Slot peers recomputed on the fly (tests / one-off calls).
+    Grid { n_tasks: usize, cores: usize },
+    /// Per-slot worst coins precomputed once per superstep
+    /// ([`ClusterScenario::burst_slots_into`]) — the hot-loop path.
+    Slots { cores: usize, slots: &'a [usize] },
+}
+
 /// A deterministic cluster-condition scenario (see module docs).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterScenario {
@@ -78,6 +96,11 @@ pub struct ClusterScenario {
     pub failure_p: f64,
     /// Maximum extra attempts charged per task.
     pub max_retries: usize,
+    /// Correlated failures (`failures:...,burst=executor`): a failing
+    /// task takes its whole executor slot down for the superstep, so
+    /// every task on that slot fails too.  `false` = i.i.d. per-task
+    /// coins (the default).
+    pub failure_burst: bool,
     /// Spark-style speculative re-execution (see module docs).
     pub speculative: bool,
     /// Scenario seed — injections are a pure function of
@@ -95,6 +118,7 @@ impl Default for ClusterScenario {
             straggler_shape: 0.0,
             failure_p: 0.0,
             max_retries: 3,
+            failure_burst: false,
             speculative: false,
             seed: 0,
         }
@@ -120,7 +144,7 @@ impl ClusterScenario {
     /// ideal
     /// stragglers:p=0.1,slow=10x[,shape=1.5][,seed=7][,spec]
     /// hetero:frac=0.25,speed=0.5
-    /// failures:p=0.05[,retries=3][,seed=7][,spec]
+    /// failures:p=0.05[,retries=3][,burst=executor][,seed=7][,spec]
     /// stragglers:p=0.1,slow=4x+failures:p=0.02
     /// ```
     pub fn parse(spec: &str) -> Result<ClusterScenario> {
@@ -194,6 +218,15 @@ impl ClusterScenario {
                                 }
                                 sc.max_retries = v;
                             }
+                            "burst" => {
+                                sc.failure_burst = match val {
+                                    "executor" => true,
+                                    "iid" | "" => false,
+                                    other => bail!(
+                                        "failures.burst must be 'executor' or 'iid', got '{other}'"
+                                    ),
+                                };
+                            }
                             "seed" => sc.seed = val.parse().map_err(|_| bad(key, val))?,
                             "spec" => sc.speculative = parse_switch(val)?,
                             other => bail!("unknown failures parameter '{other}'"),
@@ -201,7 +234,11 @@ impl ClusterScenario {
                     }
                 }
                 other => bail!(
-                    "unknown scenario '{other}' (expected ideal, stragglers, hetero or failures)"
+                    "unknown scenario '{other}'; valid forms are `ideal`, \
+                     `stragglers:p=P,slow=Nx[,shape=S][,seed=K][,spec]`, \
+                     `hetero:frac=F,speed=S`, \
+                     `failures:p=P[,retries=R][,burst=executor][,seed=K][,spec]`, \
+                     joined with `+`"
                 ),
             }
         }
@@ -238,6 +275,9 @@ impl ClusterScenario {
                 "failures:p={},retries={}",
                 self.failure_p, self.max_retries
             );
+            if self.failure_burst {
+                s.push_str(",burst=executor");
+            }
             // `spec` is a per-scenario switch; emit it once, in whichever
             // clause comes first, so the label re-parses to the same value
             if self.speculative && self.straggler_p <= 0.0 {
@@ -271,10 +311,102 @@ impl ClusterScenario {
     /// `(seed, step, task)`; `tolerant` supersteps keep the base duration
     /// (injections are counted but not waited for — see module docs).
     ///
+    /// This entry always uses i.i.d. per-task failure coins; the grid
+    /// paths call [`ClusterScenario::perturb_grid`], which additionally
+    /// honors `burst=executor` by correlating the coins across the tasks
+    /// of one executor slot.
+    ///
     /// Non-finite or negative base costs are clamped to 0 (see
     /// [`super::simtime::lpt_makespan_hetero`] for the same policy on the
     /// scheduler side).
     pub fn perturb(&self, step: usize, task: usize, base: f64, tolerant: bool) -> TaskFate {
+        self.perturb_impl(step, task, BurstCtx::Iid, base, tolerant)
+    }
+
+    /// [`ClusterScenario::perturb`] with the superstep's grid context
+    /// (`n_tasks` tasks round-robined over `cores` executor slots), which
+    /// `burst=executor` needs to know which tasks share a slot.  Without
+    /// burst mode this is bit-identical to `perturb`.
+    ///
+    /// Recomputes the slot's peer coins per call (O(n_tasks / cores)) —
+    /// convenient for tests; the per-superstep hot loops precompute the
+    /// slot table once with [`ClusterScenario::burst_slots_into`] and use
+    /// [`ClusterScenario::perturb_slotted`] instead.
+    pub fn perturb_grid(
+        &self,
+        step: usize,
+        task: usize,
+        n_tasks: usize,
+        cores: usize,
+        base: f64,
+        tolerant: bool,
+    ) -> TaskFate {
+        self.perturb_impl(step, task, BurstCtx::Grid { n_tasks, cores }, base, tolerant)
+    }
+
+    /// Precompute burst mode's per-slot worst i.i.d. coin for one
+    /// superstep: `out[slot] = max over tasks on slot of iid attempts`.
+    /// One O(n_tasks) pass, so a whole superstep's perturbation stays
+    /// O(n_tasks) instead of O(n_tasks² / cores).  Leaves `out` empty
+    /// when burst failures are off (the i.i.d. fast path).
+    pub fn burst_slots_into(
+        &self,
+        step: usize,
+        n_tasks: usize,
+        cores: usize,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        if !self.failure_burst || self.failure_p <= 0.0 || n_tasks == 0 {
+            return;
+        }
+        let cores = cores.max(1);
+        out.resize(cores, 0);
+        for task in 0..n_tasks {
+            let slot = task % cores;
+            out[slot] = out[slot].max(self.iid_attempts(step, task));
+        }
+    }
+
+    /// [`ClusterScenario::perturb_grid`] with the per-slot burst table
+    /// precomputed by [`ClusterScenario::burst_slots_into`] (an empty
+    /// table means no burst — plain i.i.d. coins).  Bit-identical fates
+    /// to `perturb_grid` at the same `(step, n_tasks, cores)`.
+    pub fn perturb_slotted(
+        &self,
+        step: usize,
+        task: usize,
+        cores: usize,
+        slots: &[usize],
+        base: f64,
+        tolerant: bool,
+    ) -> TaskFate {
+        if slots.is_empty() {
+            self.perturb_impl(step, task, BurstCtx::Iid, base, tolerant)
+        } else {
+            self.perturb_impl(step, task, BurstCtx::Slots { cores, slots }, base, tolerant)
+        }
+    }
+
+    /// Extra attempts of one task's i.i.d. failure coin sequence.
+    fn iid_attempts(&self, step: usize, task: usize) -> usize {
+        let root = Xoshiro::new(self.seed);
+        let mut rng = root.substream(TAG_FAILURE, step as u64, task as u64);
+        let mut extra = 0usize;
+        while extra < self.max_retries && rng.f64() < self.failure_p {
+            extra += 1;
+        }
+        extra
+    }
+
+    fn perturb_impl(
+        &self,
+        step: usize,
+        task: usize,
+        burst: BurstCtx<'_>,
+        base: f64,
+        tolerant: bool,
+    ) -> TaskFate {
         let base = if base.is_finite() && base > 0.0 { base } else { 0.0 };
         let mut duration = base;
         let mut straggled = false;
@@ -305,10 +437,30 @@ impl ClusterScenario {
         }
 
         if self.failure_p > 0.0 {
-            let mut rng = root.substream(TAG_FAILURE, step as u64, task as u64);
-            while extra < self.max_retries && rng.f64() < self.failure_p {
-                extra += 1;
-            }
+            // a dying executor fails *all* its tasks: in burst mode every
+            // task on a slot (round-robin task % cores) inherits the
+            // worst i.i.d. coin of the slot, so the burst fate is a
+            // per-slot superset of the i.i.d. fates — never fewer
+            // injected failures at the same seed and rate (pinned by a
+            // property test).
+            extra = match burst {
+                BurstCtx::Slots { cores, slots } if self.failure_burst => {
+                    // the table already folds this task's own coin in —
+                    // no per-task coin walk on the precomputed path
+                    slots[task % cores.max(1)]
+                }
+                BurstCtx::Grid { n_tasks, cores } if self.failure_burst => {
+                    let cores = cores.max(1);
+                    let mut worst = self.iid_attempts(step, task);
+                    let mut peer = task % cores;
+                    while peer < n_tasks {
+                        worst = worst.max(self.iid_attempts(step, peer));
+                        peer += cores;
+                    }
+                    worst
+                }
+                _ => self.iid_attempts(step, task),
+            };
             let charged = if self.speculative { extra.min(1) } else { extra };
             if !tolerant {
                 // each failed attempt re-ran the (possibly straggling)
@@ -508,6 +660,77 @@ mod tests {
     }
 
     #[test]
+    fn burst_parses_and_rejects_bad_values() {
+        let sc = ClusterScenario::parse("failures:p=0.2,burst=executor").unwrap();
+        assert!(sc.failure_burst);
+        let sc = ClusterScenario::parse("failures:p=0.2,burst=iid").unwrap();
+        assert!(!sc.failure_burst);
+        assert!(ClusterScenario::parse("failures:p=0.2,burst=rack").is_err());
+    }
+
+    #[test]
+    fn burst_fails_whole_executor_slots() {
+        let iid = ClusterScenario::parse("failures:p=0.4,retries=2,seed=7").unwrap();
+        let burst =
+            ClusterScenario::parse("failures:p=0.4,retries=2,burst=executor,seed=7").unwrap();
+        let (n_tasks, cores) = (12usize, 4usize);
+        for step in 0..6 {
+            // every slot's tasks share one fate: the worst i.i.d. coin
+            for slot in 0..cores {
+                let mut worst = 0usize;
+                let mut t = slot;
+                while t < n_tasks {
+                    worst = worst.max(iid.perturb(step, t, 1.0, false).extra_attempts);
+                    t += cores;
+                }
+                let mut t = slot;
+                while t < n_tasks {
+                    let fate = burst.perturb_grid(step, t, n_tasks, cores, 1.0, false);
+                    assert_eq!(fate.extra_attempts, worst, "step {step} task {t}");
+                    t += cores;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slotted_burst_matches_on_the_fly_burst() {
+        // the O(n_tasks) precomputed slot table must produce exactly the
+        // fates the per-task peer walk does — for burst and non-burst
+        for spec in [
+            "failures:p=0.35,retries=3,burst=executor,seed=9",
+            "failures:p=0.35,retries=3,seed=9",
+            "failures:p=0.5,burst=executor,seed=2+stragglers:p=0.3,slow=4x",
+        ] {
+            let sc = ClusterScenario::parse(spec).unwrap();
+            for (n_tasks, cores) in [(1usize, 1usize), (9, 4), (12, 5), (6, 8)] {
+                let mut slots = Vec::new();
+                for step in 0..3 {
+                    sc.burst_slots_into(step, n_tasks, cores, &mut slots);
+                    for task in 0..n_tasks {
+                        let a = sc.perturb_grid(step, task, n_tasks, cores, 1.0, false);
+                        let b = sc.perturb_slotted(step, task, cores, &slots, 1.0, false);
+                        assert_eq!(a, b, "{spec} step={step} task={task}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn burst_without_grid_context_degrades_to_iid() {
+        let burst =
+            ClusterScenario::parse("failures:p=0.5,burst=executor,seed=3").unwrap();
+        let iid = ClusterScenario { failure_burst: false, ..burst.clone() };
+        for task in 0..32 {
+            assert_eq!(
+                burst.perturb(1, task, 1.0, false),
+                iid.perturb(1, task, 1.0, false)
+            );
+        }
+    }
+
+    #[test]
     fn non_finite_base_is_clamped() {
         let sc = ClusterScenario::parse("stragglers:p=1,slow=10x").unwrap();
         assert_eq!(sc.perturb(0, 0, f64::NAN, false).duration, 0.0);
@@ -523,6 +746,7 @@ mod tests {
             "hetero:frac=0.25,speed=0.5",
             "failures:p=0.05",
             "failures:p=0.05,spec",
+            "failures:p=0.1,burst=executor",
             "stragglers:p=0.2,slow=4x+failures:p=0.1",
         ] {
             let sc = ClusterScenario::parse(spec).unwrap();

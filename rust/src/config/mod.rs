@@ -38,9 +38,11 @@ pub struct ExperimentConfig {
     pub rho: f32,
     /// Cluster cost model + execution: JSON keys `cores` (simulated
     /// executor slots), `threads` (host worker threads for the superstep
-    /// engine; defaults to the host's hardware parallelism), and
-    /// `scenario` (a cluster-condition spec string, same grammar as the
-    /// CLI `--scenario` flag — e.g. `"stragglers:p=0.1,slow=10x"`).
+    /// engine; defaults to the host's hardware parallelism), `scenario`
+    /// (a cluster-condition spec string, same grammar as the CLI
+    /// `--scenario` flag — e.g. `"stragglers:p=0.1,slow=10x"`), and
+    /// `cluster` (execution substrate, same grammar as `--cluster`:
+    /// `"sim"` or `"dist:host:port[,host:port...]"`).
     pub cluster: ClusterConfig,
     pub backend: String, // "native" | "xla"
 }
@@ -138,6 +140,10 @@ impl ExperimentConfig {
             // same spec grammar as the CLI --scenario flag
             c.cluster.scenario = crate::cluster::ClusterScenario::parse(x)?;
         }
+        if let Some(x) = v.get("cluster").and_then(|x| x.as_str()) {
+            // same spec grammar as the CLI --cluster flag
+            c.cluster.mode = crate::cluster::ClusterMode::parse(x)?;
+        }
         if let Some(x) = v.get("backend").and_then(|x| x.as_str()) {
             if x != "native" && x != "xla" {
                 bail!("unknown backend '{x}'");
@@ -205,6 +211,25 @@ mod tests {
         assert!(c.cluster.scenario.is_ideal());
         assert!(ExperimentConfig::from_json(
             &Json::parse(r#"{"scenario":"warp:9"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cluster_mode_defaults_to_sim_and_parses_dist() {
+        use crate::cluster::ClusterMode;
+        let c = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(c.cluster.mode, ClusterMode::Sim);
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"cluster":"dist:127.0.0.1:7001,127.0.0.1:7002"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            c.cluster.mode,
+            ClusterMode::Dist(vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()])
+        );
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"cluster":"spark://"}"#).unwrap()
         )
         .is_err());
     }

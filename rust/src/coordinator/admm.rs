@@ -12,7 +12,9 @@
 //!      s_pq − ůz_pq) — the graph projection through the **cached**
 //!      Cholesky factor of (I + x x ᵀ) (the paper excludes this one-time
 //!      factorization from reported times; so do we: it happens in
-//!      `init`, off the clock);
+//!      `init` via [`ClusterBackend::prepare_admm`], off the clock, and
+//!      the factors live where the blocks live — in-process on the sim
+//!      backend, on the executor processes on the dist backend);
 //!   2. feature consensus + ridge prox:
 //!      w_q ← (ρP/(λ+ρP)) · avg_p(w_pq + ůw_pq);
 //!   3. response sharing + hinge prox (exchange trick):
@@ -21,24 +23,21 @@
 //!   4. scaled dual updates  ůw_pq += w_pq − w_q,  ůz_pq += z_pq − s_pq.
 //!
 //! The graph projections (one task per partition) and the hinge proxes
-//! (one task per row partition) are supersteps on the zero-allocation
-//! path ([`SimCluster::grid_step_into`](crate::cluster::SimCluster::grid_step_into)):
-//! a persistent [`AdmmWorkspace`] holds the ŵ/ẑ input slabs, the
-//! projection output slabs, and per-worker solve scratch, and the
+//! (one task per row partition) are typed [`GridOp`] supersteps on the
+//! active [`ClusterBackend`]: a persistent [`AdmmWorkspace`] holds the
+//! ŵ/ẑ input slabs and the projection output slabs, and the
 //! consensus/sharing collectives reduce in place on those slabs
-//! ([`SimCluster::reduce_segments`](crate::cluster::SimCluster::reduce_segments)),
-//! so iterations after the first allocate nothing at any `threads`
-//! setting (the persistent worker pool dispatches supersteps to its
-//! long-lived threads without spawning).
+//! ([`ClusterBackend::reduce_segments`]), so iterations after the first
+//! allocate nothing on the sim backend at any `threads` setting.
 //!
 //! Standard two-block convex ADMM ⇒ convergence to the global optimum;
 //! the integration tests verify the gap against `f*` shrinks.
 
 use super::driver::Optimizer;
-use crate::cluster::{SimCluster, TaskSlab};
+use crate::cluster::{ClusterBackend, GridOp};
 use crate::data::Partitioned;
 use crate::loss::Loss;
-use crate::runtime::{FactorHandle, StagedGrid};
+use crate::runtime::StagedGrid;
 use anyhow::Result;
 
 #[derive(Clone, Debug)]
@@ -54,13 +53,9 @@ impl Default for AdmmConfig {
     }
 }
 
-/// Per-worker scratch: the Cholesky solve's RHS (length max n_p).
-struct AdmmScratch {
-    t: Vec<f32>,
-}
-
 /// Persistent per-run working memory — allocated once in `init`, reused
-/// by every iteration (steady state allocates nothing).
+/// by every iteration (steady state allocates nothing).  Per-worker
+/// solve scratch and the cached Cholesky factors live backend-side.
 struct AdmmWorkspace {
     /// ŵ inputs, overwritten with the consensus parts after projection:
     /// task (p,q) at `p*m + c0(q)`, length m_q.
@@ -77,17 +72,14 @@ struct AdmmWorkspace {
     c_tot: Vec<f32>,
     /// Prox outputs v_p, length n.
     vs: Vec<f32>,
-    /// One scratch cell per worker thread.
-    scratch: Vec<AdmmScratch>,
 }
 
 pub struct Admm {
     cfg: AdmmConfig,
-    w: Vec<f32>,                 // consensus primal, concatenated over q
-    s: Vec<Vec<f32>>,            // s_pq shares, indexed [p*Q+q][n_p]
-    uw: Vec<Vec<f32>>,           // scaled duals for w consensus [p*Q+q][m_q]
-    uz: Vec<Vec<f32>>,           // scaled duals for z shares    [p*Q+q][n_p]
-    factors: Vec<FactorHandle>,  // cached graph-projection factors
+    w: Vec<f32>,      // consensus primal, concatenated over q
+    s: Vec<Vec<f32>>, // s_pq shares, indexed [p*Q+q][n_p]
+    uw: Vec<Vec<f32>>, // scaled duals for w consensus [p*Q+q][m_q]
+    uz: Vec<Vec<f32>>, // scaled duals for z shares    [p*Q+q][n_p]
     ws: Option<AdmmWorkspace>,
 }
 
@@ -99,7 +91,6 @@ impl Admm {
             s: Vec::new(),
             uw: Vec::new(),
             uz: Vec::new(),
-            factors: Vec::new(),
             ws: None,
         }
     }
@@ -118,37 +109,40 @@ impl Optimizer for Admm {
         self.cfg.lambda
     }
 
-    fn init(&mut self, staged: &StagedGrid<'_>, cluster: &mut SimCluster) -> Result<()> {
+    fn init(
+        &mut self,
+        staged: &StagedGrid<'_>,
+        cluster: &mut dyn ClusterBackend,
+    ) -> Result<()> {
         let part = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
         self.w = vec![0.0; part.m];
         self.s.clear();
         self.uw.clear();
         self.uz.clear();
-        self.factors.clear();
         for p in 0..pp {
-            for q in 0..qq {
+            for _q in 0..qq {
                 let n_p = part.n_p(p);
-                let m_q = part.m_q(q);
                 self.s.push(vec![0.0; n_p]);
-                self.uw.push(vec![0.0; m_q]);
                 self.uz.push(vec![0.0; n_p]);
-                // Cached factorization — mirrors the paper's accounting:
-                // "the Cholesky factorization ... is computed once and
-                // cached"; excluded from iteration timings.
-                self.factors.push(staged.admm_factor(p, q)?);
             }
         }
+        for _p in 0..pp {
+            for q in 0..qq {
+                self.uw.push(vec![0.0; part.m_q(q)]);
+            }
+        }
+        // Cached factorizations — mirrors the paper's accounting: "the
+        // Cholesky factorization ... is computed once and cached";
+        // excluded from iteration timings.  The backend owns them (the
+        // dist backend has each executor factor its own cached blocks).
+        cluster.prepare_admm(staged)?;
         let mut z_off = Vec::with_capacity(pp);
         let mut acc = 0usize;
         for p in 0..pp {
             z_off.push(acc);
             acc += qq * part.n_p(p);
         }
-        let max_np = (0..pp).map(|p| part.n_p(p)).max().unwrap_or(0);
-        let scratch = (0..cluster.threads())
-            .map(|_| AdmmScratch { t: vec![0.0; max_np] })
-            .collect();
         self.ws = Some(AdmmWorkspace {
             w_hat: vec![0.0; pp * part.m],
             z_hat: vec![0.0; acc],
@@ -157,7 +151,6 @@ impl Optimizer for Admm {
             z_loc: vec![0.0; acc],
             c_tot: vec![0.0; part.n],
             vs: vec![0.0; part.n],
-            scratch,
         });
         Ok(())
     }
@@ -166,7 +159,7 @@ impl Optimizer for Admm {
         &mut self,
         _t: usize,
         staged: &StagedGrid<'_>,
-        cluster: &mut SimCluster,
+        cluster: &mut dyn ClusterBackend,
     ) -> Result<()> {
         let part: &Partitioned = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
@@ -203,24 +196,13 @@ impl Optimizer for Admm {
         // 1. graph projections (the per-iteration hot spot) — one
         // superstep over the grid, outputs in the (p,q) slabs
         {
-            let w_out = TaskSlab::new(&mut ws.w_loc);
-            let z_out = TaskSlab::new(&mut ws.z_loc);
-            let w_hat: &[f32] = &ws.w_hat;
-            let z_hat: &[f32] = &ws.z_hat;
-            let z_off: &[usize] = &ws.z_off;
-            let factors = &self.factors;
-            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, sc| {
-                let (p, q) = (task / qq, task % qq);
-                let (c0, c1) = part.col_ranges[q];
-                let n_p = part.n_p(p);
-                let wh = &w_hat[p * m + c0..p * m + c1];
-                let zh = &z_hat[z_off[p] + q * n_p..z_off[p] + (q + 1) * n_p];
-                // SAFETY: both segments are derived from the task index
-                // alone and disjoint across tasks.
-                let wo = unsafe { w_out.segment(p * m + c0, c1 - c0) };
-                let zo = unsafe { z_out.segment(z_off[p] + q * n_p, n_p) };
-                staged.admm_project_into(p, q, &factors[task], wh, zh, wo, zo, &mut sc.t)
-            })?;
+            let (w_hat, z_hat) = (&ws.w_hat, &ws.z_hat);
+            cluster.grid_exec(
+                staged,
+                GridOp::AdmmProject { w_hat, z_hat },
+                &mut ws.w_loc,
+                &mut ws.z_loc,
+            )?;
         }
 
         // 2. feature consensus + ridge prox: overwrite the ŵ slab with
@@ -266,14 +248,12 @@ impl Optimizer for Admm {
         {
             let rho_q = rho / qq as f32;
             let inv_n = 1.0 / part.n as f32;
-            let vs = TaskSlab::new(&mut ws.vs);
-            let c_tot: &[f32] = &ws.c_tot;
-            cluster.grid_step_into(pp, false, &mut ws.scratch, |p, _sc| {
-                let (r0, r1) = part.row_ranges[p];
-                // SAFETY: row ranges are disjoint per task.
-                let out = unsafe { vs.segment(r0, r1 - r0) };
-                staged.prox_hinge_into(p, &c_tot[r0..r1], rho_q, inv_n, out)
-            })?;
+            cluster.grid_exec(
+                staged,
+                GridOp::ProxHinge { c: &ws.c_tot, rho: rho_q, inv_n },
+                &mut ws.vs,
+                &mut [],
+            )?;
         }
         for p in 0..pp {
             let (r0, r1) = part.row_ranges[p];

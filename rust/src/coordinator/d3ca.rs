@@ -12,17 +12,20 @@
 //!    treeAggregate over the observation partitions of each feature
 //!    block).
 //!
-//! All per-partition execution flows through the zero-allocation superstep
-//! path ([`SimCluster::grid_step_into`](crate::cluster::SimCluster::grid_step_into)):
-//! a persistent [`D3caWorkspace`] holds the Δα and contribution slabs, the
-//! per-task index streams, and per-worker SDCA scratch, so iterations
-//! after the first allocate nothing *at any `threads` setting* (the
-//! persistent worker pool dispatches supersteps to its long-lived
-//! threads without spawning) — §V's "primal vector computation
-//! bottleneck" is all compute, no allocator churn.  Reductions happen in
-//! place on the slabs ([`SimCluster::reduce_segments`](crate::cluster::SimCluster::reduce_segments))
-//! with the same binary-tree combine order (and comm charges) as the
-//! boxed `reduce_over_*` path, so iterates and clocks stay bit-identical.
+//! Each superstep is a typed [`GridOp`] descriptor handed to the active
+//! [`ClusterBackend`]: on the sim backend it runs on the in-process
+//! worker pool through the zero-allocation path
+//! ([`SimCluster::grid_step_into`](crate::cluster::SimCluster::grid_step_into));
+//! on the dist backend the same descriptor (plus the small α/w/index
+//! payloads it borrows) is shipped over TCP to the executor processes
+//! that cache the grid blocks.  A persistent [`D3caWorkspace`] holds the
+//! Δα and contribution slabs and the per-task index streams, so
+//! steady-state iterations allocate nothing on the sim backend at any
+//! `threads` setting — §V's "primal vector computation bottleneck" is
+//! all compute, no allocator churn.  Reductions happen in place on the
+//! slabs ([`ClusterBackend::reduce_segments`]) with the same binary-tree
+//! combine order (and comm charges) as the boxed `reduce_over_*` path,
+//! so iterates and clocks stay bit-identical across backends.
 //!
 //! With Q = 1 this reduces exactly to CoCoA.  Dual feasibility of the
 //! averaged iterate is preserved because each per-partition update stays
@@ -30,7 +33,7 @@
 //! (tested in `rust/tests/properties.rs`).
 
 use super::driver::Optimizer;
-use crate::cluster::{SimCluster, TaskSlab};
+use crate::cluster::{ClusterBackend, GridOp};
 use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::runtime::StagedGrid;
@@ -85,15 +88,9 @@ impl Default for D3caConfig {
     }
 }
 
-/// Per-worker SDCA scratch: local α / w copies, sized to the largest
-/// partition at init.
-struct SdcaScratch {
-    a: Vec<f32>,
-    w: Vec<f32>,
-}
-
 /// Persistent per-run working memory — allocated once in `init`, reused
-/// by every iteration (steady state allocates nothing).
+/// by every iteration (steady state allocates nothing).  Per-worker
+/// kernel scratch lives backend-side ([`crate::cluster::OpScratch`]).
 struct D3caWorkspace {
     /// Δα slab: observation group p starts at `delta_off[p]` and holds qq
     /// segments of n_p each (task (p,q) writes segment q).
@@ -110,8 +107,6 @@ struct D3caWorkspace {
     idx_off: Vec<(usize, usize)>,
     /// Per-task local SDCA step counts (fixed across iterations).
     h: Vec<usize>,
-    /// One scratch cell per worker thread.
-    scratch: Vec<SdcaScratch>,
 }
 
 /// D3CA state: the global dual α (concatenated over observation
@@ -157,7 +152,11 @@ impl Optimizer for D3ca {
         self.cfg.lambda
     }
 
-    fn init(&mut self, staged: &StagedGrid<'_>, cluster: &mut SimCluster) -> Result<()> {
+    fn init(
+        &mut self,
+        staged: &StagedGrid<'_>,
+        _cluster: &mut dyn ClusterBackend,
+    ) -> Result<()> {
         let part = staged.part;
         if !Loss::Hinge.has_sdca_closed_form() {
             bail!("D3CA requires the hinge closed form");
@@ -186,11 +185,6 @@ impl Optimizer for D3ca {
                 idx_len += len;
             }
         }
-        let max_np = (0..pp).map(|p| part.n_p(p)).max().unwrap_or(0);
-        let max_mq = (0..qq).map(|q| part.m_q(q)).max().unwrap_or(0);
-        let scratch = (0..cluster.threads())
-            .map(|_| SdcaScratch { a: vec![0.0; max_np], w: vec![0.0; max_mq] })
-            .collect();
         self.ws = Some(D3caWorkspace {
             delta: vec![0.0; acc],
             delta_off,
@@ -199,7 +193,6 @@ impl Optimizer for D3ca {
             idx: vec![0; idx_len],
             idx_off,
             h,
-            scratch,
         });
         Ok(())
     }
@@ -208,7 +201,7 @@ impl Optimizer for D3ca {
         &mut self,
         t: usize,
         staged: &StagedGrid<'_>,
-        cluster: &mut SimCluster,
+        cluster: &mut dyn ClusterBackend,
     ) -> Result<()> {
         let part: &Partitioned = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
@@ -218,7 +211,7 @@ impl Optimizer for D3ca {
 
         // Broadcast current w[·,q] to the P partitions of each column and
         // α[p,·] to the Q partitions of each row (cost model only — the
-        // data movement is implicit in the shared-memory simulation).
+        // dist backend ships the actual vectors inside the op payload).
         for q in 0..qq {
             cluster.broadcast_cost(part.m_q(q) * 4, pp);
         }
@@ -240,39 +233,21 @@ impl Optimizer for D3ca {
 
         // Steps 2-4: local dual methods — one superstep, one task per
         // partition, each writing its Δα into its slab segment.
-        {
-            let delta = TaskSlab::new(&mut ws.delta);
-            let delta_off: &[usize] = &ws.delta_off;
-            let idx_slab: &[i32] = &ws.idx;
-            let idx_off: &[(usize, usize)] = &ws.idx_off;
-            let h_all: &[usize] = &ws.h;
-            let (alpha, w) = (&self.alpha, &self.w);
-            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, sc| {
-                let (p, q) = (task / qq, task % qq);
-                let (r0, r1) = part.row_ranges[p];
-                let (c0, c1) = part.col_ranges[q];
-                let n_p = r1 - r0;
-                let (s, len) = idx_off[task];
-                // SAFETY: the segment is derived from the task index
-                // alone and segments of distinct tasks are disjoint by
-                // construction of delta_off.
-                let da = unsafe { delta.segment(delta_off[p] + q * n_p, n_p) };
-                staged.sdca_epoch_into(
-                    p,
-                    q,
-                    &alpha[r0..r1],
-                    &w[c0..c1],
-                    &idx_slab[s..s + len],
-                    h_all[task],
-                    lamn,
-                    invq,
-                    beta,
-                    da,
-                    &mut sc.a,
-                    &mut sc.w,
-                )
-            })?;
-        }
+        cluster.grid_exec(
+            staged,
+            GridOp::Sdca {
+                alpha: &self.alpha,
+                w: &self.w,
+                idx: &ws.idx,
+                idx_off: &ws.idx_off,
+                h: &ws.h,
+                lamn,
+                invq,
+                beta,
+            },
+            &mut ws.delta,
+            &mut [],
+        )?;
 
         // Steps 5-7: α[p,·] += scale · Σ_q Δα[p,q]  (in-place tree reduce
         // over q; scale = 1/(P·Q) per the paper, or 1/Q under the
@@ -302,18 +277,8 @@ impl Optimizer for D3ca {
         let m = part.m;
         let incremental = self.cfg.incremental_primal;
         {
-            let contrib = TaskSlab::new(&mut ws.contrib);
-            let alpha = &self.alpha;
-            let upd: &[f32] = &ws.upd;
-            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, _sc| {
-                let (p, q) = (task / qq, task % qq);
-                let (r0, r1) = part.row_ranges[p];
-                let (c0, c1) = part.col_ranges[q];
-                let v_p: &[f32] = if incremental { &upd[r0..r1] } else { &alpha[r0..r1] };
-                // SAFETY: segment (p*m + c0, m_q) is disjoint per task.
-                let out = unsafe { contrib.segment(p * m + c0, c1 - c0) };
-                staged.atx_into(p, q, v_p, out)
-            })?;
+            let v: &[f32] = if incremental { &ws.upd } else { &self.alpha };
+            cluster.grid_exec(staged, GridOp::Atx { v }, &mut ws.contrib, &mut [])?;
         }
         for q in 0..qq {
             let (c0, c1) = part.col_ranges[q];

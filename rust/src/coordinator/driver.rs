@@ -1,14 +1,20 @@
-//! The run driver: wires an [`Optimizer`] to a staged dataset and the
-//! simulated cluster, evaluating the paper's metrics each iteration.
+//! The run driver: wires an [`Optimizer`] to a staged dataset and a
+//! cluster backend, evaluating the paper's metrics each iteration.
 //!
-//! Evaluation (primal/dual objective) happens *off the clock*: the
-//! simulated time only advances inside `Optimizer::iterate`, matching the
-//! paper's practice of timing the algorithm rather than the monitoring.
+//! The backend is chosen by [`ClusterConfig::mode`]: the in-process
+//! [`SimBackend`] (simulated cluster, the default) or the multi-process
+//! [`DistCluster`](crate::cluster::DistCluster) (real executor processes
+//! over TCP; the simulated clock still runs beside the real one).
+//!
+//! Evaluation (primal/dual objective) happens *off the clock*, and
+//! driver-side: the simulated time only advances inside
+//! `Optimizer::iterate`, matching the paper's practice of timing the
+//! algorithm rather than the monitoring.
 
-use crate::cluster::{ClusterConfig, SimCluster};
+use crate::cluster::{ClusterBackend, ClusterConfig, ClusterMode, DistCluster, SimBackend};
 use crate::data::Partitioned;
 use crate::loss::Loss;
-use crate::metrics::Recorder;
+use crate::metrics::{Recorder, WireRecord};
 use crate::runtime::StagedGrid;
 use anyhow::Result;
 
@@ -22,14 +28,15 @@ pub trait Optimizer {
     fn lambda(&self) -> f32;
 
     /// One-time setup (state allocation, cached factorizations, ...).
-    fn init(&mut self, staged: &StagedGrid<'_>, cluster: &mut SimCluster) -> Result<()>;
+    fn init(&mut self, staged: &StagedGrid<'_>, cluster: &mut dyn ClusterBackend)
+        -> Result<()>;
 
     /// One global iteration (t = 1, 2, ...).
     fn iterate(
         &mut self,
         t: usize,
         staged: &StagedGrid<'_>,
-        cluster: &mut SimCluster,
+        cluster: &mut dyn ClusterBackend,
     ) -> Result<()>;
 
     /// Current global primal iterate.
@@ -57,6 +64,10 @@ pub struct RunResult {
     pub stragglers: usize,
     /// Failed task attempts injected by the cluster scenario (0 when ideal).
     pub failures: usize,
+    /// Per-superstep measured transport records — real wall seconds and
+    /// bytes on the wire next to the simulated charge.  Empty on the sim
+    /// backend (nothing crosses a socket there).
+    pub wire: Vec<WireRecord>,
 }
 
 /// Builder-style driver.
@@ -132,21 +143,84 @@ impl<'a> Driver<'a> {
             + 0.5 * lam as f64 * crate::linalg::nrm2_sq(w) as f64)
     }
 
+    /// Build the cluster backend [`ClusterConfig::mode`] selects — the
+    /// distributed backend connects to its executors and ships them their
+    /// grid blocks here, before anything is timed.
+    fn make_backend(&self) -> Result<Box<dyn ClusterBackend>> {
+        match &self.cluster_config.mode {
+            ClusterMode::Sim => Ok(Box::new(SimBackend::new(self.cluster_config.clone()))),
+            ClusterMode::Dist(addrs) => {
+                #[cfg(feature = "xla")]
+                if let crate::runtime::Backend::Xla(_) = self.staged.backend {
+                    anyhow::bail!(
+                        "--cluster dist requires the native backend \
+                         (executors stage their blocks natively)"
+                    );
+                }
+                Ok(Box::new(DistCluster::connect(
+                    self.cluster_config.clone(),
+                    addrs,
+                    self.part,
+                )?))
+            }
+        }
+    }
+
     /// Run `opt` for the configured iterations, recording the paper's
     /// metrics each `eval_every` iterations.
     pub fn run(&mut self, opt: &mut dyn Optimizer) -> Result<RunResult> {
+        // The backend owns both clocks: the simulated parallel clock the
+        // optimizers charge, and the host wall stopwatch `threads` (or
+        // real executors) speed up.
+        let mut backend = self.make_backend()?;
+        let outcome = self.run_loop(opt, backend.as_mut());
+        let rec = match outcome {
+            Ok(rec) => rec,
+            Err(e) => {
+                // orderly teardown on the failure path too: executors
+                // return to their accept loop instead of logging a
+                // dropped session (best effort — the executor may be
+                // exactly what died)
+                let _ = backend.shutdown();
+                return Err(e);
+            }
+        };
+        let result = RunResult {
+            method: opt.name(),
+            history: rec,
+            w: opt.w().to_vec(),
+            sim_time: backend.clock().now(),
+            wall_time: backend.host_secs(),
+            comm_bytes: backend.clock().comm_bytes(),
+            messages: backend.clock().messages(),
+            supersteps: backend.clock().supersteps(),
+            stragglers: backend.clock().stragglers(),
+            failures: backend.clock().failures(),
+            wire: backend.take_wire_log(),
+        };
+        backend.shutdown()?;
+        Ok(result)
+    }
+
+    /// The fallible middle of [`Driver::run`] — everything between
+    /// backend construction and teardown, so the caller can guarantee an
+    /// orderly `shutdown()` on both the success and failure paths.
+    fn run_loop(
+        &self,
+        opt: &mut dyn Optimizer,
+        backend: &mut dyn ClusterBackend,
+    ) -> Result<Recorder> {
         let lam = opt.lambda();
-        // The cluster owns both clocks: the simulated parallel clock the
-        // optimizers charge, and the host wall stopwatch `threads` speeds up.
-        let mut cluster = SimCluster::new(self.cluster_config.clone());
-        // Spawn the persistent pool workers before anything is timed:
-        // bring-up is the only allocation (and the only spawn) the
-        // parallel path ever pays, and it should not land inside t = 1.
-        cluster.warm_up();
+        // Size per-worker scratch and spawn the persistent pool workers
+        // before anything is timed: bring-up is the only allocation (and
+        // the only spawn) the parallel path ever pays, and it should not
+        // land inside t = 1.
+        backend.prepare(&self.staged)?;
+        backend.warm_up();
         let mut rec = Recorder::new(self.fstar);
-        opt.init(&self.staged, &mut cluster)?;
+        opt.init(&self.staged, backend)?;
         for t in 1..=self.iterations {
-            opt.iterate(t, &self.staged, &mut cluster)?;
+            opt.iterate(t, &self.staged, backend)?;
             if t % self.eval_every == 0 || t == self.iterations {
                 let f = self.evaluate(opt.w(), opt.loss(), lam)?;
                 let d = opt
@@ -156,9 +230,9 @@ impl<'a> Driver<'a> {
                     t,
                     f,
                     d,
-                    cluster.clock.now(),
-                    cluster.host_secs(),
-                    cluster.clock.comm_bytes(),
+                    backend.clock().now(),
+                    backend.host_secs(),
+                    backend.clock().comm_bytes(),
                 );
                 if let (Some(target), Some(last)) = (self.target_gap, rec.last()) {
                     if last.rel_gap.is_finite() && last.rel_gap <= target {
@@ -167,17 +241,6 @@ impl<'a> Driver<'a> {
                 }
             }
         }
-        Ok(RunResult {
-            method: opt.name(),
-            history: rec,
-            w: opt.w().to_vec(),
-            sim_time: cluster.clock.now(),
-            wall_time: cluster.host_secs(),
-            comm_bytes: cluster.clock.comm_bytes(),
-            messages: cluster.clock.messages(),
-            supersteps: cluster.clock.supersteps(),
-            stragglers: cluster.clock.stragglers(),
-            failures: cluster.clock.failures(),
-        })
+        Ok(rec)
     }
 }

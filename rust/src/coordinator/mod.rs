@@ -10,10 +10,13 @@
 //!   cached-factor graph projections + separable proxes + consensus
 //!   averaging.
 //!
-//! All three run under the same [`Driver`], against either backend, over
-//! the simulated cluster; per-iteration state (primal/dual objective,
-//! simulated time, communication bytes) lands in a
-//! [`crate::metrics::Recorder`].
+//! All three run under the same [`Driver`], against either compute
+//! backend (native/XLA) and either cluster substrate — the in-process
+//! simulated cluster or the real multi-process TCP runtime
+//! ([`crate::cluster::ClusterBackend`]); per-iteration state
+//! (primal/dual objective, simulated time, communication bytes) lands in
+//! a [`crate::metrics::Recorder`], and distributed runs additionally
+//! carry per-superstep wall-clock + bytes-on-wire records.
 
 mod admm;
 mod d3ca;

@@ -15,22 +15,20 @@
 //!    results — or, for RADiSA-avg (`average: true`), every partition
 //!    works on the whole w[·,q] and the results are averaged over p.
 //!
-//! Each numbered phase is one superstep on the zero-allocation path
-//! ([`SimCluster::grid_step_into`](crate::cluster::SimCluster::grid_step_into)):
-//! a persistent [`RadisaWorkspace`] holds the margin/gradient/result
-//! slabs, per-task index streams, and per-worker ψ/δ scratch, and the
-//! grouped reductions run in place on the slabs
-//! ([`SimCluster::reduce_segments`](crate::cluster::SimCluster::reduce_segments)),
-//! so iterations after the first allocate nothing at any `threads`
-//! setting (the persistent worker pool dispatches supersteps to its
-//! long-lived threads without spawning).  On sparse blocks the
-//! SVRG inner loop uses the staged sub-block window index (O(nnz in
+//! Each numbered phase is one typed [`GridOp`] superstep on the active
+//! [`ClusterBackend`] — in-process worker pool on the sim backend
+//! (zero-allocation steady state at any `threads`), real TCP executors
+//! on the dist backend, bit-identical iterates either way.  A persistent
+//! [`RadisaWorkspace`] holds the margin/gradient/result slabs and the
+//! per-task index streams, and the grouped reductions run in place on
+//! the slabs ([`ClusterBackend::reduce_segments`]).  On sparse blocks
+//! the SVRG inner loop uses the staged sub-block window index (O(nnz in
 //! window) per step).  RADiSA-avg's full-block shipping uses the
-//! data-free [`SimCluster::reduce_cost`](crate::cluster::SimCluster::reduce_cost).
+//! data-free [`ClusterBackend::reduce_cost`].
 
 use super::driver::Optimizer;
 use super::schedule::{radisa_eta, SubBlockSchedule};
-use crate::cluster::{SimCluster, TaskSlab};
+use crate::cluster::{ClusterBackend, GridOp};
 use crate::data::{Partitioned, SubBlocks};
 use crate::loss::Loss;
 use crate::runtime::StagedGrid;
@@ -79,14 +77,9 @@ impl Default for RadisaConfig {
     }
 }
 
-/// Per-worker scratch: ψ for the gradient pass, δ for the SVRG window.
-struct RadisaScratch {
-    psi: Vec<f32>,
-    delta: Vec<f32>,
-}
-
 /// Persistent per-run working memory — allocated once in `init`, reused
-/// by every iteration (steady state allocates nothing).
+/// by every iteration (steady state allocates nothing).  Per-worker
+/// kernel scratch lives backend-side ([`crate::cluster::OpScratch`]).
 struct RadisaWorkspace {
     /// Margin slab: group p at `mar_off[p]`, qq segments of n_p each.
     margins: Vec<f32>,
@@ -108,8 +101,6 @@ struct RadisaWorkspace {
     assign: Vec<usize>,
     /// f64 accumulator for RADiSA-avg's exact average (length max m_q).
     avg_acc: Vec<f64>,
-    /// One scratch cell per worker thread.
-    scratch: Vec<RadisaScratch>,
 }
 
 pub struct Radisa {
@@ -153,26 +144,13 @@ impl Radisa {
     fn margins_pass(
         &mut self,
         staged: &StagedGrid<'_>,
-        cluster: &mut SimCluster,
+        cluster: &mut dyn ClusterBackend,
     ) -> Result<()> {
         let part = staged.part;
-        let (pp, qq) = (part.grid.p, part.grid.q);
+        let (_pp, qq) = (part.grid.p, part.grid.q);
         let ws = self.ws.as_mut().expect("init before iterate");
-        {
-            let slab = TaskSlab::new(&mut ws.margins);
-            let mar_off: &[usize] = &ws.mar_off;
-            let w = &self.w;
-            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, _sc| {
-                let (p, q) = (task / qq, task % qq);
-                let (c0, c1) = part.col_ranges[q];
-                let n_p = part.n_p(p);
-                // SAFETY: segment derived from the task index alone;
-                // segments are disjoint by construction of mar_off.
-                let out = unsafe { slab.segment(mar_off[p] + q * n_p, n_p) };
-                staged.margins_into(p, q, &w[c0..c1], out)
-            })?;
-        }
-        for p in 0..pp {
+        cluster.grid_exec(staged, GridOp::Margins { w: &self.w }, &mut ws.margins, &mut [])?;
+        for p in 0..part.grid.p {
             let (r0, r1) = part.row_ranges[p];
             let n_p = r1 - r0;
             cluster.reduce_segments(&mut ws.margins, ws.mar_off[p], n_p, qq, n_p);
@@ -189,25 +167,14 @@ impl Radisa {
     fn grad_pass(
         &mut self,
         staged: &StagedGrid<'_>,
-        cluster: &mut SimCluster,
+        cluster: &mut dyn ClusterBackend,
     ) -> Result<()> {
         let part = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
         let m = part.m;
         let loss = self.cfg.loss;
         let ws = self.ws.as_mut().expect("init before iterate");
-        {
-            let slab = TaskSlab::new(&mut ws.grad);
-            let mt: &[f32] = &ws.mt;
-            cluster.grid_step_into(pp * qq, false, &mut ws.scratch, |task, sc| {
-                let (p, q) = (task / qq, task % qq);
-                let (r0, r1) = part.row_ranges[p];
-                let (c0, c1) = part.col_ranges[q];
-                // SAFETY: segment (p*m + c0, m_q) is disjoint per task.
-                let out = unsafe { slab.segment(p * m + c0, c1 - c0) };
-                staged.grad_into(loss, p, q, &mt[r0..r1], part.n, out, &mut sc.psi)
-            })?;
-        }
+        cluster.grid_exec(staged, GridOp::Grad { loss, mt: &ws.mt }, &mut ws.grad, &mut [])?;
         for q in 0..qq {
             let (c0, c1) = part.col_ranges[q];
             cluster.reduce_segments(&mut ws.grad, c0, m, pp, c1 - c0);
@@ -237,7 +204,11 @@ impl Optimizer for Radisa {
         self.cfg.lambda
     }
 
-    fn init(&mut self, staged: &StagedGrid<'_>, cluster: &mut SimCluster) -> Result<()> {
+    fn init(
+        &mut self,
+        staged: &StagedGrid<'_>,
+        _cluster: &mut dyn ClusterBackend,
+    ) -> Result<()> {
         let part = staged.part;
         self.w = vec![0.0; part.m];
         self.schedule = Some(SubBlockSchedule::new(&self.rng_root, part.grid.p));
@@ -277,11 +248,7 @@ impl Optimizer for Radisa {
                 idx_len += len;
             }
         }
-        let max_np = (0..pp).map(|p| part.n_p(p)).max().unwrap_or(0);
         let max_mq = (0..qq).map(|q| part.m_q(q)).max().unwrap_or(0);
-        let scratch = (0..cluster.threads())
-            .map(|_| RadisaScratch { psi: Vec::with_capacity(max_np), delta: Vec::with_capacity(max_mq) })
-            .collect();
         self.ws = Some(RadisaWorkspace {
             margins: vec![0.0; acc],
             mar_off,
@@ -294,7 +261,6 @@ impl Optimizer for Radisa {
             idx_off,
             assign: vec![0; pp],
             avg_acc: vec![0.0; max_mq],
-            scratch,
         });
         Ok(())
     }
@@ -303,7 +269,7 @@ impl Optimizer for Radisa {
         &mut self,
         t: usize,
         staged: &StagedGrid<'_>,
-        cluster: &mut SimCluster,
+        cluster: &mut dyn ClusterBackend,
     ) -> Result<()> {
         let part: &Partitioned = staged.part;
         let (pp, qq) = (part.grid.p, part.grid.q);
@@ -358,47 +324,24 @@ impl Optimizer for Radisa {
             // stragglers" (paper §IV): its superstep is tolerant and the
             // makespan ignores injected straggler delays and failure
             // re-charges.
-            {
-                let slab = TaskSlab::new(&mut ws.result);
-                let windows: &[(usize, usize)] = &ws.windows;
-                let idx_slab: &[i32] = &ws.idx;
-                let idx_off: &[(usize, usize)] = &ws.idx_off;
-                let mt: &[f32] = &ws.mt;
-                let mu: &[f32] = &ws.mu;
-                let w_snap = &self.w;
-                let (loss, lam, batch) = (self.cfg.loss, self.cfg.lambda, self.cfg.batch);
-                cluster.grid_step_into(pp * qq, average, &mut ws.scratch, |task, sc| {
-                    let (q, p) = (task / pp, task % pp);
-                    let (c0, c1) = part.col_ranges[q];
-                    let (r0, r1) = part.row_ranges[p];
-                    let n_p = r1 - r0;
-                    let m_q = c1 - c0;
-                    let l = if batch == 0 { n_p } else { batch };
-                    let window = windows[task];
-                    let (s, len) = idx_off[task];
-                    let wt_q = &w_snap[c0..c1];
-                    let mu_win = &mu[c0 + window.0..c0 + window.1];
-                    // SAFETY: segment (pp*c0 + p*m_q, m_q) is disjoint
-                    // per task.
-                    let out = unsafe { slab.segment(pp * c0 + p * m_q, m_q) };
-                    staged.svrg_block_into(
-                        loss,
-                        p,
-                        q,
-                        wt_q,
-                        wt_q,
-                        mu_win,
-                        window,
-                        &mt[r0..r1],
-                        &idx_slab[s..s + len],
-                        l,
-                        eta,
-                        lam,
-                        out,
-                        &mut sc.delta,
-                    )
-                })?;
-            }
+            cluster.grid_exec(
+                staged,
+                GridOp::Svrg {
+                    loss: self.cfg.loss,
+                    w: &self.w,
+                    mu: &ws.mu,
+                    mt: &ws.mt,
+                    windows: &ws.windows,
+                    idx: &ws.idx,
+                    idx_off: &ws.idx_off,
+                    batch: self.cfg.batch,
+                    eta,
+                    lam: self.cfg.lambda,
+                    tolerant: average,
+                },
+                &mut ws.result,
+                &mut [],
+            )?;
 
             // step 12: combine in task order — concatenate each partition's
             // window, or average full blocks over p (RADiSA-avg)

@@ -15,7 +15,9 @@ mod synthetic;
 
 pub use dense::DenseMatrix;
 pub use libsvm::{read_libsvm, write_libsvm};
-pub use partition::{balanced_ranges, Grid, Partitioned, SubBlocks};
+pub use partition::{
+    balanced_ranges, decode_block, encode_block, Grid, Partitioned, SubBlocks,
+};
 pub use sparse::{SparseMatrix, SubblockIndex};
 pub use synthetic::{SyntheticDense, SyntheticSparse};
 

@@ -6,7 +6,9 @@
 //! alpha[p, .]; partitions sharing a column range share the primal block
 //! w[., q] — the aggregation structure D3CA/RADiSA coordinate over.
 
-use super::{Block, BlockRepr, Dataset};
+use super::{Block, BlockRepr, Dataset, DenseMatrix, SparseMatrix};
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Result};
 
 /// The partition grid dimensions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -129,6 +131,165 @@ impl Partitioned {
         let mq = (0..self.grid.q).map(|q| self.m_q(q)).max().unwrap();
         (np, mq)
     }
+
+    // ------------------------------------------------------------ ser/de
+    //
+    // Binary framing for the distributed runtime (same little-endian
+    // [`crate::util::bytes`] vocabulary as the wire protocol): the driver
+    // ships every executor the *metadata* — grid shape, ranges, labels —
+    // plus only the [`encode_block`] payloads of the cells that executor
+    // owns; [`Partitioned::decode_meta`] reconstructs the grid with
+    // dimension-correct empty placeholders for the cells it never sees.
+
+    /// Serialize everything except the blocks.
+    pub fn encode_meta(&self, buf: &mut Vec<u8>) {
+        bytes::put_usize(buf, self.grid.p);
+        bytes::put_usize(buf, self.grid.q);
+        bytes::put_usize(buf, self.n);
+        bytes::put_usize(buf, self.m);
+        bytes::put_pairs(buf, &self.row_ranges);
+        bytes::put_pairs(buf, &self.col_ranges);
+        bytes::put_f32s(buf, &self.y);
+        bytes::put_str(buf, &self.name);
+    }
+
+    /// Rebuild a grid from [`Partitioned::encode_meta`] output, with
+    /// zero-nnz (but dimension-correct) placeholder blocks everywhere;
+    /// the caller installs the shipped blocks with
+    /// [`Partitioned::set_block`].
+    pub fn decode_meta(r: &mut ByteReader<'_>) -> Result<Partitioned> {
+        let p = r.usize()?;
+        let q = r.usize()?;
+        let n = r.usize()?;
+        let m = r.usize()?;
+        if p == 0 || q == 0 {
+            bail!("partition meta has an empty grid ({p}x{q})");
+        }
+        let row_ranges = r.pairs()?;
+        let col_ranges = r.pairs()?;
+        let y = r.f32s()?;
+        let name = r.str()?;
+        if row_ranges.len() != p || col_ranges.len() != q {
+            bail!(
+                "partition meta ranges ({}, {}) do not match the {p}x{q} grid",
+                row_ranges.len(),
+                col_ranges.len()
+            );
+        }
+        check_ranges(&row_ranges, n, "row")?;
+        check_ranges(&col_ranges, m, "col")?;
+        if y.len() != n {
+            bail!("partition meta labels length {} != n = {n}", y.len());
+        }
+        let grid = Grid::new(p, q);
+        let mut blocks = Vec::with_capacity(grid.k());
+        for &(r0, r1) in &row_ranges {
+            for &(c0, c1) in &col_ranges {
+                // an empty CSR block keeps the (n_p, m_q) dims without
+                // allocating n_p·m_q zeros
+                let placeholder = SparseMatrix::from_csr(
+                    r1 - r0,
+                    c1 - c0,
+                    vec![0; r1 - r0 + 1],
+                    Vec::new(),
+                    Vec::new(),
+                )
+                .expect("empty CSR is always valid");
+                blocks.push(Block::sparse(placeholder));
+            }
+        }
+        Ok(Partitioned { grid, n, m, row_ranges, col_ranges, blocks, y, name })
+    }
+
+    /// Install a shipped block at flat grid cell `cell`, verifying its
+    /// dimensions against the grid ranges.
+    pub fn set_block(&mut self, cell: usize, b: Block) -> Result<()> {
+        if cell >= self.grid.k() {
+            bail!("block cell {cell} out of range (grid has {} cells)", self.grid.k());
+        }
+        let (p, q) = (cell / self.grid.q, cell % self.grid.q);
+        let (n_p, m_q) = (self.n_p(p), self.m_q(q));
+        if b.rows() != n_p || b.cols() != m_q {
+            bail!(
+                "block for cell ({p},{q}) is {}x{}, grid wants {n_p}x{m_q}",
+                b.rows(),
+                b.cols()
+            );
+        }
+        self.blocks[cell] = b;
+        Ok(())
+    }
+}
+
+fn check_ranges(ranges: &[(usize, usize)], total: usize, what: &str) -> Result<()> {
+    let mut cursor = 0usize;
+    for &(a, b) in ranges {
+        if a != cursor || b < a {
+            bail!("partition meta {what} ranges are not contiguous from 0");
+        }
+        cursor = b;
+    }
+    if cursor != total {
+        bail!("partition meta {what} ranges cover {cursor}, want {total}");
+    }
+    Ok(())
+}
+
+/// Block payload tags.
+const BLOCK_DENSE: u8 = 0;
+const BLOCK_SPARSE: u8 = 1;
+
+/// Serialize one grid block (dense or CSR, flagged with whether the
+/// source carried a CSC mirror so the receiver rebuilds it and transpose
+/// products stay on the streaming kernel).
+pub fn encode_block(b: &Block, buf: &mut Vec<u8>) {
+    match b.repr() {
+        BlockRepr::Dense(d) => {
+            bytes::put_u8(buf, BLOCK_DENSE);
+            bytes::put_usize(buf, d.rows);
+            bytes::put_usize(buf, d.cols);
+            bytes::put_f32s(buf, &d.data);
+        }
+        BlockRepr::Sparse(s) => {
+            bytes::put_u8(buf, BLOCK_SPARSE);
+            bytes::put_usize(buf, s.rows);
+            bytes::put_usize(buf, s.cols);
+            bytes::put_usizes(buf, &s.indptr);
+            bytes::put_u32s(buf, &s.indices);
+            bytes::put_f32s(buf, &s.values);
+            bytes::put_u8(buf, u8::from(s.has_csc()));
+        }
+    }
+}
+
+/// Deserialize one grid block ([`encode_block`]'s inverse — value bits,
+/// nnz, and CSC presence all round-trip exactly).
+pub fn decode_block(r: &mut ByteReader<'_>) -> Result<Block> {
+    match r.u8()? {
+        BLOCK_DENSE => {
+            let rows = r.usize()?;
+            let cols = r.usize()?;
+            let data = r.f32s()?;
+            if data.len() != rows * cols {
+                bail!("dense block payload {} != {rows}x{cols}", data.len());
+            }
+            Ok(Block::dense(DenseMatrix::from_vec(rows, cols, data)))
+        }
+        BLOCK_SPARSE => {
+            let rows = r.usize()?;
+            let cols = r.usize()?;
+            let indptr = r.usizes()?;
+            let indices = r.u32s()?;
+            let values = r.f32s()?;
+            let has_csc = r.u8()? != 0;
+            let mut m = SparseMatrix::from_csr(rows, cols, indptr, indices, values)?;
+            if has_csc {
+                m.build_csc();
+            }
+            Ok(Block::sparse(m))
+        }
+        other => bail!("unknown block tag {other}"),
+    }
 }
 
 /// RADiSA's static sub-block structure: each feature partition's m_q local
@@ -238,6 +399,77 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0);
             }
         }
+    }
+
+    #[test]
+    fn block_ser_de_round_trips_bitwise() {
+        // one dense and one sparse dataset, partitioned, every block
+        // encoded and decoded; margins products must match bit for bit
+        for sparse in [false, true] {
+            let ds = if sparse {
+                SyntheticSparse::new("t", 40, 30, 0.15, 11).build()
+            } else {
+                SyntheticDense::paper_part1(2, 2, 12, 9, 0.1, 11).build()
+            };
+            let part = Partitioned::split(&ds, Grid::new(2, 2));
+            for (cell, b) in part.blocks.iter().enumerate() {
+                let mut buf = Vec::new();
+                encode_block(b, &mut buf);
+                let mut r = ByteReader::new(&buf);
+                let back = decode_block(&mut r).unwrap();
+                assert!(r.is_empty(), "cell {cell}: trailing bytes");
+                assert_eq!(b.rows(), back.rows());
+                assert_eq!(b.cols(), back.cols());
+                assert_eq!(b.nnz(), back.nnz());
+                if let (Some(s0), Some(s1)) = (b.as_sparse(), back.as_sparse()) {
+                    assert_eq!(s0, s1, "cell {cell}: CSR content");
+                    assert_eq!(s0.has_csc(), s1.has_csc(), "cell {cell}: CSC mirror");
+                }
+                let w: Vec<f32> = (0..b.cols()).map(|j| (j as f32).sin()).collect();
+                let mut m0 = vec![0.0f32; b.rows()];
+                let mut m1 = vec![0.0f32; b.rows()];
+                b.margins_into(&w, &mut m0);
+                back.margins_into(&w, &mut m1);
+                for (a, z) in m0.iter().zip(&m1) {
+                    assert_eq!(a.to_bits(), z.to_bits(), "cell {cell}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn meta_ser_de_round_trips_with_placeholders() {
+        let ds = SyntheticSparse::new("meta", 33, 21, 0.2, 3).build();
+        let part = Partitioned::split(&ds, Grid::new(3, 2));
+        let mut buf = Vec::new();
+        part.encode_meta(&mut buf);
+        let mut r = ByteReader::new(&buf);
+        let mut back = Partitioned::decode_meta(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(back.grid, part.grid);
+        assert_eq!(back.row_ranges, part.row_ranges);
+        assert_eq!(back.col_ranges, part.col_ranges);
+        assert_eq!(back.y, part.y);
+        assert_eq!(back.name, part.name);
+        // placeholders are dimension-correct and empty
+        for p in 0..3 {
+            for q in 0..2 {
+                let b = back.block(p, q);
+                assert_eq!(b.rows(), part.n_p(p));
+                assert_eq!(b.cols(), part.m_q(q));
+                assert_eq!(b.nnz(), 0);
+            }
+        }
+        // installing a shipped block replaces the placeholder
+        let mut bbuf = Vec::new();
+        encode_block(part.block(1, 1), &mut bbuf);
+        let blk = decode_block(&mut ByteReader::new(&bbuf)).unwrap();
+        back.set_block(back.grid.idx(1, 1), blk).unwrap();
+        assert_eq!(back.block(1, 1).nnz(), part.block(1, 1).nnz());
+        // dimension mismatch is rejected: cell (0,0) is 11x11 while the
+        // shipped block (1,1) is 11x10
+        let bad = decode_block(&mut ByteReader::new(&bbuf)).unwrap();
+        assert!(back.set_block(0, bad).is_err());
     }
 
     #[test]

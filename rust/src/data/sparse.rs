@@ -97,6 +97,54 @@ impl SparseMatrix {
         }
     }
 
+    /// Assemble from raw CSR arrays (the partition-block deserializer's
+    /// entry point); validates the CSR invariants so a corrupt or
+    /// truncated frame cannot build a matrix whose kernels later index
+    /// out of bounds.  No CSC mirror — call [`SparseMatrix::build_csc`]
+    /// after if the source block carried one.
+    pub fn from_csr(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> anyhow::Result<SparseMatrix> {
+        use anyhow::bail;
+        if indptr.len() != rows + 1 {
+            bail!("CSR indptr length {} != rows + 1 = {}", indptr.len(), rows + 1);
+        }
+        if indptr.first() != Some(&0) || *indptr.last().unwrap() != values.len() {
+            bail!("CSR indptr endpoints do not bracket the {} values", values.len());
+        }
+        if indices.len() != values.len() {
+            bail!("CSR indices/values length mismatch: {} vs {}", indices.len(), values.len());
+        }
+        for i in 0..rows {
+            if indptr[i] > indptr[i + 1] {
+                bail!("CSR indptr decreases at row {i}");
+            }
+            for k in indptr[i]..indptr[i + 1] {
+                let j = indices[k] as usize;
+                if j >= cols {
+                    bail!("CSR column {j} out of bounds (cols {cols}) at row {i}");
+                }
+                if k > indptr[i] && indices[k - 1] >= indices[k] {
+                    bail!("CSR columns not strictly increasing within row {i}");
+                }
+            }
+        }
+        Ok(SparseMatrix {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+            csc_indptr: Vec::new(),
+            csc_rows: Vec::new(),
+            csc_vals: Vec::new(),
+        })
+    }
+
     /// Whether the CSC mirror has been built.
     pub fn has_csc(&self) -> bool {
         self.csc_indptr.len() == self.cols + 1

@@ -65,7 +65,8 @@ pub mod util;
 /// Convenient re-exports of the types most programs need.
 pub mod prelude {
     pub use crate::cluster::{
-        host_threads, ClusterConfig, ClusterScenario, CostModel, SimCluster, StepPlan,
+        host_threads, ClusterBackend, ClusterConfig, ClusterMode, ClusterScenario,
+        CostModel, DistCluster, GridOp, SimBackend, SimCluster, StepPlan,
     };
     pub use crate::config::ExperimentConfig;
     pub use crate::coordinator::{

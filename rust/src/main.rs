@@ -3,16 +3,29 @@
 //! ```text
 //! ddopt train [--config cfg.json] [--method radisa|radisa-avg|d3ca|admm]
 //!             [--p 4 --q 2] [--lambda 1e-3] [--gamma 0.05] [--iters 30]
-//!             [--backend native|xla] [--loss hinge|logistic]
+//!             [--seed N] [--backend native|xla] [--loss hinge|logistic]
 //!             [--cores 8] [--threads N]  (threads default: host parallelism)
-//!             [--scenario ideal|stragglers:p=0.1,slow=10x|hetero:frac=0.25,speed=0.5|failures:p=0.05]
-//!             [--n-per 200 --m-per 150 | --sparse n,m,density]
+//!             [--cluster sim|dist:host:port[,host:port...]]
+//!             [--scenario ideal|stragglers:p=0.1,slow=10x[,shape=S][,spec]
+//!                        |hetero:frac=0.25,speed=0.5
+//!                        |failures:p=0.05[,retries=R][,burst=executor]
+//!                        |<clause>+<clause>]
+//!             [--n-per 200 --m-per 150 | --sparse n,m,density | --libsvm file]
+//!             [--no-fstar] [--out history.csv] [--wire-out wire.jsonl]
+//!             [--dump-w weights.hex]
+//! ddopt executor --bind 127.0.0.1:7077 [--threads N] [--once]
 //! ddopt exp <table1|fig3|fig4|fig5|fig6|perf|ablations|stragglers|all>
 //!           [--scale small|paper] [--seed N]  (seed: stragglers scenario seed)
-//! ddopt gen-data --out data.libsvm [--n 1000 --m 500 --density 0.01]
+//! ddopt gen-data --out data.libsvm [--n 1000 --m 500 --density 0.01] [--seed N]
 //! ddopt fstar [--lambda 0.1] [dataset flags as in train]
 //! ddopt artifacts-info
 //! ```
+//!
+//! `--cluster dist:...` runs each superstep on real executor processes
+//! (start them first with `ddopt executor`); final weights are bitwise
+//! identical to `--cluster sim` at the same seed, and `--wire-out`
+//! records the measured per-superstep wall time and bytes on the wire
+//! next to the simulated clock.
 
 use anyhow::{anyhow, bail, Result};
 use ddopt::bench_harness::{self, Scale};
@@ -35,13 +48,23 @@ fn main() {
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let code = match cmd.as_str() {
         "train" => run_train(&args),
+        "executor" => run_executor(&args),
         "exp" => run_exp(&args),
         "gen-data" => run_gen_data(&args),
         "fstar" => run_fstar(&args),
         "artifacts-info" => run_artifacts_info(&args),
         _ => {
-            eprintln!("usage: ddopt <train|exp|gen-data|fstar|artifacts-info> [flags]");
-            eprintln!("see rust/src/main.rs docs or README.md");
+            eprintln!(
+                "usage: ddopt <train|executor|exp|gen-data|fstar|artifacts-info> [flags]"
+            );
+            eprintln!("  train     train one method (--method radisa|radisa-avg|d3ca|admm,");
+            eprintln!("            --cluster sim|dist:host:port[,host:port...], --scenario ..., see README)");
+            eprintln!("  executor  serve superstep tasks for a dist driver (--bind host:port)");
+            eprintln!("  exp       regenerate paper tables/figures (table1|fig3..fig6|perf|ablations|stragglers|all)");
+            eprintln!("  gen-data  write a synthetic LIBSVM file (--out file)");
+            eprintln!("  fstar     compute the reference optimum for a dataset");
+            eprintln!("  artifacts-info  describe the staged XLA artifacts");
+            eprintln!("see rust/src/main.rs docs or rust/README.md for every flag");
             Err(anyhow!("unknown command '{cmd}'"))
         }
     };
@@ -86,6 +109,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(s) = args.flag_str("scenario") {
         cfg.cluster.scenario = ddopt::cluster::ClusterScenario::parse(&s)?;
+    }
+    if let Some(c) = args.flag_str("cluster") {
+        cfg.cluster.mode = ddopt::cluster::ClusterMode::parse(&c)?;
     }
     if let Some(l) = args.flag_str("loss") {
         cfg.loss = Loss::parse(&l).ok_or_else(|| anyhow!("bad loss '{l}'"))?;
@@ -133,14 +159,16 @@ fn run_train(args: &Args) -> Result<()> {
     let method = args.flag_str("method").unwrap_or_else(|| "radisa".into());
     let no_fstar = args.switch("no-fstar");
     let out = args.flag_str("out");
+    let wire_out = args.flag_str("wire-out");
+    let dump_w = args.flag_str("dump-w");
     args.finish().map_err(|e| anyhow!(e))?;
 
     let ds = cfg.build_dataset()?;
     println!(
-        "dataset {} ({} x {}, sparsity {:.3}%)  grid {}x{}  lambda={:.1e}  backend={}  threads={}  scenario={}",
+        "dataset {} ({} x {}, sparsity {:.3}%)  grid {}x{}  lambda={:.1e}  backend={}  cluster={}  threads={}  scenario={}",
         ds.name, ds.n(), ds.m(), 100.0 * ds.sparsity(),
-        cfg.p, cfg.q, cfg.lambda, cfg.backend, cfg.cluster.threads,
-        cfg.cluster.scenario.label()
+        cfg.p, cfg.q, cfg.lambda, cfg.backend, cfg.cluster.mode.label(),
+        cfg.cluster.threads, cfg.cluster.scenario.label()
     );
     let part = Partitioned::split(&ds, Grid::new(cfg.p, cfg.q));
     let backend = make_backend(&cfg)?;
@@ -210,11 +238,60 @@ fn run_train(args: &Args) -> Result<()> {
             result.stragglers, result.failures
         );
     }
+    if !result.wire.is_empty() {
+        let steps = result.wire.len();
+        let (mut w_out, mut w_in, mut wall) = (0usize, 0usize, 0.0f64);
+        for r in &result.wire {
+            w_out += r.bytes_out;
+            w_in += r.bytes_in;
+            wall += r.wall_secs;
+        }
+        println!(
+            "wire: {} exchanges, {:.2} MiB out / {:.2} MiB in, {:.3}s measured transport+compute",
+            steps,
+            w_out as f64 / (1 << 20) as f64,
+            w_in as f64 / (1 << 20) as f64,
+            wall
+        );
+    }
+    if let Some(path) = wire_out {
+        if result.wire.is_empty() {
+            println!("--wire-out: nothing to write (sim backend has no wire)");
+        } else {
+            ddopt::metrics::write_wire_jsonl(&result.wire, Path::new(&path))?;
+            println!("wire records -> {path}");
+        }
+    }
+    if let Some(path) = dump_w {
+        // bit-exact weight dump (hex of the f32 bit patterns): what the
+        // dist-smoke CI job diffs between the sim and dist backends
+        let mut text = String::with_capacity(result.w.len() * 9);
+        for v in &result.w {
+            text.push_str(&format!("{:08x}\n", v.to_bits()));
+        }
+        if let Some(dir) = Path::new(&path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(&path, text)?;
+        println!("weights (bit-exact hex) -> {path}");
+    }
     if let Some(path) = out {
         write_csv(&result.history, Path::new(&path))?;
         println!("history -> {path}");
     }
     Ok(())
+}
+
+fn run_executor(args: &Args) -> Result<()> {
+    let bind = args
+        .flag_str("bind")
+        .unwrap_or_else(|| "127.0.0.1:7077".into());
+    let threads = args
+        .flag::<usize>("threads")
+        .unwrap_or_else(ddopt::cluster::host_threads);
+    let once = args.switch("once");
+    args.finish().map_err(|e| anyhow!(e))?;
+    ddopt::cluster::dist::serve(&ddopt::cluster::dist::ExecutorConfig { bind, threads, once })
 }
 
 fn run_exp(args: &Args) -> Result<()> {

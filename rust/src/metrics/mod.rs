@@ -4,4 +4,4 @@ mod recorder;
 mod report;
 
 pub use recorder::{IterationRecord, Recorder};
-pub use report::{markdown_table, write_csv, write_json_report};
+pub use report::{markdown_table, write_csv, write_json_report, write_wire_jsonl, WireRecord};

@@ -43,6 +43,48 @@ pub fn write_csv(rec: &Recorder, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// One distributed superstep's *measured* transport record: what actually
+/// crossed the wire and how long the exchange took on the host clock,
+/// alongside the simulated seconds the cost model charged for the same
+/// superstep — the two columns the sim-vs-dist comparison report needs.
+#[derive(Clone, Debug)]
+pub struct WireRecord {
+    /// Superstep ordinal on the distributed transport (staging is step 0).
+    pub step: usize,
+    /// Op kind executed ("sdca", "margins", "stage", ...).
+    pub op: &'static str,
+    /// Real host seconds from first request byte to last reply byte.
+    pub wall_secs: f64,
+    /// Bytes written to executor sockets for this superstep.
+    pub bytes_out: usize,
+    /// Bytes read back from executor sockets for this superstep.
+    pub bytes_in: usize,
+    /// Simulated seconds the cost model charged for the same superstep.
+    pub sim_secs: f64,
+}
+
+/// Write per-superstep wire records as JSON lines (one object per line),
+/// the artifact the dist-smoke CI job uploads.
+pub fn write_wire_jsonl(records: &[WireRecord], path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    for r in records {
+        let line = Json::obj(vec![
+            ("step", Json::from(r.step)),
+            ("op", Json::str(r.op)),
+            ("wall_secs", Json::num(r.wall_secs)),
+            ("bytes_out", Json::from(r.bytes_out)),
+            ("bytes_in", Json::from(r.bytes_in)),
+            ("sim_secs", Json::num(r.sim_secs)),
+        ]);
+        writeln!(f, "{line}")?;
+    }
+    Ok(())
+}
+
 /// Dump a labelled set of runs as a JSON report.
 pub fn write_json_report(
     label: &str,

@@ -1,0 +1,371 @@
+//! Little-endian binary codec primitives — the shared framing vocabulary
+//! of the partition-block serializer ([`crate::data::Partitioned`] ser/de)
+//! and the distributed wire protocol ([`crate::cluster::dist::wire`]).
+//!
+//! Everything is explicit little-endian, length-prefixed, and
+//! allocation-conscious: writers append to a caller-owned `Vec<u8>` (so a
+//! frame is built in one buffer and written with one syscall), readers
+//! are a cursor over a borrowed slice and fail with a descriptive error
+//! instead of panicking on truncated input.  `f32`/`f64` round-trip by
+//! raw bit pattern, which is what makes dist-vs-sim runs bit-identical.
+
+use anyhow::{bail, Result};
+
+// ----------------------------------------------------------------- write
+
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// usize as u64 (stable across 32/64-bit hosts).
+pub fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// u32 length prefix + UTF-8 bytes.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// u64 count prefix + raw little-endian f32 payload.
+pub fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// u64 count prefix + raw little-endian f64 payload.
+pub fn put_f64s(buf: &mut Vec<u8>, v: &[f64]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 8);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// u64 count prefix + raw little-endian i32 payload.
+pub fn put_i32s(buf: &mut Vec<u8>, v: &[i32]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// u64 count prefix + raw little-endian u32 payload.
+pub fn put_u32s(buf: &mut Vec<u8>, v: &[u32]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// u64 count prefix + each usize as u64.
+pub fn put_usizes(buf: &mut Vec<u8>, v: &[usize]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 8);
+    for &x in v {
+        buf.extend_from_slice(&(x as u64).to_le_bytes());
+    }
+}
+
+/// u64 count prefix + (usize, usize) pairs as u64 pairs.
+pub fn put_pairs(buf: &mut Vec<u8>, v: &[(usize, usize)]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 16);
+    for &(a, b) in v {
+        buf.extend_from_slice(&(a as u64).to_le_bytes());
+        buf.extend_from_slice(&(b as u64).to_le_bytes());
+    }
+}
+
+// ------------------------------------------------------------------ read
+
+/// Cursor over a borrowed byte slice; every getter checks bounds.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated frame: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
+    }
+
+    /// Element count of a prefixed array, bounds-checked against the
+    /// remaining bytes so a corrupt prefix cannot trigger a huge alloc.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        let over = n
+            .checked_mul(elem_bytes)
+            .map(|b| b > self.remaining())
+            .unwrap_or(true);
+        if over {
+            bail!(
+                "corrupt array prefix: {n} elements exceeds {} remaining bytes",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.f32s_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Decode a prefixed f32 array into a reusable buffer — one bounds
+    /// check for the whole array, then a bulk chunked copy (this is the
+    /// per-superstep transport hot path).
+    pub fn f32s_into(&mut self, out: &mut Vec<f32>) -> Result<()> {
+        let n = self.count(4)?;
+        let raw = self.take(4 * n)?;
+        out.clear();
+        out.reserve(n);
+        out.extend(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+        );
+        Ok(())
+    }
+
+    /// Decode a prefixed f32 array of exactly `dst.len()` elements (the
+    /// caller read the count) straight into a slice — bulk, like
+    /// [`ByteReader::f32s_into`].
+    pub fn fill_f32s(&mut self, dst: &mut [f32]) -> Result<()> {
+        let raw = self.take(4 * dst.len())?;
+        for (d, c) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+            *d = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.count(8)?;
+        let raw = self.take(8 * n)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn i32s_into(&mut self, out: &mut Vec<i32>) -> Result<()> {
+        let n = self.count(4)?;
+        let raw = self.take(4 * n)?;
+        out.clear();
+        out.reserve(n);
+        out.extend(
+            raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap())),
+        );
+        Ok(())
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.count(4)?;
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.count(8)?;
+        let raw = self.take(8 * n)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect())
+    }
+
+    pub fn usizes_into(&mut self, out: &mut Vec<usize>) -> Result<()> {
+        let n = self.count(8)?;
+        let raw = self.take(8 * n)?;
+        out.clear();
+        out.reserve(n);
+        out.extend(
+            raw.chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize),
+        );
+        Ok(())
+    }
+
+    pub fn pairs(&mut self) -> Result<Vec<(usize, usize)>> {
+        let n = self.count(16)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = self.usize()?;
+            let b = self.usize()?;
+            out.push((a, b));
+        }
+        Ok(out)
+    }
+
+    pub fn pairs_into(&mut self, out: &mut Vec<(usize, usize)>) -> Result<()> {
+        let n = self.count(16)?;
+        out.clear();
+        out.reserve(n);
+        for _ in 0..n {
+            let a = self.usize()?;
+            let b = self.usize()?;
+            out.push((a, b));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 3);
+        put_usize(&mut buf, 123_456);
+        put_f32(&mut buf, -0.0);
+        put_f64(&mut buf, f64::NAN);
+        put_str(&mut buf, "héllo");
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.usize().unwrap(), 123_456);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.f64().unwrap().is_nan());
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn arrays_round_trip_bitwise() {
+        let f = vec![1.5f32, -2.25, f32::MIN_POSITIVE, 0.1];
+        let i = vec![-5i32, 0, 7];
+        let u = vec![3u32, 9];
+        let s = vec![0usize, 42, usize::from(u16::MAX)];
+        let p = vec![(1usize, 2usize), (3, 4)];
+        let mut buf = Vec::new();
+        put_f32s(&mut buf, &f);
+        put_i32s(&mut buf, &i);
+        put_u32s(&mut buf, &u);
+        put_usizes(&mut buf, &s);
+        put_pairs(&mut buf, &p);
+        let mut r = ByteReader::new(&buf);
+        let f2 = r.f32s().unwrap();
+        assert_eq!(f.len(), f2.len());
+        for (a, b) in f.iter().zip(&f2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut i2 = Vec::new();
+        r.i32s_into(&mut i2).unwrap();
+        assert_eq!(i, i2);
+        assert_eq!(r.u32s().unwrap(), u);
+        assert_eq!(r.usizes().unwrap(), s);
+        assert_eq!(r.pairs().unwrap(), p);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn fill_f32s_matches_prefixed_decode() {
+        let f = vec![0.5f32, -1.5, 3.25];
+        let mut buf = Vec::new();
+        put_f32s(&mut buf, &f);
+        let mut r = ByteReader::new(&buf);
+        let n = r.u64().unwrap() as usize;
+        let mut dst = vec![0.0f32; n];
+        r.fill_f32s(&mut dst).unwrap();
+        for (a, b) in f.iter().zip(&dst) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(r.is_empty());
+        // truncated input errors instead of zero-filling
+        let mut r2 = ByteReader::new(&buf[..8]);
+        let _ = r2.u64().unwrap();
+        assert!(r2.fill_f32s(&mut dst).is_err());
+    }
+
+    #[test]
+    fn truncated_input_errors_cleanly() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 10); // array prefix promising 10 f32s
+        put_f32(&mut buf, 1.0); // ...but only one present
+        let mut r = ByteReader::new(&buf);
+        assert!(r.f32s().is_err());
+        let mut r2 = ByteReader::new(&[1, 2]);
+        assert!(r2.u32().is_err());
+    }
+}

@@ -12,12 +12,15 @@
 //!   measures the zero-allocation superstep contract.
 //! * [`json`] — a strict JSON parser/serializer (artifact manifest, configs,
 //!   experiment reports).
+//! * [`bytes`] — little-endian binary codec primitives shared by the
+//!   partition-block serializer and the distributed wire protocol.
 //! * [`cli`] — declarative flag parsing for the `ddopt` binary and examples.
 //! * [`logging`] — leveled stderr logger.
 //! * [`timer`] — monotonic wall timers and [`stats`] summaries used by the
 //!   bench harness (`benchkit` role).
 
 pub mod alloc;
+pub mod bytes;
 pub mod cli;
 pub mod json;
 pub mod logging;

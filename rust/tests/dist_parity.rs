@@ -1,0 +1,238 @@
+//! Sim/dist parity: training over real loopback executor *processes*
+//! must produce final weights bitwise identical to the in-process sim
+//! backend at the same seed — for every coordinator variant — and, under
+//! the `Fixed` cost model, identical simulated clocks too (the dist
+//! backend feeds the same scenario/LPT accounting).  Plus the fault
+//! path: killing an executor mid-run must surface a clean driver error,
+//! never a hang.
+//!
+//! Executors are spawned as real `ddopt executor` child processes on
+//! OS-assigned loopback ports (parsed from their `executor listening on
+//! ADDR` line), exactly how the CI dist-smoke job and the README
+//! quickstart run them.
+
+use anyhow::Result;
+use ddopt::cluster::{ClusterConfig, ClusterMode, CostModel};
+use ddopt::coordinator::{
+    Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa, RadisaConfig, RunResult,
+};
+use ddopt::data::{Grid, Partitioned, SyntheticDense, SyntheticSparse};
+use ddopt::runtime::Backend;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+/// One spawned `ddopt executor` child; killed on drop.
+struct ExecProc {
+    child: Child,
+    addr: String,
+}
+
+impl ExecProc {
+    fn spawn(threads: usize) -> ExecProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_ddopt"))
+            .args([
+                "executor",
+                "--bind",
+                "127.0.0.1:0",
+                "--threads",
+                &threads.to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn ddopt executor");
+        // the executor prints exactly one stdout line, then logs to stderr
+        let stdout = child.stdout.take().expect("executor stdout");
+        let mut line = String::new();
+        BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read executor listen line");
+        let addr = line
+            .trim()
+            .strip_prefix("executor listening on ")
+            .unwrap_or_else(|| panic!("unexpected executor banner: {line:?}"))
+            .to_string();
+        ExecProc { child, addr }
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ExecProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn make_opt(which: &str) -> Box<dyn Optimizer> {
+    match which {
+        "d3ca" => Box::new(D3ca::new(D3caConfig { lambda: 0.2, seed: 9, ..Default::default() })),
+        "radisa" => Box::new(Radisa::new(RadisaConfig {
+            lambda: 0.1,
+            gamma: 0.1,
+            seed: 9,
+            ..Default::default()
+        })),
+        "radisa-avg" => Box::new(Radisa::new(RadisaConfig {
+            lambda: 0.1,
+            gamma: 0.1,
+            average: true,
+            seed: 9,
+            ..Default::default()
+        })),
+        "admm" => Box::new(Admm::new(AdmmConfig { lambda: 0.2, rho: 0.2 })),
+        other => panic!("unknown method {other}"),
+    }
+}
+
+fn run(mode: ClusterMode, which: &str, sparse: bool, iters: usize) -> Result<RunResult> {
+    let ds = if sparse {
+        SyntheticSparse::new("parity-sparse", 48, 36, 0.25, 7).build()
+    } else {
+        SyntheticDense::paper_part1(2, 2, 24, 18, 0.1, 7).build()
+    };
+    let part = Partitioned::split(&ds, Grid::new(2, 2));
+    let backend = Backend::native();
+    let cluster = ClusterConfig {
+        mode,
+        cores: 4,
+        threads: 2,
+        cost: CostModel::Fixed(1e-3),
+        ..Default::default()
+    };
+    let mut opt = make_opt(which);
+    Driver::new(&part, &backend)?
+        .iterations(iters)
+        .cluster(cluster)
+        .run(opt.as_mut())
+}
+
+fn assert_parity(sim: &RunResult, dist: &RunResult, ctx: &str) {
+    assert_eq!(sim.w.len(), dist.w.len(), "{ctx}: w length");
+    for (i, (a, b)) in sim.w.iter().zip(&dist.w).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: w[{i}] {a} vs {b}");
+    }
+    // Fixed cost model: the dist backend charges the identical simulated
+    // clock (same scenario keying, same LPT, same collective charges)
+    assert_eq!(sim.sim_time, dist.sim_time, "{ctx}: sim clock");
+    assert_eq!(sim.supersteps, dist.supersteps, "{ctx}: superstep count");
+    assert_eq!(sim.comm_bytes, dist.comm_bytes, "{ctx}: modeled comm bytes");
+    assert_eq!(sim.messages, dist.messages, "{ctx}: modeled messages");
+    // and the dist run must have really used the wire
+    assert!(sim.wire.is_empty(), "{ctx}: sim backend must not report wire records");
+    assert!(!dist.wire.is_empty(), "{ctx}: dist backend must report wire records");
+    let stage = &dist.wire[0];
+    assert_eq!(stage.op, "stage", "{ctx}: first wire record is staging");
+    assert!(stage.bytes_out > 0, "{ctx}: staging shipped no bytes");
+    let steps: Vec<_> = dist.wire.iter().filter(|r| r.step > 0 && r.op != "prepare-admm").collect();
+    assert_eq!(
+        steps.len(),
+        dist.supersteps,
+        "{ctx}: one wire record per superstep"
+    );
+    for r in steps {
+        assert!(r.bytes_out > 0 && r.bytes_in > 0, "{ctx}: empty exchange at step {}", r.step);
+        assert!(r.wall_secs >= 0.0 && r.wall_secs.is_finite(), "{ctx}: bad wall time");
+    }
+}
+
+#[test]
+fn all_variants_bitwise_match_sim_on_two_executors() {
+    let mut e1 = ExecProc::spawn(2);
+    let mut e2 = ExecProc::spawn(1);
+    let addrs = vec![e1.addr.clone(), e2.addr.clone()];
+    for which in ["d3ca", "radisa", "radisa-avg", "admm"] {
+        let sim = run(ClusterMode::Sim, which, false, 4).unwrap();
+        let dist = run(ClusterMode::Dist(addrs.clone()), which, false, 4).unwrap();
+        assert_parity(&sim, &dist, which);
+    }
+    e1.kill();
+    e2.kill();
+}
+
+#[test]
+fn sparse_parity_on_three_executors() {
+    // 3 executors over a 2x2 grid: uneven ownership (2/1/1 cells) and a
+    // sparse dataset, so block ser/de + CSC rebuild ride the real wire
+    let execs: Vec<ExecProc> = (0..3).map(|_| ExecProc::spawn(1)).collect();
+    let addrs: Vec<String> = execs.iter().map(|e| e.addr.clone()).collect();
+    for which in ["d3ca", "radisa"] {
+        let sim = run(ClusterMode::Sim, which, true, 3).unwrap();
+        let dist = run(ClusterMode::Dist(addrs.clone()), which, true, 3).unwrap();
+        assert_parity(&sim, &dist, &format!("sparse/{which}"));
+    }
+}
+
+#[test]
+fn executor_serves_consecutive_runs() {
+    // one executor process, two full training sessions back to back —
+    // the accept loop must survive a driver disconnect
+    let e = ExecProc::spawn(1);
+    let addrs = vec![e.addr.clone()];
+    let first = run(ClusterMode::Dist(addrs.clone()), "radisa", false, 2).unwrap();
+    let second = run(ClusterMode::Dist(addrs), "radisa", false, 2).unwrap();
+    for (a, b) in first.w.iter().zip(&second.w) {
+        assert_eq!(a.to_bits(), b.to_bits(), "repeat run must be deterministic");
+    }
+}
+
+#[test]
+fn connecting_to_a_dead_executor_errors_cleanly() {
+    let mut e = ExecProc::spawn(1);
+    let addr = e.addr.clone();
+    e.kill();
+    let err = run(ClusterMode::Dist(vec![addr.clone()]), "d3ca", false, 2).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("connect") || msg.contains(addr.split(':').next().unwrap()),
+        "error should name the connection problem: {msg}"
+    );
+}
+
+#[test]
+fn killing_an_executor_mid_run_errors_without_hanging() {
+    let mut e1 = ExecProc::spawn(1);
+    let e2 = ExecProc::spawn(1);
+    let addrs = vec![e1.addr.clone(), e2.addr.clone()];
+    let (tx, rx) = std::sync::mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        // a run long enough that it cannot complete before the kill
+        // lands; eval_every keeps the driver-side objective cheap
+        let ds = SyntheticDense::paper_part1(2, 2, 40, 30, 0.1, 7).build();
+        let part = Partitioned::split(&ds, Grid::new(2, 2));
+        let backend = Backend::native();
+        let cluster = ClusterConfig {
+            mode: ClusterMode::Dist(addrs),
+            cores: 4,
+            threads: 1,
+            cost: CostModel::Fixed(1e-3),
+            ..Default::default()
+        };
+        let mut opt = make_opt("d3ca");
+        let outcome = Driver::new(&part, &backend)
+            .unwrap()
+            .iterations(200_000)
+            .eval_every(10_000)
+            .cluster(cluster)
+            .run(opt.as_mut());
+        tx.send(outcome.map(|_| ())).ok();
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    e1.kill();
+    match rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(outcome) => {
+            let err = outcome.expect_err("driver must error after its executor died");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("executor"),
+                "error should name the executor: {msg}"
+            );
+        }
+        Err(_) => panic!("driver hung after executor was killed"),
+    }
+    worker.join().unwrap();
+}

@@ -268,6 +268,74 @@ fn radisa_avg_beats_radisa_under_stragglers_on_the_sweep() {
     assert!(rel < 0.05, "ideal: {ideal_plain} vs {ideal_avg} differ by {rel}");
 }
 
+// --------------------------------------------------- correlated failures
+
+#[test]
+fn burst_failures_never_fewer_than_iid_at_same_seed_and_rate() {
+    // failures:burst=executor turns the i.i.d. per-task coins into
+    // per-executor bursts (any failing coin takes the whole slot's tasks
+    // down), so at the same seed and rate the total injected failures
+    // must be >= the i.i.d. total — for every (seed, rate, grid shape).
+    ddopt::testkit::forall("burst >= iid failures", 128, |rng| {
+        let seed = rng.next_u64() % 4096;
+        let p = 0.05 + 0.9 * rng.f64();
+        let retries = 1 + (rng.next_u64() % 4) as usize;
+        let n_tasks = 1 + (rng.next_u64() % 24) as usize;
+        let cores = 1 + (rng.next_u64() % 8) as usize;
+        let iid = ClusterScenario {
+            failure_p: p,
+            max_retries: retries,
+            seed,
+            ..Default::default()
+        };
+        let burst = ClusterScenario { failure_burst: true, ..iid.clone() };
+        for step in 0..4 {
+            let total = |sc: &ClusterScenario| -> usize {
+                (0..n_tasks)
+                    .map(|t| sc.perturb_grid(step, t, n_tasks, cores, 1.0, false).extra_attempts)
+                    .sum()
+            };
+            let (ti, tb) = (total(&iid), total(&burst));
+            assert!(
+                tb >= ti,
+                "seed={seed} p={p} tasks={n_tasks} cores={cores} step={step}: \
+                 burst {tb} < iid {ti}"
+            );
+        }
+    });
+}
+
+#[test]
+fn burst_failures_keep_iterates_and_inflate_only_the_clock() {
+    // burst is still strictly cost-side: same w as ideal, clock >= iid
+    let run = |spec: &str| -> RunResult {
+        let ds = SyntheticDense::paper_part1(2, 2, 24, 18, 0.1, 5).build();
+        let part = Partitioned::split(&ds, Grid::new(2, 2));
+        let backend = Backend::native();
+        let mut opt = D3ca::new(D3caConfig { lambda: 0.2, seed: 3, ..Default::default() });
+        Driver::new(&part, &backend)
+            .unwrap()
+            .iterations(4)
+            .cluster(ClusterConfig {
+                cores: 4,
+                threads: 1,
+                cost: CostModel::Fixed(1e-3),
+                scenario: ClusterScenario::parse(spec).unwrap(),
+                ..Default::default()
+            })
+            .run(&mut opt)
+            .unwrap()
+    };
+    let ideal = run("ideal");
+    let iid = run("failures:p=0.4,retries=2,seed=6");
+    let burst = run("failures:p=0.4,retries=2,burst=executor,seed=6");
+    for (a, b) in ideal.w.iter().zip(&burst.w) {
+        assert_eq!(a.to_bits(), b.to_bits(), "burst must never perturb iterates");
+    }
+    assert!(burst.failures >= iid.failures, "{} < {}", burst.failures, iid.failures);
+    assert!(burst.sim_time >= iid.sim_time, "{} < {}", burst.sim_time, iid.sim_time);
+}
+
 #[test]
 fn sweep_is_reproducible_for_a_fixed_seed() {
     let a = sweep(Scale::Small, 2).unwrap();

@@ -23,6 +23,14 @@ Three gates:
    slow neighbor-VM run neither fails the gate spuriously nor poisons
    the baseline.  The gate arms itself once `throughput_min_history`
    passing runs are recorded.
+4. Wire trend — each `wire_keys` entry (bytes-on-the-wire metrics,
+   lower is better) is gated the same median-of-clean-runs way but as an
+   **upper** bound: the current value must be at most `wire_tolerance` x
+   the median.  Byte counts are near-deterministic for a fixed workload,
+   so the tolerance is tight — a payload-bloating change trips it on the
+   first run.  Additionally `wire_min_reduction` is an absolute floor on
+   the broadcast/sliced scatter ratio: if sliced scatter stops paying
+   for itself the gate fails immediately, no history needed.
 
 Every gated run is appended to the history, which is kept as a ring of
 the last HISTORY_LIMIT entries; CI caches the file across runs and
@@ -98,6 +106,54 @@ def check_throughput(bench, history, thresholds, failures):
             )
 
 
+def check_wire(bench, history, thresholds, failures):
+    keys = thresholds.get("wire_keys", [])
+    tolerance = thresholds.get("wire_tolerance", 1.05)
+    window = thresholds.get("throughput_window", 5)
+    min_history = thresholds.get("throughput_min_history", 3)
+    clean = [run for run in history if not run.get("_gate_failed")]
+    for dotted in keys:
+        value = lookup(bench, dotted)
+        if value is None:
+            failures.append(f"{dotted}: missing from bench")
+            continue
+        samples = [lookup(run, dotted) for run in clean[-window:]]
+        samples = [s for s in samples if s is not None and s > 0]
+        if len(samples) < min_history:
+            print(
+                f"  (wire, unarmed) {dotted} = {value} "
+                f"({len(samples)}/{min_history} history runs)"
+            )
+            continue
+        median = statistics.median(samples)
+        ceiling = tolerance * median
+        if value > ceiling:
+            failures.append(
+                f"{dotted}: {value} > {tolerance} x median({len(samples)} runs) "
+                f"= {ceiling:.4g} (wire bloat regression)"
+            )
+        else:
+            print(
+                f"  OK (wire) {dotted} = {value} "
+                f"(ceiling {ceiling:.4g} from median {median:.4g} of {len(samples)})"
+            )
+    min_reduction = thresholds.get("wire_min_reduction")
+    if min_reduction is not None:
+        ratio = lookup(bench, "wire.scatter reduction (broadcast/sliced)")
+        if ratio is None:
+            failures.append("wire.scatter reduction (broadcast/sliced): missing from bench")
+        elif ratio < min_reduction:
+            failures.append(
+                f"wire.scatter reduction (broadcast/sliced): {ratio:.3g} < "
+                f"required {min_reduction} (sliced scatter stopped paying off)"
+            )
+        else:
+            print(
+                f"  OK (wire) scatter reduction {ratio:.3g}x "
+                f"(floor {min_reduction}x, absolute)"
+            )
+
+
 def main() -> int:
     bench = json.load(open(sys.argv[1]))
     thresholds = json.load(open(sys.argv[2]))
@@ -141,6 +197,8 @@ def main() -> int:
 
     # noise-aware throughput gate: current vs median of last N clean runs
     check_throughput(bench, history, thresholds, failures)
+    # wire gate: bytes/superstep upper bound + scatter-reduction floor
+    check_wire(bench, history, thresholds, failures)
 
     if failures:
         bench = dict(bench)

@@ -1,17 +1,22 @@
 #!/usr/bin/env bash
 # dist-smoke: prove the multi-process distributed runtime end to end.
 #
-# Launches two loopback `ddopt executor` processes, trains D3CA and
-# RADiSA on the sim backend and on the dist backend at the same seed,
-# and diffs the bit-exact weight dumps — the acceptance criterion is
-# bitwise identity, not tolerance.  The per-superstep bytes-on-wire
-# records (results/dist_smoke_*_wire.jsonl) are uploaded as a CI
-# artifact for the sim-vs-dist comparison report.
+# Launches three loopback `ddopt executor` processes and trains all four
+# coordinator variants three ways at the same seed: sim backend, dist
+# with the full-broadcast wire (`--dist-wire broadcast`), and dist with
+# the negotiated sliced/folded wire (the default).  Acceptance is
+# bitwise: all three weight dumps must be identical per method.  Then
+# the per-superstep wire logs are aggregated and the sliced transport
+# must ship at most half the scatter bytes of broadcast — the wire
+# optimizations have to keep paying for themselves, not just parse.
+# All wire logs (results/dist_smoke_*_wire.jsonl) are uploaded as CI
+# artifacts for the sim-vs-dist comparison report.
 set -euo pipefail
 
 BIN=${BIN:-./target/release/ddopt}
 PORT1=${PORT1:-7141}
 PORT2=${PORT2:-7142}
+PORT3=${PORT3:-7143}
 OUT=results
 mkdir -p "$OUT"
 
@@ -19,12 +24,14 @@ mkdir -p "$OUT"
 E1=$!
 "$BIN" executor --bind "127.0.0.1:${PORT2}" --threads 2 &
 E2=$!
-trap 'kill "$E1" "$E2" 2>/dev/null || true' EXIT
+"$BIN" executor --bind "127.0.0.1:${PORT3}" --threads 1 &
+E3=$!
+trap 'kill "$E1" "$E2" "$E3" 2>/dev/null || true' EXIT
 
-# wait for both executors to accept connections; fail loudly if one
+# wait for all executors to accept connections; fail loudly if one
 # never comes up (e.g. its port was already taken and the background
 # process died — `set -e` does not cover background jobs)
-for spec in "$PORT1:$E1" "$PORT2:$E2"; do
+for spec in "$PORT1:$E1" "$PORT2:$E2" "$PORT3:$E3"; do
   port=${spec%%:*}
   pid=${spec##*:}
   up=0
@@ -46,26 +53,67 @@ for spec in "$PORT1:$E1" "$PORT2:$E2"; do
   fi
 done
 
-COMMON=(--p 2 --q 2 --n-per 80 --m-per 60 --iters 5 --seed 11 --no-fstar --cores 4)
-for method in d3ca radisa; do
+DIST="dist:127.0.0.1:${PORT1},127.0.0.1:${PORT2},127.0.0.1:${PORT3}"
+# taller-than-wide shape (n >> m, the paper's observation-heavy regime):
+# row-sliced payloads and visit streams split cleanly across executors,
+# so this is where the sliced wire is expected to clear its 2x bar
+COMMON=(--p 2 --q 2 --n-per 160 --m-per 40 --iters 5 --seed 11 --no-fstar --cores 4)
+for method in d3ca radisa radisa-avg admm; do
   "$BIN" train --method "$method" "${COMMON[@]}" --cluster sim \
     --dump-w "$OUT/dist_smoke_${method}_sim.whex"
   "$BIN" train --method "$method" "${COMMON[@]}" \
-    --cluster "dist:127.0.0.1:${PORT1},127.0.0.1:${PORT2}" \
-    --dump-w "$OUT/dist_smoke_${method}_dist.whex" \
-    --wire-out "$OUT/dist_smoke_${method}_wire.jsonl"
-  if ! diff "$OUT/dist_smoke_${method}_sim.whex" "$OUT/dist_smoke_${method}_dist.whex"; then
-    echo "FAIL: ${method} weights differ between sim and dist backends"
-    exit 1
-  fi
-  echo "OK: ${method} weights bitwise identical across sim and dist"
-  # the wire log must record real traffic for every superstep
-  lines=$(wc -l < "$OUT/dist_smoke_${method}_wire.jsonl")
-  if [ "$lines" -lt 2 ]; then
-    echo "FAIL: ${method} wire log has only ${lines} records"
-    exit 1
-  fi
-  echo "OK: ${method} wire log has ${lines} per-superstep records"
+    --cluster "$DIST" --dist-wire broadcast \
+    --dump-w "$OUT/dist_smoke_${method}_broadcast.whex" \
+    --wire-out "$OUT/dist_smoke_${method}_broadcast_wire.jsonl"
+  "$BIN" train --method "$method" "${COMMON[@]}" \
+    --cluster "$DIST" --dist-wire sliced \
+    --dump-w "$OUT/dist_smoke_${method}_sliced.whex" \
+    --wire-out "$OUT/dist_smoke_${method}_sliced_wire.jsonl"
+  for mode in broadcast sliced; do
+    if ! diff "$OUT/dist_smoke_${method}_sim.whex" "$OUT/dist_smoke_${method}_${mode}.whex"; then
+      echo "FAIL: ${method} weights differ between sim and dist (${mode} wire)"
+      exit 1
+    fi
+    # the wire log must record real traffic for every superstep
+    lines=$(wc -l < "$OUT/dist_smoke_${method}_${mode}_wire.jsonl")
+    if [ "$lines" -lt 2 ]; then
+      echo "FAIL: ${method} ${mode} wire log has only ${lines} records"
+      exit 1
+    fi
+  done
+  echo "OK: ${method} weights bitwise identical across sim, broadcast, sliced"
 done
+
+# aggregate scatter bytes across all methods and enforce the >= 2x
+# reduction the sliced wire is supposed to buy on this workload
+python3 - "$OUT" <<'EOF'
+import json
+import sys
+
+out = sys.argv[1]
+totals = {"broadcast": 0, "sliced": 0}
+for method in ["d3ca", "radisa", "radisa-avg", "admm"]:
+    for mode in totals:
+        with open(f"{out}/dist_smoke_{method}_{mode}_wire.jsonl") as fh:
+            for line in fh:
+                rec = json.loads(line)
+                if rec["op"] in ("stage", "prepare-admm"):
+                    continue
+                totals[mode] += rec["bytes_out"]
+                # per-executor splits must sum to the totals
+                if sum(rec["scatter"]) != rec["bytes_out"]:
+                    sys.exit(f"FAIL: scatter split mismatch in {method}/{mode}: {rec}")
+                if sum(rec["gather"]) != rec["bytes_in"]:
+                    sys.exit(f"FAIL: gather split mismatch in {method}/{mode}: {rec}")
+
+ratio = totals["broadcast"] / max(totals["sliced"], 1)
+print(
+    f"scatter bytes: broadcast={totals['broadcast']} sliced={totals['sliced']} "
+    f"reduction={ratio:.2f}x"
+)
+if ratio < 2.0:
+    sys.exit(f"FAIL: sliced scatter reduction {ratio:.2f}x < required 2.0x")
+print("OK: sliced scatter ships <= half the broadcast bytes")
+EOF
 
 echo "dist-smoke passed"

@@ -278,6 +278,107 @@ pub fn spawn_overhead(_threads: usize, _n_tasks: usize, _reps: usize) -> Vec<(St
     Vec::new()
 }
 
+/// Measured distributed wire traffic at 3 loopback executors, in both
+/// wire modes: per-op and aggregate bytes on the wire per superstep plus
+/// mean exchange round-trip.  "broadcast" is the full-payload baseline
+/// (`--dist-wire broadcast`: no sliced scatter, no gather folding,
+/// round-robin ownership); "sliced" is the negotiated default.  Final
+/// weights are bit-identical across the two (and to the sim backend) —
+/// only the byte counts move, which is exactly what this section tracks.
+pub fn wire_profile() -> Result<Vec<(String, f64)>> {
+    use crate::cluster::{dist, ClusterMode, CostModel, WireMode};
+    use std::collections::BTreeMap;
+
+    fn spawn_executors(
+        n: usize,
+        threads: usize,
+    ) -> Result<(Vec<String>, Vec<std::thread::JoinHandle<Result<()>>>)> {
+        let mut addrs = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+            addrs.push(listener.local_addr()?.to_string());
+            handles.push(std::thread::spawn(move || {
+                dist::serve_listener(listener, threads, true)
+            }));
+        }
+        Ok((addrs, handles))
+    }
+
+    let backend = Backend::native();
+    let ds = SyntheticDense::paper_part1(2, 2, 160, 120, 0.1, 11).build();
+    let part = Partitioned::split(&ds, Grid::new(2, 2));
+    let mut out: Vec<(String, f64)> = Vec::new();
+    let mut agg_out = [0.0f64; 2];
+    for (mi, (mode, label)) in
+        [(WireMode::Broadcast, "broadcast"), (WireMode::Sliced, "sliced")]
+            .into_iter()
+            .enumerate()
+    {
+        // (supersteps, bytes out, bytes in) per op kind, plus totals
+        let mut per_op: BTreeMap<&'static str, (usize, usize, usize)> = BTreeMap::new();
+        let (mut steps, mut bytes_out, mut bytes_in, mut wall) = (0usize, 0usize, 0usize, 0.0f64);
+        for method in ["d3ca", "radisa"] {
+            // fresh single-session executors per run; `Driver::run`'s
+            // shutdown lets each `serve_listener(.., once=true)` return
+            let (addrs, handles) = spawn_executors(3, 2)?;
+            let cfg = ClusterConfig {
+                mode: ClusterMode::Dist(addrs),
+                cores: 4,
+                threads: 2,
+                cost: CostModel::Fixed(1e-3),
+                wire: mode,
+                ..Default::default()
+            };
+            let mut opt: Box<dyn Optimizer> = match method {
+                "d3ca" => Box::new(D3ca::new(D3caConfig { lambda: 0.1, ..Default::default() })),
+                _ => Box::new(Radisa::new(RadisaConfig {
+                    lambda: 0.1,
+                    gamma: 0.05,
+                    ..Default::default()
+                })),
+            };
+            let r = Driver::new(&part, &backend)?
+                .iterations(4)
+                .eval_every(usize::MAX)
+                .cluster(cfg)
+                .run(opt.as_mut())?;
+            for rec in &r.wire {
+                if rec.op == "stage" || rec.op == "prepare-admm" {
+                    continue;
+                }
+                steps += 1;
+                bytes_out += rec.bytes_out;
+                bytes_in += rec.bytes_in;
+                wall += rec.wall_secs;
+                let e = per_op.entry(rec.op).or_insert((0, 0, 0));
+                e.0 += 1;
+                e.1 += rec.bytes_out;
+                e.2 += rec.bytes_in;
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("executor thread panicked"))??;
+            }
+        }
+        for (op, (n, o, i)) in &per_op {
+            out.push((format!("{label} {op} bytes_out/step"), *o as f64 / *n as f64));
+            out.push((format!("{label} {op} bytes_in/step"), *i as f64 / *n as f64));
+        }
+        agg_out[mi] = bytes_out as f64 / steps.max(1) as f64;
+        out.push((format!("{label} bytes_out/superstep"), agg_out[mi]));
+        out.push((
+            format!("{label} bytes_in/superstep"),
+            bytes_in as f64 / steps.max(1) as f64,
+        ));
+        out.push((format!("{label} step rtt ms"), wall / steps.max(1) as f64 * 1e3));
+    }
+    if agg_out[1] > 0.0 {
+        out.push(("scatter reduction (broadcast/sliced)".into(), agg_out[0] / agg_out[1]));
+    }
+    Ok(out)
+}
+
 /// Run `step(t)` for `warmup` iterations, then measure the allocator
 /// call count across `iters` further iterations.  `None` without the
 /// `bench-alloc` feature.
@@ -563,6 +664,11 @@ pub fn run(scale: Scale) -> Result<()> {
             v.map(fmt).unwrap_or_else(|| "n/a (build with --features bench-alloc)".into()),
         ]);
     }
+    // distributed transport: bytes/superstep + RTT, broadcast vs sliced
+    let wire = wire_profile()?;
+    for (k, v) in &wire {
+        rows.push(vec!["L3-wire".into(), k.clone(), fmt(*v)]);
+    }
     let xla = xla_op_times((512, 512))?;
     for (k, v) in &xla {
         rows.push(vec!["L2-xla".into(), k.clone(), fmt(*v)]);
@@ -583,7 +689,7 @@ pub fn run(scale: Scale) -> Result<()> {
             .collect(),
     );
     let doc = Json::obj(vec![
-        ("schema", Json::str("ddopt-perf/2")),
+        ("schema", Json::str("ddopt-perf/3")),
         ("generated_by", Json::str("ddopt exp perf")),
         (
             "provenance",
@@ -610,6 +716,7 @@ pub fn run(scale: Scale) -> Result<()> {
         ("sparse_kernels", json_section(&sparse)),
         ("coordinator", json_section(&coord)),
         ("pool", json_section(&pool)),
+        ("wire", json_section(&wire)),
         ("steady_state_allocs", alloc_json),
         ("xla", json_section(&xla)),
         ("l1_estimates", json_section(&l1)),
@@ -673,6 +780,27 @@ mod tests {
         for (k, v) in &rows {
             assert!(*v > 0.0, "{k} = {v}");
         }
+    }
+
+    #[test]
+    fn wire_profile_shows_sliced_shrinks_scatter() {
+        let rows = wire_profile().unwrap();
+        let get = |key: &str| {
+            rows.iter()
+                .find(|(k, _)| k == key)
+                .unwrap_or_else(|| panic!("missing row {key}"))
+                .1
+        };
+        let broadcast = get("broadcast bytes_out/superstep");
+        let sliced = get("sliced bytes_out/superstep");
+        assert!(broadcast > 0.0 && sliced > 0.0);
+        assert!(
+            sliced < broadcast,
+            "sliced scatter ({sliced}) should ship fewer bytes than broadcast ({broadcast})"
+        );
+        assert!(get("scatter reduction (broadcast/sliced)") > 1.0);
+        // folded gather must not grow the reply side either
+        assert!(get("sliced bytes_in/superstep") <= get("broadcast bytes_in/superstep"));
     }
 
     #[test]

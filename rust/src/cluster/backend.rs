@@ -153,17 +153,110 @@ impl<'a> GridOp<'a> {
         }
     }
 
-    /// Which of `n_execs` executors runs task `task` (round-robin over
-    /// grid cells, so an executor always owns the blocks its tasks
-    /// touch).  [`GridOp::ProxHinge`] tasks only need the labels — which
-    /// every executor holds — so they round-robin over the row index
-    /// directly for balance.
-    pub fn owner(&self, part: &Partitioned, task: usize, n_execs: usize) -> usize {
+    /// Which of `n_execs` executors runs task `task`.  Keyed on the flat
+    /// grid cell ([`GridOp::cell`]) through the active [`Ownership`]
+    /// layout, so an executor always owns the blocks its tasks touch.
+    /// Under [`Ownership::RoundRobin`], [`GridOp::ProxHinge`] tasks only
+    /// need the labels — which every executor holds — so they round-robin
+    /// over the row index directly for balance (the legacy keying the
+    /// full-broadcast wire mode keeps).
+    pub fn owner(
+        &self,
+        part: &Partitioned,
+        task: usize,
+        n_execs: usize,
+        ownership: Ownership,
+    ) -> usize {
         let n = n_execs.max(1);
-        match self {
-            GridOp::ProxHinge { .. } => task % n,
-            _ => self.cell(part, task) % n,
+        match (self, ownership) {
+            (GridOp::ProxHinge { .. }, Ownership::RoundRobin) => task % n,
+            _ => ownership.owner(self.cell(part, task), part.grid.k(), n),
         }
+    }
+
+    /// Which axis of the segment-combine tree this op's gathered slab is
+    /// reduced over ([`ClusterBackend::reduce_segments`] call sites in the
+    /// coordinators) — what decides whether executors may pre-fold their
+    /// locally-owned subtrees before replying.  ADMM's projection outputs
+    /// are reduced only after driver-side modification (ŵ = w_loc + u),
+    /// so they carry no fold axis.
+    pub fn fold_axis(&self) -> FoldAxis {
+        match self {
+            GridOp::Sdca { .. } | GridOp::Margins { .. } => FoldAxis::OverQ,
+            GridOp::Atx { .. } | GridOp::Grad { .. } => FoldAxis::OverP,
+            _ => FoldAxis::None,
+        }
+    }
+
+    /// Reduce-tree geometry of `task`'s combine group, for ops with a
+    /// [`FoldAxis`]: the group's `reduce_segments(slab, base, stride,
+    /// count, len)` arguments plus which leaf of that group the task is
+    /// and the task-index stride between adjacent leaves.
+    pub fn fold_group(&self, part: &Partitioned, task: usize) -> Option<FoldGroup> {
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let (p, q) = (task / qq, task % qq);
+        match self.fold_axis() {
+            FoldAxis::OverQ => {
+                let (r0, r1) = part.row_ranges[p];
+                Some(FoldGroup {
+                    base: qq * r0,
+                    stride: r1 - r0,
+                    count: qq,
+                    len: r1 - r0,
+                    leaf: q,
+                    task_stride: 1,
+                })
+            }
+            FoldAxis::OverP => {
+                let (c0, c1) = part.col_ranges[q];
+                Some(FoldGroup {
+                    base: c0,
+                    stride: part.m,
+                    count: pp,
+                    len: c1 - c0,
+                    leaf: p,
+                    task_stride: qq,
+                })
+            }
+            FoldAxis::None => None,
+        }
+    }
+
+    /// Coalesced global *row* ranges the given tasks read row-indexed
+    /// state from (Sdca `alpha`, Atx `v`, Grad/Svrg `mt`, ProxHinge `c`)
+    /// — what the sliced scatter ships instead of the full vector.
+    pub fn read_row_ranges(&self, part: &Partitioned, tasks: &[usize]) -> Vec<(usize, usize)> {
+        let qq = part.grid.q;
+        let mut marked = vec![false; part.grid.p];
+        for &t in tasks {
+            marked[self.cell(part, t) / qq] = true;
+        }
+        coalesce_marked(&marked, &part.row_ranges)
+    }
+
+    /// Coalesced global *column* ranges the given tasks read col-indexed
+    /// state from (Sdca/Margins/Svrg `w`, Svrg `mu`).
+    pub fn read_col_ranges(&self, part: &Partitioned, tasks: &[usize]) -> Vec<(usize, usize)> {
+        let qq = part.grid.q;
+        let mut marked = vec![false; qq];
+        for &t in tasks {
+            marked[self.cell(part, t) % qq] = true;
+        }
+        coalesce_marked(&marked, &part.col_ranges)
+    }
+
+    /// Coalesced `(start, len)` ranges of the given (ascending) tasks'
+    /// primary-output spans — the slices of a slab-shaped *input* an
+    /// executor needs when the op reads where it writes (AdmmProject's
+    /// ŵ).
+    pub fn out_span_ranges(&self, part: &Partitioned, tasks: &[usize]) -> Vec<(usize, usize)> {
+        coalesce_spans(tasks.iter().map(|&t| self.out_span(part, t)))
+    }
+
+    /// Like [`GridOp::out_span_ranges`] for the secondary output slab
+    /// (AdmmProject's ẑ).
+    pub fn out2_span_ranges(&self, part: &Partitioned, tasks: &[usize]) -> Vec<(usize, usize)> {
+        coalesce_spans(tasks.iter().map(|&t| self.out2_span(part, t)))
     }
 
     /// Total primary-output slab length.
@@ -363,6 +456,117 @@ impl<'a> GridOp<'a> {
             }
         }
     }
+}
+
+/// How grid cells (and thus tasks) are laid out across executors.
+///
+/// Round-robin is the legacy layout and the full-broadcast wire mode's
+/// default; contiguous ranges are what the folded-gather optimization
+/// negotiates (`CAP_CONTIG_FOLD`): an executor's leaves within any one
+/// reduce group form a contiguous run, so it can pre-combine aligned
+/// subtrees of the segment-combine tree locally before replying.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Ownership {
+    /// `item % n_execs` — interleaved, the PR-5 wire layout.
+    #[default]
+    RoundRobin,
+    /// Balanced contiguous ranges, identical to
+    /// [`balanced_ranges`](crate::data::balanced_ranges)`(k, n_execs)`:
+    /// the first `k % n` executors own `⌈k/n⌉` items, the rest `⌊k/n⌋`.
+    Contiguous,
+}
+
+impl Ownership {
+    /// Owner of item `i` among `k` items over `n` executors (O(1)).
+    pub fn owner(&self, i: usize, k: usize, n: usize) -> usize {
+        let n = n.max(1);
+        match self {
+            Ownership::RoundRobin => i % n,
+            Ownership::Contiguous => {
+                let big = k % n;
+                let small = k / n;
+                let threshold = big * (small + 1);
+                if i < threshold {
+                    i / (small + 1)
+                } else {
+                    big + (i - threshold) / small.max(1)
+                }
+            }
+        }
+    }
+
+    /// Wire encoding of the mode byte carried in the Stage frame.
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Ownership::RoundRobin => 0,
+            Ownership::Contiguous => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<Ownership> {
+        Ok(match v {
+            0 => Ownership::RoundRobin,
+            1 => Ownership::Contiguous,
+            other => anyhow::bail!("unknown ownership mode byte {other}"),
+        })
+    }
+}
+
+/// Which grid axis an op's gathered slab is reduced over (see
+/// [`GridOp::fold_axis`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FoldAxis {
+    /// No segment-combine follows this op's gather.
+    None,
+    /// Per row partition p, the qq per-cell segments are summed.
+    OverQ,
+    /// Per feature partition q, the pp per-cell segments are summed.
+    OverP,
+}
+
+/// One task's position in its segment-combine group (see
+/// [`GridOp::fold_group`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FoldGroup {
+    /// `reduce_segments` base offset of the group in the output slab.
+    pub base: usize,
+    /// Element stride between adjacent leaves.
+    pub stride: usize,
+    /// Leaves in the group.
+    pub count: usize,
+    /// Elements per leaf segment.
+    pub len: usize,
+    /// This task's leaf index within the group.
+    pub leaf: usize,
+    /// Task-index distance between adjacent leaves of the group.
+    pub task_stride: usize,
+}
+
+/// Merge the ranges of marked partitions into maximal contiguous runs.
+fn coalesce_marked(marked: &[bool], ranges: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    coalesce_spans(
+        marked
+            .iter()
+            .zip(ranges)
+            .filter(|(&m, _)| m)
+            .map(|(_, &(a, b))| (a, b - a)),
+    )
+}
+
+/// Merge an ascending sequence of `(start, len)` spans, joining spans
+/// that touch end-to-start.
+fn coalesce_spans(spans: impl Iterator<Item = (usize, usize)>) -> Vec<(usize, usize)> {
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for (s, l) in spans {
+        if l == 0 {
+            continue;
+        }
+        match out.last_mut() {
+            Some((ps, pl)) if *ps + *pl == s => *pl += l,
+            _ => out.push((s, l)),
+        }
+    }
+    out
 }
 
 /// Unified per-worker scratch for every [`GridOp`] kernel — one cell per
@@ -667,6 +871,160 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn contiguous_ownership_matches_balanced_ranges() {
+        use crate::data::balanced_ranges;
+        for (k, n) in [(4usize, 3usize), (6, 4), (9, 3), (5, 1), (2, 5), (7, 7)] {
+            let ranges = balanced_ranges(k, n);
+            for (e, (a, b)) in ranges.iter().enumerate() {
+                for i in *a..*b {
+                    assert_eq!(
+                        Ownership::Contiguous.owner(i, k, n),
+                        e,
+                        "k={k} n={n} item {i}"
+                    );
+                }
+            }
+            for i in 0..k {
+                assert_eq!(Ownership::RoundRobin.owner(i, k, n), i % n);
+            }
+        }
+    }
+
+    #[test]
+    fn ownership_wire_byte_round_trips() {
+        for o in [Ownership::RoundRobin, Ownership::Contiguous] {
+            assert_eq!(Ownership::from_u8(o.to_u8()).unwrap(), o);
+        }
+        assert!(Ownership::from_u8(9).is_err());
+    }
+
+    #[test]
+    fn contiguous_owners_make_fold_leaves_contiguous() {
+        // the folded-gather precondition: under contiguous ownership, the
+        // leaves an executor owns within any one combine group form a
+        // contiguous run — for both fold axes, on an uneven grid
+        for (p, q) in [(2usize, 3usize), (3, 2), (4, 4)] {
+            let ds = SyntheticDense::paper_part1(p, q, 7, 5, 0.1, 5).build();
+            let part = Partitioned::split(&ds, Grid::new(p, q));
+            let v = vec![0.0f32; part.n];
+            let w = vec![0.0f32; part.m];
+            for op in [GridOp::Atx { v: &v }, GridOp::Margins { w: &w }] {
+                for n_execs in 1..=p * q {
+                    let n_tasks = op.n_tasks(&part);
+                    for e in 0..n_execs {
+                        // group leaves owned by e, per group key
+                        let mut per_group: std::collections::HashMap<usize, Vec<usize>> =
+                            Default::default();
+                        for t in 0..n_tasks {
+                            if op.owner(&part, t, n_execs, Ownership::Contiguous) == e {
+                                let g = op.fold_group(&part, t).unwrap();
+                                per_group.entry(g.base).or_default().push(g.leaf);
+                            }
+                        }
+                        for (base, leaves) in per_group {
+                            for pair in leaves.windows(2) {
+                                assert_eq!(
+                                    pair[1],
+                                    pair[0] + 1,
+                                    "{}x{} {} execs={n_execs} e={e} base={base}",
+                                    p,
+                                    q,
+                                    op.name()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_group_geometry_matches_reduce_call_sites() {
+        let (ds, grid) = fixture();
+        let part = Partitioned::split(&ds, grid);
+        let v = vec![0.0f32; part.n];
+        let w = vec![0.0f32; part.m];
+        let qq = part.grid.q;
+        // OverQ (Sdca/Margins): per p, reduce_segments(base=qq*r0,
+        // stride=n_p, count=qq, len=n_p) — see d3ca.rs / radisa.rs
+        let op = GridOp::Margins { w: &w };
+        for task in 0..op.n_tasks(&part) {
+            let (p, q) = (task / qq, task % qq);
+            let (r0, r1) = part.row_ranges[p];
+            let g = op.fold_group(&part, task).unwrap();
+            assert_eq!(
+                (g.base, g.stride, g.count, g.len, g.leaf, g.task_stride),
+                (qq * r0, r1 - r0, qq, r1 - r0, q, 1)
+            );
+            // the group's leaf spans are exactly the member tasks' out spans
+            assert_eq!(op.out_span(&part, task), (g.base + g.leaf * g.stride, g.len));
+        }
+        // OverP (Atx/Grad): per q, reduce_segments(base=c0, stride=m,
+        // count=pp, len=c1-c0)
+        let op = GridOp::Atx { v: &v };
+        for task in 0..op.n_tasks(&part) {
+            let (p, q) = (task / qq, task % qq);
+            let (c0, c1) = part.col_ranges[q];
+            let g = op.fold_group(&part, task).unwrap();
+            assert_eq!(
+                (g.base, g.stride, g.count, g.len, g.leaf, g.task_stride),
+                (c0, part.m, part.grid.p, c1 - c0, p, qq)
+            );
+            assert_eq!(op.out_span(&part, task), (g.base + g.leaf * g.stride, g.len));
+        }
+        // no fold axis for driver-modified or fold-free ops
+        assert_eq!(GridOp::AdmmProject { w_hat: &w, z_hat: &v }.fold_axis(), FoldAxis::None);
+        assert_eq!(
+            GridOp::ProxHinge { c: &v, rho: 0.1, inv_n: 1.0 }.fold_axis(),
+            FoldAxis::None
+        );
+    }
+
+    #[test]
+    fn read_ranges_coalesce_and_cover() {
+        let (ds, grid) = fixture();
+        let part = Partitioned::split(&ds, grid);
+        let v = vec![0.0f32; part.n];
+        let w = vec![0.0f32; part.m];
+        let op = GridOp::Margins { w: &w };
+        // all tasks → one full-span range per axis
+        let all: Vec<usize> = (0..op.n_tasks(&part)).collect();
+        assert_eq!(op.read_col_ranges(&part, &all), vec![(0, part.m)]);
+        assert_eq!(op.read_row_ranges(&part, &all), vec![(0, part.n)]);
+        // a single task → exactly its blocks' ranges
+        let op = GridOp::Atx { v: &v };
+        let t = part.grid.q + 1; // (p=1, q=1) on the 2x3 grid
+        let (r0, r1) = part.row_ranges[1];
+        assert_eq!(op.read_row_ranges(&part, &[t]), vec![(r0, r1 - r0)]);
+        // non-adjacent column partitions stay split
+        let op = GridOp::Margins { w: &w };
+        let (c0, c1) = part.col_ranges[0];
+        let (e0, e1) = part.col_ranges[2];
+        assert_eq!(
+            op.read_col_ranges(&part, &[0, 2]),
+            vec![(c0, c1 - c0), (e0, e1 - e0)]
+        );
+        // AdmmProject ships its own out spans back in as inputs
+        let op = GridOp::AdmmProject { w_hat: &w, z_hat: &v };
+        for task in 0..op.n_tasks(&part) {
+            let (s, l) = op.out_span(&part, task);
+            assert_eq!(op.out_span_ranges(&part, &[task]), vec![(s, l)]);
+            let (s2, l2) = op.out2_span(&part, task);
+            assert_eq!(op.out2_span_ranges(&part, &[task]), vec![(s2, l2)]);
+        }
+        // adjacent out spans coalesce (tasks 0..k ascending tile the slab)
+        assert_eq!(
+            op.out_span_ranges(&part, &all),
+            vec![(0, part.grid.p * part.m)]
+        );
+        assert_eq!(
+            op.out2_span_ranges(&part, &all),
+            vec![(0, part.grid.q * part.n)]
+        );
     }
 
     #[test]

@@ -1,39 +1,61 @@
 //! [`DistCluster`] — the driver-side transport: a [`ClusterBackend`]
 //! whose supersteps execute on real executor processes over TCP.
 //!
-//! Per superstep the driver encodes the [`GridOp`] descriptor once
-//! (iterates, index streams — kilobytes, never the training data),
-//! broadcasts it to every executor, and gathers each task's result
-//! segment back into the coordinator's output slab at the position
-//! [`GridOp::out_span`] dictates.  Combining then happens through the
-//! *identical* [`reduce_segments`](crate::cluster::SimCluster::reduce_segments)
-//! code as the sim backend — level-by-level adjacent-survivor pairing,
-//! `dst += src` — so the physical gather is rooted at the driver while
-//! the arithmetic reuses [`tree_aggregate`](crate::cluster::comm::tree_aggregate)'s
-//! combine order exactly: final weights are bit-identical to `--cluster
-//! sim` at the same seed (asserted by `tests/dist_parity.rs`).
+//! Per superstep the driver encodes the [`GridOp`] descriptor (iterates,
+//! index streams — kilobytes, never the training data) and exchanges it
+//! with the fleet:
+//!
+//! * **sliced scatter** (negotiated via [`wire::CAP_SLICED`]) — each
+//!   executor's Step frame carries only the state ranges and per-task
+//!   streams its owned tasks read ([`ops::encode_op_sliced`]); without
+//!   the capability every executor receives the identical full payload.
+//! * **pipelined, readiness-ordered fan-out** — all per-executor frames
+//!   are written with nonblocking I/O before any reply is awaited, and
+//!   replies are consumed in *arrival* order, so one slow executor never
+//!   serializes the whole exchange.  The sim backend's
+//!   lowest-task-index-wins error rule is order-independent, so arrival
+//!   order changes nothing observable.
+//! * **folded gather** (negotiated via [`wire::CAP_CONTIG_FOLD`], which
+//!   also switches cell ownership to contiguous ranges) — executors
+//!   pre-combine their locally-owned aligned subtrees of the
+//!   segment-combine tree before replying; the driver validates each
+//!   fold against [`GridOp::fold_group`] geometry, logs it as a
+//!   [`FoldEntry`], and later skips exactly those pairs in
+//!   [`SimCluster::reduce_segments_folded`] — same pairing order, same
+//!   bits, fewer bytes and adds.
+//!
+//! Gathered segments land in the coordinator's output slab at the
+//! position [`GridOp::out_span`] dictates, and combining reuses
+//! [`tree_aggregate`](crate::cluster::comm::tree_aggregate)'s order
+//! exactly: final weights are bit-identical to `--cluster sim` at the
+//! same seed, in both wire modes (asserted by `tests/dist_parity.rs`).
 //!
 //! Accounting is double-entry: executors report *measured* per-task
 //! seconds, which feed the same scenario/LPT simulated-clock charge as
 //! the sim backend ([`SimCluster::charge_measured`]), while every
-//! exchange also lands in a [`WireRecord`] — real wall seconds, bytes
-//! out, bytes in — so `ddopt train --wire-out` can put the cost model
-//! and the measured transport side by side in one report.
+//! exchange also lands in a [`WireRecord`] — real wall seconds plus
+//! per-executor scatter/gather byte splits — so `ddopt train --wire-out`
+//! can put the cost model and the measured transport side by side.
 //!
 //! Failure semantics: per-task kernel errors reproduce the sim backend's
 //! lowest-task-index-wins rule across executors (the superstep still
 //! charges the clock); a dead or misbehaving executor (connection reset,
-//! protocol violation, read timeout) surfaces as a clean `Err` naming
-//! the executor — the driver never hangs on a killed peer.
+//! protocol violation, fold that fails validation, exchange deadline)
+//! surfaces as a clean `Err` naming the executor — the driver never
+//! hangs on a killed peer.
 
 use super::ops;
 use super::wire::{self, Tag};
-use crate::cluster::{ClusterBackend, ClusterConfig, GridOp, SimClock, SimCluster};
+use crate::cluster::{
+    ClusterBackend, ClusterConfig, FoldAxis, FoldEntry, GridOp, Ownership, SimClock,
+    SimCluster, WireMode,
+};
 use crate::data::{encode_block, Partitioned};
 use crate::metrics::WireRecord;
 use crate::runtime::StagedGrid;
 use crate::util::bytes::{self, ByteReader};
 use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -42,6 +64,8 @@ use std::time::{Duration, Instant};
 /// CI.  Workloads whose single superstep legitimately computes longer
 /// (big datasets, few executor threads) raise it with
 /// `DDOPT_DIST_READ_TIMEOUT_SECS` (`0` disables the timeout entirely).
+/// The pipelined exchange applies the same budget as its whole-superstep
+/// deadline.
 const DEFAULT_READ_TIMEOUT_SECS: u64 = 60;
 
 fn read_timeout() -> Option<Duration> {
@@ -64,19 +88,38 @@ pub struct DistCluster {
     /// exact code the sim backend runs, fed with measured durations.
     sim: SimCluster,
     conns: Vec<ExecConn>,
+    /// Effective capability mask: offered by the driver's [`WireMode`],
+    /// ANDed over every executor's ack.
+    caps: u32,
+    /// Cell→executor layout the whole session runs under.
+    ownership: Ownership,
     wire_log: Vec<WireRecord>,
     step_id: u64,
+    /// Shared full-payload Step body (broadcast mode).
     send_buf: Vec<u8>,
+    /// Per-executor sliced Step bodies.
+    send_bufs: Vec<Vec<u8>>,
+    /// Per-executor reply bodies (pipelined gather).
+    recv_bufs: Vec<Vec<u8>>,
+    /// Control-plane reply scratch (handshake, acks, shutdown).
     recv_buf: Vec<u8>,
+    /// Per-executor owned task lists of the superstep in flight.
+    owned_lists: Vec<Vec<usize>>,
     /// Per-task measured durations of the superstep in flight.
     durs: Vec<f64>,
     seen: Vec<bool>,
+    /// Tasks absorbed by a validated executor-side fold this superstep.
+    folded_away: Vec<bool>,
+    /// Validated folds of the last superstep, consumed by
+    /// [`ClusterBackend::reduce_segments`].
+    fold_log: Vec<FoldEntry>,
 }
 
 impl DistCluster {
-    /// Connect to the executors, run the versioned handshake, and ship
-    /// each its owned grid blocks (round-robin by flat cell index — the
-    /// same keying [`GridOp::owner`] uses per superstep).
+    /// Connect to the executors, run the versioned capability handshake,
+    /// and ship each its owned grid blocks under the negotiated
+    /// [`Ownership`] layout — the same keying [`GridOp::owner`] uses per
+    /// superstep.
     pub fn connect(
         config: ClusterConfig,
         addrs: &[String],
@@ -86,10 +129,16 @@ impl DistCluster {
             bail!("--cluster dist wants at least one executor address");
         }
         let n_execs = addrs.len();
+        let offered = match config.wire {
+            WireMode::Sliced => wire::CAPS_SUPPORTED,
+            WireMode::Broadcast => 0,
+        };
         let t0 = Instant::now();
-        let (mut bytes_out, mut bytes_in) = (0usize, 0usize);
+        let mut scatter = vec![0usize; n_execs];
+        let mut gather = vec![0usize; n_execs];
         let mut recv_buf = Vec::new();
         let mut conns = Vec::with_capacity(n_execs);
+        let mut caps = offered;
         for (i, addr) in addrs.iter().enumerate() {
             let mut stream = TcpStream::connect(addr)
                 .with_context(|| format!("connect to executor {i} at {addr}"))?;
@@ -100,8 +149,9 @@ impl DistCluster {
             bytes::put_u32(&mut hello, wire::PROTO_VERSION);
             bytes::put_u32(&mut hello, i as u32);
             bytes::put_u32(&mut hello, n_execs as u32);
-            bytes_out += wire::write_frame(&mut stream, Tag::Hello, &hello)?;
-            bytes_in += wire::expect_frame(&mut stream, &mut recv_buf, Tag::HelloAck)
+            bytes::put_u32(&mut hello, offered);
+            scatter[i] += wire::write_frame(&mut stream, Tag::Hello, &hello)?;
+            gather[i] += wire::expect_frame(&mut stream, &mut recv_buf, Tag::HelloAck)
                 .with_context(|| format!("handshake with executor {i} at {addr}"))?;
             let mut r = ByteReader::new(&recv_buf);
             let magic = r.u32()?;
@@ -114,23 +164,43 @@ impl DistCluster {
                 );
             }
             let threads = r.u32()? as usize;
+            let acked = r.u32()?;
+            if acked & !offered != 0 {
+                bail!(
+                    "executor {i} at {addr} acked capabilities {acked:#x} \
+                     it was never offered ({offered:#x})"
+                );
+            }
+            // the fleet runs at the AND of every ack: one stale executor
+            // downgrades the session instead of breaking it
+            caps &= acked;
             conns.push(ExecConn { stream, addr: addr.clone(), threads });
         }
+        let ownership = if caps & wire::CAP_CONTIG_FOLD != 0 {
+            Ownership::Contiguous
+        } else {
+            Ownership::RoundRobin
+        };
 
-        // stage: metadata to everyone, each block to its one owner
+        // stage: metadata to everyone, each block to its one owner —
+        // pipelined (all frames written before any ack is awaited)
         for (i, conn) in conns.iter_mut().enumerate() {
             let mut body = Vec::new();
+            bytes::put_u8(&mut body, ownership.to_u8());
             part.encode_meta(&mut body);
-            let owned: Vec<usize> =
-                (0..part.grid.k()).filter(|cell| cell % n_execs == i).collect();
+            let owned: Vec<usize> = (0..part.grid.k())
+                .filter(|&cell| ownership.owner(cell, part.grid.k(), n_execs) == i)
+                .collect();
             bytes::put_u32(&mut body, owned.len() as u32);
             for &cell in &owned {
                 bytes::put_usize(&mut body, cell);
                 encode_block(&part.blocks[cell], &mut body);
             }
-            bytes_out += wire::write_frame(&mut conn.stream, Tag::Stage, &body)
+            scatter[i] += wire::write_frame(&mut conn.stream, Tag::Stage, &body)
                 .with_context(|| format!("stage blocks on executor {i} at {}", conn.addr))?;
-            bytes_in += wire::expect_frame(&mut conn.stream, &mut recv_buf, Tag::StageAck)
+        }
+        for (i, conn) in conns.iter_mut().enumerate() {
+            gather[i] += wire::expect_frame(&mut conn.stream, &mut recv_buf, Tag::StageAck)
                 .with_context(|| format!("stage ack from executor {i} at {}", conn.addr))?;
         }
 
@@ -138,19 +208,28 @@ impl DistCluster {
             step: 0,
             op: "stage",
             wall_secs: t0.elapsed().as_secs_f64(),
-            bytes_out,
-            bytes_in,
+            bytes_out: scatter.iter().sum(),
+            bytes_in: gather.iter().sum(),
             sim_secs: 0.0,
+            scatter,
+            gather,
         }];
         Ok(DistCluster {
             sim: SimCluster::new(config),
             conns,
+            caps,
+            ownership,
             wire_log,
             step_id: 0,
             send_buf: Vec::new(),
+            send_bufs: vec![Vec::new(); n_execs],
+            recv_bufs: vec![Vec::new(); n_execs],
             recv_buf,
+            owned_lists: vec![Vec::new(); n_execs],
             durs: Vec::new(),
             seen: Vec::new(),
+            folded_away: Vec::new(),
+            fold_log: Vec::new(),
         })
     }
 
@@ -161,6 +240,16 @@ impl DistCluster {
 
     pub fn n_executors(&self) -> usize {
         self.conns.len()
+    }
+
+    /// The negotiated capability mask (AND over every executor's ack).
+    pub fn capabilities(&self) -> u32 {
+        self.caps
+    }
+
+    /// The session's cell→executor layout.
+    pub fn ownership(&self) -> Ownership {
+        self.ownership
     }
 }
 
@@ -188,10 +277,20 @@ impl ClusterBackend for DistCluster {
         // `step` (staging alone owns 0); superstep records simply skip
         // this number
         self.step_id += 1;
-        let (mut bytes_out, mut bytes_in) = (0usize, 0usize);
+        let n = self.conns.len();
+        let mut scatter = vec![0usize; n];
+        let mut gather = vec![0usize; n];
+        // pipelined: every request is on the wire before the first —
+        // possibly expensive — factorization is awaited, so the fleet
+        // factors in parallel instead of N serialized round-trips
         for (i, conn) in self.conns.iter_mut().enumerate() {
-            bytes_out += wire::write_frame(&mut conn.stream, Tag::PrepareAdmm, &[])?;
-            bytes_in +=
+            scatter[i] += wire::write_frame(&mut conn.stream, Tag::PrepareAdmm, &[])
+                .with_context(|| {
+                    format!("request admm factorization on executor {i} at {}", conn.addr)
+                })?;
+        }
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            gather[i] +=
                 wire::expect_frame(&mut conn.stream, &mut self.recv_buf, Tag::PrepareAdmmAck)
                     .with_context(|| {
                         format!("admm factorization on executor {i} at {}", conn.addr)
@@ -201,9 +300,11 @@ impl ClusterBackend for DistCluster {
             step: self.step_id as usize,
             op: "prepare-admm",
             wall_secs: t0.elapsed().as_secs_f64(),
-            bytes_out,
-            bytes_in,
+            bytes_out: scatter.iter().sum(),
+            bytes_in: gather.iter().sum(),
             sim_secs: 0.0,
+            scatter,
+            gather,
         });
         Ok(())
     }
@@ -217,6 +318,7 @@ impl ClusterBackend for DistCluster {
     ) -> Result<()> {
         let part = staged.part;
         let n_tasks = op.n_tasks(part);
+        self.fold_log.clear();
         if n_tasks == 0 {
             return Ok(());
         }
@@ -226,39 +328,60 @@ impl ClusterBackend for DistCluster {
         self.step_id += 1;
         let step_id = self.step_id;
         let n_execs = self.conns.len();
+        let sliced = self.caps & wire::CAP_SLICED != 0;
+        let fold = self.caps & wire::CAP_CONTIG_FOLD != 0 && op.fold_axis() != FoldAxis::None;
+        let flags = if sliced { wire::STEP_FLAG_SLICED } else { 0 }
+            | if fold { wire::STEP_FLAG_FOLD } else { 0 };
 
-        // one encoding, N sends
-        self.send_buf.clear();
-        bytes::put_u64(&mut self.send_buf, step_id);
-        ops::encode_op(&op, &mut self.send_buf);
-        let (mut bytes_out, mut bytes_in) = (0usize, 0usize);
-        for (i, conn) in self.conns.iter_mut().enumerate() {
-            bytes_out += wire::write_frame(&mut conn.stream, Tag::Step, &self.send_buf)
-                .with_context(|| {
-                    format!("send superstep {step_id} to executor {i} at {}", conn.addr)
-                })?;
+        // per-executor owned task lists (ascending by construction)
+        for list in self.owned_lists.iter_mut() {
+            list.clear();
+        }
+        for task in 0..n_tasks {
+            self.owned_lists[op.owner(part, task, n_execs, self.ownership)].push(task);
         }
 
-        // gather: every task's duration + result segment, exactly once
+        // encode: one shared body (broadcast) or one per executor (sliced)
+        if sliced {
+            for (e, buf) in self.send_bufs.iter_mut().enumerate() {
+                buf.clear();
+                bytes::put_u64(buf, step_id);
+                bytes::put_u8(buf, flags);
+                ops::encode_op_sliced(&op, part, &self.owned_lists[e], buf);
+            }
+        } else {
+            self.send_buf.clear();
+            bytes::put_u64(&mut self.send_buf, step_id);
+            bytes::put_u8(&mut self.send_buf, flags);
+            ops::encode_op(&op, &mut self.send_buf);
+        }
+        let bodies: Vec<&[u8]> = if sliced {
+            self.send_bufs.iter().map(|b| b.as_slice()).collect()
+        } else {
+            vec![self.send_buf.as_slice(); n_execs]
+        };
+
+        // pipelined scatter + readiness-ordered gather
+        let exchange =
+            pipelined_exchange(&mut self.conns, &bodies, &mut self.recv_bufs, step_id)?;
+
+        // parse replies in arrival order: every task's duration exactly
+        // once, result segments (or validated folds) into the slabs
         self.durs.clear();
         self.durs.resize(n_tasks, 0.0);
         self.seen.clear();
         self.seen.resize(n_tasks, false);
+        self.folded_away.clear();
+        self.folded_away.resize(n_tasks, false);
         let mut first_err: Option<(usize, anyhow::Error)> = None;
-        for (i, conn) in self.conns.iter_mut().enumerate() {
-            let (tag, nread) = wire::read_frame(&mut conn.stream, &mut self.recv_buf)
-                .with_context(|| {
-                    format!(
-                        "superstep {step_id} reply from executor {i} at {} \
-                         (killed or wedged executor?)",
-                        conn.addr
-                    )
-                })?;
-            bytes_in += nread;
+        for &i in &exchange.arrival {
+            let conn = &self.conns[i];
+            let tag = Tag::from_u8(exchange.tags[i])
+                .with_context(|| format!("reply tag from executor {i} at {}", conn.addr))?;
             match tag {
                 Tag::StepResult => {}
                 Tag::Fatal => {
-                    let msg = ByteReader::new(&self.recv_buf).str().unwrap_or_default();
+                    let msg = ByteReader::new(&self.recv_bufs[i]).str().unwrap_or_default();
                     bail!("executor {i} at {} failed: {msg}", conn.addr);
                 }
                 other => bail!(
@@ -266,7 +389,7 @@ impl ClusterBackend for DistCluster {
                     conn.addr
                 ),
             }
-            let mut r = ByteReader::new(&self.recv_buf);
+            let mut r = ByteReader::new(&self.recv_bufs[i]);
             let sid = r.u64()?;
             if sid != step_id {
                 bail!(
@@ -286,17 +409,50 @@ impl ClusterBackend for DistCluster {
                 self.seen[task] = true;
                 self.durs[task] = r.f64()?;
                 let status = r.u8()?;
-                if status == 0 {
-                    let (s, l) = op.out_span(part, task);
-                    read_segment(&mut r, &mut out[s..s + l], task, "out")?;
-                    let (s2, l2) = op.out2_span(part, task);
-                    read_segment(&mut r, &mut out2[s2..s2 + l2], task, "out2")?;
-                } else {
-                    let msg = r.str()?;
-                    let err = anyhow::anyhow!("partition task {task}: {msg}");
-                    if first_err.as_ref().map(|(t, _)| task < *t).unwrap_or(true) {
-                        first_err = Some((task, err));
+                match status {
+                    0 => {
+                        let folded = r.u32()? as usize;
+                        if folded > 1 {
+                            validate_fold(
+                                &op,
+                                part,
+                                task,
+                                folded,
+                                i,
+                                n_execs,
+                                self.ownership,
+                                fold,
+                                n_tasks,
+                                &mut self.folded_away,
+                                &mut self.fold_log,
+                            )?;
+                        } else if folded == 0 {
+                            bail!("executor {i}: task {task} claims a zero-leaf fold");
+                        }
+                        let (s, l) = op.out_span(part, task);
+                        read_segment(&mut r, &mut out[s..s + l], task, "out")?;
+                        let (s2, l2) = op.out2_span(part, task);
+                        read_segment(&mut r, &mut out2[s2..s2 + l2], task, "out2")?;
                     }
+                    1 => {
+                        let msg = r.str()?;
+                        let err = anyhow::anyhow!("partition task {task}: {msg}");
+                        if first_err.as_ref().map(|(t, _)| task < *t).unwrap_or(true) {
+                            first_err = Some((task, err));
+                        }
+                    }
+                    2 => {
+                        // absorbed by a fold: its root must have preceded
+                        // it in this same reply (owned lists ascend, the
+                        // root is a block's lowest task)
+                        if !self.folded_away[task] {
+                            bail!(
+                                "executor {i}: task {task} marked fold-absorbed \
+                                 without a preceding fold root"
+                            );
+                        }
+                    }
+                    other => bail!("executor {i}: task {task} has unknown status {other}"),
                 }
             }
         }
@@ -315,9 +471,11 @@ impl ClusterBackend for DistCluster {
             step: step_id as usize,
             op: op.name(),
             wall_secs: t0.elapsed().as_secs_f64(),
-            bytes_out,
-            bytes_in,
+            bytes_out: exchange.scatter.iter().sum(),
+            bytes_in: exchange.gather.iter().sum(),
             sim_secs: self.sim.clock.now() - sim_before,
+            scatter: exchange.scatter,
+            gather: exchange.gather,
         });
         match first_err {
             Some((_, e)) => Err(e),
@@ -334,8 +492,11 @@ impl ClusterBackend for DistCluster {
         len: usize,
     ) {
         // results were already gathered to the driver; the combine (and
-        // its comm charge) is bit-identical to the sim backend's
-        self.sim.reduce_segments(slab, base, stride, count, len);
+        // its comm charge) is bit-identical to the sim backend's, with
+        // pairs the executors pre-folded (logged during the gather)
+        // skipped but still charged
+        self.sim
+            .reduce_segments_folded(slab, base, stride, count, len, &self.fold_log);
     }
 
     fn reduce_cost(&mut self, leaves: usize, bytes_per_leaf: usize) {
@@ -369,6 +530,265 @@ impl ClusterBackend for DistCluster {
         self.conns.clear();
         Ok(())
     }
+}
+
+/// Outcome of one pipelined Step exchange.
+struct Exchange {
+    /// Bytes written per executor (header + body).
+    scatter: Vec<usize>,
+    /// Bytes read per executor (header + body).
+    gather: Vec<usize>,
+    /// Raw reply tag byte per executor (validated by the parser).
+    tags: Vec<u8>,
+    /// Executor indices in reply-completion order.
+    arrival: Vec<usize>,
+}
+
+/// Per-connection receive progress of the pipelined exchange.
+#[derive(Clone, Copy, Default)]
+struct RecvState {
+    header: [u8; 5],
+    header_got: usize,
+    body_len: usize,
+    body_got: usize,
+    done: bool,
+}
+
+/// Write every executor's Step frame and read every reply with
+/// nonblocking I/O: no read waits on an unfinished write, and replies
+/// complete in whatever order executors finish.  Blocking mode is
+/// restored on every exit path (the control-plane frames — acks,
+/// shutdown — use plain blocking I/O).
+fn pipelined_exchange(
+    conns: &mut [ExecConn],
+    bodies: &[&[u8]],
+    recv_bufs: &mut [Vec<u8>],
+    step_id: u64,
+) -> Result<Exchange> {
+    let n = conns.len();
+    for conn in conns.iter() {
+        conn.stream
+            .set_nonblocking(true)
+            .with_context(|| format!("nonblocking mode on executor at {}", conn.addr))?;
+    }
+    let result = exchange_inner(conns, bodies, recv_bufs, step_id);
+    for conn in conns.iter() {
+        conn.stream.set_nonblocking(false).ok();
+    }
+    debug_assert_eq!(bodies.len(), n);
+    result
+}
+
+fn exchange_inner(
+    conns: &mut [ExecConn],
+    bodies: &[&[u8]],
+    recv_bufs: &mut [Vec<u8>],
+    step_id: u64,
+) -> Result<Exchange> {
+    let n = conns.len();
+    let headers: Vec<[u8; 5]> = bodies
+        .iter()
+        .map(|b| {
+            let mut h = [0u8; 5];
+            h[..4].copy_from_slice(&(b.len() as u32).to_le_bytes());
+            h[4] = Tag::Step as u8;
+            h
+        })
+        .collect();
+    let mut sent = vec![0usize; n];
+    let mut recv = vec![RecvState::default(); n];
+    let mut arrival = Vec::with_capacity(n);
+    let deadline = read_timeout().map(|t| Instant::now() + t);
+    let mut idle_sweeps = 0usize;
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for i in 0..n {
+            let total = 5 + bodies[i].len();
+            // scatter: push as much of this executor's frame as the
+            // socket accepts, then move on — never block on one peer
+            while sent[i] < total {
+                let chunk: &[u8] = if sent[i] < 5 {
+                    &headers[i][sent[i]..]
+                } else {
+                    &bodies[i][sent[i] - 5..]
+                };
+                match conns[i].stream.write(chunk) {
+                    Ok(0) => bail!(
+                        "executor {i} at {} closed the connection during superstep {step_id}",
+                        conns[i].addr
+                    ),
+                    Ok(k) => {
+                        sent[i] += k;
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "send superstep {step_id} to executor {i} at {}",
+                                conns[i].addr
+                            )
+                        })
+                    }
+                }
+            }
+            // gather: drain whatever reply bytes have arrived
+            progressed |= read_some(&mut conns[i], i, &mut recv[i], &mut recv_bufs[i])
+                .with_context(|| {
+                    format!(
+                        "superstep {step_id} reply from executor {i} at {} \
+                         (killed or wedged executor?)",
+                        conns[i].addr
+                    )
+                })?;
+            if recv[i].done && arrival.iter().all(|&a: &usize| a != i) {
+                arrival.push(i);
+            }
+            all_done &= sent[i] == total && recv[i].done;
+        }
+        if all_done {
+            break;
+        }
+        if progressed {
+            idle_sweeps = 0;
+            continue;
+        }
+        if let Some(d) = deadline {
+            if Instant::now() > d {
+                let lagging = (0..n).find(|&i| !recv[i].done).unwrap_or(0);
+                bail!(
+                    "superstep {step_id} reply from executor {lagging} at {} timed out \
+                     (killed or wedged executor?)",
+                    conns[lagging].addr
+                );
+            }
+        }
+        // spin briefly for loopback latency, then back off so executor
+        // threads on the same host get the cores during long supersteps
+        idle_sweeps += 1;
+        if idle_sweeps < 200 {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+    Ok(Exchange {
+        scatter: bodies.iter().map(|b| 5 + b.len()).collect(),
+        gather: recv.iter().map(|s| 5 + s.body_len).collect(),
+        tags: recv.iter().map(|s| s.header[4]).collect(),
+        arrival,
+    })
+}
+
+/// Nonblocking read step for one connection: header, then body.  Returns
+/// whether any bytes moved.
+fn read_some(
+    conn: &mut ExecConn,
+    i: usize,
+    st: &mut RecvState,
+    body: &mut Vec<u8>,
+) -> Result<bool> {
+    let mut progressed = false;
+    while !st.done {
+        if st.header_got < 5 {
+            match conn.stream.read(&mut st.header[st.header_got..]) {
+                Ok(0) => bail!("executor {i} closed the connection mid-reply"),
+                Ok(k) => {
+                    st.header_got += k;
+                    progressed = true;
+                    if st.header_got == 5 {
+                        let len =
+                            u32::from_le_bytes(st.header[..4].try_into().unwrap()) as usize;
+                        if len > wire::MAX_FRAME {
+                            bail!(
+                                "executor {i}: incoming frame of {len} bytes exceeds \
+                                 MAX_FRAME (corrupt stream?)"
+                            );
+                        }
+                        st.body_len = len;
+                        body.clear();
+                        body.resize(len, 0);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(progressed),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        } else if st.body_got < st.body_len {
+            match conn.stream.read(&mut body[st.body_got..]) {
+                Ok(0) => bail!("executor {i} closed the connection mid-reply"),
+                Ok(k) => {
+                    st.body_got += k;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(progressed),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        } else {
+            st.done = true;
+        }
+    }
+    Ok(progressed)
+}
+
+/// Validate one claimed executor-side fold against the op's combine-tree
+/// geometry, mark its absorbed tasks, and log it for
+/// [`SimCluster::reduce_segments_folded`].
+#[allow(clippy::too_many_arguments)]
+fn validate_fold(
+    op: &GridOp<'_>,
+    part: &Partitioned,
+    task: usize,
+    folded: usize,
+    exec: usize,
+    n_execs: usize,
+    ownership: Ownership,
+    fold_requested: bool,
+    n_tasks: usize,
+    folded_away: &mut [bool],
+    fold_log: &mut Vec<FoldEntry>,
+) -> Result<()> {
+    if !fold_requested {
+        bail!("executor {exec}: task {task} folded {folded} leaves, but folding was not requested");
+    }
+    let g = op
+        .fold_group(part, task)
+        .ok_or_else(|| anyhow::anyhow!("executor {exec}: task {task} folded a fold-free op"))?;
+    if !folded.is_power_of_two() || g.leaf % folded != 0 || g.leaf + folded > g.count {
+        bail!(
+            "executor {exec}: task {task} claims a misaligned fold \
+             ({folded} leaves at leaf {} of {})",
+            g.leaf,
+            g.count
+        );
+    }
+    for k in 1..folded {
+        let t2 = task + k * g.task_stride;
+        if t2 >= n_tasks {
+            bail!("executor {exec}: fold at task {task} spills past task {t2}");
+        }
+        if op.owner(part, t2, n_execs, ownership) != exec {
+            bail!(
+                "executor {exec}: fold at task {task} absorbs task {t2} it does not own"
+            );
+        }
+        if folded_away[t2] {
+            bail!("executor {exec}: task {t2} absorbed by two folds");
+        }
+        folded_away[t2] = true;
+    }
+    fold_log.push(FoldEntry {
+        base: g.base,
+        stride: g.stride,
+        count: g.count,
+        len: g.len,
+        leaf: g.leaf,
+        folded,
+    });
+    Ok(())
 }
 
 /// Read one length-prefixed f32 array straight into a slab segment,

@@ -4,17 +4,25 @@
 //! the next: the accept loop is long-lived, so a single `ddopt executor`
 //! can back many training runs).  Per connection it:
 //!
-//! 1. answers the versioned handshake ([`wire::Tag::Hello`]);
+//! 1. answers the versioned handshake ([`wire::Tag::Hello`]), acking the
+//!    subset of the driver's offered capability bits this build
+//!    implements ([`wire::CAPS_SUPPORTED`]);
 //! 2. receives the partition *metadata* plus exactly the grid blocks it
-//!    owns (round-robin by flat cell index — the same keying
-//!    [`GridOp::owner`] uses driver-side), installs them into a local
-//!    [`Partitioned`], and stages it on the native backend — the data is
-//!    now resident for the whole session, like a Spark executor's cached
-//!    RDD partitions;
-//! 3. loops on superstep frames: decode the op, run its owned tasks on
-//!    the local [`WorkerPool`] through the shared interpreter
-//!    ([`GridOp::exec_task`] — the very function the sim backend runs),
-//!    and reply with each task's measured seconds and output segment.
+//!    owns under the Stage frame's ownership layout (round-robin or
+//!    contiguous — the same [`Ownership`] keying [`GridOp::owner`] uses
+//!    driver-side), installs them into a local [`Partitioned`], and
+//!    stages it on the native backend — the data is now resident for the
+//!    whole session, like a Spark executor's cached RDD partitions;
+//! 3. loops on superstep frames: decode the op (full or sliced, per the
+//!    frame's flags byte), run its owned tasks on the local
+//!    [`WorkerPool`] through the shared interpreter ([`GridOp::exec_task`]
+//!    — the very function the sim backend runs), optionally pre-fold its
+//!    locally-owned aligned subtrees of the segment-combine tree (in
+//!    exactly the global tree's pairing order, so the driver-side
+//!    [`reduce_segments_folded`](crate::cluster::SimCluster::reduce_segments_folded)
+//!    stays bit-identical), and reply with each task's measured seconds
+//!    and output segment — or, for leaves absorbed by a fold, just the
+//!    absorbed marker.
 //!
 //! Task errors are per-task data in the reply (the driver reproduces the
 //! sim backend's lowest-task-index-wins rule across executors); protocol
@@ -23,7 +31,7 @@
 
 use super::ops::OpBuf;
 use super::wire::{self, Tag};
-use crate::cluster::{GridOp, OpScratch, TaskSlab, WorkerPool};
+use crate::cluster::{GridOp, OpScratch, Ownership, TaskSlab, WorkerPool};
 use crate::data::{decode_block, Partitioned};
 use crate::runtime::{Backend, FactorHandle, StagedGrid};
 use crate::util::bytes::{self, ByteReader};
@@ -52,14 +60,21 @@ pub fn serve(cfg: &ExecutorConfig) -> Result<()> {
     // discover OS-assigned ports from it
     println!("executor listening on {local}");
     std::io::stdout().flush().ok();
+    serve_listener(listener, cfg.threads, cfg.once)
+}
+
+/// The accept loop behind [`serve`], on an already-bound listener — lets
+/// in-process harnesses (the perf wire bench) run loopback executors on
+/// OS-assigned ports without spawning child processes.
+pub fn serve_listener(listener: TcpListener, threads: usize, once: bool) -> Result<()> {
     loop {
         let (stream, peer) = listener.accept().context("accept driver connection")?;
         eprintln!("executor: serving driver at {peer}");
-        match serve_conn(stream, cfg.threads) {
+        match serve_conn(stream, threads) {
             Ok(()) => eprintln!("executor: driver at {peer} finished cleanly"),
             Err(e) => eprintln!("executor: session with {peer} ended: {e:#}"),
         }
-        if cfg.once {
+        if once {
             return Ok(());
         }
     }
@@ -95,13 +110,18 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
     }
     let my_index = r.u32()? as usize;
     let n_execs = r.u32()? as usize;
+    let offered = r.u32()?;
     if n_execs == 0 || my_index >= n_execs {
         bail!("bad handshake: executor {my_index} of {n_execs}");
     }
+    // ack the intersection of what the driver offered and what this
+    // build implements; the driver runs the fleet at the AND of all acks
+    let caps = offered & wire::CAPS_SUPPORTED;
     let mut ack = Vec::new();
     bytes::put_u32(&mut ack, wire::PROTO_MAGIC);
     bytes::put_u32(&mut ack, wire::PROTO_VERSION);
     bytes::put_u32(&mut ack, threads as u32);
+    bytes::put_u32(&mut ack, caps);
     wire::write_frame(&mut stream, Tag::HelloAck, &ack)?;
 
     // -- staging: blocks arrive once, stay resident ------------------
@@ -110,11 +130,15 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
         bail!("protocol violation: wanted Stage, got {tag:?}");
     }
     let mut r = ByteReader::new(&buf);
+    let ownership = Ownership::from_u8(r.u8()?)?;
+    if ownership == Ownership::Contiguous && caps & wire::CAP_CONTIG_FOLD == 0 {
+        bail!("driver staged contiguous ownership without the negotiated capability");
+    }
     let mut part = Partitioned::decode_meta(&mut r)?;
     let n_blocks = r.u32()? as usize;
     for _ in 0..n_blocks {
         let cell = r.usize()?;
-        if cell % n_execs != my_index {
+        if ownership.owner(cell, part.grid.k(), n_execs) != my_index {
             bail!("staged block for cell {cell} does not belong to executor {my_index}/{n_execs}");
         }
         let block = decode_block(&mut r)?;
@@ -124,7 +148,8 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
         bail!("trailing bytes after Stage payload");
     }
     eprintln!(
-        "executor {my_index}/{n_execs}: cached {n_blocks} blocks of a {}x{} grid ({} threads)",
+        "executor {my_index}/{n_execs}: cached {n_blocks} blocks of a {}x{} grid \
+         ({} threads, {ownership:?} ownership)",
         part.grid.p, part.grid.q, threads
     );
     wire::write_frame(&mut stream, Tag::StageAck, &[])?;
@@ -152,7 +177,7 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
                 // excludes this one-time cost from reported times)
                 factors.clear();
                 for cell in 0..part.grid.k() {
-                    if cell % n_execs == my_index {
+                    if ownership.owner(cell, part.grid.k(), n_execs) == my_index {
                         let (p, q) = (cell / part.grid.q, cell % part.grid.q);
                         factors.push(Some(staged.admm_factor(p, q)?));
                     } else {
@@ -171,6 +196,8 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
                     &buf,
                     my_index,
                     n_execs,
+                    ownership,
+                    caps,
                     &mut owned,
                     &mut times,
                     &mut out,
@@ -204,7 +231,8 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
     }
 }
 
-/// Decode one Step frame, run the owned tasks, build the StepResult body
+/// Decode one Step frame, run the owned tasks, optionally pre-fold the
+/// locally-owned aligned combine subtrees, and build the StepResult body
 /// in `reply`.  Per-task kernel errors become per-task reply entries —
 /// only frame/op decoding problems are `Err` here.
 #[allow(clippy::too_many_arguments)]
@@ -217,6 +245,8 @@ fn run_step(
     frame: &[u8],
     my_index: usize,
     n_execs: usize,
+    ownership: Ownership,
+    caps: u32,
     owned: &mut Vec<usize>,
     times: &mut Vec<f64>,
     out: &mut Vec<f32>,
@@ -226,7 +256,18 @@ fn run_step(
     let part = staged.part;
     let mut r = ByteReader::new(frame);
     let step_id = r.u64()?;
-    opbuf.decode_into(&mut r)?;
+    let flags = r.u8()?;
+    if flags & wire::STEP_FLAG_SLICED != 0 && caps & wire::CAP_SLICED == 0 {
+        bail!("driver sent a sliced Step without the negotiated capability");
+    }
+    if flags & wire::STEP_FLAG_FOLD != 0 && caps & wire::CAP_CONTIG_FOLD == 0 {
+        bail!("driver requested gather folding without the negotiated capability");
+    }
+    if flags & wire::STEP_FLAG_SLICED != 0 {
+        opbuf.decode_sliced_into(&mut r)?;
+    } else {
+        opbuf.decode_into(&mut r)?;
+    }
     if !r.is_empty() {
         bail!("trailing bytes after Step payload");
     }
@@ -235,7 +276,7 @@ fn run_step(
     let n_tasks = op.n_tasks(part);
     owned.clear();
     for task in 0..n_tasks {
-        if op.owner(part, task, n_execs) == my_index {
+        if op.owner(part, task, n_execs, ownership) == my_index {
             owned.push(task);
         }
     }
@@ -275,6 +316,13 @@ fn run_step(
     }
     let errs = errs.into_inner().unwrap();
 
+    // locally-owned subtree pre-fold: fold_counts[i] = leaves folded into
+    // owned[i]'s segment (1 = shipped unfolded, 0 = absorbed by a root)
+    let mut fold_counts: Vec<usize> = vec![1; owned.len()];
+    if flags & wire::STEP_FLAG_FOLD != 0 && errs.is_empty() {
+        fold_owned_subtrees(&op, part, owned, out, &mut fold_counts);
+    }
+
     reply.clear();
     bytes::put_u64(reply, step_id);
     bytes::put_u32(reply, owned.len() as u32);
@@ -284,8 +332,12 @@ fn run_step(
         if let Some((_, msg)) = errs.iter().find(|(t, _)| *t == task) {
             bytes::put_u8(reply, 1);
             bytes::put_str(reply, msg);
+        } else if fold_counts[i] == 0 {
+            // absorbed: its data already rode in its fold root's segment
+            bytes::put_u8(reply, 2);
         } else {
             bytes::put_u8(reply, 0);
+            bytes::put_u32(reply, fold_counts[i] as u32);
             let (s, l) = op.out_span(part, task);
             bytes::put_f32s(reply, &out[s..s + l]);
             let (s2, l2) = op.out2_span(part, task);
@@ -293,4 +345,89 @@ fn run_step(
         }
     }
     Ok(())
+}
+
+/// Pre-combine the aligned power-of-two subtrees of each combine group
+/// whose leaves this executor owns, element-wise in the *global*
+/// [`reduce_segments`](crate::cluster::SimCluster::reduce_segments)
+/// pairing order — an aligned block's internal pairs are exactly the
+/// global tree's pairs restricted to that block, so the partial sums are
+/// bit-identical to what the driver would have computed.  Marks each
+/// block's root with the folded leaf count and its other leaves as
+/// absorbed.
+fn fold_owned_subtrees(
+    op: &GridOp<'_>,
+    part: &Partitioned,
+    owned: &[usize],
+    out: &mut [f32],
+    fold_counts: &mut [usize],
+) {
+    // group the owned leaves by combine group (keyed by the group's slab
+    // base — unique per group within one op); leaf lists come out
+    // ascending because `owned` is ascending and leaf index is monotone
+    // in task index on both fold axes
+    let mut groups: std::collections::BTreeMap<usize, Vec<(usize, usize)>> =
+        Default::default();
+    for (i, &task) in owned.iter().enumerate() {
+        if let Some(g) = op.fold_group(part, task) {
+            groups.entry(g.base).or_default().push((g.leaf, i));
+        }
+    }
+    for (_, leaves) in groups {
+        let geom = op
+            .fold_group(part, owned[leaves[0].1])
+            .expect("grouped task must have fold geometry");
+        // maximal consecutive runs (contiguous ownership guarantees one
+        // run per group; round-robin would just yield length-1 runs)
+        let mut run_start = 0usize;
+        for k in 0..leaves.len() {
+            let run_ends = k + 1 == leaves.len() || leaves[k + 1].0 != leaves[k].0 + 1;
+            if !run_ends {
+                continue;
+            }
+            let (a, b) = (leaves[run_start].0, leaves[k].0 + 1);
+            run_start = k + 1;
+            // decompose [a, b) into maximal aligned power-of-two blocks
+            let mut x = a;
+            while x < b {
+                let mut size = 1usize;
+                while x % (size * 2) == 0 && x + size * 2 <= b {
+                    size *= 2;
+                }
+                if size > 1 {
+                    fold_block(out, &geom, x, size);
+                }
+                for (leaf, i) in &leaves[..] {
+                    if *leaf > x && *leaf < x + size {
+                        fold_counts[*i] = 0;
+                    } else if *leaf == x {
+                        fold_counts[*i] = size;
+                    }
+                }
+                x += size;
+            }
+        }
+    }
+}
+
+/// Sum the aligned leaf block `[x, x + size)` of one combine group into
+/// its root leaf `x`, level by level with the global tree's own pairing
+/// (`gap = 1, 2, 4, ...`; adjacent survivors; `dst += src`).
+fn fold_block(out: &mut [f32], g: &crate::cluster::FoldGroup, x: usize, size: usize) {
+    let mut gap = 1usize;
+    while gap < size {
+        let mut y = x;
+        while y + gap < x + size {
+            let dst = g.base + y * g.stride;
+            let src = g.base + (y + gap) * g.stride;
+            let (head, tail) = out.split_at_mut(src);
+            let d = &mut head[dst..dst + g.len];
+            let s = &tail[..g.len];
+            for (dv, &sv) in d.iter_mut().zip(s) {
+                *dv += sv;
+            }
+            y += 2 * gap;
+        }
+        gap *= 2;
+    }
 }

@@ -40,4 +40,4 @@ pub mod ops;
 pub mod wire;
 
 pub use driver_net::DistCluster;
-pub use executor::{serve, ExecutorConfig};
+pub use executor::{serve, serve_listener, ExecutorConfig};

@@ -8,11 +8,26 @@
 //! that round-trip by bit pattern, which is half of the dist-vs-sim
 //! bitwise-parity guarantee (the other half is the task-index output
 //! layout).
+//!
+//! Two encodings share the kind codes: [`encode_op`] ships every payload
+//! whole (the broadcast wire mode), while [`encode_op_sliced`] ships, per
+//! executor, only the ranges of each vector and the per-task streams its
+//! owned tasks actually read ([`GridOp::read_row_ranges`] etc.).  A
+//! sliced vector decodes into a buffer *resized to the full length*, with
+//! only the shipped ranges filled — the interpreter never reads outside
+//! an owned task's slices, so the unfilled remainder (zeros, or stale
+//! bytes from the previous superstep) is provably never observed.
 
 use crate::cluster::GridOp;
+use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::util::bytes::{self, ByteReader};
 use anyhow::{bail, Result};
+
+/// Ceiling on the declared *full* element count of a sliced payload —
+/// a corrupt prefix must not trigger a giant allocation (mirrors the
+/// byte-level `MAX_FRAME` guard one layer down).
+const MAX_SLICED_TOTAL: usize = 1 << 28;
 
 const OP_SDCA: u8 = 1;
 const OP_ATX: u8 = 2;
@@ -107,6 +122,222 @@ pub fn encode_op(op: &GridOp<'_>, buf: &mut Vec<u8>) {
     }
 }
 
+// ------------------------------------------------------- sliced payloads
+
+/// `[full_len: u64][n_ranges: u32]` then per range `[start: u64]` + a
+/// length-prefixed f32 run — a vector of which the receiver only needs
+/// `ranges`.
+fn put_f32_slices(buf: &mut Vec<u8>, full: &[f32], ranges: &[(usize, usize)]) {
+    bytes::put_usize(buf, full.len());
+    bytes::put_u32(buf, ranges.len() as u32);
+    for &(start, len) in ranges {
+        bytes::put_usize(buf, start);
+        bytes::put_f32s(buf, &full[start..start + len]);
+    }
+}
+
+/// Decode a [`put_f32_slices`] payload: resize `out` to the full length
+/// and fill the shipped ranges (the rest stays unread by contract).
+fn read_f32_slices(r: &mut ByteReader<'_>, out: &mut Vec<f32>) -> Result<()> {
+    let total = r.usize()?;
+    if total > MAX_SLICED_TOTAL {
+        bail!("corrupt sliced payload: full length {total} is implausible");
+    }
+    out.resize(total, 0.0);
+    let n = r.u32()? as usize;
+    for _ in 0..n {
+        let start = r.usize()?;
+        let len = r.usize()?;
+        if start.checked_add(len).map(|e| e > total).unwrap_or(true) {
+            bail!("corrupt sliced payload: range {start}+{len} exceeds full length {total}");
+        }
+        r.fill_f32s(&mut out[start..start + len])?;
+    }
+    Ok(())
+}
+
+/// `[n_entries_total: u64][n_shipped: u32]` then `[task: u32][a: u64]
+/// [b: u64]` per shipped task — a per-task pair table of which the
+/// receiver only needs its owned rows.
+fn put_sparse_pairs(buf: &mut Vec<u8>, full: &[(usize, usize)], tasks: &[usize]) {
+    bytes::put_usize(buf, full.len());
+    bytes::put_u32(buf, tasks.len() as u32);
+    for &t in tasks {
+        bytes::put_u32(buf, t as u32);
+        bytes::put_usize(buf, full[t].0);
+        bytes::put_usize(buf, full[t].1);
+    }
+}
+
+/// Decode a [`put_sparse_pairs`] payload; unshipped entries are zeroed
+/// (explicitly clearing any stale previous-superstep values).
+fn read_sparse_pairs(r: &mut ByteReader<'_>, out: &mut Vec<(usize, usize)>) -> Result<()> {
+    let total = r.usize()?;
+    if total > MAX_SLICED_TOTAL {
+        bail!("corrupt sparse pair table: {total} entries is implausible");
+    }
+    out.clear();
+    out.resize(total, (0, 0));
+    let n = r.u32()? as usize;
+    for _ in 0..n {
+        let t = r.u32()? as usize;
+        if t >= total {
+            bail!("corrupt sparse pair table: task {t} out of {total}");
+        }
+        out[t] = (r.usize()?, r.usize()?);
+    }
+    Ok(())
+}
+
+/// Like [`put_sparse_pairs`] for a per-task usize table (SDCA's `h`).
+fn put_sparse_usizes(buf: &mut Vec<u8>, full: &[usize], tasks: &[usize]) {
+    bytes::put_usize(buf, full.len());
+    bytes::put_u32(buf, tasks.len() as u32);
+    for &t in tasks {
+        bytes::put_u32(buf, t as u32);
+        bytes::put_usize(buf, full[t]);
+    }
+}
+
+fn read_sparse_usizes(r: &mut ByteReader<'_>, out: &mut Vec<usize>) -> Result<()> {
+    let total = r.usize()?;
+    if total > MAX_SLICED_TOTAL {
+        bail!("corrupt sparse usize table: {total} entries is implausible");
+    }
+    out.clear();
+    out.resize(total, 0);
+    let n = r.u32()? as usize;
+    for _ in 0..n {
+        let t = r.u32()? as usize;
+        if t >= total {
+            bail!("corrupt sparse usize table: task {t} out of {total}");
+        }
+        out[t] = r.usize()?;
+    }
+    Ok(())
+}
+
+/// `[n_tasks: u64][n_shipped: u32]` then `[task: u32]` + a
+/// length-prefixed i32 run per shipped task: only the owned tasks' visit
+/// streams, re-concatenated on the receiver with a rebuilt offset table.
+fn put_sliced_idx(
+    buf: &mut Vec<u8>,
+    idx: &[i32],
+    idx_off: &[(usize, usize)],
+    tasks: &[usize],
+) {
+    bytes::put_usize(buf, idx_off.len());
+    bytes::put_u32(buf, tasks.len() as u32);
+    for &t in tasks {
+        let (s, l) = idx_off[t];
+        bytes::put_u32(buf, t as u32);
+        bytes::put_i32s(buf, &idx[s..s + l]);
+    }
+}
+
+fn read_sliced_idx(
+    r: &mut ByteReader<'_>,
+    idx: &mut Vec<i32>,
+    idx_off: &mut Vec<(usize, usize)>,
+) -> Result<()> {
+    let total = r.usize()?;
+    if total > MAX_SLICED_TOTAL {
+        bail!("corrupt sliced index stream: {total} tasks is implausible");
+    }
+    idx.clear();
+    idx_off.clear();
+    idx_off.resize(total, (0, 0));
+    let n = r.u32()? as usize;
+    for _ in 0..n {
+        let t = r.u32()? as usize;
+        if t >= total {
+            bail!("corrupt sliced index stream: task {t} out of {total}");
+        }
+        let l = r.usize()?;
+        if l > r.remaining() / 4 {
+            bail!("corrupt sliced index stream: {l} elements exceeds remaining bytes");
+        }
+        idx_off[t] = (idx.len(), l);
+        r.i32s_append(idx, l)?;
+    }
+    Ok(())
+}
+
+/// Serialize one op descriptor for a *specific executor*: same kind
+/// codes and scalar fields as [`encode_op`], but every vector payload is
+/// cut down to the ranges (and every per-task table to the entries) that
+/// `tasks` — the receiver's owned tasks, ascending — actually read.
+/// Decode with [`OpBuf::decode_sliced_into`].
+pub fn encode_op_sliced(
+    op: &GridOp<'_>,
+    part: &Partitioned,
+    tasks: &[usize],
+    buf: &mut Vec<u8>,
+) {
+    match op {
+        GridOp::Sdca { alpha, w, idx, idx_off, h, lamn, invq, beta } => {
+            bytes::put_u8(buf, OP_SDCA);
+            bytes::put_f32(buf, *lamn);
+            bytes::put_f32(buf, *invq);
+            bytes::put_f32(buf, *beta);
+            put_f32_slices(buf, alpha, &op.read_row_ranges(part, tasks));
+            put_f32_slices(buf, w, &op.read_col_ranges(part, tasks));
+            put_sliced_idx(buf, idx, idx_off, tasks);
+            put_sparse_usizes(buf, h, tasks);
+        }
+        GridOp::Atx { v } => {
+            bytes::put_u8(buf, OP_ATX);
+            put_f32_slices(buf, v, &op.read_row_ranges(part, tasks));
+        }
+        GridOp::Margins { w } => {
+            bytes::put_u8(buf, OP_MARGINS);
+            put_f32_slices(buf, w, &op.read_col_ranges(part, tasks));
+        }
+        GridOp::Grad { loss, mt } => {
+            bytes::put_u8(buf, OP_GRAD);
+            bytes::put_u8(buf, loss_to_u8(*loss));
+            put_f32_slices(buf, mt, &op.read_row_ranges(part, tasks));
+        }
+        GridOp::Svrg {
+            loss,
+            w,
+            mu,
+            mt,
+            windows,
+            idx,
+            idx_off,
+            batch,
+            eta,
+            lam,
+            tolerant,
+        } => {
+            bytes::put_u8(buf, OP_SVRG);
+            bytes::put_u8(buf, loss_to_u8(*loss));
+            bytes::put_u8(buf, u8::from(*tolerant));
+            bytes::put_usize(buf, *batch);
+            bytes::put_f32(buf, *eta);
+            bytes::put_f32(buf, *lam);
+            let cols = op.read_col_ranges(part, tasks);
+            put_f32_slices(buf, w, &cols);
+            put_f32_slices(buf, mu, &cols);
+            put_f32_slices(buf, mt, &op.read_row_ranges(part, tasks));
+            put_sparse_pairs(buf, windows, tasks);
+            put_sliced_idx(buf, idx, idx_off, tasks);
+        }
+        GridOp::AdmmProject { w_hat, z_hat } => {
+            bytes::put_u8(buf, OP_ADMM_PROJECT);
+            put_f32_slices(buf, w_hat, &op.out_span_ranges(part, tasks));
+            put_f32_slices(buf, z_hat, &op.out2_span_ranges(part, tasks));
+        }
+        GridOp::ProxHinge { c, rho, inv_n } => {
+            bytes::put_u8(buf, OP_PROX_HINGE);
+            bytes::put_f32(buf, *rho);
+            bytes::put_f32(buf, *inv_n);
+            put_f32_slices(buf, c, &op.read_row_ranges(part, tasks));
+        }
+    }
+}
+
 /// Executor-side owned storage for a decoded op — reused across
 /// supersteps so the serve loop's steady state reallocates only when a
 /// payload grows.
@@ -195,6 +426,56 @@ impl OpBuf {
                 self.s1 = r.f32()?; // rho
                 self.s2 = r.f32()?; // inv_n
                 r.f32s_into(&mut self.f1)?; // c
+            }
+            other => bail!("unknown grid-op code {other}"),
+        }
+        Ok(())
+    }
+
+    /// Decode one [`encode_op_sliced`] payload into this buffer.  Vectors
+    /// come back at their *full* lengths with only the shipped ranges
+    /// filled; per-task tables at their full entry counts with only the
+    /// owned rows populated — exactly what the interpreter's owned tasks
+    /// will read.
+    pub fn decode_sliced_into(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.kind = r.u8()?;
+        match self.kind {
+            OP_SDCA => {
+                self.s1 = r.f32()?; // lamn
+                self.s2 = r.f32()?; // invq
+                self.s3 = r.f32()?; // beta
+                read_f32_slices(r, &mut self.f1)?; // alpha
+                read_f32_slices(r, &mut self.f2)?; // w
+                read_sliced_idx(r, &mut self.idx, &mut self.idx_off)?;
+                read_sparse_usizes(r, &mut self.h)?;
+            }
+            OP_ATX | OP_MARGINS => {
+                read_f32_slices(r, &mut self.f1)?;
+            }
+            OP_GRAD => {
+                self.loss = loss_from_u8(r.u8()?)?;
+                read_f32_slices(r, &mut self.f1)?; // mt
+            }
+            OP_SVRG => {
+                self.loss = loss_from_u8(r.u8()?)?;
+                self.tolerant = r.u8()? != 0;
+                self.batch = r.usize()?;
+                self.s1 = r.f32()?; // eta
+                self.s2 = r.f32()?; // lam
+                read_f32_slices(r, &mut self.f1)?; // w
+                read_f32_slices(r, &mut self.f2)?; // mu
+                read_f32_slices(r, &mut self.f3)?; // mt
+                read_sparse_pairs(r, &mut self.windows)?;
+                read_sliced_idx(r, &mut self.idx, &mut self.idx_off)?;
+            }
+            OP_ADMM_PROJECT => {
+                read_f32_slices(r, &mut self.f1)?; // w_hat
+                read_f32_slices(r, &mut self.f2)?; // z_hat
+            }
+            OP_PROX_HINGE => {
+                self.s1 = r.f32()?; // rho
+                self.s2 = r.f32()?; // inv_n
+                read_f32_slices(r, &mut self.f1)?; // c
             }
             other => bail!("unknown grid-op code {other}"),
         }
@@ -349,5 +630,160 @@ mod tests {
         let mut r = ByteReader::new(&[42u8]);
         assert!(ob.decode_into(&mut r).is_err());
         assert!(OpBuf::new().as_op().is_err());
+        let mut r2 = ByteReader::new(&[42u8]);
+        assert!(OpBuf::new().decode_sliced_into(&mut r2).is_err());
+    }
+
+    fn sliced_fixture() -> Partitioned {
+        let ds = crate::data::SyntheticDense::paper_part1(2, 2, 10, 6, 0.1, 3).build();
+        Partitioned::split(&ds, crate::data::Grid::new(2, 2))
+    }
+
+    #[test]
+    fn sliced_sdca_reproduces_owned_reads_and_shrinks() {
+        let part = sliced_fixture();
+        let mut rng = crate::util::rng::Xoshiro::new(5);
+        let alpha: Vec<f32> = (0..part.n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..part.m).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let k = part.grid.k();
+        let mut idx = Vec::new();
+        let mut idx_off = Vec::new();
+        for t in 0..k {
+            let start = idx.len();
+            for j in 0..3 + t {
+                idx.push(((t * 7 + j) % 5) as i32);
+            }
+            idx_off.push((start, 3 + t));
+        }
+        let h: Vec<usize> = (0..k).map(|t| t + 2).collect();
+        let op = GridOp::Sdca {
+            alpha: &alpha,
+            w: &w,
+            idx: &idx,
+            idx_off: &idx_off,
+            h: &h,
+            lamn: 0.5,
+            invq: 0.25,
+            beta: 1.5,
+        };
+        // executor owning tasks {0, 1} = row partition 0 only
+        let tasks = [0usize, 1];
+        let mut sliced = Vec::new();
+        encode_op_sliced(&op, &part, &tasks, &mut sliced);
+        let mut full = Vec::new();
+        encode_op(&op, &mut full);
+        assert!(sliced.len() < full.len(), "sliced {} vs full {}", sliced.len(), full.len());
+
+        let mut ob = OpBuf::new();
+        // dirty the buffers first: stale state from a previous superstep
+        // must never leak into owned reads
+        ob.f1 = vec![9.0; 64];
+        ob.h = vec![77; 9];
+        let mut r = ByteReader::new(&sliced);
+        ob.decode_sliced_into(&mut r).unwrap();
+        assert!(r.is_empty(), "trailing bytes");
+        match ob.as_op().unwrap() {
+            GridOp::Sdca { alpha: a, w: ww, idx: i, idx_off: io, h: hh, lamn, .. } => {
+                assert_eq!(a.len(), part.n);
+                assert_eq!(ww.len(), part.m);
+                assert_eq!(io.len(), k);
+                assert_eq!(hh.len(), k);
+                assert_eq!(lamn, 0.5);
+                let qq = part.grid.q;
+                for &t in &tasks {
+                    let (p, q) = (t / qq, t % qq);
+                    let (r0, r1) = part.row_ranges[p];
+                    let (c0, c1) = part.col_ranges[q];
+                    for e in r0..r1 {
+                        assert_eq!(a[e].to_bits(), alpha[e].to_bits(), "alpha[{e}]");
+                    }
+                    for e in c0..c1 {
+                        assert_eq!(ww[e].to_bits(), w[e].to_bits(), "w[{e}]");
+                    }
+                    let (s, l) = io[t];
+                    let (os, ol) = idx_off[t];
+                    assert_eq!(l, ol);
+                    assert_eq!(&i[s..s + l], &idx[os..os + ol], "idx stream of task {t}");
+                    assert_eq!(hh[t], h[t]);
+                }
+                // unowned per-task rows were explicitly cleared, not stale
+                assert_eq!(hh[3], 0);
+                assert_eq!(io[3], (0, 0));
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn sliced_admm_ships_only_owned_spans() {
+        let part = sliced_fixture();
+        let op0 = GridOp::AdmmProject { w_hat: &[], z_hat: &[] };
+        let w_hat: Vec<f32> = (0..op0.out_len(&part)).map(|i| i as f32).collect();
+        let z_hat: Vec<f32> = (0..op0.out2_len(&part)).map(|i| -(i as f32)).collect();
+        let op = GridOp::AdmmProject { w_hat: &w_hat, z_hat: &z_hat };
+        let tasks = [2usize, 3];
+        let mut sliced = Vec::new();
+        encode_op_sliced(&op, &part, &tasks, &mut sliced);
+        let mut ob = OpBuf::new();
+        let mut r = ByteReader::new(&sliced);
+        ob.decode_sliced_into(&mut r).unwrap();
+        assert!(r.is_empty());
+        match ob.as_op().unwrap() {
+            GridOp::AdmmProject { w_hat: wh, z_hat: zh } => {
+                assert_eq!(wh.len(), w_hat.len());
+                assert_eq!(zh.len(), z_hat.len());
+                for &t in &tasks {
+                    let (s, l) = op.out_span(&part, t);
+                    assert_eq!(
+                        wh[s..s + l]
+                            .iter()
+                            .zip(&w_hat[s..s + l])
+                            .filter(|(a, b)| a.to_bits() != b.to_bits())
+                            .count(),
+                        0
+                    );
+                    let (s2, l2) = op.out2_span(&part, t);
+                    assert_eq!(
+                        zh[s2..s2 + l2]
+                            .iter()
+                            .zip(&z_hat[s2..s2 + l2])
+                            .filter(|(a, b)| a.to_bits() != b.to_bits())
+                            .count(),
+                        0
+                    );
+                }
+                // unowned spans were not shipped
+                let (s, l) = op.out_span(&part, 0);
+                assert!(wh[s..s + l].iter().all(|&v| v == 0.0));
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn corrupt_sliced_ranges_rejected() {
+        let part = sliced_fixture();
+        let v: Vec<f32> = vec![1.0; part.n];
+        let op = GridOp::Atx { v: &v };
+        let mut buf = Vec::new();
+        encode_op_sliced(&op, &part, &[0, 1], &mut buf);
+        // out-of-bounds range start: kind byte, then corrupt the first
+        // range's start offset (full_len u64 + n_ranges u32 precede it)
+        let start_off = 1 + 8 + 4;
+        let mut bad = buf.clone();
+        bad[start_off..start_off + 8].copy_from_slice(&(u64::MAX).to_le_bytes());
+        let mut ob = OpBuf::new();
+        assert!(ob.decode_sliced_into(&mut ByteReader::new(&bad)).is_err());
+        // implausible full length
+        let mut bad2 = buf.clone();
+        bad2[1..9].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        assert!(ob.decode_sliced_into(&mut ByteReader::new(&bad2)).is_err());
+        // every strict prefix must error, never panic or succeed
+        for cut in 0..buf.len() {
+            assert!(
+                ob.decode_sliced_into(&mut ByteReader::new(&buf[..cut])).is_err(),
+                "prefix of {cut} bytes decoded"
+            );
+        }
     }
 }

@@ -11,14 +11,14 @@
 //!
 //! | driver → executor        | executor → driver        | body |
 //! |--------------------------|--------------------------|------|
-//! | `Hello` (1)              |                          | magic, proto version, executor index, executor count |
-//! |                          | `HelloAck` (2)           | magic, proto version, worker threads |
-//! | `Stage` (3)              |                          | partition metadata + the executor's owned blocks |
+//! | `Hello` (1)              |                          | magic, proto version, executor index, executor count, offered capability bits |
+//! |                          | `HelloAck` (2)           | magic, proto version, worker threads, accepted capability bits |
+//! | `Stage` (3)              |                          | ownership mode byte + partition metadata + the executor's owned blocks |
 //! |                          | `StageAck` (4)           | — |
 //! | `PrepareAdmm` (5)        |                          | — (factor your cached blocks, off the clock) |
 //! |                          | `PrepareAdmmAck` (6)     | — |
-//! | `Step` (7)               |                          | step id + [`GridOp`](crate::cluster::GridOp) descriptor + state payloads |
-//! |                          | `StepResult` (8)         | step id + per-owned-task (index, seconds, result segment \| error) |
+//! | `Step` (7)               |                          | step id + flags byte (bit 0: sliced payloads, bit 1: fold gather) + [`GridOp`](crate::cluster::GridOp) descriptor (full or sliced) |
+//! |                          | `StepResult` (8)         | step id + per-owned-task (index, seconds, status): ok → fold count + result segment(s); error → message; absorbed-by-fold → nothing |
 //! | `Shutdown` (9)           |                          | — |
 //! |                          | `Bye` (10)               | — |
 //! | `Fatal` (11), either way |                          | message string |
@@ -29,16 +29,52 @@
 //! bodies use the [`crate::util::bytes`] little-endian codec; `f32`
 //! payloads round-trip by bit pattern (the parity tests assert final
 //! weights are bit-identical to the sim backend).
+//!
+//! ## Capability negotiation
+//!
+//! The driver *offers* a capability mask in `Hello`; each executor acks
+//! the subset it implements (`offered & `[`CAPS_SUPPORTED`]).  The driver
+//! then runs the whole fleet at the AND of every ack, so one stale
+//! executor downgrades the session instead of breaking it:
+//!
+//! * [`CAP_SLICED`] — Step frames may carry per-executor *sliced*
+//!   payloads (only the state ranges the receiver's owned tasks read).
+//! * [`CAP_CONTIG_FOLD`] — ownership may be contiguous-range instead of
+//!   round-robin, and Step frames may set the fold flag asking the
+//!   executor to pre-combine its locally-owned, aligned subtrees of the
+//!   segment-combine tree before replying (bit-identical to
+//!   [`reduce_segments`](crate::cluster::SimCluster::reduce_segments)
+//!   order).
+//!
+//! A full-broadcast driver (`--dist-wire broadcast`) simply offers no
+//! capabilities.
 
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 
 /// "DDOP" — first field of both handshake messages.
 pub const PROTO_MAGIC: u32 = 0x4444_4F50;
-/// Bump on any frame-layout change.
-pub const PROTO_VERSION: u32 = 1;
+/// Bump on any frame-layout change.  v2: capability bits in the
+/// handshake, ownership byte in Stage, flags byte + optional sliced
+/// payloads in Step, fold count/absorbed statuses in StepResult.
+pub const PROTO_VERSION: u32 = 2;
 /// Ceiling on one frame body (guards a corrupt length prefix).
 pub const MAX_FRAME: usize = 1 << 30;
+
+/// Capability bit: per-executor sliced Step payloads.
+pub const CAP_SLICED: u32 = 1 << 0;
+/// Capability bit: contiguous-range ownership + executor-side gather
+/// folding.
+pub const CAP_CONTIG_FOLD: u32 = 1 << 1;
+/// Every capability this build implements (what an executor acks).
+pub const CAPS_SUPPORTED: u32 = CAP_SLICED | CAP_CONTIG_FOLD;
+
+/// Step-frame flags byte, bit 0: the op payload is sliced for this
+/// executor (decode with `decode_sliced_into`).
+pub const STEP_FLAG_SLICED: u8 = 1 << 0;
+/// Step-frame flags byte, bit 1: pre-fold locally-owned aligned combine
+/// subtrees before replying.
+pub const STEP_FLAG_FOLD: u8 = 1 << 1;
 
 /// Frame tags (see the module-level message table).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -60,7 +60,9 @@ pub mod scenario;
 pub mod simtime;
 pub mod superstep;
 
-pub use backend::{ClusterBackend, GridOp, OpScratch, SimBackend};
+pub use backend::{
+    ClusterBackend, FoldAxis, FoldGroup, GridOp, OpScratch, Ownership, SimBackend,
+};
 pub use comm::{tree_aggregate, tree_aggregate_f32, CommStats};
 pub use dist::DistCluster;
 pub use pool::WorkerPool;
@@ -137,6 +139,60 @@ pub fn host_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// What the dist driver puts in each executor's Step frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireMode {
+    /// Per-executor frames carry only the state slices and index streams
+    /// that executor's owned tasks read, with contiguous ownership and
+    /// executor-side gather folding when the whole fleet supports them
+    /// (the default).
+    #[default]
+    Sliced,
+    /// Every executor receives the identical full op payload (the
+    /// pre-slicing wire behavior); no capabilities are offered in the
+    /// handshake, so ownership stays round-robin and gathers unfolded.
+    Broadcast,
+}
+
+impl WireMode {
+    /// Parse a `--dist-wire` spec (`sliced` or `broadcast`).
+    pub fn parse(s: &str) -> Result<WireMode> {
+        match s.trim() {
+            "sliced" => Ok(WireMode::Sliced),
+            "broadcast" | "full" => Ok(WireMode::Broadcast),
+            other => anyhow::bail!(
+                "unknown dist wire mode '{other}'; valid forms are `sliced` or `broadcast`"
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WireMode::Sliced => "sliced",
+            WireMode::Broadcast => "broadcast",
+        }
+    }
+}
+
+/// One executor-side pre-fold recorded during a distributed gather: the
+/// aligned leaf block `leaf .. leaf + folded` of the combine group whose
+/// [`SimCluster::reduce_segments`] geometry is (`base`, `stride`,
+/// `count`, `len`) was already summed into leaf `leaf` — in the global
+/// tree's own pairing order — before the executor replied.
+/// [`SimCluster::reduce_segments_folded`] skips exactly those pairs while
+/// charging the unchanged collective cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FoldEntry {
+    pub base: usize,
+    pub stride: usize,
+    pub count: usize,
+    pub len: usize,
+    /// Root leaf of the pre-folded aligned block (`leaf % folded == 0`).
+    pub leaf: usize,
+    /// Leaves folded into the root (a power of two ≥ 2).
+    pub folded: usize,
+}
+
 /// Cluster topology and cost-model parameters.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -156,6 +212,8 @@ pub struct ClusterConfig {
     /// Cluster-condition scenario: heterogeneous slots, stragglers,
     /// failures.  Default: the ideal (perfect) cluster.
     pub scenario: ClusterScenario,
+    /// Dist-substrate wire strategy (ignored by the sim substrate).
+    pub wire: WireMode,
 }
 
 impl Default for ClusterConfig {
@@ -170,6 +228,7 @@ impl Default for ClusterConfig {
             bandwidth: 125e6,
             cost: CostModel::Measured,
             scenario: ClusterScenario::ideal(),
+            wire: WireMode::Sliced,
         }
     }
 }
@@ -465,24 +524,58 @@ impl SimCluster {
         count: usize,
         len: usize,
     ) {
+        self.reduce_segments_folded(slab, base, stride, count, len, &[]);
+    }
+
+    /// [`SimCluster::reduce_segments`] for a gather whose executors
+    /// pre-folded some aligned subtrees (see [`FoldEntry`]): pairs fully
+    /// inside a logged block are *skipped* — their `dst += src` already
+    /// happened executor-side, in this exact pairing order — but every
+    /// pair is still *charged*, because the modeled collective cost
+    /// depends on the tree layout, not on where each add physically ran;
+    /// the sim and dist clocks must stay bit-identical.
+    pub fn reduce_segments_folded(
+        &mut self,
+        slab: &mut [f32],
+        base: usize,
+        stride: usize,
+        count: usize,
+        len: usize,
+        fold_log: &[FoldEntry],
+    ) {
         assert!(len <= stride || count <= 1, "segments must not overlap");
         if count <= 1 {
             return; // single leaf is free, like reduce_sum
         }
         assert!(base + (count - 1) * stride + len <= slab.len());
+        // full-geometry match so a log holding entries for *other* groups
+        // of the same gather (other p's delta group, other q's column
+        // group) can never suppress a pair of this one
+        let prefolded = |i: usize, j: usize| {
+            fold_log.iter().any(|e| {
+                e.base == base
+                    && e.stride == stride
+                    && e.count == count
+                    && e.len == len
+                    && e.leaf <= i
+                    && j < e.leaf + e.folded
+            })
+        };
         let mut stats = CommStats::default();
         let mut gap = 1usize;
         while gap < count {
             let mut pairs = 0usize;
             let mut i = 0usize;
             while i + gap < count {
-                let dst = base + i * stride;
-                let src = base + (i + gap) * stride;
-                let (head, tail) = slab.split_at_mut(src);
-                let d = &mut head[dst..dst + len];
-                let s = &tail[..len];
-                for (dv, &sv) in d.iter_mut().zip(s) {
-                    *dv += sv;
+                if !prefolded(i, i + gap) {
+                    let dst = base + i * stride;
+                    let src = base + (i + gap) * stride;
+                    let (head, tail) = slab.split_at_mut(src);
+                    let d = &mut head[dst..dst + len];
+                    let s = &tail[..len];
+                    for (dv, &sv) in d.iter_mut().zip(s) {
+                        *dv += sv;
+                    }
                 }
                 pairs += 1;
                 i += 2 * gap;
@@ -823,6 +916,89 @@ mod tests {
             assert_eq!(real.clock.comm_time(), inplace.clock.comm_time(), "count={count}");
             assert_eq!(real.clock.comm_bytes(), inplace.clock.comm_bytes(), "count={count}");
             assert_eq!(real.clock.messages(), inplace.clock.messages(), "count={count}");
+        }
+    }
+
+    #[test]
+    fn reduce_segments_folded_matches_with_prefolded_blocks() {
+        // an executor owning leaves [2,6) of a 7-leaf group pre-folds the
+        // aligned blocks {2,3} and {4,5} exactly like the global tree
+        // would; the driver-side folded reduce must then produce a
+        // bit-identical slab and charge the identical collective cost
+        let (count, len) = (7usize, 5usize);
+        let (base, stride) = (2usize, len);
+        let mut rng = crate::util::rng::Xoshiro::new(42);
+        let mut slab = vec![0.0f32; base + count * stride];
+        for v in slab.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let mut plain = slab.clone();
+        let mut a = SimCluster::new(ClusterConfig::default());
+        a.reduce_segments(&mut plain, base, stride, count, len);
+
+        let mut log = Vec::new();
+        for root in [2usize, 4] {
+            let (d0, s0) = (base + root * stride, base + (root + 1) * stride);
+            for e in 0..len {
+                slab[d0 + e] += slab[s0 + e];
+            }
+            log.push(FoldEntry { base, stride, count, len, leaf: root, folded: 2 });
+        }
+        // entries for a *different* group must not suppress anything here
+        log.push(FoldEntry { base: 99, stride, count, len, leaf: 0, folded: 4 });
+        let mut b = SimCluster::new(ClusterConfig::default());
+        b.reduce_segments_folded(&mut slab, base, stride, count, len, &log);
+        for (i, (x, y)) in plain.iter().zip(&slab).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "slab[{i}]");
+        }
+        assert_eq!(a.clock.comm_time(), b.clock.comm_time());
+        assert_eq!(a.clock.comm_bytes(), b.clock.comm_bytes());
+        assert_eq!(a.clock.messages(), b.clock.messages());
+    }
+
+    #[test]
+    fn reduce_segments_folded_fully_prefolded_group_is_a_charged_noop() {
+        // one executor owned every leaf and folded the whole 4-leaf group:
+        // the driver does zero arithmetic but charges the full tree
+        let (count, len, base) = (4usize, 3usize, 0usize);
+        let stride = len;
+        let mut rng = crate::util::rng::Xoshiro::new(7);
+        let mut slab = vec![0.0f32; count * stride];
+        for v in slab.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let mut plain = slab.clone();
+        let mut a = SimCluster::new(ClusterConfig::default());
+        a.reduce_segments(&mut plain, base, stride, count, len);
+        // executor-side fold, in the global tree's own order
+        for (dst, src) in [(0usize, 1usize), (2, 3), (0, 2)] {
+            for e in 0..len {
+                slab[dst * stride + e] += slab[src * stride + e];
+            }
+        }
+        let log = [FoldEntry { base, stride, count, len, leaf: 0, folded: 4 }];
+        let before = slab.clone();
+        let mut b = SimCluster::new(ClusterConfig::default());
+        b.reduce_segments_folded(&mut slab, base, stride, count, len, &log);
+        assert_eq!(slab, before, "every pair must be skipped");
+        for e in 0..len {
+            assert_eq!(plain[e].to_bits(), slab[e].to_bits(), "root segment elem {e}");
+        }
+        assert_eq!(a.clock.comm_time(), b.clock.comm_time());
+        assert_eq!(a.clock.comm_bytes(), b.clock.comm_bytes());
+        assert_eq!(a.clock.messages(), b.clock.messages());
+    }
+
+    #[test]
+    fn wire_mode_parses_and_defaults_to_sliced() {
+        assert_eq!(WireMode::parse("sliced").unwrap(), WireMode::Sliced);
+        assert_eq!(WireMode::parse("broadcast").unwrap(), WireMode::Broadcast);
+        assert_eq!(WireMode::parse("full").unwrap(), WireMode::Broadcast);
+        assert!(WireMode::parse("carrier-pigeon").is_err());
+        assert_eq!(WireMode::default(), WireMode::Sliced);
+        assert_eq!(ClusterConfig::default().wire, WireMode::Sliced);
+        for m in [WireMode::Sliced, WireMode::Broadcast] {
+            assert_eq!(WireMode::parse(m.label()).unwrap(), m);
         }
     }
 

@@ -6,6 +6,7 @@
 //!             [--seed N] [--backend native|xla] [--loss hinge|logistic]
 //!             [--cores 8] [--threads N]  (threads default: host parallelism)
 //!             [--cluster sim|dist:host:port[,host:port...]]
+//!             [--dist-wire sliced|broadcast]  (default: sliced)
 //!             [--scenario ideal|stragglers:p=0.1,slow=10x[,shape=S][,spec]
 //!                        |hetero:frac=0.25,speed=0.5
 //!                        |failures:p=0.05[,retries=R][,burst=executor]
@@ -25,7 +26,9 @@
 //! (start them first with `ddopt executor`); final weights are bitwise
 //! identical to `--cluster sim` at the same seed, and `--wire-out`
 //! records the measured per-superstep wall time and bytes on the wire
-//! next to the simulated clock.
+//! next to the simulated clock.  `--dist-wire broadcast` disables the
+//! negotiated sliced-scatter/folded-gather wire optimizations (same
+//! bits, more bytes) — useful as a baseline and for byte A/B tests.
 
 use anyhow::{anyhow, bail, Result};
 use ddopt::bench_harness::{self, Scale};
@@ -112,6 +115,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(c) = args.flag_str("cluster") {
         cfg.cluster.mode = ddopt::cluster::ClusterMode::parse(&c)?;
+    }
+    if let Some(w) = args.flag_str("dist-wire") {
+        cfg.cluster.wire = ddopt::cluster::WireMode::parse(&w)?;
     }
     if let Some(l) = args.flag_str("loss") {
         cfg.loss = Loss::parse(&l).ok_or_else(|| anyhow!("bad loss '{l}'"))?;

@@ -61,6 +61,11 @@ pub struct WireRecord {
     pub bytes_in: usize,
     /// Simulated seconds the cost model charged for the same superstep.
     pub sim_secs: f64,
+    /// Per-executor bytes written (scatter split; sums to `bytes_out`).
+    /// With sliced scatter this is where skew between executors shows up.
+    pub scatter: Vec<usize>,
+    /// Per-executor bytes read back (gather split; sums to `bytes_in`).
+    pub gather: Vec<usize>,
 }
 
 /// Write per-superstep wire records as JSON lines (one object per line),
@@ -79,6 +84,11 @@ pub fn write_wire_jsonl(records: &[WireRecord], path: &Path) -> Result<()> {
             ("bytes_out", Json::from(r.bytes_out)),
             ("bytes_in", Json::from(r.bytes_in)),
             ("sim_secs", Json::num(r.sim_secs)),
+            (
+                "scatter",
+                Json::arr(r.scatter.iter().map(|&b| Json::from(b))),
+            ),
+            ("gather", Json::arr(r.gather.iter().map(|&b| Json::from(b)))),
         ]);
         writeln!(f, "{line}")?;
     }

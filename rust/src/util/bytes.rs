@@ -232,6 +232,19 @@ impl<'a> ByteReader<'a> {
         Ok(())
     }
 
+    /// Decode exactly `n` raw (unprefixed) i32s, *appending* to `out` —
+    /// the sliced index-stream decode concatenates many per-task runs
+    /// into one buffer.
+    pub fn i32s_append(&mut self, out: &mut Vec<i32>, n: usize) -> Result<()> {
+        let raw = self.take(4 * n)?;
+        out.reserve(n);
+        out.extend(
+            raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap())),
+        );
+        Ok(())
+    }
+
     pub fn u32s(&mut self) -> Result<Vec<u32>> {
         let n = self.count(4)?;
         let raw = self.take(4 * n)?;
@@ -356,6 +369,22 @@ mod tests {
         let mut r2 = ByteReader::new(&buf[..8]);
         let _ = r2.u64().unwrap();
         assert!(r2.fill_f32s(&mut dst).is_err());
+    }
+
+    #[test]
+    fn i32s_append_concatenates_runs() {
+        let mut buf = Vec::new();
+        for v in [-1i32, 2, 3, -4] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut out = vec![9i32];
+        let mut r = ByteReader::new(&buf);
+        r.i32s_append(&mut out, 2).unwrap();
+        r.i32s_append(&mut out, 2).unwrap();
+        assert_eq!(out, vec![9, -1, 2, 3, -4]);
+        assert!(r.is_empty());
+        let mut r2 = ByteReader::new(&buf);
+        assert!(r2.i32s_append(&mut out, 5).is_err());
     }
 
     #[test]

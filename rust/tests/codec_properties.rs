@@ -1,0 +1,387 @@
+//! Property tests for the dist wire codecs: randomized [`GridOp`]s must
+//! survive the full round trip (`encode_op` → `decode_into` → `as_op`)
+//! bit-for-bit, the *sliced* round trip must reproduce exactly the
+//! state every owned task reads (while shipping fewer bytes), and both
+//! decoders must reject every truncated prefix and corrupt input with a
+//! clean error — never a panic, never silently short data.
+
+use ddopt::cluster::dist::ops::{encode_op, encode_op_sliced, OpBuf};
+use ddopt::cluster::dist::wire::{self, Tag};
+use ddopt::cluster::GridOp;
+use ddopt::data::{Grid, Partitioned, SyntheticDense};
+use ddopt::loss::Loss;
+use ddopt::util::bytes::ByteReader;
+use ddopt::util::rng::Xoshiro;
+
+fn fixture() -> Partitioned {
+    let ds = SyntheticDense::paper_part1(2, 2, 12, 9, 0.1, 21).build();
+    Partitioned::split(&ds, Grid::new(2, 2))
+}
+
+fn rvec(rng: &mut Xoshiro, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect()
+}
+
+/// Random concatenated per-task index streams for `n_tasks` tasks whose
+/// task `t` draws indices below `limit(t)`.
+fn rstreams(
+    rng: &mut Xoshiro,
+    n_tasks: usize,
+    limit: impl Fn(usize) -> usize,
+) -> (Vec<i32>, Vec<(usize, usize)>) {
+    let mut idx = Vec::new();
+    let mut off = Vec::with_capacity(n_tasks);
+    for t in 0..n_tasks {
+        let l = rng.below(6) + 1;
+        off.push((idx.len(), l));
+        for _ in 0..l {
+            idx.push(rng.below(limit(t).max(1)) as i32);
+        }
+    }
+    (idx, off)
+}
+
+fn assert_f32s_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Owned backing state for one randomly generated op (GridOp borrows).
+struct OpState {
+    f1: Vec<f32>,
+    f2: Vec<f32>,
+    f3: Vec<f32>,
+    idx: Vec<i32>,
+    idx_off: Vec<(usize, usize)>,
+    h: Vec<usize>,
+    windows: Vec<(usize, usize)>,
+}
+
+impl OpState {
+    fn new(kind: usize, part: &Partitioned, rng: &mut Xoshiro) -> OpState {
+        let (n, m) = (part.n, part.m);
+        let (pp, qq) = (part.grid.p, part.grid.q);
+        let k = pp * qq;
+        let mut st = OpState {
+            f1: Vec::new(),
+            f2: Vec::new(),
+            f3: Vec::new(),
+            idx: Vec::new(),
+            idx_off: Vec::new(),
+            h: Vec::new(),
+            windows: Vec::new(),
+        };
+        match kind {
+            0 => {
+                // sdca: alpha (n), w (m), streams over local rows, h
+                st.f1 = rvec(rng, n);
+                st.f2 = rvec(rng, m);
+                let rows = |t: usize| {
+                    let (r0, r1) = part.row_ranges[t / qq];
+                    r1 - r0
+                };
+                let (idx, off) = rstreams(rng, k, rows);
+                st.idx = idx;
+                st.idx_off = off;
+                st.h = (0..k).map(|_| rng.below(5) + 1).collect();
+            }
+            1 => st.f1 = rvec(rng, n),           // atx: v (n)
+            2 => st.f1 = rvec(rng, m),           // margins: w (m)
+            3 => st.f1 = rvec(rng, n),           // grad: mt (n)
+            4 => {
+                // svrg: w (m), mu (m), mt (n), windows, streams
+                st.f1 = rvec(rng, m);
+                st.f2 = rvec(rng, m);
+                st.f3 = rvec(rng, n);
+                st.windows = (0..k)
+                    .map(|t| {
+                        let (c0, c1) = part.col_ranges[t / pp];
+                        let len = c1 - c0;
+                        let a = rng.below(len);
+                        let b = a + rng.below(len - a) + 1;
+                        (a, b.min(len))
+                    })
+                    .collect();
+                let rows = |t: usize| {
+                    let (r0, r1) = part.row_ranges[t % pp];
+                    r1 - r0
+                };
+                let (idx, off) = rstreams(rng, k, rows);
+                st.idx = idx;
+                st.idx_off = off;
+            }
+            5 => {
+                // admm-project: w_hat (pp*m), z_hat (qq*n)
+                st.f1 = rvec(rng, pp * m);
+                st.f2 = rvec(rng, qq * n);
+            }
+            _ => st.f1 = rvec(rng, n), // prox-hinge: c (n)
+        }
+        st
+    }
+
+    fn op(&self, kind: usize) -> GridOp<'_> {
+        match kind {
+            0 => GridOp::Sdca {
+                alpha: &self.f1,
+                w: &self.f2,
+                idx: &self.idx,
+                idx_off: &self.idx_off,
+                h: &self.h,
+                lamn: 1.25,
+                invq: 0.5,
+                beta: 0.75,
+            },
+            1 => GridOp::Atx { v: &self.f1 },
+            2 => GridOp::Margins { w: &self.f1 },
+            3 => GridOp::Grad { loss: Loss::Logistic, mt: &self.f1 },
+            4 => GridOp::Svrg {
+                loss: Loss::Hinge,
+                w: &self.f1,
+                mu: &self.f2,
+                mt: &self.f3,
+                windows: &self.windows,
+                idx: &self.idx,
+                idx_off: &self.idx_off,
+                batch: 3,
+                eta: 0.01,
+                lam: 0.1,
+                tolerant: true,
+            },
+            5 => GridOp::AdmmProject { w_hat: &self.f1, z_hat: &self.f2 },
+            _ => GridOp::ProxHinge { c: &self.f1, rho: 0.3, inv_n: 0.05 },
+        }
+    }
+}
+
+/// The state one task actually reads, extracted uniformly from any op so
+/// the full and sliced decodes can be compared read-for-read.
+fn task_reads(op: &GridOp<'_>, part: &Partitioned, task: usize) -> Vec<Vec<f32>> {
+    let (pp, qq) = (part.grid.p, part.grid.q);
+    match op {
+        GridOp::Sdca { alpha, w, idx, idx_off, h, .. } => {
+            let (r0, r1) = part.row_ranges[task / qq];
+            let (c0, c1) = part.col_ranges[task % qq];
+            let (s, l) = idx_off[task];
+            vec![
+                alpha[r0..r1].to_vec(),
+                w[c0..c1].to_vec(),
+                idx[s..s + l].iter().map(|&i| i as f32).collect(),
+                vec![h[task] as f32],
+            ]
+        }
+        GridOp::Atx { v } => {
+            let (r0, r1) = part.row_ranges[task / qq];
+            vec![v[r0..r1].to_vec()]
+        }
+        GridOp::Margins { w } => {
+            let (c0, c1) = part.col_ranges[task % qq];
+            vec![w[c0..c1].to_vec()]
+        }
+        GridOp::Grad { mt, .. } => {
+            let (r0, r1) = part.row_ranges[task / qq];
+            vec![mt[r0..r1].to_vec()]
+        }
+        GridOp::Svrg { w, mu, mt, windows, idx, idx_off, .. } => {
+            let (q, p) = (task / pp, task % pp);
+            let (r0, r1) = part.row_ranges[p];
+            let (c0, c1) = part.col_ranges[q];
+            let (s, l) = idx_off[task];
+            let win = windows[task];
+            vec![
+                w[c0..c1].to_vec(),
+                mu[c0..c1].to_vec(),
+                mt[r0..r1].to_vec(),
+                vec![win.0 as f32, win.1 as f32],
+                idx[s..s + l].iter().map(|&i| i as f32).collect(),
+            ]
+        }
+        GridOp::AdmmProject { w_hat, z_hat } => {
+            let (s, l) = op.out_span(part, task);
+            let (s2, l2) = op.out2_span(part, task);
+            vec![w_hat[s..s + l].to_vec(), z_hat[s2..s2 + l2].to_vec()]
+        }
+        GridOp::ProxHinge { c, .. } => {
+            let (r0, r1) = part.row_ranges[task];
+            vec![c[r0..r1].to_vec()]
+        }
+    }
+}
+
+fn scalar_fingerprint(op: &GridOp<'_>) -> Vec<f32> {
+    match op {
+        GridOp::Sdca { lamn, invq, beta, .. } => vec![*lamn, *invq, *beta],
+        GridOp::Grad { loss, .. } => vec![*loss as u8 as f32],
+        GridOp::Svrg { loss, batch, eta, lam, tolerant, .. } => {
+            vec![*loss as u8 as f32, *batch as f32, *eta, *lam, *tolerant as u8 as f32]
+        }
+        GridOp::ProxHinge { rho, inv_n, .. } => vec![*rho, *inv_n],
+        _ => vec![],
+    }
+}
+
+#[test]
+fn full_codec_round_trips_every_kind_bitwise() {
+    let part = fixture();
+    for seed in 0..5u64 {
+        let mut rng = Xoshiro::new(seed + 100);
+        for kind in 0..7usize {
+            let st = OpState::new(kind, &part, &mut rng);
+            let op = st.op(kind);
+            let mut buf = Vec::new();
+            encode_op(&op, &mut buf);
+            let mut ob = OpBuf::new();
+            let mut r = ByteReader::new(&buf);
+            ob.decode_into(&mut r).unwrap();
+            assert_eq!(r.remaining(), 0, "kind {kind}: decoder left bytes");
+            let back = ob.as_op().unwrap();
+            assert_eq!(back.name(), op.name());
+            assert_f32s_eq(
+                &scalar_fingerprint(&back),
+                &scalar_fingerprint(&op),
+                &format!("kind {kind} scalars"),
+            );
+            for task in 0..op.n_tasks(&part) {
+                let want = task_reads(&op, &part, task);
+                let got = task_reads(&back, &part, task);
+                assert_eq!(want.len(), got.len());
+                for (w, g) in want.iter().zip(&got) {
+                    assert_f32s_eq(g, w, &format!("kind {kind} task {task}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sliced_codec_reproduces_owned_reads_and_never_grows() {
+    let part = fixture();
+    for seed in 0..5u64 {
+        let mut rng = Xoshiro::new(seed + 500);
+        for kind in 0..7usize {
+            let st = OpState::new(kind, &part, &mut rng);
+            let op = st.op(kind);
+            let n_tasks = op.n_tasks(&part);
+            // a random strict subset plays the executor's owned list
+            let owned: Vec<usize> =
+                (0..n_tasks).filter(|_| rng.below(2) == 0).collect();
+            let mut full = Vec::new();
+            encode_op(&op, &mut full);
+            let mut sliced = Vec::new();
+            encode_op_sliced(&op, &part, &owned, &mut sliced);
+            assert!(
+                sliced.len() <= full.len() + 64,
+                "kind {kind}: sliced ({}) should not exceed full ({}) beyond \
+                 range-table overhead",
+                sliced.len(),
+                full.len()
+            );
+            // decode into a buffer dirtied by a *different* op first: the
+            // sliced decoder must fully reset per-task state
+            let mut ob = OpBuf::new();
+            let decoy_state = OpState::new((kind + 1) % 7, &part, &mut rng);
+            let decoy = decoy_state.op((kind + 1) % 7);
+            let mut decoy_buf = Vec::new();
+            encode_op(&decoy, &mut decoy_buf);
+            ob.decode_into(&mut ByteReader::new(&decoy_buf)).unwrap();
+            let mut r = ByteReader::new(&sliced);
+            ob.decode_sliced_into(&mut r).unwrap();
+            assert_eq!(r.remaining(), 0, "kind {kind}: sliced decoder left bytes");
+            let back = ob.as_op().unwrap();
+            assert_eq!(back.name(), op.name());
+            assert_f32s_eq(
+                &scalar_fingerprint(&back),
+                &scalar_fingerprint(&op),
+                &format!("kind {kind} scalars"),
+            );
+            for &task in &owned {
+                let want = task_reads(&op, &part, task);
+                let got = task_reads(&back, &part, task);
+                for (w, g) in want.iter().zip(&got) {
+                    assert_f32s_eq(g, w, &format!("sliced kind {kind} task {task}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_truncated_prefix_is_rejected() {
+    let part = fixture();
+    let mut rng = Xoshiro::new(7777);
+    for kind in 0..7usize {
+        let st = OpState::new(kind, &part, &mut rng);
+        let op = st.op(kind);
+        let mut full = Vec::new();
+        encode_op(&op, &mut full);
+        for cut in 0..full.len() {
+            let mut ob = OpBuf::new();
+            assert!(
+                ob.decode_into(&mut ByteReader::new(&full[..cut])).is_err(),
+                "kind {kind}: {cut}-byte prefix of {} decoded",
+                full.len()
+            );
+        }
+        let owned: Vec<usize> = (0..op.n_tasks(&part)).step_by(2).collect();
+        let mut sliced = Vec::new();
+        encode_op_sliced(&op, &part, &owned, &mut sliced);
+        for cut in 0..sliced.len() {
+            let mut ob = OpBuf::new();
+            assert!(
+                ob.decode_sliced_into(&mut ByteReader::new(&sliced[..cut])).is_err(),
+                "kind {kind}: {cut}-byte sliced prefix of {} decoded",
+                sliced.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupt_inputs_are_rejected_not_trusted() {
+    let part = fixture();
+    let mut rng = Xoshiro::new(31);
+    let st = OpState::new(0, &part, &mut rng);
+    let op = st.op(0);
+    // unknown kind byte
+    let mut buf = Vec::new();
+    encode_op(&op, &mut buf);
+    buf[0] = 0xEE;
+    assert!(OpBuf::new().decode_into(&mut ByteReader::new(&buf)).is_err());
+    let owned = vec![0usize, 2];
+    let mut sbuf = Vec::new();
+    encode_op_sliced(&op, &part, &owned, &mut sbuf);
+    let mut bad = sbuf.clone();
+    bad[0] = 0xEE;
+    assert!(OpBuf::new().decode_sliced_into(&mut ByteReader::new(&bad)).is_err());
+    // corrupt a length/offset word somewhere in the middle of the sliced
+    // body at every byte position: the decoder must error or produce a
+    // well-formed op — it must never panic or read out of bounds
+    for pos in 1..sbuf.len() {
+        let mut mutated = sbuf.clone();
+        mutated[pos] ^= 0xFF;
+        let mut ob = OpBuf::new();
+        let _ = ob.decode_sliced_into(&mut ByteReader::new(&mutated));
+    }
+}
+
+#[test]
+fn frame_codec_round_trips_random_bodies() {
+    let mut rng = Xoshiro::new(99);
+    let mut stream = Vec::new();
+    let mut bodies = Vec::new();
+    for _ in 0..20 {
+        let body: Vec<u8> = (0..rng.below(300)).map(|_| rng.below(256) as u8).collect();
+        wire::write_frame(&mut stream, Tag::Step, &body).unwrap();
+        bodies.push(body);
+    }
+    let mut cur = std::io::Cursor::new(stream);
+    let mut buf = Vec::new();
+    for want in &bodies {
+        let (tag, n) = wire::read_frame(&mut cur, &mut buf).unwrap();
+        assert_eq!(tag, Tag::Step);
+        assert_eq!(n, 5 + want.len());
+        assert_eq!(&buf, want);
+    }
+}

@@ -1,0 +1,327 @@
+//! Driver-side gather-protocol enforcement: a misbehaving executor —
+//! duplicate task, out-of-range task, wrong step id, missing owner,
+//! bogus fold claims, fatal frames — must surface as a clean driver
+//! error naming the violation, never a hang, never silently corrupted
+//! slabs.  Each scenario runs the real [`DistCluster`] against a
+//! scripted fake executor on a loopback socket that speaks a correct v2
+//! handshake and then lies in its `StepResult`.
+//!
+//! Also the wire-mode A/B: `--dist-wire broadcast` (no negotiated
+//! capabilities) against a real executor process must match the sim
+//! backend bitwise, and the sliced default must ship strictly fewer
+//! scatter bytes than broadcast for the same training run.
+
+use anyhow::Result;
+use ddopt::cluster::dist::wire::{self, Tag};
+use ddopt::cluster::{
+    ClusterBackend, ClusterConfig, ClusterMode, CostModel, DistCluster, GridOp, WireMode,
+};
+use ddopt::coordinator::{D3ca, D3caConfig, Driver, Optimizer, RunResult};
+use ddopt::data::{Grid, Partitioned, SyntheticDense};
+use ddopt::runtime::Backend;
+use ddopt::util::bytes::{self, ByteReader};
+use std::io::{BufRead, BufReader};
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::thread::JoinHandle;
+
+fn fixture() -> (Partitioned, Vec<f32>) {
+    let ds = SyntheticDense::paper_part1(2, 2, 12, 9, 0.1, 7).build();
+    let part = Partitioned::split(&ds, Grid::new(2, 2));
+    let v = vec![0.25f32; part.n];
+    (part, v)
+}
+
+/// One ok entry of a StepResult body: task, seconds, status 0, fold
+/// count, and a correctly sized (zero-filled) out segment for an op with
+/// no second output.
+fn ok_entry(body: &mut Vec<u8>, part: &Partitioned, op: &GridOp<'_>, task: usize, fold: u32) {
+    bytes::put_u32(body, task as u32);
+    bytes::put_f64(body, 1e-3);
+    bytes::put_u8(body, 0);
+    bytes::put_u32(body, fold);
+    let (_, l) = op.out_span(part, task);
+    bytes::put_f32s(body, &vec![0.0f32; l]);
+    let (_, l2) = op.out2_span(part, task);
+    bytes::put_f32s(body, &vec![0.0f32; l2]);
+}
+
+/// Spawn a scripted executor: correct v2 handshake (acks everything the
+/// driver offers), StageAck, then the given frame as its one and only
+/// superstep reply.
+fn fake_executor(tag: Tag, reply: Vec<u8>) -> (String, JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut buf = Vec::new();
+        let (t, _) = wire::read_frame(&mut s, &mut buf).unwrap();
+        assert_eq!(t, Tag::Hello, "fake executor wanted Hello");
+        let mut r = ByteReader::new(&buf);
+        let magic = r.u32().unwrap();
+        let version = r.u32().unwrap();
+        let _index = r.u32().unwrap();
+        let _count = r.u32().unwrap();
+        let offered = r.u32().unwrap();
+        let mut ack = Vec::new();
+        bytes::put_u32(&mut ack, magic);
+        bytes::put_u32(&mut ack, version);
+        bytes::put_u32(&mut ack, 1);
+        bytes::put_u32(&mut ack, offered);
+        wire::write_frame(&mut s, Tag::HelloAck, &ack).unwrap();
+        let (t, _) = wire::read_frame(&mut s, &mut buf).unwrap();
+        assert_eq!(t, Tag::Stage, "fake executor wanted Stage");
+        wire::write_frame(&mut s, Tag::StageAck, &[]).unwrap();
+        let (t, _) = wire::read_frame(&mut s, &mut buf).unwrap();
+        assert_eq!(t, Tag::Step, "fake executor wanted Step");
+        wire::write_frame(&mut s, tag, &reply).unwrap();
+        // keep the socket open until the driver is done with us
+        let _ = wire::read_frame(&mut s, &mut buf);
+    });
+    (addr, handle)
+}
+
+/// Drive one Atx superstep against the scripted executor; returns the
+/// driver error the reply provoked.
+fn provoke(build_reply: impl FnOnce(&Partitioned, &GridOp<'_>) -> (Tag, Vec<u8>)) -> String {
+    let (part, v) = fixture();
+    let op = GridOp::Atx { v: &v };
+    let (tag, reply) = build_reply(&part, &op);
+    let (addr, handle) = fake_executor(tag, reply);
+    let backend = Backend::native();
+    let staged = backend.stage(&part).unwrap();
+    let config = ClusterConfig {
+        cores: 4,
+        threads: 1,
+        cost: CostModel::Fixed(1e-3),
+        ..Default::default()
+    };
+    let err = (|| -> Result<()> {
+        let mut cluster = DistCluster::connect(config, &[addr], &part)?;
+        let mut out = vec![0.0f32; op.out_len(&part)];
+        let mut out2 = vec![0.0f32; op.out2_len(&part)];
+        let op = GridOp::Atx { v: &v };
+        cluster.grid_exec(&staged, op, &mut out, &mut out2)?;
+        Ok(())
+    })()
+    .expect_err("driver must reject the scripted reply");
+    handle.join().unwrap();
+    format!("{err:#}")
+}
+
+// the driver's first superstep after staging
+const STEP_ID: u64 = 1;
+
+#[test]
+fn duplicate_task_in_reply_is_rejected() {
+    let msg = provoke(|part, op| {
+        let mut body = Vec::new();
+        bytes::put_u64(&mut body, STEP_ID);
+        bytes::put_u32(&mut body, 2);
+        ok_entry(&mut body, part, op, 0, 1);
+        ok_entry(&mut body, part, op, 0, 1);
+        (Tag::StepResult, body)
+    });
+    assert!(msg.contains("reported twice"), "{msg}");
+}
+
+#[test]
+fn out_of_range_task_is_rejected() {
+    let msg = provoke(|_part, _op| {
+        let mut body = Vec::new();
+        bytes::put_u64(&mut body, STEP_ID);
+        bytes::put_u32(&mut body, 1);
+        bytes::put_u32(&mut body, 99);
+        bytes::put_f64(&mut body, 1e-3);
+        bytes::put_u8(&mut body, 0);
+        (Tag::StepResult, body)
+    });
+    assert!(msg.contains("out of range"), "{msg}");
+}
+
+#[test]
+fn wrong_step_id_is_rejected() {
+    let msg = provoke(|part, op| {
+        let mut body = Vec::new();
+        bytes::put_u64(&mut body, 42);
+        bytes::put_u32(&mut body, 1);
+        ok_entry(&mut body, part, op, 0, 1);
+        (Tag::StepResult, body)
+    });
+    assert!(msg.contains("answered superstep 42"), "{msg}");
+}
+
+#[test]
+fn missing_owner_is_rejected() {
+    // the (sole) executor owns all four tasks but reports only task 0
+    let msg = provoke(|part, op| {
+        let mut body = Vec::new();
+        bytes::put_u64(&mut body, STEP_ID);
+        bytes::put_u32(&mut body, 1);
+        ok_entry(&mut body, part, op, 0, 1);
+        (Tag::StepResult, body)
+    });
+    assert!(msg.contains("no executor owned task 1"), "{msg}");
+}
+
+#[test]
+fn misaligned_fold_claim_is_rejected() {
+    // fold counts must be aligned powers of two within the combine group
+    let msg = provoke(|part, op| {
+        let mut body = Vec::new();
+        bytes::put_u64(&mut body, STEP_ID);
+        bytes::put_u32(&mut body, 1);
+        ok_entry(&mut body, part, op, 0, 3);
+        (Tag::StepResult, body)
+    });
+    assert!(msg.contains("misaligned fold"), "{msg}");
+}
+
+#[test]
+fn absorbed_task_without_fold_root_is_rejected() {
+    let msg = provoke(|_part, _op| {
+        let mut body = Vec::new();
+        bytes::put_u64(&mut body, STEP_ID);
+        bytes::put_u32(&mut body, 1);
+        bytes::put_u32(&mut body, 0);
+        bytes::put_f64(&mut body, 1e-3);
+        bytes::put_u8(&mut body, 2); // absorbed, but nothing folded it
+        (Tag::StepResult, body)
+    });
+    assert!(msg.contains("without a preceding fold root"), "{msg}");
+}
+
+#[test]
+fn fatal_frame_surfaces_the_executor_message() {
+    let msg = provoke(|_part, _op| {
+        let mut body = Vec::new();
+        bytes::put_str(&mut body, "synthetic meltdown");
+        (Tag::Fatal, body)
+    });
+    assert!(
+        msg.contains("executor") && msg.contains("synthetic meltdown"),
+        "{msg}"
+    );
+}
+
+#[test]
+fn over_acked_capabilities_are_rejected_at_handshake() {
+    // an executor claiming capabilities the driver never offered is
+    // broken or hostile either way — fail the connect
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut buf = Vec::new();
+        let (t, _) = wire::read_frame(&mut s, &mut buf).unwrap();
+        assert_eq!(t, Tag::Hello);
+        let mut r = ByteReader::new(&buf);
+        let magic = r.u32().unwrap();
+        let version = r.u32().unwrap();
+        let mut ack = Vec::new();
+        bytes::put_u32(&mut ack, magic);
+        bytes::put_u32(&mut ack, version);
+        bytes::put_u32(&mut ack, 1);
+        bytes::put_u32(&mut ack, 0xFFFF_FFFF);
+        wire::write_frame(&mut s, Tag::HelloAck, &ack).unwrap();
+        let _ = wire::read_frame(&mut s, &mut buf);
+    });
+    let (part, _) = fixture();
+    let config = ClusterConfig {
+        cores: 4,
+        threads: 1,
+        wire: WireMode::Broadcast, // offers no caps — any ack bit is bogus
+        ..Default::default()
+    };
+    let err = DistCluster::connect(config, &[addr], &part)
+        .err()
+        .expect("over-acking executor must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("never offered"), "{msg}");
+    handle.join().unwrap();
+}
+
+// ------------------------------------------------ wire-mode A/B parity
+
+/// One spawned `ddopt executor` child; killed on drop.
+struct ExecProc {
+    child: Child,
+    addr: String,
+}
+
+impl ExecProc {
+    fn spawn(threads: usize) -> ExecProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_ddopt"))
+            .args(["executor", "--bind", "127.0.0.1:0", "--threads", &threads.to_string()])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn ddopt executor");
+        let stdout = child.stdout.take().expect("executor stdout");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("read executor listen line");
+        let addr = line
+            .trim()
+            .strip_prefix("executor listening on ")
+            .unwrap_or_else(|| panic!("unexpected executor banner: {line:?}"))
+            .to_string();
+        ExecProc { child, addr }
+    }
+}
+
+impl Drop for ExecProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn train(mode: ClusterMode, wire_mode: WireMode) -> Result<RunResult> {
+    let ds = SyntheticDense::paper_part1(2, 2, 24, 18, 0.1, 7).build();
+    let part = Partitioned::split(&ds, Grid::new(2, 2));
+    let backend = Backend::native();
+    let cluster = ClusterConfig {
+        mode,
+        cores: 4,
+        threads: 2,
+        cost: CostModel::Fixed(1e-3),
+        wire: wire_mode,
+        ..Default::default()
+    };
+    let mut opt: Box<dyn Optimizer> =
+        Box::new(D3ca::new(D3caConfig { lambda: 0.2, seed: 9, ..Default::default() }));
+    Driver::new(&part, &backend)?.iterations(4).cluster(cluster).run(opt.as_mut())
+}
+
+#[test]
+fn broadcast_mode_matches_sim_bitwise_and_sliced_ships_fewer_bytes() {
+    let execs: Vec<ExecProc> = (0..2).map(|_| ExecProc::spawn(1)).collect();
+    let addrs: Vec<String> = execs.iter().map(|e| e.addr.clone()).collect();
+    let sim = train(ClusterMode::Sim, WireMode::Sliced).unwrap();
+    let broadcast = train(ClusterMode::Dist(addrs.clone()), WireMode::Broadcast).unwrap();
+    let sliced = train(ClusterMode::Dist(addrs), WireMode::Sliced).unwrap();
+    for (i, ((s, b), l)) in sim.w.iter().zip(&broadcast.w).zip(&sliced.w).enumerate() {
+        assert_eq!(s.to_bits(), b.to_bits(), "broadcast w[{i}]");
+        assert_eq!(s.to_bits(), l.to_bits(), "sliced w[{i}]");
+    }
+    assert_eq!(sim.sim_time, broadcast.sim_time, "broadcast sim clock");
+    assert_eq!(sim.sim_time, sliced.sim_time, "sliced sim clock");
+    let step_bytes = |r: &RunResult| -> (usize, usize) {
+        r.wire
+            .iter()
+            .filter(|w| w.op != "stage" && w.op != "prepare-admm")
+            .fold((0, 0), |(o, i), w| (o + w.bytes_out, i + w.bytes_in))
+    };
+    let (bo, bi) = step_bytes(&broadcast);
+    let (so, si) = step_bytes(&sliced);
+    assert!(
+        so < bo,
+        "sliced scatter must ship fewer bytes ({so}) than broadcast ({bo})"
+    );
+    assert!(si <= bi, "folded gather must not grow replies ({si} vs {bi})");
+    // per-executor splits are recorded and sum to the totals
+    for r in &sliced.wire {
+        assert_eq!(r.scatter.iter().sum::<usize>(), r.bytes_out, "scatter split");
+        assert_eq!(r.gather.iter().sum::<usize>(), r.bytes_in, "gather split");
+    }
+}

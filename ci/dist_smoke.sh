@@ -9,6 +9,10 @@
 # the per-superstep wire logs are aggregated and the sliced transport
 # must ship at most half the scatter bytes of broadcast — the wire
 # optimizations have to keep paying for themselves, not just parse.
+# Finally the kill-and-recover scenario: one executor is rigged to die
+# (process abort — same as SIGKILL on the wire) mid-superstep, a
+# supervisor restarts it on the same port, and the run must finish with
+# weights bitwise identical to sim after exactly one retried superstep.
 # All wire logs (results/dist_smoke_*_wire.jsonl) are uploaded as CI
 # artifacts for the sim-vs-dist comparison report.
 set -euo pipefail
@@ -114,6 +118,66 @@ print(
 if ratio < 2.0:
     sys.exit(f"FAIL: sliced scatter reduction {ratio:.2f}x < required 2.0x")
 print("OK: sliced scatter ships <= half the broadcast bytes")
+EOF
+
+# ------------------------------------------------------- kill and recover
+# Replace executor 2 with one rigged to abort() upon receiving its 6th
+# superstep frame — mid-run for d3ca at 8 iterations — and park a
+# supervisor that brings a healthy executor back up on the same port the
+# moment the rigged one dies.  The driver must ride out the failure via
+# the v3 rejoin handshake: the run completes, the weights are bitwise
+# identical to the sim backend, and the wire log records exactly one
+# retried superstep (at most one superstep of work lost per failure).
+kill "$E2" 2>/dev/null || true
+wait "$E2" 2>/dev/null || true
+"$BIN" executor --bind "127.0.0.1:${PORT2}" --threads 2 --chaos-abort-step 6 &
+EC=$!
+( while kill -0 "$EC" 2>/dev/null; do sleep 0.1; done
+  exec "$BIN" executor --bind "127.0.0.1:${PORT2}" --threads 2 ) &
+SUP=$!
+trap 'kill "$E1" "$E3" "$EC" "$SUP" 2>/dev/null || true' EXIT
+up=0
+for _ in $(seq 1 50); do
+  if (exec 3<>"/dev/tcp/127.0.0.1/${PORT2}") 2>/dev/null; then
+    exec 3>&- 3<&-
+    up=1
+    break
+  fi
+  sleep 0.2
+done
+if [ "$up" != 1 ]; then
+  echo "FAIL: chaos executor on port ${PORT2} did not come up"
+  exit 1
+fi
+
+RECOVER=(--p 2 --q 2 --n-per 160 --m-per 40 --iters 8 --seed 11 --no-fstar --cores 4)
+"$BIN" train --method d3ca "${RECOVER[@]}" --cluster sim \
+  --dump-w "$OUT/dist_smoke_recovery_sim.whex"
+"$BIN" train --method d3ca "${RECOVER[@]}" --cluster "$DIST" \
+  --dump-w "$OUT/dist_smoke_recovery_dist.whex" \
+  --wire-out "$OUT/dist_smoke_recovery_wire.jsonl"
+if ! diff "$OUT/dist_smoke_recovery_sim.whex" "$OUT/dist_smoke_recovery_dist.whex"; then
+  echo "FAIL: weights diverged after executor kill + rejoin"
+  exit 1
+fi
+
+# the recovery counters land in the wire-metrics artifact; enforce them
+python3 - "$OUT/dist_smoke_recovery_wire.jsonl" <<'EOF'
+import json
+import sys
+
+retries = rejoins = 0
+with open(sys.argv[1]) as fh:
+    for line in fh:
+        rec = json.loads(line)
+        retries += rec.get("retries", 0)
+        rejoins += rec.get("rejoins", 0)
+print(f"recovery counters: retries={retries} rejoins={rejoins}")
+if retries != 1:
+    sys.exit(f"FAIL: expected exactly 1 retried superstep for 1 failure, got {retries}")
+if rejoins < 1:
+    sys.exit("FAIL: recovery happened without a recorded rejoin handshake")
+print("OK: executor died mid-superstep, rejoined, finished bitwise identical")
 EOF
 
 echo "dist-smoke passed"

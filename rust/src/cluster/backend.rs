@@ -654,6 +654,11 @@ pub trait ClusterBackend {
     /// The simulated parallel clock (both substrates keep one).
     fn clock(&self) -> &SimClock;
 
+    /// Mutable access to the simulated clock — the checkpoint resume
+    /// path restores the saved clock so a resumed run's time accounting
+    /// is bitwise identical to an unbroken one.
+    fn clock_mut(&mut self) -> &mut SimClock;
+
     /// Real host seconds since this backend was created.
     fn host_secs(&self) -> f64;
 
@@ -767,6 +772,10 @@ impl ClusterBackend for SimBackend {
 
     fn clock(&self) -> &SimClock {
         &self.cluster.clock
+    }
+
+    fn clock_mut(&mut self) -> &mut SimClock {
+        &mut self.cluster.clock
     }
 
     fn host_secs(&self) -> f64 {

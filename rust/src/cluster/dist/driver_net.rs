@@ -39,10 +39,28 @@
 //!
 //! Failure semantics: per-task kernel errors reproduce the sim backend's
 //! lowest-task-index-wins rule across executors (the superstep still
-//! charges the clock); a dead or misbehaving executor (connection reset,
-//! protocol violation, fold that fails validation, exchange deadline)
-//! surfaces as a clean `Err` naming the executor — the driver never
-//! hangs on a killed peer.
+//! charges the clock); a misbehaving executor (protocol violation, fold
+//! that fails validation) surfaces as a clean `Err` naming the executor
+//! — the driver never hangs on a killed peer.
+//!
+//! **Fault recovery** (wire revision 3, negotiated via
+//! [`wire::CAP_REJOIN`]): when a superstep *exchange* fails on an I/O
+//! error — connection reset, EOF, exchange deadline — the driver tears
+//! down every connection and rejoins the fleet: each executor is
+//! re-dialed with capped exponential backoff (budget:
+//! `DDOPT_DIST_REJOIN_TIMEOUT_SECS`, default 10s), sent a `Rejoin` frame
+//! carrying the session token, and — if it lost its cached session (a
+//! restarted process) — restaged from the Stage body saved at connect
+//! time; a surviving executor acks `have_blocks` and skips the block
+//! transfer.  ADMM factorizations are replayed when the session had
+//! prepared them.  The failed superstep is then retried under the *same*
+//! step id: every op is a pure function of driver-side state, so the
+//! replay recomputes bit-identical segments and the run loses at most
+//! one superstep per failure.  Reply *parse* errors stay fatal (retrying
+//! a lying executor is not recovery), and without the negotiated
+//! capability (a v2 peer, or `--dist-wire broadcast`) failures keep the
+//! pre-v3 fail-fast behavior.  Recovery counters land in the superstep's
+//! [`WireRecord`].
 
 use super::ops;
 use super::wire::{self, Tag};
@@ -75,6 +93,25 @@ fn read_timeout() -> Option<Duration> {
         .unwrap_or(DEFAULT_READ_TIMEOUT_SECS);
     (secs > 0).then(|| Duration::from_secs(secs))
 }
+
+/// Total budget for rejoining the fleet after an exchange failure —
+/// reconnect attempts back off exponentially (50ms doubling, capped at
+/// 1s) until an executor answers or this budget runs out.  `0` disables
+/// recovery even when the capability was negotiated.
+const DEFAULT_REJOIN_TIMEOUT_SECS: u64 = 10;
+
+fn rejoin_timeout() -> Option<Duration> {
+    let secs = std::env::var("DDOPT_DIST_REJOIN_TIMEOUT_SECS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(DEFAULT_REJOIN_TIMEOUT_SECS);
+    (secs > 0).then(|| Duration::from_secs(secs))
+}
+
+/// Superstep retry ceiling per `grid_exec` call: recovery guarantees "at
+/// most one superstep lost per failure", and repeated failures of the
+/// *same* superstep get this many chances before the run gives up.
+const MAX_STEP_RETRIES: u32 = 2;
 
 struct ExecConn {
     stream: TcpStream,
@@ -113,6 +150,24 @@ pub struct DistCluster {
     /// Validated folds of the last superstep, consumed by
     /// [`ClusterBackend::reduce_segments`].
     fold_log: Vec<FoldEntry>,
+    /// Executor addresses in fleet order (rejoin re-dials these).
+    addrs: Vec<String>,
+    /// Capability mask the driver offered in `Hello` (re-offered on
+    /// rejoin; the fleet caps stay the negotiated AND).
+    offered: u32,
+    /// Session token: lets an executor prove its cached blocks belong to
+    /// *this* run when the driver rejoins after a failure.
+    token: u64,
+    /// The exact Stage body shipped to each executor at connect time,
+    /// kept so a restarted executor can be restaged without the driver
+    /// re-deriving anything.
+    stage_bodies: Vec<Vec<u8>>,
+    /// Whether `prepare_admm` ran this session (replayed on rejoin).
+    admm_prepared: bool,
+    /// Supersteps retried after a recovered exchange failure (run total).
+    retries: u64,
+    /// Rejoin handshakes performed across all recoveries (run total).
+    rejoins: u64,
 }
 
 impl DistCluster {
@@ -139,17 +194,24 @@ impl DistCluster {
         let mut recv_buf = Vec::new();
         let mut conns = Vec::with_capacity(n_execs);
         let mut caps = offered;
+        // Session token: unique enough that an executor recycled by a
+        // different run cannot satisfy this run's Rejoin with stale
+        // blocks.  A v2 executor ignores the trailing token in Hello.
+        let token = session_token(addrs);
         for (i, addr) in addrs.iter().enumerate() {
             let mut stream = TcpStream::connect(addr)
                 .with_context(|| format!("connect to executor {i} at {addr}"))?;
             stream.set_nodelay(true).ok();
-            stream.set_read_timeout(read_timeout()).ok();
+            stream
+                .set_read_timeout(read_timeout())
+                .with_context(|| format!("set read timeout on executor {i} at {addr}"))?;
             let mut hello = Vec::new();
             bytes::put_u32(&mut hello, wire::PROTO_MAGIC);
             bytes::put_u32(&mut hello, wire::PROTO_VERSION);
             bytes::put_u32(&mut hello, i as u32);
             bytes::put_u32(&mut hello, n_execs as u32);
             bytes::put_u32(&mut hello, offered);
+            bytes::put_u64(&mut hello, token);
             scatter[i] += wire::write_frame(&mut stream, Tag::Hello, &hello)?;
             gather[i] += wire::expect_frame(&mut stream, &mut recv_buf, Tag::HelloAck)
                 .with_context(|| format!("handshake with executor {i} at {addr}"))?;
@@ -183,7 +245,10 @@ impl DistCluster {
         };
 
         // stage: metadata to everyone, each block to its one owner —
-        // pipelined (all frames written before any ack is awaited)
+        // pipelined (all frames written before any ack is awaited).  The
+        // bodies are kept verbatim: a rejoin after an executor restart
+        // re-ships exactly these bytes, no re-derivation.
+        let mut stage_bodies: Vec<Vec<u8>> = Vec::with_capacity(n_execs);
         for (i, conn) in conns.iter_mut().enumerate() {
             let mut body = Vec::new();
             bytes::put_u8(&mut body, ownership.to_u8());
@@ -198,6 +263,7 @@ impl DistCluster {
             }
             scatter[i] += wire::write_frame(&mut conn.stream, Tag::Stage, &body)
                 .with_context(|| format!("stage blocks on executor {i} at {}", conn.addr))?;
+            stage_bodies.push(body);
         }
         for (i, conn) in conns.iter_mut().enumerate() {
             gather[i] += wire::expect_frame(&mut conn.stream, &mut recv_buf, Tag::StageAck)
@@ -213,6 +279,8 @@ impl DistCluster {
             sim_secs: 0.0,
             scatter,
             gather,
+            retries: 0,
+            rejoins: 0,
         }];
         Ok(DistCluster {
             sim: SimCluster::new(config),
@@ -230,6 +298,13 @@ impl DistCluster {
             seen: Vec::new(),
             folded_away: Vec::new(),
             fold_log: Vec::new(),
+            addrs: addrs.to_vec(),
+            offered,
+            token,
+            stage_bodies,
+            admm_prepared: false,
+            retries: 0,
+            rejoins: 0,
         })
     }
 
@@ -296,6 +371,7 @@ impl ClusterBackend for DistCluster {
                         format!("admm factorization on executor {i} at {}", conn.addr)
                     })?;
         }
+        self.admm_prepared = true;
         self.wire_log.push(WireRecord {
             step: self.step_id as usize,
             op: "prepare-admm",
@@ -305,6 +381,8 @@ impl ClusterBackend for DistCluster {
             sim_secs: 0.0,
             scatter,
             gather,
+            retries: 0,
+            rejoins: 0,
         });
         Ok(())
     }
@@ -361,9 +439,46 @@ impl ClusterBackend for DistCluster {
             vec![self.send_buf.as_slice(); n_execs]
         };
 
-        // pipelined scatter + readiness-ordered gather
-        let exchange =
-            pipelined_exchange(&mut self.conns, &bodies, &mut self.recv_bufs, step_id)?;
+        // pipelined scatter + readiness-ordered gather, with fault
+        // recovery: an I/O failure (dead executor, exchange deadline)
+        // rejoins the fleet and replays the superstep under the same
+        // step id — the op is a pure function of driver-side state, so
+        // the retry recomputes bit-identical segments.  Reply *parse*
+        // errors below stay fatal: retrying a lying executor is not
+        // recovery.
+        let mut step_retries = 0u64;
+        let mut step_rejoins = 0u64;
+        let exchange = loop {
+            match pipelined_exchange(&mut self.conns, &bodies, &mut self.recv_bufs, step_id) {
+                Ok(ex) => break ex,
+                Err(e) => {
+                    let recoverable = self.caps & wire::CAP_REJOIN != 0
+                        && step_retries < MAX_STEP_RETRIES as u64
+                        && rejoin_timeout().is_some();
+                    if !recoverable {
+                        return Err(e);
+                    }
+                    let mut got = 0u64;
+                    recover_fleet(
+                        &mut self.conns,
+                        &self.addrs,
+                        self.token,
+                        self.offered,
+                        self.caps,
+                        &self.stage_bodies,
+                        self.admm_prepared,
+                        step_id,
+                        &mut self.recv_buf,
+                        &mut got,
+                    )
+                    .map_err(|re| e.context(format!("fleet rejoin also failed: {re:#}")))?;
+                    step_retries += 1;
+                    step_rejoins += got;
+                }
+            }
+        };
+        self.retries += step_retries;
+        self.rejoins += step_rejoins;
 
         // parse replies in arrival order: every task's duration exactly
         // once, result segments (or validated folds) into the slabs
@@ -476,6 +591,8 @@ impl ClusterBackend for DistCluster {
             sim_secs: self.sim.clock.now() - sim_before,
             scatter: exchange.scatter,
             gather: exchange.gather,
+            retries: step_retries as usize,
+            rejoins: step_rejoins as usize,
         });
         match first_err {
             Some((_, e)) => Err(e),
@@ -509,6 +626,10 @@ impl ClusterBackend for DistCluster {
 
     fn clock(&self) -> &SimClock {
         &self.sim.clock
+    }
+
+    fn clock_mut(&mut self) -> &mut SimClock {
+        &mut self.sim.clock
     }
 
     fn host_secs(&self) -> f64 {
@@ -572,11 +693,25 @@ fn pipelined_exchange(
             .with_context(|| format!("nonblocking mode on executor at {}", conn.addr))?;
     }
     let result = exchange_inner(conns, bodies, recv_bufs, step_id);
+    // failing to restore blocking mode would make the *next*
+    // control-plane read spuriously fail with WouldBlock and blame the
+    // wrong layer — surface it here, against the right executor, but
+    // never mask the exchange's own error
+    let mut restore: Result<()> = Ok(());
     for conn in conns.iter() {
-        conn.stream.set_nonblocking(false).ok();
+        if let Err(e) = conn.stream.set_nonblocking(false) {
+            if restore.is_ok() {
+                restore = Err(e).with_context(|| {
+                    format!("restore blocking mode on executor at {}", conn.addr)
+                });
+            }
+        }
     }
     debug_assert_eq!(bodies.len(), n);
-    result
+    match result {
+        Err(e) => Err(e),
+        Ok(ex) => restore.map(|()| ex),
+    }
 }
 
 fn exchange_inner(
@@ -598,7 +733,11 @@ fn exchange_inner(
     let mut sent = vec![0usize; n];
     let mut recv = vec![RecvState::default(); n];
     let mut arrival = Vec::with_capacity(n);
-    let deadline = read_timeout().map(|t| Instant::now() + t);
+    // liveness deadline, not a whole-exchange cap: re-armed on every
+    // sweep that moves bytes, so a reply that trickles in slowly but
+    // steadily is never killed as "wedged"
+    let budget = read_timeout();
+    let mut deadline = budget.map(|t| Instant::now() + t);
     let mut idle_sweeps = 0usize;
     loop {
         let mut progressed = false;
@@ -653,15 +792,19 @@ fn exchange_inner(
         }
         if progressed {
             idle_sweeps = 0;
+            deadline = budget.map(|t| Instant::now() + t);
             continue;
         }
         if let Some(d) = deadline {
             if Instant::now() > d {
-                let lagging = (0..n).find(|&i| !recv[i].done).unwrap_or(0);
+                let totals: Vec<usize> = bodies.iter().map(|b| 5 + b.len()).collect();
+                let done: Vec<bool> = recv.iter().map(|s| s.done).collect();
+                let addrs: Vec<&str> = conns.iter().map(|c| c.addr.as_str()).collect();
                 bail!(
-                    "superstep {step_id} reply from executor {lagging} at {} timed out \
+                    "superstep {step_id} made no progress for {:?}: {} \
                      (killed or wedged executor?)",
-                    conns[lagging].addr
+                    budget.unwrap_or_default(),
+                    describe_stall(&sent, &totals, &done, &addrs)
                 );
             }
         }
@@ -791,6 +934,199 @@ fn validate_fold(
     Ok(())
 }
 
+/// Name the peer(s) actually responsible for a stalled exchange: an
+/// executor whose scatter frame never drained is reported separately
+/// from one whose reply never finished, so the blame lands on the right
+/// side of the pipe (the old code blamed executor 0 whenever every
+/// *reply* happened to be done but a send was stuck).
+fn describe_stall(sent: &[usize], totals: &[usize], done: &[bool], addrs: &[&str]) -> String {
+    let unsent: Vec<String> = (0..sent.len())
+        .filter(|&i| sent[i] < totals[i])
+        .map(|i| format!("{i} at {} ({}/{} bytes sent)", addrs[i], sent[i], totals[i]))
+        .collect();
+    let missing: Vec<String> = (0..done.len())
+        .filter(|&i| sent[i] >= totals[i] && !done[i])
+        .map(|i| format!("{i} at {}", addrs[i]))
+        .collect();
+    let mut parts = Vec::new();
+    if !unsent.is_empty() {
+        parts.push(format!("scatter never drained to executor {}", unsent.join(", ")));
+    }
+    if !missing.is_empty() {
+        parts.push(format!("no reply from executor {}", missing.join(", ")));
+    }
+    if parts.is_empty() {
+        // unreachable if the caller checked all_done, kept for safety
+        parts.push("all scatters drained and all replies complete".into());
+    }
+    parts.join("; ")
+}
+
+/// A cheap unique-enough session id: FNV-1a over the wall clock, the
+/// driver pid, and the fleet's addresses.  Lets an executor prove its
+/// cached blocks belong to *this* run when the driver rejoins — without
+/// threading any RNG state through the transport.
+fn session_token(addrs: &[String]) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    for b in nanos.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    for b in std::process::id().to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    for a in addrs {
+        for &b in a.as_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        h = (h ^ 0xff).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Tear down and rebuild every executor connection after a failed
+/// exchange (free function rather than a method: the caller still holds
+/// immutable borrows of the Step bodies in `send_buf`/`send_bufs`).
+///
+/// Each executor is re-dialed with capped exponential backoff within the
+/// `DDOPT_DIST_REJOIN_TIMEOUT_SECS` budget and sent a `Rejoin` frame
+/// carrying the session token; a survivor acks `have_blocks` and skips
+/// the block transfer, a restarted process is restaged from the saved
+/// Stage body.  ADMM factorizations are replayed if the session had
+/// prepared them.  `rejoins` counts completed handshakes.
+#[allow(clippy::too_many_arguments)]
+fn recover_fleet(
+    conns: &mut Vec<ExecConn>,
+    addrs: &[String],
+    token: u64,
+    offered: u32,
+    session_caps: u32,
+    stage_bodies: &[Vec<u8>],
+    admm_prepared: bool,
+    step_id: u64,
+    recv_buf: &mut Vec<u8>,
+    rejoins: &mut u64,
+) -> Result<()> {
+    let budget = rejoin_timeout()
+        .ok_or_else(|| anyhow::anyhow!("rejoin disabled (DDOPT_DIST_REJOIN_TIMEOUT_SECS=0)"))?;
+    let deadline = Instant::now() + budget;
+    // drop every old connection first: executors notice the hangup and
+    // return to their accept loop, keeping the cached session
+    conns.clear();
+    let n_execs = addrs.len();
+    for (i, addr) in addrs.iter().enumerate() {
+        let mut delay = Duration::from_millis(50);
+        let conn = loop {
+            match rejoin_one(
+                addr,
+                i,
+                n_execs,
+                token,
+                offered,
+                session_caps,
+                &stage_bodies[i],
+                step_id,
+                recv_buf,
+            ) {
+                Ok(c) => break c,
+                Err(e) => {
+                    if Instant::now() + delay > deadline {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "rejoin executor {i} at {addr} within {budget:?} \
+                                 (raise DDOPT_DIST_REJOIN_TIMEOUT_SECS?)"
+                            )
+                        });
+                    }
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(Duration::from_secs(1));
+                }
+            }
+        };
+        *rejoins += 1;
+        conns.push(conn);
+    }
+    if admm_prepared {
+        // replay factorizations, pipelined like prepare_admm
+        for (i, conn) in conns.iter_mut().enumerate() {
+            wire::write_frame(&mut conn.stream, Tag::PrepareAdmm, &[]).with_context(|| {
+                format!("replay admm factorization on executor {i} at {}", conn.addr)
+            })?;
+        }
+        for (i, conn) in conns.iter_mut().enumerate() {
+            wire::expect_frame(&mut conn.stream, recv_buf, Tag::PrepareAdmmAck).with_context(
+                || format!("replay admm factorization on executor {i} at {}", conn.addr),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// One reconnect + `Rejoin` handshake (+ restage when the executor lost
+/// its cached session).
+#[allow(clippy::too_many_arguments)]
+fn rejoin_one(
+    addr: &str,
+    i: usize,
+    n_execs: usize,
+    token: u64,
+    offered: u32,
+    session_caps: u32,
+    stage_body: &[u8],
+    step_id: u64,
+    recv_buf: &mut Vec<u8>,
+) -> Result<ExecConn> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("reconnect to executor {i} at {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(read_timeout())
+        .with_context(|| format!("set read timeout on executor {i} at {addr}"))?;
+    let mut body = Vec::new();
+    bytes::put_u32(&mut body, wire::PROTO_MAGIC);
+    bytes::put_u64(&mut body, token);
+    bytes::put_u32(&mut body, i as u32);
+    bytes::put_u32(&mut body, n_execs as u32);
+    bytes::put_u64(&mut body, step_id);
+    bytes::put_u32(&mut body, offered);
+    wire::write_frame(&mut stream, Tag::Rejoin, &body)?;
+    wire::expect_frame(&mut stream, recv_buf, Tag::RejoinAck)
+        .with_context(|| format!("rejoin handshake with executor {i} at {addr}"))?;
+    let mut r = ByteReader::new(recv_buf);
+    let magic = r.u32()?;
+    if magic != wire::PROTO_MAGIC {
+        bail!("executor {i} at {addr}: bad magic in RejoinAck");
+    }
+    let threads = r.u32()? as usize;
+    let acked = r.u32()?;
+    let have_blocks = r.u8()?;
+    if acked & !offered != 0 {
+        bail!(
+            "executor {i} at {addr} acked capabilities {acked:#x} \
+             it was never offered ({offered:#x})"
+        );
+    }
+    if acked & session_caps != session_caps {
+        // the run already committed to the negotiated AND; a replacement
+        // executor that implements less cannot replay its supersteps
+        bail!(
+            "executor {i} at {addr} rejoined with capabilities {acked:#x}, \
+             session needs {session_caps:#x}"
+        );
+    }
+    if have_blocks == 0 {
+        wire::write_frame(&mut stream, Tag::Stage, stage_body)
+            .with_context(|| format!("restage blocks on executor {i} at {addr}"))?;
+        wire::expect_frame(&mut stream, recv_buf, Tag::StageAck)
+            .with_context(|| format!("restage ack from executor {i} at {addr}"))?;
+    }
+    Ok(ExecConn { stream, addr: addr.to_string(), threads })
+}
+
 /// Read one length-prefixed f32 array straight into a slab segment,
 /// insisting the length matches the span exactly.
 fn read_segment(
@@ -807,4 +1143,63 @@ fn read_segment(
         );
     }
     r.fill_f32s(dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stall_blame_names_missing_gather_not_executor_zero() {
+        // executor 0 and 1 replied; 2 is the one actually wedged
+        let msg = describe_stall(
+            &[10, 10, 10],
+            &[10, 10, 10],
+            &[true, true, false],
+            &["a:1", "b:2", "c:3"],
+        );
+        assert!(msg.contains("no reply from executor 2 at c:3"), "{msg}");
+        assert!(!msg.contains("executor 0"), "{msg}");
+        assert!(!msg.contains("scatter"), "{msg}");
+    }
+
+    #[test]
+    fn stall_blame_reports_stuck_send_even_when_replies_done() {
+        // the pre-fix fallback blamed executor 0's reply here, although
+        // every reply is done and the real problem is 1's stuck scatter
+        let msg = describe_stall(
+            &[10, 4, 10],
+            &[10, 10, 10],
+            &[true, false, true],
+            &["a:1", "b:2", "c:3"],
+        );
+        assert!(
+            msg.contains("scatter never drained to executor 1 at b:2 (4/10 bytes sent)"),
+            "{msg}"
+        );
+        // an executor whose scatter never drained obviously has no
+        // reply; it must not be double-reported on the gather side
+        assert!(!msg.contains("no reply"), "{msg}");
+    }
+
+    #[test]
+    fn stall_blame_separates_send_and_reply_laggards() {
+        let msg = describe_stall(
+            &[3, 10],
+            &[10, 10],
+            &[false, false],
+            &["a:1", "b:2"],
+        );
+        assert!(msg.contains("scatter never drained to executor 0"), "{msg}");
+        assert!(msg.contains("no reply from executor 1 at b:2"), "{msg}");
+    }
+
+    #[test]
+    fn session_tokens_differ_across_calls() {
+        let addrs = vec!["127.0.0.1:7001".to_string()];
+        let a = session_token(&addrs);
+        std::thread::sleep(Duration::from_millis(2));
+        let b = session_token(&addrs);
+        assert_ne!(a, b);
+    }
 }

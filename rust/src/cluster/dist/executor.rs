@@ -49,6 +49,23 @@ pub struct ExecutorConfig {
     pub threads: usize,
     /// Serve a single driver connection, then exit (tests/CI).
     pub once: bool,
+    /// Chaos harness: abort the process (as if SIGKILLed) upon receiving
+    /// the Nth Step frame across the executor's lifetime; 0 disables.
+    /// Lets the fault-recovery tests kill an executor mid-superstep at a
+    /// deterministic point.
+    pub chaos_abort_step: u64,
+}
+
+/// One staged driver session, kept across connections (keyed by the
+/// driver's session token) so a driver that lost its connection — not
+/// the executor process — can `Rejoin` without re-shipping blocks.  A
+/// clean `Shutdown` drops it.
+struct CachedSession {
+    token: u64,
+    my_index: usize,
+    n_execs: usize,
+    ownership: Ownership,
+    part: Partitioned,
 }
 
 /// Run the executor server (blocks forever unless `once`).
@@ -60,18 +77,35 @@ pub fn serve(cfg: &ExecutorConfig) -> Result<()> {
     // discover OS-assigned ports from it
     println!("executor listening on {local}");
     std::io::stdout().flush().ok();
-    serve_listener(listener, cfg.threads, cfg.once)
+    serve_listener_with(listener, cfg.threads, cfg.once, cfg.chaos_abort_step)
 }
 
 /// The accept loop behind [`serve`], on an already-bound listener — lets
 /// in-process harnesses (the perf wire bench) run loopback executors on
 /// OS-assigned ports without spawning child processes.
 pub fn serve_listener(listener: TcpListener, threads: usize, once: bool) -> Result<()> {
+    serve_listener_with(listener, threads, once, 0)
+}
+
+/// [`serve_listener`] plus the chaos knob (see
+/// [`ExecutorConfig::chaos_abort_step`]).
+pub fn serve_listener_with(
+    listener: TcpListener,
+    threads: usize,
+    once: bool,
+    chaos_abort_step: u64,
+) -> Result<()> {
+    let mut cache: Option<CachedSession> = None;
+    let mut steps_served: u64 = 0;
     loop {
         let (stream, peer) = listener.accept().context("accept driver connection")?;
         eprintln!("executor: serving driver at {peer}");
-        match serve_conn(stream, threads) {
+        match serve_conn(stream, threads, &mut cache, chaos_abort_step, &mut steps_served) {
             Ok(()) => eprintln!("executor: driver at {peer} finished cleanly"),
+            // keep the cached session: a dropped connection is exactly
+            // what a driver-side failure (or our own chaos abort on a
+            // *different* executor) looks like, and the driver may
+            // Rejoin on the next connection
             Err(e) => eprintln!("executor: session with {peer} ended: {e:#}"),
         }
         if once {
@@ -80,17 +114,43 @@ pub fn serve_listener(listener: TcpListener, threads: usize, once: bool) -> Resu
     }
 }
 
-/// Serve one driver connection until `Shutdown` or EOF.
-fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
+/// Serve one driver connection until `Shutdown` or EOF.  The first frame
+/// is either `Hello` (fresh session: handshake + Stage) or `Rejoin`
+/// (re-attach to the cached session, restaging only if the cache is
+/// gone).
+fn serve_conn(
+    mut stream: TcpStream,
+    threads: usize,
+    cache: &mut Option<CachedSession>,
+    chaos_abort_step: u64,
+    steps_served: &mut u64,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut buf = Vec::new();
-
-    // -- handshake ---------------------------------------------------
     let (tag, _) = wire::read_frame(&mut stream, &mut buf)?;
-    if tag != Tag::Hello {
-        bail!("protocol violation: first frame was {tag:?}, not Hello");
+    let caps = match tag {
+        Tag::Hello => hello_session(&mut stream, &mut buf, threads, cache)?,
+        Tag::Rejoin => rejoin_session(&mut stream, &mut buf, threads, cache)?,
+        other => bail!("protocol violation: first frame was {other:?}, not Hello or Rejoin"),
+    };
+    let sess = cache.as_ref().expect("handshake established a session");
+    let clean =
+        serve_session(&mut stream, threads, sess, caps, chaos_abort_step, steps_served, &mut buf)?;
+    if clean {
+        *cache = None;
     }
-    let mut r = ByteReader::new(&buf);
+    Ok(())
+}
+
+/// The `Hello` handshake + initial Stage of a fresh session.  Returns
+/// the acked capability mask and installs the session in `cache`.
+fn hello_session(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    threads: usize,
+    cache: &mut Option<CachedSession>,
+) -> Result<u32> {
+    let mut r = ByteReader::new(buf);
     let magic = r.u32()?;
     if magic != wire::PROTO_MAGIC {
         bail!("handshake magic mismatch: got {magic:#x}");
@@ -105,12 +165,15 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
                 wire::PROTO_VERSION
             ),
         );
-        let _ = wire::write_frame(&mut stream, Tag::Fatal, &body);
+        let _ = wire::write_frame(stream, Tag::Fatal, &body);
         bail!("protocol version mismatch (driver v{version})");
     }
     let my_index = r.u32()? as usize;
     let n_execs = r.u32()? as usize;
     let offered = r.u32()?;
+    // wire revision 3 appends a session token; a v2 driver sends none
+    // (token 0 then simply never matches a Rejoin)
+    let token = if r.remaining() >= 8 { r.u64()? } else { 0 };
     if n_execs == 0 || my_index >= n_execs {
         bail!("bad handshake: executor {my_index} of {n_execs}");
     }
@@ -122,14 +185,75 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
     bytes::put_u32(&mut ack, wire::PROTO_VERSION);
     bytes::put_u32(&mut ack, threads as u32);
     bytes::put_u32(&mut ack, caps);
-    wire::write_frame(&mut stream, Tag::HelloAck, &ack)?;
+    wire::write_frame(stream, Tag::HelloAck, &ack)?;
 
-    // -- staging: blocks arrive once, stay resident ------------------
-    let (tag, _) = wire::read_frame(&mut stream, &mut buf)?;
+    let (ownership, part) = receive_stage(stream, buf, caps, my_index, n_execs, threads)?;
+    *cache = Some(CachedSession { token, my_index, n_execs, ownership, part });
+    Ok(caps)
+}
+
+/// The `Rejoin` handshake (wire revision 3): re-attach a driver to the
+/// cached session, restaging only when the cache is gone (process was
+/// restarted) or belongs to a different run (token mismatch).
+fn rejoin_session(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    threads: usize,
+    cache: &mut Option<CachedSession>,
+) -> Result<u32> {
+    let mut r = ByteReader::new(buf);
+    let magic = r.u32()?;
+    if magic != wire::PROTO_MAGIC {
+        bail!("rejoin magic mismatch: got {magic:#x}");
+    }
+    let token = r.u64()?;
+    let my_index = r.u32()? as usize;
+    let n_execs = r.u32()? as usize;
+    let step_id = r.u64()?;
+    let offered = r.u32()?;
+    if n_execs == 0 || my_index >= n_execs {
+        bail!("bad rejoin: executor {my_index} of {n_execs}");
+    }
+    let caps = offered & wire::CAPS_SUPPORTED;
+    let have = cache
+        .as_ref()
+        .map_or(false, |s| s.token == token && s.my_index == my_index && s.n_execs == n_execs);
+    if !have {
+        // a cached session from some other run is useless here
+        *cache = None;
+    }
+    let mut ack = Vec::new();
+    bytes::put_u32(&mut ack, wire::PROTO_MAGIC);
+    bytes::put_u32(&mut ack, threads as u32);
+    bytes::put_u32(&mut ack, caps);
+    bytes::put_u8(&mut ack, if have { 1 } else { 0 });
+    wire::write_frame(stream, Tag::RejoinAck, &ack)?;
+    eprintln!(
+        "executor {my_index}/{n_execs}: rejoin for superstep {step_id} ({})",
+        if have { "blocks still cached" } else { "restaging" }
+    );
+    if !have {
+        let (ownership, part) = receive_stage(stream, buf, caps, my_index, n_execs, threads)?;
+        *cache = Some(CachedSession { token, my_index, n_execs, ownership, part });
+    }
+    Ok(caps)
+}
+
+/// Receive and decode one Stage frame: partition metadata plus exactly
+/// this executor's owned blocks, acked once installed.
+fn receive_stage(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    caps: u32,
+    my_index: usize,
+    n_execs: usize,
+    threads: usize,
+) -> Result<(Ownership, Partitioned)> {
+    let (tag, _) = wire::read_frame(stream, buf)?;
     if tag != Tag::Stage {
         bail!("protocol violation: wanted Stage, got {tag:?}");
     }
-    let mut r = ByteReader::new(&buf);
+    let mut r = ByteReader::new(buf);
     let ownership = Ownership::from_u8(r.u8()?)?;
     if ownership == Ownership::Contiguous && caps & wire::CAP_CONTIG_FOLD == 0 {
         bail!("driver staged contiguous ownership without the negotiated capability");
@@ -152,14 +276,30 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
          ({} threads, {ownership:?} ownership)",
         part.grid.p, part.grid.q, threads
     );
-    wire::write_frame(&mut stream, Tag::StageAck, &[])?;
+    wire::write_frame(stream, Tag::StageAck, &[])?;
+    Ok((ownership, part))
+}
 
+/// The superstep loop of one staged session.  Returns `true` on a clean
+/// `Shutdown` (the session cache should be dropped), `false` never — any
+/// other exit is an error, which keeps the cache for a possible Rejoin.
+fn serve_session(
+    stream: &mut TcpStream,
+    threads: usize,
+    sess: &CachedSession,
+    caps: u32,
+    chaos_abort_step: u64,
+    steps_served: &mut u64,
+    buf: &mut Vec<u8>,
+) -> Result<bool> {
+    let part = &sess.part;
+    let (my_index, n_execs, ownership) = (sess.my_index, sess.n_execs, sess.ownership);
     let backend = Backend::native();
-    let staged = backend.stage(&part)?;
+    let staged = backend.stage(part)?;
     let pool = WorkerPool::new(threads);
     pool.warm_up();
     let mut scratch: Vec<OpScratch> =
-        (0..threads.max(1)).map(|_| OpScratch::for_part(&part)).collect();
+        (0..threads.max(1)).map(|_| OpScratch::for_part(part)).collect();
     let mut factors: Vec<Option<FactorHandle>> = Vec::new();
 
     // -- superstep loop ----------------------------------------------
@@ -170,7 +310,7 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
     let mut out2: Vec<f32> = Vec::new();
     let mut reply: Vec<u8> = Vec::new();
     loop {
-        let (tag, _) = wire::read_frame(&mut stream, &mut buf)?;
+        let (tag, _) = wire::read_frame(stream, buf)?;
         match tag {
             Tag::PrepareAdmm => {
                 // factor the owned cells only, off the clock (the paper
@@ -184,16 +324,26 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
                         factors.push(None);
                     }
                 }
-                wire::write_frame(&mut stream, Tag::PrepareAdmmAck, &[])?;
+                wire::write_frame(stream, Tag::PrepareAdmmAck, &[])?;
             }
             Tag::Step => {
+                *steps_served += 1;
+                if chaos_abort_step != 0 && *steps_served == chaos_abort_step {
+                    // die like a SIGKILLed process: no Fatal frame, no
+                    // unwinding, the driver just sees the socket drop
+                    // mid-superstep
+                    eprintln!(
+                        "executor {my_index}: chaos abort on step frame {steps_served}"
+                    );
+                    std::process::abort();
+                }
                 let outcome = run_step(
                     &staged,
                     &pool,
                     &mut scratch,
                     &factors,
                     &mut opbuf,
-                    &buf,
+                    buf,
                     my_index,
                     n_execs,
                     ownership,
@@ -206,24 +356,24 @@ fn serve_conn(mut stream: TcpStream, threads: usize) -> Result<()> {
                 );
                 match outcome {
                     Ok(()) => {
-                        wire::write_frame(&mut stream, Tag::StepResult, &reply)?;
+                        wire::write_frame(stream, Tag::StepResult, &reply)?;
                     }
                     Err(e) => {
                         // protocol-level failure (bad frame, unknown op):
                         // tell the driver before tearing down
                         let mut body = Vec::new();
                         bytes::put_str(&mut body, &format!("{e:#}"));
-                        let _ = wire::write_frame(&mut stream, Tag::Fatal, &body);
+                        let _ = wire::write_frame(stream, Tag::Fatal, &body);
                         return Err(e);
                     }
                 }
             }
             Tag::Shutdown => {
-                wire::write_frame(&mut stream, Tag::Bye, &[])?;
-                return Ok(());
+                wire::write_frame(stream, Tag::Bye, &[])?;
+                return Ok(true);
             }
             Tag::Fatal => {
-                let msg = ByteReader::new(&buf).str().unwrap_or_default();
+                let msg = ByteReader::new(buf).str().unwrap_or_default();
                 bail!("driver reported fatal error: {msg}");
             }
             other => bail!("protocol violation: unexpected {other:?} frame"),

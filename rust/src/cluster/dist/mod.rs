@@ -33,6 +33,14 @@
 //! model against measured transport.  Loopback TCP on one host today;
 //! the protocol is host-agnostic, so multi-host is a deploy question,
 //! not a code one.
+//!
+//! The runtime is self-healing (wire revision 3, [`wire::CAP_REJOIN`]):
+//! executors cache their staged session across connections, and on a
+//! mid-superstep I/O failure the driver reconnects with backoff, rejoins
+//! (restaging a restarted executor from the saved Stage bytes), and
+//! replays the failed superstep — determinism makes the replay
+//! bit-identical, so at most one superstep of progress is lost per
+//! failure.  See the fault-recovery notes in [`driver_net`].
 
 pub mod driver_net;
 pub mod executor;
@@ -40,4 +48,4 @@ pub mod ops;
 pub mod wire;
 
 pub use driver_net::DistCluster;
-pub use executor::{serve, serve_listener, ExecutorConfig};
+pub use executor::{serve, serve_listener, serve_listener_with, ExecutorConfig};

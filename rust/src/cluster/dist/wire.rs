@@ -22,6 +22,8 @@
 //! | `Shutdown` (9)           |                          | — |
 //! |                          | `Bye` (10)               | — |
 //! | `Fatal` (11), either way |                          | message string |
+//! | `Rejoin` (12)            |                          | *v3* — magic, session token, executor index, executor count, failed step id, offered capability bits |
+//! |                          | `RejoinAck` (13)         | *v3* — magic, worker threads, accepted capability bits, have-blocks byte (1: blocks still cached under this session token, skip Stage) |
 //!
 //! The handshake is versioned: both sides check the magic and protocol
 //! version before anything else, so a stale executor binary fails fast
@@ -29,6 +31,19 @@
 //! bodies use the [`crate::util::bytes`] little-endian codec; `f32`
 //! payloads round-trip by bit pattern (the parity tests assert final
 //! weights are bit-identical to the sim backend).
+//!
+//! ## Protocol v3: the rejoin extension
+//!
+//! Wire revision 3 adds driver-side fault recovery: a session token
+//! appended to the `Hello` body, the [`CAP_REJOIN`] capability bit, and
+//! the `Rejoin`/`RejoinAck` handshake a driver uses to re-attach to an
+//! executor (surviving or freshly restarted) after a mid-superstep
+//! failure.  The version *field* on the wire stays 2 — v3 is negotiated
+//! entirely through the existing capability mechanism, so v2 executors
+//! interoperate unchanged: a v2 executor ignores the trailing token in
+//! `Hello` (its parser reads exactly five words), never acks
+//! [`CAP_REJOIN`], and the fleet AND disables recovery — the driver
+//! keeps today's fail-fast behavior on executor death.
 //!
 //! ## Capability negotiation
 //!
@@ -45,6 +60,9 @@
 //!   segment-combine tree before replying (bit-identical to
 //!   [`reduce_segments`](crate::cluster::SimCluster::reduce_segments)
 //!   order).
+//! * [`CAP_REJOIN`] — the executor keeps its staged session (keyed by
+//!   the driver's session token) across connections and answers the
+//!   `Rejoin` handshake, enabling reconnect-and-retry fault recovery.
 //!
 //! A full-broadcast driver (`--dist-wire broadcast`) simply offers no
 //! capabilities.
@@ -57,7 +75,14 @@ pub const PROTO_MAGIC: u32 = 0x4444_4F50;
 /// Bump on any frame-layout change.  v2: capability bits in the
 /// handshake, ownership byte in Stage, flags byte + optional sliced
 /// payloads in Step, fold count/absorbed statuses in StepResult.
+/// Revision 3 (the rejoin extension, [`WIRE_REVISION`]) deliberately
+/// keeps this at 2: it is negotiated through [`CAP_REJOIN`] so v2
+/// executors interoperate.
 pub const PROTO_VERSION: u32 = 2;
+/// Wire revision implemented by this build: v3 = v2 + the rejoin
+/// fault-tolerance extension (session token in `Hello`, [`CAP_REJOIN`],
+/// `Rejoin`/`RejoinAck`), negotiated purely via capability bits.
+pub const WIRE_REVISION: u32 = 3;
 /// Ceiling on one frame body (guards a corrupt length prefix).
 pub const MAX_FRAME: usize = 1 << 30;
 
@@ -66,8 +91,12 @@ pub const CAP_SLICED: u32 = 1 << 0;
 /// Capability bit: contiguous-range ownership + executor-side gather
 /// folding.
 pub const CAP_CONTIG_FOLD: u32 = 1 << 1;
+/// Capability bit (wire revision 3): the executor caches its session
+/// (token + staged blocks) across connections and answers `Rejoin`, so
+/// the driver may reconnect and retry a failed superstep.
+pub const CAP_REJOIN: u32 = 1 << 2;
 /// Every capability this build implements (what an executor acks).
-pub const CAPS_SUPPORTED: u32 = CAP_SLICED | CAP_CONTIG_FOLD;
+pub const CAPS_SUPPORTED: u32 = CAP_SLICED | CAP_CONTIG_FOLD | CAP_REJOIN;
 
 /// Step-frame flags byte, bit 0: the op payload is sliced for this
 /// executor (decode with `decode_sliced_into`).
@@ -90,6 +119,8 @@ pub enum Tag {
     Shutdown = 9,
     Bye = 10,
     Fatal = 11,
+    Rejoin = 12,
+    RejoinAck = 13,
 }
 
 impl Tag {
@@ -106,6 +137,8 @@ impl Tag {
             9 => Tag::Shutdown,
             10 => Tag::Bye,
             11 => Tag::Fatal,
+            12 => Tag::Rejoin,
+            13 => Tag::RejoinAck,
             other => bail!("unknown wire frame tag {other}"),
         })
     }
@@ -215,6 +248,8 @@ mod tests {
             Tag::Shutdown,
             Tag::Bye,
             Tag::Fatal,
+            Tag::Rejoin,
+            Tag::RejoinAck,
         ] {
             assert_eq!(Tag::from_u8(t as u8).unwrap(), t);
         }

@@ -45,6 +45,12 @@ pub struct ExperimentConfig {
     /// `"sim"` or `"dist:host:port[,host:port...]"`).
     pub cluster: ClusterConfig,
     pub backend: String, // "native" | "xla"
+    /// Directory for periodic optimizer-state checkpoints (JSON key
+    /// `checkpoint_dir`; empty/absent = disabled).
+    pub checkpoint_dir: Option<String>,
+    /// Snapshot cadence in iterations (JSON key `checkpoint_every`;
+    /// 0 = the driver's default of every iteration when a dir is set).
+    pub checkpoint_every: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -63,6 +69,8 @@ impl Default for ExperimentConfig {
             rho: 1e-3,
             cluster: ClusterConfig::default(),
             backend: "native".into(),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
         }
     }
 }
@@ -149,6 +157,14 @@ impl ExperimentConfig {
                 bail!("unknown backend '{x}'");
             }
             c.backend = x.to_string();
+        }
+        if let Some(x) = v.get("checkpoint_dir").and_then(|x| x.as_str()) {
+            if !x.is_empty() {
+                c.checkpoint_dir = Some(x.to_string());
+            }
+        }
+        if let Some(x) = v.get("checkpoint_every").and_then(|x| x.as_usize()) {
+            c.checkpoint_every = x;
         }
         Ok(c)
     }
@@ -239,6 +255,24 @@ mod tests {
         let c = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(c.p, 2);
         assert_eq!(c.loss, Loss::Hinge);
+        assert_eq!(c.checkpoint_dir, None);
+        assert_eq!(c.checkpoint_every, 0);
+    }
+
+    #[test]
+    fn parses_checkpoint_keys() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"checkpoint_dir":"results/ck","checkpoint_every":5}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("results/ck"));
+        assert_eq!(c.checkpoint_every, 5);
+        // empty dir string means disabled, not a checkpoint dir named ""
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"checkpoint_dir":""}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.checkpoint_dir, None);
     }
 
     #[test]

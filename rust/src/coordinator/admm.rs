@@ -290,4 +290,20 @@ impl Optimizer for Admm {
     fn w(&self) -> &[f32] {
         &self.w
     }
+
+    fn save_state(&self, buf: &mut Vec<u8>) {
+        // consensus iterate plus every per-cell share/dual; the cached
+        // factorizations are rebuilt by init() (prepare_admm) on resume
+        crate::util::bytes::put_f32s(buf, &self.w);
+        super::checkpoint::save_nested_f32s(buf, &self.s);
+        super::checkpoint::save_nested_f32s(buf, &self.uw);
+        super::checkpoint::save_nested_f32s(buf, &self.uz);
+    }
+
+    fn restore_state(&mut self, r: &mut crate::util::bytes::ByteReader<'_>) -> Result<()> {
+        super::checkpoint::restore_f32s(r, &mut self.w, "w")?;
+        super::checkpoint::restore_nested_f32s(r, &mut self.s, "s")?;
+        super::checkpoint::restore_nested_f32s(r, &mut self.uw, "uw")?;
+        super::checkpoint::restore_nested_f32s(r, &mut self.uz, "uz")
+    }
 }

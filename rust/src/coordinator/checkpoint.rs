@@ -1,0 +1,257 @@
+//! Versioned on-disk checkpoints of coordinator state.
+//!
+//! All mutable optimizer state lives driver-side (the executors cache
+//! immutable data blocks and per-superstep scratch only), and the RNG is
+//! stateless — substreams are keyed by `(seed, iteration, ...)` — so a
+//! checkpoint is small and complete: method name, iteration, the
+//! simulated clock, and the optimizer's state vectors.  Resuming
+//! re-runs the deterministic `init()` (which rebuilds structure:
+//! schedules, factorizations, workspaces), restores the state blob over
+//! it, and restores the clock — after which iteration `t+1` onward is
+//! *bitwise* identical to an unbroken run, on either cluster substrate.
+//!
+//! File format (`ckpt-<iteration>.ddck`, little-endian, via
+//! [`crate::util::bytes`]):
+//!
+//! ```text
+//! magic "DDCK" (u32) | format version (u32) | method (str)
+//! | iteration (usize) | sim clock | optimizer state blob
+//! | FNV-1a of everything above (u64)
+//! ```
+//!
+//! Writes go through a temp file + rename so a crash mid-write never
+//! leaves a half checkpoint under the real name; loads verify the
+//! checksum first, so corrupt or truncated files are rejected with a
+//! clear error instead of a panic (or, worse, a silently wrong resume).
+
+use crate::cluster::SimClock;
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// "DDCK" — first field of every checkpoint file.
+pub const CKPT_MAGIC: u32 = 0x4444_434B;
+/// Bump on any layout change of the checkpoint body.
+pub const CKPT_VERSION: u32 = 1;
+
+/// One complete coordinator snapshot.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// `Optimizer::name()` of the writer — resume refuses a mismatch.
+    pub method: String,
+    /// Completed global iteration this snapshot was taken after.
+    pub iteration: usize,
+    /// The simulated clock at that point (restored bitwise).
+    pub clock: SimClock,
+    /// The optimizer's `save_state` blob.
+    pub state: Vec<u8>,
+}
+
+/// FNV-1a over `data` — the same dependency-free checksum the session
+/// token uses; plenty to catch truncation and bit rot.
+fn fnv1a(data: &[u8]) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk byte layout (body + trailing checksum).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        bytes::put_u32(&mut body, CKPT_MAGIC);
+        bytes::put_u32(&mut body, CKPT_VERSION);
+        bytes::put_str(&mut body, &self.method);
+        bytes::put_usize(&mut body, self.iteration);
+        self.clock.encode(&mut body);
+        body.extend_from_slice(&self.state);
+        let sum = fnv1a(&body);
+        bytes::put_u64(&mut body, sum);
+        body
+    }
+
+    /// Inverse of [`Checkpoint::encode`].  Every failure mode — short
+    /// file, flipped bit, wrong magic/version — is a readable `Err`,
+    /// never a panic.
+    pub fn decode(data: &[u8]) -> Result<Checkpoint> {
+        if data.len() < 8 {
+            bail!("checkpoint truncated: {} bytes is too short to hold a checksum", data.len());
+        }
+        let (body, tail) = data.split_at(data.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        if fnv1a(body) != stored {
+            bail!("checkpoint checksum mismatch (corrupt or truncated file)");
+        }
+        let mut r = ByteReader::new(body);
+        let magic = r.u32()?;
+        if magic != CKPT_MAGIC {
+            bail!("not a checkpoint file: bad magic {magic:#x}");
+        }
+        let version = r.u32()?;
+        if version != CKPT_VERSION {
+            bail!("checkpoint format v{version} is not supported (this build reads v{CKPT_VERSION})");
+        }
+        let method = r.str()?;
+        let iteration = r.usize()?;
+        let clock = SimClock::decode(&mut r)?;
+        // the optimizer state blob is simply everything after the clock
+        let consumed = body.len() - r.remaining();
+        let state = body[consumed..].to_vec();
+        Ok(Checkpoint { method, iteration, clock, state })
+    }
+}
+
+/// Replace `dst` with a length-prefixed f32 vector from `r`, insisting
+/// the length matches what the optimizer's `init()` allocated — a
+/// checkpoint from a differently-shaped run must not resume silently.
+pub fn restore_f32s(r: &mut ByteReader<'_>, dst: &mut Vec<f32>, what: &str) -> Result<()> {
+    let got = r.f32s().with_context(|| format!("read checkpoint {what}"))?;
+    if got.len() != dst.len() {
+        bail!(
+            "checkpoint {what} has {} elements, this run wants {}",
+            got.len(),
+            dst.len()
+        );
+    }
+    *dst = got;
+    Ok(())
+}
+
+/// Length-prefixed list of f32 vectors (ADMM's per-cell duals/shares).
+pub fn save_nested_f32s(buf: &mut Vec<u8>, vecs: &[Vec<f32>]) {
+    bytes::put_u32(buf, vecs.len() as u32);
+    for v in vecs {
+        bytes::put_f32s(buf, v);
+    }
+}
+
+/// Inverse of [`save_nested_f32s`], shape-checked against `dst`.
+pub fn restore_nested_f32s(
+    r: &mut ByteReader<'_>,
+    dst: &mut [Vec<f32>],
+    what: &str,
+) -> Result<()> {
+    let n = r.u32()? as usize;
+    if n != dst.len() {
+        bail!("checkpoint {what} has {n} vectors, this run wants {}", dst.len());
+    }
+    for (i, v) in dst.iter_mut().enumerate() {
+        restore_f32s(r, v, &format!("{what}[{i}]"))?;
+    }
+    Ok(())
+}
+
+/// Canonical file name of the checkpoint taken after `iteration`.
+pub fn checkpoint_path(dir: &Path, iteration: usize) -> PathBuf {
+    dir.join(format!("ckpt-{iteration}.ddck"))
+}
+
+/// Write `ck` under its canonical name, atomically (temp + rename).
+pub fn write_checkpoint(dir: &Path, ck: &Checkpoint) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+    let path = checkpoint_path(dir, ck.iteration);
+    let tmp = dir.join(format!(".ckpt-{}.ddck.tmp", ck.iteration));
+    std::fs::write(&tmp, ck.encode())
+        .with_context(|| format!("write checkpoint {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publish checkpoint {}", path.display()))?;
+    Ok(path)
+}
+
+/// Load and verify one checkpoint file.
+pub fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let data = std::fs::read(path)
+        .with_context(|| format!("read checkpoint {}", path.display()))?;
+    Checkpoint::decode(&data).with_context(|| format!("decode checkpoint {}", path.display()))
+}
+
+/// The highest-iteration `ckpt-*.ddck` in `dir`, if any (a missing or
+/// empty directory is simply "nothing to resume from").
+pub fn latest_checkpoint(dir: &Path) -> Result<Option<PathBuf>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(e).with_context(|| format!("scan checkpoint dir {}", dir.display()))
+        }
+    };
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let iter = name
+            .strip_prefix("ckpt-")
+            .and_then(|s| s.strip_suffix(".ddck"))
+            .and_then(|s| s.parse::<usize>().ok());
+        if let Some(i) = iter {
+            if best.as_ref().map(|(b, _)| i > *b).unwrap_or(true) {
+                best = Some((i, entry.path()));
+            }
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut clock = SimClock::new();
+        clock.add_compute(0.125);
+        Checkpoint {
+            method: "d3ca".into(),
+            iteration: 7,
+            clock,
+            state: vec![1, 2, 3, 4, 5],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let ck = sample();
+        let d = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(d.method, "d3ca");
+        assert_eq!(d.iteration, 7);
+        assert_eq!(d.state, vec![1, 2, 3, 4, 5]);
+        assert_eq!(d.clock.now().to_bits(), ck.clock.now().to_bits());
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_errors_not_panics() {
+        let enc = sample().encode();
+        // flip one bit anywhere in the body
+        for pos in [0, 5, enc.len() / 2, enc.len() - 9] {
+            let mut bad = enc.clone();
+            bad[pos] ^= 0x40;
+            let err = Checkpoint::decode(&bad).unwrap_err();
+            assert!(err.to_string().contains("checksum"), "pos {pos}: {err}");
+        }
+        // every truncation length must error cleanly
+        for len in 0..enc.len() {
+            assert!(Checkpoint::decode(&enc[..len]).is_err(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn latest_checkpoint_picks_highest_iteration() {
+        let dir = std::env::temp_dir().join(format!("ddck-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(latest_checkpoint(&dir).unwrap().is_none());
+        let mut ck = sample();
+        for it in [3, 12, 5] {
+            ck.iteration = it;
+            write_checkpoint(&dir, &ck).unwrap();
+        }
+        let best = latest_checkpoint(&dir).unwrap().unwrap();
+        assert!(best.ends_with("ckpt-12.ddck"), "{}", best.display());
+        let loaded = load_checkpoint(&best).unwrap();
+        assert_eq!(loaded.iteration, 12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

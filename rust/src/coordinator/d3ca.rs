@@ -301,6 +301,19 @@ impl Optimizer for D3ca {
         &self.w
     }
 
+    fn save_state(&self, buf: &mut Vec<u8>) {
+        // α and w are the whole mutable state: the RNG is stateless
+        // (per-iteration substreams) and the workspace is written before
+        // read every iteration
+        crate::util::bytes::put_f32s(buf, &self.alpha);
+        crate::util::bytes::put_f32s(buf, &self.w);
+    }
+
+    fn restore_state(&mut self, r: &mut crate::util::bytes::ByteReader<'_>) -> Result<()> {
+        super::checkpoint::restore_f32s(r, &mut self.alpha, "alpha")?;
+        super::checkpoint::restore_f32s(r, &mut self.w, "w")
+    }
+
     fn dual_objective(&self, staged: &StagedGrid<'_>) -> Result<Option<f64>> {
         let part = staged.part;
         let mut lin = 0.0f64;

@@ -11,12 +11,15 @@
 //! `Optimizer::iterate`, matching the paper's practice of timing the
 //! algorithm rather than the monitoring.
 
+use super::checkpoint::{self, Checkpoint};
 use crate::cluster::{ClusterBackend, ClusterConfig, ClusterMode, DistCluster, SimBackend};
 use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::metrics::{Recorder, WireRecord};
 use crate::runtime::StagedGrid;
-use anyhow::Result;
+use crate::util::bytes::ByteReader;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
 
 /// A doubly-distributed optimization method.
 pub trait Optimizer {
@@ -47,6 +50,19 @@ pub trait Optimizer {
         let _ = staged;
         Ok(None)
     }
+
+    /// Serialize every piece of *mutable* optimizer state into `buf`
+    /// (checkpointing).  Structure rebuilt deterministically by
+    /// [`Optimizer::init`] — workspaces, schedules, factorizations — is
+    /// excluded; the RNG is stateless (substreams keyed by iteration),
+    /// so it needs no saving either.
+    fn save_state(&self, buf: &mut Vec<u8>);
+
+    /// Inverse of [`Optimizer::save_state`], applied *after* `init()`
+    /// re-ran on the same staged data — restores the saved vectors over
+    /// the freshly initialized ones, erroring (never panicking) on a
+    /// truncated blob or a shape mismatch.
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()>;
 }
 
 /// Outcome of a full run.
@@ -80,6 +96,12 @@ pub struct Driver<'a> {
     /// Stop early once this relative gap is reached (None = run all).
     target_gap: Option<f64>,
     eval_every: usize,
+    /// Directory for periodic state checkpoints (None = disabled).
+    checkpoint_dir: Option<PathBuf>,
+    /// Snapshot cadence in iterations (only meaningful with a dir).
+    checkpoint_every: usize,
+    /// Resume from the latest checkpoint in `checkpoint_dir`, if any.
+    resume: bool,
 }
 
 impl<'a> Driver<'a> {
@@ -92,6 +114,9 @@ impl<'a> Driver<'a> {
             fstar: None,
             target_gap: None,
             eval_every: 1,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            resume: false,
         })
     }
 
@@ -117,6 +142,21 @@ impl<'a> Driver<'a> {
 
     pub fn eval_every(mut self, k: usize) -> Self {
         self.eval_every = k.max(1);
+        self
+    }
+
+    /// Snapshot optimizer state to `dir` every `every` iterations (the
+    /// tentpole's periodic α/w checkpoints).
+    pub fn checkpoints(mut self, dir: impl Into<PathBuf>, every: usize) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self.checkpoint_every = every.max(1);
+        self
+    }
+
+    /// Resume from the latest checkpoint in the checkpoint dir (no-op
+    /// when the dir is empty: the run simply starts fresh).
+    pub fn resume(mut self, yes: bool) -> Self {
+        self.resume = yes;
         self
     }
 
@@ -219,8 +259,60 @@ impl<'a> Driver<'a> {
         backend.warm_up();
         let mut rec = Recorder::new(self.fstar);
         opt.init(&self.staged, backend)?;
-        for t in 1..=self.iterations {
+        // resume: init() above rebuilt all deterministic structure; now
+        // lay the saved state vectors and clock over it, and continue
+        // from the checkpointed iteration — bitwise identical to a run
+        // that never stopped
+        let mut start = 0usize;
+        if self.resume {
+            if let Some(dir) = &self.checkpoint_dir {
+                if let Some(path) = checkpoint::latest_checkpoint(dir)? {
+                    let ck = checkpoint::load_checkpoint(&path)?;
+                    if ck.method != opt.name() {
+                        bail!(
+                            "checkpoint {} was written by method {:?}, not {:?}",
+                            path.display(),
+                            ck.method,
+                            opt.name()
+                        );
+                    }
+                    let mut r = ByteReader::new(&ck.state);
+                    opt.restore_state(&mut r)
+                        .with_context(|| format!("restore state from {}", path.display()))?;
+                    if !r.is_empty() {
+                        bail!(
+                            "checkpoint {}: {} trailing state bytes",
+                            path.display(),
+                            r.remaining()
+                        );
+                    }
+                    *backend.clock_mut() = ck.clock;
+                    start = ck.iteration;
+                    eprintln!(
+                        "resumed {} from {} (iteration {start})",
+                        opt.name(),
+                        path.display()
+                    );
+                }
+            }
+        }
+        for t in (start + 1)..=self.iterations {
             opt.iterate(t, &self.staged, backend)?;
+            if let Some(dir) = &self.checkpoint_dir {
+                if t % self.checkpoint_every == 0 || t == self.iterations {
+                    let mut state = Vec::new();
+                    opt.save_state(&mut state);
+                    checkpoint::write_checkpoint(
+                        dir,
+                        &Checkpoint {
+                            method: opt.name(),
+                            iteration: t,
+                            clock: backend.clock().clone(),
+                            state,
+                        },
+                    )?;
+                }
+            }
             if t % self.eval_every == 0 || t == self.iterations {
                 let f = self.evaluate(opt.w(), opt.loss(), lam)?;
                 let d = opt

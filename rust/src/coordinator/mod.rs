@@ -19,12 +19,14 @@
 //! carry per-superstep wall-clock + bytes-on-wire records.
 
 mod admm;
+pub mod checkpoint;
 mod d3ca;
 mod driver;
 mod radisa;
 pub mod schedule;
 
 pub use admm::{Admm, AdmmConfig};
+pub use checkpoint::Checkpoint;
 pub use d3ca::{BetaSchedule, D3ca, D3caConfig};
 pub use driver::{Driver, Optimizer, RunResult};
 pub use radisa::{Radisa, RadisaConfig};

@@ -383,4 +383,16 @@ impl Optimizer for Radisa {
     fn w(&self) -> &[f32] {
         &self.w
     }
+
+    fn save_state(&self, buf: &mut Vec<u8>) {
+        // w is the only state carried across iterations: the schedule,
+        // sub-blocks, and γ are recomputed deterministically by init(),
+        // the SVRG snapshot is rebuilt inside each iteration, and the
+        // RNG streams are keyed by (iteration, round)
+        crate::util::bytes::put_f32s(buf, &self.w);
+    }
+
+    fn restore_state(&mut self, r: &mut crate::util::bytes::ByteReader<'_>) -> Result<()> {
+        super::checkpoint::restore_f32s(r, &mut self.w, "w")
+    }
 }

@@ -14,7 +14,9 @@
 //!             [--n-per 200 --m-per 150 | --sparse n,m,density | --libsvm file]
 //!             [--no-fstar] [--out history.csv] [--wire-out wire.jsonl]
 //!             [--dump-w weights.hex]
+//!             [--checkpoint-dir dir [--checkpoint-every K]] [--resume]
 //! ddopt executor --bind 127.0.0.1:7077 [--threads N] [--once]
+//!                [--chaos-abort-step N]  (fault injection: abort on Nth step)
 //! ddopt exp <table1|fig3|fig4|fig5|fig6|perf|ablations|stragglers|all>
 //!           [--scale small|paper] [--seed N]  (seed: stragglers scenario seed)
 //! ddopt gen-data --out data.libsvm [--n 1000 --m 500 --density 0.01] [--seed N]
@@ -29,6 +31,13 @@
 //! next to the simulated clock.  `--dist-wire broadcast` disables the
 //! negotiated sliced-scatter/folded-gather wire optimizations (same
 //! bits, more bytes) — useful as a baseline and for byte A/B tests.
+//!
+//! `--checkpoint-dir` writes a versioned coordinator snapshot every
+//! `--checkpoint-every` iterations (default 1); `--resume` picks up the
+//! latest snapshot in that directory and continues bitwise-identically.
+//! `executor --chaos-abort-step N` makes the executor `abort()` upon
+//! receiving its Nth superstep frame — the fault-injection hook the
+//! recovery tests and the CI kill-and-recover scenario use.
 
 use anyhow::{anyhow, bail, Result};
 use ddopt::bench_harness::{self, Scale};
@@ -140,6 +149,14 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(path) = args.flag_str("libsvm") {
         cfg.dataset = DatasetSpec::Libsvm { path };
     }
+    if let Some(d) = args.flag_str("checkpoint-dir") {
+        if !d.is_empty() {
+            cfg.checkpoint_dir = Some(d);
+        }
+    }
+    if let Some(k) = args.flag::<usize>("checkpoint-every") {
+        cfg.checkpoint_every = k;
+    }
     Ok(cfg)
 }
 
@@ -164,6 +181,7 @@ fn run_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let method = args.flag_str("method").unwrap_or_else(|| "radisa".into());
     let no_fstar = args.switch("no-fstar");
+    let resume = args.switch("resume");
     let out = args.flag_str("out");
     let wire_out = args.flag_str("wire-out");
     let dump_w = args.flag_str("dump-w");
@@ -206,6 +224,14 @@ fn run_train(args: &Args) -> Result<()> {
     let mut driver = Driver::new(&part, &backend)?
         .iterations(cfg.iterations)
         .cluster(ClusterConfig { cores: cfg.cluster.cores, ..cfg.cluster.clone() });
+    if let Some(dir) = &cfg.checkpoint_dir {
+        let every = if cfg.checkpoint_every == 0 { 1 } else { cfg.checkpoint_every };
+        driver = driver.checkpoints(dir, every).resume(resume);
+        println!("checkpoints -> {dir} (every {every} iteration{})",
+            if every == 1 { "" } else { "s" });
+    } else if resume {
+        bail!("--resume needs --checkpoint-dir (where would the snapshot come from?)");
+    }
     if !no_fstar && cfg.loss != Loss::Squared {
         let r = reference_optimum(&ds, cfg.loss, cfg.lambda, 1e-8);
         println!("f* = {:.6} (certificate {:.1e})", r.fstar, r.certificate);
@@ -259,6 +285,15 @@ fn run_train(args: &Args) -> Result<()> {
             w_in as f64 / (1 << 20) as f64,
             wall
         );
+        let retries: usize = result.wire.iter().map(|r| r.retries).sum();
+        let rejoins: usize = result.wire.iter().map(|r| r.rejoins).sum();
+        if retries > 0 || rejoins > 0 {
+            println!(
+                "recovery: {retries} superstep retr{} after {rejoins} executor rejoin{}",
+                if retries == 1 { "y" } else { "ies" },
+                if rejoins == 1 { "" } else { "s" }
+            );
+        }
     }
     if let Some(path) = wire_out {
         if result.wire.is_empty() {
@@ -296,8 +331,14 @@ fn run_executor(args: &Args) -> Result<()> {
         .flag::<usize>("threads")
         .unwrap_or_else(ddopt::cluster::host_threads);
     let once = args.switch("once");
+    let chaos_abort_step = args.flag::<u64>("chaos-abort-step").unwrap_or(0);
     args.finish().map_err(|e| anyhow!(e))?;
-    ddopt::cluster::dist::serve(&ddopt::cluster::dist::ExecutorConfig { bind, threads, once })
+    ddopt::cluster::dist::serve(&ddopt::cluster::dist::ExecutorConfig {
+        bind,
+        threads,
+        once,
+        chaos_abort_step,
+    })
 }
 
 fn run_exp(args: &Args) -> Result<()> {

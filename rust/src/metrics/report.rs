@@ -66,6 +66,13 @@ pub struct WireRecord {
     pub scatter: Vec<usize>,
     /// Per-executor bytes read back (gather split; sums to `bytes_in`).
     pub gather: Vec<usize>,
+    /// Superstep replays after a recovered exchange failure (0 on a
+    /// clean superstep; recovery guarantees at most one lost replay per
+    /// failure).
+    pub retries: usize,
+    /// Rejoin handshakes performed while recovering this superstep
+    /// (one per executor re-dialed per retry).
+    pub rejoins: usize,
 }
 
 /// Write per-superstep wire records as JSON lines (one object per line),
@@ -89,6 +96,8 @@ pub fn write_wire_jsonl(records: &[WireRecord], path: &Path) -> Result<()> {
                 Json::arr(r.scatter.iter().map(|&b| Json::from(b))),
             ),
             ("gather", Json::arr(r.gather.iter().map(|&b| Json::from(b)))),
+            ("retries", Json::from(r.retries)),
+            ("rejoins", Json::from(r.rejoins)),
         ]);
         writeln!(f, "{line}")?;
     }

@@ -1,0 +1,421 @@
+//! Fault recovery on the dist wire (wire revision 3): the liveness
+//! regressions fixed alongside it, v2 interoperability, and the chaos
+//! happy path — SIGKILL an executor mid-superstep, restart it, and the
+//! run must finish with weights bitwise identical to a run that never
+//! saw a failure, losing at most the one interrupted superstep.
+//!
+//! Several tests here override `DDOPT_DIST_READ_TIMEOUT_SECS` /
+//! `DDOPT_DIST_REJOIN_TIMEOUT_SECS`; process environment is global, so
+//! every test takes the same mutex and restores what it changed.
+
+use anyhow::Result;
+use ddopt::cluster::dist::wire::{self, Tag};
+use ddopt::cluster::{
+    ClusterBackend, ClusterConfig, ClusterMode, CostModel, DistCluster, GridOp,
+};
+use ddopt::coordinator::{D3ca, D3caConfig, Driver, Optimizer, RunResult};
+use ddopt::data::{Grid, Partitioned, SyntheticDense};
+use ddopt::runtime::Backend;
+use ddopt::util::bytes::{self, ByteReader};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serializes the whole file: these tests read and write process-global
+/// environment variables.
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Scoped env override, restored on drop.
+struct EnvVar {
+    key: &'static str,
+    old: Option<String>,
+}
+
+impl EnvVar {
+    fn set(key: &'static str, value: &str) -> EnvVar {
+        let old = std::env::var(key).ok();
+        std::env::set_var(key, value);
+        EnvVar { key, old }
+    }
+}
+
+impl Drop for EnvVar {
+    fn drop(&mut self) {
+        match &self.old {
+            Some(v) => std::env::set_var(self.key, v),
+            None => std::env::remove_var(self.key),
+        }
+    }
+}
+
+fn fixture() -> (Partitioned, Vec<f32>) {
+    let ds = SyntheticDense::paper_part1(2, 2, 12, 9, 0.1, 7).build();
+    let part = Partitioned::split(&ds, Grid::new(2, 2));
+    let v = vec![0.25f32; part.n];
+    (part, v)
+}
+
+/// A correct (zero-filled) StepResult body answering every task of `op`.
+fn full_reply(part: &Partitioned, op: &GridOp<'_>, step_id: u64) -> Vec<u8> {
+    let n_tasks = op.n_tasks(part);
+    let mut body = Vec::new();
+    bytes::put_u64(&mut body, step_id);
+    bytes::put_u32(&mut body, n_tasks as u32);
+    for task in 0..n_tasks {
+        bytes::put_u32(&mut body, task as u32);
+        bytes::put_f64(&mut body, 1e-3);
+        bytes::put_u8(&mut body, 0);
+        bytes::put_u32(&mut body, 1); // unfolded leaf
+        let (_, l) = op.out_span(part, task);
+        bytes::put_f32s(&mut body, &vec![0.0f32; l]);
+        let (_, l2) = op.out2_span(part, task);
+        bytes::put_f32s(&mut body, &vec![0.0f32; l2]);
+    }
+    body
+}
+
+/// Handshake + StageAck as a scripted executor; `mask` is ANDed into the
+/// acked capability bits (so a test can impersonate a v2 build).
+fn fake_handshake(s: &mut TcpStream, buf: &mut Vec<u8>, mask: u32) {
+    let (t, _) = wire::read_frame(s, buf).unwrap();
+    assert_eq!(t, Tag::Hello, "fake executor wanted Hello");
+    let mut r = ByteReader::new(buf);
+    let magic = r.u32().unwrap();
+    let version = r.u32().unwrap();
+    let _index = r.u32().unwrap();
+    let _count = r.u32().unwrap();
+    let offered = r.u32().unwrap();
+    let mut ack = Vec::new();
+    bytes::put_u32(&mut ack, magic);
+    bytes::put_u32(&mut ack, version);
+    bytes::put_u32(&mut ack, 1);
+    bytes::put_u32(&mut ack, offered & mask);
+    wire::write_frame(s, Tag::HelloAck, &ack).unwrap();
+    let (t, _) = wire::read_frame(s, buf).unwrap();
+    assert_eq!(t, Tag::Stage, "fake executor wanted Stage");
+    wire::write_frame(s, Tag::StageAck, &[]).unwrap();
+}
+
+/// Regression for the stale exchange deadline: a reply that *trickles*
+/// in — every chunk well inside the liveness budget, the whole reply
+/// well outside it — must succeed.  Before the fix the deadline was
+/// armed once at the start of the exchange and never re-armed on
+/// progress, so steady slow readers were killed as "wedged".
+#[test]
+fn trickling_reply_slower_than_the_budget_is_not_killed() {
+    let _guard = env_lock();
+    let _t = EnvVar::set("DDOPT_DIST_READ_TIMEOUT_SECS", "1");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (part, v) = fixture();
+    let reply = {
+        let op = GridOp::Atx { v: &v };
+        full_reply(&part, &op, 1)
+    };
+    let handle: JoinHandle<()> = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        s.set_nodelay(true).ok();
+        let mut buf = Vec::new();
+        fake_handshake(&mut s, &mut buf, u32::MAX);
+        let (t, _) = wire::read_frame(&mut s, &mut buf).unwrap();
+        assert_eq!(t, Tag::Step, "fake executor wanted Step");
+        // frame = header + body, dribbled out in 5 chunks 300ms apart:
+        // 1.2s of gaps total, every single gap far below the 1s budget
+        let mut frame = Vec::with_capacity(5 + reply.len());
+        frame.extend_from_slice(&(reply.len() as u32).to_le_bytes());
+        frame.push(Tag::StepResult as u8);
+        frame.extend_from_slice(&reply);
+        let chunk = (frame.len() + 4) / 5;
+        for (k, piece) in frame.chunks(chunk).enumerate() {
+            if k > 0 {
+                std::thread::sleep(Duration::from_millis(300));
+            }
+            s.write_all(piece).unwrap();
+            s.flush().unwrap();
+        }
+        // hold the socket until the driver is done
+        let _ = wire::read_frame(&mut s, &mut buf);
+    });
+
+    let backend = Backend::native();
+    let staged = backend.stage(&part).unwrap();
+    let config = ClusterConfig {
+        cores: 4,
+        threads: 1,
+        cost: CostModel::Fixed(1e-3),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let ok = (|| -> Result<()> {
+        let mut cluster = DistCluster::connect(config, &[addr], &part)?;
+        let op = GridOp::Atx { v: &v };
+        let mut out = vec![0.0f32; op.out_len(&part)];
+        let mut out2 = vec![0.0f32; op.out2_len(&part)];
+        cluster.grid_exec(&staged, GridOp::Atx { v: &v }, &mut out, &mut out2)?;
+        Ok(())
+    })();
+    let elapsed = t0.elapsed();
+    ok.expect("steadily trickling reply must not be killed as wedged");
+    assert!(
+        elapsed >= Duration::from_millis(1100),
+        "reply should have taken longer than the 1s budget ({elapsed:?}), \
+         or this test is not exercising the deadline reset"
+    );
+    handle.join().unwrap();
+}
+
+/// The stalled-exchange error must blame the executor that actually went
+/// quiet — not executor 0 by default.
+#[test]
+fn wedged_executor_error_names_the_lagging_peer() {
+    let _guard = env_lock();
+    let _t = EnvVar::set("DDOPT_DIST_READ_TIMEOUT_SECS", "1");
+    // recovery off: this test is about the blame string, not the retry
+    let _r = EnvVar::set("DDOPT_DIST_REJOIN_TIMEOUT_SECS", "0");
+
+    // executor 0 answers; executor 1 goes silent after staging
+    let mk_listener = || TcpListener::bind("127.0.0.1:0").unwrap();
+    let (l0, l1) = (mk_listener(), mk_listener());
+    let addr0 = l0.local_addr().unwrap().to_string();
+    let addr1 = l1.local_addr().unwrap().to_string();
+    let (part, v) = fixture();
+
+    let healthy = {
+        let (part, v) = (part.clone(), v.clone());
+        std::thread::spawn(move || {
+            let (mut s, _) = l0.accept().unwrap();
+            let mut buf = Vec::new();
+            fake_handshake(&mut s, &mut buf, u32::MAX);
+            let (t, _) = wire::read_frame(&mut s, &mut buf).unwrap();
+            assert_eq!(t, Tag::Step);
+            // contiguous ownership over 2 executors: exec 0 owns cells
+            // {0, 1}; answer exactly those tasks
+            let op = GridOp::Atx { v: &v };
+            let mut body = Vec::new();
+            bytes::put_u64(&mut body, 1);
+            bytes::put_u32(&mut body, 2);
+            for task in [0usize, 1] {
+                bytes::put_u32(&mut body, task as u32);
+                bytes::put_f64(&mut body, 1e-3);
+                bytes::put_u8(&mut body, 0);
+                bytes::put_u32(&mut body, 1);
+                let (_, l) = op.out_span(&part, task);
+                bytes::put_f32s(&mut body, &vec![0.0f32; l]);
+                let (_, l2) = op.out2_span(&part, task);
+                bytes::put_f32s(&mut body, &vec![0.0f32; l2]);
+            }
+            wire::write_frame(&mut s, Tag::StepResult, &body).unwrap();
+            let _ = wire::read_frame(&mut s, &mut buf);
+        })
+    };
+    let silent = std::thread::spawn(move || {
+        let (mut s, _) = l1.accept().unwrap();
+        let mut buf = Vec::new();
+        fake_handshake(&mut s, &mut buf, u32::MAX);
+        // read the Step frame, then never answer; keep the socket open so
+        // the driver sees a stall, not a reset
+        let (t, _) = wire::read_frame(&mut s, &mut buf).unwrap();
+        assert_eq!(t, Tag::Step);
+        std::thread::sleep(Duration::from_secs(5));
+    });
+
+    let backend = Backend::native();
+    let staged = backend.stage(&part).unwrap();
+    let config = ClusterConfig {
+        cores: 4,
+        threads: 1,
+        cost: CostModel::Fixed(1e-3),
+        ..Default::default()
+    };
+    let err = (|| -> Result<()> {
+        let mut cluster =
+            DistCluster::connect(config, &[addr0, addr1.clone()], &part)?;
+        let op = GridOp::Atx { v: &v };
+        let mut out = vec![0.0f32; op.out_len(&part)];
+        let mut out2 = vec![0.0f32; op.out2_len(&part)];
+        cluster.grid_exec(&staged, GridOp::Atx { v: &v }, &mut out, &mut out2)?;
+        Ok(())
+    })()
+    .expect_err("a silent executor must fail the superstep");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains(&format!("no reply from executor 1 at {addr1}")),
+        "blame must land on the silent peer: {msg}"
+    );
+    assert!(!msg.contains("executor 0 at"), "executor 0 answered: {msg}");
+    healthy.join().unwrap();
+    silent.join().unwrap();
+}
+
+/// v2 interop: an executor that does not ack [`wire::CAP_REJOIN`]
+/// downgrades the session — failures keep the old fail-fast behavior,
+/// with no rejoin attempts (and so no rejoin-budget stall).
+#[test]
+fn v2_executor_disables_recovery_and_fails_fast() {
+    let _guard = env_lock();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut buf = Vec::new();
+        // a v2 build knows nothing of CAP_REJOIN: mask it from the ack
+        fake_handshake(&mut s, &mut buf, !wire::CAP_REJOIN);
+        // then die mid-superstep, like a killed process
+        let (t, _) = wire::read_frame(&mut s, &mut buf).unwrap();
+        assert_eq!(t, Tag::Step);
+        drop(s);
+    });
+
+    let (part, v) = fixture();
+    let backend = Backend::native();
+    let staged = backend.stage(&part).unwrap();
+    let config = ClusterConfig {
+        cores: 4,
+        threads: 1,
+        cost: CostModel::Fixed(1e-3),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let err = (|| -> Result<()> {
+        let mut cluster = DistCluster::connect(config, &[addr], &part)?;
+        assert_eq!(
+            cluster.capabilities() & wire::CAP_REJOIN,
+            0,
+            "fleet caps must drop CAP_REJOIN when an executor does not ack it"
+        );
+        let op = GridOp::Atx { v: &v };
+        let mut out = vec![0.0f32; op.out_len(&part)];
+        let mut out2 = vec![0.0f32; op.out2_len(&part)];
+        cluster.grid_exec(&staged, GridOp::Atx { v: &v }, &mut out, &mut out2)?;
+        Ok(())
+    })()
+    .expect_err("dead v2 executor must fail the superstep");
+    let elapsed = t0.elapsed();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("executor"), "{msg}");
+    assert!(
+        !msg.contains("rejoin"),
+        "no rejoin may be attempted without the capability: {msg}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "fail-fast path must not sit out a rejoin budget ({elapsed:?})"
+    );
+    handle.join().unwrap();
+}
+
+// ---------------------------------------------------------- chaos path
+
+/// One spawned `ddopt executor` child; killed on drop.
+struct ExecProc {
+    child: Child,
+    addr: String,
+}
+
+impl ExecProc {
+    fn spawn_with(args: &[&str]) -> ExecProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_ddopt"))
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn ddopt executor");
+        let stdout = child.stdout.take().expect("executor stdout");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("read executor listen line");
+        let addr = line
+            .trim()
+            .strip_prefix("executor listening on ")
+            .unwrap_or_else(|| panic!("unexpected executor banner: {line:?}"))
+            .to_string();
+        ExecProc { child, addr }
+    }
+}
+
+impl Drop for ExecProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn train(mode: ClusterMode) -> Result<RunResult> {
+    let ds = SyntheticDense::paper_part1(2, 2, 24, 18, 0.1, 7).build();
+    let part = Partitioned::split(&ds, Grid::new(2, 2));
+    let backend = Backend::native();
+    let cluster = ClusterConfig {
+        mode,
+        cores: 4,
+        threads: 1,
+        cost: CostModel::Fixed(1e-3),
+        ..Default::default()
+    };
+    let mut opt: Box<dyn Optimizer> =
+        Box::new(D3ca::new(D3caConfig { lambda: 0.2, seed: 9, ..Default::default() }));
+    Driver::new(&part, &backend)?.iterations(4).cluster(cluster).run(opt.as_mut())
+}
+
+/// The tentpole's chaos harness: an executor that dies (process abort —
+/// indistinguishable from SIGKILL on the wire) upon receiving its 4th
+/// superstep frame, and a supervisor that restarts a plain executor on
+/// the same port.  Training must complete, the final weights must be
+/// bitwise identical to the sim backend (i.e. to a run with no failure),
+/// and exactly one superstep may have been retried.
+#[test]
+fn killed_and_restarted_executor_rejoins_and_preserves_bitwise_parity() {
+    let _guard = env_lock();
+
+    let chaos = ExecProc::spawn_with(&[
+        "executor",
+        "--bind",
+        "127.0.0.1:0",
+        "--threads",
+        "1",
+        "--chaos-abort-step",
+        "4",
+    ]);
+    let addr = chaos.addr.clone();
+    // supervisor: when the chaos executor aborts, bring up a plain one on
+    // the very same address for the driver to rejoin
+    let supervisor = {
+        let addr = addr.clone();
+        let mut chaos = chaos;
+        std::thread::spawn(move || -> ExecProc {
+            let status = chaos.child.wait().expect("wait on chaos executor");
+            assert!(
+                !status.success(),
+                "chaos executor should have died by abort, got {status:?}"
+            );
+            ExecProc::spawn_with(&["executor", "--bind", &addr, "--threads", "1"])
+        })
+    };
+
+    let sim = train(ClusterMode::Sim).unwrap();
+    let dist = train(ClusterMode::Dist(vec![addr])).unwrap();
+    let _replacement = supervisor.join().unwrap();
+
+    assert_eq!(sim.w.len(), dist.w.len());
+    for (i, (a, b)) in sim.w.iter().zip(&dist.w).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "w[{i}] {a} vs {b}: recovery must lose no state"
+        );
+    }
+    assert_eq!(sim.sim_time, dist.sim_time, "sim clock must survive recovery");
+    let retries: usize = dist.wire.iter().map(|r| r.retries).sum();
+    let rejoins: usize = dist.wire.iter().map(|r| r.rejoins).sum();
+    assert_eq!(retries, 1, "exactly one superstep may be retried per failure");
+    assert_eq!(rejoins, 1, "one executor rejoined once");
+}

@@ -137,6 +137,21 @@ def check_wire(bench, history, thresholds, failures):
                 f"  OK (wire) {dotted} = {value} "
                 f"(ceiling {ceiling:.4g} from median {median:.4g} of {len(samples)})"
             )
+    # fault-tolerance counters: the perf workload runs a clean loopback
+    # fleet, so any retry / rejoin / degrade / speculation event during
+    # the bench means the transport itself is flaky — hard zero, no
+    # history needed
+    for dotted in thresholds.get("wire_zero_keys", []):
+        value = lookup(bench, dotted)
+        if value is None:
+            failures.append(f"{dotted}: missing from bench")
+        elif value != 0:
+            failures.append(
+                f"{dotted}: {value} != 0 (recovery/speculation fired during "
+                "a clean perf bench)"
+            )
+        else:
+            print(f"  OK (wire) {dotted} = 0 (hard zero, absolute)")
     min_reduction = thresholds.get("wire_min_reduction")
     if min_reduction is not None:
         ratio = lookup(bench, "wire.scatter reduction (broadcast/sliced)")

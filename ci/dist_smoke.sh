@@ -180,4 +180,124 @@ if rejoins < 1:
 print("OK: executor died mid-superstep, rejoined, finished bitwise identical")
 EOF
 
+# ------------------------------------------------- permanent kill, degrade
+# Same rigged abort, but this time nobody restarts the executor: the
+# supervisor is torn down first, and the rejoin budget is squeezed to 2s
+# so the driver gives up on the dead slot quickly.  The run must finish
+# anyway — the dead executor's cells are re-dealt to the two survivors
+# via the rev-4 CellMap frame — with weights still bitwise identical to
+# sim, exactly one retried superstep, and the wire log ending in
+# degraded mode (degraded_executors == 1 on the final superstep).
+kill "$SUP" 2>/dev/null || true
+wait "$SUP" 2>/dev/null || true
+"$BIN" executor --bind "127.0.0.1:${PORT2}" --threads 2 --chaos-abort-step 6 &
+ED=$!
+trap 'kill "$E1" "$E3" "$EC" "$SUP" "$ED" 2>/dev/null || true' EXIT
+up=0
+for _ in $(seq 1 50); do
+  if (exec 3<>"/dev/tcp/127.0.0.1/${PORT2}") 2>/dev/null; then
+    exec 3>&- 3<&-
+    up=1
+    break
+  fi
+  sleep 0.2
+done
+if [ "$up" != 1 ]; then
+  echo "FAIL: doomed executor on port ${PORT2} did not come up"
+  exit 1
+fi
+
+DDOPT_DIST_REJOIN_TIMEOUT_SECS=2 \
+  "$BIN" train --method d3ca "${RECOVER[@]}" --cluster "$DIST" \
+  --dump-w "$OUT/dist_smoke_degrade_dist.whex" \
+  --wire-out "$OUT/dist_smoke_degrade_wire.jsonl"
+if ! diff "$OUT/dist_smoke_recovery_sim.whex" "$OUT/dist_smoke_degrade_dist.whex"; then
+  echo "FAIL: weights diverged after degrading onto the surviving executors"
+  exit 1
+fi
+
+python3 - "$OUT/dist_smoke_degrade_wire.jsonl" <<'EOF'
+import json
+import sys
+
+recs = [json.loads(line) for line in open(sys.argv[1])]
+retries = sum(r.get("retries", 0) for r in recs)
+rejoins = sum(r.get("rejoins", 0) for r in recs)
+degraded = recs[-1].get("degraded_executors", 0)
+print(f"degrade counters: retries={retries} rejoins={rejoins} degraded={degraded}")
+if retries != 1:
+    sys.exit(f"FAIL: expected exactly 1 retried superstep for 1 failure, got {retries}")
+if rejoins != 2:
+    sys.exit(f"FAIL: expected handshakes with exactly the 2 survivors, got {rejoins}")
+if degraded != 1:
+    sys.exit(f"FAIL: final superstep should run 1 executor short, got {degraded}")
+for r in recs:
+    if sum(r["scatter"]) != r["bytes_out"]:
+        sys.exit(f"FAIL: scatter split mismatch in degraded run: {r}")
+print("OK: dead executor never came back, fleet rebalanced and finished on 2")
+EOF
+
+# -------------------------------------------- trickling link, speculation
+# Fresh healthy fleet, but executor 2's replies trickle: every reply
+# frame from its 3rd onward is held for 300ms.  With `--dist-spec` the
+# driver notices the stall against the fast peers' latency EWMAs and
+# dispatches backup copies of the laggard's tasks onto the idle
+# survivors (block replicas were pre-staged).  The run must adopt at
+# least one backup result (spec_won >= 1) and the weights must STILL be
+# bitwise identical to sim — speculation may only change timing, never
+# math.
+kill "$ED" 2>/dev/null || true
+wait "$ED" 2>/dev/null || true
+"$BIN" executor --bind "127.0.0.1:${PORT2}" --threads 2 --chaos delay=300,after=3 &
+ES=$!
+trap 'kill "$E1" "$E3" "$EC" "$SUP" "$ED" "$ES" 2>/dev/null || true' EXIT
+up=0
+for _ in $(seq 1 50); do
+  if (exec 3<>"/dev/tcp/127.0.0.1/${PORT2}") 2>/dev/null; then
+    exec 3>&- 3<&-
+    up=1
+    break
+  fi
+  sleep 0.2
+done
+if [ "$up" != 1 ]; then
+  echo "FAIL: trickling executor on port ${PORT2} did not come up"
+  exit 1
+fi
+
+"$BIN" train --method d3ca "${RECOVER[@]}" --cluster "$DIST" --dist-spec \
+  --dump-w "$OUT/dist_smoke_spec_dist.whex" \
+  --wire-out "$OUT/dist_smoke_spec_wire.jsonl"
+if ! diff "$OUT/dist_smoke_recovery_sim.whex" "$OUT/dist_smoke_spec_dist.whex"; then
+  echo "FAIL: speculative re-execution changed the weights"
+  exit 1
+fi
+
+python3 - "$OUT/dist_smoke_spec_wire.jsonl" <<'EOF'
+import json
+import sys
+
+recs = [json.loads(line) for line in open(sys.argv[1])]
+launched = sum(r.get("spec_launched", 0) for r in recs)
+won = sum(r.get("spec_won", 0) for r in recs)
+retries = sum(r.get("retries", 0) for r in recs)
+degraded = max(r.get("degraded_executors", 0) for r in recs)
+print(f"speculation counters: launched={launched} won={won}")
+if launched < 1:
+    sys.exit("FAIL: trickling link never triggered a speculative backup")
+if won < 1:
+    sys.exit("FAIL: backups launched but none were adopted")
+if won > launched:
+    sys.exit(f"FAIL: adopted {won} backups but only launched {launched}")
+if retries != 0 or degraded != 0:
+    sys.exit(
+        f"FAIL: speculation leaked into recovery (retries={retries}, "
+        f"degraded={degraded})"
+    )
+for r in recs:
+    if sum(r["scatter"]) != r["bytes_out"]:
+        sys.exit(f"FAIL: scatter split mismatch in spec run: {r}")
+print("OK: backups raced the trickling link and won without changing weights")
+EOF
+
 echo "dist-smoke passed"

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# fuzz-smoke: bounded libFuzzer pass over the dist wire surface.
+#
+# Runs each cargo-fuzz target (frame decoder, op codecs) for a fixed
+# time slice starting from the checked-in corpus under
+# rust/fuzz/corpus/.  This is a smoke test, not a campaign: the goal is
+# that the decoders survive a minute of mutation without a panic, OOM,
+# or overflow, on every PR.  Long-running fuzzing stays out of CI.
+#
+# cargo-fuzz needs a nightly toolchain with the sanitizer runtime.  CI
+# images that lack it (or lack cargo-fuzz itself) skip gracefully —
+# this script never installs anything.
+set -euo pipefail
+
+SECS=${FUZZ_SECS:-30}
+cd "$(dirname "$0")/../rust/fuzz"
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "SKIP: cargo not on PATH, fuzz smoke not run"
+  exit 0
+fi
+if ! cargo fuzz --help >/dev/null 2>&1; then
+  echo "SKIP: cargo-fuzz not installed, fuzz smoke not run"
+  exit 0
+fi
+if ! cargo +nightly --version >/dev/null 2>&1; then
+  echo "SKIP: nightly toolchain unavailable, fuzz smoke not run"
+  exit 0
+fi
+
+for target in wire_frame op_codec; do
+  echo "fuzzing ${target} for ${SECS}s..."
+  # -rss_limit_mb guards the alloc-hardening promise: a lying length
+  # prefix must not drive real memory growth
+  cargo +nightly fuzz run "$target" -- \
+    -max_total_time="$SECS" -rss_limit_mb=512 -max_len=4096
+  echo "OK: ${target} survived ${SECS}s"
+done
+
+echo "fuzz-smoke passed"

@@ -1,0 +1,29 @@
+//! Fuzz the GridOp payload codecs: arbitrary bytes through
+//! [`OpBuf::decode_into`] (full broadcast payloads) and
+//! [`OpBuf::decode_sliced_into`] (per-executor sliced payloads) must
+//! fail cleanly or decode into a buffer that [`OpBuf::as_op`] can
+//! re-borrow — never panic, never allocate past the input's own bounds.
+//! The first input byte selects the codec, mirroring the Step frame's
+//! `STEP_FLAG_SLICED` bit.
+
+#![no_main]
+
+use ddopt::cluster::dist::ops::OpBuf;
+use ddopt::util::bytes::ByteReader;
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Some((&mode, payload)) = data.split_first() else {
+        return;
+    };
+    let mut buf = OpBuf::new();
+    let mut r = ByteReader::new(payload);
+    let decoded = if mode & 1 == 0 {
+        buf.decode_into(&mut r)
+    } else {
+        buf.decode_sliced_into(&mut r)
+    };
+    if decoded.is_ok() {
+        let _ = buf.as_op();
+    }
+});

@@ -1,0 +1,19 @@
+//! Fuzz the wire frame decoder: arbitrary bytes fed through
+//! [`wire::read_frame`] must produce `Ok` or `Err` — never a panic, an
+//! overflow, or an allocation driven by a lying length prefix.  The
+//! input is treated as a stream of zero or more frames, exactly how the
+//! driver and executor read their sockets.
+
+#![no_main]
+
+use ddopt::cluster::dist::wire;
+use libfuzzer_sys::fuzz_target;
+use std::io::Cursor;
+
+fuzz_target!(|data: &[u8]| {
+    let mut cur = Cursor::new(data);
+    let mut body = Vec::new();
+    // every Ok consumes >= 5 bytes, so this terminates at EOF or on the
+    // first malformed frame
+    while wire::read_frame(&mut cur, &mut body).is_ok() {}
+});

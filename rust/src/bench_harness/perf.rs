@@ -310,6 +310,8 @@ pub fn wire_profile() -> Result<Vec<(String, f64)>> {
     let part = Partitioned::split(&ds, Grid::new(2, 2));
     let mut out: Vec<(String, f64)> = Vec::new();
     let mut agg_out = [0.0f64; 2];
+    let (mut retries, mut rejoins, mut degraded) = (0usize, 0usize, 0usize);
+    let (mut spec_launched, mut spec_won) = (0usize, 0usize);
     for (mi, (mode, label)) in
         [(WireMode::Broadcast, "broadcast"), (WireMode::Sliced, "sliced")]
             .into_iter()
@@ -344,6 +346,14 @@ pub fn wire_profile() -> Result<Vec<(String, f64)>> {
                 .cluster(cfg)
                 .run(opt.as_mut())?;
             for rec in &r.wire {
+                // recovery and speculation counters land on every record
+                // (including staging); on this clean loopback fleet they
+                // must all stay 0 — the perf gate pins that
+                retries += rec.retries;
+                rejoins += rec.rejoins;
+                degraded = degraded.max(rec.degraded_executors);
+                spec_launched += rec.spec_launched;
+                spec_won += rec.spec_won;
                 if rec.op == "stage" || rec.op == "prepare-admm" {
                     continue;
                 }
@@ -376,6 +386,15 @@ pub fn wire_profile() -> Result<Vec<(String, f64)>> {
     if agg_out[1] > 0.0 {
         out.push(("scatter reduction (broadcast/sliced)".into(), agg_out[0] / agg_out[1]));
     }
+    // fault-tolerance counters, summed across both wire modes: all five
+    // must read 0 on this clean loopback fleet, and the perf gate
+    // (wire_zero_keys) fails the run otherwise — recovery or speculation
+    // firing during the bench means the transport itself got flaky
+    out.push(("recovery retries".into(), retries as f64));
+    out.push(("recovery rejoins".into(), rejoins as f64));
+    out.push(("degraded executors".into(), degraded as f64));
+    out.push(("spec launched".into(), spec_launched as f64));
+    out.push(("spec won".into(), spec_won as f64));
     Ok(out)
 }
 
@@ -689,7 +708,7 @@ pub fn run(scale: Scale) -> Result<()> {
             .collect(),
     );
     let doc = Json::obj(vec![
-        ("schema", Json::str("ddopt-perf/3")),
+        ("schema", Json::str("ddopt-perf/4")),
         ("generated_by", Json::str("ddopt exp perf")),
         (
             "provenance",

@@ -512,6 +512,96 @@ impl Ownership {
     }
 }
 
+/// Explicit, rewritable cell→executor-slot placement (wire revision 4).
+///
+/// [`Ownership`] is a pure *function* of the cell index — perfect while
+/// the fleet is static, useless the moment an executor dies for good.
+/// A `CellMap` is the same placement reified as a table the driver can
+/// rewrite and re-negotiate over the wire (`CellMap` frame): degrade
+/// onto the survivors when a peer misses its rejoin budget, rebalance
+/// back toward the pure layout when it returns.  Because every
+/// [`GridOp`] task output is a pure function of the op and the block
+/// data, re-placement never changes results — only who computes them.
+///
+/// Maps are only used with [`Ownership::Contiguous`] (the negotiated
+/// sliced-wire default), where `Ownership::owner` gives the cell owner
+/// for *every* op kind, so a pure map is exactly interchangeable with
+/// the functional form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CellMap {
+    slots: Vec<u32>,
+}
+
+impl CellMap {
+    /// The map matching `ownership` exactly: slot of cell `i` is
+    /// `ownership.owner(i, k, n)`.
+    pub fn pure(ownership: Ownership, k: usize, n: usize) -> CellMap {
+        CellMap { slots: (0..k).map(|i| ownership.owner(i, k, n) as u32).collect() }
+    }
+
+    /// The pure layout with every dead slot's cells re-dealt round-robin
+    /// (in ascending cell order) across the surviving slots.  With no
+    /// dead slots this *is* the pure map.
+    pub fn rebalanced(ownership: Ownership, k: usize, n: usize, dead: &[bool]) -> CellMap {
+        let mut map = CellMap::pure(ownership, k, n);
+        let alive: Vec<u32> =
+            (0..n).filter(|&e| !dead.get(e).copied().unwrap_or(false)).map(|e| e as u32).collect();
+        if alive.is_empty() || alive.len() == n {
+            return map;
+        }
+        let mut r = 0usize;
+        for slot in map.slots.iter_mut() {
+            if dead.get(*slot as usize).copied().unwrap_or(false) {
+                *slot = alive[r % alive.len()];
+                r += 1;
+            }
+        }
+        map
+    }
+
+    /// Executor slot owning `cell`.
+    pub fn slot(&self, cell: usize) -> usize {
+        self.slots[cell] as usize
+    }
+
+    /// Number of cells covered.
+    pub fn k(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True iff this map equals the pure layout for `ownership`.
+    pub fn is_pure(&self, ownership: Ownership, n: usize) -> bool {
+        let k = self.slots.len();
+        self.slots.iter().enumerate().all(|(i, &s)| s as usize == ownership.owner(i, k, n))
+    }
+
+    /// Append the slot table to a wire body (`[k: u32][slot: u32]*k`).
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        crate::util::bytes::put_u32(buf, self.slots.len() as u32);
+        for &s in &self.slots {
+            crate::util::bytes::put_u32(buf, s);
+        }
+    }
+
+    /// Read a slot table written by [`CellMap::encode`]; every slot must
+    /// be below `n_execs`.
+    pub fn decode(r: &mut crate::util::bytes::ByteReader<'_>, n_execs: usize) -> Result<CellMap> {
+        let k = r.u32()? as usize;
+        if k > (1 << 24) {
+            anyhow::bail!("corrupt cell map: {k} cells is implausible");
+        }
+        let mut slots = Vec::with_capacity(k);
+        for cell in 0..k {
+            let s = r.u32()?;
+            if s as usize >= n_execs.max(1) {
+                anyhow::bail!("corrupt cell map: cell {cell} -> slot {s} of {n_execs} executors");
+            }
+            slots.push(s);
+        }
+        Ok(CellMap { slots })
+    }
+}
+
 /// Which grid axis an op's gathered slab is reduced over (see
 /// [`GridOp::fold_axis`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -791,6 +881,60 @@ mod tests {
 
     fn fixture() -> (crate::data::Dataset, Grid) {
         (SyntheticDense::paper_part1(2, 3, 14, 9, 0.1, 5).build(), Grid::new(2, 3))
+    }
+
+    #[test]
+    fn pure_cell_map_matches_functional_ownership() {
+        for own in [Ownership::RoundRobin, Ownership::Contiguous] {
+            for (k, n) in [(6usize, 3usize), (7, 3), (4, 1), (5, 8)] {
+                let map = CellMap::pure(own, k, n);
+                assert_eq!(map.k(), k);
+                assert!(map.is_pure(own, n));
+                for i in 0..k {
+                    assert_eq!(map.slot(i), own.owner(i, k, n), "{own:?} k={k} n={n} cell {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebalanced_map_redeal_is_balanced_and_survivor_only() {
+        let own = Ownership::Contiguous;
+        let (k, n) = (8usize, 4usize);
+        let dead = vec![false, true, false, true];
+        let map = CellMap::rebalanced(own, k, n, &dead);
+        assert!(!map.is_pure(own, n));
+        let mut counts = vec![0usize; n];
+        for i in 0..k {
+            let s = map.slot(i);
+            assert!(!dead[s], "cell {i} mapped to dead slot {s}");
+            counts[s] += 1;
+            // surviving owners keep their pure cells untouched
+            if !dead[own.owner(i, k, n)] {
+                assert_eq!(s, own.owner(i, k, n));
+            }
+        }
+        // 4 orphans re-dealt round-robin over the 2 survivors: 2 each
+        assert_eq!(counts, vec![4, 0, 4, 0]);
+        // no dead slots => exactly the pure map
+        assert_eq!(CellMap::rebalanced(own, k, n, &[false; 4]), CellMap::pure(own, k, n));
+    }
+
+    #[test]
+    fn cell_map_round_trips_and_rejects_bad_slots() {
+        let map = CellMap::rebalanced(Ownership::Contiguous, 7, 3, &[false, true, false]);
+        let mut buf = Vec::new();
+        map.encode(&mut buf);
+        let back =
+            CellMap::decode(&mut crate::util::bytes::ByteReader::new(&buf), 3).unwrap();
+        assert_eq!(back, map);
+        // a slot at or past n_execs must be rejected
+        assert!(CellMap::decode(&mut crate::util::bytes::ByteReader::new(&buf), 2).is_err());
+        // truncated table
+        assert!(
+            CellMap::decode(&mut crate::util::bytes::ByteReader::new(&buf[..buf.len() - 2]), 3)
+                .is_err()
+        );
     }
 
     #[test]

@@ -1,0 +1,387 @@
+//! Seeded network-fault injection for the dist wire path.
+//!
+//! Chaos lives on the *sending* side of an executor (or in the
+//! [`chaosproxy`] TCP forwarder) and perturbs outgoing frames
+//! deterministically: the same `seed=` produces the same fault schedule
+//! run after run, which is what lets `tests/dist_recovery.rs` assert
+//! exact recovery counters instead of "it usually survives".
+//!
+//! Fault classes (all optional, composable):
+//!
+//! * `delay=MS` — sleep before each eligible frame (a trickling link).
+//! * `drop=P`  — with probability P, shut the connection down instead
+//!   of writing (a crash/reset as the driver sees it).
+//! * `trunc=P` — with probability P, write a deliberately truncated
+//!   frame and then shut down (a mid-frame cut).
+//! * `partition=P` — with probability P, flip into a *one-way*
+//!   partition: every later outgoing frame is silently swallowed while
+//!   the inbound direction keeps flowing (the classic half-open link).
+//!
+//! `after=N` skips the first N frames (faults only make sense once the
+//! session is up), and `window=W` limits eligibility to frames
+//! `[after, after+W)` so a test can rig exactly one faulty frame.
+//!
+//! The shim is plumbed as an `Option<&Mutex<ChaosState>>` — `None`
+//! everywhere in production, so the healthy wire path pays one pointer
+//! test per frame.
+
+use super::wire::{self, Tag};
+use crate::util::rng::Xoshiro;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::Mutex;
+
+/// Parsed `--chaos` parameters (see the module docs for semantics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosConfig {
+    /// RNG seed: the whole fault schedule is a pure function of it.
+    pub seed: u64,
+    /// Frames to pass through untouched before faults become eligible.
+    pub after: u64,
+    /// Number of eligible frames from `after` on (default: unbounded).
+    pub window: u64,
+    /// Per-frame delay in milliseconds.
+    pub delay_ms: u64,
+    /// Probability of dropping the connection instead of writing.
+    pub drop: f64,
+    /// Probability of writing a truncated frame, then dropping.
+    pub trunc: f64,
+    /// Probability of flipping into a persistent one-way partition.
+    pub partition: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 1,
+            after: 0,
+            window: u64::MAX,
+            delay_ms: 0,
+            drop: 0.0,
+            trunc: 0.0,
+            partition: 0.0,
+        }
+    }
+}
+
+fn parse_prob(key: &str, val: &str) -> Result<f64> {
+    let p: f64 = val.parse().map_err(|_| anyhow::anyhow!("bad chaos parameter {key}='{val}'"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("chaos {key} must be in [0, 1], got '{val}'");
+    }
+    Ok(p)
+}
+
+impl ChaosConfig {
+    /// Parse a `seed=N,delay=MS,drop=P,trunc=P,partition=P,after=N,window=W`
+    /// list (any subset, any order).
+    pub fn parse(spec: &str) -> Result<ChaosConfig> {
+        let mut cfg = ChaosConfig::default();
+        for kv in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let (key, val) = kv.split_once('=').unwrap_or((kv, ""));
+            let (key, val) = (key.trim(), val.trim());
+            let bad = || anyhow::anyhow!("bad chaos parameter {key}='{val}'");
+            match key {
+                "seed" => cfg.seed = val.parse().map_err(|_| bad())?,
+                "after" => cfg.after = val.parse().map_err(|_| bad())?,
+                "window" => cfg.window = val.parse().map_err(|_| bad())?,
+                "delay" | "delay_ms" => cfg.delay_ms = val.parse().map_err(|_| bad())?,
+                "drop" => cfg.drop = parse_prob(key, val)?,
+                "trunc" => cfg.trunc = parse_prob(key, val)?,
+                "partition" => cfg.partition = parse_prob(key, val)?,
+                other => bail!(
+                    "unknown chaos parameter '{other}' \
+                     (expected seed/after/window/delay/drop/trunc/partition)"
+                ),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Per-process chaos state: the config plus the deterministic frame
+/// counter and RNG it drives.  Shared across connections (behind a
+/// `Mutex`) so the schedule spans reconnects — frame N is frame N no
+/// matter how many sessions it took to get there.
+#[derive(Debug)]
+pub struct ChaosState {
+    cfg: ChaosConfig,
+    rng: Xoshiro,
+    frames: u64,
+    partitioned: bool,
+}
+
+impl ChaosState {
+    pub fn new(cfg: ChaosConfig) -> ChaosState {
+        let rng = Xoshiro::new(cfg.seed);
+        ChaosState { cfg, rng, frames: 0, partitioned: false }
+    }
+}
+
+/// What `chaos_write` decided to do to one frame.
+enum Fault {
+    Clean,
+    Delay(u64),
+    Swallow,
+    Drop,
+    Trunc { delay_ms: u64 },
+}
+
+/// Shorthand for the optional shim threaded through the executor.
+pub type Chaos<'a> = Option<&'a Mutex<ChaosState>>;
+
+/// Write one frame through the chaos shim.  With `chaos == None` this
+/// is exactly [`wire::write_frame`].  Returns the bytes the *peer
+/// believes* were sent (header + full body) even when the frame was
+/// swallowed by a partition, so byte accounting stays consistent on the
+/// healthy side.
+pub fn chaos_write(
+    stream: &mut TcpStream,
+    tag: Tag,
+    body: &[u8],
+    chaos: Chaos<'_>,
+) -> Result<usize> {
+    let Some(state) = chaos else {
+        return wire::write_frame(stream, tag, body);
+    };
+    // decide under the lock, act (sleep/write) outside it
+    let fault = {
+        let mut st = state.lock().unwrap_or_else(|e| e.into_inner());
+        let idx = st.frames;
+        st.frames += 1;
+        if st.partitioned {
+            Fault::Swallow
+        } else if idx < st.cfg.after {
+            Fault::Clean
+        } else {
+            let eligible = idx - st.cfg.after < st.cfg.window;
+            // one uniform per knob, always consumed, so the schedule of
+            // later frames does not depend on which faults are enabled
+            let (u_part, u_drop, u_trunc) = (st.rng.f64(), st.rng.f64(), st.rng.f64());
+            if eligible && u_part < st.cfg.partition {
+                st.partitioned = true;
+                Fault::Swallow
+            } else if eligible && u_drop < st.cfg.drop {
+                Fault::Drop
+            } else if eligible && u_trunc < st.cfg.trunc {
+                Fault::Trunc { delay_ms: st.cfg.delay_ms }
+            } else {
+                Fault::Delay(st.cfg.delay_ms)
+            }
+        }
+    };
+    match fault {
+        Fault::Clean => wire::write_frame(stream, tag, body),
+        Fault::Delay(0) => wire::write_frame(stream, tag, body),
+        Fault::Delay(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            wire::write_frame(stream, tag, body)
+        }
+        Fault::Swallow => {
+            // one-way partition: outbound silently vanishes, inbound
+            // (handled elsewhere) keeps flowing
+            Ok(5 + body.len())
+        }
+        Fault::Drop => {
+            stream.shutdown(Shutdown::Both).ok();
+            bail!("chaos: dropped connection before {tag:?} frame");
+        }
+        Fault::Trunc { delay_ms } => {
+            if delay_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+            }
+            let mut header = [0u8; 5];
+            header[..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
+            header[4] = tag as u8;
+            // cut mid-body (or mid-header for tiny frames): the peer
+            // sees a clean EOF partway through a promised frame
+            if body.len() >= 2 {
+                stream.write_all(&header).context("chaos trunc header")?;
+                stream.write_all(&body[..body.len() / 2]).context("chaos trunc body")?;
+            } else {
+                stream.write_all(&header[..3]).context("chaos trunc header")?;
+            }
+            stream.flush().ok();
+            stream.shutdown(Shutdown::Both).ok();
+            bail!("chaos: truncated {tag:?} frame");
+        }
+    }
+}
+
+/// A standalone chaos TCP forwarder: `ddopt chaosproxy LISTEN CONNECT
+/// --chaos ...`.  Driver→executor bytes are pumped through verbatim;
+/// executor→driver traffic is re-framed and pushed through the same
+/// [`chaos_write`] shim as an in-executor `--chaos`, so faults can be
+/// injected in front of an *unmodified* executor binary.
+pub fn chaosproxy(listen: &str, connect: &str, cfg: ChaosConfig) -> Result<()> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("chaosproxy bind {listen}"))?;
+    println!("chaosproxy listening on {} -> {}", listener.local_addr()?, connect);
+    let state = std::sync::Arc::new(Mutex::new(ChaosState::new(cfg)));
+    for conn in listener.incoming() {
+        let down = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("chaosproxy accept error: {e}");
+                continue;
+            }
+        };
+        let up = match TcpStream::connect(connect) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("chaosproxy: upstream {connect} unreachable: {e}");
+                continue;
+            }
+        };
+        down.set_nodelay(true).ok();
+        up.set_nodelay(true).ok();
+        // driver -> executor: raw byte pump, no faults
+        {
+            let (mut from, to) = (down.try_clone()?, up.try_clone()?);
+            std::thread::spawn(move || {
+                let mut to = to;
+                let _ = std::io::copy(&mut from, &mut to);
+                to.shutdown(Shutdown::Write).ok();
+            });
+        }
+        // executor -> driver: frame-level pump through the chaos shim
+        {
+            let state = state.clone();
+            let (mut from, mut to) = (up, down);
+            std::thread::spawn(move || {
+                let mut buf = Vec::new();
+                loop {
+                    let tag = match wire::read_frame(&mut from, &mut buf) {
+                        Ok((tag, _)) => tag,
+                        Err(_) => break,
+                    };
+                    if chaos_write(&mut to, tag, &buf, Some(&state)).is_err() {
+                        break;
+                    }
+                }
+                to.shutdown(Shutdown::Write).ok();
+                from.shutdown(Shutdown::Both).ok();
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Parse the optional `--chaos` flag value into the shared state the
+/// executor's write path consumes.
+pub fn state_from_flag(spec: Option<&str>) -> Result<Option<Mutex<ChaosState>>> {
+    Ok(match spec {
+        Some(s) => Some(Mutex::new(ChaosState::new(ChaosConfig::parse(s)?))),
+        None => None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        let cfg = ChaosConfig::parse("seed=7,delay=250,drop=0.5,trunc=0.25,partition=1,after=3,window=2")
+            .unwrap();
+        assert_eq!(
+            cfg,
+            ChaosConfig {
+                seed: 7,
+                after: 3,
+                window: 2,
+                delay_ms: 250,
+                drop: 0.5,
+                trunc: 0.25,
+                partition: 1.0,
+            }
+        );
+        assert_eq!(ChaosConfig::parse("").unwrap(), ChaosConfig::default());
+        assert!(ChaosConfig::parse("drop=1.5").is_err());
+        assert!(ChaosConfig::parse("seed=abc").is_err());
+        assert!(ChaosConfig::parse("bogus=1").is_err());
+    }
+
+    #[test]
+    fn clean_frames_pass_through_and_schedule_is_deterministic() {
+        let (mut tx, mut rx) = loopback_pair();
+        let state = Mutex::new(ChaosState::new(ChaosConfig::parse("seed=5").unwrap()));
+        let n = chaos_write(&mut tx, Tag::StageAck, b"xyz", Some(&state)).unwrap();
+        assert_eq!(n, 8);
+        let mut body = Vec::new();
+        let (tag, _) = wire::read_frame(&mut rx, &mut body).unwrap();
+        assert_eq!(tag, Tag::StageAck);
+        assert_eq!(body, b"xyz");
+
+        // same seed, same per-frame fault decisions across two states
+        let cfg = ChaosConfig::parse("seed=9,drop=0.5").unwrap();
+        let decisions = |cfg: ChaosConfig| {
+            let st = Mutex::new(ChaosState::new(cfg));
+            (0..32)
+                .map(|_| {
+                    let (mut tx, _rx) = loopback_pair();
+                    chaos_write(&mut tx, Tag::Bye, b"", Some(&st)).is_ok()
+                })
+                .collect::<Vec<bool>>()
+        };
+        let a = decisions(cfg.clone());
+        assert_eq!(a, decisions(cfg));
+        assert!(a.contains(&true) && a.contains(&false), "p=0.5 over 32 frames: {a:?}");
+    }
+
+    #[test]
+    fn partition_swallows_writes_forever_after_tripping() {
+        let (mut tx, mut rx) = loopback_pair();
+        let state =
+            Mutex::new(ChaosState::new(ChaosConfig::parse("partition=1,after=1").unwrap()));
+        // frame 0: before `after`, delivered
+        chaos_write(&mut tx, Tag::Bye, b"", Some(&state)).unwrap();
+        // frame 1 trips the partition; it and everything after report
+        // success but never hit the wire
+        assert_eq!(chaos_write(&mut tx, Tag::Bye, b"abcd", Some(&state)).unwrap(), 9);
+        chaos_write(&mut tx, Tag::Bye, b"", Some(&state)).unwrap();
+        drop(tx);
+        let mut all = Vec::new();
+        rx.read_to_end(&mut all).unwrap();
+        assert_eq!(all.len(), 5, "only the pre-partition frame arrived: {all:?}");
+    }
+
+    #[test]
+    fn truncation_cuts_the_frame_and_kills_the_stream() {
+        let (mut tx, mut rx) = loopback_pair();
+        let state =
+            Mutex::new(ChaosState::new(ChaosConfig::parse("trunc=1,window=1").unwrap()));
+        let err = chaos_write(&mut tx, Tag::StepResult, &[0u8; 64], Some(&state)).unwrap_err();
+        assert!(err.to_string().contains("chaos"), "{err}");
+        let mut all = Vec::new();
+        rx.read_to_end(&mut all).unwrap();
+        assert_eq!(all.len(), 5 + 32, "header + half the body");
+        // the reader sees a hard error, not a short success
+        let mut cur = std::io::Cursor::new(all);
+        let mut body = Vec::new();
+        assert!(wire::read_frame(&mut cur, &mut body).is_err());
+    }
+
+    #[test]
+    fn window_limits_eligibility() {
+        // trunc=1 but window=1 starting at frame 2: frames 0,1 and 3+ clean
+        let state = Mutex::new(ChaosState::new(
+            ChaosConfig::parse("trunc=1,after=2,window=1").unwrap(),
+        ));
+        for i in 0..5 {
+            let (mut tx, _rx) = loopback_pair();
+            let r = chaos_write(&mut tx, Tag::Bye, b"hello!", Some(&state));
+            assert_eq!(r.is_err(), i == 2, "frame {i}: {r:?}");
+        }
+    }
+}

@@ -61,20 +61,53 @@
 //! capability (a v2 peer, or `--dist-wire broadcast`) failures keep the
 //! pre-v3 fail-fast behavior.  Recovery counters land in the superstep's
 //! [`WireRecord`].
+//!
+//! **Elastic degraded mode** (wire revision 4, negotiated via
+//! [`wire::CAP_ELASTIC`]): when an executor misses the rejoin budget
+//! *entirely*, the driver degrades instead of dying.  Cell placement is
+//! reified as an explicit [`CellMap`] table, re-dealt over the survivors
+//! ([`CellMap::rebalanced`]), and re-negotiated with the fleet through
+//! `CellMap` frames that also carry the orphaned blocks each survivor
+//! must newly stage (encoded from the driver's partition, the same bytes
+//! the original Stage frame shipped).  The interrupted superstep is then
+//! replayed under the new placement: ops are pure functions of the op
+//! descriptor and the block data, so *where* a task runs never changes
+//! its bits — the run continues bitwise-identically on N−1 executors.
+//! The degrade is symmetric: every superstep entry gives dead peers one
+//! cheap (250ms) readmission attempt, and a returning executor is
+//! restaged and the map rebalanced back toward the pure layout at that
+//! superstep boundary.  `degraded_executors` in each [`WireRecord`]
+//! tracks the fleet's health over time.
+//!
+//! **Speculative re-execution** (`--dist-spec`, negotiated via
+//! [`wire::CAP_SPEC`]): the driver watches each gather; once a quantile
+//! of the fleet has replied and the laggards have overstayed a multiple
+//! of the slowest finisher's time, it dispatches `SpecStep` backup
+//! copies of the lagging executors' task lists to idle finishers chosen
+//! by per-executor, per-op-kind latency EWMAs.  First valid result wins:
+//! a backup that beats its primary has its reply adopted wholesale and
+//! the primary's eventual duplicate is drained and discarded (the
+//! connection stays frame-aligned); a primary that finishes first makes
+//! the backup's reply the duplicate.  Backups run on the block replicas
+//! the `CellMap` negotiation pre-staged (each cell is mirrored on the
+//! next alive slot), so speculation costs no block movement at dispatch
+//! time.  `spec_launched`/`spec_won` land in the superstep's
+//! [`WireRecord`].
 
 use super::ops;
 use super::wire::{self, Tag};
 use crate::cluster::{
-    ClusterBackend, ClusterConfig, FoldAxis, FoldEntry, GridOp, Ownership, SimClock,
-    SimCluster, WireMode,
+    CellMap, ClusterBackend, ClusterConfig, FoldAxis, FoldEntry, GridOp, Ownership,
+    SimClock, SimCluster, WireMode,
 };
 use crate::data::{encode_block, Partitioned};
 use crate::metrics::WireRecord;
 use crate::runtime::StagedGrid;
 use crate::util::bytes::{self, ByteReader};
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 /// Default per-read socket timeout — generous for loopback supersteps,
@@ -86,12 +119,29 @@ use std::time::{Duration, Instant};
 /// deadline.
 const DEFAULT_READ_TIMEOUT_SECS: u64 = 60;
 
-fn read_timeout() -> Option<Duration> {
-    let secs = std::env::var("DDOPT_DIST_READ_TIMEOUT_SECS")
-        .ok()
-        .and_then(|v| v.trim().parse::<u64>().ok())
-        .unwrap_or(DEFAULT_READ_TIMEOUT_SECS);
-    (secs > 0).then(|| Duration::from_secs(secs))
+/// Read a whole-seconds knob from the environment.  An *absent* variable
+/// means the default; a *present but unparseable* one is a hard error —
+/// silently running with the default after the operator set
+/// `DDOPT_DIST_READ_TIMEOUT_SECS=1O` (a typo'd `10`) cost real debugging
+/// time, so the misconfiguration now fails the run at startup, naming
+/// the variable and the value.
+fn env_secs(var: &'static str, default: u64) -> Result<u64> {
+    match std::env::var(var) {
+        Err(std::env::VarError::NotPresent) => Ok(default),
+        Err(std::env::VarError::NotUnicode(v)) => {
+            bail!("invalid {var}={v:?}: not valid unicode (want whole seconds, 0 to disable)")
+        }
+        Ok(v) => v.trim().parse::<u64>().map_err(|_| {
+            anyhow::anyhow!(
+                "invalid {var}={v:?}: want whole seconds (0 to disable)"
+            )
+        }),
+    }
+}
+
+fn read_timeout() -> Result<Option<Duration>> {
+    let secs = env_secs("DDOPT_DIST_READ_TIMEOUT_SECS", DEFAULT_READ_TIMEOUT_SECS)?;
+    Ok((secs > 0).then(|| Duration::from_secs(secs)))
 }
 
 /// Total budget for rejoining the fleet after an exchange failure —
@@ -100,12 +150,9 @@ fn read_timeout() -> Option<Duration> {
 /// recovery even when the capability was negotiated.
 const DEFAULT_REJOIN_TIMEOUT_SECS: u64 = 10;
 
-fn rejoin_timeout() -> Option<Duration> {
-    let secs = std::env::var("DDOPT_DIST_REJOIN_TIMEOUT_SECS")
-        .ok()
-        .and_then(|v| v.trim().parse::<u64>().ok())
-        .unwrap_or(DEFAULT_REJOIN_TIMEOUT_SECS);
-    (secs > 0).then(|| Duration::from_secs(secs))
+fn rejoin_timeout() -> Result<Option<Duration>> {
+    let secs = env_secs("DDOPT_DIST_REJOIN_TIMEOUT_SECS", DEFAULT_REJOIN_TIMEOUT_SECS)?;
+    Ok((secs > 0).then(|| Duration::from_secs(secs)))
 }
 
 /// Superstep retry ceiling per `grid_exec` call: recovery guarantees "at
@@ -113,10 +160,25 @@ fn rejoin_timeout() -> Option<Duration> {
 /// *same* superstep get this many chances before the run gives up.
 const MAX_STEP_RETRIES: u32 = 2;
 
+/// Per-superstep readmission budget for a degraded peer: one cheap
+/// bounded attempt, so a peer that is still down costs milliseconds per
+/// superstep, not a rejoin budget.
+const READMIT_ATTEMPT: Duration = Duration::from_millis(250);
+
+/// Floor on the speculation trigger: never second-guess a laggard that
+/// has been outstanding for less than this many seconds (loopback noise
+/// territory).
+const SPEC_MIN_STALL_SECS: f64 = 0.050;
+
 struct ExecConn {
     stream: TcpStream,
     addr: String,
     threads: usize,
+    /// False once the peer missed its rejoin budget and its cells were
+    /// re-dealt to the survivors; flips back on readmission.  Dead
+    /// connections stay in the vec (slot indices are wire-visible) but
+    /// are never written to or read from.
+    alive: bool,
 }
 
 /// The distributed cluster backend (see module docs).
@@ -128,7 +190,8 @@ pub struct DistCluster {
     /// Effective capability mask: offered by the driver's [`WireMode`],
     /// ANDed over every executor's ack.
     caps: u32,
-    /// Cell→executor layout the whole session runs under.
+    /// Cell→executor layout the whole session runs under (the pure,
+    /// functional form; `cell_map` overrides it while degraded).
     ownership: Ownership,
     wire_log: Vec<WireRecord>,
     step_id: u64,
@@ -168,6 +231,30 @@ pub struct DistCluster {
     retries: u64,
     /// Rejoin handshakes performed across all recoveries (run total).
     rejoins: u64,
+    /// Explicit placement while it diverges from the pure layout
+    /// (`None` = pure: [`GridOp::owner`] is authoritative).
+    cell_map: Option<CellMap>,
+    /// Per-executor set of cells known staged on that peer (grows as
+    /// `CellMap` frames ship blocks; reset to the pure-owned set when a
+    /// restarted peer is restaged).
+    staged_cells: Vec<Vec<bool>>,
+    /// Whether the fleet has ever negotiated a `CellMap` (once true,
+    /// every recovery re-syncs the layout, even back to pure).
+    map_active: bool,
+    /// Speculative re-execution enabled (`--dist-spec` plus the
+    /// capability superset it needs).
+    spec: bool,
+    /// Gather-completion quantile that arms the speculation trigger.
+    spec_quantile: f64,
+    /// Maximum backup copies in flight per lagging executor.
+    spec_copies: usize,
+    /// Per-(executor, op-kind) gather-latency EWMA, used to pick the
+    /// historically fastest idle peer as the backup.
+    spec_ewma: HashMap<(usize, &'static str), f64>,
+    /// Speculative dispatches across the run.
+    spec_launched: u64,
+    /// Adopted backup results across the run.
+    spec_won: u64,
 }
 
 impl DistCluster {
@@ -183,6 +270,10 @@ impl DistCluster {
         if addrs.is_empty() {
             bail!("--cluster dist wants at least one executor address");
         }
+        // validate both timeout knobs eagerly: a typo'd env var must
+        // fail the run at startup, not mid-recovery
+        let read_to = read_timeout()?;
+        rejoin_timeout()?;
         let n_execs = addrs.len();
         let offered = match config.wire {
             WireMode::Sliced => wire::CAPS_SUPPORTED,
@@ -203,7 +294,7 @@ impl DistCluster {
                 .with_context(|| format!("connect to executor {i} at {addr}"))?;
             stream.set_nodelay(true).ok();
             stream
-                .set_read_timeout(read_timeout())
+                .set_read_timeout(read_to)
                 .with_context(|| format!("set read timeout on executor {i} at {addr}"))?;
             let mut hello = Vec::new();
             bytes::put_u32(&mut hello, wire::PROTO_MAGIC);
@@ -236,7 +327,7 @@ impl DistCluster {
             // the fleet runs at the AND of every ack: one stale executor
             // downgrades the session instead of breaking it
             caps &= acked;
-            conns.push(ExecConn { stream, addr: addr.clone(), threads });
+            conns.push(ExecConn { stream, addr: addr.clone(), threads, alive: true });
         }
         let ownership = if caps & wire::CAP_CONTIG_FOLD != 0 {
             Ownership::Contiguous
@@ -249,6 +340,7 @@ impl DistCluster {
         // bodies are kept verbatim: a rejoin after an executor restart
         // re-ships exactly these bytes, no re-derivation.
         let mut stage_bodies: Vec<Vec<u8>> = Vec::with_capacity(n_execs);
+        let mut staged_cells: Vec<Vec<bool>> = Vec::with_capacity(n_execs);
         for (i, conn) in conns.iter_mut().enumerate() {
             let mut body = Vec::new();
             bytes::put_u8(&mut body, ownership.to_u8());
@@ -257,18 +349,32 @@ impl DistCluster {
                 .filter(|&cell| ownership.owner(cell, part.grid.k(), n_execs) == i)
                 .collect();
             bytes::put_u32(&mut body, owned.len() as u32);
+            let mut staged = vec![false; part.grid.k()];
             for &cell in &owned {
                 bytes::put_usize(&mut body, cell);
                 encode_block(&part.blocks[cell], &mut body);
+                staged[cell] = true;
             }
             scatter[i] += wire::write_frame(&mut conn.stream, Tag::Stage, &body)
                 .with_context(|| format!("stage blocks on executor {i} at {}", conn.addr))?;
             stage_bodies.push(body);
+            staged_cells.push(staged);
         }
         for (i, conn) in conns.iter_mut().enumerate() {
             gather[i] += wire::expect_frame(&mut conn.stream, &mut recv_buf, Tag::StageAck)
                 .with_context(|| format!("stage ack from executor {i} at {}", conn.addr))?;
         }
+
+        // speculation wants the whole v4 surface: sliced per-executor
+        // payloads (a backup copy is a sliced frame), contiguous cell
+        // ownership, CellMap replica staging, and the SpecStep frame
+        let spec_caps = wire::CAP_SLICED
+            | wire::CAP_CONTIG_FOLD
+            | wire::CAP_ELASTIC
+            | wire::CAP_SPEC;
+        let spec = config.dist_spec && n_execs > 1 && caps & spec_caps == spec_caps;
+        let spec_quantile = config.scenario.spec_quantile;
+        let spec_copies = config.scenario.spec_copies;
 
         let wire_log = vec![WireRecord {
             step: 0,
@@ -281,8 +387,11 @@ impl DistCluster {
             gather,
             retries: 0,
             rejoins: 0,
+            degraded_executors: 0,
+            spec_launched: 0,
+            spec_won: 0,
         }];
-        Ok(DistCluster {
+        let mut cluster = DistCluster {
             sim: SimCluster::new(config),
             conns,
             caps,
@@ -305,7 +414,23 @@ impl DistCluster {
             admm_prepared: false,
             retries: 0,
             rejoins: 0,
-        })
+            cell_map: None,
+            staged_cells,
+            map_active: false,
+            spec,
+            spec_quantile,
+            spec_copies,
+            spec_ewma: HashMap::new(),
+            spec_launched: 0,
+            spec_won: 0,
+        };
+        if cluster.spec {
+            // pre-stage the block replicas speculation dispatches
+            // against (each cell mirrored on the next alive slot): paid
+            // once at connect time, not on the critical gather path
+            cluster.sync_layout(part)?;
+        }
+        Ok(cluster)
     }
 
     /// Total executor worker threads (display only).
@@ -326,6 +451,293 @@ impl DistCluster {
     pub fn ownership(&self) -> Ownership {
         self.ownership
     }
+
+    /// Executors currently running degraded (cells re-dealt to the
+    /// survivors).
+    pub fn degraded_executors(&self) -> usize {
+        self.conns.iter().filter(|c| !c.alive).count()
+    }
+
+    /// Whether the fleet can degrade onto survivors at all: the elastic
+    /// capability was negotiated and the session runs the contiguous
+    /// cell layout a [`CellMap`] reifies.
+    fn elastic(&self) -> bool {
+        self.caps & wire::CAP_ELASTIC != 0 && self.ownership == Ownership::Contiguous
+    }
+
+    /// The pure-owned cell set of executor `i` — what a freshly restaged
+    /// peer holds.
+    fn pure_staged(&self, i: usize, k: usize) -> Vec<bool> {
+        let n = self.conns.len();
+        (0..k).map(|cell| self.ownership.owner(cell, k, n) == i).collect()
+    }
+
+    /// Re-negotiate the cell placement with the live fleet: compute the
+    /// rebalanced [`CellMap`] for the current dead set, ship it to every
+    /// live executor in a `CellMap` frame together with whichever newly
+    /// required blocks that executor has not staged yet (orphans of dead
+    /// peers, or speculation replicas), and await the acks — pipelined,
+    /// like staging.  Layout traffic is control-plane: it is not charged
+    /// to any superstep's byte accounting.
+    fn sync_layout(&mut self, part: &Partitioned) -> Result<()> {
+        if !self.elastic() {
+            return Ok(());
+        }
+        let n = self.conns.len();
+        let k = part.grid.k();
+        let dead: Vec<bool> = self.conns.iter().map(|c| !c.alive).collect();
+        let map = CellMap::rebalanced(self.ownership, k, n, &dead);
+        // required[i][cell]: what executor i must hold under the new map
+        // — its mapped-owned cells, plus (with speculation) a replica of
+        // each cell on the next alive slot so a backup copy can run
+        // without block movement at dispatch time
+        let mut required = vec![vec![false; k]; n];
+        for cell in 0..k {
+            let owner = map.slot(cell);
+            required[owner][cell] = true;
+            if self.spec {
+                if let Some(rep) = next_alive(&dead, owner) {
+                    required[rep][cell] = true;
+                }
+            }
+        }
+        let mut bodies: Vec<Option<Vec<u8>>> = Vec::with_capacity(n);
+        for i in 0..n {
+            if dead[i] {
+                bodies.push(None);
+                continue;
+            }
+            let mut body = Vec::new();
+            bytes::put_u32(&mut body, wire::PROTO_MAGIC);
+            bytes::put_u64(&mut body, self.step_id);
+            bytes::put_u32(&mut body, n as u32);
+            map.encode(&mut body);
+            let missing: Vec<usize> = (0..k)
+                .filter(|&cell| required[i][cell] && !self.staged_cells[i][cell])
+                .collect();
+            bytes::put_u32(&mut body, missing.len() as u32);
+            for &cell in &missing {
+                bytes::put_usize(&mut body, cell);
+                encode_block(&part.blocks[cell], &mut body);
+            }
+            bodies.push(Some(body));
+        }
+        for (i, body) in bodies.iter().enumerate() {
+            if let Some(body) = body {
+                let conn = &mut self.conns[i];
+                wire::write_frame(&mut conn.stream, Tag::CellMap, body).with_context(|| {
+                    format!("ship cell map to executor {i} at {}", conn.addr)
+                })?;
+            }
+        }
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            if bodies[i].is_none() {
+                continue;
+            }
+            wire::expect_frame(&mut conn.stream, &mut self.recv_buf, Tag::CellMapAck)
+                .with_context(|| {
+                    format!("cell map ack from executor {i} at {}", conn.addr)
+                })?;
+        }
+        // staged sets grow only: a survivor keeps blocks it staged under
+        // older maps (harmless — it computes only its mapped tasks)
+        for i in 0..n {
+            if dead[i] {
+                continue;
+            }
+            for cell in 0..k {
+                if required[i][cell] {
+                    self.staged_cells[i][cell] = true;
+                }
+            }
+        }
+        self.map_active = true;
+        self.cell_map = if map.is_pure(self.ownership, n) { None } else { Some(map) };
+        Ok(())
+    }
+
+    /// Replay ADMM factorizations on the live fleet (pipelined like
+    /// `prepare_admm`) — called after any recovery or layout change once
+    /// the session has prepared them, since a restaged or re-mapped
+    /// executor factors its *current* cells.
+    fn replay_admm(&mut self) -> Result<()> {
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            if !conn.alive {
+                continue;
+            }
+            wire::write_frame(&mut conn.stream, Tag::PrepareAdmm, &[]).with_context(|| {
+                format!("replay admm factorization on executor {i} at {}", conn.addr)
+            })?;
+        }
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            if !conn.alive {
+                continue;
+            }
+            wire::expect_frame(&mut conn.stream, &mut self.recv_buf, Tag::PrepareAdmmAck)
+                .with_context(|| {
+                    format!("replay admm factorization on executor {i} at {}", conn.addr)
+                })?;
+        }
+        Ok(())
+    }
+
+    /// Give every degraded peer one cheap, bounded readmission attempt
+    /// (250ms each, errors swallowed — the peer is probably still down).
+    /// Any admission re-syncs the layout back toward the pure map and
+    /// replays ADMM factorizations.  Returns completed handshakes.
+    fn try_readmit(&mut self, part: &Partitioned) -> Result<u64> {
+        let n_execs = self.conns.len();
+        let mut admitted = 0u64;
+        for i in 0..n_execs {
+            if self.conns[i].alive {
+                continue;
+            }
+            match rejoin_one(
+                &self.addrs[i],
+                i,
+                n_execs,
+                self.token,
+                self.offered,
+                self.caps,
+                &self.stage_bodies[i],
+                self.step_id,
+                &mut self.recv_buf,
+                Some(READMIT_ATTEMPT),
+            ) {
+                Ok((conn, restaged)) => {
+                    if restaged {
+                        self.staged_cells[i] = self.pure_staged(i, part.grid.k());
+                    }
+                    self.conns[i] = conn;
+                    admitted += 1;
+                }
+                Err(_) => {} // still down; stay degraded, try next superstep
+            }
+        }
+        if admitted > 0 {
+            self.sync_layout(part)?;
+            if self.admm_prepared {
+                self.replay_admm()?;
+            }
+        }
+        Ok(admitted)
+    }
+
+    /// Tear down and rebuild the executor connections after a failed
+    /// exchange.  Slots are swept round-robin (one bounded attempt per
+    /// slot per sweep, capped backoff between sweeps) so a single dead
+    /// peer cannot monopolize the `DDOPT_DIST_REJOIN_TIMEOUT_SECS`
+    /// budget while its neighbors wait to rejoin.  A peer that misses
+    /// the budget is left degraded — its cells re-dealt to the survivors
+    /// via [`DistCluster::sync_layout`] — provided the elastic
+    /// capability was negotiated and at least one peer survives;
+    /// otherwise the recovery fails like pre-v4 code did.  Returns
+    /// completed handshakes.
+    fn recover_fleet(&mut self, part: &Partitioned, step_id: u64) -> Result<u64> {
+        let budget = rejoin_timeout()?.ok_or_else(|| {
+            anyhow::anyhow!("rejoin disabled (DDOPT_DIST_REJOIN_TIMEOUT_SECS=0)")
+        })?;
+        let deadline = Instant::now() + budget;
+        let n_execs = self.conns.len();
+        // drop every old connection first: executors notice the hangup
+        // and return to their accept loop, keeping the cached session
+        for conn in self.conns.iter_mut() {
+            conn.alive = false;
+            let _ = conn.stream.shutdown(Shutdown::Both);
+        }
+        let mut joined: Vec<Option<(ExecConn, bool)>> =
+            (0..n_execs).map(|_| None).collect();
+        let mut handshakes = 0u64;
+        let mut delay = Duration::from_millis(50);
+        let mut last_err: Option<anyhow::Error> = None;
+        loop {
+            for i in 0..n_execs {
+                if joined[i].is_some() {
+                    continue;
+                }
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                // cap each attempt so one unreachable peer cannot eat
+                // the whole budget inside a single connect or read
+                let limit = remaining.min(Duration::from_secs(1));
+                match rejoin_one(
+                    &self.addrs[i],
+                    i,
+                    n_execs,
+                    self.token,
+                    self.offered,
+                    self.caps,
+                    &self.stage_bodies[i],
+                    step_id,
+                    &mut self.recv_buf,
+                    Some(limit),
+                ) {
+                    Ok(c) => {
+                        handshakes += 1;
+                        joined[i] = Some(c);
+                    }
+                    Err(e) => last_err = Some(e),
+                }
+            }
+            if joined.iter().all(|j| j.is_some()) || Instant::now() >= deadline {
+                break;
+            }
+            let nap = delay.min(deadline.saturating_duration_since(Instant::now()));
+            if !nap.is_zero() {
+                std::thread::sleep(nap);
+            }
+            delay = (delay * 2).min(Duration::from_secs(1));
+        }
+        let missing: Vec<usize> = (0..n_execs).filter(|&i| joined[i].is_none()).collect();
+        if !missing.is_empty() {
+            if !self.elastic() {
+                let (i, addr) = (missing[0], &self.addrs[missing[0]]);
+                let base = last_err.unwrap_or_else(|| anyhow::anyhow!("no response"));
+                return Err(base).context(format!(
+                    "rejoin executor {i} at {addr} within {budget:?} \
+                     (no elastic capability to degrade onto survivors; \
+                     raise DDOPT_DIST_REJOIN_TIMEOUT_SECS?)"
+                ));
+            }
+            if missing.len() == n_execs {
+                let base = last_err.unwrap_or_else(|| anyhow::anyhow!("no response"));
+                return Err(base).context(format!(
+                    "no executor rejoined within {budget:?} \
+                     (raise DDOPT_DIST_REJOIN_TIMEOUT_SECS?)"
+                ));
+            }
+        }
+        for (i, j) in joined.into_iter().enumerate() {
+            if let Some((conn, restaged)) = j {
+                if restaged {
+                    // a restarted process was restaged from the saved
+                    // Stage body: it holds exactly its pure-owned cells
+                    self.staged_cells[i] = self.pure_staged(i, part.grid.k());
+                }
+                self.conns[i] = conn;
+            }
+        }
+        // degraded (someone missing) or previously re-mapped: the fleet
+        // needs the authoritative placement before the replay
+        if !missing.is_empty() || self.map_active {
+            self.sync_layout(part)?;
+        }
+        if self.admm_prepared {
+            self.replay_admm()?;
+        }
+        Ok(handshakes)
+    }
+}
+
+/// First alive slot after `from` in cyclic order (the speculation
+/// replica holder); `None` when `from` is the only survivor.
+fn next_alive(dead: &[bool], from: usize) -> Option<usize> {
+    let n = dead.len();
+    (1..n)
+        .map(|d| (from + d) % n)
+        .find(|&j| !dead.get(j).copied().unwrap_or(true))
 }
 
 impl ClusterBackend for DistCluster {
@@ -359,12 +771,18 @@ impl ClusterBackend for DistCluster {
         // possibly expensive — factorization is awaited, so the fleet
         // factors in parallel instead of N serialized round-trips
         for (i, conn) in self.conns.iter_mut().enumerate() {
+            if !conn.alive {
+                continue;
+            }
             scatter[i] += wire::write_frame(&mut conn.stream, Tag::PrepareAdmm, &[])
                 .with_context(|| {
                     format!("request admm factorization on executor {i} at {}", conn.addr)
                 })?;
         }
         for (i, conn) in self.conns.iter_mut().enumerate() {
+            if !conn.alive {
+                continue;
+            }
             gather[i] +=
                 wire::expect_frame(&mut conn.stream, &mut self.recv_buf, Tag::PrepareAdmmAck)
                     .with_context(|| {
@@ -383,6 +801,9 @@ impl ClusterBackend for DistCluster {
             gather,
             retries: 0,
             rejoins: 0,
+            degraded_executors: self.degraded_executors(),
+            spec_launched: 0,
+            spec_won: 0,
         });
         Ok(())
     }
@@ -408,70 +829,119 @@ impl ClusterBackend for DistCluster {
         let n_execs = self.conns.len();
         let sliced = self.caps & wire::CAP_SLICED != 0;
         let fold = self.caps & wire::CAP_CONTIG_FOLD != 0 && op.fold_axis() != FoldAxis::None;
-        let flags = if sliced { wire::STEP_FLAG_SLICED } else { 0 }
-            | if fold { wire::STEP_FLAG_FOLD } else { 0 };
+        let flags = (if sliced { wire::STEP_FLAG_SLICED } else { 0 })
+            | (if fold { wire::STEP_FLAG_FOLD } else { 0 });
 
-        // per-executor owned task lists (ascending by construction)
-        for list in self.owned_lists.iter_mut() {
-            list.clear();
-        }
-        for task in 0..n_tasks {
-            self.owned_lists[op.owner(part, task, n_execs, self.ownership)].push(task);
-        }
+        let mut step_retries = 0u64;
+        let mut step_rejoins = 0u64;
+        let mut step_spec_launched = 0usize;
+        let mut step_spec_won = 0usize;
 
-        // encode: one shared body (broadcast) or one per executor (sliced)
-        if sliced {
-            for (e, buf) in self.send_bufs.iter_mut().enumerate() {
-                buf.clear();
-                bytes::put_u64(buf, step_id);
-                bytes::put_u8(buf, flags);
-                ops::encode_op_sliced(&op, part, &self.owned_lists[e], buf);
+        // elastic readmission: a degraded peer gets one cheap attempt at
+        // each superstep boundary; success rebalances the map back
+        if self.conns.iter().any(|c| !c.alive) {
+            match self.try_readmit(part) {
+                Ok(got) => step_rejoins += got,
+                // a readmission that half-applied (say, a survivor died
+                // during the layout sync) leaves the fleet unusable:
+                // fall back to a full recovery, which rebuilds every
+                // connection and re-syncs the layout from scratch
+                Err(e) => {
+                    if self.caps & wire::CAP_REJOIN == 0
+                        || !matches!(rejoin_timeout(), Ok(Some(_)))
+                    {
+                        return Err(e);
+                    }
+                    let got = self
+                        .recover_fleet(part, step_id)
+                        .map_err(|re| e.context(format!("fleet rejoin also failed: {re:#}")))?;
+                    step_rejoins += got;
+                }
             }
-        } else {
-            self.send_buf.clear();
-            bytes::put_u64(&mut self.send_buf, step_id);
-            bytes::put_u8(&mut self.send_buf, flags);
-            ops::encode_op(&op, &mut self.send_buf);
         }
-        let bodies: Vec<&[u8]> = if sliced {
-            self.send_bufs.iter().map(|b| b.as_slice()).collect()
-        } else {
-            vec![self.send_buf.as_slice(); n_execs]
-        };
 
         // pipelined scatter + readiness-ordered gather, with fault
         // recovery: an I/O failure (dead executor, exchange deadline)
-        // rejoins the fleet and replays the superstep under the same
-        // step id — the op is a pure function of driver-side state, so
+        // rejoins the fleet — degrading onto the survivors if a peer
+        // misses the budget — and replays the superstep under the same
+        // step id: the op is a pure function of driver-side state, so
         // the retry recomputes bit-identical segments.  Reply *parse*
         // errors below stay fatal: retrying a lying executor is not
-        // recovery.
-        let mut step_retries = 0u64;
-        let mut step_rejoins = 0u64;
-        let exchange = loop {
-            match pipelined_exchange(&mut self.conns, &bodies, &mut self.recv_bufs, step_id) {
+        // recovery.  Owned lists and bodies are recomputed per attempt
+        // because a recovery can rewrite the cell map.
+        let mut exchange = loop {
+            // per-executor owned task lists (ascending by construction):
+            // the explicit map while degraded, the pure function otherwise
+            for list in self.owned_lists.iter_mut() {
+                list.clear();
+            }
+            for task in 0..n_tasks {
+                let owner = match &self.cell_map {
+                    Some(m) => m.slot(op.cell(part, task)),
+                    None => op.owner(part, task, n_execs, self.ownership),
+                };
+                self.owned_lists[owner].push(task);
+            }
+
+            // encode: one shared body (broadcast) or one per executor
+            if sliced {
+                for (e, buf) in self.send_bufs.iter_mut().enumerate() {
+                    buf.clear();
+                    if !self.conns[e].alive {
+                        continue;
+                    }
+                    bytes::put_u64(buf, step_id);
+                    bytes::put_u8(buf, flags);
+                    ops::encode_op_sliced(&op, part, &self.owned_lists[e], buf);
+                }
+            } else {
+                self.send_buf.clear();
+                bytes::put_u64(&mut self.send_buf, step_id);
+                bytes::put_u8(&mut self.send_buf, flags);
+                ops::encode_op(&op, &mut self.send_buf);
+            }
+
+            // the block scopes every borrow the exchange needs, so the
+            // recovery path below can take `&mut self` again
+            let attempt = {
+                let bodies: Vec<&[u8]> = if sliced {
+                    self.send_bufs.iter().map(|b| b.as_slice()).collect()
+                } else {
+                    vec![self.send_buf.as_slice(); n_execs]
+                };
+                let mut spec_ctx = if self.spec {
+                    Some(SpecCtx {
+                        op: &op,
+                        part,
+                        owned: &self.owned_lists,
+                        staged: &self.staged_cells,
+                        ewma: &mut self.spec_ewma,
+                        quantile: self.spec_quantile,
+                        copies: self.spec_copies,
+                    })
+                } else {
+                    None
+                };
+                pipelined_exchange(
+                    &mut self.conns,
+                    &bodies,
+                    &mut self.recv_bufs,
+                    step_id,
+                    spec_ctx.as_mut(),
+                )
+            };
+            match attempt {
                 Ok(ex) => break ex,
                 Err(e) => {
                     let recoverable = self.caps & wire::CAP_REJOIN != 0
                         && step_retries < MAX_STEP_RETRIES as u64
-                        && rejoin_timeout().is_some();
+                        && matches!(rejoin_timeout(), Ok(Some(_)));
                     if !recoverable {
                         return Err(e);
                     }
-                    let mut got = 0u64;
-                    recover_fleet(
-                        &mut self.conns,
-                        &self.addrs,
-                        self.token,
-                        self.offered,
-                        self.caps,
-                        &self.stage_bodies,
-                        self.admm_prepared,
-                        step_id,
-                        &mut self.recv_buf,
-                        &mut got,
-                    )
-                    .map_err(|re| e.context(format!("fleet rejoin also failed: {re:#}")))?;
+                    let got = self
+                        .recover_fleet(part, step_id)
+                        .map_err(|re| e.context(format!("fleet rejoin also failed: {re:#}")))?;
                     step_retries += 1;
                     step_rejoins += got;
                 }
@@ -479,6 +949,32 @@ impl ClusterBackend for DistCluster {
         };
         self.retries += step_retries;
         self.rejoins += step_rejoins;
+        step_spec_launched += exchange.spec_launched;
+        step_spec_won += exchange.spec_won;
+        self.spec_launched += exchange.spec_launched as u64;
+        self.spec_won += exchange.spec_won as u64;
+
+        // a lagging executor whose result was speculatively adopted
+        // still owes its (stale) reply: finish reading it in blocking
+        // mode so the connection is frame-aligned for the next
+        // superstep, and degrade the peer if it cannot even do that —
+        // this superstep is already complete either way
+        let mut drain_failed = false;
+        for i in 0..n_execs {
+            if let Some((st, buf)) = exchange.pending_drain[i].take() {
+                if drain_abandoned(&mut self.conns[i], i, st, buf).is_err() {
+                    self.conns[i].alive = false;
+                    let _ = self.conns[i].stream.shutdown(Shutdown::Both);
+                    drain_failed = true;
+                }
+            }
+        }
+        if drain_failed {
+            self.sync_layout(part)?;
+            if self.admm_prepared {
+                self.replay_admm()?;
+            }
+        }
 
         // parse replies in arrival order: every task's duration exactly
         // once, result segments (or validated folds) into the slabs
@@ -536,6 +1032,7 @@ impl ClusterBackend for DistCluster {
                                 i,
                                 n_execs,
                                 self.ownership,
+                                self.cell_map.as_ref(),
                                 fold,
                                 n_tasks,
                                 &mut self.folded_away,
@@ -593,6 +1090,9 @@ impl ClusterBackend for DistCluster {
             gather: exchange.gather,
             retries: step_retries as usize,
             rejoins: step_rejoins as usize,
+            degraded_executors: self.degraded_executors(),
+            spec_launched: step_spec_launched,
+            spec_won: step_spec_won,
         });
         match first_err {
             Some((_, e)) => Err(e),
@@ -644,6 +1144,9 @@ impl ClusterBackend for DistCluster {
         // orderly release: executors return to their accept loop; errors
         // are ignored (the executor may already be gone, which is fine)
         for conn in &mut self.conns {
+            if !conn.alive {
+                continue;
+            }
             if wire::write_frame(&mut conn.stream, Tag::Shutdown, &[]).is_ok() {
                 let _ = wire::expect_frame(&mut conn.stream, &mut self.recv_buf, Tag::Bye);
             }
@@ -655,14 +1158,24 @@ impl ClusterBackend for DistCluster {
 
 /// Outcome of one pipelined Step exchange.
 struct Exchange {
-    /// Bytes written per executor (header + body).
+    /// Bytes written per executor (header + body; speculative dispatches
+    /// land on their backup's row).  Degraded slots stay 0.
     scatter: Vec<usize>,
-    /// Bytes read per executor (header + body).
+    /// Bytes read per executor (header + body; an adopted backup reply
+    /// is attributed to the lagging slot it answered for).
     gather: Vec<usize>,
     /// Raw reply tag byte per executor (validated by the parser).
     tags: Vec<u8>,
     /// Executor indices in reply-completion order.
     arrival: Vec<usize>,
+    /// Per-executor partially-read stale primary reply (receive state +
+    /// buffered bytes) left behind when a speculative backup won — the
+    /// caller drains it in blocking mode after the exchange.
+    pending_drain: Vec<Option<(RecvState, Vec<u8>)>>,
+    /// Speculative backup dispatches this exchange.
+    spec_launched: usize,
+    /// Backup replies adopted over their lagging primary this exchange.
+    spec_won: usize,
 }
 
 /// Per-connection receive progress of the pipelined exchange.
@@ -675,30 +1188,66 @@ struct RecvState {
     done: bool,
 }
 
+/// Everything the in-exchange speculation machinery needs from the
+/// driver, borrowed field-disjointly so the exchange can still hold the
+/// connections mutably.
+struct SpecCtx<'a, 'b> {
+    op: &'a GridOp<'b>,
+    part: &'a Partitioned,
+    /// Per-executor owned task lists of this superstep (cell-map aware).
+    owned: &'a [Vec<usize>],
+    /// Per-executor staged-cell sets (a backup must hold replicas of
+    /// every cell the lagging peer's tasks touch).
+    staged: &'a [Vec<bool>],
+    /// Per-(executor, op-kind) gather-latency EWMA (updated on primary
+    /// completions, read to rank backup candidates).
+    ewma: &'a mut HashMap<(usize, &'static str), f64>,
+    quantile: f64,
+    copies: usize,
+}
+
+/// One speculative backup dispatch in flight: the backup executor is
+/// computing a copy of the lagging executor's task list, and its reply
+/// is being read on the backup's connection.
+struct SpecFlight {
+    backup: usize,
+    lagging: usize,
+    recv: RecvState,
+    buf: Vec<u8>,
+}
+
 /// Write every executor's Step frame and read every reply with
 /// nonblocking I/O: no read waits on an unfinished write, and replies
 /// complete in whatever order executors finish.  Blocking mode is
 /// restored on every exit path (the control-plane frames — acks,
-/// shutdown — use plain blocking I/O).
+/// shutdown — use plain blocking I/O).  With `spec`, lagging replies may
+/// be speculatively re-executed on idle peers (see module docs).
 fn pipelined_exchange(
     conns: &mut [ExecConn],
     bodies: &[&[u8]],
     recv_bufs: &mut [Vec<u8>],
     step_id: u64,
+    spec: Option<&mut SpecCtx<'_, '_>>,
 ) -> Result<Exchange> {
     let n = conns.len();
     for conn in conns.iter() {
+        if !conn.alive {
+            continue;
+        }
         conn.stream
             .set_nonblocking(true)
             .with_context(|| format!("nonblocking mode on executor at {}", conn.addr))?;
     }
-    let result = exchange_inner(conns, bodies, recv_bufs, step_id);
+    let result = exchange_inner(conns, bodies, recv_bufs, step_id, spec);
     // failing to restore blocking mode would make the *next*
     // control-plane read spuriously fail with WouldBlock and blame the
     // wrong layer — surface it here, against the right executor, but
     // never mask the exchange's own error
     let mut restore: Result<()> = Ok(());
     for conn in conns.iter() {
+        if !conn.alive {
+            continue;
+        }
         if let Err(e) = conn.stream.set_nonblocking(false) {
             if restore.is_ok() {
                 restore = Err(e).with_context(|| {
@@ -719,8 +1268,11 @@ fn exchange_inner(
     bodies: &[&[u8]],
     recv_bufs: &mut [Vec<u8>],
     step_id: u64,
+    mut spec: Option<&mut SpecCtx<'_, '_>>,
 ) -> Result<Exchange> {
     let n = conns.len();
+    let started = Instant::now();
+    let alive: Vec<bool> = conns.iter().map(|c| c.alive).collect();
     let headers: Vec<[u8; 5]> = bodies
         .iter()
         .map(|b| {
@@ -733,16 +1285,30 @@ fn exchange_inner(
     let mut sent = vec![0usize; n];
     let mut recv = vec![RecvState::default(); n];
     let mut arrival = Vec::with_capacity(n);
+    // speculation state: wall-clock completion times feed the EWMAs and
+    // the stall trigger; `abandoned` marks a peer whose stale reply is
+    // owed to `pending_drain` (its socket is off-limits until drained)
+    let mut done_at: Vec<Option<f64>> = vec![None; n];
+    let mut abandoned = vec![false; n];
+    let mut spec_count = vec![0usize; n];
+    let mut spec_scatter = vec![0usize; n];
+    let mut pending_drain: Vec<Option<(RecvState, Vec<u8>)>> = (0..n).map(|_| None).collect();
+    let mut flights: Vec<SpecFlight> = Vec::new();
+    let mut spec_launched = 0usize;
+    let mut spec_won = 0usize;
     // liveness deadline, not a whole-exchange cap: re-armed on every
     // sweep that moves bytes, so a reply that trickles in slowly but
     // steadily is never killed as "wedged"
-    let budget = read_timeout();
+    let budget = read_timeout().ok().flatten();
     let mut deadline = budget.map(|t| Instant::now() + t);
     let mut idle_sweeps = 0usize;
     loop {
         let mut progressed = false;
         let mut all_done = true;
         for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
             let total = 5 + bodies[i].len();
             // scatter: push as much of this executor's frame as the
             // socket accepts, then move on — never block on one peer
@@ -774,6 +1340,7 @@ fn exchange_inner(
                 }
             }
             // gather: drain whatever reply bytes have arrived
+            let was_done = recv[i].done;
             progressed |= read_some(&mut conns[i], i, &mut recv[i], &mut recv_bufs[i])
                 .with_context(|| {
                     format!(
@@ -782,11 +1349,81 @@ fn exchange_inner(
                         conns[i].addr
                     )
                 })?;
+            if recv[i].done && !was_done {
+                let t = started.elapsed().as_secs_f64();
+                done_at[i] = Some(t);
+                if let Some(ctx) = spec.as_deref_mut() {
+                    let key = (i, ctx.op.name());
+                    let e = ctx.ewma.entry(key).or_insert(t);
+                    *e = 0.7 * *e + 0.3 * t;
+                }
+            }
             if recv[i].done && arrival.iter().all(|&a: &usize| a != i) {
                 arrival.push(i);
             }
             all_done &= sent[i] == total && recv[i].done;
         }
+        // poll speculative backups: their replies ride the backup's
+        // connection after its own reply finished
+        let mut f = 0;
+        while f < flights.len() {
+            {
+                let fl = &mut flights[f];
+                progressed |=
+                    read_some(&mut conns[fl.backup], fl.backup, &mut fl.recv, &mut fl.buf)
+                        .with_context(|| {
+                            format!(
+                                "speculative superstep {step_id} reply from executor {} at {}",
+                                fl.backup, conns[fl.backup].addr
+                            )
+                        })?;
+            }
+            if !flights[f].recv.done {
+                f += 1;
+                continue;
+            }
+            let fl = flights.swap_remove(f);
+            match Tag::from_u8(fl.recv.header[4]) {
+                Ok(Tag::StepResult) => {}
+                Ok(Tag::Fatal) => {
+                    let msg = ByteReader::new(&fl.buf).str().unwrap_or_default();
+                    bail!(
+                        "executor {} at {} failed a speculative step: {msg}",
+                        fl.backup,
+                        conns[fl.backup].addr
+                    );
+                }
+                Ok(other) => bail!(
+                    "executor {} at {}: wanted speculative StepResult, got {other:?}",
+                    fl.backup,
+                    conns[fl.backup].addr
+                ),
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "speculative reply tag from executor {} at {}",
+                        fl.backup, conns[fl.backup].addr
+                    )))
+                }
+            }
+            if !recv[fl.lagging].done {
+                // first valid result wins: adopt the backup's reply for
+                // the lagging slot and owe the primary's stale reply to
+                // the post-exchange drain
+                pending_drain[fl.lagging] =
+                    Some((recv[fl.lagging], std::mem::take(&mut recv_bufs[fl.lagging])));
+                recv_bufs[fl.lagging] = fl.buf;
+                recv[fl.lagging] = fl.recv;
+                abandoned[fl.lagging] = true;
+                if arrival.iter().all(|&a: &usize| a != fl.lagging) {
+                    arrival.push(fl.lagging);
+                }
+                spec_won += 1;
+                progressed = true;
+            }
+            // else: the primary beat its backup — the duplicate reply
+            // was fully read above and is simply dropped
+        }
+        all_done &= flights.is_empty();
         if all_done {
             break;
         }
@@ -795,10 +1432,35 @@ fn exchange_inner(
             deadline = budget.map(|t| Instant::now() + t);
             continue;
         }
+        // an idle sweep with most of the fleet done is the speculation
+        // trigger's moment: second-guess the laggards on an idle peer
+        if let Some(ctx) = spec.as_deref_mut() {
+            let sent_done: Vec<bool> = (0..n).map(|i| sent[i] == 5 + bodies[i].len()).collect();
+            if maybe_dispatch_spec(
+                conns,
+                &alive,
+                &recv,
+                &sent_done,
+                &abandoned,
+                &mut flights,
+                &mut spec_count,
+                &mut spec_scatter,
+                &mut spec_launched,
+                started.elapsed().as_secs_f64(),
+                &done_at,
+                ctx,
+                step_id,
+            )? {
+                deadline = budget.map(|t| Instant::now() + t);
+                continue;
+            }
+        }
         if let Some(d) = deadline {
             if Instant::now() > d {
-                let totals: Vec<usize> = bodies.iter().map(|b| 5 + b.len()).collect();
-                let done: Vec<bool> = recv.iter().map(|s| s.done).collect();
+                let totals: Vec<usize> = (0..n)
+                    .map(|i| if alive[i] { 5 + bodies[i].len() } else { 0 })
+                    .collect();
+                let done: Vec<bool> = (0..n).map(|i| !alive[i] || recv[i].done).collect();
                 let addrs: Vec<&str> = conns.iter().map(|c| c.addr.as_str()).collect();
                 bail!(
                     "superstep {step_id} made no progress for {:?}: {} \
@@ -818,11 +1480,174 @@ fn exchange_inner(
         }
     }
     Ok(Exchange {
-        scatter: bodies.iter().map(|b| 5 + b.len()).collect(),
-        gather: recv.iter().map(|s| 5 + s.body_len).collect(),
+        scatter: (0..n)
+            .map(|i| if alive[i] { 5 + bodies[i].len() } else { 0 } + spec_scatter[i])
+            .collect(),
+        gather: (0..n)
+            .map(|i| if alive[i] { 5 + recv[i].body_len } else { 0 })
+            .collect(),
         tags: recv.iter().map(|s| s.header[4]).collect(),
         arrival,
+        pending_drain,
+        spec_launched,
+        spec_won,
     })
+}
+
+/// The speculation trigger and dispatcher, called on idle sweeps: once
+/// `quantile` of the live fleet has replied and a laggard has been
+/// outstanding for more than `max(50ms, factor × slowest finisher)`
+/// (factor = `1/(1-quantile)`, clamped to [2, 16]), send a backup copy
+/// of its task list to the historically fastest idle finisher that holds
+/// replicas of every cell those tasks touch.  At most `copies` backups
+/// per laggard per superstep; one flight per backup connection (frames
+/// on one socket must not interleave).  Returns whether anything was
+/// dispatched.
+#[allow(clippy::too_many_arguments)]
+fn maybe_dispatch_spec(
+    conns: &mut [ExecConn],
+    alive: &[bool],
+    recv: &[RecvState],
+    sent_done: &[bool],
+    abandoned: &[bool],
+    flights: &mut Vec<SpecFlight>,
+    spec_count: &mut [usize],
+    spec_scatter: &mut [usize],
+    launched: &mut usize,
+    elapsed: f64,
+    done_at: &[Option<f64>],
+    ctx: &mut SpecCtx<'_, '_>,
+    step_id: u64,
+) -> Result<bool> {
+    if ctx.copies == 0 {
+        return Ok(false);
+    }
+    // ADMM's projection step reads executor-resident factorizations a
+    // replica holder never prepared for foreign cells; everything else
+    // is a pure function of the shipped descriptor plus the block
+    if ctx.op.name() == "admm-project" {
+        return Ok(false);
+    }
+    let live: Vec<usize> = (0..alive.len()).filter(|&i| alive[i]).collect();
+    if live.len() < 2 {
+        return Ok(false);
+    }
+    let done: Vec<usize> = live.iter().copied().filter(|&i| recv[i].done).collect();
+    let quota = ((ctx.quantile * live.len() as f64).floor() as usize).max(1);
+    if done.len() < quota || done.len() == live.len() {
+        return Ok(false);
+    }
+    let slowest_done = done
+        .iter()
+        .filter_map(|&i| done_at[i])
+        .fold(0.0f64, f64::max);
+    let factor = (1.0 / (1.0 - ctx.quantile).max(1e-6)).clamp(2.0, 16.0);
+    if elapsed <= (factor * slowest_done).max(SPEC_MIN_STALL_SECS) {
+        return Ok(false);
+    }
+    let mut dispatched = false;
+    for &lag in &live {
+        if recv[lag].done || abandoned[lag] || !sent_done[lag] {
+            continue;
+        }
+        if spec_count[lag] >= ctx.copies {
+            continue;
+        }
+        let tasks = &ctx.owned[lag];
+        if tasks.is_empty() {
+            continue;
+        }
+        // backup: a finisher with no flight of its own already, holding
+        // replicas of every cell the laggard's tasks read; ties broken
+        // by the lowest gather-latency EWMA for this op kind
+        let mut best: Option<(usize, f64)> = None;
+        for &b in &done {
+            if b == lag || abandoned[b] || flights.iter().any(|f| f.backup == b) {
+                continue;
+            }
+            if !tasks.iter().all(|&t| ctx.staged[b][ctx.op.cell(ctx.part, t)]) {
+                continue;
+            }
+            let score = ctx
+                .ewma
+                .get(&(b, ctx.op.name()))
+                .copied()
+                .or(done_at[b])
+                .unwrap_or(0.0);
+            if best.map(|(_, s)| score < s).unwrap_or(true) {
+                best = Some((b, score));
+            }
+        }
+        let Some((backup, _)) = best else { continue };
+        // SpecStep body: step id, flags (sliced, never folded — the
+        // replica holder's fold subtrees are not the laggard's), the
+        // explicit task list, then the sliced descriptor for exactly
+        // those tasks
+        let mut body = Vec::new();
+        bytes::put_u64(&mut body, step_id);
+        bytes::put_u8(&mut body, wire::STEP_FLAG_SLICED);
+        bytes::put_u32(&mut body, tasks.len() as u32);
+        for &t in tasks {
+            bytes::put_u32(&mut body, t as u32);
+        }
+        ops::encode_op_sliced(ctx.op, ctx.part, tasks, &mut body);
+        // the backup is idle, so a blocking write is safe and simplest
+        let conn = &mut conns[backup];
+        conn.stream.set_nonblocking(false).with_context(|| {
+            format!("blocking mode on executor {backup} at {}", conn.addr)
+        })?;
+        let sent = wire::write_frame(&mut conn.stream, Tag::SpecStep, &body).with_context(
+            || format!("speculative dispatch to executor {backup} at {}", conn.addr),
+        )?;
+        conn.stream.set_nonblocking(true).with_context(|| {
+            format!("nonblocking mode on executor {backup} at {}", conn.addr)
+        })?;
+        spec_scatter[backup] += sent;
+        spec_count[lag] += 1;
+        *launched += 1;
+        flights.push(SpecFlight {
+            backup,
+            lagging: lag,
+            recv: RecvState::default(),
+            buf: Vec::new(),
+        });
+        dispatched = true;
+    }
+    Ok(dispatched)
+}
+
+/// Finish reading an abandoned primary reply in blocking mode (the
+/// socket's read timeout applies) and discard it, leaving the connection
+/// frame-aligned.  `st`/`buf` carry whatever the nonblocking exchange
+/// had already consumed.
+fn drain_abandoned(
+    conn: &mut ExecConn,
+    i: usize,
+    mut st: RecvState,
+    mut buf: Vec<u8>,
+) -> Result<()> {
+    if st.header_got < 5 {
+        conn.stream
+            .read_exact(&mut st.header[st.header_got..])
+            .with_context(|| format!("drain stale reply header from executor {i}"))?;
+        st.header_got = 5;
+        let len = u32::from_le_bytes(st.header[..4].try_into().unwrap()) as usize;
+        if len > wire::MAX_FRAME {
+            bail!("executor {i}: stale reply of {len} bytes exceeds MAX_FRAME");
+        }
+        st.body_len = len;
+        st.body_got = 0;
+        buf.clear();
+        buf.resize(len, 0);
+    }
+    if st.body_got < st.body_len {
+        conn.stream
+            .read_exact(&mut buf[st.body_got..st.body_len])
+            .with_context(|| format!("drain stale reply body from executor {i}"))?;
+    }
+    Tag::from_u8(st.header[4])
+        .with_context(|| format!("stale reply tag from executor {i}"))?;
+    Ok(())
 }
 
 /// Nonblocking read step for one connection: header, then body.  Returns
@@ -879,7 +1704,10 @@ fn read_some(
 
 /// Validate one claimed executor-side fold against the op's combine-tree
 /// geometry, mark its absorbed tasks, and log it for
-/// [`SimCluster::reduce_segments_folded`].
+/// [`SimCluster::reduce_segments_folded`].  Ownership of the absorbed
+/// tasks is judged by the active [`CellMap`] when the fleet is degraded,
+/// by the pure functional layout otherwise — the same rule the scatter
+/// used.
 #[allow(clippy::too_many_arguments)]
 fn validate_fold(
     op: &GridOp<'_>,
@@ -889,6 +1717,7 @@ fn validate_fold(
     exec: usize,
     n_execs: usize,
     ownership: Ownership,
+    map: Option<&CellMap>,
     fold_requested: bool,
     n_tasks: usize,
     folded_away: &mut [bool],
@@ -913,7 +1742,11 @@ fn validate_fold(
         if t2 >= n_tasks {
             bail!("executor {exec}: fold at task {task} spills past task {t2}");
         }
-        if op.owner(part, t2, n_execs, ownership) != exec {
+        let t2_owner = match map {
+            Some(m) => m.slot(op.cell(part, t2)),
+            None => op.owner(part, t2, n_execs, ownership),
+        };
+        if t2_owner != exec {
             bail!(
                 "executor {exec}: fold at task {task} absorbs task {t2} it does not own"
             );
@@ -988,86 +1821,13 @@ fn session_token(addrs: &[String]) -> u64 {
     h
 }
 
-/// Tear down and rebuild every executor connection after a failed
-/// exchange (free function rather than a method: the caller still holds
-/// immutable borrows of the Step bodies in `send_buf`/`send_bufs`).
-///
-/// Each executor is re-dialed with capped exponential backoff within the
-/// `DDOPT_DIST_REJOIN_TIMEOUT_SECS` budget and sent a `Rejoin` frame
-/// carrying the session token; a survivor acks `have_blocks` and skips
-/// the block transfer, a restarted process is restaged from the saved
-/// Stage body.  ADMM factorizations are replayed if the session had
-/// prepared them.  `rejoins` counts completed handshakes.
-#[allow(clippy::too_many_arguments)]
-fn recover_fleet(
-    conns: &mut Vec<ExecConn>,
-    addrs: &[String],
-    token: u64,
-    offered: u32,
-    session_caps: u32,
-    stage_bodies: &[Vec<u8>],
-    admm_prepared: bool,
-    step_id: u64,
-    recv_buf: &mut Vec<u8>,
-    rejoins: &mut u64,
-) -> Result<()> {
-    let budget = rejoin_timeout()
-        .ok_or_else(|| anyhow::anyhow!("rejoin disabled (DDOPT_DIST_REJOIN_TIMEOUT_SECS=0)"))?;
-    let deadline = Instant::now() + budget;
-    // drop every old connection first: executors notice the hangup and
-    // return to their accept loop, keeping the cached session
-    conns.clear();
-    let n_execs = addrs.len();
-    for (i, addr) in addrs.iter().enumerate() {
-        let mut delay = Duration::from_millis(50);
-        let conn = loop {
-            match rejoin_one(
-                addr,
-                i,
-                n_execs,
-                token,
-                offered,
-                session_caps,
-                &stage_bodies[i],
-                step_id,
-                recv_buf,
-            ) {
-                Ok(c) => break c,
-                Err(e) => {
-                    if Instant::now() + delay > deadline {
-                        return Err(e).with_context(|| {
-                            format!(
-                                "rejoin executor {i} at {addr} within {budget:?} \
-                                 (raise DDOPT_DIST_REJOIN_TIMEOUT_SECS?)"
-                            )
-                        });
-                    }
-                    std::thread::sleep(delay);
-                    delay = (delay * 2).min(Duration::from_secs(1));
-                }
-            }
-        };
-        *rejoins += 1;
-        conns.push(conn);
-    }
-    if admm_prepared {
-        // replay factorizations, pipelined like prepare_admm
-        for (i, conn) in conns.iter_mut().enumerate() {
-            wire::write_frame(&mut conn.stream, Tag::PrepareAdmm, &[]).with_context(|| {
-                format!("replay admm factorization on executor {i} at {}", conn.addr)
-            })?;
-        }
-        for (i, conn) in conns.iter_mut().enumerate() {
-            wire::expect_frame(&mut conn.stream, recv_buf, Tag::PrepareAdmmAck).with_context(
-                || format!("replay admm factorization on executor {i} at {}", conn.addr),
-            )?;
-        }
-    }
-    Ok(())
-}
-
 /// One reconnect + `Rejoin` handshake (+ restage when the executor lost
-/// its cached session).
+/// its cached session).  With `limit`, both the connect and the
+/// handshake reads are bounded by it — recovery sweeps use this so one
+/// unreachable peer cannot eat the whole rejoin budget — and the
+/// session read timeout is restored before returning.  The second
+/// element reports whether the peer had to be restaged (it holds its
+/// pure-owned blocks again, nothing more).
 #[allow(clippy::too_many_arguments)]
 fn rejoin_one(
     addr: &str,
@@ -1079,12 +1839,26 @@ fn rejoin_one(
     stage_body: &[u8],
     step_id: u64,
     recv_buf: &mut Vec<u8>,
-) -> Result<ExecConn> {
-    let mut stream = TcpStream::connect(addr)
-        .with_context(|| format!("reconnect to executor {i} at {addr}"))?;
+    limit: Option<Duration>,
+) -> Result<(ExecConn, bool)> {
+    let mut stream = match limit {
+        Some(lim) => {
+            let sock = addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolve executor {i} address {addr}"))?
+                .next()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("executor {i} address {addr} resolves to nothing")
+                })?;
+            TcpStream::connect_timeout(&sock, lim)
+                .with_context(|| format!("reconnect to executor {i} at {addr}"))?
+        }
+        None => TcpStream::connect(addr)
+            .with_context(|| format!("reconnect to executor {i} at {addr}"))?,
+    };
     stream.set_nodelay(true).ok();
     stream
-        .set_read_timeout(read_timeout())
+        .set_read_timeout(limit.or(read_timeout()?))
         .with_context(|| format!("set read timeout on executor {i} at {addr}"))?;
     let mut body = Vec::new();
     bytes::put_u32(&mut body, wire::PROTO_MAGIC);
@@ -1118,13 +1892,22 @@ fn rejoin_one(
              session needs {session_caps:#x}"
         );
     }
-    if have_blocks == 0 {
+    let restaged = have_blocks == 0;
+    if restaged {
         wire::write_frame(&mut stream, Tag::Stage, stage_body)
             .with_context(|| format!("restage blocks on executor {i} at {addr}"))?;
         wire::expect_frame(&mut stream, recv_buf, Tag::StageAck)
             .with_context(|| format!("restage ack from executor {i} at {addr}"))?;
     }
-    Ok(ExecConn { stream, addr: addr.to_string(), threads })
+    // the per-attempt limit only governs the handshake; the session's
+    // configured read timeout takes over from here
+    stream
+        .set_read_timeout(read_timeout()?)
+        .with_context(|| format!("restore read timeout on executor {i} at {addr}"))?;
+    Ok((
+        ExecConn { stream, addr: addr.to_string(), threads, alive: true },
+        restaged,
+    ))
 }
 
 /// Read one length-prefixed f32 array straight into a slab segment,
@@ -1201,5 +1984,33 @@ mod tests {
         std::thread::sleep(Duration::from_millis(2));
         let b = session_token(&addrs);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn invalid_timeout_env_is_a_hard_error_naming_the_variable() {
+        // no other lib unit test reads these variables, so the
+        // set/restore dance is race-free under the parallel test runner
+        const VAR: &str = "DDOPT_DIST_READ_TIMEOUT_SECS";
+        let saved = std::env::var(VAR).ok();
+        std::env::set_var(VAR, "1O"); // a typo'd "10"
+        let err = read_timeout().unwrap_err().to_string();
+        assert!(err.contains(VAR), "error must name the variable: {err}");
+        assert!(err.contains("1O"), "error must quote the bad value: {err}");
+        std::env::set_var(VAR, "30");
+        assert_eq!(read_timeout().unwrap(), Some(Duration::from_secs(30)));
+        std::env::set_var(VAR, "0");
+        assert_eq!(read_timeout().unwrap(), None);
+        match saved {
+            Some(v) => std::env::set_var(VAR, v),
+            None => std::env::remove_var(VAR),
+        }
+    }
+
+    #[test]
+    fn next_alive_skips_dead_slots_cyclically() {
+        assert_eq!(next_alive(&[false, true, false], 0), Some(2));
+        assert_eq!(next_alive(&[false, true, false], 2), Some(0));
+        assert_eq!(next_alive(&[false, true, true], 0), None);
+        assert_eq!(next_alive(&[false, false, false, false], 1), Some(2));
     }
 }

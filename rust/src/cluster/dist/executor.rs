@@ -24,15 +24,33 @@
 //!    and output segment — or, for leaves absorbed by a fold, just the
 //!    absorbed marker.
 //!
+//! Wire revision 4 adds two more frames to the superstep loop:
+//!
+//! * [`wire::Tag::CellMap`] re-negotiates cell placement mid-session (an
+//!   elastic degrade or a rebalance back), shipping along whichever
+//!   newly required blocks — orphans of a dead peer, or speculation
+//!   replicas — this executor has not staged yet.  The explicit map then
+//!   overrides the functional [`Ownership`] for task/fold/factor
+//!   ownership.
+//! * [`wire::Tag::SpecStep`] runs a *backup copy* of another executor's
+//!   task list (carried explicitly in the frame) against the local
+//!   replicas — same interpreter, never folded, same reply format.
+//!
 //! Task errors are per-task data in the reply (the driver reproduces the
 //! sim backend's lowest-task-index-wins rule across executors); protocol
 //! errors tear down the connection with a [`wire::Tag::Fatal`] frame
 //! where possible.
+//!
+//! Every outgoing frame goes through [`chaos::chaos_write`]: `--chaos`
+//! turns the executor into its own deterministic network adversary
+//! (delays, drops, truncations, one-way partitions), and without the
+//! flag the shim is a single pointer test per frame.
 
+use super::chaos::{self, Chaos, ChaosConfig, ChaosState};
 use super::ops::OpBuf;
 use super::wire::{self, Tag};
-use crate::cluster::{GridOp, OpScratch, Ownership, TaskSlab, WorkerPool};
-use crate::data::{decode_block, Partitioned};
+use crate::cluster::{CellMap, GridOp, OpScratch, Ownership, TaskSlab, WorkerPool};
+use crate::data::{decode_block, Block, Partitioned};
 use crate::runtime::{Backend, FactorHandle, StagedGrid};
 use crate::util::bytes::{self, ByteReader};
 use anyhow::{bail, Context, Result};
@@ -54,6 +72,9 @@ pub struct ExecutorConfig {
     /// Lets the fault-recovery tests kill an executor mid-superstep at a
     /// deterministic point.
     pub chaos_abort_step: u64,
+    /// Seeded network-fault injection on every outgoing frame
+    /// (`--chaos seed=N,delay=MS,drop=P,trunc=P,partition=P,...`).
+    pub chaos: Option<ChaosConfig>,
 }
 
 /// One staged driver session, kept across connections (keyed by the
@@ -66,6 +87,10 @@ struct CachedSession {
     n_execs: usize,
     ownership: Ownership,
     part: Partitioned,
+    /// Explicit placement installed by a `CellMap` frame; overrides the
+    /// functional `ownership` while the fleet runs degraded (or carries
+    /// speculation replicas).  Survives reconnects with the session.
+    map: Option<CellMap>,
 }
 
 /// Run the executor server (blocks forever unless `once`).
@@ -77,17 +102,25 @@ pub fn serve(cfg: &ExecutorConfig) -> Result<()> {
     // discover OS-assigned ports from it
     println!("executor listening on {local}");
     std::io::stdout().flush().ok();
-    serve_listener_with(listener, cfg.threads, cfg.once, cfg.chaos_abort_step)
+    let chaos_state = cfg.chaos.clone().map(|c| Mutex::new(ChaosState::new(c)));
+    serve_listener_chaos(
+        listener,
+        cfg.threads,
+        cfg.once,
+        cfg.chaos_abort_step,
+        chaos_state.as_ref(),
+    )
 }
 
 /// The accept loop behind [`serve`], on an already-bound listener — lets
-/// in-process harnesses (the perf wire bench) run loopback executors on
-/// OS-assigned ports without spawning child processes.
+/// in-process harnesses (the perf wire bench, the checkpoint parity
+/// test) run loopback executors on OS-assigned ports without spawning
+/// child processes.
 pub fn serve_listener(listener: TcpListener, threads: usize, once: bool) -> Result<()> {
-    serve_listener_with(listener, threads, once, 0)
+    serve_listener_chaos(listener, threads, once, 0, None)
 }
 
-/// [`serve_listener`] plus the chaos knob (see
+/// [`serve_listener`] plus the abort knob (see
 /// [`ExecutorConfig::chaos_abort_step`]).
 pub fn serve_listener_with(
     listener: TcpListener,
@@ -95,12 +128,26 @@ pub fn serve_listener_with(
     once: bool,
     chaos_abort_step: u64,
 ) -> Result<()> {
+    serve_listener_chaos(listener, threads, once, chaos_abort_step, None)
+}
+
+/// The full accept loop: abort knob plus the seeded outgoing-frame chaos
+/// shim (shared across connections, so the fault schedule spans
+/// reconnects).
+pub fn serve_listener_chaos(
+    listener: TcpListener,
+    threads: usize,
+    once: bool,
+    chaos_abort_step: u64,
+    chaos: Chaos<'_>,
+) -> Result<()> {
     let mut cache: Option<CachedSession> = None;
     let mut steps_served: u64 = 0;
     loop {
         let (stream, peer) = listener.accept().context("accept driver connection")?;
         eprintln!("executor: serving driver at {peer}");
-        match serve_conn(stream, threads, &mut cache, chaos_abort_step, &mut steps_served) {
+        match serve_conn(stream, threads, &mut cache, chaos_abort_step, &mut steps_served, chaos)
+        {
             Ok(()) => eprintln!("executor: driver at {peer} finished cleanly"),
             // keep the cached session: a dropped connection is exactly
             // what a driver-side failure (or our own chaos abort on a
@@ -114,6 +161,17 @@ pub fn serve_listener_with(
     }
 }
 
+/// How one [`serve_session`] call ended.
+enum SessionOutcome {
+    /// Clean `Shutdown`: drop the cached session.
+    Clean,
+    /// A `CellMap` frame arrived: install the new placement (and its
+    /// shipped blocks) into the cached session, ack, and re-enter the
+    /// superstep loop.  Surfaced as an outcome because installing blocks
+    /// mutates the partition the staged grid borrows.
+    Remap { map: CellMap, blocks: Vec<(usize, Block)> },
+}
+
 /// Serve one driver connection until `Shutdown` or EOF.  The first frame
 /// is either `Hello` (fresh session: handshake + Stage) or `Rejoin`
 /// (re-attach to the cached session, restaging only if the cache is
@@ -124,22 +182,49 @@ fn serve_conn(
     cache: &mut Option<CachedSession>,
     chaos_abort_step: u64,
     steps_served: &mut u64,
+    chaos: Chaos<'_>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut buf = Vec::new();
     let (tag, _) = wire::read_frame(&mut stream, &mut buf)?;
     let caps = match tag {
-        Tag::Hello => hello_session(&mut stream, &mut buf, threads, cache)?,
-        Tag::Rejoin => rejoin_session(&mut stream, &mut buf, threads, cache)?,
+        Tag::Hello => hello_session(&mut stream, &mut buf, threads, cache, chaos)?,
+        Tag::Rejoin => rejoin_session(&mut stream, &mut buf, threads, cache, chaos)?,
         other => bail!("protocol violation: first frame was {other:?}, not Hello or Rejoin"),
     };
-    let sess = cache.as_ref().expect("handshake established a session");
-    let clean =
-        serve_session(&mut stream, threads, sess, caps, chaos_abort_step, steps_served, &mut buf)?;
-    if clean {
-        *cache = None;
+    loop {
+        let sess = cache.as_mut().expect("handshake established a session");
+        let outcome = serve_session(
+            &mut stream,
+            threads,
+            sess,
+            caps,
+            chaos_abort_step,
+            steps_served,
+            &mut buf,
+            chaos,
+        )?;
+        match outcome {
+            SessionOutcome::Clean => {
+                *cache = None;
+                return Ok(());
+            }
+            SessionOutcome::Remap { map, blocks } => {
+                let n_new = blocks.len();
+                for (cell, b) in blocks {
+                    sess.part
+                        .set_block(cell, b)
+                        .with_context(|| format!("install remapped block for cell {cell}"))?;
+                }
+                eprintln!(
+                    "executor {}/{}: installed new cell map (+{n_new} blocks)",
+                    sess.my_index, sess.n_execs
+                );
+                sess.map = Some(map);
+                chaos::chaos_write(&mut stream, Tag::CellMapAck, &[], chaos)?;
+            }
+        }
     }
-    Ok(())
 }
 
 /// The `Hello` handshake + initial Stage of a fresh session.  Returns
@@ -149,6 +234,7 @@ fn hello_session(
     buf: &mut Vec<u8>,
     threads: usize,
     cache: &mut Option<CachedSession>,
+    chaos: Chaos<'_>,
 ) -> Result<u32> {
     let mut r = ByteReader::new(buf);
     let magic = r.u32()?;
@@ -165,7 +251,7 @@ fn hello_session(
                 wire::PROTO_VERSION
             ),
         );
-        let _ = wire::write_frame(stream, Tag::Fatal, &body);
+        let _ = chaos::chaos_write(stream, Tag::Fatal, &body, chaos);
         bail!("protocol version mismatch (driver v{version})");
     }
     let my_index = r.u32()? as usize;
@@ -185,10 +271,10 @@ fn hello_session(
     bytes::put_u32(&mut ack, wire::PROTO_VERSION);
     bytes::put_u32(&mut ack, threads as u32);
     bytes::put_u32(&mut ack, caps);
-    wire::write_frame(stream, Tag::HelloAck, &ack)?;
+    chaos::chaos_write(stream, Tag::HelloAck, &ack, chaos)?;
 
-    let (ownership, part) = receive_stage(stream, buf, caps, my_index, n_execs, threads)?;
-    *cache = Some(CachedSession { token, my_index, n_execs, ownership, part });
+    let (ownership, part) = receive_stage(stream, buf, caps, my_index, n_execs, threads, chaos)?;
+    *cache = Some(CachedSession { token, my_index, n_execs, ownership, part, map: None });
     Ok(caps)
 }
 
@@ -200,6 +286,7 @@ fn rejoin_session(
     buf: &mut Vec<u8>,
     threads: usize,
     cache: &mut Option<CachedSession>,
+    chaos: Chaos<'_>,
 ) -> Result<u32> {
     let mut r = ByteReader::new(buf);
     let magic = r.u32()?;
@@ -227,14 +314,15 @@ fn rejoin_session(
     bytes::put_u32(&mut ack, threads as u32);
     bytes::put_u32(&mut ack, caps);
     bytes::put_u8(&mut ack, if have { 1 } else { 0 });
-    wire::write_frame(stream, Tag::RejoinAck, &ack)?;
+    chaos::chaos_write(stream, Tag::RejoinAck, &ack, chaos)?;
     eprintln!(
         "executor {my_index}/{n_execs}: rejoin for superstep {step_id} ({})",
         if have { "blocks still cached" } else { "restaging" }
     );
     if !have {
-        let (ownership, part) = receive_stage(stream, buf, caps, my_index, n_execs, threads)?;
-        *cache = Some(CachedSession { token, my_index, n_execs, ownership, part });
+        let (ownership, part) =
+            receive_stage(stream, buf, caps, my_index, n_execs, threads, chaos)?;
+        *cache = Some(CachedSession { token, my_index, n_execs, ownership, part, map: None });
     }
     Ok(caps)
 }
@@ -248,6 +336,7 @@ fn receive_stage(
     my_index: usize,
     n_execs: usize,
     threads: usize,
+    chaos: Chaos<'_>,
 ) -> Result<(Ownership, Partitioned)> {
     let (tag, _) = wire::read_frame(stream, buf)?;
     if tag != Tag::Stage {
@@ -276,13 +365,48 @@ fn receive_stage(
          ({} threads, {ownership:?} ownership)",
         part.grid.p, part.grid.q, threads
     );
-    wire::write_frame(stream, Tag::StageAck, &[])?;
+    chaos::chaos_write(stream, Tag::StageAck, &[], chaos)?;
     Ok((ownership, part))
 }
 
-/// The superstep loop of one staged session.  Returns `true` on a clean
-/// `Shutdown` (the session cache should be dropped), `false` never — any
-/// other exit is an error, which keeps the cache for a possible Rejoin.
+/// Decode one `CellMap` frame: the new placement plus the blocks this
+/// executor must newly install.  The install itself happens in
+/// [`serve_conn`], outside the staged-grid borrow.
+fn decode_cell_map(
+    buf: &[u8],
+    n_execs: usize,
+    caps: u32,
+) -> Result<(CellMap, Vec<(usize, Block)>)> {
+    if caps & wire::CAP_ELASTIC == 0 {
+        bail!("driver sent a CellMap frame without the negotiated capability");
+    }
+    let mut r = ByteReader::new(buf);
+    let magic = r.u32()?;
+    if magic != wire::PROTO_MAGIC {
+        bail!("cell map magic mismatch: got {magic:#x}");
+    }
+    let step_id = r.u64()?;
+    let n = r.u32()? as usize;
+    if n != n_execs {
+        bail!("cell map sized for {n} executors, session has {n_execs}");
+    }
+    let map = CellMap::decode(&mut r, n_execs)?;
+    let n_blocks = r.u32()? as usize;
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        let cell = r.usize()?;
+        blocks.push((cell, decode_block(&mut r)?));
+    }
+    if !r.is_empty() {
+        bail!("trailing bytes after CellMap payload (superstep {step_id})");
+    }
+    Ok((map, blocks))
+}
+
+/// The superstep loop of one staged session.  Returns on a clean
+/// `Shutdown` or a `CellMap` remap (see [`SessionOutcome`]) — any other
+/// exit is an error, which keeps the cache for a possible Rejoin.
+#[allow(clippy::too_many_arguments)]
 fn serve_session(
     stream: &mut TcpStream,
     threads: usize,
@@ -291,8 +415,10 @@ fn serve_session(
     chaos_abort_step: u64,
     steps_served: &mut u64,
     buf: &mut Vec<u8>,
-) -> Result<bool> {
+    chaos: Chaos<'_>,
+) -> Result<SessionOutcome> {
     let part = &sess.part;
+    let map = sess.map.as_ref();
     let (my_index, n_execs, ownership) = (sess.my_index, sess.n_execs, sess.ownership);
     let backend = Backend::native();
     let staged = backend.stage(part)?;
@@ -314,28 +440,42 @@ fn serve_session(
         match tag {
             Tag::PrepareAdmm => {
                 // factor the owned cells only, off the clock (the paper
-                // excludes this one-time cost from reported times)
+                // excludes this one-time cost from reported times);
+                // "owned" follows the explicit map while degraded
                 factors.clear();
                 for cell in 0..part.grid.k() {
-                    if ownership.owner(cell, part.grid.k(), n_execs) == my_index {
+                    let mine = match map {
+                        Some(m) => m.slot(cell) == my_index,
+                        None => ownership.owner(cell, part.grid.k(), n_execs) == my_index,
+                    };
+                    if mine {
                         let (p, q) = (cell / part.grid.q, cell % part.grid.q);
                         factors.push(Some(staged.admm_factor(p, q)?));
                     } else {
                         factors.push(None);
                     }
                 }
-                wire::write_frame(stream, Tag::PrepareAdmmAck, &[])?;
+                chaos::chaos_write(stream, Tag::PrepareAdmmAck, &[], chaos)?;
             }
-            Tag::Step => {
-                *steps_served += 1;
-                if chaos_abort_step != 0 && *steps_served == chaos_abort_step {
-                    // die like a SIGKILLed process: no Fatal frame, no
-                    // unwinding, the driver just sees the socket drop
-                    // mid-superstep
-                    eprintln!(
-                        "executor {my_index}: chaos abort on step frame {steps_served}"
-                    );
-                    std::process::abort();
+            Tag::Step | Tag::SpecStep => {
+                let forced = tag == Tag::SpecStep;
+                if forced && caps & wire::CAP_SPEC == 0 {
+                    bail!("driver sent a SpecStep without the negotiated capability");
+                }
+                if !forced {
+                    // the abort knob counts *primary* Step frames only,
+                    // so a test's "die on step N" stays deterministic
+                    // whether or not speculation is on
+                    *steps_served += 1;
+                    if chaos_abort_step != 0 && *steps_served == chaos_abort_step {
+                        // die like a SIGKILLed process: no Fatal frame,
+                        // no unwinding, the driver just sees the socket
+                        // drop mid-superstep
+                        eprintln!(
+                            "executor {my_index}: chaos abort on step frame {steps_served}"
+                        );
+                        std::process::abort();
+                    }
                 }
                 let outcome = run_step(
                     &staged,
@@ -347,7 +487,9 @@ fn serve_session(
                     my_index,
                     n_execs,
                     ownership,
+                    map,
                     caps,
+                    forced,
                     &mut owned,
                     &mut times,
                     &mut out,
@@ -356,21 +498,27 @@ fn serve_session(
                 );
                 match outcome {
                     Ok(()) => {
-                        wire::write_frame(stream, Tag::StepResult, &reply)?;
+                        chaos::chaos_write(stream, Tag::StepResult, &reply, chaos)?;
                     }
                     Err(e) => {
                         // protocol-level failure (bad frame, unknown op):
                         // tell the driver before tearing down
                         let mut body = Vec::new();
                         bytes::put_str(&mut body, &format!("{e:#}"));
-                        let _ = wire::write_frame(stream, Tag::Fatal, &body);
+                        let _ = chaos::chaos_write(stream, Tag::Fatal, &body, chaos);
                         return Err(e);
                     }
                 }
             }
+            Tag::CellMap => {
+                let (new_map, blocks) = decode_cell_map(buf, n_execs, caps)?;
+                // the blocks must be installed into the partition the
+                // staged grid currently borrows: hand the remap up
+                return Ok(SessionOutcome::Remap { map: new_map, blocks });
+            }
             Tag::Shutdown => {
-                wire::write_frame(stream, Tag::Bye, &[])?;
-                return Ok(true);
+                chaos::chaos_write(stream, Tag::Bye, &[], chaos)?;
+                return Ok(SessionOutcome::Clean);
             }
             Tag::Fatal => {
                 let msg = ByteReader::new(buf).str().unwrap_or_default();
@@ -381,10 +529,14 @@ fn serve_session(
     }
 }
 
-/// Decode one Step frame, run the owned tasks, optionally pre-fold the
-/// locally-owned aligned combine subtrees, and build the StepResult body
-/// in `reply`.  Per-task kernel errors become per-task reply entries —
-/// only frame/op decoding problems are `Err` here.
+/// Decode one Step (or SpecStep) frame, run the owned tasks, optionally
+/// pre-fold the locally-owned aligned combine subtrees, and build the
+/// StepResult body in `reply`.  Per-task kernel errors become per-task
+/// reply entries — only frame/op decoding problems are `Err` here.
+///
+/// With `forced` (a SpecStep), the task list rides in the frame instead
+/// of being derived from ownership: the executor is running a backup
+/// copy of *another* executor's tasks against its local replicas.
 #[allow(clippy::too_many_arguments)]
 fn run_step(
     staged: &StagedGrid<'_>,
@@ -396,7 +548,9 @@ fn run_step(
     my_index: usize,
     n_execs: usize,
     ownership: Ownership,
+    map: Option<&CellMap>,
     caps: u32,
+    forced: bool,
     owned: &mut Vec<usize>,
     times: &mut Vec<f64>,
     out: &mut Vec<f32>,
@@ -413,6 +567,21 @@ fn run_step(
     if flags & wire::STEP_FLAG_FOLD != 0 && caps & wire::CAP_CONTIG_FOLD == 0 {
         bail!("driver requested gather folding without the negotiated capability");
     }
+    if forced {
+        // a backup copy: explicit task list, sliced payload, never folded
+        // (the replica holder's fold subtrees are not the laggard's)
+        if flags & wire::STEP_FLAG_SLICED == 0 {
+            bail!("SpecStep without the sliced flag");
+        }
+        if flags & wire::STEP_FLAG_FOLD != 0 {
+            bail!("SpecStep requested gather folding");
+        }
+        let count = r.u32()? as usize;
+        owned.clear();
+        for _ in 0..count {
+            owned.push(r.u32()? as usize);
+        }
+    }
     if flags & wire::STEP_FLAG_SLICED != 0 {
         opbuf.decode_sliced_into(&mut r)?;
     } else {
@@ -424,10 +593,22 @@ fn run_step(
     let op: GridOp<'_> = opbuf.as_op()?;
 
     let n_tasks = op.n_tasks(part);
-    owned.clear();
-    for task in 0..n_tasks {
-        if op.owner(part, task, n_execs, ownership) == my_index {
-            owned.push(task);
+    if forced {
+        for &task in owned.iter() {
+            if task >= n_tasks {
+                bail!("SpecStep task {task} out of range ({n_tasks} tasks)");
+            }
+        }
+    } else {
+        owned.clear();
+        for task in 0..n_tasks {
+            let owner = match map {
+                Some(m) => m.slot(op.cell(part, task)),
+                None => op.owner(part, task, n_execs, ownership),
+            };
+            if owner == my_index {
+                owned.push(task);
+            }
         }
     }
     // grow-only slabs, never re-zeroed: exec_task fully overwrites every

@@ -34,18 +34,32 @@
 //! the protocol is host-agnostic, so multi-host is a deploy question,
 //! not a code one.
 //!
-//! The runtime is self-healing (wire revision 3, [`wire::CAP_REJOIN`]):
-//! executors cache their staged session across connections, and on a
-//! mid-superstep I/O failure the driver reconnects with backoff, rejoins
-//! (restaging a restarted executor from the saved Stage bytes), and
-//! replays the failed superstep — determinism makes the replay
-//! bit-identical, so at most one superstep of progress is lost per
-//! failure.  See the fault-recovery notes in [`driver_net`].
+//! The runtime is self-healing and *elastic* (wire revision 4):
+//! executors cache their staged session across connections
+//! ([`wire::CAP_REJOIN`]), and on a mid-superstep I/O failure the driver
+//! reconnects with backoff, rejoins (restaging a restarted executor from
+//! the saved Stage bytes), and replays the failed superstep —
+//! determinism makes the replay bit-identical, so at most one superstep
+//! of progress is lost per failure.  When an executor misses the rejoin
+//! budget entirely, the driver *degrades* instead of dying: it rewrites
+//! the explicit [`CellMap`](super::CellMap) placement
+//! ([`wire::CAP_ELASTIC`]), restages the orphaned blocks onto the
+//! survivors from its cached Stage bytes, and continues bit-identically
+//! on N−1 executors — rebalancing back the moment the peer returns.
+//! With `--dist-spec`, the driver additionally re-executes a *lagging*
+//! executor's tasks speculatively on an idle peer
+//! ([`wire::CAP_SPEC`]), first-valid-result-wins.  The [`chaos`] module
+//! is the adversary: a seeded fault-injection shim (executor `--chaos`
+//! or the `ddopt chaosproxy` forwarder) that makes all of the above
+//! testable deterministically.  See the fault-recovery notes in
+//! [`driver_net`].
 
+pub mod chaos;
 pub mod driver_net;
 pub mod executor;
 pub mod ops;
 pub mod wire;
 
+pub use chaos::{chaosproxy, ChaosConfig, ChaosState};
 pub use driver_net::DistCluster;
 pub use executor::{serve, serve_listener, serve_listener_with, ExecutorConfig};

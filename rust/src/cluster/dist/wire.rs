@@ -24,6 +24,9 @@
 //! | `Fatal` (11), either way |                          | message string |
 //! | `Rejoin` (12)            |                          | *v3* — magic, session token, executor index, executor count, failed step id, offered capability bits |
 //! |                          | `RejoinAck` (13)         | *v3* — magic, worker threads, accepted capability bits, have-blocks byte (1: blocks still cached under this session token, skip Stage) |
+//! | `CellMap` (14)           |                          | *v4* — magic, step id, executor count, explicit cell→slot table, plus any blocks the receiver must (re)stage under the new map |
+//! |                          | `CellMapAck` (15)        | *v4* — magic |
+//! | `SpecStep` (16)          |                          | *v4* — step id + flags byte + explicit task list + sliced op descriptor: a speculative backup copy of another executor's lagging tasks |
 //!
 //! The handshake is versioned: both sides check the magic and protocol
 //! version before anything else, so a stale executor binary fails fast
@@ -45,6 +48,20 @@
 //! [`CAP_REJOIN`], and the fleet AND disables recovery — the driver
 //! keeps today's fail-fast behavior on executor death.
 //!
+//! ## Protocol v4: elastic placement and speculative re-execution
+//!
+//! Wire revision 4 makes cell placement *explicit and rewritable*.  The
+//! `CellMap` frame ships a full cell→executor-slot table (plus any
+//! blocks the receiver is newly responsible for), letting the driver
+//! degrade onto N−1 executors when a peer misses its rejoin budget,
+//! rebalance back when it returns, and pre-place replica blocks for
+//! speculation.  The `SpecStep` frame carries a backup copy of a lagging
+//! executor's tasks to an idle peer — same sliced op encoding as `Step`,
+//! but with the task list spelled out instead of derived from ownership.
+//! Like v3, the version field stays 2: both features ride new capability
+//! bits ([`CAP_ELASTIC`], [`CAP_SPEC`]), so v2/v3 executors interoperate
+//! unchanged and simply leave the fleet inelastic.
+//!
 //! ## Capability negotiation
 //!
 //! The driver *offers* a capability mask in `Hello`; each executor acks
@@ -63,6 +80,11 @@
 //! * [`CAP_REJOIN`] — the executor keeps its staged session (keyed by
 //!   the driver's session token) across connections and answers the
 //!   `Rejoin` handshake, enabling reconnect-and-retry fault recovery.
+//! * [`CAP_ELASTIC`] — the executor accepts `CellMap` frames: explicit,
+//!   driver-rewritable cell placement plus mid-run block restaging, the
+//!   basis of degraded-mode continuation and elastic rebalancing.
+//! * [`CAP_SPEC`] — the executor accepts `SpecStep` frames: speculative
+//!   backup execution of another executor's lagging tasks.
 //!
 //! A full-broadcast driver (`--dist-wire broadcast`) simply offers no
 //! capabilities.
@@ -79,10 +101,12 @@ pub const PROTO_MAGIC: u32 = 0x4444_4F50;
 /// keeps this at 2: it is negotiated through [`CAP_REJOIN`] so v2
 /// executors interoperate.
 pub const PROTO_VERSION: u32 = 2;
-/// Wire revision implemented by this build: v3 = v2 + the rejoin
-/// fault-tolerance extension (session token in `Hello`, [`CAP_REJOIN`],
-/// `Rejoin`/`RejoinAck`), negotiated purely via capability bits.
-pub const WIRE_REVISION: u32 = 3;
+/// Wire revision implemented by this build: v4 = v3 (the rejoin
+/// fault-tolerance extension) + explicit rewritable cell placement
+/// (`CellMap`, [`CAP_ELASTIC`]) and speculative re-execution
+/// (`SpecStep`, [`CAP_SPEC`]), all negotiated purely via capability
+/// bits.
+pub const WIRE_REVISION: u32 = 4;
 /// Ceiling on one frame body (guards a corrupt length prefix).
 pub const MAX_FRAME: usize = 1 << 30;
 
@@ -95,8 +119,17 @@ pub const CAP_CONTIG_FOLD: u32 = 1 << 1;
 /// (token + staged blocks) across connections and answers `Rejoin`, so
 /// the driver may reconnect and retry a failed superstep.
 pub const CAP_REJOIN: u32 = 1 << 2;
+/// Capability bit (wire revision 4): the executor accepts `CellMap`
+/// frames — explicit cell→slot placement the driver may rewrite mid-run
+/// (degrade onto survivors, rebalance on readmission), with block
+/// restaging riding the same frame.
+pub const CAP_ELASTIC: u32 = 1 << 3;
+/// Capability bit (wire revision 4): the executor accepts `SpecStep`
+/// frames — speculative backup copies of a lagging peer's tasks.
+pub const CAP_SPEC: u32 = 1 << 4;
 /// Every capability this build implements (what an executor acks).
-pub const CAPS_SUPPORTED: u32 = CAP_SLICED | CAP_CONTIG_FOLD | CAP_REJOIN;
+pub const CAPS_SUPPORTED: u32 =
+    CAP_SLICED | CAP_CONTIG_FOLD | CAP_REJOIN | CAP_ELASTIC | CAP_SPEC;
 
 /// Step-frame flags byte, bit 0: the op payload is sliced for this
 /// executor (decode with `decode_sliced_into`).
@@ -121,6 +154,9 @@ pub enum Tag {
     Fatal = 11,
     Rejoin = 12,
     RejoinAck = 13,
+    CellMap = 14,
+    CellMapAck = 15,
+    SpecStep = 16,
 }
 
 impl Tag {
@@ -139,6 +175,9 @@ impl Tag {
             11 => Tag::Fatal,
             12 => Tag::Rejoin,
             13 => Tag::RejoinAck,
+            14 => Tag::CellMap,
+            15 => Tag::CellMapAck,
+            16 => Tag::SpecStep,
             other => bail!("unknown wire frame tag {other}"),
         })
     }
@@ -170,8 +209,16 @@ pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<(Tag, usize)> 
     }
     let tag = Tag::from_u8(header[4])?;
     buf.clear();
-    buf.resize(len, 0);
-    r.read_exact(buf).with_context(|| format!("read {len}-byte {tag:?} body"))?;
+    // grow the buffer as bytes actually arrive instead of trusting the
+    // header: a corrupt or malicious 5-byte header must not be able to
+    // force a MAX_FRAME-sized allocation up front
+    let got = r
+        .take(len as u64)
+        .read_to_end(buf)
+        .with_context(|| format!("read {len}-byte {tag:?} body"))?;
+    if got < len {
+        bail!("truncated {tag:?} frame: got {got} of {len} body bytes");
+    }
     Ok((tag, 5 + len))
 }
 
@@ -250,6 +297,9 @@ mod tests {
             Tag::Fatal,
             Tag::Rejoin,
             Tag::RejoinAck,
+            Tag::CellMap,
+            Tag::CellMapAck,
+            Tag::SpecStep,
         ] {
             assert_eq!(Tag::from_u8(t as u8).unwrap(), t);
         }

@@ -61,7 +61,7 @@ pub mod simtime;
 pub mod superstep;
 
 pub use backend::{
-    ClusterBackend, FoldAxis, FoldGroup, GridOp, OpScratch, Ownership, SimBackend,
+    CellMap, ClusterBackend, FoldAxis, FoldGroup, GridOp, OpScratch, Ownership, SimBackend,
 };
 pub use comm::{tree_aggregate, tree_aggregate_f32, CommStats};
 pub use dist::DistCluster;
@@ -214,6 +214,10 @@ pub struct ClusterConfig {
     pub scenario: ClusterScenario,
     /// Dist-substrate wire strategy (ignored by the sim substrate).
     pub wire: WireMode,
+    /// Dist-substrate speculative re-execution (`--dist-spec`): gather
+    /// stalls dispatch backup copies of lagging tasks to idle executors,
+    /// tuned by `scenario.spec_quantile` / `scenario.spec_copies`.
+    pub dist_spec: bool,
 }
 
 impl Default for ClusterConfig {
@@ -229,8 +233,45 @@ impl Default for ClusterConfig {
             cost: CostModel::Measured,
             scenario: ClusterScenario::ideal(),
             wire: WireMode::Sliced,
+            dist_spec: false,
         }
     }
+}
+
+/// Parse the `--dist-spec` parameter string
+/// (`quantile=0.75,copies=1`, any subset — an empty string takes both
+/// defaults).  Returns `(spec_quantile, spec_copies)`.
+pub fn parse_dist_spec(spec: &str) -> anyhow::Result<(f64, usize)> {
+    let mut quantile = 0.75f64;
+    let mut copies = 1usize;
+    for kv in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let (key, val) = kv.split_once('=').unwrap_or((kv, ""));
+        let (key, val) = (key.trim(), val.trim());
+        match key {
+            "quantile" => {
+                let v: f64 = val
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --dist-spec quantile='{val}'"))?;
+                if !v.is_finite() || v <= 0.0 || v >= 1.0 {
+                    anyhow::bail!("--dist-spec quantile must be in (0, 1), got '{val}'");
+                }
+                quantile = v;
+            }
+            "copies" => {
+                let v: usize = val
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --dist-spec copies='{val}'"))?;
+                if v > 8 {
+                    anyhow::bail!("--dist-spec copies must be <= 8, got '{val}'");
+                }
+                copies = v;
+            }
+            other => anyhow::bail!(
+                "unknown --dist-spec parameter '{other}' (expected quantile/copies)"
+            ),
+        }
+    }
+    Ok((quantile, copies))
 }
 
 impl ClusterConfig {

@@ -103,6 +103,11 @@ pub struct ClusterScenario {
     pub failure_burst: bool,
     /// Spark-style speculative re-execution (see module docs).
     pub speculative: bool,
+    /// Gather-completion quantile that arms the speculation trigger
+    /// (sim cost model and the dist driver's `--dist-spec` both read it).
+    pub spec_quantile: f64,
+    /// Maximum backup copies per lagging task/executor.
+    pub spec_copies: usize,
     /// Scenario seed — injections are a pure function of
     /// `(seed, superstep, task)`.
     pub seed: u64,
@@ -120,6 +125,8 @@ impl Default for ClusterScenario {
             max_retries: 3,
             failure_burst: false,
             speculative: false,
+            spec_quantile: 0.75,
+            spec_copies: 1,
             seed: 0,
         }
     }
@@ -185,6 +192,8 @@ impl ClusterScenario {
                             }
                             "seed" => sc.seed = val.parse().map_err(|_| bad(key, val))?,
                             "spec" => sc.speculative = parse_switch(val)?,
+                            "spec_quantile" => sc.spec_quantile = parse_quantile(val)?,
+                            "spec_copies" => sc.spec_copies = parse_copies(val)?,
                             other => bail!("unknown stragglers parameter '{other}'"),
                         }
                     }
@@ -229,6 +238,8 @@ impl ClusterScenario {
                             }
                             "seed" => sc.seed = val.parse().map_err(|_| bad(key, val))?,
                             "spec" => sc.speculative = parse_switch(val)?,
+                            "spec_quantile" => sc.spec_quantile = parse_quantile(val)?,
+                            "spec_copies" => sc.spec_copies = parse_copies(val)?,
                             other => bail!("unknown failures parameter '{other}'"),
                         }
                     }
@@ -267,6 +278,7 @@ impl ClusterScenario {
             }
             if self.speculative {
                 s.push_str(",spec");
+                self.push_spec_knobs(&mut s);
             }
             parts.push(s);
         }
@@ -282,6 +294,7 @@ impl ClusterScenario {
             // clause comes first, so the label re-parses to the same value
             if self.speculative && self.straggler_p <= 0.0 {
                 s.push_str(",spec");
+                self.push_spec_knobs(&mut s);
             }
             parts.push(s);
         }
@@ -290,6 +303,17 @@ impl ClusterScenario {
             out.push_str(&format!(" (seed {})", self.seed));
         }
         out
+    }
+
+    /// Append non-default speculation knobs next to a `,spec` emission so
+    /// the label re-parses to the same scenario.
+    fn push_spec_knobs(&self, s: &mut String) {
+        if (self.spec_quantile - 0.75).abs() > f64::EPSILON {
+            s.push_str(&format!(",spec_quantile={}", self.spec_quantile));
+        }
+        if self.spec_copies != 1 {
+            s.push_str(&format!(",spec_copies={}", self.spec_copies));
+        }
     }
 
     /// Per-slot speed factors for `cores` executor slots.  The slow slots
@@ -461,7 +485,9 @@ impl ClusterScenario {
                 }
                 _ => self.iid_attempts(step, task),
             };
-            let charged = if self.speculative { extra.min(1) } else { extra };
+            // a speculative backup caps what the clock sees at the
+            // configured copy budget (one backup by default)
+            let charged = if self.speculative { extra.min(self.spec_copies) } else { extra };
             if !tolerant {
                 // each failed attempt re-ran the (possibly straggling)
                 // task from scratch before the attempt that succeeded
@@ -483,6 +509,29 @@ fn parse_prob(val: &str, what: &str) -> Result<f64> {
         .map_err(|_| anyhow::anyhow!("bad scenario parameter {what}='{val}'"))?;
     if !(0.0..=1.0).contains(&v) {
         bail!("{what} must be in [0, 1], got '{val}'");
+    }
+    Ok(v)
+}
+
+/// The speculation trigger quantile must leave someone to speculate on.
+fn parse_quantile(val: &str) -> Result<f64> {
+    let v: f64 = val
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad scenario parameter spec_quantile='{val}'"))?;
+    if !v.is_finite() || !(0.0..1.0).contains(&v) || v <= 0.0 {
+        bail!("spec_quantile must be in (0, 1), got '{val}'");
+    }
+    Ok(v)
+}
+
+/// Backup copies per laggard: small by design — each copy is a full
+/// re-execution, and more than a handful just burns the idle fleet.
+fn parse_copies(val: &str) -> Result<usize> {
+    let v: usize = val
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad scenario parameter spec_copies='{val}'"))?;
+    if v > 8 {
+        bail!("spec_copies must be <= 8, got '{val}'");
     }
     Ok(v)
 }

@@ -152,6 +152,20 @@ impl ExperimentConfig {
             // same spec grammar as the CLI --cluster flag
             c.cluster.mode = crate::cluster::ClusterMode::parse(x)?;
         }
+        if let Some(x) = v.get("dist_spec") {
+            // either a bool, or the CLI --dist-spec parameter string
+            // ("quantile=0.75,copies=1")
+            match (x.as_bool(), x.as_str()) {
+                (Some(b), _) => c.cluster.dist_spec = b,
+                (_, Some(s)) => {
+                    let (q, k) = crate::cluster::parse_dist_spec(s)?;
+                    c.cluster.dist_spec = true;
+                    c.cluster.scenario.spec_quantile = q;
+                    c.cluster.scenario.spec_copies = k;
+                }
+                _ => bail!("dist_spec must be a bool or a parameter string"),
+            }
+        }
         if let Some(x) = v.get("backend").and_then(|x| x.as_str()) {
             if x != "native" && x != "xla" {
                 bail!("unknown backend '{x}'");

@@ -7,6 +7,7 @@
 //!             [--cores 8] [--threads N]  (threads default: host parallelism)
 //!             [--cluster sim|dist:host:port[,host:port...]]
 //!             [--dist-wire sliced|broadcast]  (default: sliced)
+//!             [--dist-spec [quantile=0.75,copies=1]]  (speculative re-execution)
 //!             [--scenario ideal|stragglers:p=0.1,slow=10x[,shape=S][,spec]
 //!                        |hetero:frac=0.25,speed=0.5
 //!                        |failures:p=0.05[,retries=R][,burst=executor]
@@ -17,6 +18,8 @@
 //!             [--checkpoint-dir dir [--checkpoint-every K]] [--resume]
 //! ddopt executor --bind 127.0.0.1:7077 [--threads N] [--once]
 //!                [--chaos-abort-step N]  (fault injection: abort on Nth step)
+//!                [--chaos seed=1,delay=MS,drop=P,trunc=P,partition=P[,after=K,window=W]]
+//! ddopt chaosproxy LISTEN CONNECT --chaos seed=1,...  (seeded faulty TCP forwarder)
 //! ddopt exp <table1|fig3|fig4|fig5|fig6|perf|ablations|stragglers|all>
 //!           [--scale small|paper] [--seed N]  (seed: stragglers scenario seed)
 //! ddopt gen-data --out data.libsvm [--n 1000 --m 500 --density 0.01] [--seed N]
@@ -38,6 +41,13 @@
 //! `executor --chaos-abort-step N` makes the executor `abort()` upon
 //! receiving its Nth superstep frame — the fault-injection hook the
 //! recovery tests and the CI kill-and-recover scenario use.
+//! `executor --chaos ...` injects seeded, deterministic network faults
+//! (delays, drops, truncated frames, one-way partitions) into the
+//! executor's outgoing frames; `ddopt chaosproxy` applies the same
+//! fault model to any TCP link without touching either endpoint.
+//! `--dist-spec` arms speculative re-execution: when a gather stalls
+//! past the latency quantile, backup copies of the lagging tasks are
+//! dispatched to idle executors and the first valid result wins.
 
 use anyhow::{anyhow, bail, Result};
 use ddopt::bench_harness::{self, Scale};
@@ -61,17 +71,19 @@ fn main() {
     let code = match cmd.as_str() {
         "train" => run_train(&args),
         "executor" => run_executor(&args),
+        "chaosproxy" => run_chaosproxy(&args),
         "exp" => run_exp(&args),
         "gen-data" => run_gen_data(&args),
         "fstar" => run_fstar(&args),
         "artifacts-info" => run_artifacts_info(&args),
         _ => {
             eprintln!(
-                "usage: ddopt <train|executor|exp|gen-data|fstar|artifacts-info> [flags]"
+                "usage: ddopt <train|executor|chaosproxy|exp|gen-data|fstar|artifacts-info> [flags]"
             );
             eprintln!("  train     train one method (--method radisa|radisa-avg|d3ca|admm,");
             eprintln!("            --cluster sim|dist:host:port[,host:port...], --scenario ..., see README)");
             eprintln!("  executor  serve superstep tasks for a dist driver (--bind host:port)");
+            eprintln!("  chaosproxy  seeded faulty TCP forwarder (chaosproxy LISTEN CONNECT --chaos ...)");
             eprintln!("  exp       regenerate paper tables/figures (table1|fig3..fig6|perf|ablations|stragglers|all)");
             eprintln!("  gen-data  write a synthetic LIBSVM file (--out file)");
             eprintln!("  fstar     compute the reference optimum for a dataset");
@@ -127,6 +139,17 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(w) = args.flag_str("dist-wire") {
         cfg.cluster.wire = ddopt::cluster::WireMode::parse(&w)?;
+    }
+    if let Some(s) = args.flag_str("dist-spec") {
+        // bare `--dist-spec` parses as the switch value "true": defaults
+        let (q, k) = if s == "true" || s.is_empty() {
+            (0.75, 1)
+        } else {
+            ddopt::cluster::parse_dist_spec(&s)?
+        };
+        cfg.cluster.dist_spec = true;
+        cfg.cluster.scenario.spec_quantile = q;
+        cfg.cluster.scenario.spec_copies = k;
     }
     if let Some(l) = args.flag_str("loss") {
         cfg.loss = Loss::parse(&l).ok_or_else(|| anyhow!("bad loss '{l}'"))?;
@@ -294,6 +317,24 @@ fn run_train(args: &Args) -> Result<()> {
                 if rejoins == 1 { "" } else { "s" }
             );
         }
+        let degraded = result
+            .wire
+            .iter()
+            .map(|r| r.degraded_executors)
+            .max()
+            .unwrap_or(0);
+        if degraded > 0 {
+            println!(
+                "degraded: finished with {degraded} executor{} permanently removed (cells rebalanced)",
+                if degraded == 1 { "" } else { "s" }
+            );
+        }
+        let spec_launched: usize = result.wire.iter().map(|r| r.spec_launched).sum();
+        let spec_won: usize = result.wire.iter().map(|r| r.spec_won).sum();
+        if spec_launched > 0 {
+            println!("speculation: {spec_launched} backup task{} launched, {spec_won} adopted",
+                if spec_launched == 1 { "" } else { "s" });
+        }
     }
     if let Some(path) = wire_out {
         if result.wire.is_empty() {
@@ -332,13 +373,37 @@ fn run_executor(args: &Args) -> Result<()> {
         .unwrap_or_else(ddopt::cluster::host_threads);
     let once = args.switch("once");
     let chaos_abort_step = args.flag::<u64>("chaos-abort-step").unwrap_or(0);
+    let chaos = match args.flag_str("chaos") {
+        Some(spec) => Some(ddopt::cluster::dist::ChaosConfig::parse(&spec)?),
+        None => None,
+    };
     args.finish().map_err(|e| anyhow!(e))?;
     ddopt::cluster::dist::serve(&ddopt::cluster::dist::ExecutorConfig {
         bind,
         threads,
         once,
         chaos_abort_step,
+        chaos,
     })
+}
+
+fn run_chaosproxy(args: &Args) -> Result<()> {
+    let listen = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow!("chaosproxy wants LISTEN and CONNECT addresses"))?;
+    let connect = args
+        .positional
+        .get(2)
+        .cloned()
+        .ok_or_else(|| anyhow!("chaosproxy wants a CONNECT address"))?;
+    let cfg = match args.flag_str("chaos") {
+        Some(spec) => ddopt::cluster::dist::ChaosConfig::parse(&spec)?,
+        None => ddopt::cluster::dist::ChaosConfig::default(),
+    };
+    args.finish().map_err(|e| anyhow!(e))?;
+    ddopt::cluster::dist::chaosproxy(&listen, &connect, cfg)
 }
 
 fn run_exp(args: &Args) -> Result<()> {

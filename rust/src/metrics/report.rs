@@ -73,6 +73,15 @@ pub struct WireRecord {
     /// Rejoin handshakes performed while recovering this superstep
     /// (one per executor re-dialed per retry).
     pub rejoins: usize,
+    /// Executors running degraded (missed their rejoin budget, cells
+    /// re-dealt to survivors) as of the end of this superstep.
+    pub degraded_executors: usize,
+    /// Speculative backup task dispatches launched during this
+    /// superstep's gather (`--dist-spec`).
+    pub spec_launched: usize,
+    /// Speculative backups that beat the lagging primary and had their
+    /// result adopted (first-valid-result-wins).
+    pub spec_won: usize,
 }
 
 /// Write per-superstep wire records as JSON lines (one object per line),
@@ -98,6 +107,9 @@ pub fn write_wire_jsonl(records: &[WireRecord], path: &Path) -> Result<()> {
             ("gather", Json::arr(r.gather.iter().map(|&b| Json::from(b)))),
             ("retries", Json::from(r.retries)),
             ("rejoins", Json::from(r.rejoins)),
+            ("degraded_executors", Json::from(r.degraded_executors)),
+            ("spec_launched", Json::from(r.spec_launched)),
+            ("spec_won", Json::from(r.spec_won)),
         ]);
         writeln!(f, "{line}")?;
     }

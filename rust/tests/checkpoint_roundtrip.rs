@@ -12,13 +12,15 @@
 //! method-mismatched resumes are rejected with a clear error — never a
 //! panic, never a silently wrong continuation.
 
-use ddopt::cluster::{ClusterConfig, CostModel};
+use ddopt::cluster::{dist, ClusterConfig, ClusterMode, CostModel};
 use ddopt::coordinator::{
     Admm, AdmmConfig, D3ca, D3caConfig, Driver, Optimizer, Radisa, RadisaConfig, RunResult,
 };
 use ddopt::data::{Grid, Partitioned, SyntheticDense};
 use ddopt::runtime::Backend;
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
+use std::thread::JoinHandle;
 
 const ITERS: usize = 6;
 const STOP_AT: usize = 3;
@@ -95,6 +97,45 @@ fn run_once(
     driver.run(opt.as_mut())
 }
 
+/// In-thread loopback executors on OS-assigned ports, each serving one
+/// driver session (`once`) and then joining.
+fn dist_fleet(n: usize) -> (Vec<String>, Vec<JoinHandle<anyhow::Result<()>>>) {
+    let mut addrs = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || dist::serve_listener(listener, 1, true)));
+    }
+    (addrs, handles)
+}
+
+/// [`run_once`] against a real executor fleet instead of the sim backend.
+fn run_dist(
+    make: &dyn Fn() -> Box<dyn Optimizer>,
+    addrs: Vec<String>,
+    iters: usize,
+    ckpt: Option<(&Path, usize, bool)>,
+) -> anyhow::Result<RunResult> {
+    let (p, q) = (2, 2);
+    let ds = SyntheticDense::paper_part1(p, q, 40, 30, 0.1, 9).build();
+    let part = Partitioned::split(&ds, Grid::new(p, q));
+    let backend = Backend::native();
+    let cluster = ClusterConfig {
+        mode: ClusterMode::Dist(addrs),
+        threads: 1,
+        cores: 4,
+        cost: CostModel::Fixed(1e-3),
+        ..Default::default()
+    };
+    let mut driver = Driver::new(&part, &backend)?.iterations(iters).cluster(cluster);
+    if let Some((dir, every, resume)) = ckpt {
+        driver = driver.checkpoints(dir, every).resume(resume);
+    }
+    let mut opt = make();
+    driver.run(opt.as_mut())
+}
+
 fn assert_same_outcome(a: &RunResult, b: &RunResult, ctx: &str) {
     assert_eq!(a.w.len(), b.w.len(), "{ctx}: w length");
     for (i, (x, y)) in a.w.iter().zip(&b.w).enumerate() {
@@ -135,6 +176,48 @@ fn resume_matches_unbroken_run_for_all_methods_and_threads() {
             );
             std::fs::remove_dir_all(&dir).ok();
         }
+    }
+}
+
+/// Checkpoint/resume parity under the *dist* backend: stop a 3-executor
+/// run at iteration 3, resume it on a fresh fleet, and the final weights
+/// (and the simulated clock) must be bitwise what an unbroken run — sim
+/// or dist, they are interchangeable by contract — produces.
+#[test]
+fn dist_backend_resume_matches_unbroken_run_bitwise() {
+    for idx in [0usize, 3] {
+        // d3ca (plain supersteps) and admm (prepared factorizations that
+        // a resumed driver must re-request on its fresh fleet)
+        let (name, make) = &methods()[idx];
+        let ctx = format!("{name} / dist resume");
+        let dir = scratch_dir(&format!("{name}-dist"));
+
+        let unbroken = run_once(make.as_ref(), 1, ITERS, None).unwrap();
+
+        let (addrs, fleet) = dist_fleet(3);
+        let partial =
+            run_dist(make.as_ref(), addrs, STOP_AT, Some((&dir, 1, false))).unwrap();
+        for h in fleet {
+            h.join().unwrap().unwrap();
+        }
+        assert!(
+            dir.join(format!("ckpt-{STOP_AT}.ddck")).exists(),
+            "{ctx}: missing checkpoint after phase 1"
+        );
+
+        let (addrs, fleet) = dist_fleet(3);
+        let resumed = run_dist(make.as_ref(), addrs, ITERS, Some((&dir, 1, true))).unwrap();
+        for h in fleet {
+            h.join().unwrap().unwrap();
+        }
+
+        assert_same_outcome(&unbroken, &resumed, &ctx);
+        assert_ne!(
+            partial.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            unbroken.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{ctx}: {STOP_AT} iterations should not equal {ITERS}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }
 

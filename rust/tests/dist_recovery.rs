@@ -324,6 +324,31 @@ struct ExecProc {
 }
 
 impl ExecProc {
+    /// A plain 1-thread executor on an ephemeral port.
+    fn spawn_plain() -> ExecProc {
+        ExecProc::spawn_with(&["executor", "--bind", "127.0.0.1:0", "--threads", "1"])
+    }
+
+    /// A `ddopt chaosproxy` child in front of `upstream`; `addr` is the
+    /// proxy's listen address (what the driver should dial).
+    fn spawn_proxy(upstream: &str, chaos: &str) -> ExecProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_ddopt"))
+            .args(["chaosproxy", "127.0.0.1:0", upstream, "--chaos", chaos])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn ddopt chaosproxy");
+        let stdout = child.stdout.take().expect("chaosproxy stdout");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("read chaosproxy listen line");
+        let rest = line
+            .trim()
+            .strip_prefix("chaosproxy listening on ")
+            .unwrap_or_else(|| panic!("unexpected chaosproxy banner: {line:?}"));
+        let addr = rest.split(" -> ").next().unwrap().to_string();
+        ExecProc { child, addr }
+    }
+
     fn spawn_with(args: &[&str]) -> ExecProc {
         let mut child = Command::new(env!("CARGO_BIN_EXE_ddopt"))
             .args(args)
@@ -350,7 +375,7 @@ impl Drop for ExecProc {
     }
 }
 
-fn train(mode: ClusterMode) -> Result<RunResult> {
+fn train_with(mode: ClusterMode, dist_spec: bool) -> Result<RunResult> {
     let ds = SyntheticDense::paper_part1(2, 2, 24, 18, 0.1, 7).build();
     let part = Partitioned::split(&ds, Grid::new(2, 2));
     let backend = Backend::native();
@@ -359,11 +384,37 @@ fn train(mode: ClusterMode) -> Result<RunResult> {
         cores: 4,
         threads: 1,
         cost: CostModel::Fixed(1e-3),
+        dist_spec,
         ..Default::default()
     };
     let mut opt: Box<dyn Optimizer> =
         Box::new(D3ca::new(D3caConfig { lambda: 0.2, seed: 9, ..Default::default() }));
     Driver::new(&part, &backend)?.iterations(4).cluster(cluster).run(opt.as_mut())
+}
+
+fn train(mode: ClusterMode) -> Result<RunResult> {
+    train_with(mode, false)
+}
+
+/// The tentpole invariant: whatever the fault, the surviving run's final
+/// weights are bit-for-bit the sim backend's.
+fn assert_same_w(sim: &RunResult, dist: &RunResult) {
+    assert_eq!(sim.w.len(), dist.w.len());
+    for (i, (a, b)) in sim.w.iter().zip(&dist.w).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "w[{i}] {a} vs {b}: recovery must lose no state"
+        );
+    }
+}
+
+fn sum_retries(r: &RunResult) -> usize {
+    r.wire.iter().map(|w| w.retries).sum()
+}
+
+fn sum_rejoins(r: &RunResult) -> usize {
+    r.wire.iter().map(|w| w.rejoins).sum()
 }
 
 /// The tentpole's chaos harness: an executor that dies (process abort —
@@ -418,4 +469,156 @@ fn killed_and_restarted_executor_rejoins_and_preserves_bitwise_parity() {
     let rejoins: usize = dist.wire.iter().map(|r| r.rejoins).sum();
     assert_eq!(retries, 1, "exactly one superstep may be retried per failure");
     assert_eq!(rejoins, 1, "one executor rejoined once");
+}
+
+// ------------------------------------------------------- chaos matrix
+
+/// Permanent kill: an executor aborts mid-run and *never* comes back.
+/// With the elastic capability the fleet must miss it for at most one
+/// rejoin budget, re-deal its cells across the survivors, replay the
+/// interrupted superstep, and finish on N-1 executors with weights
+/// bitwise identical to the sim backend.
+#[test]
+fn permanently_dead_executor_degrades_onto_survivors_with_bitwise_parity() {
+    let _guard = env_lock();
+    let _r = EnvVar::set("DDOPT_DIST_REJOIN_TIMEOUT_SECS", "2");
+
+    // 8 supersteps (4 iterations x 2 ops): death at step frame 4 is
+    // mid-run, with supersteps on both sides of the degrade
+    let doomed = ExecProc::spawn_with(&[
+        "executor",
+        "--bind",
+        "127.0.0.1:0",
+        "--threads",
+        "1",
+        "--chaos-abort-step",
+        "4",
+    ]);
+    let e1 = ExecProc::spawn_plain();
+    let e2 = ExecProc::spawn_plain();
+
+    let sim = train(ClusterMode::Sim).unwrap();
+    let dist = train(ClusterMode::Dist(vec![
+        doomed.addr.clone(),
+        e1.addr.clone(),
+        e2.addr.clone(),
+    ]))
+    .unwrap();
+
+    assert_same_w(&sim, &dist);
+    assert_eq!(sim.sim_time, dist.sim_time, "sim clock must survive the degrade");
+    assert_eq!(sum_retries(&dist), 1, "one superstep replay for the one fault");
+    assert_eq!(sum_rejoins(&dist), 2, "both survivors rejoin; the dead peer cannot");
+    assert_eq!(
+        dist.wire.last().unwrap().degraded_executors,
+        1,
+        "the fleet must finish degraded, not pretend the peer returned"
+    );
+}
+
+/// One-way partition (the classic half-open link): the executor keeps
+/// *receiving* but its outgoing frames vanish.  The exchange deadline
+/// must flag the silent peer, recovery must fail to re-admit it (its
+/// rejoin ack is swallowed too), and the fleet degrades around it.
+#[test]
+fn one_way_partition_degrades_the_mute_executor() {
+    let _guard = env_lock();
+    let _t = EnvVar::set("DDOPT_DIST_READ_TIMEOUT_SECS", "1");
+    let _r = EnvVar::set("DDOPT_DIST_REJOIN_TIMEOUT_SECS", "2");
+
+    let e0 = ExecProc::spawn_plain();
+    let e1 = ExecProc::spawn_plain();
+    // outgoing frames: HelloAck=0, StageAck=1, step replies 2.. —
+    // frame 6 (the superstep-5 reply) trips the persistent partition
+    let mute = ExecProc::spawn_with(&[
+        "executor",
+        "--bind",
+        "127.0.0.1:0",
+        "--threads",
+        "1",
+        "--chaos",
+        "partition=1,after=6",
+    ]);
+
+    let sim = train(ClusterMode::Sim).unwrap();
+    let dist = train(ClusterMode::Dist(vec![
+        e0.addr.clone(),
+        e1.addr.clone(),
+        mute.addr.clone(),
+    ]))
+    .unwrap();
+
+    assert_same_w(&sim, &dist);
+    assert_eq!(sum_retries(&dist), 1, "exactly one superstep lost to the partition");
+    assert_eq!(sum_rejoins(&dist), 2, "survivors rejoin; the mute peer never acks");
+    assert_eq!(dist.wire.last().unwrap().degraded_executors, 1);
+}
+
+/// Mid-frame cut through the standalone `chaosproxy` forwarder, in
+/// front of an *unmodified* executor: the driver sees a truncated
+/// frame, tears the link down, and the executor (still healthy) rejoins
+/// within the budget — full recovery, no degrade.
+#[test]
+fn truncated_frame_through_chaosproxy_recovers_with_a_full_rejoin() {
+    let _guard = env_lock();
+
+    let exec = ExecProc::spawn_plain();
+    // proxy outgoing frames mirror the executor's: HelloAck=0,
+    // StageAck=1, replies 2.. — cut exactly frame 4 (superstep 3)
+    let proxy = ExecProc::spawn_proxy(&exec.addr, "trunc=1,after=4,window=1");
+
+    let sim = train(ClusterMode::Sim).unwrap();
+    let dist = train(ClusterMode::Dist(vec![proxy.addr.clone()])).unwrap();
+
+    assert_same_w(&sim, &dist);
+    assert_eq!(sim.sim_time, dist.sim_time);
+    assert_eq!(sum_retries(&dist), 1, "the cut superstep is replayed once");
+    assert_eq!(sum_rejoins(&dist), 1, "the healthy executor rejoins through the proxy");
+    assert_eq!(
+        dist.wire.last().unwrap().degraded_executors,
+        0,
+        "a recovered peer must not be left degraded"
+    );
+}
+
+/// Trickling link + speculative re-execution: one executor delays every
+/// reply by 400ms.  With `--dist-spec` the driver must dispatch backup
+/// copies of the lagging tasks to the idle replica holder, adopt the
+/// first valid result, discard the late duplicate — and still produce
+/// bitwise sim-identical weights with zero retries.
+#[test]
+fn trickling_link_speculation_adopts_backups_without_changing_weights() {
+    let _guard = env_lock();
+
+    let e0 = ExecProc::spawn_plain();
+    // spec sessions ship replicas at connect time, so the outgoing
+    // ordinals shift: HelloAck=0, StageAck=1, CellMapAck=2, replies 3..
+    // — delay every reply from this peer
+    let laggard = ExecProc::spawn_with(&[
+        "executor",
+        "--bind",
+        "127.0.0.1:0",
+        "--threads",
+        "1",
+        "--chaos",
+        "delay=400,after=3",
+    ]);
+    let e2 = ExecProc::spawn_plain();
+
+    let sim = train(ClusterMode::Sim).unwrap();
+    let dist = train_with(
+        ClusterMode::Dist(vec![e0.addr.clone(), laggard.addr.clone(), e2.addr.clone()]),
+        true,
+    )
+    .unwrap();
+
+    assert_same_w(&sim, &dist);
+    assert_eq!(sim.sim_time, dist.sim_time, "adopted results must charge the same clock");
+    assert_eq!(sum_retries(&dist), 0, "speculation must not trip recovery");
+    assert_eq!(dist.wire.last().unwrap().degraded_executors, 0);
+    let launched: usize = dist.wire.iter().map(|r| r.spec_launched).sum();
+    let won: usize = dist.wire.iter().map(|r| r.spec_won).sum();
+    assert!(launched >= 1, "a 400ms laggard must trigger backup dispatch");
+    assert!(won >= 1, "a backup must beat a 400ms laggard at least once");
+    assert!(won <= launched, "adoptions cannot exceed dispatches");
 }

@@ -4,7 +4,7 @@
 
 Usage: check_perf.py BENCH_perf.json ci/perf_thresholds.json [BENCH_history.jsonl]
 
-Three gates:
+Five gates:
 
 1. Absolute ceiling — any steady-state allocations/iteration entry (other
    than the retained "(before)" baselines) above the ceiling fails, as
@@ -23,7 +23,13 @@ Three gates:
    slow neighbor-VM run neither fails the gate spuriously nor poisons
    the baseline.  The gate arms itself once `throughput_min_history`
    passing runs are recorded.
-4. Wire trend — each `wire_keys` entry (bytes-on-the-wire metrics,
+4. Kernel floors — `kernels_min` maps "section.key" paths (the
+   dispatched side of the register-tiled kernel bench) to absolute
+   GFLOP/s floors.  No history needed: the floors encode the tiling
+   work's measured before/after, and a change that loses the register
+   tiling (or silently pins the scalar table) trips them on the first
+   run.  The dispatched kernel keys also ride the throughput trend gate.
+5. Wire trend — each `wire_keys` entry (bytes-on-the-wire metrics,
    lower is better) is gated the same median-of-clean-runs way but as an
    **upper** bound: the current value must be at most `wire_tolerance` x
    the median.  Byte counts are near-deterministic for a fixed workload,
@@ -104,6 +110,21 @@ def check_throughput(bench, history, thresholds, failures):
                 f"  OK (throughput) {dotted} = {value} "
                 f"(floor {floor:.4g} from median {median:.4g} of {len(samples)})"
             )
+
+
+def check_kernels(bench, thresholds, failures):
+    """Absolute GFLOP/s floors on the dispatched register-tiled kernels."""
+    for dotted, floor in sorted(thresholds.get("kernels_min", {}).items()):
+        value = lookup(bench, dotted)
+        if value is None:
+            failures.append(f"{dotted}: missing from bench")
+        elif value < floor:
+            failures.append(
+                f"{dotted}: {value:.4g} < required {floor} GFLOP/s "
+                "(register-tiled kernel floor)"
+            )
+        else:
+            print(f"  OK (kernels) {dotted} = {value:.4g} (floor {floor}, absolute)")
 
 
 def check_wire(bench, history, thresholds, failures):
@@ -212,6 +233,8 @@ def main() -> int:
 
     # noise-aware throughput gate: current vs median of last N clean runs
     check_throughput(bench, history, thresholds, failures)
+    # absolute floors on the dispatched register-tiled kernels
+    check_kernels(bench, thresholds, failures)
     # wire gate: bytes/superstep upper bound + scatter-reduction floor
     check_wire(bench, history, thresholds, failures)
 

@@ -121,6 +121,109 @@ pub fn native_kernels(n: usize, m: usize, reps: usize) -> Vec<(String, f64)> {
     results
 }
 
+/// Register-tiled dispatch layer: GFLOP/s for every kernel in the
+/// [`KernelDispatch`](crate::linalg::KernelDispatch) table, run through
+/// both static tables — the baseline ("scalar", what
+/// `DDOPT_KERNELS=scalar` selects) and the runtime-detected one
+/// ("dispatched", AVX2+FMA where the CPU has it).  Both tables execute
+/// the identical arithmetic in the identical order, so any gap is pure
+/// codegen width; the perf gate pins absolute floors on the dispatched
+/// side (`kernels_min` in ci/perf_thresholds.json).
+pub fn kernel_dispatch(n: usize, m: usize, reps: usize) -> Vec<(String, f64)> {
+    use crate::linalg::{detected, scalar_table};
+    let tables = [("scalar", scalar_table()), ("dispatched", detected())];
+    let mut rng = Xoshiro::new(3);
+    let a: Vec<f32> = (0..n * m).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let x: Vec<f32> = (0..m).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let len = n * m;
+    let b: Vec<f32> = (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut acc_buf = vec![0.0f32; len];
+    let mut out_n = vec![0.0f32; n];
+    let mut out_m = vec![0.0f32; m];
+    // CSC mirror at text-classification density for the sparse transpose
+    let ds = SyntheticSparse::new("perf-dispatch", n, m, 0.003, 13).build();
+    let mut sm = ds.x.as_sparse().expect("sparse generator yields CSR").clone();
+    sm.build_csc();
+    let nnz = sm.nnz();
+
+    let mut results = Vec::new();
+    for (label, kd) in tables {
+        let kd = std::hint::black_box(kd);
+        let t = Timer::start();
+        let mut s = 0.0f32;
+        for _ in 0..reps {
+            s += (kd.dot)(&a, &b);
+        }
+        std::hint::black_box(s);
+        results.push((
+            format!("dot GFLOP/s ({label})"),
+            gflops(2.0 * (len * reps) as f64, t.secs()),
+        ));
+    }
+    for (label, kd) in tables {
+        let kd = std::hint::black_box(kd);
+        let t = Timer::start();
+        for _ in 0..reps {
+            (kd.axpy)(0.5, &b, &mut acc_buf);
+        }
+        std::hint::black_box(acc_buf[0]);
+        results.push((
+            format!("axpy GFLOP/s ({label})"),
+            gflops(2.0 * (len * reps) as f64, t.secs()),
+        ));
+    }
+    for (label, kd) in tables {
+        let kd = std::hint::black_box(kd);
+        let t = Timer::start();
+        for _ in 0..reps {
+            (kd.gemv)(&a, n, m, &x, &mut out_n);
+        }
+        std::hint::black_box(out_n[0]);
+        results.push((
+            format!("gemv GFLOP/s ({label})"),
+            gflops(2.0 * (n * m * reps) as f64, t.secs()),
+        ));
+    }
+    for (label, kd) in tables {
+        let kd = std::hint::black_box(kd);
+        let t = Timer::start();
+        for _ in 0..reps {
+            (kd.gemv_t)(&a, n, m, &v, &mut out_m);
+        }
+        std::hint::black_box(out_m[0]);
+        results.push((
+            format!("gemv_t GFLOP/s ({label})"),
+            gflops(2.0 * (n * m * reps) as f64, t.secs()),
+        ));
+    }
+    for (label, kd) in tables {
+        let kd = std::hint::black_box(kd);
+        let t = Timer::start();
+        for _ in 0..reps {
+            sm.gemv_t_into_with(kd, &v, &mut out_m);
+        }
+        std::hint::black_box(out_m[0]);
+        results.push((
+            format!("csc gemv_t GFLOP/s ({label})"),
+            gflops(2.0 * (nnz * reps) as f64, t.secs()),
+        ));
+    }
+    for (label, kd) in tables {
+        let kd = std::hint::black_box(kd);
+        let t = Timer::start();
+        for _ in 0..reps {
+            (kd.svrg_delta)(&mut acc_buf, &b, 1e-3, 0.1);
+        }
+        std::hint::black_box(acc_buf[0]);
+        results.push((
+            format!("svrg_delta GFLOP/s ({label})"),
+            gflops(4.0 * (len * reps) as f64, t.secs()),
+        ));
+    }
+    results
+}
+
 /// Sparse kernel before/after microbenches at text-classification
 /// density: the CSC-mirror transpose product vs the pre-PR CSR scatter,
 /// and the window-indexed sub-block ops vs the pre-PR per-row scans.
@@ -661,6 +764,11 @@ pub fn run(scale: Scale) -> Result<()> {
     for (k, v) in &kernels {
         rows.push(vec!["L3-native".into(), k.clone(), fmt(*v)]);
     }
+    // register-tiled dispatch table: scalar vs detected, per kernel
+    let disp = kernel_dispatch(512, 512, 40);
+    for (k, v) in &disp {
+        rows.push(vec!["L3-dispatch".into(), k.clone(), fmt(*v)]);
+    }
     // news20-ish density: the windowed-op regime the sub-block index targets
     let sparse = sparse_kernels(sp_n, sp_m, 0.003, sp_reps);
     for (k, v) in &sparse {
@@ -708,8 +816,12 @@ pub fn run(scale: Scale) -> Result<()> {
             .collect(),
     );
     let doc = Json::obj(vec![
-        ("schema", Json::str("ddopt-perf/4")),
+        ("schema", Json::str("ddopt-perf/5")),
         ("generated_by", Json::str("ddopt exp perf")),
+        (
+            "kernel_isa",
+            Json::str(crate::linalg::detected().isa.name()),
+        ),
         (
             "provenance",
             // alloc data is the gated half of the baseline: only a
@@ -732,6 +844,7 @@ pub fn run(scale: Scale) -> Result<()> {
             Json::Bool(crate::util::alloc::counting_enabled()),
         ),
         ("native_kernels", json_section(&kernels)),
+        ("kernels", json_section(&disp)),
         ("sparse_kernels", json_section(&sparse)),
         ("coordinator", json_section(&coord)),
         ("pool", json_section(&pool)),
@@ -756,6 +869,19 @@ mod tests {
         assert_eq!(r.len(), 4);
         for (k, v) in r {
             assert!(v > 0.0, "{k}");
+        }
+    }
+
+    #[test]
+    fn kernel_dispatch_bench_covers_both_tables() {
+        let r = kernel_dispatch(48, 33, 2);
+        // 7-entry dispatch table minus `scale` (covered transitively by
+        // axpy codegen) = 6 kernels × {scalar, dispatched}
+        assert_eq!(r.len(), 12);
+        for pair in r.chunks(2) {
+            assert!(pair[0].0.contains("(scalar)"), "{}", pair[0].0);
+            assert!(pair[1].0.contains("(dispatched)"), "{}", pair[1].0);
+            assert!(pair[0].1 > 0.0 && pair[1].1 > 0.0, "{}", pair[0].0);
         }
     }
 

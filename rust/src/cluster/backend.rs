@@ -372,14 +372,14 @@ impl<'a> GridOp<'a> {
                 let (r0, r1) = part.row_ranges[p];
                 // SAFETY: disjoint spans, see out_span.
                 let o = unsafe { out.segment(start, len) };
-                staged.atx_into(p, q, &v[r0..r1], o)
+                staged.atx_into(sc.kernels, p, q, &v[r0..r1], o)
             }
             GridOp::Margins { w } => {
                 let (p, q) = (task / qq, task % qq);
                 let (c0, c1) = part.col_ranges[q];
                 // SAFETY: disjoint spans, see out_span.
                 let o = unsafe { out.segment(start, len) };
-                staged.margins_into(p, q, &w[c0..c1], o)
+                staged.margins_into(sc.kernels, p, q, &w[c0..c1], o)
             }
             GridOp::Grad { loss, mt } => {
                 let (p, q) = (task / qq, task % qq);
@@ -673,6 +673,10 @@ pub struct OpScratch {
     delta: Vec<f32>,
     /// ADMM Cholesky-solve RHS (len max n_p).
     t: Vec<f32>,
+    /// Dispatch table for the dense/CSC kernels — resolved once when the
+    /// scratch is built (one env/cpuid check per worker, not per task)
+    /// and plumbed into every whole-block kernel `exec_task` runs.
+    kernels: &'static crate::linalg::KernelDispatch,
 }
 
 impl OpScratch {
@@ -685,6 +689,7 @@ impl OpScratch {
             psi: Vec::with_capacity(max_np),
             delta: Vec::with_capacity(max_mq),
             t: vec![0.0; max_np],
+            kernels: crate::linalg::kernels(),
         }
     }
 }

@@ -66,7 +66,7 @@ pub use backend::{
 pub use comm::{tree_aggregate, tree_aggregate_f32, CommStats};
 pub use dist::DistCluster;
 pub use pool::WorkerPool;
-pub use scenario::{ClusterScenario, TaskFate, SPECULATION_CAP};
+pub use scenario::{ClusterScenario, TaskFate};
 pub use simtime::{
     lpt_makespan, lpt_makespan_hetero, lpt_makespan_hetero_with, LptScratch, SimClock,
 };
@@ -252,8 +252,10 @@ pub fn parse_dist_spec(spec: &str) -> anyhow::Result<(f64, usize)> {
                 let v: f64 = val
                     .parse()
                     .map_err(|_| anyhow::anyhow!("bad --dist-spec quantile='{val}'"))?;
-                if !v.is_finite() || v <= 0.0 || v >= 1.0 {
-                    anyhow::bail!("--dist-spec quantile must be in (0, 1), got '{val}'");
+                // 1.0 is valid ("wait for everyone" — a never-arming
+                // trigger); 0 or below would arm before any task finished
+                if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                    anyhow::bail!("--dist-spec quantile must be in (0, 1], got '{val}'");
                 }
                 quantile = v;
             }
@@ -261,8 +263,10 @@ pub fn parse_dist_spec(spec: &str) -> anyhow::Result<(f64, usize)> {
                 let v: usize = val
                     .parse()
                     .map_err(|_| anyhow::anyhow!("bad --dist-spec copies='{val}'"))?;
-                if v > 8 {
-                    anyhow::bail!("--dist-spec copies must be <= 8, got '{val}'");
+                // 0 copies would be a trigger that fires and launches
+                // nothing — reject it at parse time
+                if v == 0 || v > 8 {
+                    anyhow::bail!("--dist-spec copies must be in 1..=8, got '{val}'");
                 }
                 copies = v;
             }
@@ -304,6 +308,12 @@ pub struct SimCluster {
     speeds_key: (usize, u64, u64),
     /// Per-task durations of the superstep in flight (reused).
     dur_buf: Vec<f64>,
+    /// Clean (unperturbed) per-task base costs of the superstep in
+    /// flight — the speculation model draws backup-copy durations from
+    /// these (reused; parallel to `dur_buf`).
+    base_buf: Vec<f64>,
+    /// Sort scratch for the speculation arm-quantile (reused).
+    spec_buf: Vec<f64>,
     /// Burst-failure per-slot worst coins of the superstep in flight
     /// (reused; empty unless the scenario has `failures:burst=executor`).
     burst_buf: Vec<usize>,
@@ -322,6 +332,8 @@ impl SimCluster {
             speeds: Vec::new(),
             speeds_key: (usize::MAX, 0, 0),
             dur_buf: Vec::new(),
+            base_buf: Vec::new(),
+            spec_buf: Vec::new(),
             burst_buf: Vec::new(),
             lpt: LptScratch::default(),
         };
@@ -410,6 +422,7 @@ impl SimCluster {
         let n_tasks = timed.len();
         self.refresh_burst(step, n_tasks);
         self.dur_buf.clear();
+        self.base_buf.clear();
         let mut out = Vec::with_capacity(timed.len());
         let mut first_err = None;
         let (mut stragglers, mut failures) = (0usize, 0usize);
@@ -427,6 +440,7 @@ impl SimCluster {
                 tolerant,
             );
             self.dur_buf.push(fate.duration);
+            self.base_buf.push(base);
             stragglers += usize::from(fate.straggled);
             failures += fate.extra_attempts;
             match result {
@@ -438,6 +452,16 @@ impl SimCluster {
                 }
             }
         }
+        // superstep-level speculation: rescue laggards past the arm
+        // quantile with seeded backup-copy draws (no-op unless the
+        // scenario is speculative — see ClusterScenario::speculate)
+        self.config.scenario.speculate(
+            step,
+            &mut self.dur_buf,
+            &self.base_buf,
+            &mut self.spec_buf,
+            tolerant,
+        );
         let makespan = lpt_makespan_hetero_with(&mut self.lpt, &self.dur_buf, &self.speeds);
         self.clock.add_compute(makespan);
         self.clock.add_injections(stragglers, failures);
@@ -509,6 +533,7 @@ impl SimCluster {
     /// the cached slot speeds, and advance the clock.
     fn charge_superstep(&mut self, step: usize, n_tasks: usize, tolerant: bool) {
         self.refresh_burst(step, n_tasks);
+        self.base_buf.clear();
         let (mut stragglers, mut failures) = (0usize, 0usize);
         for task in 0..n_tasks {
             let base = match self.config.cost {
@@ -524,9 +549,20 @@ impl SimCluster {
                 tolerant,
             );
             self.dur_buf[task] = fate.duration;
+            self.base_buf.push(base);
             stragglers += usize::from(fate.straggled);
             failures += fate.extra_attempts;
         }
+        // superstep-level speculation on the perturbed durations — the
+        // same model the dist clock flows through via charge_measured,
+        // which is what keeps sim and dist speculation clocks in step
+        self.config.scenario.speculate(
+            step,
+            &mut self.dur_buf,
+            &self.base_buf,
+            &mut self.spec_buf,
+            tolerant,
+        );
         let makespan = lpt_makespan_hetero_with(&mut self.lpt, &self.dur_buf, &self.speeds);
         self.clock.add_compute(makespan);
         self.clock.add_injections(stragglers, failures);

@@ -21,11 +21,18 @@
 //!   node fails all its tasks, not a random subset) — so at the same
 //!   seed and rate, burst mode never injects fewer failures than the
 //!   i.i.d. coins do;
-//! * **speculative execution** — optional Spark-style backup copies: a
-//!   straggling task's multiplier is capped at [`SPECULATION_CAP`] (the
-//!   backup launches when the task overruns its expected duration and
-//!   finishes one normal duration later), and at most one failed attempt
-//!   is re-charged.
+//! * **speculative execution** — optional Spark-style backup copies,
+//!   modelling the same quantile trigger the dist driver runs for real
+//!   (`--dist-spec` / [`ClusterScenario::spec_quantile`]): speculation
+//!   arms once the fastest `spec_quantile` fraction of the superstep's
+//!   tasks have finished (at `t_arm`, the k-th smallest perturbed
+//!   duration); every task still running then gets up to `spec_copies`
+//!   backup attempts whose durations are drawn from a dedicated seeded
+//!   substream (fresh straggler tail + failure-retry coins per attempt,
+//!   same distributions as the primary), and the task completes at
+//!   `min(original, t_arm + fastest backup)`.  Straggler/failure
+//!   *counters* are untouched — speculation changes simulated time, not
+//!   which events fired ([`ClusterScenario::speculate`]).
 //!
 //! Everything is deterministic from the scenario `seed`: injections are
 //! drawn from [`Xoshiro`] substreams keyed by `(tag, superstep, task)`,
@@ -49,11 +56,10 @@ use anyhow::{bail, Result};
 const TAG_STRAGGLER: u64 = 0x57A6;
 /// Substream tag for failure draws.
 const TAG_FAILURE: u64 = 0xFA11;
-
-/// With speculative execution, a straggling task is overtaken by a backup
-/// copy launched when it overruns its expected duration: the pair finishes
-/// at most `SPECULATION_CAP` × the normal duration.
-pub const SPECULATION_CAP: f64 = 2.0;
+/// Substream tag for speculative backup-copy draws — separate from the
+/// primary streams so arming speculation never shifts the straggler or
+/// failure coins of any task.
+const TAG_SPEC: u64 = 0x5BEC;
 
 /// What the scenario did to one task.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -192,8 +198,13 @@ impl ClusterScenario {
                             }
                             "seed" => sc.seed = val.parse().map_err(|_| bad(key, val))?,
                             "spec" => sc.speculative = parse_switch(val)?,
-                            "spec_quantile" => sc.spec_quantile = parse_quantile(val)?,
-                            "spec_copies" => sc.spec_copies = parse_copies(val)?,
+                            "spec_quantile" => {
+                                sc.spec_quantile =
+                                    parse_quantile(val, "stragglers.spec_quantile")?
+                            }
+                            "spec_copies" => {
+                                sc.spec_copies = parse_copies(val, "stragglers.spec_copies")?
+                            }
                             other => bail!("unknown stragglers parameter '{other}'"),
                         }
                     }
@@ -238,8 +249,12 @@ impl ClusterScenario {
                             }
                             "seed" => sc.seed = val.parse().map_err(|_| bad(key, val))?,
                             "spec" => sc.speculative = parse_switch(val)?,
-                            "spec_quantile" => sc.spec_quantile = parse_quantile(val)?,
-                            "spec_copies" => sc.spec_copies = parse_copies(val)?,
+                            "spec_quantile" => {
+                                sc.spec_quantile = parse_quantile(val, "failures.spec_quantile")?
+                            }
+                            "spec_copies" => {
+                                sc.spec_copies = parse_copies(val, "failures.spec_copies")?
+                            }
                             other => bail!("unknown failures parameter '{other}'"),
                         }
                     }
@@ -451,9 +466,6 @@ impl ClusterScenario {
                 if self.straggler_shape > 0.0 {
                     mult *= (1.0 - tail_u.min(1.0 - 1e-12)).powf(-1.0 / self.straggler_shape);
                 }
-                if self.speculative {
-                    mult = mult.min(SPECULATION_CAP);
-                }
                 if !tolerant {
                     duration *= mult;
                 }
@@ -485,17 +497,102 @@ impl ClusterScenario {
                 }
                 _ => self.iid_attempts(step, task),
             };
-            // a speculative backup caps what the clock sees at the
-            // configured copy budget (one backup by default)
-            let charged = if self.speculative { extra.min(self.spec_copies) } else { extra };
             if !tolerant {
                 // each failed attempt re-ran the (possibly straggling)
-                // task from scratch before the attempt that succeeded
-                duration *= (1 + charged) as f64;
+                // task from scratch before the attempt that succeeded;
+                // rescue by a backup copy is a *superstep-level* effect,
+                // applied afterwards by [`ClusterScenario::speculate`]
+                duration *= (1 + extra) as f64;
             }
         }
 
         TaskFate { duration, straggled, extra_attempts: extra }
+    }
+
+    /// Apply the speculative-execution cost model to one superstep's
+    /// perturbed task durations — the sim mirror of the dist driver's
+    /// quantile-triggered backup launches, so the sim clock *predicts*
+    /// dist speculation instead of approximating it with a flat cap.
+    ///
+    /// Model: the driver arms speculation once the fastest
+    /// `spec_quantile` fraction of the step's tasks (k = ⌈q·n⌉) have
+    /// gathered, i.e. at `t_arm`, the k-th smallest perturbed duration.
+    /// Every task still running at `t_arm` gets `spec_copies` backup
+    /// attempts, drawn from the dedicated `TAG_SPEC` substream keyed
+    /// `(step, task)` — each attempt re-rolls a straggler coin + tail
+    /// and a failure-retry walk on the task's clean `base` cost, exactly
+    /// the distributions the primary attempt was drawn from.  The task
+    /// then completes at `min(original, t_arm + fastest backup)`.
+    ///
+    /// * `durations` — perturbed per-task durations (from
+    ///   [`ClusterScenario::perturb_slotted`]), rewritten in place.
+    /// * `bases` — the same tasks' clean base costs (backup copies rerun
+    ///   from scratch, so they draw on the base, not the perturbed cost).
+    /// * `scratch` — caller-owned sort buffer (the hot loop reuses it;
+    ///   no allocation at steady state).
+    /// * `tolerant` — straggler-tolerant supersteps never wait on
+    ///   laggards, so there is nothing for speculation to rescue.
+    ///
+    /// Straggled/extra-attempt counters are left to the perturb pass:
+    /// speculation changes *time*, not which events fired.  With
+    /// `spec_quantile = 1.0` the trigger waits for every task — a valid
+    /// (never-arming) configuration.
+    pub fn speculate(
+        &self,
+        step: usize,
+        durations: &mut [f64],
+        bases: &[f64],
+        scratch: &mut Vec<f64>,
+        tolerant: bool,
+    ) {
+        if !self.speculative || tolerant || durations.is_empty() {
+            return;
+        }
+        debug_assert_eq!(durations.len(), bases.len());
+        let n = durations.len();
+        let k = ((self.spec_quantile * n as f64).ceil() as usize).clamp(1, n);
+        scratch.clear();
+        scratch.extend_from_slice(durations);
+        scratch.sort_unstable_by(f64::total_cmp);
+        let t_arm = scratch[k - 1];
+        let root = Xoshiro::new(self.seed);
+        for (task, d) in durations.iter_mut().enumerate() {
+            if *d <= t_arm {
+                continue;
+            }
+            let base = bases[task];
+            let base = if base.is_finite() && base > 0.0 { base } else { 0.0 };
+            let mut rng = root.substream(TAG_SPEC, step as u64, task as u64);
+            let mut best = f64::INFINITY;
+            for _ in 0..self.spec_copies.max(1) {
+                // fixed draw order per attempt (straggler coin, tail,
+                // failure walk) so the clock is a pure function of
+                // (seed, step, task) — same discipline as perturb_impl
+                let mut mult = 1.0f64;
+                if self.straggler_p > 0.0 {
+                    let hit = rng.f64() < self.straggler_p;
+                    let tail_u = rng.f64();
+                    if hit {
+                        mult = self.straggler_slow.max(1.0);
+                        if self.straggler_shape > 0.0 {
+                            mult *=
+                                (1.0 - tail_u.min(1.0 - 1e-12)).powf(-1.0 / self.straggler_shape);
+                        }
+                    }
+                }
+                let mut extra = 0usize;
+                if self.failure_p > 0.0 {
+                    while extra < self.max_retries && rng.f64() < self.failure_p {
+                        extra += 1;
+                    }
+                }
+                best = best.min(base * mult * (1 + extra) as f64);
+            }
+            let rescued = t_arm + best;
+            if rescued < *d {
+                *d = rescued;
+            }
+        }
     }
 }
 
@@ -513,25 +610,29 @@ fn parse_prob(val: &str, what: &str) -> Result<f64> {
     Ok(v)
 }
 
-/// The speculation trigger quantile must leave someone to speculate on.
-fn parse_quantile(val: &str) -> Result<f64> {
+/// The speculation trigger quantile: (0, 1].  0 (or less) would arm the
+/// trigger before any task finished; values above 1 could never arm it
+/// at all.  Exactly 1.0 is valid — "wait for everyone", a deliberate
+/// never-arming configuration.
+fn parse_quantile(val: &str, clause: &str) -> Result<f64> {
     let v: f64 = val
         .parse()
-        .map_err(|_| anyhow::anyhow!("bad scenario parameter spec_quantile='{val}'"))?;
-    if !v.is_finite() || !(0.0..1.0).contains(&v) || v <= 0.0 {
-        bail!("spec_quantile must be in (0, 1), got '{val}'");
+        .map_err(|_| anyhow::anyhow!("bad scenario parameter {clause}='{val}'"))?;
+    if !v.is_finite() || v <= 0.0 || v > 1.0 {
+        bail!("{clause} must be in (0, 1], got '{val}'");
     }
     Ok(v)
 }
 
-/// Backup copies per laggard: small by design — each copy is a full
-/// re-execution, and more than a handful just burns the idle fleet.
-fn parse_copies(val: &str) -> Result<usize> {
+/// Backup copies per laggard: 1..=8.  0 copies would be a trigger that
+/// fires and then launches nothing; more than a handful just burns the
+/// idle fleet (each copy is a full re-execution).
+fn parse_copies(val: &str, clause: &str) -> Result<usize> {
     let v: usize = val
         .parse()
-        .map_err(|_| anyhow::anyhow!("bad scenario parameter spec_copies='{val}'"))?;
-    if v > 8 {
-        bail!("spec_copies must be <= 8, got '{val}'");
+        .map_err(|_| anyhow::anyhow!("bad scenario parameter {clause}='{val}'"))?;
+    if v == 0 || v > 8 {
+        bail!("{clause} must be in 1..=8, got '{val}'");
     }
     Ok(v)
 }
@@ -615,6 +716,44 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_bad_speculation_knobs() {
+        // quantile outside (0, 1] is a hard error naming clause + value
+        for spec in [
+            "stragglers:spec,spec_quantile=0",
+            "stragglers:spec,spec_quantile=-0.5",
+            "stragglers:spec,spec_quantile=1.5",
+            "stragglers:spec,spec_quantile=nan",
+        ] {
+            let err = ClusterScenario::parse(spec).unwrap_err().to_string();
+            assert!(err.contains("stragglers.spec_quantile"), "{spec}: {err}");
+        }
+        let err = ClusterScenario::parse("failures:spec,spec_quantile=2")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("failures.spec_quantile"), "{err}");
+        assert!(err.contains("(0, 1]"), "{err}");
+        assert!(err.contains("'2'"), "{err}");
+        // copies = 0 is a trigger that fires and launches nothing
+        let err = ClusterScenario::parse("failures:spec,spec_copies=0")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("failures.spec_copies"), "{err}");
+        assert!(err.contains("1..=8"), "{err}");
+        assert!(ClusterScenario::parse("stragglers:spec,spec_copies=9").is_err());
+        // the boundary values stay valid
+        assert_eq!(
+            ClusterScenario::parse("stragglers:spec,spec_quantile=1.0")
+                .unwrap()
+                .spec_quantile,
+            1.0
+        );
+        assert_eq!(
+            ClusterScenario::parse("stragglers:spec,spec_copies=8").unwrap().spec_copies,
+            8
+        );
+    }
+
+    #[test]
     fn speeds_mark_leading_slots_slow() {
         let sc = ClusterScenario::parse("hetero:frac=0.25,speed=0.5").unwrap();
         let sp = sc.speeds(8);
@@ -662,12 +801,82 @@ mod tests {
     }
 
     #[test]
-    fn speculation_caps_stragglers_and_retries() {
-        let sc =
+    fn speculation_no_longer_caps_per_task_perturbation() {
+        // the per-task pass charges the full straggler/failure cost;
+        // rescue is a superstep-level effect (speculate), not a cap
+        let spec =
             ClusterScenario::parse("stragglers:p=1,slow=10x,spec+failures:p=1,retries=3").unwrap();
-        let fate = sc.perturb(0, 0, 1.0, false);
-        // multiplier capped at SPECULATION_CAP, at most one re-charge
-        assert_eq!(fate.duration, SPECULATION_CAP * 2.0);
+        let plain = ClusterScenario { speculative: false, ..spec.clone() };
+        let f_spec = spec.perturb(0, 0, 1.0, false);
+        let f_plain = plain.perturb(0, 0, 1.0, false);
+        assert_eq!(f_spec, f_plain);
+        assert_eq!(f_spec.duration, 10.0 * 4.0);
+    }
+
+    #[test]
+    fn speculate_rescues_only_tasks_past_the_arm_quantile() {
+        let sc = ClusterScenario::parse(
+            "stragglers:p=0.4,slow=20x,seed=4,spec,spec_quantile=0.5,spec_copies=2",
+        )
+        .unwrap();
+        let mut scratch = Vec::new();
+        let mut rescued_any = false;
+        for step in 0..12 {
+            let n = 8usize;
+            let bases = vec![1.0f64; n];
+            let raw: Vec<f64> =
+                (0..n).map(|t| sc.perturb(step, t, 1.0, false).duration).collect();
+            // k = ceil(0.5 * 8) = 4 → t_arm is the 4th smallest duration
+            let mut sorted = raw.clone();
+            sorted.sort_unstable_by(f64::total_cmp);
+            let t_arm = sorted[3];
+            let mut durs = raw.clone();
+            sc.speculate(step, &mut durs, &bases, &mut scratch, false);
+            for t in 0..n {
+                assert!(durs[t] <= raw[t], "step {step} task {t}: rescue never slows a task");
+                if raw[t] <= t_arm {
+                    assert_eq!(durs[t], raw[t], "step {step} task {t}: finished before arming");
+                } else {
+                    assert!(
+                        durs[t] >= t_arm,
+                        "step {step} task {t}: a backup cannot finish before the trigger armed"
+                    );
+                    if durs[t] < raw[t] {
+                        rescued_any = true;
+                    }
+                }
+            }
+            // deterministic: same inputs → bit-identical clock
+            let mut again = raw.clone();
+            sc.speculate(step, &mut again, &bases, &mut scratch, false);
+            assert_eq!(durs, again);
+        }
+        assert!(rescued_any, "a 20x straggler tail at p=0.4 should get some rescues");
+    }
+
+    #[test]
+    fn speculate_quantile_one_and_tolerant_are_noops() {
+        let base = ClusterScenario::parse(
+            "stragglers:p=0.6,slow=12x,seed=6,spec+failures:p=0.3,retries=2",
+        )
+        .unwrap();
+        let q1 = ClusterScenario { spec_quantile: 1.0, ..base.clone() };
+        let mut scratch = Vec::new();
+        let raw: Vec<f64> = (0..10).map(|t| base.perturb(1, t, 1.0, false).duration).collect();
+        let bases = vec![1.0f64; 10];
+        // q = 1.0: the trigger waits for every task — nothing to rescue
+        let mut durs = raw.clone();
+        q1.speculate(1, &mut durs, &bases, &mut scratch, false);
+        assert_eq!(durs, raw);
+        // tolerant steps never wait on laggards, so nothing is rescued
+        let mut durs = raw.clone();
+        base.speculate(1, &mut durs, &bases, &mut scratch, true);
+        assert_eq!(durs, raw);
+        // and a non-speculative scenario is untouched by construction
+        let plain = ClusterScenario { speculative: false, ..base };
+        let mut durs = raw.clone();
+        plain.speculate(1, &mut durs, &bases, &mut scratch, false);
+        assert_eq!(durs, raw);
     }
 
     #[test]

@@ -45,11 +45,21 @@ impl DenseMatrix {
     }
 
     pub fn gemv_into(&self, x: &[f32], out: &mut [f32]) {
-        linalg::gemv(&self.data, self.rows, self.cols, x, out);
+        self.gemv_into_with(linalg::kernels(), x, out);
     }
 
     pub fn gemv_t_into(&self, x: &[f32], out: &mut [f32]) {
-        linalg::gemv_t(&self.data, self.rows, self.cols, x, out);
+        self.gemv_t_into_with(linalg::kernels(), x, out);
+    }
+
+    /// [`Self::gemv_into`] through an explicit dispatch table.
+    pub fn gemv_into_with(&self, kd: &linalg::KernelDispatch, x: &[f32], out: &mut [f32]) {
+        (kd.gemv)(&self.data, self.rows, self.cols, x, out);
+    }
+
+    /// [`Self::gemv_t_into`] through an explicit dispatch table.
+    pub fn gemv_t_into_with(&self, kd: &linalg::KernelDispatch, x: &[f32], out: &mut [f32]) {
+        (kd.gemv_t)(&self.data, self.rows, self.cols, x, out);
     }
 
     /// Copy of the sub-matrix `[r0, r1) x [c0, c1)`.

@@ -89,8 +89,19 @@ impl Block {
 
     /// out = X w
     pub fn margins_into(&self, w: &[f32], out: &mut [f32]) {
+        self.margins_into_with(crate::linalg::kernels(), w, out)
+    }
+
+    /// [`Self::margins_into`] through an explicit dispatch table (the
+    /// handle `GridOp::exec_task` plumbs down from its `OpScratch`).
+    pub fn margins_into_with(
+        &self,
+        kd: &crate::linalg::KernelDispatch,
+        w: &[f32],
+        out: &mut [f32],
+    ) {
         match &self.repr {
-            BlockRepr::Dense(m) => m.gemv_into(w, out),
+            BlockRepr::Dense(m) => m.gemv_into_with(kd, w, out),
             BlockRepr::Sparse(m) => m.gemv_into(w, out),
         }
     }
@@ -99,9 +110,14 @@ impl Block {
     /// — the partitioner builds it for every per-partition block; without
     /// it the CSR scatter kernel runs).
     pub fn atx_into(&self, v: &[f32], out: &mut [f32]) {
+        self.atx_into_with(crate::linalg::kernels(), v, out)
+    }
+
+    /// [`Self::atx_into`] through an explicit dispatch table.
+    pub fn atx_into_with(&self, kd: &crate::linalg::KernelDispatch, v: &[f32], out: &mut [f32]) {
         match &self.repr {
-            BlockRepr::Dense(m) => m.gemv_t_into(v, out),
-            BlockRepr::Sparse(m) => m.gemv_t_into(v, out),
+            BlockRepr::Dense(m) => m.gemv_t_into_with(kd, v, out),
+            BlockRepr::Sparse(m) => m.gemv_t_into_with(kd, v, out),
         }
     }
 

@@ -225,24 +225,26 @@ impl SparseMatrix {
     /// every row; terms per slot match [`gemv_t_scatter_into`] in value
     /// and order (ascending row, zero inputs skipped), so the two are
     /// bit-identical.  Without the mirror this falls back to the scatter
-    /// kernel.
+    /// kernel.  Runs the active dispatch table's block-column strip
+    /// kernel (`spmv_t_csc`, 4 columns in lockstep).
     pub fn gemv_t_into(&self, x: &[f32], out: &mut [f32]) {
+        self.gemv_t_into_with(crate::linalg::kernels(), x, out)
+    }
+
+    /// [`gemv_t_into`] through an explicit dispatch table — the variant
+    /// `GridOp::exec_task` plumbs its per-scratch handle into.
+    pub fn gemv_t_into_with(
+        &self,
+        kd: &crate::linalg::KernelDispatch,
+        x: &[f32],
+        out: &mut [f32],
+    ) {
         debug_assert_eq!(x.len(), self.rows);
         debug_assert_eq!(out.len(), self.cols);
         if !self.has_csc() {
             return self.gemv_t_scatter_into(x, out);
         }
-        for j in 0..self.cols {
-            let (s, e) = (self.csc_indptr[j], self.csc_indptr[j + 1]);
-            let mut acc = 0.0f32;
-            for k in s..e {
-                let xi = x[self.csc_rows[k] as usize];
-                if xi != 0.0 {
-                    acc += xi * self.csc_vals[k];
-                }
-            }
-            out[j] = acc;
-        }
+        (kd.spmv_t_csc)(&self.csc_indptr, &self.csc_rows, &self.csc_vals, x, out)
     }
 
     /// out = Xᵀ x via CSR row scatter — the pre-CSC implementation, kept

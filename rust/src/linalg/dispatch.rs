@@ -1,0 +1,184 @@
+//! Runtime kernel dispatch — one table selected once per process.
+//!
+//! Structured like kubecl's matmul stack in miniature: the *bodies*
+//! (`kernels.rs`) own the register-tiling scheme, this module owns the
+//! global selection seam.  A [`KernelDispatch`] is a plain table of fn
+//! pointers; two static tables exist per build (baseline "scalar" and,
+//! on x86_64, AVX2+FMA), and [`kernels()`] picks one on first use:
+//!
+//! * `DDOPT_KERNELS` unset or `simd`  → feature detection
+//!   (`is_x86_feature_detected!` AVX2+FMA on x86_64; aarch64's baseline
+//!   already includes NEON, so detection is a no-op there).
+//! * `DDOPT_KERNELS=scalar` → the baseline table, regardless of CPU.
+//! * anything else → panic with the accepted values (a typo silently
+//!   benchmarking the wrong path would be worse).
+//!
+//! Both tables execute the identical arithmetic (see `kernels.rs`), so
+//! the env var changes throughput, never results — CI runs the whole
+//! test suite under both settings to keep that true.
+
+use std::sync::OnceLock;
+
+use super::kernels as k;
+
+/// Which instruction set a [`KernelDispatch`] was compiled for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Baseline codegen (SSE2 on x86_64 — "scalar" means no
+    /// runtime-detected features, not no vector unit).
+    Scalar,
+    /// 256-bit AVX2 + FMA codegen (x86_64, runtime-detected).
+    Avx2Fma,
+    /// NEON baseline (aarch64 — always available, same table entries as
+    /// Scalar but labelled for reporting).
+    Neon,
+}
+
+impl Isa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2Fma => "avx2+fma",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// The dispatch table: every hot kernel the solvers/supersteps call,
+/// as plain fn pointers (const-constructible, `'static`, no vtable).
+pub struct KernelDispatch {
+    pub isa: Isa,
+    /// x · y
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// y += a x
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+    /// x *= a
+    pub scale: fn(f32, &mut [f32]),
+    /// out = A x, A row-major [n, m]
+    pub gemv: fn(&[f32], usize, usize, &[f32], &mut [f32]),
+    /// out = Aᵀ x, A row-major [n, m]
+    pub gemv_t: fn(&[f32], usize, usize, &[f32], &mut [f32]),
+    /// out[j] = Σ column-j CSC entries · x (indptr, rows, vals, x, out)
+    pub spmv_t_csc: fn(&[usize], &[u32], &[f32], &[f32], &mut [f32]),
+    /// delta[i] -= eta (lam delta[i] + mu[i])
+    pub svrg_delta: fn(&mut [f32], &[f32], f32, f32),
+}
+
+static SCALAR: KernelDispatch = KernelDispatch {
+    isa: Isa::Scalar,
+    dot: k::dot_scalar,
+    axpy: k::axpy_scalar,
+    scale: k::scale_scalar,
+    gemv: k::gemv_scalar,
+    gemv_t: k::gemv_t_scalar,
+    spmv_t_csc: k::spmv_t_csc_scalar,
+    svrg_delta: k::svrg_delta_scalar,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_FMA: KernelDispatch = KernelDispatch {
+    isa: Isa::Avx2Fma,
+    dot: k::dot_avx2,
+    axpy: k::axpy_avx2,
+    scale: k::scale_avx2,
+    gemv: k::gemv_avx2,
+    gemv_t: k::gemv_t_avx2,
+    spmv_t_csc: k::spmv_t_csc_avx2,
+    svrg_delta: k::svrg_delta_avx2,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: KernelDispatch = KernelDispatch {
+    isa: Isa::Neon,
+    // aarch64's ABI baseline includes NEON, so the baseline entries ARE
+    // the NEON entries; the separate table only re-labels the ISA.
+    dot: k::dot_scalar,
+    axpy: k::axpy_scalar,
+    scale: k::scale_scalar,
+    gemv: k::gemv_scalar,
+    gemv_t: k::gemv_t_scalar,
+    spmv_t_csc: k::spmv_t_csc_scalar,
+    svrg_delta: k::svrg_delta_scalar,
+};
+
+/// The baseline table — what `DDOPT_KERNELS=scalar` runs, and the
+/// reference side of every parity assertion.
+pub fn scalar_table() -> &'static KernelDispatch {
+    &SCALAR
+}
+
+/// The best table this CPU supports, by feature detection (ignores the
+/// env override — used by the perf harness to report both paths and by
+/// parity tests to exercise the SIMD entries even under
+/// `DDOPT_KERNELS=scalar`).
+#[cfg(target_arch = "x86_64")]
+pub fn detected() -> &'static KernelDispatch {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        &AVX2_FMA
+    } else {
+        &SCALAR
+    }
+}
+
+/// aarch64: NEON is part of the platform baseline, nothing to detect.
+#[cfg(target_arch = "aarch64")]
+pub fn detected() -> &'static KernelDispatch {
+    &NEON
+}
+
+/// Other architectures: baseline codegen only.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn detected() -> &'static KernelDispatch {
+    &SCALAR
+}
+
+static ACTIVE: OnceLock<&'static KernelDispatch> = OnceLock::new();
+
+/// The process-wide active table — selected once on first call from
+/// `DDOPT_KERNELS` + feature detection, then a single atomic load.
+pub fn kernels() -> &'static KernelDispatch {
+    ACTIVE.get_or_init(|| match std::env::var("DDOPT_KERNELS") {
+        Err(_) => detected(),
+        Ok(v) if v == "simd" => detected(),
+        Ok(v) if v == "scalar" => &SCALAR,
+        Ok(v) => panic!("DDOPT_KERNELS={v:?} not recognized (expected \"scalar\" or \"simd\")"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_table_is_baseline() {
+        assert_eq!(scalar_table().isa, Isa::Scalar);
+    }
+
+    #[test]
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    fn detected_table_matches_cpu() {
+        let t = detected();
+        #[cfg(target_arch = "x86_64")]
+        {
+            let want = if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                Isa::Avx2Fma
+            } else {
+                Isa::Scalar
+            };
+            assert_eq!(t.isa, want);
+        }
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(t.isa, Isa::Neon);
+    }
+
+    #[test]
+    fn active_table_honors_env() {
+        // The process env is set (or not) before any test runs; whatever
+        // it says, the active table must be one of the two valid picks.
+        let active = kernels();
+        match std::env::var("DDOPT_KERNELS").as_deref() {
+            Ok("scalar") => assert_eq!(active.isa, Isa::Scalar),
+            _ => assert_eq!(active.isa, detected().isa),
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Dense factorization: in-place Cholesky + triangular solves.
+//!
+//! Used by the native ADMM path (the XLA path uses the `admm_factor`
+//! artifact instead).  Accumulation is f64 for the pivot recurrences —
+//! these are O(n³) over a small n (the per-partition feature count), so
+//! the extra precision is free and keeps the factor stable.
+
+/// In-place Cholesky of a symmetric positive-definite row-major [n, n]
+/// matrix; lower triangle holds L on return, upper is zeroed.
+pub fn cholesky_in_place(a: &mut [f32], n: usize) -> Result<(), String> {
+    debug_assert_eq!(a.len(), n * n);
+    for j in 0..n {
+        let mut d = a[j * n + j] as f64;
+        for k in 0..j {
+            let v = a[j * n + k] as f64;
+            d -= v * v;
+        }
+        if d <= 0.0 {
+            return Err(format!("matrix not SPD at pivot {j} of {n}x{n} (d={d})"));
+        }
+        let ljj = d.sqrt();
+        a[j * n + j] = ljj as f32;
+        // Split rows j.. at row j so we can read row j while writing rows >j.
+        let (head, tail) = a.split_at_mut((j + 1) * n);
+        let row_j = &head[j * n..j * n + j + 1];
+        for chunk in tail.chunks_exact_mut(n) {
+            let mut s = chunk[j] as f64;
+            for k in 0..j {
+                s -= chunk[k] as f64 * row_j[k] as f64;
+            }
+            chunk[j] = (s / ljj) as f32;
+        }
+    }
+    // Zero the strict upper triangle in one pass after the pivot loop
+    // (doing it inside the loop re-touched every row n times).
+    for i in 0..n {
+        for k in i + 1..n {
+            a[i * n + k] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve L y = b (forward) then L^T x = y (backward); `l` is row-major
+/// lower-triangular [n, n], `b` is overwritten with x.
+pub fn cho_solve(l: &[f32], n: usize, b: &mut [f32]) {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    // forward: L y = b
+    for i in 0..n {
+        let s = super::dot(&l[i * n..i * n + i], &b[..i]);
+        b[i] = (b[i] - s) / l[i * n + i];
+    }
+    // backward: L^T x = y
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * b[k];
+        }
+        b[i] = s / l[i * n + i];
+    }
+}

@@ -1,0 +1,366 @@
+//! Canonical kernel bodies and their per-ISA entry points.
+//!
+//! Every kernel is written ONCE as an `#[inline(always)]` body with a
+//! fixed register-tiling scheme (accumulator count, combine order, tail
+//! handling).  Each ISA variant is a thin `#[target_feature]` wrapper
+//! that calls the same body, so the only thing that differs between the
+//! scalar and SIMD entries is *codegen width* — never the arithmetic:
+//!
+//! * rustc emits `fmul`/`fadd` without the fast-math `contract` flag, so
+//!   FMA-capable codegen does not fuse `a*b + c` into a single rounded
+//!   fma — results match the scalar entry bit for bit.
+//! * The accumulator blocks are fixed-size arrays (`[f32; 8]`); LLVM's
+//!   SLP vectorizer maps lane `l` of the array to lane `l` of a vector
+//!   register and never reassociates across lanes, so the combine order
+//!   written below is the combine order executed on every ISA.
+//!
+//! This is what makes `DDOPT_KERNELS=scalar` vs the dispatched path
+//! bitwise identical (asserted kernel-by-kernel in
+//! `tests/kernel_parity.rs` and end-to-end by running the whole test
+//! suite under both settings in CI).
+//!
+//! Tiling schemes (see README §Perf for the narrative version):
+//!
+//! | kernel       | tile                | reduction order                  |
+//! |--------------|---------------------|----------------------------------|
+//! | `dot`        | 8 accumulators      | pairwise `((0+1)+(2+3))+((4+5)+(6+7))`, sequential tail |
+//! | `gemv`       | 4 rows x 8 accs     | per row, identical to `dot`      |
+//! | `gemv_t`     | row-axpy stream     | sequential over rows (zero-skip) |
+//! | `spmv_t_csc` | 4-column lockstep   | per column, sequential ascending |
+//! | `axpy`/`scale`/`svrg_delta` | elementwise | n/a (no reduction)      |
+
+/// Fixed pairwise combine of an 8-lane accumulator block — the single
+/// canonical reduction order shared by `dot` and every kernel that must
+/// agree with it bitwise.
+#[inline(always)]
+fn combine8(acc: &[f32; 8]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// x · y — 8 independent accumulators (breaks the fp-add dependence
+/// chain; §Perf iteration 1 lifted margins from 5.6 to ~8 GFLOP/s when
+/// going 4→8), pairwise combine, sequential scalar tail.
+#[inline(always)]
+fn dot_body(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let (x, y) = (&x[..n], &y[..n]);
+    let mut acc = [0.0f32; 8];
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let b = i * 8;
+        for l in 0..8 {
+            acc[l] += x[b + l] * y[b + l];
+        }
+    }
+    let mut s = combine8(&acc);
+    for i in chunks * 8..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// y += a * x
+#[inline(always)]
+fn axpy_body(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let (x, y) = (&x[..n], &mut y[..n]);
+    for i in 0..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// x *= a
+#[inline(always)]
+fn scale_body(a: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// out = A x (A row-major [n, m]).  Register tile: 4 rows x 8
+/// accumulators each, interleaved in one inner loop so every load of
+/// `x[j]` feeds four multiply-adds while each row keeps the exact `dot`
+/// accumulation order — the invariant `gemv(A, x)[i] == dot(row_i, x)`
+/// holds bitwise (pinned in tests), so per-row and whole-block margins
+/// paths agree no matter which one a coordinator takes.
+#[inline(always)]
+fn gemv_body(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(out.len(), n);
+    let mut i = 0;
+    while i + 4 <= n {
+        let r0 = &a[i * m..(i + 1) * m];
+        let r1 = &a[(i + 1) * m..(i + 2) * m];
+        let r2 = &a[(i + 2) * m..(i + 3) * m];
+        let r3 = &a[(i + 3) * m..(i + 4) * m];
+        let mut acc0 = [0.0f32; 8];
+        let mut acc1 = [0.0f32; 8];
+        let mut acc2 = [0.0f32; 8];
+        let mut acc3 = [0.0f32; 8];
+        let chunks = m / 8;
+        for c in 0..chunks {
+            let b = c * 8;
+            for l in 0..8 {
+                let xl = x[b + l];
+                acc0[l] += r0[b + l] * xl;
+                acc1[l] += r1[b + l] * xl;
+                acc2[l] += r2[b + l] * xl;
+                acc3[l] += r3[b + l] * xl;
+            }
+        }
+        let mut s0 = combine8(&acc0);
+        let mut s1 = combine8(&acc1);
+        let mut s2 = combine8(&acc2);
+        let mut s3 = combine8(&acc3);
+        for j in chunks * 8..m {
+            let xj = x[j];
+            s0 += r0[j] * xj;
+            s1 += r1[j] * xj;
+            s2 += r2[j] * xj;
+            s3 += r3[j] * xj;
+        }
+        out[i] = s0;
+        out[i + 1] = s1;
+        out[i + 2] = s2;
+        out[i + 3] = s3;
+        i += 4;
+    }
+    for k in i..n {
+        out[k] = dot_body(&a[k * m..(k + 1) * m], x);
+    }
+}
+
+/// out = A^T x (A row-major [n, m]); accumulated row-wise so the matrix
+/// is streamed once in memory order rather than strided per column.
+/// Rows with `x[i] == 0` are skipped entirely (bitwise contract with
+/// the sparse scatter path, which never visits them).
+#[inline(always)]
+fn gemv_t_body(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(out.len(), m);
+    out.fill(0.0);
+    for i in 0..n {
+        let xi = x[i];
+        if xi != 0.0 {
+            axpy_body(xi, &a[i * m..(i + 1) * m], out);
+        }
+    }
+}
+
+/// out[j] = Σ_k x[rows[k]] * vals[k] over column j's CSC slice — the
+/// block-column Aᵀx kernel.  Columns are tiled in strips of 4; the
+/// strip walks the four column slices in lockstep (one independent
+/// accumulator per column, so the four gather→multiply→add chains
+/// overlap instead of serializing on one accumulator), then finishes
+/// each column's tail sequentially.  Entries within a column are always
+/// consumed in ascending-row order with the `x[row] == 0` skip, i.e. in
+/// EXACTLY the order the plain one-column-at-a-time loop uses — which
+/// keeps the CSC mirror bitwise identical to the CSR scatter kernel
+/// (`csc_mirror_matches_scatter_bitwise`) and the strip kernel bitwise
+/// identical to the scalar entry.
+#[inline(always)]
+fn spmv_t_csc_body(indptr: &[usize], rows: &[u32], vals: &[f32], x: &[f32], out: &mut [f32]) {
+    let ncols = out.len();
+    debug_assert_eq!(indptr.len(), ncols + 1);
+    debug_assert_eq!(rows.len(), vals.len());
+    #[inline(always)]
+    fn col_partial(rows: &[u32], vals: &[f32], x: &[f32], s: usize, e: usize, mut acc: f32) -> f32 {
+        for k in s..e {
+            let xi = x[rows[k] as usize];
+            if xi != 0.0 {
+                acc += xi * vals[k];
+            }
+        }
+        acc
+    }
+    let mut j = 0;
+    while j + 4 <= ncols {
+        let s0 = indptr[j];
+        let e0 = indptr[j + 1];
+        let s1 = e0;
+        let e1 = indptr[j + 2];
+        let s2 = e1;
+        let e2 = indptr[j + 3];
+        let s3 = e2;
+        let e3 = indptr[j + 4];
+        let lmin = (e0 - s0).min(e1 - s1).min(e2 - s2).min(e3 - s3);
+        let mut a0 = 0.0f32;
+        let mut a1 = 0.0f32;
+        let mut a2 = 0.0f32;
+        let mut a3 = 0.0f32;
+        for k in 0..lmin {
+            let x0 = x[rows[s0 + k] as usize];
+            if x0 != 0.0 {
+                a0 += x0 * vals[s0 + k];
+            }
+            let x1 = x[rows[s1 + k] as usize];
+            if x1 != 0.0 {
+                a1 += x1 * vals[s1 + k];
+            }
+            let x2 = x[rows[s2 + k] as usize];
+            if x2 != 0.0 {
+                a2 += x2 * vals[s2 + k];
+            }
+            let x3 = x[rows[s3 + k] as usize];
+            if x3 != 0.0 {
+                a3 += x3 * vals[s3 + k];
+            }
+        }
+        out[j] = col_partial(rows, vals, x, s0 + lmin, e0, a0);
+        out[j + 1] = col_partial(rows, vals, x, s1 + lmin, e1, a1);
+        out[j + 2] = col_partial(rows, vals, x, s2 + lmin, e2, a2);
+        out[j + 3] = col_partial(rows, vals, x, s3 + lmin, e3, a3);
+        j += 4;
+    }
+    while j < ncols {
+        out[j] = col_partial(rows, vals, x, indptr[j], indptr[j + 1], 0.0);
+        j += 1;
+    }
+}
+
+/// delta[i] -= eta * (lam * delta[i] + mu[i]) — the SVRG window update,
+/// elementwise (no reduction, so no ordering contract beyond matching
+/// the scalar expression term-for-term).
+#[inline(always)]
+fn svrg_delta_body(delta: &mut [f32], mu: &[f32], eta: f32, lam: f32) {
+    debug_assert_eq!(delta.len(), mu.len());
+    let n = delta.len();
+    let (delta, mu) = (&mut delta[..n], &mu[..n]);
+    for i in 0..n {
+        delta[i] -= eta * (lam * delta[i] + mu[i]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar entries: the bodies compiled at the crate's baseline feature
+// level (SSE2 on x86_64, NEON on aarch64 — both baselines are part of
+// the platform ABI, so "scalar" here means "no runtime-detected
+// features", not "no vector unit").
+// ---------------------------------------------------------------------
+
+pub fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    dot_body(x, y)
+}
+
+pub fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    axpy_body(a, x, y)
+}
+
+pub fn scale_scalar(a: f32, x: &mut [f32]) {
+    scale_body(a, x)
+}
+
+pub fn gemv_scalar(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
+    gemv_body(a, n, m, x, out)
+}
+
+pub fn gemv_t_scalar(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
+    gemv_t_body(a, n, m, x, out)
+}
+
+pub fn spmv_t_csc_scalar(indptr: &[usize], rows: &[u32], vals: &[f32], x: &[f32], out: &mut [f32]) {
+    spmv_t_csc_body(indptr, rows, vals, x, out)
+}
+
+pub fn svrg_delta_scalar(delta: &mut [f32], mu: &[f32], eta: f32, lam: f32) {
+    svrg_delta_body(delta, mu, eta, lam)
+}
+
+// ---------------------------------------------------------------------
+// AVX2+FMA entries (x86_64): the SAME bodies recompiled with 256-bit
+// codegen.  The `#[target_feature]` fns are unsafe to call on hardware
+// without the features; the safe wrappers below are only ever installed
+// into a dispatch table after `is_x86_feature_detected!` confirms both.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot_tf(x: &[f32], y: &[f32]) -> f32 {
+        dot_body(x, y)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn axpy_tf(a: f32, x: &[f32], y: &mut [f32]) {
+        axpy_body(a, x, y)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn scale_tf(a: f32, x: &mut [f32]) {
+        scale_body(a, x)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn gemv_tf(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
+        gemv_body(a, n, m, x, out)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn gemv_t_tf(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
+        gemv_t_body(a, n, m, x, out)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn spmv_t_csc_tf(
+        indptr: &[usize],
+        rows: &[u32],
+        vals: &[f32],
+        x: &[f32],
+        out: &mut [f32],
+    ) {
+        spmv_t_csc_body(indptr, rows, vals, x, out)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn svrg_delta_tf(delta: &mut [f32], mu: &[f32], eta: f32, lam: f32) {
+        svrg_delta_body(delta, mu, eta, lam)
+    }
+
+    // SAFETY (all of the below): these wrappers reach the dispatch table
+    // only through `dispatch::detected()`, which installs them strictly
+    // after `is_x86_feature_detected!("avx2") && ("fma")` returns true on
+    // the running CPU.
+
+    pub fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+        unsafe { dot_tf(x, y) }
+    }
+
+    pub fn axpy_avx2(a: f32, x: &[f32], y: &mut [f32]) {
+        unsafe { axpy_tf(a, x, y) }
+    }
+
+    pub fn scale_avx2(a: f32, x: &mut [f32]) {
+        unsafe { scale_tf(a, x) }
+    }
+
+    pub fn gemv_avx2(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
+        unsafe { gemv_tf(a, n, m, x, out) }
+    }
+
+    pub fn gemv_t_avx2(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
+        unsafe { gemv_t_tf(a, n, m, x, out) }
+    }
+
+    pub fn spmv_t_csc_avx2(
+        indptr: &[usize],
+        rows: &[u32],
+        vals: &[f32],
+        x: &[f32],
+        out: &mut [f32],
+    ) {
+        unsafe { spmv_t_csc_tf(indptr, rows, vals, x, out) }
+    }
+
+    pub fn svrg_delta_avx2(delta: &mut [f32], mu: &[f32], eta: f32, lam: f32) {
+        unsafe { svrg_delta_tf(delta, mu, eta, lam) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use avx2::*;

@@ -1,164 +1,72 @@
 //! Dense BLAS-1/2 kernels on `f32` slices — the native backend's hot path.
 //!
-//! Written to auto-vectorize: straight-line loops over exact-length slice
-//! pairs (the `[..n]` re-slicing pattern lets LLVM drop bounds checks and
-//! emit packed SIMD).  No allocation inside any kernel.
+//! Layered like kubecl's matmul stack, minus the GPU DSL:
+//!
+//! * [`kernels`](self::kernels) (private) — the register-tiled kernel
+//!   *bodies*, written once with a fixed accumulator blocking and
+//!   reduction order, compiled per-ISA via `#[target_feature]` wrappers.
+//! * [`dispatch`] — the runtime selection seam: static
+//!   [`KernelDispatch`] tables (baseline + AVX2/FMA on x86_64, NEON
+//!   label on aarch64), chosen once per process by feature detection,
+//!   overridable with `DDOPT_KERNELS=scalar|simd`.
+//! * [`factor`](self::factor) — Cholesky + triangular solves (cold
+//!   path, not dispatched).
+//! * this module — the convenience API (`dot`, `gemv`, …) that routes
+//!   through the active table; callers that already hold a table (e.g.
+//!   `GridOp::exec_task` via `OpScratch`) call through it directly.
+//!
+//! Determinism contract: every table computes bit-identical results in
+//! a fixed, lane-count-independent reduction order — across runs,
+//! `--threads`, sim-vs-dist, and `DDOPT_KERNELS=scalar` vs `simd`.
+//! No allocation inside any kernel.
 
-/// x · y
+pub mod dispatch;
+mod factor;
+mod kernels;
+
+pub use dispatch::{detected, kernels, scalar_table, Isa, KernelDispatch};
+pub use factor::{cho_solve, cholesky_in_place};
+
+/// x · y (via the active dispatch table).
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let (x, y) = (&x[..n], &y[..n]);
-    // 8 independent accumulators: breaks the fp-add dependence chain so
-    // LLVM can keep two 8-lane fma pipes busy (§Perf iteration 1: 4→8
-    // accumulators lifted margins from 5.6 to ~8 GFLOP/s on this host).
-    let mut acc = [0.0f32; 8];
-    let chunks = n / 8;
-    for i in 0..chunks {
-        let b = i * 8;
-        acc[0] += x[b] * y[b];
-        acc[1] += x[b + 1] * y[b + 1];
-        acc[2] += x[b + 2] * y[b + 2];
-        acc[3] += x[b + 3] * y[b + 3];
-        acc[4] += x[b + 4] * y[b + 4];
-        acc[5] += x[b + 5] * y[b + 5];
-        acc[6] += x[b + 6] * y[b + 6];
-        acc[7] += x[b + 7] * y[b + 7];
-    }
-    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
-        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for i in chunks * 8..n {
-        s += x[i] * y[i];
-    }
-    s
+    (kernels().dot)(x, y)
 }
 
 /// y += a * x
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let (x, y) = (&x[..n], &mut y[..n]);
-    for i in 0..n {
-        y[i] += a * x[i];
-    }
+    (kernels().axpy)(a, x, y)
 }
 
 /// x *= a
 #[inline]
 pub fn scale(a: f32, x: &mut [f32]) {
-    for v in x.iter_mut() {
-        *v *= a;
-    }
+    (kernels().scale)(a, x)
 }
 
 /// ||x||^2
 #[inline]
 pub fn nrm2_sq(x: &[f32]) -> f32 {
-    dot(x, x)
+    (kernels().dot)(x, x)
 }
 
-/// out = A x   (A row-major [n, m]).  Rows are processed four at a time so
-/// each load of x[j] feeds four fmas (§Perf iteration 2).
+/// out = A x   (A row-major [n, m]).
+#[inline]
 pub fn gemv(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(a.len(), n * m);
-    debug_assert_eq!(x.len(), m);
-    debug_assert_eq!(out.len(), n);
-    let mut i = 0;
-    while i + 4 <= n {
-        let r0 = &a[i * m..(i + 1) * m];
-        let r1 = &a[(i + 1) * m..(i + 2) * m];
-        let r2 = &a[(i + 2) * m..(i + 3) * m];
-        let r3 = &a[(i + 3) * m..(i + 4) * m];
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        for j in 0..m {
-            let xj = x[j];
-            s0 += r0[j] * xj;
-            s1 += r1[j] * xj;
-            s2 += r2[j] * xj;
-            s3 += r3[j] * xj;
-        }
-        out[i] = s0;
-        out[i + 1] = s1;
-        out[i + 2] = s2;
-        out[i + 3] = s3;
-        i += 4;
-    }
-    for k in i..n {
-        out[k] = dot(&a[k * m..(k + 1) * m], x);
-    }
+    (kernels().gemv)(a, n, m, x, out)
 }
 
-/// out = A^T x   (A row-major [n, m]); accumulated row-wise so the matrix is
-/// streamed once in memory order rather than strided per column.
+/// out = A^T x   (A row-major [n, m]).
+#[inline]
 pub fn gemv_t(a: &[f32], n: usize, m: usize, x: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(a.len(), n * m);
-    debug_assert_eq!(x.len(), n);
-    debug_assert_eq!(out.len(), m);
-    out.fill(0.0);
-    for i in 0..n {
-        let xi = x[i];
-        if xi != 0.0 {
-            axpy(xi, &a[i * m..(i + 1) * m], out);
-        }
-    }
+    (kernels().gemv_t)(a, n, m, x, out)
 }
 
-/// In-place Cholesky of a symmetric positive-definite row-major [n, n]
-/// matrix; lower triangle holds L on return, upper is zeroed.
-/// Used by the native ADMM path (the XLA path uses the `admm_factor`
-/// artifact instead).
-pub fn cholesky_in_place(a: &mut [f32], n: usize) -> Result<(), String> {
-    debug_assert_eq!(a.len(), n * n);
-    for j in 0..n {
-        // Split rows j.. at row j so we can read row j while writing rows >j.
-        let mut d = a[j * n + j] as f64;
-        for k in 0..j {
-            let v = a[j * n + k] as f64;
-            d -= v * v;
-        }
-        if d <= 0.0 {
-            return Err(format!("matrix not SPD at pivot {j} (d={d})"));
-        }
-        let ljj = d.sqrt();
-        a[j * n + j] = ljj as f32;
-        let (head, tail) = a.split_at_mut((j + 1) * n);
-        let row_j = &head[j * n..j * n + j + 1];
-        for (r, chunk) in tail.chunks_exact_mut(n).enumerate() {
-            let i = j + 1 + r;
-            let _ = i;
-            let mut s = chunk[j] as f64;
-            for k in 0..j {
-                s -= chunk[k] as f64 * row_j[k] as f64;
-            }
-            chunk[j] = (s / ljj) as f32;
-        }
-        for k in j + 1..n {
-            a[j * n + k] = 0.0;
-        }
-    }
-    Ok(())
-}
-
-/// Solve L y = b (forward) then L^T x = y (backward); `l` is row-major
-/// lower-triangular [n, n], `b` is overwritten with x.
-pub fn cho_solve(l: &[f32], n: usize, b: &mut [f32]) {
-    debug_assert_eq!(l.len(), n * n);
-    debug_assert_eq!(b.len(), n);
-    // forward: L y = b
-    for i in 0..n {
-        let s = dot(&l[i * n..i * n + i], &b[..i]);
-        b[i] = (b[i] - s) / l[i * n + i];
-    }
-    // backward: L^T x = y
-    for i in (0..n).rev() {
-        let mut s = b[i];
-        for k in i + 1..n {
-            s -= l[k * n + i] * b[k];
-        }
-        b[i] = s / l[i * n + i];
-    }
+/// delta[i] -= eta * (lam * delta[i] + mu[i]) — SVRG window update.
+#[inline]
+pub fn svrg_delta(delta: &mut [f32], mu: &[f32], eta: f32, lam: f32) {
+    (kernels().svrg_delta)(delta, mu, eta, lam)
 }
 
 #[cfg(test)]
@@ -203,6 +111,24 @@ mod tests {
     }
 
     #[test]
+    fn gemv_rows_match_dot_bitwise() {
+        // The gemv register tile must preserve the per-row `dot` order
+        // exactly — coordinators mix whole-block margins with per-row
+        // dots and the results must agree to the bit.
+        let mut r = Xoshiro::new(7);
+        for (n, m) in [(1, 1), (4, 8), (5, 9), (13, 40), (16, 17)] {
+            let a: Vec<f32> = (0..n * m).map(|_| r.range_f32(-1.0, 1.0)).collect();
+            let x: Vec<f32> = (0..m).map(|_| r.range_f32(-1.0, 1.0)).collect();
+            let mut out = vec![0.0; n];
+            gemv(&a, n, m, &x, &mut out);
+            for i in 0..n {
+                let d = dot(&a[i * m..(i + 1) * m], &x);
+                assert_eq!(out[i].to_bits(), d.to_bits(), "({n},{m}) row {i}");
+            }
+        }
+    }
+
+    #[test]
     fn cholesky_roundtrip() {
         let mut r = Xoshiro::new(3);
         let n = 24;
@@ -218,6 +144,12 @@ mod tests {
         }
         let orig = a.clone();
         cholesky_in_place(&mut a, n).unwrap();
+        // upper triangle fully zeroed
+        for i in 0..n {
+            for k in i + 1..n {
+                assert_eq!(a[i * n + k], 0.0, "upper ({i},{k})");
+            }
+        }
         // check L L^T == orig
         for i in 0..n {
             for j in 0..n {
@@ -243,8 +175,10 @@ mod tests {
     }
 
     #[test]
-    fn cholesky_rejects_non_spd() {
+    fn cholesky_rejects_non_spd_with_dimension() {
         let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
-        assert!(cholesky_in_place(&mut a, 2).is_err());
+        let err = cholesky_in_place(&mut a, 2).unwrap_err();
+        assert!(err.contains("pivot 1"), "{err}");
+        assert!(err.contains("2x2"), "{err}");
     }
 }

@@ -157,14 +157,22 @@ impl<'a> StagedGrid<'a> {
     }
 
     /// [`StagedGrid::margins`] into a caller-owned buffer (length n_p) —
-    /// allocation-free on the native backend.
-    pub fn margins_into(&self, p: usize, q: usize, w_q: &[f32], out: &mut [f32]) -> Result<()> {
+    /// allocation-free on the native backend.  `kd` is the dispatch
+    /// table `GridOp::exec_task` plumbs down from its `OpScratch`.
+    pub fn margins_into(
+        &self,
+        kd: &crate::linalg::KernelDispatch,
+        p: usize,
+        q: usize,
+        w_q: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
         let block = self.part.block(p, q);
         debug_assert_eq!(w_q.len(), block.cols());
         debug_assert_eq!(out.len(), block.rows());
         match self.backend {
             Backend::Native => {
-                block.margins_into(w_q, out);
+                block.margins_into_with(kd, w_q, out);
                 Ok(())
             }
             #[cfg(feature = "xla")]
@@ -178,14 +186,21 @@ impl<'a> StagedGrid<'a> {
 
     /// [`StagedGrid::atx`] into a caller-owned buffer (length m_q) —
     /// allocation-free on the native backend, where sparse blocks stream
-    /// the CSC mirror.
-    pub fn atx_into(&self, p: usize, q: usize, v_p: &[f32], out: &mut [f32]) -> Result<()> {
+    /// the CSC mirror through the block-column strip kernel.
+    pub fn atx_into(
+        &self,
+        kd: &crate::linalg::KernelDispatch,
+        p: usize,
+        q: usize,
+        v_p: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
         let block = self.part.block(p, q);
         debug_assert_eq!(v_p.len(), block.rows());
         debug_assert_eq!(out.len(), block.cols());
         match self.backend {
             Backend::Native => {
-                block.atx_into(v_p, out);
+                block.atx_into_with(kd, v_p, out);
                 Ok(())
             }
             #[cfg(feature = "xla")]

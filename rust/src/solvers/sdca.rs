@@ -4,6 +4,12 @@
 //! closed-form hinge step with the 1/Q-scaled local objective, same
 //! index-stream protocol, same optional β step-size override), so the
 //! native and XLA backends can be compared within f32 tolerance.
+//!
+//! The per-step row dot/axpy on dense blocks route through the active
+//! [`crate::linalg::KernelDispatch`] table (unrolled 8-accumulator
+//! bodies); sparse rows stay sequential gathers.  Either way the
+//! reduction order is fixed, so SDCA trajectories are bit-identical
+//! under `DDOPT_KERNELS=scalar` and the dispatched table.
 
 use crate::data::Block;
 

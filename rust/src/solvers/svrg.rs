@@ -95,9 +95,7 @@ pub fn svrg_block_win(
             };
         let g_cur = loss.slope(m_cur, yj);
         let g_snap = loss.slope(mt[j], yj);
-        for (dv, &m) in delta.iter_mut().zip(mu.iter()) {
-            *dv -= eta * (lam * *dv + m);
-        }
+        crate::linalg::svrg_delta(delta, mu, eta, lam);
         if g_cur != g_snap {
             let coeff = -eta * (g_cur - g_snap);
             match sparse_win {

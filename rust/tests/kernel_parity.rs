@@ -1,10 +1,20 @@
-//! Sparse-kernel parity: the CSC-mirror transpose product and the
-//! window-indexed sub-block ops must agree with the dense kernels (within
-//! f32 tolerance) and with their retained pre-PR scanning/scattering
-//! implementations (bitwise) on random matrices across shapes, densities
-//! and seeds.
+//! Kernel parity, two layers of it:
+//!
+//! * Sparse vs dense: the CSC-mirror transpose product and the
+//!   window-indexed sub-block ops must agree with the dense kernels
+//!   (within f32 tolerance) and with their retained pre-PR
+//!   scanning/scattering implementations (bitwise) on random matrices
+//!   across shapes, densities and seeds.
+//! * Scalar vs dispatched: the baseline table and the runtime-detected
+//!   table must be **bitwise identical** for every kernel in
+//!   [`ddopt::linalg::KernelDispatch`] — including at adversarial
+//!   shapes (dims far from any tile-width multiple, single row/column,
+//!   empty CSC columns) and adversarial values (NaN, ±inf).  This is
+//!   the determinism contract that lets `DDOPT_KERNELS=scalar` reproduce
+//!   a dispatched run exactly.
 
 use ddopt::data::{balanced_ranges, Block, DenseMatrix, SparseMatrix, SubblockIndex};
+use ddopt::linalg::{detected, scalar_table};
 use ddopt::util::rng::Xoshiro;
 
 fn random_pair(n: usize, m: usize, density: f64, seed: u64) -> (DenseMatrix, SparseMatrix) {
@@ -100,6 +110,150 @@ fn windowed_ops_match_dense_and_scan_on_random_matrices() {
                 }
             }
         }
+    }
+}
+
+/// Mostly-random vector salted with NaN and ±inf at fixed strides, so
+/// every kernel's accumulation order is exercised on non-finite values
+/// (NaN payload propagation is deterministic only if both tables run the
+/// identical operations in the identical order — which is the claim).
+fn adversarial_vec(len: usize, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro::new(seed);
+    (0..len)
+        .map(|i| match i % 11 {
+            3 => f32::NAN,
+            6 => f32::INFINITY,
+            9 => f32::NEG_INFINITY,
+            _ => r.range_f32(-3.0, 3.0),
+        })
+        .collect()
+}
+
+fn assert_bits(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx} [{k}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn dispatch_tables_bitwise_identical_on_adversarial_dense_shapes() {
+    let s = scalar_table();
+    let d = detected();
+    // dims straddle every tile boundary: 1 (degenerate), below/at/above
+    // the 4-row gemv strip and the 8-lane accumulator width, and odd
+    // sizes with maximal tail remainders
+    for (n, m) in [
+        (1usize, 1usize),
+        (1, 7),
+        (7, 1),
+        (3, 8),
+        (4, 8),
+        (5, 13),
+        (8, 9),
+        (13, 40),
+        (16, 17),
+        (33, 31),
+    ] {
+        let a = adversarial_vec(n * m, 100 + (n * 37 + m) as u64);
+        let x = adversarial_vec(m, 41 + m as u64);
+        let v = adversarial_vec(n, 43 + n as u64);
+        let y = adversarial_vec(n * m, 53 + (n + m) as u64);
+        let ctx = format!("{n}x{m}");
+
+        assert_eq!(
+            (s.dot)(&a, &y).to_bits(),
+            (d.dot)(&a, &y).to_bits(),
+            "dot {ctx}"
+        );
+
+        let mut o1 = adversarial_vec(n * m, 67);
+        let mut o2 = o1.clone();
+        (s.axpy)(1.5, &y, &mut o1);
+        (d.axpy)(1.5, &y, &mut o2);
+        assert_bits(&o1, &o2, &format!("axpy {ctx}"));
+
+        (s.scale)(0.37, &mut o1);
+        (d.scale)(0.37, &mut o2);
+        assert_bits(&o1, &o2, &format!("scale {ctx}"));
+
+        let mut g1 = vec![0.0f32; n];
+        let mut g2 = vec![0.0f32; n];
+        (s.gemv)(&a, n, m, &x, &mut g1);
+        (d.gemv)(&a, n, m, &x, &mut g2);
+        assert_bits(&g1, &g2, &format!("gemv {ctx}"));
+
+        let mut t1 = vec![0.0f32; m];
+        let mut t2 = vec![0.0f32; m];
+        (s.gemv_t)(&a, n, m, &v, &mut t1);
+        (d.gemv_t)(&a, n, m, &v, &mut t2);
+        assert_bits(&t1, &t2, &format!("gemv_t {ctx}"));
+
+        let mut d1 = adversarial_vec(m, 71 + m as u64);
+        let mut d2 = d1.clone();
+        let mu = adversarial_vec(m, 73 + m as u64);
+        (s.svrg_delta)(&mut d1, &mu, 0.05, 0.1);
+        (d.svrg_delta)(&mut d2, &mu, 0.05, 0.1);
+        assert_bits(&d1, &d2, &format!("svrg_delta {ctx}"));
+    }
+}
+
+#[test]
+fn dispatch_tables_bitwise_identical_on_adversarial_csc() {
+    let s = scalar_table();
+    let d = detected();
+    // hand-built CSC, 6 rows x 9 columns: leading/trailing/interior empty
+    // columns (strip tails at every position), one full column, NaN/±inf
+    // stored values, and an x with an exact 0.0 (the skip path) plus NaN
+    let indptr: Vec<usize> = vec![0, 0, 3, 3, 3, 9, 10, 10, 12, 12];
+    let rows: Vec<u32> = vec![0, 2, 5, 0, 1, 2, 3, 4, 5, 3, 1, 4];
+    let vals: Vec<f32> = vec![
+        1.5,
+        f32::NAN,
+        -2.0,
+        0.5,
+        0.25,
+        -0.125,
+        f32::INFINITY,
+        3.0,
+        -1.0,
+        f32::NEG_INFINITY,
+        2.0,
+        4.0,
+    ];
+    let x = vec![0.0f32, 1.0, f32::NAN, -2.5, 0.5, 3.0];
+    let m = indptr.len() - 1;
+    let mut o1 = vec![0.0f32; m];
+    let mut o2 = vec![0.0f32; m];
+    (s.spmv_t_csc)(&indptr, &rows, &vals, &x, &mut o1);
+    (d.spmv_t_csc)(&indptr, &rows, &vals, &x, &mut o2);
+    assert_bits(&o1, &o2, "hand-built csc");
+    // empty columns must come out exactly 0, not just tiny
+    for j in [0usize, 2, 3, 6, 8] {
+        assert_eq!(o1[j].to_bits(), 0.0f32.to_bits(), "empty col {j}");
+    }
+
+    // random matrices across degenerate and strip-exercising shapes; the
+    // scatter baseline is the order reference all three must share
+    for (n, m, density, seed) in [
+        (1usize, 1usize, 1.0, 21u64),
+        (1, 9, 0.7, 22),
+        (9, 1, 0.5, 23),
+        (37, 29, 0.25, 24),
+        (64, 65, 0.6, 25),
+        (40, 30, 0.0, 26), // fully empty
+    ] {
+        let (_, sm) = random_pair(n, m, density, seed);
+        let v = adversarial_vec(n, seed ^ 0x1CE);
+        let mut o1 = vec![0.0f32; m];
+        let mut o2 = vec![0.0f32; m];
+        let mut o3 = vec![0.0f32; m];
+        sm.gemv_t_into_with(s, &v, &mut o1);
+        sm.gemv_t_into_with(d, &v, &mut o2);
+        sm.gemv_t_scatter_into(&v, &mut o3);
+        let ctx = format!("csc {n}x{m} density={density}");
+        assert_bits(&o1, &o2, &ctx);
+        assert_bits(&o1, &o3, &format!("{ctx} vs scatter"));
     }
 }
 

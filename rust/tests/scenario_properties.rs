@@ -14,6 +14,11 @@
 //!   runs; different seeds differ;
 //! * scenarios are cost-only — iterates stay bit-identical between the
 //!   ideal cluster and any scenario;
+//! * speculative execution is cost-only and never hurts — with
+//!   `cores >= tasks` every superstep's makespan is the per-task max,
+//!   and the quantile-trigger model only ever lowers durations, so the
+//!   speculated clock is <= the unspeculated one; `spec_quantile=1`
+//!   never arms and reproduces the plain clock bitwise;
 //! * the paper's claim — RADiSA-avg's simulated time beats plain RADiSA
 //!   under straggler scenarios on the `exp stragglers` sweep.
 
@@ -229,6 +234,54 @@ fn d3ca_clock_is_scenario_deterministic_too() {
     assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
     assert_eq!(a.stragglers, b.stragglers);
     assert!(a.stragglers > 0, "p=0.4 over 32 tasks should inject something");
+}
+
+// ------------------------------------------------------- speculation
+
+#[test]
+fn speculation_only_ever_shrinks_the_clock_and_never_the_iterates() {
+    let base = "stragglers:p=0.4,slow=12x,seed=17+failures:p=0.2,retries=2";
+    let plain = run_radisa(ClusterScenario::parse(base).unwrap(), 1, false);
+    let spec_sc =
+        ClusterScenario::parse(&format!("{base},spec,spec_quantile=0.5,spec_copies=2")).unwrap();
+    let spec = run_radisa(spec_sc.clone(), 1, false);
+    // cores >= tasks: each superstep's makespan is the per-task max, and
+    // speculate() only ever lowers durations — the clock cannot grow
+    assert!(
+        spec.sim_time <= plain.sim_time,
+        "speculation slowed the clock: {} > {}",
+        spec.sim_time,
+        plain.sim_time
+    );
+    assert!(spec.sim_time > 0.0);
+    // cost-only: iterates and event counters are exactly the plain run's
+    // (backup copies change when tasks finish, not which events fired)
+    assert_eq!(spec.stragglers, plain.stragglers);
+    assert_eq!(spec.failures, plain.failures);
+    assert_eq!(plain.w.len(), spec.w.len());
+    for (i, (a, b)) in plain.w.iter().zip(&spec.w).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "w[{i}] drifted under speculation");
+    }
+    // the speculated clock is as deterministic and thread-invariant as
+    // every other scenario clock
+    let again = run_radisa(spec_sc, 4, false);
+    assert_eq!(spec.sim_time.to_bits(), again.sim_time.to_bits());
+}
+
+#[test]
+fn spec_quantile_one_never_arms_and_matches_the_unspeculated_clock() {
+    // t_arm at q=1 is the slowest task's own finish time, so no task is
+    // ever "still running at t_arm" — a valid never-arming configuration
+    // whose clock must be bit-identical to the plain scenario's
+    let base = "stragglers:p=0.5,slow=9x,seed=23";
+    let plain = run_radisa(ClusterScenario::parse(base).unwrap(), 1, false);
+    let q1 = run_radisa(
+        ClusterScenario::parse(&format!("{base},spec,spec_quantile=1,spec_copies=4")).unwrap(),
+        1,
+        false,
+    );
+    assert_eq!(q1.sim_time.to_bits(), plain.sim_time.to_bits());
+    assert_eq!(q1.stragglers, plain.stragglers);
 }
 
 // ------------------------------------------------ the paper's claim

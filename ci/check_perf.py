@@ -4,7 +4,7 @@
 
 Usage: check_perf.py BENCH_perf.json ci/perf_thresholds.json [BENCH_history.jsonl]
 
-Five gates:
+Six gates:
 
 1. Absolute ceiling — any steady-state allocations/iteration entry (other
    than the retained "(before)" baselines) above the ceiling fails, as
@@ -37,6 +37,14 @@ Five gates:
    first run.  Additionally `wire_min_reduction` is an absolute floor on
    the broadcast/sliced scatter ratio: if sliced scatter stops paying
    for itself the gate fails immediately, no history needed.
+6. Trace overhead — `trace_max_overhead` is an absolute ceiling on
+   `trace."trace overhead frac"` (wall-time cost of running with the
+   span recorder on vs off, min-of-reps on both sides).  The tracing
+   layer's "low-overhead" claim, held as a number: no history needed, a
+   recording hot path that starts allocating or locking trips it on the
+   first run.  The same gate requires the traced run to have actually
+   recorded spans, so a silently-disabled recorder can't pass by doing
+   nothing.
 
 Every gated run is appended to the history, which is kept as a ring of
 the last HISTORY_LIMIT entries; CI caches the file across runs and
@@ -190,6 +198,31 @@ def check_wire(bench, history, thresholds, failures):
             )
 
 
+def check_trace(bench, thresholds, failures):
+    """Absolute ceiling on the span recorder's wall-time overhead."""
+    ceiling = thresholds.get("trace_max_overhead")
+    if ceiling is None:
+        return
+    frac = lookup(bench, "trace.trace overhead frac")
+    spans = lookup(bench, "trace.trace spans/iter")
+    if frac is None:
+        failures.append("trace.trace overhead frac: missing from bench")
+    elif frac > ceiling:
+        failures.append(
+            f"trace.trace overhead frac: {frac:.4g} > ceiling {ceiling} "
+            "(tracing-on run got too slow vs tracing-off)"
+        )
+    else:
+        print(f"  OK (trace) overhead frac = {frac:.4g} (ceiling {ceiling}, absolute)")
+    if spans is None or spans <= 0:
+        failures.append(
+            f"trace.trace spans/iter: {spans} (traced run recorded nothing — "
+            "the overhead number is vacuous)"
+        )
+    else:
+        print(f"  OK (trace) spans/iter = {spans:.4g} (recorder active)")
+
+
 def main() -> int:
     bench = json.load(open(sys.argv[1]))
     thresholds = json.load(open(sys.argv[2]))
@@ -237,6 +270,8 @@ def main() -> int:
     check_kernels(bench, thresholds, failures)
     # wire gate: bytes/superstep upper bound + scatter-reduction floor
     check_wire(bench, history, thresholds, failures)
+    # span recorder overhead: absolute ceiling, recorder must be live
+    check_trace(bench, thresholds, failures)
 
     if failures:
         bench = dict(bench)

@@ -13,7 +13,11 @@
 # (process abort — same as SIGKILL on the wire) mid-superstep, a
 # supervisor restarts it on the same port, and the run must finish with
 # weights bitwise identical to sim after exactly one retried superstep.
-# All wire logs (results/dist_smoke_*_wire.jsonl) are uploaded as CI
+# The kill-and-recover run also exports a Perfetto trace (--trace-out):
+# the trace JSON must be well-formed, carry spans from the driver and
+# every executor slot, and record at least one recovery instant.
+# All wire logs (results/dist_smoke_*_wire.jsonl) and the trace pair
+# (results/dist_smoke_recovery_trace.json[l]) are uploaded as CI
 # artifacts for the sim-vs-dist comparison report.
 set -euo pipefail
 
@@ -24,7 +28,9 @@ PORT3=${PORT3:-7143}
 OUT=results
 mkdir -p "$OUT"
 
-"$BIN" executor --bind "127.0.0.1:${PORT1}" --threads 2 &
+MPORT=${MPORT:-7144}
+"$BIN" executor --bind "127.0.0.1:${PORT1}" --threads 2 \
+  --metrics-addr "127.0.0.1:${MPORT}" &
 E1=$!
 "$BIN" executor --bind "127.0.0.1:${PORT2}" --threads 2 &
 E2=$!
@@ -87,6 +93,30 @@ for method in d3ca radisa radisa-avg admm; do
   done
   echo "OK: ${method} weights bitwise identical across sim, broadcast, sliced"
 done
+
+# executor 1 also serves Prometheus text exposition; after the runs
+# above its superstep counters must be live and every sample line must
+# end in a parseable number
+python3 - "$MPORT" <<'EOF'
+import sys
+import urllib.request
+
+url = f"http://127.0.0.1:{sys.argv[1]}/metrics"
+text = urllib.request.urlopen(url, timeout=5).read().decode()
+for line in text.splitlines():
+    if not line or line.startswith("#"):
+        continue
+    name, _, value = line.rpartition(" ")
+    if not name:
+        sys.exit(f"FAIL: unparseable metrics line: {line!r}")
+    float(value)  # every sample line must end in a number
+if "ddopt_executor_steps_total" not in text:
+    sys.exit("FAIL: executor metrics missing ddopt_executor_steps_total")
+steps = [l for l in text.splitlines() if l.startswith("ddopt_executor_steps_total")]
+if float(steps[0].split()[-1]) <= 0:
+    sys.exit(f"FAIL: executor served metrics but counted no supersteps: {steps}")
+print("OK: executor Prometheus endpoint parses and counts supersteps")
+EOF
 
 # aggregate scatter bytes across all methods and enforce the >= 2x
 # reduction the sliced wire is supposed to buy on this workload
@@ -155,9 +185,42 @@ RECOVER=(--p 2 --q 2 --n-per 160 --m-per 40 --iters 8 --seed 11 --no-fstar --cor
   --dump-w "$OUT/dist_smoke_recovery_sim.whex"
 "$BIN" train --method d3ca "${RECOVER[@]}" --cluster "$DIST" \
   --dump-w "$OUT/dist_smoke_recovery_dist.whex" \
-  --wire-out "$OUT/dist_smoke_recovery_wire.jsonl"
+  --wire-out "$OUT/dist_smoke_recovery_wire.jsonl" \
+  --trace-out "$OUT/dist_smoke_recovery_trace.json"
 if ! diff "$OUT/dist_smoke_recovery_sim.whex" "$OUT/dist_smoke_recovery_dist.whex"; then
   echo "FAIL: weights diverged after executor kill + rejoin"
+  exit 1
+fi
+
+# the Perfetto export from the same run: well-formed JSON, spans from
+# the driver (pid 0) and all three executor slots (pids 1-3), phase
+# taxonomy respected, and the failure visible as a recovery instant
+python3 - "$OUT/dist_smoke_recovery_trace.json" <<'EOF'
+import json
+import sys
+
+doc = json.load(open(sys.argv[1]))
+events = doc["traceEvents"]
+spans = [e for e in events if e.get("ph") in ("X", "i")]
+pids = {e["pid"] for e in spans}
+missing = {0, 1, 2, 3} - pids
+if missing:
+    sys.exit(f"FAIL: trace missing spans from pids {sorted(missing)} (have {sorted(pids)})")
+phases = {"stage", "scatter", "exec", "gather", "fold", "combine", "recover", "spec"}
+bad = [e for e in spans if e.get("cat") not in phases]
+if bad:
+    sys.exit(f"FAIL: events outside the phase taxonomy: {bad[:3]}")
+recover = [e for e in spans if e["ph"] == "i" and e["cat"] == "recover"]
+if not recover:
+    sys.exit("FAIL: kill-and-recover trace has no recovery instant events")
+for e in spans:
+    if e["ph"] == "X" and e.get("dur", 0) < 0:
+        sys.exit(f"FAIL: negative span duration: {e}")
+print(f"OK: trace has {len(spans)} events from pids {sorted(pids)}, "
+      f"{len(recover)} recovery instant(s)")
+EOF
+if [ ! -s "$OUT/dist_smoke_recovery_trace.jsonl" ]; then
+  echo "FAIL: JSONL sibling of the trace export is missing or empty"
   exit 1
 fi
 

@@ -28,7 +28,7 @@ if ! cargo +nightly --version >/dev/null 2>&1; then
   exit 0
 fi
 
-for target in wire_frame op_codec; do
+for target in wire_frame op_codec trace_frame; do
   echo "fuzzing ${target} for ${SECS}s..."
   # -rss_limit_mb guards the alloc-hardening promise: a lying length
   # prefix must not drive real memory growth

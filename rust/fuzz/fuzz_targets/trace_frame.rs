@@ -1,0 +1,63 @@
+//! Fuzz the trace-frame decoder: arbitrary bytes fed through
+//! [`obs::decode_trace_frame`] must produce `Ok` or `Err` — never a
+//! panic, an overflow, or an allocation driven by a lying count prefix.
+//! Anything the decoder accepts must also re-encode: accepted frames
+//! round-trip through [`obs::encode_trace_frame`] to prove every field
+//! combination the decoder admits is representable by the encoder.
+
+#![no_main]
+
+use std::sync::OnceLock;
+
+use ddopt::obs::{self, SpanEvent};
+use ddopt::util::bytes::ByteReader;
+use libfuzzer_sys::fuzz_target;
+
+/// Fixed `&'static str` names for re-encoding (SpanEvent names are
+/// static): one per possible intern id.  Leaked exactly once into a
+/// static, so LeakSanitizer stays quiet across iterations.
+fn name_for(id: u16) -> &'static str {
+    static NAMES: OnceLock<Vec<&'static str>> = OnceLock::new();
+    let names = NAMES.get_or_init(|| {
+        (0..obs::TRACE_FRAME_MAX_NAMES)
+            .map(|i| &*Box::leak(format!("n{i}").into_boxed_str()))
+            .collect()
+    });
+    names[id as usize]
+}
+
+fuzz_target!(|data: &[u8]| {
+    let mut r = ByteReader::new(data);
+    if let Ok(frame) = obs::decode_trace_frame(&mut r) {
+        // decoded frames satisfy the codec's semantic invariants
+        assert!(frame.names.len() <= obs::TRACE_FRAME_MAX_NAMES);
+        let events: Vec<SpanEvent> = frame
+            .events
+            .iter()
+            .map(|ev| {
+                assert!((ev.name as usize) < frame.names.len());
+                assert!(ev.t0_ns <= ev.t1_ns);
+                assert!(ev.task_lo <= ev.task_hi);
+                SpanEvent {
+                    name: name_for(ev.name),
+                    phase: ev.phase,
+                    flags: ev.flags,
+                    step: ev.step,
+                    slot: 0,
+                    worker: ev.worker,
+                    task_lo: ev.task_lo,
+                    task_hi: ev.task_hi,
+                    t0_ns: ev.t0_ns,
+                    t1_ns: ev.t1_ns,
+                }
+            })
+            .collect();
+        let mut buf = Vec::new();
+        obs::encode_trace_frame(&events, frame.dropped, &mut buf)
+            .expect("accepted frames re-encode");
+        let reframe = obs::decode_trace_frame(&mut ByteReader::new(&buf))
+            .expect("re-encoded frames re-decode");
+        assert_eq!(reframe.events.len(), frame.events.len());
+        assert_eq!(reframe.dropped, frame.dropped);
+    }
+});

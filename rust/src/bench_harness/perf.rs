@@ -640,11 +640,67 @@ pub fn steady_state_allocs() -> Result<Vec<(String, Option<f64>)>> {
         }
     }
     out.push(("parallel steady allocs/iter".into(), parallel_worst));
+    // tracing-on holds the same contract: once the intern table and the
+    // span rings are warm, recording is stores into preallocated
+    // buffers, so the traced steady state must also read exactly 0
+    for method in ["d3ca", "radisa", "admm"] {
+        let mut opt: Box<dyn Optimizer> = match method {
+            "d3ca" => Box::new(D3ca::new(D3caConfig { lambda: 0.1, ..Default::default() })),
+            "radisa" => Box::new(Radisa::new(RadisaConfig {
+                lambda: 0.1,
+                gamma: 0.05,
+                ..Default::default()
+            })),
+            _ => Box::new(Admm::new(AdmmConfig { lambda: 0.1, rho: 0.1 })),
+        };
+        let mut cluster = SimBackend::new(ClusterConfig::with_cores(8).with_threads(2));
+        cluster.set_trace(true);
+        cluster.prepare(&staged)?;
+        opt.init(&staged, &mut cluster)?;
+        let measured = probe_alloc(warmup, iters, |t| opt.iterate(t, &staged, &mut cluster))?;
+        out.push((format!("{method} steady allocs/iter (traced)"), measured));
+    }
     out.push((
         "legacy boxed-superstep allocs/iter (before)".into(),
         legacy_boxed_allocs(&staged, warmup, iters)?,
     ));
     Ok(out)
+}
+
+/// Tracing overhead: wall time of identical fixed-cost sim runs with
+/// the span recorder off vs on, min-of-`reps` each so scheduler noise
+/// cannot fake a regression.  The reported `trace overhead frac` is
+/// what `ci/check_perf.py` gates at ≤ `trace_max_overhead` — the
+/// subsystem's "low-overhead" claim, held as a number.
+pub fn trace_overhead(iters: usize, reps: usize) -> Result<Vec<(String, f64)>> {
+    let ds = SyntheticDense::paper_part1(4, 2, 192, 128, 0.1, 7).build();
+    let part = Partitioned::split(&ds, Grid::new(4, 2));
+    let backend = Backend::native();
+    let mut best = [f64::INFINITY; 2];
+    let mut spans = 0usize;
+    for (i, traced) in [(0usize, false), (1, true)] {
+        for _ in 0..reps {
+            let mut opt = D3ca::new(D3caConfig { lambda: 0.1, ..Default::default() });
+            let t = Timer::start();
+            let r = Driver::new(&part, &backend)?
+                .iterations(iters)
+                .eval_every(usize::MAX)
+                .trace(traced)
+                .cluster(ClusterConfig::with_cores(8).with_threads(1))
+                .run(&mut opt)?;
+            best[i] = best[i].min(t.secs());
+            if let Some(log) = &r.trace {
+                spans = log.len();
+            }
+        }
+    }
+    let overhead = (best[1] - best[0]).max(0.0) / best[0];
+    Ok(vec![
+        (format!("untraced wall s/{iters}it"), best[0]),
+        (format!("traced wall s/{iters}it"), best[1]),
+        ("trace overhead frac".into(), overhead),
+        ("trace spans/iter".into(), spans as f64 / iters.max(1) as f64),
+    ])
 }
 
 /// XLA engine op timings at a bucket (empty when the crate is built
@@ -796,6 +852,11 @@ pub fn run(scale: Scale) -> Result<()> {
     for (k, v) in &wire {
         rows.push(vec!["L3-wire".into(), k.clone(), fmt(*v)]);
     }
+    // span recorder cost: traced vs untraced wall time of the same run
+    let trace = trace_overhead(30, 5)?;
+    for (k, v) in &trace {
+        rows.push(vec!["L3-trace".into(), k.clone(), fmt(*v)]);
+    }
     let xla = xla_op_times((512, 512))?;
     for (k, v) in &xla {
         rows.push(vec!["L2-xla".into(), k.clone(), fmt(*v)]);
@@ -816,7 +877,7 @@ pub fn run(scale: Scale) -> Result<()> {
             .collect(),
     );
     let doc = Json::obj(vec![
-        ("schema", Json::str("ddopt-perf/5")),
+        ("schema", Json::str("ddopt-perf/6")),
         ("generated_by", Json::str("ddopt exp perf")),
         (
             "kernel_isa",
@@ -849,6 +910,7 @@ pub fn run(scale: Scale) -> Result<()> {
         ("coordinator", json_section(&coord)),
         ("pool", json_section(&pool)),
         ("wire", json_section(&wire)),
+        ("trace", json_section(&trace)),
         ("steady_state_allocs", alloc_json),
         ("xla", json_section(&xla)),
         ("l1_estimates", json_section(&l1)),
@@ -900,8 +962,9 @@ mod tests {
         // (or extremely near) zero; the boxed baseline must not be.
         // Without: probes report None and the harness still runs.
         let rows = steady_state_allocs().unwrap();
-        // 3 coordinators × threads {1, 2, 4} + parallel aggregate + legacy
-        assert_eq!(rows.len(), 11);
+        // 3 coordinators × threads {1, 2, 4} + parallel aggregate
+        // + 3 traced coordinators + legacy
+        assert_eq!(rows.len(), 14);
         for (k, v) in &rows {
             if crate::util::alloc::counting_enabled() {
                 assert!(v.is_some(), "{k}");
@@ -913,6 +976,22 @@ mod tests {
             let legacy = rows.last().unwrap().1.unwrap();
             assert!(legacy > 0.0, "boxed pipeline should allocate");
         }
+    }
+
+    #[test]
+    fn trace_overhead_probe_reports_both_sides_and_records_spans() {
+        let rows = trace_overhead(2, 1).unwrap();
+        assert_eq!(rows.len(), 4);
+        let get = |key: &str| {
+            rows.iter()
+                .find(|(k, _)| k == key)
+                .unwrap_or_else(|| panic!("missing row {key}"))
+                .1
+        };
+        assert!(get("untraced wall s/2it") > 0.0);
+        assert!(get("traced wall s/2it") > 0.0);
+        assert!(get("trace overhead frac") >= 0.0);
+        assert!(get("trace spans/iter") > 0.0, "traced run must record spans");
     }
 
     #[cfg(not(feature = "xla"))]

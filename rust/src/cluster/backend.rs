@@ -25,6 +25,7 @@ use super::{ClusterConfig, SimClock, SimCluster, TaskSlab};
 use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::metrics::WireRecord;
+use crate::obs::{self, Phase, SpanRing, TraceLog};
 use crate::runtime::{FactorHandle, StagedGrid};
 use anyhow::{anyhow, Result};
 
@@ -677,6 +678,9 @@ pub struct OpScratch {
     /// scratch is built (one env/cpuid check per worker, not per task)
     /// and plumbed into every whole-block kernel `exec_task` runs.
     kernels: &'static crate::linalg::KernelDispatch,
+    /// Per-worker span recorder, disabled (capacity 0) until a traced
+    /// superstep arms it — the tracing-off hot path is one branch.
+    spans: SpanRing,
 }
 
 impl OpScratch {
@@ -690,7 +694,30 @@ impl OpScratch {
             delta: Vec::with_capacity(max_mq),
             t: vec![0.0; max_np],
             kernels: crate::linalg::kernels(),
+            spans: SpanRing::disabled(),
         }
+    }
+
+    /// Arm this worker's span ring (idempotent: a ring that is already
+    /// on keeps its storage and identity).
+    pub fn enable_tracing(&mut self, cap: usize, slot: u16, worker: u16) {
+        if !self.spans.on() {
+            self.spans = SpanRing::with_capacity(cap, slot, worker);
+        }
+    }
+
+    /// Stamp the superstep ordinal subsequent spans belong to.
+    pub fn set_trace_step(&mut self, step: u32) {
+        self.spans.set_step(step);
+    }
+
+    /// Whether the span ring is armed.
+    pub fn spans_on(&self) -> bool {
+        self.spans.on()
+    }
+
+    pub fn spans_mut(&mut self) -> &mut SpanRing {
+        &mut self.spans
     }
 }
 
@@ -762,6 +789,22 @@ pub trait ClusterBackend {
         Vec::new()
     }
 
+    /// Turn span tracing on (or off) for subsequent supersteps.  The
+    /// default substrate records nothing.
+    fn set_trace(&mut self, _enabled: bool) {}
+
+    /// Hand over the accumulated trace log (`None` when tracing was
+    /// never enabled).
+    fn take_trace(&mut self) -> Option<TraceLog> {
+        None
+    }
+
+    /// Current values of every registered metric, sorted by name
+    /// (histograms surface as `_count`/`_sum` pairs).
+    fn metrics_snapshot(&self) -> Vec<(String, f64)> {
+        Vec::new()
+    }
+
     /// Orderly teardown (the distributed backend releases its executors).
     fn shutdown(&mut self) -> Result<()> {
         Ok(())
@@ -776,6 +819,7 @@ pub struct SimBackend {
     pub cluster: SimCluster,
     scratch: Vec<OpScratch>,
     factors: Vec<Option<FactorHandle>>,
+    trace: Option<TraceLog>,
 }
 
 impl SimBackend {
@@ -784,6 +828,7 @@ impl SimBackend {
             cluster: SimCluster::new(config),
             scratch: Vec::new(),
             factors: Vec::new(),
+            trace: None,
         }
     }
 }
@@ -802,10 +847,21 @@ impl ClusterBackend for SimBackend {
     }
 
     fn prepare(&mut self, staged: &StagedGrid<'_>) -> Result<()> {
+        let t0 = obs::now_ns();
         let want = self.cluster.threads().max(1);
         self.scratch.clear();
         for _ in 0..want {
             self.scratch.push(OpScratch::for_part(staged.part));
+        }
+        if self.trace.is_some() {
+            // sim records as the driver process (slot 0), one thread row
+            // per pool worker
+            for (w, sc) in self.scratch.iter_mut().enumerate() {
+                sc.enable_tracing(obs::SPAN_RING_CAPACITY, 0, w as u16);
+            }
+        }
+        if let Some(log) = self.trace.as_mut() {
+            log.span("prepare", Phase::Stage, 0, 0, 0, 0, t0, obs::now_ns());
         }
         Ok(())
     }
@@ -836,14 +892,40 @@ impl ClusterBackend for SimBackend {
         }
         debug_assert!(out.len() >= op.out_len(part));
         debug_assert!(out2.len() >= op.out2_len(part));
-        let SimBackend { cluster, scratch, factors } = self;
+        let SimBackend { cluster, scratch, factors, trace } = self;
+        let tracing = trace.is_some();
+        if tracing {
+            let step = cluster.clock.supersteps() as u32;
+            for sc in scratch.iter_mut() {
+                sc.set_trace_step(step);
+            }
+        }
         let out_slab = TaskSlab::new(out);
         let out2_slab = TaskSlab::new(out2);
         let op_ref = &op;
         let factors_ref: &[Option<FactorHandle>] = factors;
         cluster.grid_step_into(n, op.tolerant(), scratch, |task, sc| {
-            op_ref.exec_task(staged, factors_ref, task, sc, &out_slab, &out2_slab)
-        })
+            let t0 = if tracing { obs::now_ns() } else { 0 };
+            let r = op_ref.exec_task(staged, factors_ref, task, sc, &out_slab, &out2_slab);
+            if tracing {
+                let t1 = obs::now_ns();
+                sc.spans_mut().push_span(
+                    op_ref.name(),
+                    Phase::Exec,
+                    task as u32,
+                    task as u32 + 1,
+                    t0,
+                    t1,
+                );
+            }
+            r
+        })?;
+        if let Some(log) = trace.as_mut() {
+            for sc in scratch.iter_mut() {
+                log.absorb(sc.spans_mut());
+            }
+        }
+        Ok(())
     }
 
     fn reduce_segments(
@@ -854,7 +936,12 @@ impl ClusterBackend for SimBackend {
         count: usize,
         len: usize,
     ) {
+        let t0 = if self.trace.is_some() { obs::now_ns() } else { 0 };
         self.cluster.reduce_segments(slab, base, stride, count, len);
+        if let Some(log) = self.trace.as_mut() {
+            let step = self.cluster.clock.supersteps() as u32;
+            log.span("reduce", Phase::Combine, step, 0, 0, count as u32, t0, obs::now_ns());
+        }
     }
 
     fn reduce_cost(&mut self, leaves: usize, bytes_per_leaf: usize) {
@@ -875,6 +962,25 @@ impl ClusterBackend for SimBackend {
 
     fn host_secs(&self) -> f64 {
         self.cluster.host_secs()
+    }
+
+    fn set_trace(&mut self, enabled: bool) {
+        if enabled {
+            if self.trace.is_none() {
+                self.trace = Some(TraceLog::with_capacity(obs::TRACE_LOG_CAPACITY));
+            }
+            // scratch may already be sized (set_trace after prepare):
+            // arm whatever rings exist now; prepare arms any rebuilt ones
+            for (w, sc) in self.scratch.iter_mut().enumerate() {
+                sc.enable_tracing(obs::SPAN_RING_CAPACITY, 0, w as u16);
+            }
+        } else {
+            self.trace = None;
+        }
+    }
+
+    fn take_trace(&mut self) -> Option<TraceLog> {
+        self.trace.take()
     }
 }
 

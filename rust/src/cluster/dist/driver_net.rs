@@ -102,6 +102,7 @@ use crate::cluster::{
 };
 use crate::data::{encode_block, Partitioned};
 use crate::metrics::WireRecord;
+use crate::obs::{self, Counter, Gauge, MetricsRegistry, Phase, TraceEvent, TraceLog};
 use crate::runtime::StagedGrid;
 use crate::util::bytes::{self, ByteReader};
 use anyhow::{bail, Context, Result};
@@ -170,6 +171,47 @@ const READMIT_ATTEMPT: Duration = Duration::from_millis(250);
 /// territory).
 const SPEC_MIN_STALL_SECS: f64 = 0.050;
 
+/// The driver's fault-tolerance counters, unified in one
+/// [`MetricsRegistry`] — the run totals behind the per-step values in
+/// each [`WireRecord`].  The train summary and `exp perf` read them
+/// through [`ClusterBackend::metrics_snapshot`], so every consumer sees
+/// the same source.
+struct FtMetrics {
+    registry: MetricsRegistry,
+    retries: Counter,
+    rejoins: Counter,
+    degraded: Gauge,
+    spec_launched: Counter,
+    spec_won: Counter,
+}
+
+impl FtMetrics {
+    fn new() -> FtMetrics {
+        let registry = MetricsRegistry::new();
+        let retries = registry.counter(
+            "ddopt_step_retries_total",
+            "Supersteps retried after a recovered exchange failure",
+        );
+        let rejoins = registry.counter(
+            "ddopt_rejoins_total",
+            "Rejoin handshakes performed across all recoveries",
+        );
+        let degraded = registry.gauge(
+            "ddopt_degraded_executors",
+            "Executors currently degraded (cells re-dealt to survivors)",
+        );
+        let spec_launched = registry.counter(
+            "ddopt_spec_launched_total",
+            "Speculative backup dispatches across the run",
+        );
+        let spec_won = registry.counter(
+            "ddopt_spec_won_total",
+            "Speculative backup results adopted across the run",
+        );
+        FtMetrics { registry, retries, rejoins, degraded, spec_launched, spec_won }
+    }
+}
+
 struct ExecConn {
     stream: TcpStream,
     addr: String,
@@ -227,10 +269,10 @@ pub struct DistCluster {
     stage_bodies: Vec<Vec<u8>>,
     /// Whether `prepare_admm` ran this session (replayed on rejoin).
     admm_prepared: bool,
-    /// Supersteps retried after a recovered exchange failure (run total).
-    retries: u64,
-    /// Rejoin handshakes performed across all recoveries (run total).
-    rejoins: u64,
+    /// Run-total fault-tolerance counters (one registry, surfaced via
+    /// [`ClusterBackend::metrics_snapshot`]; per-step deltas stay on the
+    /// [`WireRecord`]).
+    metrics: FtMetrics,
     /// Explicit placement while it diverges from the pure layout
     /// (`None` = pure: [`GridOp::owner`] is authoritative).
     cell_map: Option<CellMap>,
@@ -251,10 +293,19 @@ pub struct DistCluster {
     /// Per-(executor, op-kind) gather-latency EWMA, used to pick the
     /// historically fastest idle peer as the backup.
     spec_ewma: HashMap<(usize, &'static str), f64>,
-    /// Speculative dispatches across the run.
-    spec_launched: u64,
-    /// Adopted backup results across the run.
-    spec_won: u64,
+    /// Fleet-wide span log while tracing is on (`None` = off: the hot
+    /// path pays one branch per superstep).  Driver spans land at slot
+    /// 0; executor span tables are merged in with their slot stamped
+    /// from connection identity.
+    trace: Option<TraceLog>,
+    /// Per-executor clock-offset estimate in ns (`exec_tick − driver
+    /// RTT midpoint` from the handshake): `driver_ns = exec_ns −
+    /// offset`.  Zero for pre-v5 executors that send no tick.
+    clock_offsets: Vec<i64>,
+    /// Connect-time bounds of the staging phase, replayed into the
+    /// trace log when tracing is enabled after connect.
+    stage_t0_ns: u64,
+    stage_t1_ns: u64,
 }
 
 impl DistCluster {
@@ -280,10 +331,12 @@ impl DistCluster {
             WireMode::Broadcast => 0,
         };
         let t0 = Instant::now();
+        let stage_t0_ns = obs::now_ns();
         let mut scatter = vec![0usize; n_execs];
         let mut gather = vec![0usize; n_execs];
         let mut recv_buf = Vec::new();
         let mut conns = Vec::with_capacity(n_execs);
+        let mut clock_offsets = Vec::with_capacity(n_execs);
         let mut caps = offered;
         // Session token: unique enough that an executor recycled by a
         // different run cannot satisfy this run's Rejoin with stale
@@ -303,9 +356,11 @@ impl DistCluster {
             bytes::put_u32(&mut hello, n_execs as u32);
             bytes::put_u32(&mut hello, offered);
             bytes::put_u64(&mut hello, token);
+            let t_send = obs::now_ns();
             scatter[i] += wire::write_frame(&mut stream, Tag::Hello, &hello)?;
             gather[i] += wire::expect_frame(&mut stream, &mut recv_buf, Tag::HelloAck)
                 .with_context(|| format!("handshake with executor {i} at {addr}"))?;
+            let t_recv = obs::now_ns();
             let mut r = ByteReader::new(&recv_buf);
             let magic = r.u32()?;
             let version = r.u32()?;
@@ -327,6 +382,16 @@ impl DistCluster {
             // the fleet runs at the AND of every ack: one stale executor
             // downgrades the session instead of breaking it
             caps &= acked;
+            // wire revision 5: trailing monotonic executor tick.  The
+            // offset estimate is exec_tick minus the RTT midpoint of the
+            // handshake round trip; a pre-v5 executor sends no tail and
+            // gets offset 0 (its spans never arrive either).
+            let offset = if r.remaining() >= 8 {
+                r.u64()? as i64 - ((t_send + t_recv) / 2) as i64
+            } else {
+                0
+            };
+            clock_offsets.push(offset);
             conns.push(ExecConn { stream, addr: addr.clone(), threads, alive: true });
         }
         let ownership = if caps & wire::CAP_CONTIG_FOLD != 0 {
@@ -412,8 +477,7 @@ impl DistCluster {
             token,
             stage_bodies,
             admm_prepared: false,
-            retries: 0,
-            rejoins: 0,
+            metrics: FtMetrics::new(),
             cell_map: None,
             staged_cells,
             map_active: false,
@@ -421,8 +485,10 @@ impl DistCluster {
             spec_quantile,
             spec_copies,
             spec_ewma: HashMap::new(),
-            spec_launched: 0,
-            spec_won: 0,
+            trace: None,
+            clock_offsets,
+            stage_t0_ns,
+            stage_t1_ns: obs::now_ns(),
         };
         if cluster.spec {
             // pre-stage the block replicas speculation dispatches
@@ -604,11 +670,12 @@ impl DistCluster {
                 &mut self.recv_buf,
                 Some(READMIT_ATTEMPT),
             ) {
-                Ok((conn, restaged)) => {
+                Ok((conn, restaged, offset)) => {
                     if restaged {
                         self.staged_cells[i] = self.pure_staged(i, part.grid.k());
                     }
                     self.conns[i] = conn;
+                    self.clock_offsets[i] = offset;
                     admitted += 1;
                 }
                 Err(_) => {} // still down; stay degraded, try next superstep
@@ -645,7 +712,7 @@ impl DistCluster {
             conn.alive = false;
             let _ = conn.stream.shutdown(Shutdown::Both);
         }
-        let mut joined: Vec<Option<(ExecConn, bool)>> =
+        let mut joined: Vec<Option<(ExecConn, bool, i64)>> =
             (0..n_execs).map(|_| None).collect();
         let mut handshakes = 0u64;
         let mut delay = Duration::from_millis(50);
@@ -710,13 +777,14 @@ impl DistCluster {
             }
         }
         for (i, j) in joined.into_iter().enumerate() {
-            if let Some((conn, restaged)) = j {
+            if let Some((conn, restaged, offset)) = j {
                 if restaged {
                     // a restarted process was restaged from the saved
                     // Stage body: it holds exactly its pure-owned cells
                     self.staged_cells[i] = self.pure_staged(i, part.grid.k());
                 }
                 self.conns[i] = conn;
+                self.clock_offsets[i] = offset;
             }
         }
         // degraded (someone missing) or previously re-mapped: the fleet
@@ -760,6 +828,7 @@ impl ClusterBackend for DistCluster {
 
     fn prepare_admm(&mut self, _staged: &StagedGrid<'_>) -> Result<()> {
         let t0 = Instant::now();
+        let t0_ns = if self.trace.is_some() { obs::now_ns() } else { 0 };
         // consume a step ordinal so wire records stay uniquely keyed by
         // `step` (staging alone owns 0); superstep records simply skip
         // this number
@@ -790,6 +859,12 @@ impl ClusterBackend for DistCluster {
                     })?;
         }
         self.admm_prepared = true;
+        if let Some(log) = self.trace.as_mut() {
+            log.span(
+                "prepare-admm", Phase::Stage, self.step_id as u32, 0,
+                0, 0, t0_ns, obs::now_ns(),
+            );
+        }
         self.wire_log.push(WireRecord {
             step: self.step_id as usize,
             op: "prepare-admm",
@@ -829,8 +904,13 @@ impl ClusterBackend for DistCluster {
         let n_execs = self.conns.len();
         let sliced = self.caps & wire::CAP_SLICED != 0;
         let fold = self.caps & wire::CAP_CONTIG_FOLD != 0 && op.fold_axis() != FoldAxis::None;
+        // ask executors for span tables only when the driver is tracing
+        // AND the whole fleet acked the capability; driver-side spans
+        // alone still work against a pre-v5 fleet
+        let trace_req = self.trace.is_some() && self.caps & wire::CAP_TRACE != 0;
         let flags = (if sliced { wire::STEP_FLAG_SLICED } else { 0 })
-            | (if fold { wire::STEP_FLAG_FOLD } else { 0 });
+            | (if fold { wire::STEP_FLAG_FOLD } else { 0 })
+            | (if trace_req { wire::STEP_FLAG_TRACE } else { 0 });
 
         let mut step_retries = 0u64;
         let mut step_rejoins = 0u64;
@@ -852,10 +932,17 @@ impl ClusterBackend for DistCluster {
                     {
                         return Err(e);
                     }
+                    let rt0 = obs::now_ns();
                     let got = self
                         .recover_fleet(part, step_id)
                         .map_err(|re| e.context(format!("fleet rejoin also failed: {re:#}")))?;
                     step_rejoins += got;
+                    if let Some(log) = self.trace.as_mut() {
+                        log.span(
+                            "recover", Phase::Recover, step_id as u32, 0,
+                            0, 0, rt0, obs::now_ns(),
+                        );
+                    }
                 }
             }
         }
@@ -939,20 +1026,40 @@ impl ClusterBackend for DistCluster {
                     if !recoverable {
                         return Err(e);
                     }
+                    let rt0 = obs::now_ns();
                     let got = self
                         .recover_fleet(part, step_id)
                         .map_err(|re| e.context(format!("fleet rejoin also failed: {re:#}")))?;
                     step_retries += 1;
                     step_rejoins += got;
+                    if let Some(log) = self.trace.as_mut() {
+                        log.span(
+                            "recover", Phase::Recover, step_id as u32, 0,
+                            0, 0, rt0, obs::now_ns(),
+                        );
+                    }
                 }
             }
         };
-        self.retries += step_retries;
-        self.rejoins += step_rejoins;
+        self.metrics.retries.add(step_retries);
+        self.metrics.rejoins.add(step_rejoins);
         step_spec_launched += exchange.spec_launched;
         step_spec_won += exchange.spec_won;
-        self.spec_launched += exchange.spec_launched as u64;
-        self.spec_won += exchange.spec_won as u64;
+        self.metrics.spec_launched.add(exchange.spec_launched as u64);
+        self.metrics.spec_won.add(exchange.spec_won as u64);
+        if let Some(log) = self.trace.as_mut() {
+            // driver-side halves of the superstep: the wire phases at
+            // slot 0 (scatter ends when the last Step frame drained)
+            let step = step_id as u32;
+            log.span(
+                "scatter", Phase::Scatter, step, 0, 0, n_tasks as u32,
+                exchange.t0_ns, exchange.scatter_done_ns,
+            );
+            log.span(
+                "gather", Phase::Gather, step, 0, 0, n_tasks as u32,
+                exchange.scatter_done_ns, exchange.t1_ns,
+            );
+        }
 
         // a lagging executor whose result was speculatively adopted
         // still owes its (stale) reply: finish reading it in blocking
@@ -1067,12 +1174,69 @@ impl ClusterBackend for DistCluster {
                     other => bail!("executor {i}: task {task} has unknown status {other}"),
                 }
             }
+            // wire revision 5: the executor's span table rides behind
+            // the task entries iff the driver set the trace bit.  A
+            // speculatively adopted reply carries no table (SpecStep is
+            // never traced), so the emptiness check skips it.
+            if trace_req && !r.is_empty() {
+                let frame = obs::decode_trace_frame(&mut r).with_context(|| {
+                    format!("trace frame from executor {i} at {}", conn.addr)
+                })?;
+                // re-base executor ticks onto the driver's clock via the
+                // handshake offset, and stamp the slot from connection
+                // identity (pid i+1; the driver itself is pid 0)
+                let off = self.clock_offsets[i];
+                let rebase = |t: u64| (t as i64).saturating_sub(off).max(0) as u64;
+                if let Some(log) = self.trace.as_mut() {
+                    let ids: Vec<u16> =
+                        frame.names.iter().map(|n| log.intern(n)).collect();
+                    for ev in &frame.events {
+                        log.record_raw(TraceEvent {
+                            name: ids[ev.name as usize],
+                            phase: ev.phase,
+                            flags: ev.flags,
+                            step: ev.step,
+                            slot: (i + 1) as u16,
+                            worker: ev.worker,
+                            task_lo: ev.task_lo,
+                            task_hi: ev.task_hi,
+                            t0_ns: rebase(ev.t0_ns),
+                            t1_ns: rebase(ev.t1_ns),
+                        });
+                    }
+                    log.add_dropped(frame.dropped);
+                }
+            }
         }
         if let Some(missing) = self.seen.iter().position(|&s| !s) {
             bail!(
                 "superstep {step_id}: no executor owned task {missing} \
                  ({n_execs} executors, {n_tasks} tasks)"
             );
+        }
+
+        let degraded = self.degraded_executors();
+        self.metrics.degraded.set(degraded as i64);
+        if let Some(log) = self.trace.as_mut() {
+            // one instant marker per fault-tolerance event this superstep
+            // (Perfetto renders them as flags on the driver track)
+            let t = obs::now_ns();
+            let step = step_id as u32;
+            for _ in 0..step_retries {
+                log.instant("retry", Phase::Recover, step, 0, t);
+            }
+            for _ in 0..step_rejoins {
+                log.instant("rejoin", Phase::Recover, step, 0, t);
+            }
+            for _ in 0..step_spec_launched {
+                log.instant("spec-launch", Phase::Spec, step, 0, t);
+            }
+            for _ in 0..step_spec_won {
+                log.instant("spec-win", Phase::Spec, step, 0, t);
+            }
+            if degraded > 0 {
+                log.instant("degraded", Phase::Recover, step, 0, t);
+            }
         }
 
         // the simulated clock advances exactly like the sim backend's,
@@ -1112,8 +1276,15 @@ impl ClusterBackend for DistCluster {
         // its comm charge) is bit-identical to the sim backend's, with
         // pairs the executors pre-folded (logged during the gather)
         // skipped but still charged
+        let t0 = if self.trace.is_some() { obs::now_ns() } else { 0 };
         self.sim
             .reduce_segments_folded(slab, base, stride, count, len, &self.fold_log);
+        if let Some(log) = self.trace.as_mut() {
+            log.span(
+                "reduce", Phase::Combine, self.step_id as u32, 0,
+                0, count as u32, t0, obs::now_ns(),
+            );
+        }
     }
 
     fn reduce_cost(&mut self, leaves: usize, bytes_per_leaf: usize) {
@@ -1138,6 +1309,31 @@ impl ClusterBackend for DistCluster {
 
     fn take_wire_log(&mut self) -> Vec<WireRecord> {
         std::mem::take(&mut self.wire_log)
+    }
+
+    fn set_trace(&mut self, enabled: bool) {
+        if enabled {
+            if self.trace.is_none() {
+                let mut log = TraceLog::with_capacity(obs::TRACE_LOG_CAPACITY);
+                // replay the connect-time staging phase so the timeline
+                // starts at the handshake, not the first superstep
+                log.span(
+                    "stage", Phase::Stage, 0, 0, 0, 0,
+                    self.stage_t0_ns, self.stage_t1_ns,
+                );
+                self.trace = Some(log);
+            }
+        } else {
+            self.trace = None;
+        }
+    }
+
+    fn take_trace(&mut self) -> Option<TraceLog> {
+        self.trace.take()
+    }
+
+    fn metrics_snapshot(&self) -> Vec<(String, f64)> {
+        self.metrics.registry.snapshot()
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -1176,6 +1372,12 @@ struct Exchange {
     spec_launched: usize,
     /// Backup replies adopted over their lagging primary this exchange.
     spec_won: usize,
+    /// Driver-clock ticks bounding the exchange: start, the moment the
+    /// last Step frame fully drained (scatter→gather boundary), and
+    /// completion.  Feed the driver's scatter/gather trace spans.
+    t0_ns: u64,
+    scatter_done_ns: u64,
+    t1_ns: u64,
 }
 
 /// Per-connection receive progress of the pipelined exchange.
@@ -1272,6 +1474,10 @@ fn exchange_inner(
 ) -> Result<Exchange> {
     let n = conns.len();
     let started = Instant::now();
+    let t0_ns = obs::now_ns();
+    // 0 = scatter still in flight; stamped once every live peer's Step
+    // frame has fully drained (the driver's scatter→gather boundary)
+    let mut scatter_done_ns = 0u64;
     let alive: Vec<bool> = conns.iter().map(|c| c.alive).collect();
     let headers: Vec<[u8; 5]> = bodies
         .iter()
@@ -1362,6 +1568,11 @@ fn exchange_inner(
                 arrival.push(i);
             }
             all_done &= sent[i] == total && recv[i].done;
+        }
+        if scatter_done_ns == 0
+            && (0..n).all(|i| !alive[i] || sent[i] == 5 + bodies[i].len())
+        {
+            scatter_done_ns = obs::now_ns();
         }
         // poll speculative backups: their replies ride the backup's
         // connection after its own reply finished
@@ -1491,6 +1702,9 @@ fn exchange_inner(
         pending_drain,
         spec_launched,
         spec_won,
+        t0_ns,
+        scatter_done_ns: if scatter_done_ns == 0 { t0_ns } else { scatter_done_ns },
+        t1_ns: obs::now_ns(),
     })
 }
 
@@ -1827,7 +2041,10 @@ fn session_token(addrs: &[String]) -> u64 {
 /// unreachable peer cannot eat the whole rejoin budget — and the
 /// session read timeout is restored before returning.  The second
 /// element reports whether the peer had to be restaged (it holds its
-/// pure-owned blocks again, nothing more).
+/// pure-owned blocks again, nothing more); the third is the refreshed
+/// clock-offset estimate (exec tick − RTT midpoint, 0 for pre-v5
+/// peers) — an executor restart resets its monotonic epoch, so the
+/// connect-time estimate is stale after any rejoin.
 #[allow(clippy::too_many_arguments)]
 fn rejoin_one(
     addr: &str,
@@ -1840,7 +2057,7 @@ fn rejoin_one(
     step_id: u64,
     recv_buf: &mut Vec<u8>,
     limit: Option<Duration>,
-) -> Result<(ExecConn, bool)> {
+) -> Result<(ExecConn, bool, i64)> {
     let mut stream = match limit {
         Some(lim) => {
             let sock = addr
@@ -1867,9 +2084,11 @@ fn rejoin_one(
     bytes::put_u32(&mut body, n_execs as u32);
     bytes::put_u64(&mut body, step_id);
     bytes::put_u32(&mut body, offered);
+    let t_send = obs::now_ns();
     wire::write_frame(&mut stream, Tag::Rejoin, &body)?;
     wire::expect_frame(&mut stream, recv_buf, Tag::RejoinAck)
         .with_context(|| format!("rejoin handshake with executor {i} at {addr}"))?;
+    let t_recv = obs::now_ns();
     let mut r = ByteReader::new(recv_buf);
     let magic = r.u32()?;
     if magic != wire::PROTO_MAGIC {
@@ -1892,6 +2111,12 @@ fn rejoin_one(
              session needs {session_caps:#x}"
         );
     }
+    // wire revision 5: trailing tick, same offset estimate as HelloAck
+    let offset = if r.remaining() >= 8 {
+        r.u64()? as i64 - ((t_send + t_recv) / 2) as i64
+    } else {
+        0
+    };
     let restaged = have_blocks == 0;
     if restaged {
         wire::write_frame(&mut stream, Tag::Stage, stage_body)
@@ -1907,6 +2132,7 @@ fn rejoin_one(
     Ok((
         ExecConn { stream, addr: addr.to_string(), threads, alive: true },
         restaged,
+        offset,
     ))
 }
 

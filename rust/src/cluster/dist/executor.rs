@@ -51,12 +51,13 @@ use super::ops::OpBuf;
 use super::wire::{self, Tag};
 use crate::cluster::{CellMap, GridOp, OpScratch, Ownership, TaskSlab, WorkerPool};
 use crate::data::{decode_block, Block, Partitioned};
+use crate::obs::{self, Counter, MetricsRegistry, Phase, SpanEvent};
 use crate::runtime::{Backend, FactorHandle, StagedGrid};
 use crate::util::bytes::{self, ByteReader};
 use anyhow::{bail, Context, Result};
 use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// `ddopt executor` settings.
 pub struct ExecutorConfig {
@@ -75,6 +76,43 @@ pub struct ExecutorConfig {
     /// Seeded network-fault injection on every outgoing frame
     /// (`--chaos seed=N,delay=MS,drop=P,trunc=P,partition=P,...`).
     pub chaos: Option<ChaosConfig>,
+    /// `host:port` to serve Prometheus-text metrics on (`GET /metrics`);
+    /// `None` disables the endpoint.  The chosen address is printed as
+    /// `executor metrics on ADDR`.
+    pub metrics_addr: Option<String>,
+}
+
+/// Executor-lifetime counters, served over `--metrics-addr` and bumped
+/// from the accept/superstep loops.  All handles point into one shared
+/// [`MetricsRegistry`].
+struct ExecMetrics {
+    connections: Counter,
+    steps: Counter,
+    spec_steps: Counter,
+    task_errors: Counter,
+}
+
+impl ExecMetrics {
+    fn new(reg: &MetricsRegistry) -> Self {
+        ExecMetrics {
+            connections: reg.counter(
+                "ddopt_executor_connections_total",
+                "Driver connections accepted by this executor process",
+            ),
+            steps: reg.counter(
+                "ddopt_executor_steps_total",
+                "Primary Step frames served",
+            ),
+            spec_steps: reg.counter(
+                "ddopt_executor_spec_steps_total",
+                "Speculative backup SpecStep frames served",
+            ),
+            task_errors: reg.counter(
+                "ddopt_executor_task_errors_total",
+                "Per-task kernel errors reported in StepResult replies",
+            ),
+        }
+    }
 }
 
 /// One staged driver session, kept across connections (keyed by the
@@ -102,13 +140,21 @@ pub fn serve(cfg: &ExecutorConfig) -> Result<()> {
     // discover OS-assigned ports from it
     println!("executor listening on {local}");
     std::io::stdout().flush().ok();
+    let registry = Arc::new(MetricsRegistry::new());
+    if let Some(addr) = &cfg.metrics_addr {
+        let bound = obs::serve_metrics(addr, Arc::clone(&registry))?;
+        println!("executor metrics on {bound}");
+        std::io::stdout().flush().ok();
+    }
+    let metrics = ExecMetrics::new(&registry);
     let chaos_state = cfg.chaos.clone().map(|c| Mutex::new(ChaosState::new(c)));
-    serve_listener_chaos(
+    serve_listener_full(
         listener,
         cfg.threads,
         cfg.once,
         cfg.chaos_abort_step,
         chaos_state.as_ref(),
+        Some(&metrics),
     )
 }
 
@@ -141,13 +187,36 @@ pub fn serve_listener_chaos(
     chaos_abort_step: u64,
     chaos: Chaos<'_>,
 ) -> Result<()> {
+    serve_listener_full(listener, threads, once, chaos_abort_step, chaos, None)
+}
+
+/// [`serve_listener_chaos`] plus the process-lifetime metrics handles
+/// (`None` when no registry is wired up, as in the in-process harnesses).
+fn serve_listener_full(
+    listener: TcpListener,
+    threads: usize,
+    once: bool,
+    chaos_abort_step: u64,
+    chaos: Chaos<'_>,
+    metrics: Option<&ExecMetrics>,
+) -> Result<()> {
     let mut cache: Option<CachedSession> = None;
     let mut steps_served: u64 = 0;
     loop {
         let (stream, peer) = listener.accept().context("accept driver connection")?;
         eprintln!("executor: serving driver at {peer}");
-        match serve_conn(stream, threads, &mut cache, chaos_abort_step, &mut steps_served, chaos)
-        {
+        if let Some(m) = metrics {
+            m.connections.inc();
+        }
+        match serve_conn(
+            stream,
+            threads,
+            &mut cache,
+            chaos_abort_step,
+            &mut steps_served,
+            chaos,
+            metrics,
+        ) {
             Ok(()) => eprintln!("executor: driver at {peer} finished cleanly"),
             // keep the cached session: a dropped connection is exactly
             // what a driver-side failure (or our own chaos abort on a
@@ -176,6 +245,7 @@ enum SessionOutcome {
 /// is either `Hello` (fresh session: handshake + Stage) or `Rejoin`
 /// (re-attach to the cached session, restaging only if the cache is
 /// gone).
+#[allow(clippy::too_many_arguments)]
 fn serve_conn(
     mut stream: TcpStream,
     threads: usize,
@@ -183,6 +253,7 @@ fn serve_conn(
     chaos_abort_step: u64,
     steps_served: &mut u64,
     chaos: Chaos<'_>,
+    metrics: Option<&ExecMetrics>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut buf = Vec::new();
@@ -203,6 +274,7 @@ fn serve_conn(
             steps_served,
             &mut buf,
             chaos,
+            metrics,
         )?;
         match outcome {
             SessionOutcome::Clean => {
@@ -271,6 +343,9 @@ fn hello_session(
     bytes::put_u32(&mut ack, wire::PROTO_VERSION);
     bytes::put_u32(&mut ack, threads as u32);
     bytes::put_u32(&mut ack, caps);
+    // wire revision 5: trailing monotonic tick for the driver's
+    // RTT-midpoint clock-offset estimate (old drivers ignore the tail)
+    bytes::put_u64(&mut ack, obs::now_ns());
     chaos::chaos_write(stream, Tag::HelloAck, &ack, chaos)?;
 
     let (ownership, part) = receive_stage(stream, buf, caps, my_index, n_execs, threads, chaos)?;
@@ -314,6 +389,8 @@ fn rejoin_session(
     bytes::put_u32(&mut ack, threads as u32);
     bytes::put_u32(&mut ack, caps);
     bytes::put_u8(&mut ack, if have { 1 } else { 0 });
+    // wire revision 5: trailing tick, same role as in HelloAck
+    bytes::put_u64(&mut ack, obs::now_ns());
     chaos::chaos_write(stream, Tag::RejoinAck, &ack, chaos)?;
     eprintln!(
         "executor {my_index}/{n_execs}: rejoin for superstep {step_id} ({})",
@@ -416,6 +493,7 @@ fn serve_session(
     steps_served: &mut u64,
     buf: &mut Vec<u8>,
     chaos: Chaos<'_>,
+    metrics: Option<&ExecMetrics>,
 ) -> Result<SessionOutcome> {
     let part = &sess.part;
     let map = sess.map.as_ref();
@@ -435,6 +513,7 @@ fn serve_session(
     let mut out: Vec<f32> = Vec::new();
     let mut out2: Vec<f32> = Vec::new();
     let mut reply: Vec<u8> = Vec::new();
+    let mut span_buf: Vec<SpanEvent> = Vec::new();
     loop {
         let (tag, _) = wire::read_frame(stream, buf)?;
         match tag {
@@ -477,6 +556,9 @@ fn serve_session(
                         std::process::abort();
                     }
                 }
+                if let Some(m) = metrics {
+                    if forced { m.spec_steps.inc() } else { m.steps.inc() }
+                }
                 let outcome = run_step(
                     &staged,
                     &pool,
@@ -495,9 +577,13 @@ fn serve_session(
                     &mut out,
                     &mut out2,
                     &mut reply,
+                    &mut span_buf,
                 );
                 match outcome {
-                    Ok(()) => {
+                    Ok(n_task_errs) => {
+                        if let (Some(m), true) = (metrics, n_task_errs > 0) {
+                            m.task_errors.add(n_task_errs as u64);
+                        }
                         chaos::chaos_write(stream, Tag::StepResult, &reply, chaos)?;
                     }
                     Err(e) => {
@@ -532,7 +618,8 @@ fn serve_session(
 /// Decode one Step (or SpecStep) frame, run the owned tasks, optionally
 /// pre-fold the locally-owned aligned combine subtrees, and build the
 /// StepResult body in `reply`.  Per-task kernel errors become per-task
-/// reply entries — only frame/op decoding problems are `Err` here.
+/// reply entries — only frame/op decoding problems are `Err` here; the
+/// `Ok` value is the number of per-task errors (for the metrics counter).
 ///
 /// With `forced` (a SpecStep), the task list rides in the frame instead
 /// of being derived from ownership: the executor is running a backup
@@ -556,7 +643,8 @@ fn run_step(
     out: &mut Vec<f32>,
     out2: &mut Vec<f32>,
     reply: &mut Vec<u8>,
-) -> Result<()> {
+    span_buf: &mut Vec<SpanEvent>,
+) -> Result<usize> {
     let part = staged.part;
     let mut r = ByteReader::new(frame);
     let step_id = r.u64()?;
@@ -567,6 +655,10 @@ fn run_step(
     if flags & wire::STEP_FLAG_FOLD != 0 && caps & wire::CAP_CONTIG_FOLD == 0 {
         bail!("driver requested gather folding without the negotiated capability");
     }
+    let trace = flags & wire::STEP_FLAG_TRACE != 0;
+    if trace && caps & wire::CAP_TRACE == 0 {
+        bail!("driver requested span tracing without the negotiated capability");
+    }
     if forced {
         // a backup copy: explicit task list, sliced payload, never folded
         // (the replica holder's fold subtrees are not the laggard's)
@@ -575,6 +667,9 @@ fn run_step(
         }
         if flags & wire::STEP_FLAG_FOLD != 0 {
             bail!("SpecStep requested gather folding");
+        }
+        if trace {
+            bail!("SpecStep requested span tracing");
         }
         let count = r.u32()? as usize;
         owned.clear();
@@ -626,6 +721,16 @@ fn run_step(
     times.clear();
     times.resize(owned.len(), 0.0);
 
+    if trace {
+        // lazily arm the per-worker rings (idempotent after the first
+        // traced step) and stamp the superstep ordinal; rings stay armed
+        // but spans are only recorded on steps that carry the trace bit
+        for (w, sc) in scratch.iter_mut().enumerate() {
+            sc.enable_tracing(obs::SPAN_RING_CAPACITY, (my_index + 1) as u16, w as u16);
+            sc.set_trace_step(step_id as u32);
+        }
+    }
+
     // kernel errors are collected per task (the epoch always drains, so
     // every owned task still reports a measured duration)
     let errs: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
@@ -637,10 +742,22 @@ fn run_step(
         let errs_ref = &errs;
         pool.run_indexed(owned_ref.len(), scratch, times, |i, sc| {
             let task = owned_ref[i];
+            let t0 = if trace { obs::now_ns() } else { 0 };
             if let Err(e) =
                 op_ref.exec_task(staged, factors, task, sc, &out_slab, &out2_slab)
             {
                 errs_ref.lock().unwrap().push((task, format!("{e:#}")));
+            }
+            if trace {
+                let t1 = obs::now_ns();
+                sc.spans_mut().push_span(
+                    op_ref.name(),
+                    Phase::Exec,
+                    task as u32,
+                    task as u32 + 1,
+                    t0,
+                    t1,
+                );
             }
             Ok(())
         })?;
@@ -651,7 +768,18 @@ fn run_step(
     // owned[i]'s segment (1 = shipped unfolded, 0 = absorbed by a root)
     let mut fold_counts: Vec<usize> = vec![1; owned.len()];
     if flags & wire::STEP_FLAG_FOLD != 0 && errs.is_empty() {
+        let t0 = if trace { obs::now_ns() } else { 0 };
         fold_owned_subtrees(&op, part, owned, out, &mut fold_counts);
+        if trace {
+            scratch[0].spans_mut().push_span(
+                "fold",
+                Phase::Fold,
+                0,
+                owned.len() as u32,
+                t0,
+                obs::now_ns(),
+            );
+        }
     }
 
     reply.clear();
@@ -675,7 +803,18 @@ fn run_step(
             bytes::put_f32s(reply, &out2[s2..s2 + l2]);
         }
     }
-    Ok(())
+    if trace {
+        // piggyback the drained span table after the task entries (the
+        // driver decodes it iff it set the trace bit; older drivers never
+        // set the bit, so they never see trailing bytes)
+        span_buf.clear();
+        let mut dropped: u64 = 0;
+        for sc in scratch.iter_mut() {
+            dropped += sc.spans_mut().drain(|ev| span_buf.push(*ev));
+        }
+        obs::encode_trace_frame(span_buf, dropped, reply)?;
+    }
+    Ok(errs.len())
 }
 
 /// Pre-combine the aligned power-of-two subtrees of each combine group

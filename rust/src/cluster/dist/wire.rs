@@ -12,18 +12,18 @@
 //! | driver → executor        | executor → driver        | body |
 //! |--------------------------|--------------------------|------|
 //! | `Hello` (1)              |                          | magic, proto version, executor index, executor count, offered capability bits |
-//! |                          | `HelloAck` (2)           | magic, proto version, worker threads, accepted capability bits |
+//! |                          | `HelloAck` (2)           | magic, proto version, worker threads, accepted capability bits; *v5* — trailing monotonic tick (u64 ns) |
 //! | `Stage` (3)              |                          | ownership mode byte + partition metadata + the executor's owned blocks |
 //! |                          | `StageAck` (4)           | — |
 //! | `PrepareAdmm` (5)        |                          | — (factor your cached blocks, off the clock) |
 //! |                          | `PrepareAdmmAck` (6)     | — |
-//! | `Step` (7)               |                          | step id + flags byte (bit 0: sliced payloads, bit 1: fold gather) + [`GridOp`](crate::cluster::GridOp) descriptor (full or sliced) |
-//! |                          | `StepResult` (8)         | step id + per-owned-task (index, seconds, status): ok → fold count + result segment(s); error → message; absorbed-by-fold → nothing |
+//! | `Step` (7)               |                          | step id + flags byte (bit 0: sliced payloads, bit 1: fold gather, bit 2: trace spans, *v5*) + [`GridOp`](crate::cluster::GridOp) descriptor (full or sliced) |
+//! |                          | `StepResult` (8)         | step id + per-owned-task (index, seconds, status): ok → fold count + result segment(s); error → message; absorbed-by-fold → nothing; *v5* — a span-table frame appended when the Step carried the trace bit |
 //! | `Shutdown` (9)           |                          | — |
 //! |                          | `Bye` (10)               | — |
 //! | `Fatal` (11), either way |                          | message string |
 //! | `Rejoin` (12)            |                          | *v3* — magic, session token, executor index, executor count, failed step id, offered capability bits |
-//! |                          | `RejoinAck` (13)         | *v3* — magic, worker threads, accepted capability bits, have-blocks byte (1: blocks still cached under this session token, skip Stage) |
+//! |                          | `RejoinAck` (13)         | *v3* — magic, worker threads, accepted capability bits, have-blocks byte (1: blocks still cached under this session token, skip Stage); *v5* — trailing monotonic tick (u64 ns) |
 //! | `CellMap` (14)           |                          | *v4* — magic, step id, executor count, explicit cell→slot table, plus any blocks the receiver must (re)stage under the new map |
 //! |                          | `CellMapAck` (15)        | *v4* — magic |
 //! | `SpecStep` (16)          |                          | *v4* — step id + flags byte + explicit task list + sliced op descriptor: a speculative backup copy of another executor's lagging tasks |
@@ -86,8 +86,32 @@
 //! * [`CAP_SPEC`] — the executor accepts `SpecStep` frames: speculative
 //!   backup execution of another executor's lagging tasks.
 //!
+//! * [`CAP_TRACE`] — the executor records per-task spans and appends a
+//!   compact span-table frame ([`crate::obs::frame`]) to each
+//!   `StepResult` whose Step frame set the trace flag, and both
+//!   handshake acks carry a trailing monotonic tick the driver uses to
+//!   estimate the executor's clock offset (RTT midpoint).
+//!
 //! A full-broadcast driver (`--dist-wire broadcast`) simply offers no
 //! capabilities.
+//!
+//! ## Protocol v5: fleet-wide tracing
+//!
+//! Wire revision 5 adds executor telemetry.  Like v3/v4 the version
+//! field stays 2 — everything is negotiated through [`CAP_TRACE`]:
+//!
+//! * `HelloAck` and `RejoinAck` gain a trailing `u64` monotonic tick
+//!   (nanoseconds on the executor's trace clock).  Old drivers read
+//!   exactly their fixed fields and ignore the tail (the v3 token
+//!   precedent); new drivers use it with the handshake send/receive
+//!   times to estimate a per-executor clock offset.
+//! * `Step` gains flags bit 2 ([`STEP_FLAG_TRACE`]): record per-task
+//!   exec/fold spans this superstep and append the encoded span table
+//!   after the `StepResult` task entries.  The driver only sets the bit
+//!   when the whole fleet acked [`CAP_TRACE`], so old parsers (which
+//!   stop after the task entries) never see trailing bytes they would
+//!   trip on.  `SpecStep` never carries the trace bit — backup copies
+//!   are accounted driver-side as instants.
 
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -101,12 +125,11 @@ pub const PROTO_MAGIC: u32 = 0x4444_4F50;
 /// keeps this at 2: it is negotiated through [`CAP_REJOIN`] so v2
 /// executors interoperate.
 pub const PROTO_VERSION: u32 = 2;
-/// Wire revision implemented by this build: v4 = v3 (the rejoin
-/// fault-tolerance extension) + explicit rewritable cell placement
-/// (`CellMap`, [`CAP_ELASTIC`]) and speculative re-execution
-/// (`SpecStep`, [`CAP_SPEC`]), all negotiated purely via capability
-/// bits.
-pub const WIRE_REVISION: u32 = 4;
+/// Wire revision implemented by this build: v5 = v4 (rejoin recovery +
+/// elastic placement + speculative re-execution) + fleet-wide tracing
+/// (`CAP_TRACE`: span tables piggybacked on step replies, handshake
+/// clock ticks), all negotiated purely via capability bits.
+pub const WIRE_REVISION: u32 = 5;
 /// Ceiling on one frame body (guards a corrupt length prefix).
 pub const MAX_FRAME: usize = 1 << 30;
 
@@ -127,9 +150,14 @@ pub const CAP_ELASTIC: u32 = 1 << 3;
 /// Capability bit (wire revision 4): the executor accepts `SpecStep`
 /// frames — speculative backup copies of a lagging peer's tasks.
 pub const CAP_SPEC: u32 = 1 << 4;
+/// Capability bit (wire revision 5): the executor implements tracing —
+/// it appends a span-table frame to `StepResult` when the Step frame
+/// set [`STEP_FLAG_TRACE`], and its handshake acks carry a trailing
+/// monotonic tick for driver-side clock-offset estimation.
+pub const CAP_TRACE: u32 = 1 << 5;
 /// Every capability this build implements (what an executor acks).
 pub const CAPS_SUPPORTED: u32 =
-    CAP_SLICED | CAP_CONTIG_FOLD | CAP_REJOIN | CAP_ELASTIC | CAP_SPEC;
+    CAP_SLICED | CAP_CONTIG_FOLD | CAP_REJOIN | CAP_ELASTIC | CAP_SPEC | CAP_TRACE;
 
 /// Step-frame flags byte, bit 0: the op payload is sliced for this
 /// executor (decode with `decode_sliced_into`).
@@ -137,6 +165,11 @@ pub const STEP_FLAG_SLICED: u8 = 1 << 0;
 /// Step-frame flags byte, bit 1: pre-fold locally-owned aligned combine
 /// subtrees before replying.
 pub const STEP_FLAG_FOLD: u8 = 1 << 1;
+/// Step-frame flags byte, bit 2 (wire revision 5): record per-task
+/// spans this superstep and append the encoded span table
+/// ([`crate::obs::frame`]) after the `StepResult` task entries.  Only
+/// set when the whole fleet acked [`CAP_TRACE`].
+pub const STEP_FLAG_TRACE: u8 = 1 << 2;
 
 /// Frame tags (see the module-level message table).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -16,6 +16,7 @@ use crate::cluster::{ClusterBackend, ClusterConfig, ClusterMode, DistCluster, Si
 use crate::data::Partitioned;
 use crate::loss::Loss;
 use crate::metrics::{Recorder, WireRecord};
+use crate::obs::TraceLog;
 use crate::runtime::StagedGrid;
 use crate::util::bytes::ByteReader;
 use anyhow::{bail, Context, Result};
@@ -84,6 +85,13 @@ pub struct RunResult {
     /// bytes on the wire next to the simulated charge.  Empty on the sim
     /// backend (nothing crosses a socket there).
     pub wire: Vec<WireRecord>,
+    /// Fleet-wide span log when tracing was enabled (`Driver::trace`),
+    /// ready for [`crate::obs::write_chrome_trace`].
+    pub trace: Option<TraceLog>,
+    /// Backend metrics at run end, sorted by name (counters, gauges,
+    /// histogram `_count`/`_sum` rows).  Empty for backends without a
+    /// registry.
+    pub metrics: Vec<(String, f64)>,
 }
 
 /// Builder-style driver.
@@ -102,6 +110,9 @@ pub struct Driver<'a> {
     checkpoint_every: usize,
     /// Resume from the latest checkpoint in `checkpoint_dir`, if any.
     resume: bool,
+    /// Record superstep spans (driver + executors) into a [`TraceLog`]
+    /// surfaced on [`RunResult::trace`].
+    trace: bool,
 }
 
 impl<'a> Driver<'a> {
@@ -117,6 +128,7 @@ impl<'a> Driver<'a> {
             checkpoint_dir: None,
             checkpoint_every: 1,
             resume: false,
+            trace: false,
         })
     }
 
@@ -157,6 +169,13 @@ impl<'a> Driver<'a> {
     /// when the dir is empty: the run simply starts fresh).
     pub fn resume(mut self, yes: bool) -> Self {
         self.resume = yes;
+        self
+    }
+
+    /// Record superstep spans into [`RunResult::trace`] (off by
+    /// default: the tracing-off hot path costs one branch per step).
+    pub fn trace(mut self, yes: bool) -> Self {
+        self.trace = yes;
         self
     }
 
@@ -213,6 +232,10 @@ impl<'a> Driver<'a> {
         // optimizers charge, and the host wall stopwatch `threads` (or
         // real executors) speed up.
         let mut backend = self.make_backend()?;
+        if self.trace {
+            // before prepare(): staging and scratch bring-up are spans
+            backend.set_trace(true);
+        }
         let outcome = self.run_loop(opt, backend.as_mut());
         let rec = match outcome {
             Ok(rec) => rec,
@@ -237,6 +260,8 @@ impl<'a> Driver<'a> {
             stragglers: backend.clock().stragglers(),
             failures: backend.clock().failures(),
             wire: backend.take_wire_log(),
+            trace: backend.take_trace(),
+            metrics: backend.metrics_snapshot(),
         };
         backend.shutdown()?;
         Ok(result)

@@ -57,6 +57,7 @@ pub mod data;
 pub mod linalg;
 pub mod loss;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod solvers;
 pub mod testkit;

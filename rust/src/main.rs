@@ -14,9 +14,11 @@
 //!                        |<clause>+<clause>]
 //!             [--n-per 200 --m-per 150 | --sparse n,m,density | --libsvm file]
 //!             [--no-fstar] [--out history.csv] [--wire-out wire.jsonl]
+//!             [--trace-out trace.json]  (Chrome trace JSON + .jsonl event log)
 //!             [--dump-w weights.hex]
 //!             [--checkpoint-dir dir [--checkpoint-every K]] [--resume]
 //! ddopt executor --bind 127.0.0.1:7077 [--threads N] [--once]
+//!                [--metrics-addr 127.0.0.1:9090]  (Prometheus text on GET /metrics)
 //!                [--chaos-abort-step N]  (fault injection: abort on Nth step)
 //!                [--chaos seed=1,delay=MS,drop=P,trunc=P,partition=P[,after=K,window=W]]
 //! ddopt chaosproxy LISTEN CONNECT --chaos seed=1,...  (seeded faulty TCP forwarder)
@@ -48,6 +50,12 @@
 //! `--dist-spec` arms speculative re-execution: when a gather stalls
 //! past the latency quantile, backup copies of the lagging tasks are
 //! dispatched to idle executors and the first valid result wins.
+//! `--trace-out FILE` records superstep spans (driver phases, per-task
+//! executor spans over the wire, instant events for every
+//! retry/rejoin/degrade/speculation) and writes Chrome trace-event JSON
+//! — load it at <https://ui.perfetto.dev> — plus a raw `.jsonl` event
+//! log next to it.  `executor --metrics-addr HOST:PORT` serves the
+//! executor's counters as Prometheus text on `GET /metrics`.
 
 use anyhow::{anyhow, bail, Result};
 use ddopt::bench_harness::{self, Scale};
@@ -207,6 +215,7 @@ fn run_train(args: &Args) -> Result<()> {
     let resume = args.switch("resume");
     let out = args.flag_str("out");
     let wire_out = args.flag_str("wire-out");
+    let trace_out = args.flag_str("trace-out");
     let dump_w = args.flag_str("dump-w");
     args.finish().map_err(|e| anyhow!(e))?;
 
@@ -246,7 +255,8 @@ fn run_train(args: &Args) -> Result<()> {
 
     let mut driver = Driver::new(&part, &backend)?
         .iterations(cfg.iterations)
-        .cluster(ClusterConfig { cores: cfg.cluster.cores, ..cfg.cluster.clone() });
+        .cluster(ClusterConfig { cores: cfg.cluster.cores, ..cfg.cluster.clone() })
+        .trace(trace_out.is_some());
     if let Some(dir) = &cfg.checkpoint_dir {
         let every = if cfg.checkpoint_every == 0 { 1 } else { cfg.checkpoint_every };
         driver = driver.checkpoints(dir, every).resume(resume);
@@ -308,8 +318,21 @@ fn run_train(args: &Args) -> Result<()> {
             w_in as f64 / (1 << 20) as f64,
             wall
         );
-        let retries: usize = result.wire.iter().map(|r| r.retries).sum();
-        let rejoins: usize = result.wire.iter().map(|r| r.rejoins).sum();
+        // fault-tolerance run totals come from the backend's metrics
+        // registry — the same source `--metrics-addr` and the perf
+        // harness read — with the per-step wire records as the fallback
+        // for registry-less backends
+        let metric = |name: &str| -> Option<usize> {
+            result
+                .metrics
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, v)| *v as usize)
+        };
+        let retries = metric("ddopt_step_retries_total")
+            .unwrap_or_else(|| result.wire.iter().map(|r| r.retries).sum());
+        let rejoins = metric("ddopt_rejoins_total")
+            .unwrap_or_else(|| result.wire.iter().map(|r| r.rejoins).sum());
         if retries > 0 || rejoins > 0 {
             println!(
                 "recovery: {retries} superstep retr{} after {rejoins} executor rejoin{}",
@@ -317,23 +340,33 @@ fn run_train(args: &Args) -> Result<()> {
                 if rejoins == 1 { "" } else { "s" }
             );
         }
-        let degraded = result
-            .wire
-            .iter()
-            .map(|r| r.degraded_executors)
-            .max()
-            .unwrap_or(0);
+        let degraded = metric("ddopt_degraded_executors").unwrap_or_else(|| {
+            result
+                .wire
+                .iter()
+                .map(|r| r.degraded_executors)
+                .max()
+                .unwrap_or(0)
+        });
         if degraded > 0 {
             println!(
                 "degraded: finished with {degraded} executor{} permanently removed (cells rebalanced)",
                 if degraded == 1 { "" } else { "s" }
             );
         }
-        let spec_launched: usize = result.wire.iter().map(|r| r.spec_launched).sum();
-        let spec_won: usize = result.wire.iter().map(|r| r.spec_won).sum();
+        let spec_launched = metric("ddopt_spec_launched_total")
+            .unwrap_or_else(|| result.wire.iter().map(|r| r.spec_launched).sum());
+        let spec_won = metric("ddopt_spec_won_total")
+            .unwrap_or_else(|| result.wire.iter().map(|r| r.spec_won).sum());
         if spec_launched > 0 {
             println!("speculation: {spec_launched} backup task{} launched, {spec_won} adopted",
                 if spec_launched == 1 { "" } else { "s" });
+        }
+    }
+    if !result.metrics.is_empty() {
+        println!("metrics:");
+        for (name, value) in &result.metrics {
+            println!("  {name} {value}");
         }
     }
     if let Some(path) = wire_out {
@@ -342,6 +375,26 @@ fn run_train(args: &Args) -> Result<()> {
         } else {
             ddopt::metrics::write_wire_jsonl(&result.wire, Path::new(&path))?;
             println!("wire records -> {path}");
+        }
+    }
+    if let Some(path) = trace_out {
+        match &result.trace {
+            Some(log) => {
+                let path = Path::new(&path);
+                if let Some(dir) = path.parent() {
+                    std::fs::create_dir_all(dir).ok();
+                }
+                ddopt::obs::write_chrome_trace(log, path)?;
+                let events = ddopt::obs::chrome::jsonl_path_for(path);
+                ddopt::obs::write_events_jsonl(log, &events)?;
+                println!(
+                    "trace ({} spans) -> {} (Perfetto) + {} (JSONL)",
+                    log.len(),
+                    path.display(),
+                    events.display()
+                );
+            }
+            None => println!("--trace-out: backend produced no trace"),
         }
     }
     if let Some(path) = dump_w {
@@ -377,6 +430,7 @@ fn run_executor(args: &Args) -> Result<()> {
         Some(spec) => Some(ddopt::cluster::dist::ChaosConfig::parse(&spec)?),
         None => None,
     };
+    let metrics_addr = args.flag_str("metrics-addr");
     args.finish().map_err(|e| anyhow!(e))?;
     ddopt::cluster::dist::serve(&ddopt::cluster::dist::ExecutorConfig {
         bind,
@@ -384,6 +438,7 @@ fn run_executor(args: &Args) -> Result<()> {
         once,
         chaos_abort_step,
         chaos,
+        metrics_addr,
     })
 }
 

@@ -1,0 +1,219 @@
+//! Trace exports: Chrome trace-event JSON (Perfetto-loadable) and a raw
+//! JSONL event log.
+//!
+//! Mapping: **process** = executor slot (pid 0 is the driver, pid `s+1`
+//! is executor slot `s`), **thread** = worker (pool scratch cell).
+//! Spans render as `"X"` complete events with microsecond `ts`/`dur`;
+//! retries, rejoins, degrades, and speculation wins render as `"i"`
+//! instant events so they show up as markers on the timeline.  Output
+//! is deterministic for a given log: objects serialize through
+//! [`Json`]'s ordered maps and metadata is emitted in sorted pid/tid
+//! order, which is what makes the golden export test byte-stable.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::span::FLAG_INSTANT;
+use super::trace::TraceLog;
+
+fn process_name(pid: u64) -> String {
+    if pid == 0 {
+        "driver".to_string()
+    } else {
+        format!("executor {}", pid - 1)
+    }
+}
+
+/// Build the trace-event document: metadata first (sorted), then events
+/// in recording order.
+pub fn chrome_trace(log: &TraceLog) -> Json {
+    let mut pids: BTreeSet<u64> = BTreeSet::new();
+    let mut tids: BTreeSet<(u64, u64)> = BTreeSet::new();
+    for ev in log.events() {
+        pids.insert(ev.slot as u64);
+        tids.insert((ev.slot as u64, ev.worker as u64));
+    }
+    let mut out: Vec<Json> = Vec::new();
+    for &pid in &pids {
+        out.push(Json::obj(vec![
+            ("args", Json::obj(vec![("name", Json::str(&process_name(pid)))])),
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(0.0)),
+        ]));
+        out.push(Json::obj(vec![
+            ("args", Json::obj(vec![("sort_index", Json::num(pid as f64))])),
+            ("name", Json::str("process_sort_index")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(0.0)),
+        ]));
+    }
+    for &(pid, tid) in &tids {
+        out.push(Json::obj(vec![
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(&format!("worker {tid}")))]),
+            ),
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+        ]));
+    }
+    for ev in log.events() {
+        let args = Json::obj(vec![
+            ("step", Json::num(ev.step as f64)),
+            ("task_hi", Json::num(ev.task_hi as f64)),
+            ("task_lo", Json::num(ev.task_lo as f64)),
+        ]);
+        let ts = ev.t0_ns as f64 / 1000.0;
+        if ev.flags & FLAG_INSTANT != 0 {
+            out.push(Json::obj(vec![
+                ("args", args),
+                ("cat", Json::str(ev.phase.name())),
+                ("name", Json::str(log.name(ev.name))),
+                ("ph", Json::str("i")),
+                ("pid", Json::num(ev.slot as f64)),
+                ("s", Json::str("p")),
+                ("tid", Json::num(ev.worker as f64)),
+                ("ts", Json::num(ts)),
+            ]));
+        } else {
+            out.push(Json::obj(vec![
+                ("args", args),
+                ("cat", Json::str(ev.phase.name())),
+                ("dur", Json::num((ev.t1_ns - ev.t0_ns) as f64 / 1000.0)),
+                ("name", Json::str(log.name(ev.name))),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(ev.slot as f64)),
+                ("tid", Json::num(ev.worker as f64)),
+                ("ts", Json::num(ts)),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        (
+            "ddopt",
+            Json::obj(vec![
+                ("dropped", Json::num(log.dropped() as f64)),
+                ("events", Json::num(log.len() as f64)),
+            ]),
+        ),
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(out)),
+    ])
+}
+
+/// Write the Chrome trace-event JSON document to `path`.
+pub fn write_chrome_trace(log: &TraceLog, path: &Path) -> Result<()> {
+    let doc = chrome_trace(log);
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    writeln!(f, "{doc}")?;
+    Ok(())
+}
+
+/// Sibling JSONL path for a trace file: `trace.json` → `trace.jsonl`.
+pub fn jsonl_path_for(trace_path: &Path) -> PathBuf {
+    trace_path.with_extension("jsonl")
+}
+
+/// Write the raw event log, one JSON object per line, in recording
+/// order — the grep/jq-friendly counterpart of the Perfetto view.
+pub fn write_events_jsonl(log: &TraceLog, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating trace event log {}", path.display()))?;
+    for ev in log.events() {
+        let line = Json::obj(vec![
+            ("instant", Json::Bool(ev.flags & FLAG_INSTANT != 0)),
+            ("name", Json::str(log.name(ev.name))),
+            ("phase", Json::str(ev.phase.name())),
+            ("slot", Json::num(ev.slot as f64)),
+            ("step", Json::num(ev.step as f64)),
+            ("t0_ns", Json::num(ev.t0_ns as f64)),
+            ("t1_ns", Json::num(ev.t1_ns as f64)),
+            ("task_hi", Json::num(ev.task_hi as f64)),
+            ("task_lo", Json::num(ev.task_lo as f64)),
+            ("worker", Json::num(ev.worker as f64)),
+        ]);
+        writeln!(f, "{line}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::Phase;
+    use super::*;
+
+    fn sample_log() -> TraceLog {
+        let mut log = TraceLog::with_capacity(16);
+        log.span("sdca", Phase::Exec, 1, 1, 0, 4, 1_000, 5_000);
+        log.span("combine", Phase::Combine, 1, 0, 0, 8, 5_500, 6_000);
+        log.instant("retry", Phase::Recover, 2, 0, 7_000);
+        log
+    }
+
+    #[test]
+    fn export_is_valid_json_with_metadata_and_events() {
+        let doc = chrome_trace(&sample_log());
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 pids -> 2x2 process metadata + 2 thread metadata + 3 events
+        let metas = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .count();
+        assert_eq!(metas, 6);
+        let spans = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .count();
+        let instants = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("i"))
+            .count();
+        assert_eq!((spans, instants), (2, 1));
+        // microsecond conversion
+        let first_span = events
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .unwrap();
+        assert_eq!(first_span.get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(first_span.get("dur").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let a = chrome_trace(&sample_log()).to_string();
+        let b = chrome_trace(&sample_log()).to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_sibling_path() {
+        let log = sample_log();
+        let dir = std::env::temp_dir().join(format!("ddopt-obs-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let jsonl = jsonl_path_for(&path);
+        assert_eq!(jsonl.file_name().unwrap(), "trace.jsonl");
+        write_events_jsonl(&log, &jsonl).unwrap();
+        let text = std::fs::read_to_string(&jsonl).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("phase").unwrap().as_str().is_some());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,294 @@
+//! Wire codec for executor span tables (the `CAP_TRACE` piggyback
+//! frame appended to step replies at superstep boundaries).
+//!
+//! Layout (little-endian, matching [`crate::util::bytes`]):
+//!
+//! ```text
+//! [n_names u32]                      (≤ 256)
+//!   n_names × [len u32][utf-8 bytes] (each ≤ 128 bytes)
+//! [n_events u32]                     (bounded by remaining bytes)
+//!   n_events × [step u32][name u8][phase u8][flags u8]
+//!              [worker u32][task_lo u32][task_hi u32]
+//!              [t0_ns u64][t1_ns u64]
+//! [dropped u64]
+//! ```
+//!
+//! The executor's slot is deliberately *not* on the wire: the driver
+//! stamps it from connection identity when merging, so a confused (or
+//! malicious) executor cannot attribute its spans to another slot.
+//! Decoding is strict — unknown phases, out-of-range name ids,
+//! inverted time or task ranges, unknown flag bits, and trailing bytes
+//! are all rejected, mirroring the wire-frame convention of trusting
+//! nothing that arrives over TCP.
+
+use anyhow::{bail, Result};
+
+use crate::util::bytes::{put_str, put_u32, put_u64, put_u8, ByteReader};
+
+use super::span::{Phase, SpanEvent, FLAG_INSTANT};
+
+/// Per-frame name-table cap: the vocabulary is op kinds plus a few
+/// phase labels, so 256 is generous; a bigger table is a corrupt frame.
+pub const TRACE_FRAME_MAX_NAMES: usize = 256;
+/// Longest accepted interned name.
+pub const TRACE_FRAME_MAX_NAME_LEN: usize = 128;
+/// Fixed encoded size of one event record.
+const EVENT_BYTES: usize = 4 + 1 + 1 + 1 + 4 + 4 + 4 + 8 + 8;
+/// Flag bits this revision understands; anything else is corrupt.
+const KNOWN_FLAGS: u8 = FLAG_INSTANT;
+
+/// A decoded span with its name still an index into the frame's own
+/// name table (the merger re-interns into the driver [`super::TraceLog`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RawSpan {
+    pub name: u16,
+    pub phase: Phase,
+    pub flags: u8,
+    pub step: u32,
+    pub worker: u16,
+    pub task_lo: u32,
+    pub task_hi: u32,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct TraceFrame {
+    pub names: Vec<String>,
+    pub events: Vec<RawSpan>,
+    pub dropped: u64,
+}
+
+/// Serialize a span table.  `events` come straight from a drained
+/// [`super::SpanRing`]; the name table is built by linear scan (the
+/// vocabulary is tiny).  Fails only if the vocabulary overflows the
+/// frame cap, which would indicate a recorder bug.
+pub fn encode_trace_frame(events: &[SpanEvent], dropped: u64, buf: &mut Vec<u8>) -> Result<()> {
+    let mut names: Vec<&str> = Vec::new();
+    let mut ids: Vec<u8> = Vec::with_capacity(events.len());
+    for ev in events {
+        let id = match names.iter().position(|&n| n == ev.name) {
+            Some(i) => i,
+            None => {
+                if names.len() >= TRACE_FRAME_MAX_NAMES {
+                    bail!(
+                        "trace frame name table overflow (> {TRACE_FRAME_MAX_NAMES} names)"
+                    );
+                }
+                if ev.name.len() > TRACE_FRAME_MAX_NAME_LEN {
+                    bail!("trace span name too long: {} bytes", ev.name.len());
+                }
+                names.push(ev.name);
+                names.len() - 1
+            }
+        };
+        ids.push(id as u8);
+    }
+    put_u32(buf, names.len() as u32);
+    for n in &names {
+        put_str(buf, n);
+    }
+    put_u32(buf, events.len() as u32);
+    for (ev, &id) in events.iter().zip(&ids) {
+        put_u32(buf, ev.step);
+        put_u8(buf, id);
+        put_u8(buf, ev.phase as u8);
+        put_u8(buf, ev.flags);
+        put_u32(buf, ev.worker as u32);
+        put_u32(buf, ev.task_lo);
+        put_u32(buf, ev.task_hi);
+        put_u64(buf, ev.t0_ns);
+        put_u64(buf, ev.t1_ns);
+    }
+    put_u64(buf, dropped);
+    Ok(())
+}
+
+/// Strict decode of one span table; consumes exactly one frame from the
+/// reader (the caller checks overall frame emptiness).
+pub fn decode_trace_frame(r: &mut ByteReader) -> Result<TraceFrame> {
+    let n_names = r.u32()? as usize;
+    if n_names > TRACE_FRAME_MAX_NAMES {
+        bail!("corrupt trace frame: {n_names} names exceeds cap {TRACE_FRAME_MAX_NAMES}");
+    }
+    let mut names = Vec::with_capacity(n_names);
+    for _ in 0..n_names {
+        let name = r.str()?;
+        if name.len() > TRACE_FRAME_MAX_NAME_LEN {
+            bail!("corrupt trace frame: name of {} bytes", name.len());
+        }
+        names.push(name);
+    }
+    let n_events = r.u32()? as usize;
+    // bound the alloc by what could actually be present
+    if n_events
+        .checked_mul(EVENT_BYTES)
+        .map(|b| b > r.remaining())
+        .unwrap_or(true)
+    {
+        bail!(
+            "corrupt trace frame: {n_events} events exceeds {} remaining bytes",
+            r.remaining()
+        );
+    }
+    let mut events = Vec::with_capacity(n_events);
+    for _ in 0..n_events {
+        let step = r.u32()?;
+        let name = r.u8()? as u16;
+        let phase = Phase::from_u8(r.u8()?)?;
+        let flags = r.u8()?;
+        if flags & !KNOWN_FLAGS != 0 {
+            bail!("corrupt trace frame: unknown flag bits {flags:#04x}");
+        }
+        let worker = r.u32()?;
+        let task_lo = r.u32()?;
+        let task_hi = r.u32()?;
+        let t0_ns = r.u64()?;
+        let t1_ns = r.u64()?;
+        if (name as usize) >= names.len() {
+            bail!(
+                "corrupt trace frame: name id {name} out of range ({} names)",
+                names.len()
+            );
+        }
+        if worker > u16::MAX as u32 {
+            bail!("corrupt trace frame: worker id {worker} out of range");
+        }
+        if t1_ns < t0_ns {
+            bail!("corrupt trace frame: span ends before it starts ({t1_ns} < {t0_ns})");
+        }
+        if task_hi < task_lo {
+            bail!("corrupt trace frame: inverted task range [{task_lo}, {task_hi})");
+        }
+        events.push(RawSpan {
+            name,
+            phase,
+            flags,
+            step,
+            worker: worker as u16,
+            task_lo,
+            task_hi,
+            t0_ns,
+            t1_ns,
+        });
+    }
+    let dropped = r.u64()?;
+    Ok(TraceFrame { names, events, dropped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<SpanEvent> {
+        vec![
+            SpanEvent {
+                name: "sdca",
+                phase: Phase::Exec,
+                flags: 0,
+                step: 3,
+                slot: 2,
+                worker: 1,
+                task_lo: 4,
+                task_hi: 5,
+                t0_ns: 100,
+                t1_ns: 250,
+            },
+            SpanEvent {
+                name: "fold",
+                phase: Phase::Fold,
+                flags: 0,
+                step: 3,
+                slot: 2,
+                worker: 0,
+                task_lo: 0,
+                task_hi: 8,
+                t0_ns: 260,
+                t1_ns: 300,
+            },
+            SpanEvent {
+                name: "retry",
+                phase: Phase::Recover,
+                flags: FLAG_INSTANT,
+                step: 3,
+                slot: 2,
+                worker: 0,
+                task_lo: 0,
+                task_hi: 0,
+                t0_ns: 310,
+                t1_ns: 310,
+            },
+        ]
+    }
+
+    #[test]
+    fn round_trips() {
+        let events = sample_events();
+        let mut buf = Vec::new();
+        encode_trace_frame(&events, 7, &mut buf).unwrap();
+        let mut r = ByteReader::new(&buf);
+        let frame = decode_trace_frame(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(frame.dropped, 7);
+        assert_eq!(frame.names, vec!["sdca", "fold", "retry"]);
+        assert_eq!(frame.events.len(), events.len());
+        for (raw, ev) in frame.events.iter().zip(&events) {
+            assert_eq!(frame.names[raw.name as usize], ev.name);
+            assert_eq!(raw.phase, ev.phase);
+            assert_eq!(raw.flags, ev.flags);
+            assert_eq!(raw.step, ev.step);
+            assert_eq!(raw.worker, ev.worker);
+            assert_eq!((raw.task_lo, raw.task_hi), (ev.task_lo, ev.task_hi));
+            assert_eq!((raw.t0_ns, raw.t1_ns), (ev.t0_ns, ev.t1_ns));
+        }
+    }
+
+    #[test]
+    fn empty_table_round_trips() {
+        let mut buf = Vec::new();
+        encode_trace_frame(&[], 0, &mut buf).unwrap();
+        let mut r = ByteReader::new(&buf);
+        let frame = decode_trace_frame(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert!(frame.names.is_empty());
+        assert!(frame.events.is_empty());
+        assert_eq!(frame.dropped, 0);
+    }
+
+    #[test]
+    fn every_truncated_prefix_is_rejected() {
+        let mut buf = Vec::new();
+        encode_trace_frame(&sample_events(), 1, &mut buf).unwrap();
+        for cut in 0..buf.len() {
+            let mut r = ByteReader::new(&buf[..cut]);
+            assert!(
+                decode_trace_frame(&mut r).is_err(),
+                "prefix of {cut} bytes decoded"
+            );
+        }
+    }
+
+    #[test]
+    fn semantic_corruption_is_rejected() {
+        let ev = |phase: Phase, t0: u64, t1: u64, lo: u32, hi: u32| SpanEvent {
+            name: "x",
+            phase,
+            flags: 0,
+            step: 0,
+            slot: 0,
+            worker: 0,
+            task_lo: lo,
+            task_hi: hi,
+            t0_ns: t0,
+            t1_ns: t1,
+        };
+        // inverted time range
+        let mut buf = Vec::new();
+        encode_trace_frame(&[ev(Phase::Exec, 50, 10, 0, 1)], 0, &mut buf).unwrap();
+        assert!(decode_trace_frame(&mut ByteReader::new(&buf)).is_err());
+        // inverted task range
+        buf.clear();
+        encode_trace_frame(&[ev(Phase::Exec, 0, 1, 5, 2)], 0, &mut buf).unwrap();
+        assert!(decode_trace_frame(&mut ByteReader::new(&buf)).is_err());
+    }
+}

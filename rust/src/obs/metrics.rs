@@ -1,0 +1,355 @@
+//! The [`MetricsRegistry`]: counters, gauges, and fixed-bucket
+//! histograms behind cheap cloneable handles, rendered as Prometheus
+//! text exposition format and served over a minimal std-only HTTP
+//! endpoint (`ddopt executor --metrics-addr HOST:PORT`).
+//!
+//! Handles are `Arc<Atomic*>` — incrementing on the hot path is one
+//! relaxed atomic op, no locking, no allocation.  The registry itself
+//! (a name → metric map behind a mutex) is only touched at
+//! registration and render time.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// Monotonically increasing count (events, bytes, retries).
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time signed value (fleet size, degraded executor count).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistogramInner {
+    /// Upper bounds of the finite buckets (sorted); an implicit +Inf
+    /// bucket catches the rest.
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum as f64 bits, updated with a CAS loop (observations are rare
+    /// relative to counter increments, so contention is a non-issue).
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram (superstep latencies, frame sizes).
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        let mut sorted = bounds.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let counts = (0..=sorted.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram(Arc::new(HistogramInner {
+            bounds: sorted,
+            counts,
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }))
+    }
+
+    pub fn observe(&self, v: f64) {
+        let inner = &self.0;
+        let idx = inner
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(inner.bounds.len());
+        inner.counts[idx].fetch_add(1, Ordering::Relaxed);
+        inner.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = inner.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match inner.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Entry {
+    help: String,
+    metric: Metric,
+}
+
+/// Name → metric registry.  `counter`/`gauge`/`histogram` are
+/// get-or-register: asking twice for the same name returns handles to
+/// the same underlying atomic, which is how the driver, the wire log,
+/// and the train summary end up reading one source of truth.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            metric: Metric::Counter(Counter::default()),
+        });
+        match &entry.metric {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric {name} already registered with a different type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            metric: Metric::Gauge(Gauge::default()),
+        });
+        match &entry.metric {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric {name} already registered with a different type"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Histogram {
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            metric: Metric::Histogram(Histogram::new(bounds)),
+        });
+        match &entry.metric {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric {name} already registered with a different type"),
+        }
+    }
+
+    /// Read a single metric by name (counters and gauges).
+    pub fn value(&self, name: &str) -> Option<f64> {
+        let entries = self.entries.lock().unwrap();
+        match &entries.get(name)?.metric {
+            Metric::Counter(c) => Some(c.get() as f64),
+            Metric::Gauge(g) => Some(g.get() as f64),
+            Metric::Histogram(h) => Some(h.sum()),
+        }
+    }
+
+    /// Flat snapshot of every scalar series, sorted by name —
+    /// histograms contribute `_count` and `_sum` entries.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let entries = self.entries.lock().unwrap();
+        let mut out = Vec::with_capacity(entries.len());
+        for (name, entry) in entries.iter() {
+            match &entry.metric {
+                Metric::Counter(c) => out.push((name.clone(), c.get() as f64)),
+                Metric::Gauge(g) => out.push((name.clone(), g.get() as f64)),
+                Metric::Histogram(h) => {
+                    out.push((format!("{name}_count"), h.count() as f64));
+                    out.push((format!("{name}_sum"), h.sum()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition format (version 0.0.4).
+    pub fn render_prometheus(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut out = String::new();
+        for (name, entry) in entries.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", entry.help);
+            match &entry.metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {name} counter");
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {name} gauge");
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let _ = writeln!(out, "# TYPE {name} histogram");
+                    let mut cumulative = 0u64;
+                    for (i, bound) in h.0.bounds.iter().enumerate() {
+                        cumulative += h.0.counts[i].load(Ordering::Relaxed);
+                        let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cumulative}");
+                    }
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+                    let _ = writeln!(out, "{name}_sum {}", h.sum());
+                    let _ = writeln!(out, "{name}_count {}", h.count());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Serve `render_prometheus` over HTTP on `addr` from a background
+/// thread; returns the bound address (so `:0` picks a free port).
+/// Every request gets the current scrape regardless of path or method
+/// — this is a scrape endpoint, not a web server.
+pub fn serve_metrics(addr: &str, registry: Arc<MetricsRegistry>) -> Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding metrics endpoint on {addr}"))?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("ddopt-metrics".to_string())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { continue };
+                let _ = serve_one(&mut stream, registry.as_ref());
+            }
+        })
+        .context("spawning metrics server thread")?;
+    Ok(local)
+}
+
+fn serve_one(stream: &mut TcpStream, registry: &MetricsRegistry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    // drain the request head (bounded); we answer anything with a scrape
+    let mut head = [0u8; 4096];
+    let mut read = 0;
+    while read < head.len() {
+        match stream.read(&mut head[read..]) {
+            Ok(0) => break,
+            Ok(n) => {
+                read += n;
+                if head[..read].windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let body = registry.render_prometheus();
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_one_source() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("ddopt_retries_total", "retries");
+        let b = reg.counter("ddopt_retries_total", "retries");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(reg.value("ddopt_retries_total"), Some(3.0));
+    }
+
+    #[test]
+    fn gauge_sets_and_adds() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("ddopt_fleet_size", "executors");
+        g.set(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_cumulate() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("ddopt_step_secs", "superstep wall", &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 5.55).abs() < 1e-9);
+        let text = reg.render_prometheus();
+        assert!(text.contains("ddopt_step_secs_bucket{le=\"0.1\"} 1"));
+        assert!(text.contains("ddopt_step_secs_bucket{le=\"1\"} 2"));
+        assert!(text.contains("ddopt_step_secs_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("ddopt_step_secs_count 3"));
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let reg = MetricsRegistry::new();
+        reg.counter("b_total", "b").inc();
+        reg.gauge("a_gauge", "a").set(7);
+        let snap = reg.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a_gauge", "b_total"]);
+        assert_eq!(snap[0].1, 7.0);
+        assert_eq!(snap[1].1, 1.0);
+    }
+
+    #[test]
+    fn http_endpoint_serves_prometheus_text() {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.counter("ddopt_up", "liveness").inc();
+        let addr = serve_metrics("127.0.0.1:0", reg).unwrap();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write!(stream, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain"));
+        assert!(resp.contains("# TYPE ddopt_up counter"));
+        assert!(resp.contains("ddopt_up 1"));
+    }
+}

@@ -1,0 +1,54 @@
+//! Observability: fleet-wide tracing and metrics.
+//!
+//! The paper's claims are about *where time goes* as executors,
+//! stragglers and failures vary — this module is the instrument that
+//! makes that attribution visible inside a superstep instead of only in
+//! per-iteration totals:
+//!
+//! * [`span`] — compact span events and the preallocated per-worker
+//!   [`SpanRing`] recorder.  The hot path is zero-alloc when tracing is
+//!   off (one branch per task) and alloc-free per event when on; rings
+//!   are drained between supersteps.
+//! * [`trace`] — the [`TraceLog`]: a bounded, name-interning event ring
+//!   the driver merges every span source into (its own phases, the sim
+//!   workers, and — over the wire — every executor's span tables,
+//!   re-aligned onto the driver clock via the handshake RTT-midpoint
+//!   offset estimate).
+//! * [`frame`] — the wire codec for executor span tables
+//!   (capability-gated by `CAP_TRACE`; see [`crate::cluster::dist::wire`]).
+//! * [`chrome`] — exports: Chrome trace-event JSON (loadable in
+//!   Perfetto; process = executor slot, thread = worker, instant events
+//!   for retries/rejoins/degrades/speculation) and a raw JSONL event log.
+//! * [`metrics`] — the [`MetricsRegistry`] (counters / gauges /
+//!   fixed-bucket histograms) unifying the recovery/speculation/wire
+//!   counters, rendered as Prometheus text and served over HTTP by
+//!   `ddopt executor --metrics-addr`.
+//!
+//! Span phases ([`Phase`]): `stage` (block staging / prepare), `scatter`
+//! (request fan-out), `exec` (per-task kernel execution), `gather`
+//! (reply collection), `fold` (executor-side pre-combine), `combine`
+//! (driver-side tree reduce), `recover` (retry/rejoin/degrade
+//! machinery), `spec` (speculative re-execution).
+
+pub mod chrome;
+pub mod frame;
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use chrome::{chrome_trace, write_chrome_trace, write_events_jsonl};
+pub use frame::{
+    decode_trace_frame, encode_trace_frame, RawSpan, TraceFrame, TRACE_FRAME_MAX_NAMES,
+    TRACE_FRAME_MAX_NAME_LEN,
+};
+pub use metrics::{serve_metrics, Counter, Gauge, Histogram, MetricsRegistry};
+pub use span::{now_ns, Phase, SpanEvent, SpanRing, FLAG_INSTANT};
+pub use trace::{TraceEvent, TraceLog};
+
+/// Default driver-side [`TraceLog`] capacity: enough for every CI-scale
+/// run without wrapping, bounded so steady state stays alloc-free.
+pub const TRACE_LOG_CAPACITY: usize = 1 << 16;
+
+/// Default per-worker [`SpanRing`] capacity (events between drains — one
+/// superstep's tasks per worker, with generous slack).
+pub const SPAN_RING_CAPACITY: usize = 4096;

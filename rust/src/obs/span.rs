@@ -1,0 +1,318 @@
+//! Compact span events, the process-wide monotonic clock, and the
+//! preallocated per-worker [`SpanRing`] recorder.
+//!
+//! A [`SpanEvent`] is a small `Copy` struct (no owned strings — names
+//! are `&'static str` from the op tables), so pushing one is a couple
+//! of stores into a preallocated ring: zero allocations per event.  The
+//! tracing-off path is a single `capacity == 0` branch per task.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+/// Nanoseconds since the process-wide trace epoch (first call wins).
+/// One monotonic axis per process; the driver re-bases executor ticks
+/// onto its own axis via the handshake clock-offset estimate.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Where inside a superstep the time went.  The discriminants are the
+/// wire encoding (see [`crate::obs::frame`]) — append only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Phase {
+    /// Block staging / backend prepare (data movement before step 0).
+    Stage = 0,
+    /// Request fan-out: driver serializing + writing task frames.
+    Scatter = 1,
+    /// Per-task kernel execution on a worker.
+    Exec = 2,
+    /// Reply collection: driver reading + decoding result frames.
+    Gather = 3,
+    /// Executor-side pre-combine (contiguous fold before reply).
+    Fold = 4,
+    /// Driver-side tree reduce across cells.
+    Combine = 5,
+    /// Fault-tolerance machinery: retry / rejoin / degrade.
+    Recover = 6,
+    /// Speculative re-execution of straggler tasks.
+    Spec = 7,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 8] = [
+        Phase::Stage,
+        Phase::Scatter,
+        Phase::Exec,
+        Phase::Gather,
+        Phase::Fold,
+        Phase::Combine,
+        Phase::Recover,
+        Phase::Spec,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Stage => "stage",
+            Phase::Scatter => "scatter",
+            Phase::Exec => "exec",
+            Phase::Gather => "gather",
+            Phase::Fold => "fold",
+            Phase::Combine => "combine",
+            Phase::Recover => "recover",
+            Phase::Spec => "spec",
+        }
+    }
+
+    /// Strict decode — an unknown discriminant is a corrupt frame, not
+    /// a default.
+    pub fn from_u8(v: u8) -> Result<Phase> {
+        match v {
+            0 => Ok(Phase::Stage),
+            1 => Ok(Phase::Scatter),
+            2 => Ok(Phase::Exec),
+            3 => Ok(Phase::Gather),
+            4 => Ok(Phase::Fold),
+            5 => Ok(Phase::Combine),
+            6 => Ok(Phase::Recover),
+            7 => Ok(Phase::Spec),
+            _ => bail!("invalid span phase {v}"),
+        }
+    }
+}
+
+/// Event is a zero-duration instant (retry, rejoin, degrade, spec win)
+/// rather than a span.
+pub const FLAG_INSTANT: u8 = 1 << 0;
+
+/// One recorded span (or instant, per `flags`).  `slot` 0 is the
+/// driver; executor slot `s` records as `s + 1`.  `worker` is the
+/// pool-scratch cell index that executed the task range.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub phase: Phase,
+    pub flags: u8,
+    pub step: u32,
+    pub slot: u16,
+    pub worker: u16,
+    pub task_lo: u32,
+    pub task_hi: u32,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+}
+
+/// Preallocated bounded recorder: overwrites oldest on overflow and
+/// counts the drops instead of growing.  Capacity 0 is the disabled
+/// state — `on()` is the only check on the hot path.
+pub struct SpanRing {
+    buf: Vec<SpanEvent>,
+    cap: usize,
+    /// Next write position once the ring has wrapped.
+    head: usize,
+    dropped: u64,
+    step: u32,
+    slot: u16,
+    worker: u16,
+}
+
+impl SpanRing {
+    /// The disabled recorder: no backing storage, every push is a no-op
+    /// behind the `on()` check.
+    pub fn disabled() -> SpanRing {
+        SpanRing::with_capacity(0, 0, 0)
+    }
+
+    pub fn with_capacity(cap: usize, slot: u16, worker: u16) -> SpanRing {
+        SpanRing {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+            step: 0,
+            slot,
+            worker,
+        }
+    }
+
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.cap != 0
+    }
+
+    pub fn slot(&self) -> u16 {
+        self.slot
+    }
+
+    pub fn worker(&self) -> u16 {
+        self.worker
+    }
+
+    /// Stamp the superstep ordinal subsequent events belong to (set by
+    /// the backend before fanning tasks out).
+    pub fn set_step(&mut self, step: u32) {
+        self.step = step;
+    }
+
+    #[inline]
+    pub fn push_span(
+        &mut self,
+        name: &'static str,
+        phase: Phase,
+        task_lo: u32,
+        task_hi: u32,
+        t0_ns: u64,
+        t1_ns: u64,
+    ) {
+        self.push(SpanEvent {
+            name,
+            phase,
+            flags: 0,
+            step: self.step,
+            slot: self.slot,
+            worker: self.worker,
+            task_lo,
+            task_hi,
+            t0_ns,
+            t1_ns,
+        });
+    }
+
+    pub fn push_instant(&mut self, name: &'static str, phase: Phase, t_ns: u64) {
+        self.push(SpanEvent {
+            name,
+            phase,
+            flags: FLAG_INSTANT,
+            step: self.step,
+            slot: self.slot,
+            worker: self.worker,
+            task_lo: 0,
+            task_hi: 0,
+            t0_ns: t_ns,
+            t1_ns: t_ns,
+        });
+    }
+
+    #[inline]
+    fn push(&mut self, ev: SpanEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            // within reserved capacity: no reallocation
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events dropped (overwritten) since the last [`SpanRing::drain`].
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Visit the recorded events oldest-first and reset the ring (the
+    /// reserved storage is kept, so refilling stays alloc-free).
+    /// Returns the number of events that were overwritten while full.
+    pub fn drain(&mut self, mut f: impl FnMut(&SpanEvent)) -> u64 {
+        if self.buf.len() == self.cap && self.cap > 0 {
+            // wrapped: oldest event sits at head
+            for ev in &self.buf[self.head..] {
+                f(ev);
+            }
+            for ev in &self.buf[..self.head] {
+                f(ev);
+            }
+        } else {
+            for ev in &self.buf {
+                f(ev);
+            }
+        }
+        let dropped = self.dropped;
+        self.buf.clear();
+        self.head = 0;
+        self.dropped = 0;
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn phase_codes_round_trip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::from_u8(p as u8).unwrap(), p);
+        }
+        assert!(Phase::from_u8(8).is_err());
+        assert!(Phase::from_u8(255).is_err());
+    }
+
+    #[test]
+    fn disabled_ring_records_nothing() {
+        let mut r = SpanRing::disabled();
+        assert!(!r.on());
+        r.push_span("sdca", Phase::Exec, 0, 1, 0, 10);
+        r.push_instant("retry", Phase::Recover, 5);
+        let mut seen = 0;
+        r.drain(|_| seen += 1);
+        assert_eq!(seen, 0);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let mut r = SpanRing::with_capacity(3, 1, 2);
+        r.set_step(4);
+        for i in 0..5u64 {
+            r.push_span("sdca", Phase::Exec, i as u32, i as u32 + 1, i, i + 1);
+        }
+        let mut order = Vec::new();
+        let dropped = r.drain(|ev| {
+            assert_eq!(ev.step, 4);
+            assert_eq!(ev.slot, 1);
+            assert_eq!(ev.worker, 2);
+            order.push(ev.t0_ns);
+        });
+        // capacity 3, 5 pushes: events 2,3,4 survive oldest-first
+        assert_eq!(order, vec![2, 3, 4]);
+        assert_eq!(dropped, 2);
+        // ring is reusable after drain
+        r.push_span("sdca", Phase::Exec, 0, 1, 9, 10);
+        let mut n = 0;
+        assert_eq!(r.drain(|_| n += 1), 0);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn instants_are_flagged_zero_width() {
+        let mut r = SpanRing::with_capacity(4, 0, 0);
+        r.push_instant("rejoin", Phase::Recover, 42);
+        r.drain(|ev| {
+            assert_eq!(ev.flags & FLAG_INSTANT, FLAG_INSTANT);
+            assert_eq!(ev.t0_ns, ev.t1_ns);
+            assert_eq!(ev.t0_ns, 42);
+        });
+    }
+}

@@ -1,0 +1,240 @@
+//! The driver-side [`TraceLog`]: a bounded, name-interning event ring
+//! every span source merges into — the driver's own phase spans, the
+//! sim workers' rings, and decoded executor span tables (already
+//! re-based onto the driver clock by the caller).
+//!
+//! Names are interned to `u16` ids so a steady-state push is two array
+//! writes; after the first superstep warms the intern table, recording
+//! allocates nothing per event (the `alloc_regression` suite holds this
+//! to 0 allocs/iter).
+
+use std::collections::HashMap;
+
+use super::span::{Phase, SpanEvent, FLAG_INSTANT};
+
+/// A recorded event with its name resolved to an intern id.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub name: u16,
+    pub phase: Phase,
+    pub flags: u8,
+    pub step: u32,
+    pub slot: u16,
+    pub worker: u16,
+    pub task_lo: u32,
+    pub task_hi: u32,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceLog {
+    names: Vec<String>,
+    index: HashMap<String, u16>,
+    events: Vec<TraceEvent>,
+    cap: usize,
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceLog {
+    pub fn with_capacity(cap: usize) -> TraceLog {
+        TraceLog {
+            names: Vec::new(),
+            index: HashMap::new(),
+            events: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Intern a name, returning its stable id.  Allocates only on first
+    /// sight of a name; the vocabulary is op kinds + a handful of
+    /// driver phases, so the table saturates within one superstep.
+    pub fn intern(&mut self, name: &str) -> u16 {
+        if let Some(&id) = self.index.get(name) {
+            return id;
+        }
+        let id = u16::try_from(self.names.len()).expect("trace name table overflow");
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn name(&self, id: u16) -> &str {
+        self.names
+            .get(id as usize)
+            .map(String::as_str)
+            .unwrap_or("?")
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events overwritten here plus drops reported by absorbed rings.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn add_dropped(&mut self, n: u64) {
+        self.dropped += n;
+    }
+
+    #[inline]
+    pub fn record(&mut self, ev: &SpanEvent) {
+        let name = self.intern(ev.name);
+        self.push(TraceEvent {
+            name,
+            phase: ev.phase,
+            flags: ev.flags,
+            step: ev.step,
+            slot: ev.slot,
+            worker: ev.worker,
+            task_lo: ev.task_lo,
+            task_hi: ev.task_hi,
+            t0_ns: ev.t0_ns,
+            t1_ns: ev.t1_ns,
+        });
+    }
+
+    /// Record an event whose name is already an id *into this log* —
+    /// the merge path for decoded executor frames (caller maps the
+    /// frame's name table through [`TraceLog::intern`] first).
+    #[inline]
+    pub fn record_raw(&mut self, ev: TraceEvent) {
+        self.push(ev);
+    }
+
+    /// Driver convenience: record a completed span.
+    pub fn span(
+        &mut self,
+        name: &'static str,
+        phase: Phase,
+        step: u32,
+        slot: u16,
+        task_lo: u32,
+        task_hi: u32,
+        t0_ns: u64,
+        t1_ns: u64,
+    ) {
+        self.record(&SpanEvent {
+            name,
+            phase,
+            flags: 0,
+            step,
+            slot,
+            worker: 0,
+            task_lo,
+            task_hi,
+            t0_ns,
+            t1_ns,
+        });
+    }
+
+    /// Driver convenience: record an instant (retry/rejoin/degrade/…).
+    pub fn instant(&mut self, name: &'static str, phase: Phase, step: u32, slot: u16, t_ns: u64) {
+        self.record(&SpanEvent {
+            name,
+            phase,
+            flags: FLAG_INSTANT,
+            step,
+            slot,
+            worker: 0,
+            task_lo: 0,
+            task_hi: 0,
+            t0_ns: t_ns,
+            t1_ns: t_ns,
+        });
+    }
+
+    /// Drain a worker ring into the log (between supersteps).  The ring
+    /// and the log are disjoint borrows, so events stream straight into
+    /// [`TraceLog::record`] with no staging buffer — once the intern
+    /// table is warm the whole drain is alloc-free, which is what keeps
+    /// the traced steady state at 0 allocs/iter (`alloc_regression`
+    /// pins this).
+    pub fn absorb(&mut self, ring: &mut super::span::SpanRing) {
+        let dropped = ring.drain(|ev| self.record(ev));
+        self.dropped += dropped;
+    }
+
+    #[inline]
+    fn push(&mut self, ev: TraceEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Recorded events oldest-first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        let (wrapped, rest) = if self.events.len() == self.cap && self.cap > 0 {
+            (&self.events[self.head..], &self.events[..self.head])
+        } else {
+            (&self.events[..], &self.events[..0])
+        };
+        wrapped.iter().chain(rest.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::SpanRing;
+    use super::*;
+
+    #[test]
+    fn interning_is_stable_and_deduplicated() {
+        let mut log = TraceLog::with_capacity(8);
+        let a = log.intern("sdca");
+        let b = log.intern("atx");
+        assert_eq!(log.intern("sdca"), a);
+        assert_ne!(a, b);
+        assert_eq!(log.name(a), "sdca");
+        assert_eq!(log.names().len(), 2);
+    }
+
+    #[test]
+    fn absorb_moves_ring_events_and_drop_counts() {
+        let mut ring = SpanRing::with_capacity(2, 3, 1);
+        ring.set_step(7);
+        ring.push_span("sdca", Phase::Exec, 0, 1, 10, 20);
+        ring.push_span("sdca", Phase::Exec, 1, 2, 20, 30);
+        ring.push_span("sdca", Phase::Exec, 2, 3, 30, 40); // overwrites oldest
+        let mut log = TraceLog::with_capacity(8);
+        log.absorb(&mut ring);
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.dropped(), 1);
+        assert!(ring.is_empty());
+        let first = log.events().next().unwrap();
+        assert_eq!(first.step, 7);
+        assert_eq!(first.slot, 3);
+        assert_eq!(first.t0_ns, 20);
+    }
+
+    #[test]
+    fn log_ring_overwrites_oldest() {
+        let mut log = TraceLog::with_capacity(2);
+        for i in 0..4u64 {
+            log.span("op", Phase::Combine, 0, 0, 0, 0, i, i + 1);
+        }
+        let t0s: Vec<u64> = log.events().map(|e| e.t0_ns).collect();
+        assert_eq!(t0s, vec![2, 3]);
+        assert_eq!(log.dropped(), 2);
+    }
+}

@@ -1,8 +1,13 @@
 //! Minimal leveled stderr logger.
 //!
 //! `DDOPT_LOG=debug|info|warn|error` selects the level (default `info`).
-//! The macros route through a process-global level so hot paths can guard
-//! with a cheap atomic load.
+//! A present-but-unrecognized value is *named and warned about* instead
+//! of silently falling back — consistent with the strict-parse
+//! convention for the `DDOPT_DIST_*` knobs, softened to a warning
+//! because a typo'd log level should not kill a run.  The macros route
+//! through a process-global level so hot paths can guard with a cheap
+//! atomic load, and every line funnels through one locked writer that
+//! stamps the elapsed time and level tag.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -14,13 +19,26 @@ pub const DEBUG: u8 = 3;
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
 
 fn init_level() -> u8 {
-    let lvl = match std::env::var("DDOPT_LOG").as_deref() {
-        Ok("error") => ERROR,
-        Ok("warn") => WARN,
-        Ok("debug") => DEBUG,
-        _ => INFO,
+    use std::env::VarError;
+    let (lvl, complaint) = match std::env::var("DDOPT_LOG") {
+        Err(VarError::NotPresent) => (INFO, None),
+        Err(VarError::NotUnicode(v)) => (INFO, Some(format!("{v:?}"))),
+        Ok(v) => match v.trim() {
+            "error" => (ERROR, None),
+            "warn" => (WARN, None),
+            "info" | "" => (INFO, None),
+            "debug" => (DEBUG, None),
+            _ => (INFO, Some(format!("{v:?}"))),
+        },
     };
+    // store before warning: the warn below routes back through
+    // `level()`, which must see the resolved level, not the sentinel
     LEVEL.store(lvl, Ordering::Relaxed);
+    if let Some(bad) = complaint {
+        crate::warnln!(
+            "unrecognized DDOPT_LOG={bad}: want error|warn|info|debug (running at info)"
+        );
+    }
     lvl
 }
 
@@ -39,9 +57,17 @@ pub fn set_level(l: u8) {
     LEVEL.store(l, Ordering::Relaxed);
 }
 
+/// The single sink every log line funnels through: one locked stderr
+/// write per line (threads never interleave mid-line), stamped with
+/// seconds since the process's first observability tick and the level
+/// tag.
 pub fn log(lvl: u8, tag: &str, msg: std::fmt::Arguments<'_>) {
     if lvl <= level() {
-        eprintln!("[{tag}] {msg}");
+        use std::io::Write;
+        let secs = crate::obs::now_ns() as f64 / 1e9;
+        let stderr = std::io::stderr();
+        let mut w = stderr.lock();
+        let _ = writeln!(w, "[{secs:8.3} {tag}] {msg}");
     }
 }
 
@@ -73,11 +99,37 @@ macro_rules! debugln {
 mod tests {
     use super::*;
 
+    // LEVEL is process-global: tests that touch it serialize here
+    static TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn set_level_wins() {
+        let _g = TEST_LOCK.lock().unwrap();
         set_level(ERROR);
         assert_eq!(level(), ERROR);
         set_level(INFO);
+        assert_eq!(level(), INFO);
+    }
+
+    #[test]
+    fn env_levels_parse_and_bad_values_fall_back_to_info() {
+        let _g = TEST_LOCK.lock().unwrap();
+        // one test covers every env case: LEVEL is process-global, so
+        // splitting these into parallel #[test]s would race
+        for (val, want) in [
+            ("error", ERROR),
+            ("warn", WARN),
+            ("info", INFO),
+            ("debug", DEBUG),
+            ("verbose", INFO), // unrecognized: warned, falls back
+            ("  debug  ", DEBUG),
+        ] {
+            std::env::set_var("DDOPT_LOG", val);
+            LEVEL.store(u8::MAX, Ordering::Relaxed);
+            assert_eq!(level(), want, "DDOPT_LOG={val:?}");
+        }
+        std::env::remove_var("DDOPT_LOG");
+        LEVEL.store(u8::MAX, Ordering::Relaxed);
         assert_eq!(level(), INFO);
     }
 }

@@ -5,7 +5,10 @@
 //! parallel path (only the one-time pool bring-up, absorbed by the probe's
 //! warmup iterations, may allocate) — while the retained pre-PR
 //! boxed-superstep pipeline — the "before" baseline — must still show its
-//! allocator churn.
+//! allocator churn.  Tracing-on rows hold the same bar: once the span
+//! rings and the intern table warm up, recording is stores into
+//! preallocated buffers, so the traced steady state must also read 0 —
+//! and the untraced rows prove turning the recorder off costs nothing.
 //!
 //! The whole file is compiled out without the feature so plain
 //! `cargo test -q` is unaffected; CI's perf-smoke job runs it with the
@@ -55,6 +58,15 @@ fn steady_state_iterations_allocate_zero() {
         rows.iter().any(|(k, _)| k == "parallel steady allocs/iter"),
         "probe matrix missing the parallel aggregate"
     );
+    // the tracing-enabled probes ride the same 0-allocs gate below:
+    // their keys carry no "before", so the else-branch pins them to 0
+    for method in ["d3ca", "radisa", "admm"] {
+        let key = format!("{method} steady allocs/iter (traced)");
+        assert!(
+            rows.iter().any(|(k, _)| *k == key),
+            "probe matrix missing {key}"
+        );
+    }
     for (k, v) in &rows {
         if k.contains("before") {
             assert!(

@@ -3,13 +3,17 @@
 //! bit-for-bit, the *sliced* round trip must reproduce exactly the
 //! state every owned task reads (while shipping fewer bytes), and both
 //! decoders must reject every truncated prefix and corrupt input with a
-//! clean error — never a panic, never silently short data.
+//! clean error — never a panic, never silently short data.  The
+//! `CAP_TRACE` span-table frame gets the same treatment: randomized
+//! tables round-trip exactly, and every truncation or byte flip decodes
+//! to a clean error or a well-formed table, never a panic.
 
 use ddopt::cluster::dist::ops::{encode_op, encode_op_sliced, OpBuf};
 use ddopt::cluster::dist::wire::{self, Tag};
 use ddopt::cluster::GridOp;
 use ddopt::data::{Grid, Partitioned, SyntheticDense};
 use ddopt::loss::Loss;
+use ddopt::obs::{self, Phase, SpanEvent, FLAG_INSTANT};
 use ddopt::util::bytes::ByteReader;
 use ddopt::util::rng::Xoshiro;
 
@@ -363,6 +367,91 @@ fn corrupt_inputs_are_rejected_not_trusted() {
         mutated[pos] ^= 0xFF;
         let mut ob = OpBuf::new();
         let _ = ob.decode_sliced_into(&mut ByteReader::new(&mutated));
+    }
+}
+
+/// One random span event with valid invariants (ordered time and task
+/// ranges, known flags only).
+fn rspan(rng: &mut Xoshiro) -> SpanEvent {
+    const NAMES: [&str; 6] = ["sdca", "atx", "margins", "fold", "reduce", "retry"];
+    let instant = rng.below(4) == 0;
+    let t0 = rng.below(1 << 20) as u64;
+    let lo = rng.below(64) as u32;
+    SpanEvent {
+        name: NAMES[rng.below(NAMES.len())],
+        phase: Phase::ALL[rng.below(Phase::ALL.len())],
+        flags: if instant { FLAG_INSTANT } else { 0 },
+        step: rng.below(1000) as u32,
+        slot: rng.below(8) as u16,
+        worker: rng.below(16) as u16,
+        task_lo: lo,
+        task_hi: lo + rng.below(8) as u32,
+        t0_ns: t0,
+        t1_ns: if instant { t0 } else { t0 + rng.below(1 << 16) as u64 },
+    }
+}
+
+#[test]
+fn trace_frame_round_trips_random_tables() {
+    for seed in 0..10u64 {
+        let mut rng = Xoshiro::new(seed + 4000);
+        let events: Vec<SpanEvent> = (0..rng.below(200)).map(|_| rspan(&mut rng)).collect();
+        let dropped = rng.below(50) as u64;
+        let mut buf = Vec::new();
+        obs::encode_trace_frame(&events, dropped, &mut buf).unwrap();
+        let mut r = ByteReader::new(&buf);
+        let frame = obs::decode_trace_frame(&mut r).unwrap();
+        assert!(r.is_empty(), "seed {seed}: decoder left {} bytes", r.remaining());
+        assert_eq!(frame.dropped, dropped);
+        assert_eq!(frame.events.len(), events.len());
+        for (i, (raw, ev)) in frame.events.iter().zip(&events).enumerate() {
+            assert_eq!(frame.names[raw.name as usize], ev.name, "seed {seed} ev {i}");
+            assert_eq!(raw.phase, ev.phase, "seed {seed} ev {i}");
+            assert_eq!(raw.flags, ev.flags, "seed {seed} ev {i}");
+            assert_eq!(raw.step, ev.step, "seed {seed} ev {i}");
+            assert_eq!(raw.worker, ev.worker, "seed {seed} ev {i}");
+            assert_eq!((raw.task_lo, raw.task_hi), (ev.task_lo, ev.task_hi));
+            assert_eq!((raw.t0_ns, raw.t1_ns), (ev.t0_ns, ev.t1_ns));
+        }
+    }
+}
+
+#[test]
+fn trace_frame_truncated_prefixes_are_rejected() {
+    let mut rng = Xoshiro::new(4242);
+    let events: Vec<SpanEvent> = (0..12).map(|_| rspan(&mut rng)).collect();
+    let mut buf = Vec::new();
+    obs::encode_trace_frame(&events, 3, &mut buf).unwrap();
+    for cut in 0..buf.len() {
+        let mut r = ByteReader::new(&buf[..cut]);
+        assert!(
+            obs::decode_trace_frame(&mut r).is_err(),
+            "trace frame prefix of {cut}/{} bytes decoded",
+            buf.len()
+        );
+    }
+}
+
+#[test]
+fn trace_frame_byte_flips_never_panic() {
+    let mut rng = Xoshiro::new(555);
+    let events: Vec<SpanEvent> = (0..8).map(|_| rspan(&mut rng)).collect();
+    let mut buf = Vec::new();
+    obs::encode_trace_frame(&events, 0, &mut buf).unwrap();
+    for pos in 0..buf.len() {
+        let mut mutated = buf.clone();
+        mutated[pos] ^= 0xFF;
+        let mut r = ByteReader::new(&mutated);
+        // error or a well-formed table — the decoder's own invariants
+        // (name ids in range, ordered spans) guarantee the latter; what
+        // it must never do is panic or over-read
+        if let Ok(frame) = obs::decode_trace_frame(&mut r) {
+            for ev in &frame.events {
+                assert!((ev.name as usize) < frame.names.len());
+                assert!(ev.t0_ns <= ev.t1_ns);
+                assert!(ev.task_lo <= ev.task_hi);
+            }
+        }
     }
 }
 

@@ -1,0 +1,178 @@
+//! Golden Chrome-trace export: a fixed-seed sim-backend run with tracing
+//! enabled must produce a structurally byte-stable Perfetto document —
+//! identical bytes across repeated runs once the wall-clock `ts`/`dur`
+//! fields are masked — and the raw [`TraceLog`] must carry the expected
+//! driver phases and per-op exec spans.
+//!
+//! `threads: 1` is load-bearing: with more pool workers the task→worker
+//! assignment races, which permutes exec spans across thread rows and
+//! breaks byte-stability.  Timestamps themselves are wall-clock and are
+//! the *only* nondeterminism tolerated here.
+
+use std::collections::BTreeSet;
+
+use ddopt::cluster::{ClusterConfig, CostModel};
+use ddopt::coordinator::{D3ca, D3caConfig, Driver, Optimizer, RunResult};
+use ddopt::data::{Grid, Partitioned, SyntheticDense};
+use ddopt::obs::{chrome, chrome_trace, write_chrome_trace, write_events_jsonl, Phase};
+use ddopt::runtime::Backend;
+use ddopt::util::json::Json;
+
+const ITERS: usize = 2;
+
+fn run(traced: bool) -> RunResult {
+    let ds = SyntheticDense::paper_part1(2, 2, 12, 10, 0.1, 9).build();
+    let part = Partitioned::split(&ds, Grid::new(2, 2));
+    let backend = Backend::native();
+    let mut opt: Box<dyn Optimizer> =
+        Box::new(D3ca::new(D3caConfig { lambda: 0.2, seed: 5, ..Default::default() }));
+    Driver::new(&part, &backend)
+        .unwrap()
+        .iterations(ITERS)
+        .trace(traced)
+        .cluster(ClusterConfig {
+            cores: 2,
+            threads: 1, // single worker: deterministic task->worker mapping
+            cost: CostModel::Fixed(1e-3),
+            ..Default::default()
+        })
+        .run(opt.as_mut())
+        .unwrap()
+}
+
+/// Replace the value after every `"ts":` / `"dur":` key with `0` — the
+/// wall-clock fields are the only bytes allowed to vary between runs.
+fn mask_times(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = String::with_capacity(s.len());
+    let mut i = 0;
+    while i < b.len() {
+        let rest = &s[i..];
+        let key_len = if rest.starts_with("\"ts\":") {
+            Some("\"ts\":".len())
+        } else if rest.starts_with("\"dur\":") {
+            Some("\"dur\":".len())
+        } else {
+            None
+        };
+        if let Some(k) = key_len {
+            out.push_str(&rest[..k]);
+            out.push('0');
+            i += k;
+            while i < b.len() && b[i] != b',' && b[i] != b'}' {
+                i += 1;
+            }
+        } else {
+            out.push(b[i] as char);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[test]
+fn tracing_off_leaves_result_untraced() {
+    let r = run(false);
+    assert!(r.trace.is_none(), "untraced run must not carry a TraceLog");
+}
+
+#[test]
+fn traced_run_records_driver_phases_and_exec_spans() {
+    let r = run(true);
+    let log = r.trace.as_ref().expect("traced run returns a TraceLog");
+    assert!(!log.is_empty());
+    assert_eq!(log.dropped(), 0, "short run must not overflow the ring");
+
+    let names: BTreeSet<&str> = log.events().map(|ev| log.name(ev.name)).collect();
+    for want in ["prepare", "reduce", "sdca", "atx"] {
+        assert!(names.contains(want), "missing span name {want:?} in {names:?}");
+    }
+    let phases: BTreeSet<u8> = log.events().map(|ev| ev.phase as u8).collect();
+    for want in [Phase::Stage, Phase::Exec, Phase::Combine] {
+        assert!(phases.contains(&(want as u8)), "missing phase {}", want.name());
+    }
+    for ev in log.events() {
+        assert_eq!(ev.slot, 0, "sim backend records as the driver process");
+        assert_eq!(ev.worker, 0, "threads=1 pins every span to worker 0");
+        assert!(ev.t0_ns <= ev.t1_ns);
+        assert!(ev.task_lo <= ev.task_hi);
+    }
+    // D3CA runs two grid ops per iteration over a 2x2 grid: 4 sdca +
+    // 4 atx exec spans per iteration, every task accounted for
+    let execs = log.events().filter(|ev| ev.phase as u8 == Phase::Exec as u8).count();
+    assert_eq!(execs, 2 * 4 * ITERS, "one exec span per task per op");
+}
+
+#[test]
+fn chrome_export_is_byte_stable_modulo_timestamps() {
+    let a = run(true);
+    let b = run(true);
+    let doc_a = chrome_trace(a.trace.as_ref().unwrap()).to_string();
+    let doc_b = chrome_trace(b.trace.as_ref().unwrap()).to_string();
+    let masked_a = mask_times(&doc_a);
+    let masked_b = mask_times(&doc_b);
+    assert_eq!(masked_a, masked_b, "export must be byte-stable modulo ts/dur");
+    // the mask actually fired (the doc does carry wall-clock fields)
+    assert_ne!(masked_a, doc_a);
+    assert!(masked_a.contains("\"ts\":0"));
+}
+
+#[test]
+fn chrome_file_is_perfetto_shaped_and_jsonl_mirrors_the_log() {
+    let r = run(true);
+    let log = r.trace.as_ref().unwrap();
+    let dir = std::env::temp_dir().join(format!("ddopt-trace-export-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+
+    write_chrome_trace(log, &path).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    assert_eq!(
+        doc.get("ddopt").unwrap().get("events").unwrap().as_usize(),
+        Some(log.len())
+    );
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    // pid 0 (the driver/sim process) is named via metadata
+    let driver_meta = events
+        .iter()
+        .find(|e| {
+            e.get("ph").unwrap().as_str() == Some("M")
+                && e.get("name").unwrap().as_str() == Some("process_name")
+                && e.get("pid").unwrap().as_usize() == Some(0)
+        })
+        .expect("process_name metadata for pid 0");
+    assert_eq!(
+        driver_meta.get("args").unwrap().get("name").unwrap().as_str(),
+        Some("driver")
+    );
+    // every non-metadata event is a complete span or an instant with a
+    // phase-taxonomy category
+    let valid_cats: BTreeSet<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+    let mut spans = 0usize;
+    for e in events {
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "M" => continue,
+            "X" | "i" => {
+                spans += 1;
+                let cat = e.get("cat").unwrap().as_str().unwrap();
+                assert!(valid_cats.contains(cat), "unknown cat {cat:?}");
+            }
+            other => panic!("unexpected event type {other:?}"),
+        }
+    }
+    assert_eq!(spans, log.len(), "every recorded event is exported");
+
+    let jsonl = chrome::jsonl_path_for(&path);
+    assert_eq!(jsonl.file_name().unwrap(), "trace.jsonl");
+    write_events_jsonl(log, &jsonl).unwrap();
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), log.len());
+    for line in &lines {
+        let v = Json::parse(line).unwrap();
+        let phase = v.get("phase").unwrap().as_str().unwrap();
+        assert!(valid_cats.contains(phase), "unknown phase {phase:?}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
